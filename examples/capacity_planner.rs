@@ -1,0 +1,81 @@
+//! Capacity planner: use the fitted model to answer the questions the
+//! paper's introduction motivates — "cloud customers and providers
+//! approximate the total execution time a MapReduce application needs in
+//! order to make scheduling jobs smarter" (§V.B).
+//!
+//! Given an SLA deadline, sweep the full (M, R) configuration space
+//! *through the model* (1296 predictions served by the batched PJRT
+//! predict artifact — no cluster time burned), then validate the chosen
+//! configuration with real simulated runs.
+//!
+//! Run with: `cargo run --release --example capacity_planner`
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::model::regression::RegressionModel;
+use mrtuner::profiler::{paper_campaign, run_experiment, ExperimentSpec};
+use mrtuner::report::experiments::default_backend;
+use mrtuner::util::bytes::fmt_secs;
+
+fn main() {
+    let deadline_s = 640.0;
+    let app = AppId::WordCount;
+    let cluster = Cluster::paper_cluster();
+
+    // Fit the model once from a profiling campaign.
+    let (train, _) = paper_campaign(app, 42);
+    println!("profiling {} ({} settings x 5 reps)...", app.name(), train.specs.len());
+    let (_, ds) = train.run(&cluster);
+    let (mut backend, name) = default_backend();
+    let model = RegressionModel::fit_dataset(backend.as_mut(), &ds).expect("fit");
+
+    // Sweep every configuration through the model (batched predict).
+    let mut grid: Vec<[f64; 2]> = Vec::new();
+    for m in 5..=40u32 {
+        for r in 5..=40u32 {
+            grid.push([m as f64, r as f64]);
+        }
+    }
+    let preds = backend.predict(&model.coeffs, &grid).expect("predict");
+    println!(
+        "swept {} configurations through the {name} backend\n",
+        grid.len()
+    );
+
+    // Best configuration + all deadline-feasible ones.
+    let mut order: Vec<usize> = (0..grid.len()).collect();
+    order.sort_by(|&a, &b| preds[a].partial_cmp(&preds[b]).unwrap());
+    let feasible = order.iter().filter(|&&i| preds[i] <= deadline_s).count();
+    println!(
+        "deadline {}: {} / {} configurations predicted feasible",
+        fmt_secs(deadline_s),
+        feasible,
+        grid.len()
+    );
+    println!("\ntop-5 predicted configurations:");
+    println!("{:>10} {:>12}", "(M,R)", "predicted");
+    for &i in order.iter().take(5) {
+        println!(
+            "{:>10} {:>12}",
+            format!("({},{})", grid[i][0] as u32, grid[i][1] as u32),
+            fmt_secs(preds[i])
+        );
+    }
+
+    // Validate the chosen plan against reality (fresh seeds).
+    let best = order[0];
+    let (bm, br) = (grid[best][0] as u32, grid[best][1] as u32);
+    let actual = run_experiment(
+        &cluster,
+        &ExperimentSpec::new(app, bm, br),
+        5,
+        20_260_710,
+    )
+    .mean_time_s;
+    println!(
+        "\nchosen (M={bm}, R={br}): predicted {}, measured {} ({})",
+        fmt_secs(preds[best]),
+        fmt_secs(actual),
+        if actual <= deadline_s { "meets deadline" } else { "MISSES deadline" },
+    );
+}

@@ -1,0 +1,40 @@
+//! End-to-end reproduction driver (DESIGN.md §7, EXPERIMENTS.md).
+//!
+//! Exercises the full stack on a real small workload: functional
+//! MapReduce execution over generated corpus/mainlog bytes (outputs
+//! verified against ground truth), profile calibration, the paper's
+//! profiling campaigns on the simulated 4-node cluster, fitting through
+//! the AOT JAX+Pallas artifact via PJRT, held-out prediction, and the
+//! Fig. 4 surface spot-check — finishing with the paper's headline
+//! claim (mean prediction error < 5%).
+//!
+//! Run with: `cargo run --release --example e2e_repro [-- --seed N]`
+
+use mrtuner::report::e2e;
+use mrtuner::util::cli::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv).unwrap_or_default();
+    let seed = args.u64_or("seed", 42).unwrap_or(42);
+    match e2e::run(seed) {
+        Ok(out) => {
+            println!(
+                "\nsummary: wordcount {:.2}% / exim {:.2}% mean error, \
+                 backend {}, surface min at (M={}, R={})",
+                out.wordcount_mean_err_pct,
+                out.exim_mean_err_pct,
+                out.backend,
+                out.surface_min.0,
+                out.surface_min.1
+            );
+            if !out.headline_reproduced {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("e2e validation FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+fn main() {
+    let cluster = mrtuner::cluster::Cluster::paper_cluster();
+    let app = mrtuner::apps::AppId::WordCount.profile();
+    let mut total = 0.0;
+    for seed in 0..20000u64 {
+        let config = mrtuner::mr::JobConfig::paper_default(20, 5).with_seed(seed);
+        total += mrtuner::mr::run_job(&cluster, &app, &config).total_time_s;
+    }
+    println!("{total}");
+}

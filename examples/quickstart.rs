@@ -1,0 +1,54 @@
+//! Quickstart: the paper's three phases in ~40 lines of API usage.
+//!
+//! 1. profile WordCount across (M, R) settings on the simulated 4-node
+//!    cluster (5 runs per setting, averaged — paper Fig. 2a);
+//! 2. fit the per-parameter-cubic regression (Eqn. 6) via the production
+//!    backend (AOT JAX+Pallas artifact on PJRT when built);
+//! 3. predict unseen settings (Fig. 2b) and compare against fresh runs.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::model::regression::RegressionModel;
+use mrtuner::profiler::{paper_campaign, run_experiment, ExperimentSpec};
+use mrtuner::report::experiments::default_backend;
+use mrtuner::util::bytes::fmt_secs;
+
+fn main() {
+    // -- 1. profiling phase -------------------------------------------
+    let cluster = Cluster::paper_cluster();
+    let (train_campaign, _) = paper_campaign(AppId::WordCount, 42);
+    println!(
+        "profiling {} settings x {} reps...",
+        train_campaign.specs.len(),
+        train_campaign.reps
+    );
+    let (_, dataset) = train_campaign.run(&cluster);
+
+    // -- 2. modeling phase --------------------------------------------
+    let (mut backend, backend_name) = default_backend();
+    let model = RegressionModel::fit_dataset(backend.as_mut(), &dataset)
+        .expect("fit");
+    println!("fitted via {backend_name}: coefficients {:?}\n", model.coeffs);
+
+    // -- 3. prediction phase ------------------------------------------
+    println!("{:>10} {:>12} {:>12} {:>8}", "(M,R)", "predicted", "actual", "error");
+    for (m, r) in [(8, 6), (18, 7), (24, 12), (33, 28), (40, 40)] {
+        let predicted = model.predict_one(m, r);
+        let actual = run_experiment(
+            &cluster,
+            &ExperimentSpec::new(AppId::WordCount, m, r),
+            5,
+            777, // a session seed the model has never seen
+        )
+        .mean_time_s;
+        println!(
+            "{:>10} {:>12} {:>12} {:>7.2}%",
+            format!("({m},{r})"),
+            fmt_secs(predicted),
+            fmt_secs(actual),
+            100.0 * (predicted - actual).abs() / actual
+        );
+    }
+}

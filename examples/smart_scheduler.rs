@@ -1,0 +1,116 @@
+//! Smart scheduler: the paper's §III use case — "efficient managing of
+//! incoming jobs to a cluster/cloud by making scheduler smarter".
+//!
+//! A queue of mixed jobs (WordCount / Exim / Grep at various settings)
+//! arrives at the cluster.  We compare three policies:
+//!
+//! * FIFO            — arrival order (the Hadoop 0.20 default);
+//! * predicted-SJF   — shortest-first by the *fitted models'* predictions,
+//!                     served through the batching prediction service;
+//! * oracle-SJF      — shortest-first by true (simulated) durations, the
+//!                     upper bound on what prediction quality can buy.
+//!
+//! The gap between predicted-SJF and oracle-SJF is the cost of the ~1-3%
+//! prediction error — which is the paper's pitch: errors this small make
+//! model-driven scheduling nearly optimal.
+//!
+//! Run with: `cargo run --release --example smart_scheduler`
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::coordinator::{
+    evaluate_order, fifo_order, sjf_order, JobRequest, ModelRegistry,
+    PredictionService, ServiceConfig,
+};
+use mrtuner::model::regression::RegressionModel;
+use mrtuner::mr::{run_job, JobConfig};
+use mrtuner::profiler::paper_campaign;
+use mrtuner::report::experiments::default_backend;
+use mrtuner::util::bytes::fmt_secs;
+use mrtuner::util::rng::Rng;
+
+fn main() {
+    let cluster = Cluster::paper_cluster();
+
+    // ---- fit one model per application and install into the service.
+    let mut registry = ModelRegistry::new();
+    {
+        let (mut backend, name) = default_backend();
+        for app in AppId::all() {
+            let (train, _) = paper_campaign(app, 42);
+            let (_, ds) = train.run(&cluster);
+            let model =
+                RegressionModel::fit_dataset(backend.as_mut(), &ds).expect("fit");
+            println!("fitted {} via {name}", app.name());
+            registry.insert(model);
+        }
+    }
+    let service = PredictionService::start(
+        || default_backend().0,
+        registry,
+        ServiceConfig::default(),
+    );
+
+    // ---- a bursty queue of 12 mixed jobs.
+    let mut rng = Rng::new(7);
+    let apps = [AppId::WordCount, AppId::EximParse, AppId::Grep];
+    let jobs: Vec<JobRequest> = (0..12)
+        .map(|i| JobRequest {
+            app: *rng.choice(&apps),
+            num_mappers: rng.range_u64(5, 41) as u32,
+            num_reducers: rng.range_u64(5, 41) as u32,
+            seed: 1000 + i,
+        })
+        .collect();
+    println!("\nqueue:");
+    for (i, j) in jobs.iter().enumerate() {
+        println!(
+            "  [{i:>2}] {:<10} M={:<2} R={:<2}",
+            j.app.name(),
+            j.num_mappers,
+            j.num_reducers
+        );
+    }
+
+    // ---- three policies.
+    let fifo = evaluate_order(&cluster, &jobs, &fifo_order(&jobs));
+    let predicted = sjf_order(&jobs, |j| {
+        service.predict(j.app.name(), j.num_mappers, j.num_reducers).ok()
+    });
+    let smart = evaluate_order(&cluster, &jobs, &predicted);
+    let oracle_order = sjf_order(&jobs, |j| {
+        let config = JobConfig::paper_default(j.num_mappers, j.num_reducers)
+            .with_seed(j.seed);
+        Some(run_job(&cluster, &j.app.profile(), &config).total_time_s)
+    });
+    let oracle = evaluate_order(&cluster, &jobs, &oracle_order);
+
+    println!("\n{:<16} {:>18} {:>14}", "policy", "mean completion", "makespan");
+    for (name, o) in [
+        ("FIFO", &fifo),
+        ("predicted-SJF", &smart),
+        ("oracle-SJF", &oracle),
+    ] {
+        println!(
+            "{:<16} {:>18} {:>14}",
+            name,
+            fmt_secs(o.mean_completion_s),
+            fmt_secs(o.makespan_s)
+        );
+    }
+    let gain = 100.0 * (1.0 - smart.mean_completion_s / fifo.mean_completion_s);
+    let gap = 100.0 * (smart.mean_completion_s / oracle.mean_completion_s - 1.0);
+    println!(
+        "\npredicted-SJF cuts mean completion by {gain:.1}% vs FIFO; \
+         {gap:.2}% above the oracle"
+    );
+    let (req, batches, mean_batch) = (
+        service.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        service.metrics.batches.load(std::sync::atomic::Ordering::Relaxed),
+        service.metrics.mean_batch_size(),
+    );
+    println!(
+        "prediction service: {req} requests in {batches} backend calls \
+         (mean batch {mean_batch:.1})"
+    );
+}

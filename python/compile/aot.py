@@ -1,0 +1,125 @@
+"""AOT exporter: lower the L2 model to HLO text artifacts for the Rust side.
+
+Usage (from ``python/``):
+
+    python -m compile.aot --out-dir ../artifacts [--check] [--analyze]
+
+Emits ``fit.hlo.txt``, ``predict.hlo.txt`` and ``manifest.json`` (shapes +
+constants the Rust runtime asserts against).
+
+Interchange is HLO **text**, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 Rust crate binds) rejects
+(``proto.id() <= INT_MAX``).  The text parser reassigns ids and round-trips
+cleanly.  Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple1()``.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import NUM_FEATURES, PARAM_SCALE, ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    fit = jax.jit(model.fit_fn).lower(*model.fit_shapes())
+    predict = jax.jit(model.predict_fn).lower(*model.predict_shapes())
+    return {"fit": fit, "predict": predict}
+
+
+def manifest() -> dict:
+    return {
+        "num_features": NUM_FEATURES,
+        "param_scale": PARAM_SCALE,
+        "fit_rows": model.FIT_ROWS,
+        "predict_rows": model.PREDICT_ROWS,
+        "ridge_rel": model.RIDGE_REL,
+        "dtype": "f64",
+        "artifacts": {"fit": "fit.hlo.txt", "predict": "predict.hlo.txt"},
+    }
+
+
+def check() -> None:
+    """Validate the jitted fns against the pure-jnp oracle on random data."""
+    rng = np.random.default_rng(0)
+    m = model.FIT_ROWS
+    params = rng.integers(5, 41, size=(m, 2)).astype(np.float64)
+    # Synthetic ground truth: a cubic surface + noise, like the paper's data.
+    t = (
+        120.0
+        + 3.0 * params[:, 0]
+        - 0.04 * params[:, 0] ** 2
+        + 1.5 * params[:, 1]
+        + rng.normal(0, 0.5, size=m)
+    )
+    w = np.ones(m)
+    w[50:] = 0.0  # exercise padding
+    coeffs = jax.jit(model.fit_fn)(params, t, w)[0]
+    coeffs_ref = ref.fit(params[:50], t[:50], w[:50])
+    np.testing.assert_allclose(coeffs, coeffs_ref, rtol=1e-8)
+    preds = jax.jit(model.predict_fn)(coeffs, params)[0]
+    np.testing.assert_allclose(preds, ref.predict(coeffs_ref, params), rtol=1e-8)
+    err = np.abs(preds[:50] - t[:50]) / t[:50]
+    print(f"check OK: mean in-sample error {100 * err.mean():.3f}%")
+
+
+def analyze(lowered_map) -> None:
+    """Structure-level perf report (see DESIGN.md §Perf, L1/L2)."""
+    for name, lowered in lowered_map.items():
+        hlo = lowered.compiler_ir("hlo")
+        text = hlo.as_hlo_text() if hasattr(hlo, "as_hlo_text") else str(hlo)
+        ops = [l.strip() for l in text.splitlines() if "=" in l and "(" in l]
+        dots = sum("dot(" in l or " dot " in l for l in ops)
+        print(f"[analyze] {name}: {len(ops)} HLO ops, {dots} dot ops")
+    bm, f = 64, NUM_FEATURES
+    vmem = bm * f * 8 + 2 * bm * 8 + f * f * 8 + f * 8
+    print(
+        f"[analyze] gram kernel VMEM/block: {vmem} B "
+        f"({vmem / 2**20:.4f} MiB of ~16 MiB) — launch-latency bound at "
+        f"paper scale; MXU tile (8x128) padded from (7, {bm})"
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--analyze", action="store_true")
+    args = ap.parse_args()
+
+    if args.check:
+        check()
+
+    lowered = lower_all()
+    if args.analyze:
+        analyze(lowered)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, low in lowered.items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(low)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Layer-1 Pallas kernels for the mrtuner regression hot path.
+
+All kernels are authored for TPU-shaped execution (row-block tiling into
+VMEM, Gram accumulation in scratch) but are lowered with ``interpret=True``
+so the resulting HLO runs on any PJRT backend, including the Rust CPU
+client on the request path.  Correctness oracles live in ``ref.py``.
+"""
+
+from .poly_features import poly_features, NUM_FEATURES, PARAM_SCALE
+from .gram import gram_system
+from .predict_mv import predict_mv
+from . import ref
+
+__all__ = [
+    "poly_features",
+    "gram_system",
+    "predict_mv",
+    "ref",
+    "NUM_FEATURES",
+    "PARAM_SCALE",
+]

@@ -1,0 +1,84 @@
+"""Fused weighted normal-equation assembly as a Pallas kernel.
+
+Given the design matrix X (M, F), per-experiment weights w (M,) and observed
+execution times t (M,), the paper's least-squares step (Eqn. 6) needs
+
+    G = Xᵀ diag(w) X          (F, F)   the weighted Gram matrix
+    b = Xᵀ (w ⊙ t)            (F,)     the weighted moment vector
+
+Weights implement both the paper's "mean of five runs" protocol (reps can be
+folded in as fractional weights) and the zero-padding of training sets
+smaller than the fixed AOT shape: a padded row with w = 0 contributes
+exactly nothing, which `python/tests/test_model.py` property-tests.
+
+TPU shaping: the grid walks row blocks of size ``block_rows``; each step
+loads an (bm, F) tile of X plus (bm,) tiles of w and t into VMEM and
+accumulates the rank-bm update into the (F, F) output block, which Pallas
+keeps resident in VMEM across the whole grid (output revisiting).  The
+per-block update is an MXU-shaped  (F, bm) @ (bm, F)  contraction.  The
+first grid step zero-initializes the accumulators via ``pl.when``.
+
+G and b are accumulated in one pass over X — fusing them halves HBM traffic
+versus two separate contractions (X is read once).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .poly_features import NUM_FEATURES
+
+
+def _gram_kernel(x_ref, w_ref, t_ref, g_ref, b_ref):
+    """Accumulate one row-block's contribution to G and b."""
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+        b_ref[...] = jnp.zeros_like(b_ref)
+
+    x = x_ref[...]            # (bm, F)
+    w = w_ref[...]            # (bm,)
+    t = t_ref[...]            # (bm,)
+    xw = x * w[:, None]       # (bm, F) — weight folded into the left operand
+    # MXU contraction: (F, bm) @ (bm, F) -> (F, F)
+    g_ref[...] += jnp.dot(xw.T, x, preferred_element_type=x.dtype)
+    b_ref[...] += jnp.dot(xw.T, t, preferred_element_type=x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def gram_system(x, w, t, *, block_rows=64):
+    """Return ``(G, b)`` for the weighted normal equations.
+
+    ``x``: (M, F) design matrix; ``w``: (M,) weights; ``t``: (M,) targets.
+    M must be a multiple of ``block_rows``.
+    """
+    m, f = x.shape
+    if f != NUM_FEATURES:
+        raise ValueError(f"expected {NUM_FEATURES} features, got {f}")
+    if w.shape != (m,) or t.shape != (m,):
+        raise ValueError("w and t must be (M,) matching x rows")
+    if m % block_rows != 0:
+        raise ValueError(f"rows {m} not a multiple of block_rows {block_rows}")
+    grid = (m // block_rows,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((f, f), lambda i: (0, 0)),  # VMEM-resident accumulator
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, f), x.dtype),
+            jax.ShapeDtypeStruct((f,), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w, t)

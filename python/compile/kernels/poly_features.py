@@ -1,0 +1,68 @@
+"""Cubic polynomial feature expansion as a Pallas kernel.
+
+The paper (Eqn. 2) builds the design matrix
+
+    P[k, :] = [1, p1, p1^2, p1^3, ..., pN, pN^2, pN^3]
+
+for N configuration parameters.  Here N = 2 (number of mappers, number of
+reducers), so each row expands to F = 1 + 3N = 7 features.
+
+Parameters are normalized by ``PARAM_SCALE`` (the paper's maximum setting,
+40) before expansion: raw mapper/reducer counts cubed reach 6.4e4 and the
+Gram matrix of the *raw* cubic basis is catastrophically ill-conditioned
+even in f64.  The same normalization is baked into the predict path, so the
+coefficient vector is internally consistent and callers never see it.
+
+TPU shaping: the row dimension is tiled into VMEM-resident blocks of
+``block_rows``; each grid step reads a ``(block_rows, 2)`` tile and writes a
+``(block_rows, 7)`` tile.  The expansion is pure VPU element-wise work
+(powers via multiplies, no transcendentals).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Number of regression features: intercept + 3 powers for each of 2 params.
+NUM_FEATURES = 7
+
+#: Normalization constant for mapper/reducer counts (paper range is 5..40).
+PARAM_SCALE = 40.0
+
+
+def _poly_features_kernel(p_ref, out_ref):
+    """One row-block: expand normalized params into the cubic basis."""
+    p = p_ref[...] / PARAM_SCALE  # (bm, 2)
+    p1 = p[:, 0]
+    p2 = p[:, 1]
+    p1sq = p1 * p1
+    p2sq = p2 * p2
+    out_ref[...] = jnp.stack(
+        [jnp.ones_like(p1), p1, p1sq, p1sq * p1, p2, p2sq, p2sq * p2],
+        axis=1,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def poly_features(params, *, block_rows=64):
+    """Expand ``params`` of shape (M, 2) into the (M, 7) cubic design matrix.
+
+    ``M`` must be a multiple of ``block_rows`` (callers pad; the AOT shapes
+    are fixed at M = 64).  dtype follows the input (f64 on the AOT path).
+    """
+    m, n = params.shape
+    if n != 2:
+        raise ValueError(f"expected 2 configuration parameters, got {n}")
+    if m % block_rows != 0:
+        raise ValueError(f"rows {m} not a multiple of block_rows {block_rows}")
+    grid = (m // block_rows,)
+    return pl.pallas_call(
+        _poly_features_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, 2), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, NUM_FEATURES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, NUM_FEATURES), params.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(params)

@@ -1,0 +1,52 @@
+"""Batched prediction (design-matrix · coefficients) as a Pallas kernel.
+
+The prediction phase (paper Fig. 2b / Eqn. 5) evaluates
+
+    T̂[k] = features(p[k]) · A
+
+for a batch of configuration-parameter rows.  The Rust coordinator batches
+concurrent prediction requests up to the fixed AOT batch (64) and issues a
+single PJRT execution, so this matvec is the request-path hot spot.
+
+TPU shaping: row blocks of the feature matrix stream through VMEM; the
+coefficient vector (F = 7 values) stays resident.  Each grid step is a
+(bm, F) @ (F,) VPU/MXU contraction producing a (bm,) output tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .poly_features import NUM_FEATURES
+
+
+def _predict_kernel(x_ref, a_ref, out_ref):
+    out_ref[...] = jnp.dot(
+        x_ref[...], a_ref[...], preferred_element_type=x_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def predict_mv(x, coeffs, *, block_rows=64):
+    """Return ``x @ coeffs`` for a (K, F) feature matrix, row-block tiled."""
+    k, f = x.shape
+    if f != NUM_FEATURES:
+        raise ValueError(f"expected {NUM_FEATURES} features, got {f}")
+    if coeffs.shape != (f,):
+        raise ValueError(f"coeffs must be ({f},), got {coeffs.shape}")
+    if k % block_rows != 0:
+        raise ValueError(f"rows {k} not a multiple of block_rows {block_rows}")
+    grid = (k // block_rows,)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, coeffs)

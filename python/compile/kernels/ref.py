@@ -1,0 +1,40 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These implement the paper's math (Eqns. 2, 5, 6) directly with jax.numpy
+and are the ground truth the kernels are tested against (pytest +
+hypothesis in ``python/tests/``).  They are also used by ``aot.py --check``
+to validate the lowered artifacts end to end.
+"""
+
+import jax.numpy as jnp
+
+from .poly_features import NUM_FEATURES, PARAM_SCALE
+
+
+def poly_features(params):
+    """(M, 2) raw mapper/reducer counts -> (M, 7) normalized cubic basis."""
+    p = params / PARAM_SCALE
+    p1, p2 = p[:, 0], p[:, 1]
+    return jnp.stack(
+        [jnp.ones_like(p1), p1, p1**2, p1**3, p2, p2**2, p2**3], axis=1
+    )
+
+
+def gram_system(x, w, t):
+    """Weighted normal-equation system: G = XᵀWX, b = Xᵀ(w·t)."""
+    xw = x * w[:, None]
+    return xw.T @ x, xw.T @ t
+
+
+def fit(params, times, weights, ridge_rel=1e-9):
+    """Full fit oracle: params -> coefficient vector (Eqn. 6 + ridge)."""
+    x = poly_features(params)
+    g, b = gram_system(x, weights, times)
+    lam = ridge_rel * jnp.trace(g) / NUM_FEATURES
+    g = g + lam * jnp.eye(NUM_FEATURES, dtype=x.dtype)
+    return jnp.linalg.solve(g, b)
+
+
+def predict(coeffs, params):
+    """Prediction oracle (Eqn. 5) for raw (K, 2) parameter rows."""
+    return poly_features(params) @ coeffs

@@ -1,0 +1,115 @@
+"""Layer-2 JAX model: the paper's fit and predict computations.
+
+Composes the Layer-1 Pallas kernels into the two request-path computations
+the Rust coordinator executes via PJRT:
+
+* ``fit_fn``     — profiling/modeling phase (paper Fig. 2a, Eqn. 6):
+                   weighted cubic-basis least squares with a relative ridge.
+* ``predict_fn`` — prediction phase (paper Fig. 2b, Eqn. 5).
+
+Both are pure f64 functions with fixed AOT shapes (see ``aot.py``); Python
+is never on the request path — these lower once to HLO text.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import poly_features, gram_system, predict_mv, NUM_FEATURES
+
+jax.config.update("jax_enable_x64", True)
+
+#: Fixed AOT row counts.  Training sets / prediction batches are padded to
+#: these by the Rust side (weights make padding exact for fit; the batcher
+#: slices real rows for predict).
+FIT_ROWS = 64
+PREDICT_ROWS = 64
+
+#: Relative ridge: lambda = RIDGE_REL * trace(G)/F.  Guards degenerate
+#: training grids (e.g. all experiments sharing one mapper count) without
+#: measurably biasing well-posed fits (ablated in rust/benches/ablation.rs).
+RIDGE_REL = 1e-9
+
+
+def _cholesky_solve(g, b):
+    """Unrolled Cholesky solve for the fixed F x F normal equations.
+
+    ``jnp.linalg.solve`` lowers to a LAPACK custom-call using the typed-FFI
+    API (version 4), which the xla_extension 0.5.1 runtime behind the Rust
+    ``xla`` crate rejects at compile time.  For F = 7 a statically unrolled
+    Cholesky factorization in plain jnp ops lowers to pure HLO
+    (mul/sub/div/sqrt + gathers) and runs everywhere.  The op count is
+    O(F^3/3) ~ 110 fused scalar ops — negligible next to the Gram kernel.
+    """
+    f = NUM_FEATURES
+    # Factor: L lower-triangular with G = L Lᵀ, computed into a dict of
+    # scalars (static indices unroll at trace time).
+    l = {}
+    for i in range(f):
+        for j in range(i + 1):
+            s = g[i, j]
+            for k in range(j):
+                s = s - l[(i, k)] * l[(j, k)]
+            if i == j:
+                l[(i, j)] = jnp.sqrt(s)
+            else:
+                l[(i, j)] = s / l[(j, j)]
+    # Forward substitution L y = b.
+    y = []
+    for i in range(f):
+        s = b[i]
+        for k in range(i):
+            s = s - l[(i, k)] * y[k]
+        y.append(s / l[(i, i)])
+    # Back substitution Lᵀ a = y.
+    a = [None] * f
+    for i in reversed(range(f)):
+        s = y[i]
+        for k in range(i + 1, f):
+            s = s - l[(k, i)] * a[k]
+        a[i] = s / l[(i, i)]
+    return jnp.stack(a)
+
+
+def fit_fn(params, times, weights):
+    """Solve the weighted normal equations for the cubic coefficient vector.
+
+    params:  f64[FIT_ROWS, 2]  raw (num_mappers, num_reducers) rows
+    times:   f64[FIT_ROWS]     profiled mean execution times (seconds)
+    weights: f64[FIT_ROWS]     >= 0; 0 marks padding rows
+    returns: f64[NUM_FEATURES] coefficients over the normalized cubic basis
+    """
+    x = poly_features(params)
+    g, b = gram_system(x, weights, times)
+    lam = RIDGE_REL * jnp.trace(g) / NUM_FEATURES
+    g = g + lam * jnp.eye(NUM_FEATURES, dtype=x.dtype)
+    # F = 7: direct dense solve; the Gram assembly above is the part that
+    # scales with profiled-experiment count, not this.
+    return (_cholesky_solve(g, b),)
+
+
+def predict_fn(coeffs, params):
+    """Evaluate the fitted model on a batch of parameter rows.
+
+    coeffs: f64[NUM_FEATURES]
+    params: f64[PREDICT_ROWS, 2] raw (num_mappers, num_reducers) rows
+    returns: f64[PREDICT_ROWS]   predicted execution times (seconds)
+    """
+    x = poly_features(params)
+    return (predict_mv(x, coeffs),)
+
+
+def fit_shapes():
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((FIT_ROWS, 2), f64),
+        jax.ShapeDtypeStruct((FIT_ROWS,), f64),
+        jax.ShapeDtypeStruct((FIT_ROWS,), f64),
+    )
+
+
+def predict_shapes():
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((NUM_FEATURES,), f64),
+        jax.ShapeDtypeStruct((PREDICT_ROWS, 2), f64),
+    )

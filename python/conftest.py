@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from `python/` or the
+workspace root (`pytest python/tests/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

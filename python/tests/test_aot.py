@@ -1,0 +1,83 @@
+"""AOT exporter tests: HLO text artifacts exist, parse, and stay consistent."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import NUM_FEATURES, ref
+
+jax.config.update("jax_enable_x64", True)
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_lower_all_produces_hlo_text(self):
+        lowered = aot.lower_all()
+        assert set(lowered) == {"fit", "predict"}
+        for name, low in lowered.items():
+            text = aot.to_hlo_text(low)
+            assert text.startswith("HloModule"), name
+            # 64-bit-id proto issue is avoided by text interchange; the text
+            # itself must contain the f64 root types we promised the Rust side.
+            assert "f64" in text, name
+
+    def test_fit_hlo_has_expected_shapes(self):
+        text = aot.to_hlo_text(aot.lower_all()["fit"])
+        assert f"f64[{model.FIT_ROWS},2]" in text
+        assert f"f64[{NUM_FEATURES}]" in text
+
+    def test_predict_hlo_has_expected_shapes(self):
+        text = aot.to_hlo_text(aot.lower_all()["predict"])
+        assert f"f64[{model.PREDICT_ROWS},2]" in text
+        assert f"f64[{model.PREDICT_ROWS}]" in text
+
+    def test_manifest_contents(self):
+        m = aot.manifest()
+        assert m["num_features"] == NUM_FEATURES
+        assert m["fit_rows"] == model.FIT_ROWS
+        assert m["predict_rows"] == model.PREDICT_ROWS
+        assert m["dtype"] == "f64"
+        assert m["artifacts"] == {
+            "fit": "fit.hlo.txt",
+            "predict": "predict.hlo.txt",
+        }
+
+    def test_check_passes(self):
+        aot.check()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    """Validate whatever is in artifacts/ — the files Rust will load."""
+
+    def test_manifest_matches_code(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            m = json.load(f)
+        assert m == aot.manifest()
+
+    def test_artifact_files_exist_and_are_hlo(self):
+        for name in ("fit.hlo.txt", "predict.hlo.txt"):
+            path = os.path.join(ART, name)
+            assert os.path.exists(path), path
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), path
+
+    def test_artifacts_reproducible(self):
+        """Re-lowering today must match the files on disk (determinism)."""
+        lowered = aot.lower_all()
+        for name in ("fit", "predict"):
+            with open(os.path.join(ART, f"{name}.hlo.txt")) as f:
+                on_disk = f.read()
+            assert aot.to_hlo_text(lowered[name]) == on_disk

@@ -1,0 +1,183 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes and value ranges; every kernel must match
+``ref.py`` to tight tolerances (exact structural math, so rtol is small).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import (
+    NUM_FEATURES,
+    PARAM_SCALE,
+    gram_system,
+    poly_features,
+    predict_mv,
+    ref,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+DTYPES = [jnp.float32, jnp.float64]
+RTOL = {jnp.float32: 2e-5, jnp.float64: 1e-12}
+
+
+def rand_params(rng, rows, dtype, lo=1.0, hi=64.0):
+    return jnp.asarray(
+        rng.uniform(lo, hi, size=(rows, 2)), dtype=dtype
+    )
+
+
+# ---------------------------------------------------------------- features
+
+class TestPolyFeatures:
+    @given(
+        blocks=st.integers(1, 4),
+        block_rows=st.sampled_from([8, 16, 64]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, blocks, block_rows, dtype, seed):
+        rng = np.random.default_rng(seed)
+        params = rand_params(rng, blocks * block_rows, dtype)
+        got = poly_features(params, block_rows=block_rows)
+        want = ref.poly_features(params)
+        np.testing.assert_allclose(got, want, rtol=RTOL[dtype])
+        assert got.dtype == dtype
+        assert got.shape == (blocks * block_rows, NUM_FEATURES)
+
+    def test_intercept_column_is_one(self):
+        rng = np.random.default_rng(0)
+        params = rand_params(rng, 64, jnp.float64)
+        feats = poly_features(params)
+        np.testing.assert_array_equal(feats[:, 0], np.ones(64))
+
+    def test_normalization_scale(self):
+        """A row at the scale boundary maps to basis value exactly 1."""
+        params = jnp.full((64, 2), PARAM_SCALE, dtype=jnp.float64)
+        feats = poly_features(params)
+        np.testing.assert_allclose(feats, np.ones((64, NUM_FEATURES)))
+
+    def test_power_structure(self):
+        """Columns 2,3 (and 5,6) are exact squares/cubes of columns 1 (4)."""
+        rng = np.random.default_rng(1)
+        params = rand_params(rng, 64, jnp.float64)
+        f = np.asarray(poly_features(params))
+        np.testing.assert_allclose(f[:, 2], f[:, 1] ** 2, rtol=1e-14)
+        np.testing.assert_allclose(f[:, 3], f[:, 1] ** 3, rtol=1e-14)
+        np.testing.assert_allclose(f[:, 5], f[:, 4] ** 2, rtol=1e-14)
+        np.testing.assert_allclose(f[:, 6], f[:, 4] ** 3, rtol=1e-14)
+
+    def test_rejects_bad_param_count(self):
+        with pytest.raises(ValueError, match="2 configuration parameters"):
+            poly_features(jnp.ones((64, 3)))
+
+    def test_rejects_unaligned_rows(self):
+        with pytest.raises(ValueError, match="multiple of block_rows"):
+            poly_features(jnp.ones((63, 2)))
+
+
+# -------------------------------------------------------------------- gram
+
+class TestGramSystem:
+    @given(
+        blocks=st.integers(1, 4),
+        block_rows=st.sampled_from([8, 32, 64]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, blocks, block_rows, dtype, seed):
+        rng = np.random.default_rng(seed)
+        m = blocks * block_rows
+        x = jnp.asarray(rng.normal(size=(m, NUM_FEATURES)), dtype=dtype)
+        w = jnp.asarray(rng.uniform(0, 2, size=m), dtype=dtype)
+        t = jnp.asarray(rng.uniform(10, 1000, size=m), dtype=dtype)
+        g, b = gram_system(x, w, t, block_rows=block_rows)
+        g_ref, b_ref = ref.gram_system(x, w, t)
+        np.testing.assert_allclose(g, g_ref, rtol=RTOL[dtype], atol=1e-6)
+        np.testing.assert_allclose(b, b_ref, rtol=RTOL[dtype], atol=1e-6)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_gram_is_symmetric_psd(self, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(64, NUM_FEATURES)))
+        w = jnp.asarray(rng.uniform(0, 1, size=64))
+        t = jnp.asarray(rng.uniform(size=64))
+        g, _ = gram_system(x, w, t)
+        g = np.asarray(g)
+        np.testing.assert_allclose(g, g.T, rtol=1e-12)
+        eig = np.linalg.eigvalsh(g)
+        assert eig.min() >= -1e-9 * max(1.0, eig.max())
+
+    @given(seed=st.integers(0, 2**31 - 1), pad=st.integers(0, 63))
+    def test_zero_weight_rows_contribute_nothing(self, seed, pad):
+        """Padding invariance — the property the Rust fitter relies on."""
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(64, NUM_FEATURES)))
+        t = jnp.asarray(rng.uniform(10, 100, size=64))
+        w = np.ones(64)
+        w[64 - pad:] = 0.0
+        g_pad, b_pad = gram_system(x, jnp.asarray(w), t)
+        live = 64 - pad
+        g_ref, b_ref = ref.gram_system(x[:live], jnp.ones(live), t[:live])
+        np.testing.assert_allclose(g_pad, g_ref, rtol=1e-12, atol=1e-12)
+        np.testing.assert_allclose(b_pad, b_ref, rtol=1e-12, atol=1e-12)
+
+    def test_single_vs_multi_block_identical(self):
+        """Grid decomposition must not change the result (accumulation)."""
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(64, NUM_FEATURES)))
+        w = jnp.asarray(rng.uniform(size=64))
+        t = jnp.asarray(rng.uniform(size=64))
+        g1, b1 = gram_system(x, w, t, block_rows=64)
+        g8, b8 = gram_system(x, w, t, block_rows=8)
+        np.testing.assert_allclose(g1, g8, rtol=1e-12)
+        np.testing.assert_allclose(b1, b8, rtol=1e-12)
+
+    def test_rejects_bad_shapes(self):
+        x = jnp.ones((64, NUM_FEATURES))
+        with pytest.raises(ValueError, match="must be \\(M,\\)"):
+            gram_system(x, jnp.ones(32), jnp.ones(64))
+        with pytest.raises(ValueError, match="features"):
+            gram_system(jnp.ones((64, 5)), jnp.ones(64), jnp.ones(64))
+
+
+# ----------------------------------------------------------------- predict
+
+class TestPredictMv:
+    @given(
+        blocks=st.integers(1, 4),
+        block_rows=st.sampled_from([8, 64]),
+        dtype=st.sampled_from(DTYPES),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, blocks, block_rows, dtype, seed):
+        rng = np.random.default_rng(seed)
+        k = blocks * block_rows
+        x = jnp.asarray(rng.normal(size=(k, NUM_FEATURES)), dtype=dtype)
+        a = jnp.asarray(rng.normal(size=NUM_FEATURES), dtype=dtype)
+        got = predict_mv(x, a, block_rows=block_rows)
+        np.testing.assert_allclose(got, x @ a, rtol=RTOL[dtype], atol=1e-6)
+
+    def test_linearity(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(64, NUM_FEATURES)))
+        a1 = jnp.asarray(rng.normal(size=NUM_FEATURES))
+        a2 = jnp.asarray(rng.normal(size=NUM_FEATURES))
+        lhs = predict_mv(x, a1 + a2)
+        rhs = predict_mv(x, a1) + predict_mv(x, a2)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-12)
+
+    def test_rejects_bad_coeffs(self):
+        with pytest.raises(ValueError, match="coeffs"):
+            predict_mv(jnp.ones((64, NUM_FEATURES)), jnp.ones(5))

@@ -1,0 +1,173 @@
+"""L2 model correctness: fit/predict round trips, padding, conditioning."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given
+
+from compile import model
+from compile.kernels import NUM_FEATURES, PARAM_SCALE, ref
+
+jax.config.update("jax_enable_x64", True)
+
+hypothesis.settings.register_profile(
+    "model", deadline=None, max_examples=20, derandomize=True
+)
+hypothesis.settings.load_profile("model")
+
+FIT = jax.jit(model.fit_fn)
+PREDICT = jax.jit(model.predict_fn)
+
+
+def paper_grid(rng, n):
+    """Random (M, R) settings in the paper's 5..40 range."""
+    return rng.integers(5, 41, size=(n, 2)).astype(np.float64)
+
+
+def cubic_surface(params, rng=None, noise=0.0):
+    """A ground-truth surface inside the model family."""
+    p = params / PARAM_SCALE
+    t = (
+        200.0
+        - 150.0 * p[:, 0]
+        + 180.0 * p[:, 0] ** 2
+        - 60.0 * p[:, 0] ** 3
+        + 40.0 * p[:, 1]
+        + 25.0 * p[:, 1] ** 2
+    )
+    if noise and rng is not None:
+        t = t + rng.normal(0, noise, size=len(t))
+    return t
+
+
+def padded(params, times, n):
+    m = model.FIT_ROWS
+    p = np.zeros((m, 2))
+    t = np.zeros(m)
+    w = np.zeros(m)
+    p[:n], t[:n], w[:n] = params[:n], times[:n], 1.0
+    return jnp.asarray(p), jnp.asarray(t), jnp.asarray(w)
+
+
+class TestFit:
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(20, 64))
+    def test_recovers_in_family_surface(self, seed, n):
+        """Noise-free data from the model family is fit almost exactly.
+
+        Tolerance is bounded by the relative ridge (RIDGE_REL * trace/F
+        against a Gram eigenvalue spread of ~1e5), not by f64 precision.
+        """
+        rng = np.random.default_rng(seed)
+        params = paper_grid(rng, n)
+        times = cubic_surface(params)
+        p, t, w = padded(params, times, n)
+        (coeffs,) = FIT(p, t, w)
+        preds = ref.predict(coeffs, jnp.asarray(params))
+        np.testing.assert_allclose(preds, times, rtol=1e-5)
+
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        params = paper_grid(rng, 64)
+        times = cubic_surface(params, rng, noise=5.0)
+        w = jnp.ones(64)
+        (coeffs,) = FIT(jnp.asarray(params), jnp.asarray(times), w)
+        want = ref.fit(jnp.asarray(params), jnp.asarray(times), jnp.ones(64))
+        np.testing.assert_allclose(coeffs, want, rtol=1e-9)
+
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(10, 63))
+    def test_padding_invariance(self, seed, n):
+        """Garbage beyond the weight mask must not affect the fit."""
+        rng = np.random.default_rng(seed)
+        params = paper_grid(rng, n)
+        times = cubic_surface(params, rng, noise=2.0)
+        p1, t1, w = padded(params, times, n)
+        # Same live rows, different garbage in the padding area.
+        p2 = np.asarray(p1).copy()
+        t2 = np.asarray(t1).copy()
+        p2[n:] = rng.uniform(1, 100, size=(model.FIT_ROWS - n, 2))
+        t2[n:] = rng.uniform(1, 1e6, size=model.FIT_ROWS - n)
+        (c1,) = FIT(p1, t1, w)
+        (c2,) = FIT(jnp.asarray(p2), jnp.asarray(t2), w)
+        np.testing.assert_allclose(c1, c2, rtol=1e-9, atol=1e-9)
+
+    def test_weighted_repetitions_equal_mean(self):
+        """5 repeated runs with weight 1 == 1 averaged run with weight 5.
+
+        This is the paper's 'mean of five executions' protocol expressed
+        through the weight vector.
+        """
+        rng = np.random.default_rng(11)
+        params = paper_grid(rng, 12)
+        base = cubic_surface(params)
+        reps = np.stack([base + rng.normal(0, 3.0, 12) for _ in range(5)])
+
+        # (a) all 60 rows individually
+        p_all = np.tile(params, (5, 1))
+        t_all = reps.reshape(-1)
+        pa, ta, wa = padded(p_all, t_all, 60)
+        (ca,) = FIT(pa, ta, wa)
+
+        # (b) 12 averaged rows, weight 5
+        pb, tb, wb = padded(params, reps.mean(axis=0), 12)
+        wb = jnp.asarray(np.where(np.asarray(wb) > 0, 5.0, 0.0))
+        (cb,) = FIT(pb, tb, wb)
+        np.testing.assert_allclose(ca, cb, rtol=1e-8, atol=1e-10)
+
+    def test_degenerate_grid_does_not_blow_up(self):
+        """All experiments share one mapper count -> rank-deficient Gram.
+
+        The relative ridge must keep the solve finite (predictions sane on
+        the training rows themselves).
+        """
+        rng = np.random.default_rng(5)
+        params = np.column_stack(
+            [np.full(30, 20.0), rng.integers(5, 41, 30)]
+        ).astype(np.float64)
+        times = cubic_surface(params, rng, noise=1.0)
+        p, t, w = padded(params, times, 30)
+        (coeffs,) = FIT(p, t, w)
+        assert np.all(np.isfinite(np.asarray(coeffs)))
+        preds = ref.predict(coeffs, jnp.asarray(params))
+        err = np.abs(np.asarray(preds) - times) / times
+        assert err.mean() < 0.05
+
+    def test_all_zero_weights_finite(self):
+        p = jnp.zeros((model.FIT_ROWS, 2))
+        t = jnp.zeros(model.FIT_ROWS)
+        w = jnp.zeros(model.FIT_ROWS)
+        (coeffs,) = FIT(p, t, w)
+        # Singular system; ridge of 0 trace gives 0 lambda -> solve of a
+        # zero matrix.  We only require no crash and a defined output shape.
+        assert coeffs.shape == (NUM_FEATURES,)
+
+
+class TestPredict:
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_oracle(self, seed):
+        rng = np.random.default_rng(seed)
+        coeffs = jnp.asarray(rng.normal(size=NUM_FEATURES))
+        params = jnp.asarray(paper_grid(rng, model.PREDICT_ROWS))
+        (got,) = PREDICT(coeffs, params)
+        np.testing.assert_allclose(got, ref.predict(coeffs, params), rtol=1e-12)
+
+    def test_prediction_error_band_on_noisy_surface(self):
+        """End-to-end paper protocol on synthetic data: error well under 5%."""
+        rng = np.random.default_rng(42)
+        train = paper_grid(rng, 20)
+        t_train = np.stack(
+            [cubic_surface(train, rng, noise=2.0) for _ in range(5)]
+        ).mean(axis=0)
+        p, t, w = padded(train, t_train, 20)
+        (coeffs,) = FIT(p, t, w)
+
+        test = paper_grid(rng, 20)
+        truth = cubic_surface(test)
+        pp = np.zeros((model.PREDICT_ROWS, 2))
+        pp[:20] = test
+        (preds,) = PREDICT(coeffs, jnp.asarray(pp))
+        err = np.abs(np.asarray(preds)[:20] - truth) / truth
+        assert err.mean() < 0.05, f"mean error {err.mean():.4f}"

@@ -1,0 +1,138 @@
+//! Bench: the paper's proposed extensions, implemented and quantified.
+//!
+//! 1. **Four configuration parameters** (companion work [24]): model
+//!    T(M, R, input_size, block_size) with the generalized N-parameter
+//!    cubic.
+//! 2. **CPU tick clocks** ([24]'s modeled output): same pipeline, CPU
+//!    seconds instead of wall time.
+//! 3. **Nonlinear model** (§III: "better to use nonlinear modeling
+//!    techniques like neural network"): a small MLP vs the cubic on the
+//!    2-parameter problem.
+//! 4. **Third application** (Grep): the per-application modeling protocol
+//!    generalizes beyond the paper's two benchmarks.
+//!
+//! Run: `cargo bench --bench extensions`
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::model::mlp::{MlpConfig, MlpModel};
+use mrtuner::model::ndpoly::NdPolyModel;
+use mrtuner::profiler::extended::{random_ext4, run_ext4_campaign, scales};
+use mrtuner::profiler::paper_campaign;
+use mrtuner::util::benchkit::{bench, report, section};
+use mrtuner::util::rng::Rng;
+use mrtuner::util::stats;
+
+fn mean_abs_err_pct(pred: &[f64], truth: &[f64]) -> f64 {
+    let errs: Vec<f64> = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| 100.0 * (p - t).abs() / t)
+        .collect();
+    stats::mean(&errs)
+}
+
+fn main() {
+    let cluster = Cluster::paper_cluster();
+
+    // ---------------------------------------- 1+2: 4-parameter modeling
+    for app in [AppId::WordCount, AppId::EximParse] {
+        section(&format!("extension 1+2: 4-parameter model — {}", app.name()));
+        let mut rng = Rng::new(2024);
+        let train_specs = random_ext4(app, 60, &mut rng);
+        let test_specs = random_ext4(app, 25, &mut rng);
+        let (rows, times, cpus) = run_ext4_campaign(&cluster, &train_specs, 5, 1);
+        let (trows, ttimes, tcpus) = run_ext4_campaign(&cluster, &test_specs, 5, 2);
+        let w = vec![1.0; rows.len()];
+
+        let time_model =
+            NdPolyModel::fit(app.name(), &rows, &times, &w, 3, &scales()).unwrap();
+        let terr = mean_abs_err_pct(&time_model.predict(&trows), &ttimes);
+        report(
+            &format!("{} T(M,R,input,block) held-out error", app.name()),
+            format!("{terr:.3}%  ({} features, paper's additive basis)", time_model.num_features()),
+        );
+        // The additive Eqn.-2 basis cannot express input x block coupling
+        // (task count = input / block); pairwise interactions fix it.
+        let inter_model = NdPolyModel::fit_opts(
+            app.name(), &rows, &times, &w, 3, &scales(), true,
+        )
+        .unwrap();
+        let ierr = mean_abs_err_pct(&inter_model.predict(&trows), &ttimes);
+        report(
+            &format!("{} same + pairwise interactions", app.name()),
+            format!("{ierr:.3}%  ({} features)", inter_model.num_features()),
+        );
+
+        let cpu_model =
+            NdPolyModel::fit(app.name(), &rows, &cpus, &w, 3, &scales()).unwrap();
+        let cerr = mean_abs_err_pct(&cpu_model.predict(&trows), &tcpus);
+        report(
+            &format!("{} CPU-seconds model held-out error ([24])", app.name()),
+            format!("{cerr:.3}%"),
+        );
+    }
+
+    // ------------------------------------------------- 3: MLP vs cubic
+    section("extension 3: nonlinear (MLP) vs per-parameter cubic");
+    let app = AppId::WordCount;
+    let (train_c, test_c) = paper_campaign(app, 42);
+    let (_, train) = train_c.run(&cluster);
+    let (_, test) = test_c.run(&cluster);
+
+    let pairs: Vec<[f64; 2]> = train.params.clone();
+    let mlp = MlpModel::fit(
+        app.name(),
+        &pairs,
+        &train.times,
+        MlpConfig { hidden: 16, epochs: 4000, lr: 0.01, seed: 5 },
+    )
+    .unwrap();
+    let mlp_preds: Vec<f64> = test
+        .params
+        .iter()
+        .map(|p| mlp.predict_one(p[0] as u32, p[1] as u32))
+        .collect();
+    report(
+        "MLP (2-16-16-1, 4000 epochs) held-out error",
+        format!("{:.3}%", mean_abs_err_pct(&mlp_preds, &test.times)),
+    );
+    let cubic = mrtuner::model::solver::fit(
+        &train.params,
+        &train.times,
+        &vec![1.0; train.len()],
+    )
+    .unwrap();
+    let cubic_preds: Vec<f64> = test
+        .params
+        .iter()
+        .map(|p| mrtuner::model::features::evaluate(&cubic, p))
+        .collect();
+    report(
+        "cubic (paper) held-out error",
+        format!("{:.3}%", mean_abs_err_pct(&cubic_preds, &test.times)),
+    );
+    bench("MLP training (20 rows, 4000 epochs)", 0, 3, || {
+        std::hint::black_box(
+            MlpModel::fit(
+                "wc",
+                &pairs,
+                &train.times,
+                MlpConfig { hidden: 16, epochs: 4000, lr: 0.01, seed: 5 },
+            )
+            .unwrap(),
+        );
+    });
+
+    // ------------------------------------------ 4: third application
+    section("extension 4: grep (third application)");
+    let d = mrtuner::report::experiments::fig3(AppId::Grep, 42);
+    report(
+        "grep held-out mean error (not in paper)",
+        format!("{:.3}%", d.errors.mean_pct()),
+    );
+    report(
+        "grep error < 5% (protocol generalizes)",
+        if d.errors.mean_pct() < 5.0 { "yes" } else { "NO" },
+    );
+}

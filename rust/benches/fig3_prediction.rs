@@ -1,0 +1,69 @@
+//! Bench: regenerate **Fig. 3** (a,b = WordCount; c,d = Exim) — actual vs
+//! predicted execution time and per-experiment prediction errors on 20
+//! held-out settings, plus the wall-clock cost of each pipeline stage.
+//!
+//! Run: `cargo bench --bench fig3_prediction`
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::model::regression::RegressionModel;
+use mrtuner::profiler::paper_campaign;
+use mrtuner::report::experiments::{default_backend, fig3};
+use mrtuner::util::benchkit::{bench, report, section};
+
+fn main() {
+    for app in AppId::paper_apps() {
+        section(&format!("Fig. 3 — {}", app.name()));
+        let d = fig3(app, 42);
+        println!(
+            "{:>10} {:>12} {:>12} {:>9}",
+            "(M,R)", "actual_s", "predicted_s", "error"
+        );
+        for (i, s) in d.test_specs.iter().enumerate() {
+            println!(
+                "{:>10} {:>12.1} {:>12.1} {:>8.2}%",
+                format!("({},{})", s.num_mappers, s.num_reducers),
+                d.errors.actual[i],
+                d.errors.predicted[i],
+                d.errors.errors_pct[i]
+            );
+        }
+        report(
+            &format!("{} mean error (paper: WC 0.92 / Exim 2.80)", app.name()),
+            format!("{:.4}%", d.errors.mean_pct()),
+        );
+        report(
+            &format!("{} error variance (paper: WC 2.60 / Exim 6.70)", app.name()),
+            format!("{:.4}%", d.errors.variance_pct()),
+        );
+        report(
+            &format!("{} R^2 actual-vs-predicted", app.name()),
+            format!("{:.4}", d.errors.r_squared()),
+        );
+        report(
+            &format!("{} mean error < 5% (headline)", app.name()),
+            if d.errors.mean_pct() < 5.0 { "yes" } else { "NO" },
+        );
+    }
+
+    section("pipeline stage timings");
+    let cluster = Cluster::paper_cluster();
+    let (train_c, _) = paper_campaign(AppId::WordCount, 42);
+    bench("profile campaign (20 settings x 5 reps)", 1, 5, || {
+        std::hint::black_box(train_c.run(&cluster));
+    });
+    let (_, ds) = train_c.run(&cluster);
+    let (mut backend, name) = default_backend();
+    bench(&format!("fit 20-row dataset via {name}"), 2, 20, || {
+        std::hint::black_box(
+            RegressionModel::fit_dataset(backend.as_mut(), &ds).unwrap(),
+        );
+    });
+    let model = RegressionModel::fit_dataset(backend.as_mut(), &ds).unwrap();
+    let params: Vec<[f64; 2]> = (0..64)
+        .map(|i| [5.0 + (i % 36) as f64, 5.0 + (i % 30) as f64])
+        .collect();
+    bench(&format!("predict 64-row batch via {name}"), 2, 50, || {
+        std::hint::black_box(backend.predict(&model.coeffs, &params).unwrap());
+    });
+}

@@ -1,0 +1,63 @@
+//! Bench: regenerate **Fig. 4** (a,b = WordCount; c,d = Exim) — the total
+//! execution time surface over (num_mappers, num_reducers), and check the
+//! paper's qualitative observations:
+//!
+//! * WordCount runs roughly double Exim's time (§V.B);
+//! * both surfaces are minimal at low reducer counts / mid mapper hints
+//!   (the paper reports (20, 5) and admits "the reason ... is not clear");
+//! * WordCount's prediction-relevant structure is smoother than Exim's
+//!   noise (driving Table 1's error ordering).
+//!
+//! Run: `cargo bench --bench fig4_surface`
+
+use mrtuner::apps::AppId;
+use mrtuner::report::experiments::fig4;
+use mrtuner::report::figure;
+use mrtuner::util::benchkit::{bench, report, section};
+
+fn main() {
+    let mut means = Vec::new();
+    for app in AppId::paper_apps() {
+        section(&format!("Fig. 4 — {}", app.name()));
+        let d = fig4(app, 5, 5, 42);
+        print!(
+            "{}",
+            figure::surface(
+                &format!("total execution time (s), {}", app.name()),
+                &d.ms,
+                &d.rs,
+                &d.times,
+            )
+        );
+        let (bm, br) = d.argmin();
+        report(
+            &format!("{} surface minimum (paper: M=20, R=5)", app.name()),
+            format!("M={bm}, R={br}"),
+        );
+        report(
+            &format!("{} fluctuation (max-min)/min", app.name()),
+            format!("{:.3}", d.fluctuation()),
+        );
+        report(
+            &format!("{} mean over grid", app.name()),
+            format!("{:.1} s", d.mean_time()),
+        );
+        means.push(d.mean_time());
+    }
+
+    section("cross-application shape checks");
+    let ratio = means[0] / means[1];
+    report(
+        "wordcount / exim mean-time ratio (paper: ~2x)",
+        format!("{ratio:.2}"),
+    );
+    report(
+        "wordcount slower than exim",
+        if ratio > 1.3 { "yes" } else { "NO" },
+    );
+
+    section("sweep cost");
+    bench("fig4 lattice sweep (64 settings x 1 rep)", 1, 3, || {
+        std::hint::black_box(fig4(AppId::EximParse, 5, 1, 7));
+    });
+}

@@ -1,0 +1,155 @@
+//! Bench: performance of every hot path (EXPERIMENTS.md §Perf).
+//!
+//! * DES simulator: jobs/sec and events/sec per app;
+//! * fit: PJRT artifact vs pure-Rust Cholesky;
+//! * predict: batch-size scaling of the PJRT predict artifact;
+//! * prediction service: request latency and batching amortization across
+//!   `max_wait` settings.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+
+use std::time::Duration;
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::coordinator::{ModelRegistry, PredictionService, ServiceConfig};
+use mrtuner::model::features::NUM_FEATURES;
+use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
+use mrtuner::mr::{run_job, JobConfig};
+use mrtuner::runtime::{artifacts, XlaBackend};
+use mrtuner::util::benchkit::{bench, report, section};
+use mrtuner::util::rng::Rng;
+
+fn training_set(n: usize, seed: u64) -> (Vec<[f64; 2]>, Vec<f64>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let params: Vec<[f64; 2]> = (0..n)
+        .map(|_| [rng.range_u64(5, 41) as f64, rng.range_u64(5, 41) as f64])
+        .collect();
+    let times: Vec<f64> = params
+        .iter()
+        .map(|p| 400.0 + 3.0 * p[0] + 2.0 * p[1] * rng.lognormal(0.05))
+        .collect();
+    (params, times, vec![1.0; n])
+}
+
+fn main() {
+    // ---------------------------------------------------------- simulator
+    section("L3 simulator");
+    let cluster = Cluster::paper_cluster();
+    for app in AppId::all() {
+        let profile = app.profile();
+        let mut seed = 0u64;
+        let st = bench(&format!("run_job {} (128 maps, R=5)", app.name()), 2, 30, || {
+            let config = JobConfig::paper_default(20, 5).with_seed({
+                seed += 1;
+                seed
+            });
+            std::hint::black_box(run_job(&cluster, &profile, &config));
+        });
+        let config = JobConfig::paper_default(20, 5).with_seed(1);
+        let res = run_job(&cluster, &profile, &config);
+        let tasks = (res.maps.len() + res.reduces.len()) as f64;
+        report(
+            &format!("{} simulated tasks/sec", app.name()),
+            format!("{:.0}", st.throughput(tasks)),
+        );
+    }
+    let mut seed = 0;
+    bench("run_job wordcount (R=40, reduce waves)", 2, 30, || {
+        let config = JobConfig::paper_default(40, 40).with_seed({
+            seed += 1;
+            seed
+        });
+        std::hint::black_box(run_job(&cluster, &AppId::WordCount.profile(), &config));
+    });
+
+    // ------------------------------------------------------------- fitting
+    section("fit backends (paper Eqn. 6)");
+    let (params, times, weights) = training_set(20, 1);
+    let mut rust = RustSolverBackend;
+    bench("fit 20 rows, rust-cholesky", 5, 200, || {
+        std::hint::black_box(rust.fit(&params, &times, &weights).unwrap());
+    });
+    let have_artifacts = artifacts::default_dir().join("manifest.json").exists();
+    if have_artifacts {
+        let mut xla = XlaBackend::load_default().expect("artifacts");
+        bench("fit 20 rows, xla-pjrt artifact", 5, 200, || {
+            std::hint::black_box(xla.fit(&params, &times, &weights).unwrap());
+        });
+        let (p64, t64, w64) = training_set(64, 2);
+        bench("fit 64 rows (full artifact), xla-pjrt", 5, 200, || {
+            std::hint::black_box(xla.fit(&p64, &t64, &w64).unwrap());
+        });
+    } else {
+        println!("(artifacts not built; skipping PJRT fit benches)");
+    }
+
+    // ----------------------------------------------------------- predicting
+    section("predict batch scaling");
+    let coeffs: [f64; NUM_FEATURES] = [400.0, 80.0, -20.0, 5.0, 60.0, -10.0, 2.0];
+    for batch in [1usize, 8, 64, 256] {
+        let (p, _, _) = training_set(batch, 3);
+        let mut rust = RustSolverBackend;
+        let st = bench(&format!("predict {batch:>3} rows, rust"), 5, 200, || {
+            std::hint::black_box(rust.predict(&coeffs, &p).unwrap());
+        });
+        report(
+            &format!("rust predictions/sec at batch {batch}"),
+            format!("{:.0}", st.throughput(batch as f64)),
+        );
+    }
+    if have_artifacts {
+        let mut xla = XlaBackend::load_default().expect("artifacts");
+        for batch in [1usize, 8, 64, 256] {
+            let (p, _, _) = training_set(batch, 3);
+            let st = bench(&format!("predict {batch:>3} rows, xla-pjrt"), 5, 100, || {
+                std::hint::black_box(xla.predict(&coeffs, &p).unwrap());
+            });
+            report(
+                &format!("pjrt predictions/sec at batch {batch}"),
+                format!("{:.0}", st.throughput(batch as f64)),
+            );
+        }
+    }
+
+    // ------------------------------------------------------------- service
+    section("prediction service (batching coordinator)");
+    let model = RegressionModel {
+        app_name: "wordcount".into(),
+        coeffs,
+        trained_on: 20,
+    };
+    for wait_us in [0u64, 200, 500, 2000] {
+        let mut reg = ModelRegistry::new();
+        reg.insert(model.clone());
+        let svc = PredictionService::start(
+            || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+            reg,
+            ServiceConfig {
+                max_batch: 64,
+                max_wait: Duration::from_micros(wait_us),
+            },
+        );
+        // Closed-loop latency (single caller — batching can't help).
+        bench(&format!("single-caller latency, max_wait={wait_us}us"), 10, 200, || {
+            std::hint::black_box(svc.predict("wordcount", 20, 5).unwrap());
+        });
+        // Open-loop burst: 512 async requests, then drain.
+        let st = bench(&format!("burst of 512 requests, max_wait={wait_us}us"), 2, 10, || {
+            let rxs: Vec<_> = (0..512)
+                .map(|i| svc.predict_async("wordcount", 5 + (i % 36), 5).unwrap())
+                .collect();
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+        });
+        report(
+            &format!("burst throughput at max_wait={wait_us}us"),
+            format!("{:.0} req/s", st.throughput(512.0)),
+        );
+        report(
+            &format!("mean batch size at max_wait={wait_us}us"),
+            format!("{:.1}", svc.metrics.mean_batch_size()),
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench: regenerate **Table 1** — statistical mean and variance of
+//! prediction errors for WordCount and Exim — across several independent
+//! profiling sessions (seeds), reporting the spread so the comparison
+//! against the paper's single numbers is honest.
+//!
+//! Run: `cargo bench --bench table1_errors`
+
+use mrtuner::apps::AppId;
+use mrtuner::report::experiments::table1;
+use mrtuner::util::benchkit::{report, section};
+use mrtuner::util::stats;
+
+fn main() {
+    const SEEDS: [u64; 5] = [42, 7, 2012, 555, 90210];
+    let mut per_app: std::collections::BTreeMap<&str, (Vec<f64>, Vec<f64>)> =
+        std::collections::BTreeMap::new();
+
+    for &seed in &SEEDS {
+        section(&format!("Table 1 — session seed {seed}"));
+        println!(
+            "{:<12} {:>10} {:>14} {:>12} {:>16}",
+            "application", "mean (%)", "variance (%)", "paper mean", "paper variance"
+        );
+        for row in table1(seed) {
+            println!(
+                "{:<12} {:>10.4} {:>14.4} {:>12.4} {:>16.4}",
+                row.app.name(),
+                row.mean_pct,
+                row.variance_pct,
+                row.paper_mean_pct,
+                row.paper_variance_pct
+            );
+            let e = per_app.entry(row.app.name()).or_default();
+            e.0.push(row.mean_pct);
+            e.1.push(row.variance_pct);
+        }
+    }
+
+    section("across sessions");
+    for (app, (m, v)) in &per_app {
+        report(
+            &format!("{app} mean error over {} sessions", SEEDS.len()),
+            format!(
+                "{:.3}% +- {:.3}  (paper {})",
+                stats::mean(m),
+                stats::stddev(m),
+                if *app == "wordcount" { "0.9204%" } else { "2.7982%" }
+            ),
+        );
+        report(
+            &format!("{app} error variance over sessions"),
+            format!(
+                "{:.3}% +- {:.3}  (paper {})",
+                stats::mean(v),
+                stats::stddev(v),
+                if *app == "wordcount" { "2.6013%" } else { "6.7008%" }
+            ),
+        );
+    }
+    let wc = stats::mean(&per_app["wordcount"].0);
+    let ex = stats::mean(&per_app["exim"].0);
+    report("headline: both < 5%", if wc < 5.0 && ex < 5.0 { "REPRODUCED" } else { "NO" });
+    report(
+        "ordering: exim error > wordcount error (paper: yes)",
+        if ex > wc { "yes" } else { "NO" },
+    );
+    let _ = AppId::paper_apps();
+}

@@ -1,0 +1,288 @@
+//! Functional MapReduce execution: split → map → (combine) → partition →
+//! sort → shuffle → merge → reduce, for real, in memory.
+//!
+//! This engine computes *what* a job produces; the DES framework in
+//! `crate::mr` computes *how long* it takes at cluster scale.  Running the
+//! same `Mapper`/`Reducer` code in both keeps semantics honest, and the
+//! engine's measured record/byte statistics calibrate the cost model
+//! (`crate::apps::profiles`).
+
+use std::collections::BTreeMap;
+
+use super::kv::Pair;
+use super::traits::{Combiner, Mapper, Partitioner, Reducer};
+
+/// Knobs mirroring the JobConf fields that matter functionally.
+pub struct ExecOptions<'a> {
+    pub num_reducers: u32,
+    pub combiner: Option<&'a dyn Combiner>,
+    pub partitioner: &'a dyn Partitioner,
+    /// Input split count (affects combiner aggregation scope, not results).
+    pub num_splits: u32,
+}
+
+/// Functional result plus the counters the cost model consumes.
+#[derive(Clone, Debug, Default)]
+pub struct JobOutput {
+    /// Final output, one vec per reducer (sorted by key within each).
+    pub partitions: Vec<Vec<Pair>>,
+    pub input_records: u64,
+    pub input_bytes: u64,
+    pub map_output_records: u64,
+    pub map_output_bytes: u64,
+    /// After combiner (== map output if no combiner).
+    pub shuffle_records: u64,
+    pub shuffle_bytes: u64,
+    pub output_records: u64,
+    pub output_bytes: u64,
+}
+
+impl JobOutput {
+    /// All output pairs merged (for assertions in tests/examples).
+    pub fn all_pairs(&self) -> Vec<Pair> {
+        let mut v: Vec<Pair> =
+            self.partitions.iter().flatten().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Map-output selectivity: shuffle bytes per input byte — the cost
+    /// model's key application statistic.
+    pub fn selectivity(&self) -> f64 {
+        if self.input_bytes == 0 {
+            0.0
+        } else {
+            self.shuffle_bytes as f64 / self.input_bytes as f64
+        }
+    }
+}
+
+/// Split text into `n` chunks on line boundaries (byte-range splits that
+/// extend to the next newline, like Hadoop's `LineRecordReader`).
+pub fn line_splits(input: &str, n: u32) -> Vec<&str> {
+    let n = n.max(1) as usize;
+    let bytes = input.as_bytes();
+    let target = (bytes.len() / n).max(1);
+    let mut splits = Vec::with_capacity(n);
+    let mut start = 0;
+    for _ in 0..n {
+        if start >= bytes.len() {
+            break;
+        }
+        let mut end = (start + target).min(bytes.len());
+        // Extend to the next newline (or EOF).
+        while end < bytes.len() && bytes[end - 1] != b'\n' {
+            end += 1;
+        }
+        splits.push(&input[start..end]);
+        start = end;
+    }
+    if start < bytes.len() {
+        // Remainder goes to the last split.
+        let last = splits.pop().unwrap_or("");
+        let merged_start = last.as_ptr() as usize - input.as_ptr() as usize;
+        splits.push(&input[merged_start..]);
+    }
+    splits
+}
+
+/// Run a full MapReduce job functionally.
+pub fn execute(
+    mapper: &dyn Mapper,
+    reducer: &dyn Reducer,
+    input: &str,
+    opts: &ExecOptions<'_>,
+) -> JobOutput {
+    let r = opts.num_reducers.max(1);
+    let mut out = JobOutput { partitions: vec![Vec::new(); r as usize], ..Default::default() };
+    out.input_bytes = input.len() as u64;
+
+    // Per-reducer intermediate store: key -> values, sorted by key (BTreeMap
+    // plays the role of the sort/merge stage).
+    let mut groups: Vec<BTreeMap<String, Vec<String>>> =
+        vec![BTreeMap::new(); r as usize];
+
+    let mut emitted = Vec::new();
+    for split in line_splits(input, opts.num_splits) {
+        // ---- map phase over this split
+        let mut split_pairs: Vec<Pair> = Vec::new();
+        let mut offset = 0u64;
+        for line in split.lines() {
+            out.input_records += 1;
+            emitted.clear();
+            mapper.map(offset, line, &mut emitted);
+            offset += line.len() as u64 + 1;
+            out.map_output_records += emitted.len() as u64;
+            out.map_output_bytes += emitted.iter().map(Pair::byte_len).sum::<u64>();
+            split_pairs.append(&mut emitted);
+        }
+
+        // ---- map-side combine (per split, like Hadoop's per-spill combine)
+        let combined: Vec<Pair> = if let Some(c) = opts.combiner {
+            let mut by_key: BTreeMap<String, Vec<String>> = BTreeMap::new();
+            for p in split_pairs {
+                by_key.entry(p.key).or_default().push(p.value);
+            }
+            let mut acc = Vec::new();
+            for (k, vs) in &by_key {
+                c.combine(k, vs, &mut acc);
+            }
+            acc
+        } else {
+            split_pairs
+        };
+        out.shuffle_records += combined.len() as u64;
+        out.shuffle_bytes += combined.iter().map(Pair::byte_len).sum::<u64>();
+
+        // ---- partition (the "shuffle" routing)
+        for p in combined {
+            let part = opts.partitioner.partition(&p.key, r) as usize;
+            groups[part].entry(p.key).or_default().push(p.value);
+        }
+    }
+
+    // ---- reduce phase
+    for (part, group) in groups.into_iter().enumerate() {
+        let mut acc = Vec::new();
+        for (k, vs) in &group {
+            reducer.reduce(k, vs, &mut acc);
+        }
+        out.output_records += acc.len() as u64;
+        out.output_bytes += acc.iter().map(Pair::byte_len).sum::<u64>();
+        out.partitions[part] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::traits::HashPartitioner;
+
+    struct IdentityMapper;
+    impl Mapper for IdentityMapper {
+        fn map(&self, _off: u64, line: &str, out: &mut Vec<Pair>) {
+            out.push(Pair::new(line, "1"));
+        }
+    }
+
+    /// Sums numeric values — combiner-compatible (sum is associative),
+    /// like the canonical WordCount reducer.
+    struct CountReducer;
+    impl Reducer for CountReducer {
+        fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+            let total: u64 = values.iter().map(|v| v.parse::<u64>().unwrap()).sum();
+            out.push(Pair::new(key, total.to_string()));
+        }
+    }
+    impl Combiner for CountReducer {
+        fn combine(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+            let total: u64 = values.iter().map(|v| v.parse::<u64>().unwrap()).sum();
+            out.push(Pair::new(key, total.to_string()));
+        }
+    }
+
+    fn opts(r: u32, splits: u32) -> ExecOptions<'static> {
+        ExecOptions {
+            num_reducers: r,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: splits,
+        }
+    }
+
+    #[test]
+    fn counts_lines() {
+        let input = "a\nb\na\na\n";
+        let out = execute(&IdentityMapper, &CountReducer, input, &opts(3, 2));
+        let pairs = out.all_pairs();
+        assert_eq!(
+            pairs,
+            vec![Pair::new("a", "3"), Pair::new("b", "1")]
+        );
+        assert_eq!(out.input_records, 4);
+        assert_eq!(out.map_output_records, 4);
+        assert_eq!(out.output_records, 2);
+    }
+
+    #[test]
+    fn results_independent_of_split_and_reducer_count() {
+        let input = "x\ny\nz\nx\ny\nx\n".repeat(50);
+        let base = execute(&IdentityMapper, &CountReducer, &input, &opts(1, 1)).all_pairs();
+        for r in [2, 5, 7] {
+            for s in [1, 3, 8] {
+                let got =
+                    execute(&IdentityMapper, &CountReducer, &input, &opts(r, s)).all_pairs();
+                assert_eq!(got, base, "r={r} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_respect_partitioner() {
+        let input = "a\nb\nc\nd\n";
+        let out = execute(&IdentityMapper, &CountReducer, input, &opts(4, 1));
+        let p = HashPartitioner;
+        for (i, part) in out.partitions.iter().enumerate() {
+            for pair in part {
+                assert_eq!(p.partition(&pair.key, 4) as usize, i);
+            }
+        }
+    }
+
+    #[test]
+    fn output_sorted_within_partition() {
+        let input = "delta\nalpha\ncharlie\nbravo\n".repeat(10);
+        let out = execute(&IdentityMapper, &CountReducer, &input, &opts(2, 3));
+        for part in &out.partitions {
+            let keys: Vec<&String> = part.iter().map(|p| &p.key).collect();
+            let mut sorted = keys.clone();
+            sorted.sort();
+            assert_eq!(keys, sorted);
+        }
+    }
+
+    #[test]
+    fn combiner_shrinks_shuffle_but_not_results() {
+        let input = "w\n".repeat(100);
+        let without = execute(&IdentityMapper, &CountReducer, &input, &opts(2, 4));
+        let mut o = opts(2, 4);
+        o.combiner = Some(&CountReducer);
+        let with = execute(&IdentityMapper, &CountReducer, &input, &o);
+        assert_eq!(with.all_pairs(), without.all_pairs());
+        assert!(with.shuffle_records < without.shuffle_records);
+        assert!(with.shuffle_bytes < without.shuffle_bytes);
+        // 4 splits of identical words -> 4 combined records.
+        assert_eq!(with.shuffle_records, 4);
+    }
+
+    #[test]
+    fn line_splits_cover_input_exactly() {
+        let input = "one\ntwo\nthree\nfour\nfive\n";
+        for n in 1..8 {
+            let splits = line_splits(input, n);
+            let joined: String = splits.concat();
+            assert_eq!(joined, input, "n={n}");
+            for s in &splits[..splits.len().saturating_sub(1)] {
+                assert!(s.ends_with('\n'), "split not on line boundary: {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input() {
+        let out = execute(&IdentityMapper, &CountReducer, "", &opts(3, 2));
+        assert_eq!(out.input_records, 0);
+        assert_eq!(out.output_records, 0);
+        assert_eq!(out.partitions.len(), 3);
+        assert_eq!(out.selectivity(), 0.0);
+    }
+
+    #[test]
+    fn selectivity_reflects_bytes() {
+        let input = "word\n".repeat(20);
+        let out = execute(&IdentityMapper, &CountReducer, &input, &opts(1, 1));
+        // Each 5-byte line -> "word\t1\n"-style 7-byte pair.
+        assert!(out.selectivity() > 1.0);
+    }
+}

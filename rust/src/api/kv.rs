@@ -1,0 +1,43 @@
+//! Key/value records.
+
+/// A `<key, value>` pair — the unit of data flowing through MapReduce
+/// (paper §III).  Keys and values are UTF-8 strings, matching the text
+/// workloads the paper evaluates (WordCount, Exim mainlog lines).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Pair {
+    pub key: String,
+    pub value: String,
+}
+
+impl Pair {
+    pub fn new(key: impl Into<String>, value: impl Into<String>) -> Pair {
+        Pair { key: key.into(), value: value.into() }
+    }
+
+    /// Serialized size in bytes (key + TAB + value + newline), the same
+    /// accounting Hadoop's map-output counters use for text records.
+    pub fn byte_len(&self) -> u64 {
+        self.key.len() as u64 + self.value.len() as u64 + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_is_by_key_then_value() {
+        let a = Pair::new("a", "2");
+        let b = Pair::new("a", "1");
+        let c = Pair::new("b", "0");
+        let mut v = vec![c.clone(), a.clone(), b.clone()];
+        v.sort();
+        assert_eq!(v, vec![b, a, c]);
+    }
+
+    #[test]
+    fn byte_len_counts_separators() {
+        assert_eq!(Pair::new("word", "1").byte_len(), 7);
+        assert_eq!(Pair::new("", "").byte_len(), 2);
+    }
+}

@@ -1,0 +1,15 @@
+//! User-facing MapReduce programming API and the functional execution engine.
+//!
+//! This is the part of Hadoop an application developer sees: `Mapper`,
+//! `Reducer`, `Combiner`, `Partitioner`.  The framework executes these for
+//! real over real bytes (`execute` below) — outputs are genuine word
+//! counts / parsed transactions, so the simulator's semantics are testable
+//! against ground truth rather than mocked.
+
+pub mod engine;
+pub mod kv;
+pub mod traits;
+
+pub use engine::{execute, ExecOptions, JobOutput};
+pub use kv::Pair;
+pub use traits::{Combiner, Mapper, Partitioner, Reducer};

@@ -1,0 +1,96 @@
+//! The MapReduce programming contracts.
+
+use super::kv::Pair;
+
+/// Emits intermediate pairs for one input record.  Input records are text
+/// lines (key = byte offset rendered as string, value = the line), exactly
+/// like Hadoop's `TextInputFormat`.
+pub trait Mapper: Send + Sync {
+    fn map(&self, offset: u64, line: &str, out: &mut Vec<Pair>);
+}
+
+/// Folds all values sharing a key into output pairs.
+pub trait Reducer: Send + Sync {
+    fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>);
+}
+
+/// Optional map-side pre-aggregation (Hadoop's combiner).  Must be
+/// algebraically compatible with the reducer; correctness is property-
+/// tested per app (combiner on == combiner off).
+pub trait Combiner: Send + Sync {
+    fn combine(&self, key: &str, values: &[String], out: &mut Vec<Pair>);
+}
+
+/// Routes a key to one of `num_reducers` partitions.
+pub trait Partitioner: Send + Sync {
+    fn partition(&self, key: &str, num_reducers: u32) -> u32;
+}
+
+/// Hadoop's default `HashPartitioner`.  We reimplement Java's
+/// `String.hashCode` so partition skew characteristics match the real
+/// system (Java's 31x hash on short ASCII keys is mildly non-uniform,
+/// which is part of why reducers see skewed shuffle volumes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HashPartitioner;
+
+impl HashPartitioner {
+    /// `java.lang.String#hashCode`: s[0]*31^(n-1) + ... + s[n-1], i32 wrap.
+    pub fn java_hash(s: &str) -> i32 {
+        let mut h: i32 = 0;
+        for c in s.encode_utf16() {
+            h = h.wrapping_mul(31).wrapping_add(c as i32);
+        }
+        h
+    }
+}
+
+impl Partitioner for HashPartitioner {
+    fn partition(&self, key: &str, num_reducers: u32) -> u32 {
+        // Hadoop: (hash & Integer.MAX_VALUE) % numReduceTasks
+        ((Self::java_hash(key) & i32::MAX) as u32) % num_reducers.max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn java_hash_known_values() {
+        // Values cross-checked against the JVM.
+        assert_eq!(HashPartitioner::java_hash(""), 0);
+        assert_eq!(HashPartitioner::java_hash("a"), 97);
+        assert_eq!(HashPartitioner::java_hash("ab"), 3105);
+        assert_eq!(HashPartitioner::java_hash("hello"), 99162322);
+        assert_eq!(HashPartitioner::java_hash("polygenelubricants"), i32::MIN);
+    }
+
+    #[test]
+    fn partition_in_range_and_stable() {
+        let p = HashPartitioner;
+        for key in ["the", "a", "exim", "2011-07-01", ""] {
+            let part = p.partition(key, 7);
+            assert!(part < 7);
+            assert_eq!(part, p.partition(key, 7), "stable for {key}");
+        }
+    }
+
+    #[test]
+    fn single_reducer_gets_everything() {
+        let p = HashPartitioner;
+        forall("hash partition r=1", 20, |rng| {
+            let len = rng.range_usize(0, 12);
+            let key: String =
+                (0..len).map(|_| (b'a' + rng.range_u64(0, 26) as u8) as char).collect();
+            assert_eq!(p.partition(&key, 1), 0);
+        });
+    }
+
+    #[test]
+    fn negative_hash_keys_still_partition() {
+        // "polygenelubricants" hashes to i32::MIN; & MAX makes it 0.
+        let p = HashPartitioner;
+        assert_eq!(p.partition("polygenelubricants", 40), 0);
+    }
+}

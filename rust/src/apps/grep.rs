@@ -1,0 +1,92 @@
+//! Distributed grep — extension app (not in the paper's evaluation pair).
+//!
+//! The classic third Hadoop demo: mappers emit matching lines' match
+//! counts, reducers aggregate per pattern.  Its cost profile (tiny
+//! selectivity, map-scan dominated) stresses a different corner of the
+//! (M, R) surface than WordCount/Exim, which the ablation benches use to
+//! show the regression generalizes per-application.
+
+use crate::api::{Combiner, Mapper, Pair, Reducer};
+
+/// Emits `<pattern, count>` for every line containing the pattern.
+pub struct GrepMapper {
+    pub pattern: String,
+}
+
+impl Default for GrepMapper {
+    fn default() -> Self {
+        // Default pattern mirrors the common "grep for errors" workload.
+        GrepMapper { pattern: "error".into() }
+    }
+}
+
+impl Mapper for GrepMapper {
+    fn map(&self, _offset: u64, line: &str, out: &mut Vec<Pair>) {
+        let count = line.matches(&self.pattern).count();
+        if count > 0 {
+            out.push(Pair::new(self.pattern.as_str(), count.to_string()));
+        }
+    }
+}
+
+/// Sums match counts (combiner-compatible).
+pub struct GrepReducer;
+
+impl Reducer for GrepReducer {
+    fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+        let total: u64 = values.iter().map(|v| v.parse::<u64>().unwrap_or(0)).sum();
+        out.push(Pair::new(key, total.to_string()));
+    }
+}
+
+impl Combiner for GrepReducer {
+    fn combine(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+        let total: u64 = values.iter().map(|v| v.parse::<u64>().unwrap_or(0)).sum();
+        out.push(Pair::new(key, total.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::engine::{execute, ExecOptions};
+    use crate::api::traits::HashPartitioner;
+
+    #[test]
+    fn counts_matches_including_multiple_per_line() {
+        let input = "an error here\nno problem\nerror error\n";
+        let o = ExecOptions {
+            num_reducers: 2,
+            combiner: Some(&GrepReducer),
+            partitioner: &HashPartitioner,
+            num_splits: 2,
+        };
+        let out = execute(&GrepMapper::default(), &GrepReducer, input, &o);
+        assert_eq!(out.all_pairs(), vec![Pair::new("error", "3")]);
+    }
+
+    #[test]
+    fn no_matches_empty_output() {
+        let o = ExecOptions {
+            num_reducers: 1,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 1,
+        };
+        let out = execute(&GrepMapper::default(), &GrepReducer, "all fine\n", &o);
+        assert_eq!(out.output_records, 0);
+    }
+
+    #[test]
+    fn custom_pattern() {
+        let m = GrepMapper { pattern: "Completed".into() };
+        let o = ExecOptions {
+            num_reducers: 1,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 1,
+        };
+        let out = execute(&m, &GrepReducer, "x Completed\ny\n", &o);
+        assert_eq!(out.all_pairs(), vec![Pair::new("Completed", "1")]);
+    }
+}

@@ -1,0 +1,146 @@
+//! Cost profiles for the benchmark applications, plus calibration from
+//! functional execution.
+//!
+//! The CPU coefficients are ns-per-byte at a 1 GHz reference clock, set to
+//! 2011-era Hadoop throughputs (a few MB/s per core for WordCount-class
+//! jobs) and shaped so the simulated surface reproduces the paper's
+//! qualitative findings (§V.B): WordCount ≈ 2× Exim total time, both
+//! minimal near (20 mappers, 5 reducers), WordCount more fluctuating,
+//! Exim noisier run-to-run (streaming).
+//!
+//! `calibrate` re-derives the *data-dependent* coefficients (selectivity,
+//! output ratio) from a real functional run on sampled input, keeping the
+//! simulator's data-flow assumptions honest against the actual apps.
+
+use crate::api::engine::JobOutput;
+use crate::mr::cost::AppProfile;
+
+/// WordCount (Java): map-CPU heavy (tokenize + emit per word), combiner
+/// shrinks shuffle to per-split vocabularies.
+pub fn wordcount() -> AppProfile {
+    AppProfile {
+        name: "wordcount".into(),
+        map_cpu_ns_per_byte: 800.0,
+        reduce_cpu_ns_per_byte: 500.0,
+        selectivity: 0.28,
+        output_ratio: 0.05,
+        streaming: false,
+        noise_sigma: 0.025,
+        job_sigma: 0.008,
+    }
+}
+
+/// Exim mainlog parsing (Python via Hadoop streaming): cheap line parse,
+/// but most bytes survive into the shuffle (transaction grouping), plus
+/// streaming pipe overhead and doubled temporal noise.
+pub fn exim() -> AppProfile {
+    AppProfile {
+        name: "exim".into(),
+        map_cpu_ns_per_byte: 140.0,
+        reduce_cpu_ns_per_byte: 30.0,
+        selectivity: 0.50,
+        output_ratio: 0.45,
+        streaming: true,
+        noise_sigma: 0.045,
+        job_sigma: 0.028,
+    }
+}
+
+/// Distributed grep (Java): scan-dominated, near-zero selectivity.
+pub fn grep() -> AppProfile {
+    AppProfile {
+        name: "grep".into(),
+        map_cpu_ns_per_byte: 90.0,
+        reduce_cpu_ns_per_byte: 10.0,
+        selectivity: 0.0008,
+        output_ratio: 0.0001,
+        streaming: false,
+        noise_sigma: 0.02,
+        job_sigma: 0.008,
+    }
+}
+
+/// Recalibrate the data-dependent coefficients of `profile` from a
+/// functional run (`out`) on representative sample input.
+///
+/// Selectivity and output ratio are measured exactly; CPU coefficients are
+/// left untouched (they encode the 2011 testbed, not this host).  Returns
+/// the calibrated profile and the relative drift of the old selectivity —
+/// large drift means the built-in constants disagree with the actual app
+/// on this corpus, and the caller may want to re-profile.
+pub fn calibrate(profile: &AppProfile, out: &JobOutput) -> (AppProfile, f64) {
+    if out.input_bytes == 0 {
+        // Nothing measured; leave the profile untouched.
+        return (profile.clone(), 0.0);
+    }
+    let mut p = profile.clone();
+    let measured_sel = out.selectivity();
+    let drift = if profile.selectivity > 0.0 {
+        (measured_sel - profile.selectivity).abs() / profile.selectivity
+    } else {
+        0.0
+    };
+    p.selectivity = measured_sel.max(1e-6);
+    p.output_ratio = out.output_bytes as f64 / out.input_bytes as f64;
+    (p, drift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::engine::{execute, ExecOptions};
+    use crate::api::traits::HashPartitioner;
+    use crate::apps::AppId;
+    use crate::datagen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn calibrate_measures_selectivity() {
+        let mut rng = Rng::new(5);
+        let corpus = datagen::corpus::generate(&mut rng, 200_000);
+        let (mapper, reducer, combiner) = AppId::WordCount.functional();
+        let o = ExecOptions {
+            num_reducers: 4,
+            combiner: combiner.as_deref(),
+            partitioner: &HashPartitioner,
+            num_splits: 8,
+        };
+        let out = execute(mapper.as_ref(), reducer.as_ref(), &corpus, &o);
+        let (p, drift) = calibrate(&wordcount(), &out);
+        assert!((p.selectivity - out.selectivity()).abs() < 1e-12);
+        assert!(p.output_ratio > 0.0);
+        // Combiner-era WordCount selectivity is strongly corpus-size
+        // dependent (per-split vocabulary / split bytes): at 25 KB splits
+        // it sits well above the 8 GB-scale constant in `wordcount()`.  We
+        // only assert the measured value is in a sane band and that the
+        // drift is reported.
+        assert!(p.selectivity > 0.0 && p.selectivity < 2.0);
+        assert!(drift.is_finite());
+    }
+
+    #[test]
+    fn calibrate_handles_empty_run() {
+        let out = JobOutput::default();
+        let (p, drift) = calibrate(&grep(), &out);
+        assert_eq!(p.selectivity, grep().selectivity);
+        assert_eq!(drift, 0.0);
+    }
+
+    #[test]
+    fn exim_selectivity_close_to_measured() {
+        let mut rng = Rng::new(6);
+        let log = datagen::exim_log::generate(&mut rng, 200_000);
+        let (mapper, reducer, _) = AppId::EximParse.functional();
+        let o = ExecOptions {
+            num_reducers: 4,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 8,
+        };
+        let out = execute(mapper.as_ref(), reducer.as_ref(), &log, &o);
+        // Most mainlog bytes carry a message id and survive to the shuffle.
+        assert!(out.selectivity() > 0.4, "exim selectivity {}", out.selectivity());
+        let (p, _) = calibrate(&exim(), &out);
+        assert!(p.selectivity > 0.4);
+    }
+}

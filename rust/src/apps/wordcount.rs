@@ -1,0 +1,89 @@
+//! WordCount — the paper's first benchmark (§V.A, [33-34]).
+//!
+//! "Each Mapper picks a line as input and breaks it into words
+//! `<word, 1>` ... each Reducer counts the values of pairs with the same
+//! key" — the canonical Hadoop example, reproduced here verbatim,
+//! including the standard sum combiner.
+
+use crate::api::{Combiner, Mapper, Pair, Reducer};
+
+/// Splits lines into words and emits `<word, 1>`.
+pub struct WordCountMapper;
+
+impl Mapper for WordCountMapper {
+    fn map(&self, _offset: u64, line: &str, out: &mut Vec<Pair>) {
+        for word in line.split_whitespace() {
+            // Hadoop's StringTokenizer keeps punctuation; so do we.
+            out.push(Pair::new(word, "1"));
+        }
+    }
+}
+
+/// Sums counts per word.  Doubles as the combiner (sum is associative and
+/// commutative), exactly like the stock Hadoop example.
+pub struct WordCountReducer;
+
+impl Reducer for WordCountReducer {
+    fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+        let total: u64 = values.iter().map(|v| v.parse::<u64>().unwrap_or(0)).sum();
+        out.push(Pair::new(key, total.to_string()));
+    }
+}
+
+impl Combiner for WordCountReducer {
+    fn combine(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+        let total: u64 = values.iter().map(|v| v.parse::<u64>().unwrap_or(0)).sum();
+        out.push(Pair::new(key, total.to_string()));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::engine::{execute, ExecOptions};
+    use crate::api::traits::HashPartitioner;
+
+    fn opts(r: u32, combine: bool) -> ExecOptions<'static> {
+        ExecOptions {
+            num_reducers: r,
+            combiner: if combine { Some(&WordCountReducer) } else { None },
+            partitioner: &HashPartitioner,
+            num_splits: 4,
+        }
+    }
+
+    #[test]
+    fn counts_words() {
+        let input = "the quick brown fox\nthe lazy dog\nthe end\n";
+        let out = execute(&WordCountMapper, &WordCountReducer, input, &opts(3, true));
+        let pairs = out.all_pairs();
+        let the = pairs.iter().find(|p| p.key == "the").unwrap();
+        assert_eq!(the.value, "3");
+        assert_eq!(pairs.iter().filter(|p| p.key == "fox").count(), 1);
+        assert_eq!(out.input_records, 3);
+    }
+
+    #[test]
+    fn combiner_preserves_counts() {
+        let input = "a b a\nb a b\n".repeat(40);
+        let plain = execute(&WordCountMapper, &WordCountReducer, &input, &opts(4, false));
+        let combined = execute(&WordCountMapper, &WordCountReducer, &input, &opts(4, true));
+        assert_eq!(plain.all_pairs(), combined.all_pairs());
+        assert!(combined.shuffle_bytes < plain.shuffle_bytes);
+    }
+
+    #[test]
+    fn empty_lines_and_whitespace() {
+        let input = "\n\n   \n word \n";
+        let out = execute(&WordCountMapper, &WordCountReducer, input, &opts(1, true));
+        assert_eq!(out.all_pairs(), vec![Pair::new("word", "1")]);
+    }
+
+    #[test]
+    fn punctuation_kept_like_stringtokenizer() {
+        let input = "end. end\n";
+        let out = execute(&WordCountMapper, &WordCountReducer, input, &opts(1, false));
+        // "end." and "end" are distinct tokens, as in stock WordCount.
+        assert_eq!(out.output_records, 2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Cluster hardware model.
+//!
+//! Models the paper's 4-node heterogeneous testbed (§V.A): per-node CPU
+//! clock, memory, disk and cache, Hadoop 0.20-style fixed task slots, a
+//! shared-medium network with fair-share contention and a simple disk
+//! bandwidth model.
+
+pub mod network;
+pub mod node;
+pub mod spec;
+
+pub use network::Network;
+pub use node::Node;
+pub use spec::NodeSpec;
+
+use crate::util::bytes::{GB, MB};
+
+/// A cluster: node specs plus derived runtime state.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    pub network: Network,
+}
+
+impl Cluster {
+    pub fn new(specs: Vec<NodeSpec>, network: Network) -> Cluster {
+        let nodes = specs.into_iter().enumerate().map(|(i, s)| Node::new(i, s)).collect();
+        Cluster { nodes, network }
+    }
+
+    /// The paper's exact 4-node testbed (§V.A):
+    ///
+    /// * master/node-0 and node-1: 2.9 GHz, 1 GB RAM, 30 GB disk, 512 KB cache
+    /// * node-2 and node-3:        2.5 GHz, 512 MB RAM, 60 GB disk, 254 KB cache
+    ///
+    /// Gigabit switched Ethernet (commodity 2011-era lab cluster); 2 map
+    /// slots + 1 reduce slot per node — the standard sizing for
+    /// single-processor boxes in the Hadoop 0.20 era (the 2/2 default
+    /// oversubscribes a lone core badly during concurrent reduces).
+    pub fn paper_cluster() -> Cluster {
+        let fast = NodeSpec {
+            name: "dell-2.9ghz".into(),
+            cpu_ghz: 2.9,
+            ram_bytes: GB,
+            disk_bytes: 30 * GB,
+            cache_kb: 512,
+            disk_read_mbps: 70.0,
+            disk_write_mbps: 55.0,
+            map_slots: 2,
+            reduce_slots: 1,
+        };
+        let slow = NodeSpec {
+            name: "dell-2.5ghz".into(),
+            cpu_ghz: 2.5,
+            ram_bytes: 512 * MB,
+            disk_bytes: 60 * GB,
+            cache_kb: 254,
+            disk_read_mbps: 60.0,
+            disk_write_mbps: 48.0,
+            map_slots: 2,
+            reduce_slots: 1,
+        };
+        Cluster::new(
+            vec![fast.clone(), fast, slow.clone(), slow],
+            Network::switched_ethernet_1gbps(4),
+        )
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn total_map_slots(&self) -> u32 {
+        self.nodes.iter().map(|n| n.spec.map_slots).sum()
+    }
+
+    pub fn total_reduce_slots(&self) -> u32 {
+        self.nodes.iter().map(|n| n.spec.reduce_slots).sum()
+    }
+
+    /// Mean CPU clock across nodes — used for cluster-wide cost estimates.
+    pub fn mean_ghz(&self) -> f64 {
+        self.nodes.iter().map(|n| n.spec.cpu_ghz).sum::<f64>() / self.nodes.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_cluster_matches_section_5a() {
+        let c = Cluster::paper_cluster();
+        assert_eq!(c.num_nodes(), 4);
+        assert_eq!(c.nodes[0].spec.cpu_ghz, 2.9);
+        assert_eq!(c.nodes[1].spec.ram_bytes, GB);
+        assert_eq!(c.nodes[2].spec.cpu_ghz, 2.5);
+        assert_eq!(c.nodes[3].spec.disk_bytes, 60 * GB);
+        assert_eq!(c.nodes[3].spec.cache_kb, 254);
+        assert_eq!(c.total_map_slots(), 8);
+        assert_eq!(c.total_reduce_slots(), 4);
+    }
+
+    #[test]
+    fn mean_ghz() {
+        let c = Cluster::paper_cluster();
+        assert!((c.mean_ghz() - 2.7).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,87 @@
+//! Shared-medium network model with fair-share contention.
+//!
+//! The shuffle phase is the network-intensive part of MapReduce (paper
+//! §III).  We model a switched Ethernet where each node has a fixed NIC
+//! rate and the switch backplane is non-blocking: a transfer's bandwidth
+//! is its fair share of the more contended of its two endpoints.
+
+/// Static network description.
+#[derive(Clone, Debug)]
+pub struct Network {
+    /// Per-NIC bandwidth in bytes/sec.
+    pub nic_bps: f64,
+    /// Per-connection setup latency (TCP + Jetty fetch handshake), seconds.
+    pub fetch_latency_s: f64,
+    pub nodes: usize,
+}
+
+impl Network {
+    pub fn switched_ethernet_100mbps(nodes: usize) -> Network {
+        Network {
+            nic_bps: 100.0e6 / 8.0, // 100 Mbit/s -> 12.5 MB/s
+            // Hadoop 0.20 shuffle fetches over HTTP (Jetty); each map-output
+            // fetch pays connection + request overhead.
+            fetch_latency_s: 0.08,
+            nodes,
+        }
+    }
+
+    /// Gigabit Ethernet — the paper-era lab default; used by
+    /// [`crate::cluster::Cluster::paper_cluster`].  On 100 Mbit the shuffle
+    /// would dominate every phase for 8 GB jobs, contradicting the paper's
+    /// observation that the map-CPU-heavy WordCount runs ~2x the
+    /// shuffle-heavy Exim job.
+    pub fn switched_ethernet_1gbps(nodes: usize) -> Network {
+        Network {
+            nic_bps: 1.0e9 / 8.0, // 1 Gbit/s -> 125 MB/s
+            fetch_latency_s: 0.08,
+            nodes,
+        }
+    }
+
+    /// Effective bandwidth of one transfer when `src_streams` transfers
+    /// share the source NIC and `dst_streams` share the destination NIC.
+    pub fn transfer_bps(&self, src_streams: u32, dst_streams: u32) -> f64 {
+        let contention = src_streams.max(dst_streams).max(1) as f64;
+        self.nic_bps / contention
+    }
+
+    /// Time to move `bytes` under a constant contention level.
+    pub fn transfer_secs(&self, bytes: u64, src_streams: u32, dst_streams: u32) -> f64 {
+        bytes as f64 / self.transfer_bps(src_streams, dst_streams)
+    }
+
+    /// Aggregate cluster shuffle capacity in bytes/sec: bounded by all NICs
+    /// transmitting at once (each byte crosses one Tx and one Rx NIC).
+    pub fn bisection_bps(&self) -> f64 {
+        self.nic_bps * self.nodes as f64 / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncontended_transfer_is_nic_rate() {
+        let n = Network::switched_ethernet_100mbps(4);
+        assert!((n.transfer_bps(1, 1) - 12.5e6).abs() < 1.0);
+        // 125 MB at 12.5 MB/s = 10s
+        assert!((n.transfer_secs(125_000_000, 1, 1) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_divides_bandwidth() {
+        let n = Network::switched_ethernet_100mbps(4);
+        assert!((n.transfer_bps(4, 2) - 12.5e6 / 4.0).abs() < 1.0);
+        assert!((n.transfer_bps(1, 8) - 12.5e6 / 8.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn bisection_scales_with_nodes() {
+        let n4 = Network::switched_ethernet_100mbps(4);
+        let n8 = Network::switched_ethernet_100mbps(8);
+        assert!(n8.bisection_bps() > n4.bisection_bps());
+        assert!((n4.bisection_bps() - 25.0e6).abs() < 1.0);
+    }
+}

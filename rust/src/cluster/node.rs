@@ -1,0 +1,83 @@
+//! Per-node runtime state: slot occupancy.
+
+use super::spec::NodeSpec;
+
+pub type NodeId = usize;
+
+/// A worker node: immutable spec plus live slot accounting.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub spec: NodeSpec,
+    pub busy_map_slots: u32,
+    pub busy_reduce_slots: u32,
+}
+
+impl Node {
+    pub fn new(id: NodeId, spec: NodeSpec) -> Node {
+        Node { id, spec, busy_map_slots: 0, busy_reduce_slots: 0 }
+    }
+
+    pub fn free_map_slots(&self) -> u32 {
+        self.spec.map_slots - self.busy_map_slots
+    }
+
+    pub fn free_reduce_slots(&self) -> u32 {
+        self.spec.reduce_slots - self.busy_reduce_slots
+    }
+
+    pub fn take_map_slot(&mut self) {
+        assert!(self.free_map_slots() > 0, "no free map slot on node {}", self.id);
+        self.busy_map_slots += 1;
+    }
+
+    pub fn release_map_slot(&mut self) {
+        assert!(self.busy_map_slots > 0, "map slot underflow on node {}", self.id);
+        self.busy_map_slots -= 1;
+    }
+
+    pub fn take_reduce_slot(&mut self) {
+        assert!(self.free_reduce_slots() > 0, "no free reduce slot on node {}", self.id);
+        self.busy_reduce_slots += 1;
+    }
+
+    pub fn release_reduce_slot(&mut self) {
+        assert!(self.busy_reduce_slots > 0, "reduce slot underflow on node {}", self.id);
+        self.busy_reduce_slots -= 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::cluster::Cluster;
+
+    #[test]
+    fn slot_accounting() {
+        let c = Cluster::paper_cluster();
+        let mut n = c.nodes[0].clone();
+        assert_eq!(n.free_map_slots(), 2);
+        n.take_map_slot();
+        n.take_map_slot();
+        assert_eq!(n.free_map_slots(), 0);
+        n.release_map_slot();
+        assert_eq!(n.free_map_slots(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "no free map slot")]
+    fn overdraw_panics() {
+        let c = Cluster::paper_cluster();
+        let mut n = c.nodes[0].clone();
+        n.take_map_slot();
+        n.take_map_slot();
+        n.take_map_slot();
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn underflow_panics() {
+        let c = Cluster::paper_cluster();
+        let mut n = c.nodes[0].clone();
+        n.release_reduce_slot();
+    }
+}

@@ -1,0 +1,98 @@
+//! Static node hardware description.
+
+/// Hardware spec of one worker node (paper §V.A values in
+/// [`crate::cluster::Cluster::paper_cluster`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeSpec {
+    pub name: String,
+    /// CPU clock — the paper's primary heterogeneity axis; task CPU cost
+    /// scales as `work / cpu_ghz`.
+    pub cpu_ghz: f64,
+    pub ram_bytes: u64,
+    pub disk_bytes: u64,
+    pub cache_kb: u64,
+    /// Sequential read/write bandwidth (2011-era SATA).
+    pub disk_read_mbps: f64,
+    pub disk_write_mbps: f64,
+    /// Hadoop 0.20 fixed slot model.
+    pub map_slots: u32,
+    pub reduce_slots: u32,
+}
+
+impl NodeSpec {
+    /// Memory available to one task JVM: RAM shared across all slots plus
+    /// OS/daemon overhead.  Determines the map-side sort buffer, which in
+    /// turn drives spill behaviour (fewer MB -> more spill passes).
+    pub fn per_task_ram_bytes(&self) -> u64 {
+        let slots = (self.map_slots + self.reduce_slots) as u64;
+        // ~25% of RAM reserved for OS, DataNode and TaskTracker daemons.
+        (self.ram_bytes * 3 / 4) / slots.max(1)
+    }
+
+    /// io.sort.mb equivalent: the in-JVM sort buffer.  Hadoop 0.20 default
+    /// was 100 MB but memory-starved nodes must shrink it (the paper's
+    /// 512 MB nodes cannot give 100 MB to each of 4 slots).
+    pub fn sort_buffer_bytes(&self) -> u64 {
+        let default = 100 * crate::util::bytes::MB;
+        // JVM heap ~ per-task RAM; sort buffer capped at half the heap.
+        default.min(self.per_task_ram_bytes() / 2)
+    }
+
+    /// Relative CPU speed factor vs a 1 GHz reference core.
+    pub fn speed(&self) -> f64 {
+        self.cpu_ghz
+    }
+
+    /// Small multiplier for cache-starved nodes: a 254 KB L2 thrashes on
+    /// sort-heavy workloads relative to 512 KB (secondary effect, ~5%).
+    pub fn cache_penalty(&self) -> f64 {
+        if self.cache_kb >= 512 {
+            1.0
+        } else {
+            1.0 + 0.05 * (512.0 - self.cache_kb as f64) / 512.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::bytes::{GB, MB};
+
+    fn fast() -> NodeSpec {
+        NodeSpec {
+            name: "fast".into(),
+            cpu_ghz: 2.9,
+            ram_bytes: GB,
+            disk_bytes: 30 * GB,
+            cache_kb: 512,
+            disk_read_mbps: 70.0,
+            disk_write_mbps: 55.0,
+            map_slots: 2,
+            reduce_slots: 2,
+        }
+    }
+
+    #[test]
+    fn per_task_ram_divides_by_slots() {
+        let s = fast();
+        assert_eq!(s.per_task_ram_bytes(), (GB * 3 / 4) / 4);
+    }
+
+    #[test]
+    fn sort_buffer_shrinks_on_small_nodes() {
+        let mut s = fast();
+        assert!(s.sort_buffer_bytes() <= 100 * MB);
+        let big_buffer = s.sort_buffer_bytes();
+        s.ram_bytes = 512 * MB;
+        assert!(s.sort_buffer_bytes() < big_buffer);
+    }
+
+    #[test]
+    fn cache_penalty_ordering() {
+        let mut s = fast();
+        assert_eq!(s.cache_penalty(), 1.0);
+        s.cache_kb = 254;
+        assert!(s.cache_penalty() > 1.0 && s.cache_penalty() < 1.1);
+    }
+}

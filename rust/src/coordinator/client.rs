@@ -1,0 +1,74 @@
+//! Blocking TCP client for the prediction server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use crate::util::json::{parse, Json};
+
+/// A connected client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    fn round_trip(&mut self, req: &Json) -> Result<Json, String> {
+        self.writer
+            .write_all(format!("{req}\n").as_bytes())
+            .map_err(|e| e.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
+        let resp = parse(line.trim())?;
+        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(resp
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("unknown server error")
+                .to_string());
+        }
+        Ok(resp)
+    }
+
+    /// Predict total execution time for an `(app, M, R)` setting.
+    pub fn predict(&mut self, app: &str, mappers: u32, reducers: u32) -> Result<f64, String> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            ("app", Json::Str(app.into())),
+            ("mappers", Json::Num(mappers as f64)),
+            ("reducers", Json::Num(reducers as f64)),
+        ]);
+        self.round_trip(&req)?
+            .get("predicted_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| "malformed response".to_string())
+    }
+
+    /// List applications with installed models.
+    pub fn models(&mut self) -> Result<Vec<String>, String> {
+        let req = Json::obj(vec![("op", Json::Str("models".into()))]);
+        Ok(self
+            .round_trip(&req)?
+            .get("models")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|x| x.as_str().map(str::to_string))
+                    .collect()
+            })
+            .unwrap_or_default())
+    }
+
+    /// Service health counters: (requests, batches, mean batch size).
+    pub fn health(&mut self) -> Result<(u64, u64, f64), String> {
+        let req = Json::obj(vec![("op", Json::Str("health".into()))]);
+        let resp = self.round_trip(&req)?;
+        let g = |k: &str| resp.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        Ok((g("requests") as u64, g("batches") as u64, g("mean_batch")))
+    }
+}

@@ -1,0 +1,28 @@
+//! The serving coordinator: the paper's pipeline as an always-on service.
+//!
+//! The paper motivates its model with smarter cluster scheduling: "The
+//! answers ... can be applied to efficient managing of incoming jobs to a
+//! cluster/cloud by making scheduler smarter" (§III).  This module builds
+//! that system:
+//!
+//! * [`registry`] — fitted per-application models (Fig. 2b "upload φ_i's
+//!   individual model");
+//! * [`service`] — a threaded prediction service with **dynamic request
+//!   batching**: concurrent predictions coalesce into single PJRT
+//!   executions of the predict artifact (fixed 64-row batches);
+//! * [`server`] / [`client`] — a line-delimited JSON TCP protocol;
+//! * [`scheduler`] — a predicted-time-aware (SJF) job scheduler evaluated
+//!   against FIFO on the simulated cluster.
+//!
+//! Rust owns the event loop and process lifecycle; Python never runs here.
+
+pub mod client;
+pub mod registry;
+pub mod scheduler;
+pub mod server;
+pub mod service;
+
+pub use registry::ModelRegistry;
+pub use scheduler::{evaluate_order, fifo_order, sjf_order, JobRequest};
+pub use server::Server;
+pub use service::{PredictionService, ServiceConfig, ServiceMetrics};

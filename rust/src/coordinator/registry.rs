@@ -1,0 +1,128 @@
+//! Fitted-model store: one regression model per application per platform.
+//!
+//! The paper is explicit that models do not transfer across applications
+//! or platforms (§I); the registry therefore keys strictly by application
+//! name, and a missing entry is an error rather than a fallback.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::model::RegressionModel;
+use crate::util::json::{parse, Json};
+
+/// Thread-compatible model registry (wrap in `RwLock` for sharing).
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, RegressionModel>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    pub fn insert(&mut self, model: RegressionModel) {
+        self.models.insert(model.app_name.clone(), model);
+    }
+
+    pub fn get(&self, app: &str) -> Option<&RegressionModel> {
+        self.models.get(app)
+    }
+
+    pub fn remove(&mut self, app: &str) -> Option<RegressionModel> {
+        self.models.remove(app)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.models.values().map(|m| m.to_json()).collect())
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelRegistry, String> {
+        let mut reg = ModelRegistry::new();
+        for item in v.as_arr().ok_or("registry must be a JSON array")? {
+            reg.insert(RegressionModel::from_json(item)?);
+        }
+        Ok(reg)
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelRegistry, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        ModelRegistry::from_json(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::features::NUM_FEATURES;
+
+    fn model(name: &str) -> RegressionModel {
+        RegressionModel {
+            app_name: name.into(),
+            coeffs: [1.0; NUM_FEATURES],
+            trained_on: 20,
+        }
+    }
+
+    #[test]
+    fn insert_get_remove() {
+        let mut r = ModelRegistry::new();
+        assert!(r.is_empty());
+        r.insert(model("wordcount"));
+        r.insert(model("exim"));
+        assert_eq!(r.len(), 2);
+        assert!(r.get("wordcount").is_some());
+        assert!(r.get("sort").is_none());
+        assert_eq!(r.names(), vec!["exim", "wordcount"]);
+        assert!(r.remove("exim").is_some());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn insert_replaces() {
+        let mut r = ModelRegistry::new();
+        r.insert(model("wc"));
+        let mut m2 = model("wc");
+        m2.trained_on = 99;
+        r.insert(m2);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.get("wc").unwrap().trained_on, 99);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut r = ModelRegistry::new();
+        r.insert(model("a"));
+        r.insert(model("b"));
+        let back = ModelRegistry::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.names(), r.names());
+        assert_eq!(back.get("a"), r.get("a"));
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let mut r = ModelRegistry::new();
+        r.insert(model("wordcount"));
+        let path = std::env::temp_dir().join("mrtuner_test_registry.json");
+        r.save(&path).unwrap();
+        let back = ModelRegistry::load(&path).unwrap();
+        assert_eq!(back.names(), r.names());
+        std::fs::remove_file(&path).ok();
+    }
+}

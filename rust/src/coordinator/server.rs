@@ -1,0 +1,245 @@
+//! Line-delimited JSON TCP server for the prediction service.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!
+//! ```text
+//! -> {"op":"predict","app":"wordcount","mappers":20,"reducers":5}
+//! <- {"ok":true,"predicted_s":512.4}
+//! -> {"op":"models"}
+//! <- {"ok":true,"models":["exim","wordcount"]}
+//! -> {"op":"health"}
+//! <- {"ok":true,"requests":123,"batches":17,"mean_batch":7.2}
+//! ```
+//!
+//! One thread per connection (the request path is bounded by the batcher,
+//! not by connection concurrency at this scale).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::{parse, Json};
+
+use super::service::PredictionService;
+
+/// A running TCP server.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind to `addr` (use port 0 for an ephemeral port) and serve
+    /// requests against `service`.
+    pub fn start(addr: &str, service: Arc<PredictionService>) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            // Poll-accept so shutdown is prompt.
+            listener.set_nonblocking(true).ok();
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let svc = Arc::clone(&service);
+                        let cstop = Arc::clone(&accept_stop);
+                        conns.push(std::thread::spawn(move || {
+                            let _ = handle_conn(stream, svc, cstop);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    service: Arc<PredictionService>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp = dispatch(line.trim(), &service);
+                writer.write_all(resp.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn err(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
+}
+
+/// Handle one request line (exposed for unit testing without sockets).
+pub fn dispatch(line: &str, service: &PredictionService) -> Json {
+    let req = match parse(line) {
+        Ok(v) => v,
+        Err(e) => return err(&format!("bad json: {e}")),
+    };
+    match req.get("op").and_then(|o| o.as_str()) {
+        Some("predict") => {
+            let app = match req.get("app").and_then(|a| a.as_str()) {
+                Some(a) => a,
+                None => return err("predict requires 'app'"),
+            };
+            let m = req.get("mappers").and_then(|v| v.as_u64());
+            let r = req.get("reducers").and_then(|v| v.as_u64());
+            let (Some(m), Some(r)) = (m, r) else {
+                return err("predict requires integer 'mappers' and 'reducers'");
+            };
+            match service.predict(app, m as u32, r as u32) {
+                Ok(p) => Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("predicted_s", Json::Num(p)),
+                ]),
+                Err(e) => err(&e),
+            }
+        }
+        Some("models") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "models",
+                Json::Arr(
+                    service.model_names().into_iter().map(Json::Str).collect(),
+                ),
+            ),
+        ]),
+        Some("health") => {
+            let m = &service.metrics;
+            Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "requests",
+                    Json::Num(m.requests.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "batches",
+                    Json::Num(m.batches.load(Ordering::Relaxed) as f64),
+                ),
+                ("mean_batch", Json::Num(m.mean_batch_size())),
+            ])
+        }
+        Some(other) => err(&format!("unknown op '{other}'")),
+        None => err("missing 'op'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::ModelRegistry;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::model::features::NUM_FEATURES;
+    use crate::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
+
+    fn service() -> PredictionService {
+        let mut reg = ModelRegistry::new();
+        reg.insert(RegressionModel {
+            app_name: "wordcount".into(),
+            coeffs: {
+                let mut c = [0.0; NUM_FEATURES];
+                c[0] = 400.0;
+                c
+            },
+            trained_on: 20,
+        });
+        PredictionService::start(
+            || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+            reg,
+            ServiceConfig::default(),
+        )
+    }
+
+    #[test]
+    fn dispatch_predict() {
+        let svc = service();
+        let resp = dispatch(
+            r#"{"op":"predict","app":"wordcount","mappers":20,"reducers":5}"#,
+            &svc,
+        );
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(resp.get("predicted_s").unwrap().as_f64(), Some(400.0));
+    }
+
+    #[test]
+    fn dispatch_errors() {
+        let svc = service();
+        assert_eq!(
+            dispatch("not json", &svc).get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+        assert_eq!(
+            dispatch(r#"{"op":"predict","app":"nope","mappers":1,"reducers":1}"#, &svc)
+                .get("ok")
+                .unwrap()
+                .as_bool(),
+            Some(false)
+        );
+        let e = dispatch(r#"{"op":"predict","app":"wordcount"}"#, &svc);
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("mappers"));
+        assert_eq!(
+            dispatch(r#"{"op":"explode"}"#, &svc).get("ok").unwrap().as_bool(),
+            Some(false)
+        );
+    }
+
+    #[test]
+    fn dispatch_models_and_health() {
+        let svc = service();
+        let m = dispatch(r#"{"op":"models"}"#, &svc);
+        assert_eq!(
+            m.get("models").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("wordcount")
+        );
+        svc.predict("wordcount", 10, 10).unwrap();
+        let h = dispatch(r#"{"op":"health"}"#, &svc);
+        assert!(h.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+    }
+}

@@ -1,0 +1,321 @@
+//! The prediction service: dynamic batching over the predict artifact.
+//!
+//! Concurrent callers block on [`PredictionService::predict`]; a worker
+//! thread drains the request queue, groups requests by application, and
+//! issues **one backend execution per (app, cycle)** — on the PJRT backend
+//! that is a single 64-row predict-artifact call, amortizing dispatch cost
+//! across callers exactly like a vLLM-style router batches decode steps.
+//!
+//! Batching policy: take the first request (blocking), then keep draining
+//! until either `max_batch` requests are queued or `max_wait` has elapsed
+//! since the first one.  Both knobs are in [`ServiceConfig`] and are
+//! swept by `rust/benches/perf_hotpath.rs`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::model::regression::FitBackend;
+
+use super::registry::ModelRegistry;
+
+/// Service tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Maximum requests coalesced into one backend call (the predict
+    /// artifact's fixed row count is the natural setting).
+    pub max_batch: usize,
+    /// How long the batcher waits for stragglers after the first request.
+    pub max_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_batch: 64, max_wait: Duration::from_micros(500) }
+    }
+}
+
+/// Service counters (all monotonic).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub backend_errors: AtomicU64,
+    pub max_batch_seen: AtomicU64,
+}
+
+impl ServiceMetrics {
+    /// Mean requests per backend call — the batching amortization factor.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+}
+
+enum Msg {
+    Predict(PredictReq),
+    Shutdown,
+}
+
+struct PredictReq {
+    app: String,
+    params: [f64; 2],
+    resp: Sender<Result<f64, String>>,
+}
+
+/// Handle to the running service.  Cloneable; dropping the last handle
+/// shuts the worker down.
+pub struct PredictionService {
+    tx: Sender<Msg>,
+    registry: Arc<RwLock<ModelRegistry>>,
+    pub metrics: Arc<ServiceMetrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PredictionService {
+    /// Start the service over any fitting backend (the PJRT
+    /// [`crate::runtime::XlaBackend`] in production; the pure-Rust solver
+    /// in tests and artifact-less environments).
+    ///
+    /// The backend is built *inside* the worker thread via `factory`
+    /// because PJRT handles are not `Send` (the `xla` crate wraps them in
+    /// `Rc`); constructing on the owning thread keeps them thread-local
+    /// for their whole life.
+    pub fn start<F>(
+        factory: F,
+        registry: ModelRegistry,
+        config: ServiceConfig,
+    ) -> PredictionService
+    where
+        F: FnOnce() -> Box<dyn FitBackend> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Msg>();
+        let registry = Arc::new(RwLock::new(registry));
+        let metrics = Arc::new(ServiceMetrics::default());
+        let worker = {
+            let registry = Arc::clone(&registry);
+            let metrics = Arc::clone(&metrics);
+            std::thread::spawn(move || {
+                let backend = factory();
+                worker_loop(backend, rx, registry, metrics, config)
+            })
+        };
+        PredictionService { tx, registry, metrics, worker: Some(worker) }
+    }
+
+    /// Blocking single prediction.
+    pub fn predict(&self, app: &str, num_mappers: u32, num_reducers: u32) -> Result<f64, String> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Predict(PredictReq {
+                app: app.to_string(),
+                params: [num_mappers as f64, num_reducers as f64],
+                resp: rtx,
+            }))
+            .map_err(|_| "service stopped".to_string())?;
+        rrx.recv().map_err(|_| "service dropped request".to_string())?
+    }
+
+    /// Fire a prediction without blocking; the result arrives on the
+    /// returned receiver.  This is what lets callers build big concurrent
+    /// batches from one thread (used by the benches and the server).
+    pub fn predict_async(
+        &self,
+        app: &str,
+        num_mappers: u32,
+        num_reducers: u32,
+    ) -> Result<Receiver<Result<f64, String>>, String> {
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Msg::Predict(PredictReq {
+                app: app.to_string(),
+                params: [num_mappers as f64, num_reducers as f64],
+                resp: rtx,
+            }))
+            .map_err(|_| "service stopped".to_string())?;
+        Ok(rrx)
+    }
+
+    /// Install or replace an application model.
+    pub fn install_model(&self, model: crate::model::RegressionModel) {
+        self.registry.write().unwrap().insert(model);
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.registry.read().unwrap().names()
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    backend: Box<dyn FitBackend>,
+    rx: Receiver<Msg>,
+    registry: Arc<RwLock<ModelRegistry>>,
+    metrics: Arc<ServiceMetrics>,
+    config: ServiceConfig,
+) {
+    // Backend behind a Mutex only for interior mutability; single worker.
+    let backend = Mutex::new(backend);
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(Msg::Predict(r)) => r,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + config.max_wait;
+        while batch.len() < config.max_batch {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.recv_timeout(remaining) {
+                Ok(Msg::Predict(r)) => batch.push(r),
+                Ok(Msg::Shutdown) => {
+                    serve_batch(&backend, &registry, &metrics, batch);
+                    return;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        serve_batch(&backend, &registry, &metrics, batch);
+    }
+}
+
+fn serve_batch(
+    backend: &Mutex<Box<dyn FitBackend>>,
+    registry: &Arc<RwLock<ModelRegistry>>,
+    metrics: &Arc<ServiceMetrics>,
+    batch: Vec<PredictReq>,
+) {
+    metrics.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+    metrics
+        .max_batch_seen
+        .fetch_max(batch.len() as u64, Ordering::Relaxed);
+
+    // Group requests by application: one backend call per app.
+    let mut by_app: std::collections::BTreeMap<String, Vec<PredictReq>> =
+        std::collections::BTreeMap::new();
+    for r in batch {
+        by_app.entry(r.app.clone()).or_default().push(r);
+    }
+    for (app, reqs) in by_app {
+        let coeffs = {
+            let reg = registry.read().unwrap();
+            reg.get(&app).map(|m| m.coeffs)
+        };
+        let Some(coeffs) = coeffs else {
+            for r in reqs {
+                let _ = r
+                    .resp
+                    .send(Err(format!("no model for application '{app}'")));
+            }
+            continue;
+        };
+        let params: Vec<[f64; 2]> = reqs.iter().map(|r| r.params).collect();
+        metrics.batches.fetch_add(1, Ordering::Relaxed);
+        match backend.lock().unwrap().predict(&coeffs, &params) {
+            Ok(preds) => {
+                for (r, p) in reqs.into_iter().zip(preds) {
+                    let _ = r.resp.send(Ok(p));
+                }
+            }
+            Err(e) => {
+                metrics.backend_errors.fetch_add(1, Ordering::Relaxed);
+                for r in reqs {
+                    let _ = r.resp.send(Err(e.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::regression::{RegressionModel, RustSolverBackend};
+    use crate::model::features::{evaluate, NUM_FEATURES};
+
+    fn test_model(app: &str) -> RegressionModel {
+        let mut coeffs = [0.0; NUM_FEATURES];
+        coeffs[0] = 100.0;
+        coeffs[1] = 40.0; // 100 + 40*(m/40) = 100 + m
+        coeffs[4] = -8.0;
+        RegressionModel { app_name: app.into(), coeffs, trained_on: 20 }
+    }
+
+    fn service() -> PredictionService {
+        let mut reg = ModelRegistry::new();
+        reg.insert(test_model("wordcount"));
+        PredictionService::start(
+            || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+            reg,
+            ServiceConfig::default(),
+        )
+    }
+
+    #[test]
+    fn predicts_through_the_batcher() {
+        let svc = service();
+        let got = svc.predict("wordcount", 20, 5).unwrap();
+        let want = evaluate(&test_model("x").coeffs, &[20.0, 5.0]);
+        assert!((got - want).abs() < 1e-12);
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn unknown_app_is_error() {
+        let svc = service();
+        let err = svc.predict("sort", 10, 10).unwrap_err();
+        assert!(err.contains("no model"));
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce() {
+        let svc = service();
+        // Fire 200 async requests from this thread, then collect.
+        let rxs: Vec<_> = (0..200)
+            .map(|i| svc.predict_async("wordcount", 5 + (i % 36), 5).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let got = rx.recv().unwrap().unwrap();
+            let m = 5 + (i as u32 % 36);
+            let want = evaluate(&test_model("x").coeffs, &[m as f64, 5.0]);
+            assert!((got - want).abs() < 1e-12, "req {i}");
+        }
+        let batches = svc.metrics.batches.load(Ordering::Relaxed);
+        assert!(batches < 200, "batching must coalesce: {batches} batches");
+        assert!(svc.metrics.mean_batch_size() > 1.0);
+        assert!(svc.metrics.max_batch_seen.load(Ordering::Relaxed) > 1);
+    }
+
+    #[test]
+    fn install_model_takes_effect() {
+        let svc = service();
+        assert!(svc.predict("grep", 10, 10).is_err());
+        svc.install_model(test_model("grep"));
+        assert!(svc.predict("grep", 10, 10).is_ok());
+        assert_eq!(svc.model_names(), vec!["grep", "wordcount"]);
+    }
+
+    #[test]
+    fn clean_shutdown_on_drop() {
+        let svc = service();
+        svc.predict("wordcount", 10, 10).unwrap();
+        drop(svc); // must not hang
+    }
+}

@@ -1,0 +1,109 @@
+//! Zipf-distributed text corpus generator.
+//!
+//! Natural-language word frequencies follow Zipf's law, which is what
+//! gives WordCount its characteristic combiner efficiency (a few words
+//! dominate every split).  The vocabulary mixes a hand-picked head of
+//! common English words with a synthetic tail (`wN` tokens), so generated
+//! text is both humanly plausible and unbounded in vocabulary size.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Head of the vocabulary: most frequent English words.
+const HEAD: &[&str] = &[
+    "the", "of", "and", "a", "to", "in", "is", "you", "that", "it", "he",
+    "was", "for", "on", "are", "as", "with", "his", "they", "i", "at",
+    "be", "this", "have", "from", "or", "one", "had", "by", "word", "but",
+    "not", "what", "all", "were", "we", "when", "your", "can", "said",
+    "there", "use", "an", "each", "which", "she", "do", "how", "their",
+    "if", "will", "up", "other", "about", "out", "many", "then", "them",
+    "these", "so", "some", "her", "would", "make", "like", "him", "into",
+    "time", "has", "look", "two", "more", "write", "go", "see", "number",
+    "no", "way", "could", "people", "my", "than", "first", "water",
+    "been", "call", "who", "oil", "its", "now", "find", "long", "down",
+    "day", "did", "get", "come", "made", "may", "part",
+];
+
+/// Vocabulary size (head + synthetic tail ranks).
+pub const VOCAB: u64 = 50_000;
+
+/// Zipf exponent for English-like text.
+pub const ZIPF_S: f64 = 1.07;
+
+/// Word for a 1-based Zipf rank.
+pub fn word_for_rank(rank: u64) -> String {
+    debug_assert!(rank >= 1);
+    if (rank as usize) <= HEAD.len() {
+        HEAD[rank as usize - 1].to_string()
+    } else {
+        format!("w{rank}")
+    }
+}
+
+/// Generate roughly `target_bytes` of text: lines of 6..14 words.
+pub fn generate(rng: &mut Rng, target_bytes: usize) -> String {
+    let zipf = Zipf::new(VOCAB, ZIPF_S);
+    let mut out = String::with_capacity(target_bytes + 64);
+    while out.len() < target_bytes {
+        let words = rng.range_usize(6, 15);
+        for i in 0..words {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&word_for_rank(zipf.sample(rng)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&mut Rng::new(1), 10_000);
+        let b = generate(&mut Rng::new(1), 10_000);
+        assert_eq!(a, b);
+        let c = generate(&mut Rng::new(2), 10_000);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn size_close_to_target() {
+        let text = generate(&mut Rng::new(3), 100_000);
+        assert!(text.len() >= 100_000);
+        assert!(text.len() < 100_000 + 200, "overshoot bounded by one line");
+    }
+
+    #[test]
+    fn lines_have_expected_word_counts() {
+        let text = generate(&mut Rng::new(4), 20_000);
+        for line in text.lines() {
+            let n = line.split_whitespace().count();
+            assert!((6..15).contains(&n), "line with {n} words");
+        }
+    }
+
+    #[test]
+    fn frequency_is_zipfian() {
+        let text = generate(&mut Rng::new(5), 400_000);
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for w in text.split_whitespace() {
+            *freq.entry(w).or_insert(0) += 1;
+        }
+        // "the" (rank 1) must dominate, and the head must outweigh the tail.
+        let the = freq.get("the").copied().unwrap_or(0);
+        let of = freq.get("of").copied().unwrap_or(0);
+        assert!(the > of, "rank 1 above rank 2");
+        let total: u64 = freq.values().sum();
+        let head: u64 = HEAD.iter().filter_map(|w| freq.get(w)).sum();
+        assert!(
+            head as f64 > 0.5 * total as f64,
+            "Zipf head {head}/{total} too light"
+        );
+        // Vocabulary is genuinely large (tail words appear).
+        assert!(freq.len() > 1000, "vocab {}", freq.len());
+    }
+}

@@ -1,0 +1,148 @@
+//! Exim mainlog generator.
+//!
+//! Emits the arrival (`<=`), delivery (`=>`), and `Completed` lines of
+//! interleaved mail transactions in Exim's mainlog format, as produced by
+//! a busy 2011 mail server — the workload of the paper's second benchmark.
+//! Transactions interleave (messages complete out of order), so the
+//! grouping work done by the MapReduce job is non-trivial.
+
+use crate::util::rng::Rng;
+
+const DOMAINS: &[&str] = &[
+    "example.org", "example.net", "mail.example.com", "uni.sydney.edu.au",
+    "nicta.com.au", "gmail.example", "corp.example",
+];
+
+const USERS: &[&str] = &[
+    "alice", "bob", "carol", "dave", "erin", "frank", "grace", "heidi",
+    "ivan", "judy", "mallory", "oscar", "peggy", "trent", "victor",
+];
+
+fn base62(rng: &mut Rng, n: usize) -> String {
+    const ALPHA: &[u8] = b"0123456789ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz";
+    (0..n).map(|_| ALPHA[rng.range_usize(0, 62)] as char).collect()
+}
+
+/// A synthetic Exim message id: `xxxxxx-yyyyyy-zz`.
+pub fn message_id(rng: &mut Rng) -> String {
+    format!("1{}-{}-{}", base62(rng, 5), base62(rng, 6), base62(rng, 2))
+}
+
+fn addr(rng: &mut Rng) -> String {
+    format!("{}@{}", rng.choice(USERS), rng.choice(DOMAINS))
+}
+
+fn timestamp(secs: u64) -> String {
+    // Fixed virtual day starting 2011-07-04 00:00:00 (paper era).
+    let h = (secs / 3600) % 24;
+    let m = (secs / 60) % 60;
+    let s = secs % 60;
+    format!("2011-07-04 {h:02}:{m:02}:{s:02}")
+}
+
+/// Generate roughly `target_bytes` of mainlog.  Transactions overlap in
+/// time; ~3% of lines are non-transaction daemon chatter.
+pub fn generate(rng: &mut Rng, target_bytes: usize) -> String {
+    let mut out = String::with_capacity(target_bytes + 256);
+    let mut clock: u64 = 8 * 3600; // busy period starts 08:00
+    while out.len() < target_bytes {
+        clock += rng.range_u64(0, 3);
+        if rng.bool(0.03) {
+            out.push_str(&format!(
+                "{} exim 4.69 daemon: queue run started\n",
+                timestamp(clock)
+            ));
+            continue;
+        }
+        let id = message_id(rng);
+        let size = rng.range_u64(600, 40_000);
+        out.push_str(&format!(
+            "{} {} <= {} H=mx.{} [10.0.{}.{}] S={}\n",
+            timestamp(clock),
+            id,
+            addr(rng),
+            rng.choice(DOMAINS),
+            rng.range_u64(0, 256),
+            rng.range_u64(1, 255),
+            size,
+        ));
+        // 1..=3 deliveries, a second or two apart.
+        for _ in 0..rng.range_u64(1, 4) {
+            clock += rng.range_u64(0, 2);
+            out.push_str(&format!(
+                "{} {} => {} R=dnslookup T=remote_smtp\n",
+                timestamp(clock),
+                id,
+                addr(rng),
+            ));
+        }
+        clock += rng.range_u64(0, 2);
+        out.push_str(&format!("{} {} Completed\n", timestamp(clock), id));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::exim;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&mut Rng::new(1), 5_000);
+        let b = generate(&mut Rng::new(1), 5_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lines_parse_with_the_benchmark_parser() {
+        let log = generate(&mut Rng::new(2), 50_000);
+        let mut with_id = 0;
+        let mut without = 0;
+        for line in log.lines() {
+            if exim::message_id(line).is_some() {
+                with_id += 1;
+            } else {
+                without += 1;
+            }
+        }
+        assert!(with_id > 0);
+        // Daemon chatter exists but is rare.
+        assert!(without > 0);
+        assert!((without as f64) < 0.08 * (with_id + without) as f64);
+    }
+
+    #[test]
+    fn transactions_are_complete() {
+        let log = generate(&mut Rng::new(3), 80_000);
+        use std::collections::HashMap;
+        let mut arrivals: HashMap<String, (u32, u32, u32)> = HashMap::new();
+        for line in log.lines() {
+            if let Some(id) = exim::message_id(line) {
+                let e = arrivals.entry(id.to_string()).or_default();
+                if line.contains(" <= ") {
+                    e.0 += 1;
+                } else if line.contains(" => ") {
+                    e.1 += 1;
+                } else if line.ends_with("Completed") {
+                    e.2 += 1;
+                }
+            }
+        }
+        // All but possibly the final (truncated) transaction are complete.
+        let complete = arrivals
+            .values()
+            .filter(|(a, d, c)| *a == 1 && *d >= 1 && *c == 1)
+            .count();
+        assert!(complete as f64 > 0.98 * arrivals.len() as f64);
+    }
+
+    #[test]
+    fn timestamps_format() {
+        assert_eq!(timestamp(8 * 3600 + 62), "2011-07-04 08:01:02");
+        let log = generate(&mut Rng::new(4), 2_000);
+        for line in log.lines() {
+            assert!(line.starts_with("2011-07-04 "), "bad line {line}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Synthetic workload data generators.
+//!
+//! Stand-ins for the paper's 8 GB inputs (§V.A): a Zipf-distributed text
+//! corpus for WordCount/Grep and a realistic Exim mainlog for the parsing
+//! benchmark.  Both are deterministic given an RNG stream, and both are
+//! *actually processed* by the functional engine in tests and examples.
+
+pub mod corpus;
+pub mod exim_log;

@@ -1,0 +1,62 @@
+//! HDFS block descriptors.
+
+use crate::cluster::node::NodeId;
+use crate::util::bytes::MB;
+
+pub type BlockId = u64;
+
+/// Hadoop 0.20 default dfs.block.size.
+pub const DEFAULT_BLOCK_BYTES: u64 = 64 * MB;
+
+/// One replicated block of a file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Block {
+    pub id: BlockId,
+    /// Byte offset of this block within its file.
+    pub offset: u64,
+    pub len: u64,
+    /// Nodes holding a replica (first is the "primary" written locally).
+    pub replicas: Vec<NodeId>,
+}
+
+impl Block {
+    /// Whether `node` holds a replica (the map-locality test).
+    pub fn is_local_to(&self, node: NodeId) -> bool {
+        self.replicas.contains(&node)
+    }
+
+    /// Byte range `[offset, offset + len)` intersected with `[lo, hi)`.
+    pub fn overlap(&self, lo: u64, hi: u64) -> u64 {
+        let a = self.offset.max(lo);
+        let b = (self.offset + self.len).min(hi);
+        b.saturating_sub(a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blk() -> Block {
+        Block { id: 0, offset: 100, len: 50, replicas: vec![1, 3] }
+    }
+
+    #[test]
+    fn locality() {
+        let b = blk();
+        assert!(b.is_local_to(1));
+        assert!(b.is_local_to(3));
+        assert!(!b.is_local_to(0));
+    }
+
+    #[test]
+    fn overlap_cases() {
+        let b = blk(); // [100, 150)
+        assert_eq!(b.overlap(0, 100), 0); // disjoint left
+        assert_eq!(b.overlap(150, 200), 0); // disjoint right
+        assert_eq!(b.overlap(0, 125), 25); // left partial
+        assert_eq!(b.overlap(125, 300), 25); // right partial
+        assert_eq!(b.overlap(110, 120), 10); // inner
+        assert_eq!(b.overlap(0, 1000), 50); // containing
+    }
+}

@@ -1,0 +1,12 @@
+//! Simulated HDFS: files, 64 MB blocks, replica placement and locality.
+//!
+//! Hadoop writes all job input/output to HDFS (paper §V.A).  The pieces
+//! that matter for execution-time modeling are (a) which nodes hold
+//! replicas of each input split — that drives map-task locality, and (b)
+//! the replication write pipeline — that drives output-commit cost.
+
+pub mod block;
+pub mod namenode;
+
+pub use block::{Block, BlockId, DEFAULT_BLOCK_BYTES};
+pub use namenode::{FileMeta, NameNode};

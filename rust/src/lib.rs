@@ -1,0 +1,37 @@
+//! # mrtuner
+//!
+//! Reproduction of *"On Modeling Dependency between MapReduce Configuration
+//! Parameters and Total Execution Time"* (Rizvandi, Zomaya, Javadzadeh
+//! Boloori, Taheri — 2012) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The paper's pipeline — **profile** a MapReduce application across
+//! `(num_mappers, num_reducers)` settings, **model** total execution time
+//! with a per-parameter-cubic multivariate linear regression, **predict**
+//! unseen settings — is built on a full simulated substrate:
+//!
+//! * [`sim`] / [`cluster`] / [`dfs`] / [`mr`] — a discrete-event Hadoop-0.20
+//!   model of the paper's 4-node heterogeneous testbed;
+//! * [`api`] / [`apps`] / [`datagen`] — real WordCount / Exim-mainlog-parse
+//!   applications executed functionally over generated corpora;
+//! * [`profiler`] — the paper's Fig-2a protocol (5 runs per setting, mean);
+//! * [`model`] — feature expansion + pure-Rust least squares (baseline);
+//! * [`runtime`] — PJRT execution of the JAX+Pallas AOT fit/predict
+//!   artifacts (the production path: Python never runs at request time);
+//! * [`coordinator`] — a prediction service with dynamic request batching
+//!   and a predicted-time-aware job scheduler;
+//! * [`report`] — regeneration of every figure/table in the paper's
+//!   evaluation (Fig. 3, Fig. 4, Table 1).
+
+pub mod api;
+pub mod apps;
+pub mod cluster;
+pub mod coordinator;
+pub mod datagen;
+pub mod dfs;
+pub mod model;
+pub mod mr;
+pub mod profiler;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

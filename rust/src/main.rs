@@ -1,0 +1,328 @@
+//! mrtuner CLI — leader entrypoint for the reproduction.
+//!
+//! Subcommands:
+//!   profile   run a profiling campaign (paper Fig. 2a) and save a dataset
+//!   fit       fit a regression model from a dataset (Eqn. 6, via PJRT)
+//!   predict   predict one (app, M, R) setting from a saved model
+//!   run-job   simulate a single job and print its phase breakdown
+//!   fig3      regenerate Fig. 3 (a,b or c,d) for one application
+//!   fig4      regenerate the Fig. 4 execution-time surface
+//!   table1    regenerate Table 1 (both paper applications)
+//!   serve     start the TCP prediction service
+//!   e2e       full end-to-end validation (same driver as examples/e2e_repro)
+
+use std::path::PathBuf;
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::coordinator::{ModelRegistry, PredictionService, Server, ServiceConfig};
+use mrtuner::model::regression::RegressionModel;
+use mrtuner::mr::{run_job, JobConfig};
+use mrtuner::profiler::{paper_campaign, Dataset};
+use mrtuner::report::{e2e, experiments, figure, table};
+use mrtuner::util::bytes::fmt_secs;
+use mrtuner::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    let result = match sub.as_str() {
+        "profile" => cmd_profile(&args),
+        "fit" => cmd_fit(&args),
+        "predict" => cmd_predict(&args),
+        "run-job" => cmd_run_job(&args),
+        "fig3" => cmd_fig3(&args),
+        "fig4" => cmd_fig4(&args),
+        "table1" => cmd_table1(&args),
+        "serve" => cmd_serve(&args),
+        "e2e" => {
+            let seed = args.u64_or("seed", 42).unwrap_or(42);
+            e2e::run(seed).map(|_| ())
+        }
+        "help" | "--help" => {
+            print_help();
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand '{other}' (try `mrtuner help`)")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "mrtuner — MapReduce configuration-parameter execution-time modeling\n\
+         (reproduction of Rizvandi et al., 2012)\n\n\
+         USAGE: mrtuner <SUBCOMMAND> [--flags]\n\n\
+         SUBCOMMANDS\n\
+           profile  --app A [--seed N] [--out FILE]      profile 20 training settings\n\
+           fit      --data FILE [--out FILE]             fit model from dataset\n\
+           predict  --model FILE --mappers M --reducers R\n\
+           run-job  --app A --mappers M --reducers R [--seed N]\n\
+           fig3     --app A [--seed N] [--csv FILE]      actual-vs-predicted + errors\n\
+           fig4     --app A [--step N] [--reps N] [--csv FILE]\n\
+           table1   [--seed N]                           mean/variance of errors\n\
+           serve    [--addr HOST:PORT]                   TCP prediction service\n\
+           e2e      [--seed N]                           full pipeline validation\n\n\
+         APPS: wordcount | exim | grep"
+    );
+}
+
+fn parse_app(args: &Args) -> Result<AppId, String> {
+    AppId::parse(&args.str_or("app", "wordcount"))
+}
+
+fn cmd_profile(args: &Args) -> Result<(), String> {
+    let app = parse_app(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let out = args.str_or("out", &format!("{}_train.json", app.name()));
+    args.reject_unknown()?;
+    let cluster = Cluster::paper_cluster();
+    let (train, _) = paper_campaign(app, seed);
+    eprintln!(
+        "profiling {} settings x {} reps for {} ...",
+        train.specs.len(),
+        train.reps,
+        app.name()
+    );
+    let (results, ds) = train.run(&cluster);
+    for r in &results {
+        eprintln!(
+            "  M={:<3} R={:<3} mean {:>8} (+-{:.1}s over {} reps)",
+            r.spec.num_mappers,
+            r.spec.num_reducers,
+            fmt_secs(r.mean_time_s),
+            r.rep_stddev(),
+            r.rep_times_s.len()
+        );
+    }
+    ds.save(&PathBuf::from(&out)).map_err(|e| e.to_string())?;
+    println!("wrote {out} ({} rows)", ds.len());
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<(), String> {
+    let data = args.str_opt("data").ok_or("--data FILE required")?;
+    let out = args.str_or("out", "model.json");
+    args.reject_unknown()?;
+    let ds = Dataset::load(&PathBuf::from(&data))?;
+    let (mut backend, name) = experiments::default_backend();
+    let model = RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
+    model.save(&PathBuf::from(&out)).map_err(|e| e.to_string())?;
+    println!(
+        "fitted {} on {} rows via {name}; coefficients {:?}",
+        model.app_name, model.trained_on, model.coeffs
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<(), String> {
+    let model_path = args.str_opt("model").ok_or("--model FILE required")?;
+    let m = args.u64_or("mappers", 20)? as u32;
+    let r = args.u64_or("reducers", 5)? as u32;
+    args.reject_unknown()?;
+    let model = RegressionModel::load(&PathBuf::from(&model_path))?;
+    let (mut backend, name) = experiments::default_backend();
+    let pred = backend
+        .predict(&model.coeffs, &[[m as f64, r as f64]])?
+        .pop()
+        .unwrap();
+    println!(
+        "{}: predicted total execution time for M={m}, R={r}: {} ({name})",
+        model.app_name,
+        fmt_secs(pred)
+    );
+    Ok(())
+}
+
+fn cmd_run_job(args: &Args) -> Result<(), String> {
+    let app = parse_app(args)?;
+    let m = args.u64_or("mappers", 20)? as u32;
+    let r = args.u64_or("reducers", 5)? as u32;
+    let seed = args.u64_or("seed", 0)?;
+    args.reject_unknown()?;
+    let cluster = Cluster::paper_cluster();
+    let config = JobConfig::paper_default(m, r).with_seed(seed);
+    let res = run_job(&cluster, &app.profile(), &config);
+    println!("app            : {}", app.name());
+    println!("mappers        : {m}   reducers: {r}   seed: {seed}");
+    println!("total time     : {}", fmt_secs(res.total_time_s));
+    println!("map phase end  : {}", fmt_secs(res.map_phase_s));
+    println!("first reducer  : {}", fmt_secs(res.first_reduce_s));
+    println!(
+        "locality       : {:.0}% data-local maps",
+        100.0 * res.locality_fraction()
+    );
+    println!(
+        "speculation    : {} launched, {} won",
+        res.counters.speculative_maps, res.counters.speculative_wins
+    );
+    println!(
+        "shuffle bytes  : {}",
+        mrtuner::util::bytes::fmt_bytes(res.counters.shuffle_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<(), String> {
+    let app = parse_app(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let csv_out = args.str_opt("csv");
+    args.reject_unknown()?;
+    let d = experiments::fig3(app, seed);
+    let labels: Vec<String> = d
+        .test_specs
+        .iter()
+        .map(|s| format!("({},{})", s.num_mappers, s.num_reducers))
+        .collect();
+    println!(
+        "{}",
+        figure::strip_chart(
+            &format!(
+                "Fig. 3 ({}) — actual vs predicted, backend {}",
+                app.name(),
+                d.backend
+            ),
+            &labels,
+            &d.errors.actual,
+            &d.errors.predicted,
+            48,
+        )
+    );
+    println!(
+        "{}",
+        figure::error_chart(
+            &format!("Fig. 3 ({}) — prediction error", app.name()),
+            &labels,
+            &d.errors.errors_pct,
+        )
+    );
+    println!(
+        "mean error {:.2}%  variance {:.2}%  median {:.2}%  max {:.2}%  R^2 {:.4}",
+        d.errors.mean_pct(),
+        d.errors.variance_pct(),
+        d.errors.median_pct(),
+        d.errors.max_pct(),
+        d.errors.r_squared()
+    );
+    if let Some(path) = csv_out {
+        let ms: Vec<f64> = d.test_specs.iter().map(|s| s.num_mappers as f64).collect();
+        let rs: Vec<f64> = d.test_specs.iter().map(|s| s.num_reducers as f64).collect();
+        let csv = figure::csv(
+            &["mappers", "reducers", "actual_s", "predicted_s", "error_pct"],
+            &[&ms, &rs, &d.errors.actual, &d.errors.predicted, &d.errors.errors_pct],
+        );
+        std::fs::write(&path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_fig4(args: &Args) -> Result<(), String> {
+    let app = parse_app(args)?;
+    let step = args.u64_or("step", 5)? as u32;
+    let reps = args.u64_or("reps", 5)? as u32;
+    let seed = args.u64_or("seed", 42)?;
+    let csv_out = args.str_opt("csv");
+    args.reject_unknown()?;
+    let d = experiments::fig4(app, step, reps, seed);
+    println!(
+        "{}",
+        figure::surface(
+            &format!("Fig. 4 ({}) — total execution time (s) vs M, R", app.name()),
+            &d.ms,
+            &d.rs,
+            &d.times,
+        )
+    );
+    let (bm, br) = d.argmin();
+    println!(
+        "minimum at M={bm}, R={br} (paper: 20, 5); fluctuation {:.2}; mean {}",
+        d.fluctuation(),
+        fmt_secs(d.mean_time())
+    );
+    if let Some(path) = csv_out {
+        let mut ms = Vec::new();
+        let mut rs = Vec::new();
+        for m in &d.ms {
+            for r in &d.rs {
+                ms.push(*m as f64);
+                rs.push(*r as f64);
+            }
+        }
+        let csv = figure::csv(&["mappers", "reducers", "time_s"], &[&ms, &rs, &d.times]);
+        std::fs::write(&path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<(), String> {
+    let seed = args.u64_or("seed", 42)?;
+    args.reject_unknown()?;
+    let rows = experiments::table1(seed);
+    let mut t = vec![vec![
+        "application".to_string(),
+        "mean (%)".to_string(),
+        "variance (%)".to_string(),
+        "paper mean (%)".to_string(),
+        "paper variance (%)".to_string(),
+    ]];
+    for r in &rows {
+        t.push(vec![
+            r.app.name().to_string(),
+            table::f(r.mean_pct, 4),
+            table::f(r.variance_pct, 4),
+            table::f(r.paper_mean_pct, 4),
+            table::f(r.paper_variance_pct, 4),
+        ]);
+    }
+    println!("Table 1 — statistical mean and variance of prediction errors");
+    print!("{}", table::render(&t));
+    let all_under_5 = rows.iter().all(|r| r.mean_pct < 5.0);
+    println!(
+        "headline claim (mean error < 5%): {}",
+        if all_under_5 { "REPRODUCED" } else { "NOT reproduced" }
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let addr = args.str_or("addr", "127.0.0.1:7070");
+    let seed = args.u64_or("seed", 42)?;
+    args.reject_unknown()?;
+    // Fit models for all apps up front (profiling on the simulated cluster).
+    let cluster = Cluster::paper_cluster();
+    let mut registry = ModelRegistry::new();
+    {
+        let (mut backend, name) = experiments::default_backend();
+        for app in AppId::all() {
+            let (train, _) = paper_campaign(app, seed);
+            let (_, ds) = train.run(&cluster);
+            let model = RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
+            eprintln!("fitted {} ({} rows) via {name}", app.name(), ds.len());
+            registry.insert(model);
+        }
+    }
+    let service = std::sync::Arc::new(PredictionService::start(
+        || experiments::default_backend().0,
+        registry,
+        ServiceConfig::default(),
+    ));
+    let server = Server::start(&addr, service).map_err(|e| e.to_string())?;
+    println!("prediction service listening on {}", server.addr);
+    println!("protocol: one JSON object per line, e.g.");
+    println!("  {{\"op\":\"predict\",\"app\":\"wordcount\",\"mappers\":20,\"reducers\":5}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}

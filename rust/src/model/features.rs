@@ -1,0 +1,84 @@
+//! Cubic polynomial feature expansion (paper Eqn. 2) — Rust mirror of the
+//! Pallas kernel in `python/compile/kernels/poly_features.py`.
+//!
+//! Must stay bit-compatible in *semantics* with the Python side: same
+//! normalization constant, same feature order `[1, p1, p1², p1³, p2, p2²,
+//! p2³]`.  The Rust runtime asserts both sides agree via the artifact
+//! manifest, and `rust/tests/` cross-checks numerics through PJRT.
+
+/// Features per row: intercept + 3 powers × 2 parameters.
+pub const NUM_FEATURES: usize = 7;
+
+/// Parameter normalization: raw mapper/reducer counts divide by the
+/// paper's maximum setting (40) before expansion, keeping the cubic Gram
+/// matrix well-conditioned.  Identical constant on the Python side.
+pub const PARAM_SCALE: f64 = 40.0;
+
+/// Expand one raw `(num_mappers, num_reducers)` row.
+pub fn expand_row(params: &[f64; 2]) -> [f64; NUM_FEATURES] {
+    let p1 = params[0] / PARAM_SCALE;
+    let p2 = params[1] / PARAM_SCALE;
+    [1.0, p1, p1 * p1, p1 * p1 * p1, p2, p2 * p2, p2 * p2 * p2]
+}
+
+/// Expand a batch of rows into a row-major design matrix.
+pub fn expand_rows(params: &[[f64; 2]]) -> Vec<[f64; NUM_FEATURES]> {
+    params.iter().map(expand_row).collect()
+}
+
+/// Evaluate the fitted polynomial (paper Eqn. 5) for one row.
+pub fn evaluate(coeffs: &[f64; NUM_FEATURES], params: &[f64; 2]) -> f64 {
+    let x = expand_row(params);
+    x.iter().zip(coeffs).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn feature_order_matches_paper_eqn2() {
+        let f = expand_row(&[20.0, 10.0]);
+        assert_eq!(f[0], 1.0);
+        assert_eq!(f[1], 0.5);
+        assert_eq!(f[2], 0.25);
+        assert_eq!(f[3], 0.125);
+        assert_eq!(f[4], 0.25);
+        assert_eq!(f[5], 0.0625);
+        assert_eq!(f[6], 0.015625);
+    }
+
+    #[test]
+    fn scale_boundary_is_all_ones() {
+        let f = expand_row(&[40.0, 40.0]);
+        assert_eq!(f, [1.0; 7]);
+    }
+
+    #[test]
+    fn evaluate_is_dot_product() {
+        let coeffs = [2.0, 1.0, 0.0, 0.0, -1.0, 0.0, 0.0];
+        // 2 + p1 - p2 with p = (20, 40)/40 = (0.5, 1.0)
+        assert_eq!(evaluate(&coeffs, &[20.0, 40.0]), 1.5);
+    }
+
+    #[test]
+    fn prop_powers_consistent() {
+        forall("feature powers", 50, |rng| {
+            let p = [rng.range_f64(1.0, 64.0), rng.range_f64(1.0, 64.0)];
+            let f = expand_row(&p);
+            assert!((f[2] - f[1] * f[1]).abs() < 1e-15);
+            assert!((f[3] - f[1] * f[2]).abs() < 1e-15);
+            assert!((f[5] - f[4] * f[4]).abs() < 1e-15);
+            assert!((f[6] - f[4] * f[5]).abs() < 1e-15);
+        });
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let rows = [[5.0, 40.0], [17.0, 23.0]];
+        let batch = expand_rows(&rows);
+        assert_eq!(batch[0], expand_row(&rows[0]));
+        assert_eq!(batch[1], expand_row(&rows[1]));
+    }
+}

@@ -1,0 +1,91 @@
+//! Evaluation metrics: the paper's prediction-error statistics.
+//!
+//! Fig. 3 plots per-experiment relative error between actual and predicted
+//! total execution time; Table 1 reports the mean and variance of those
+//! percentage errors per application.
+
+use crate::util::stats;
+
+/// Prediction errors for a set of held-out experiments.
+#[derive(Clone, Debug)]
+pub struct PredictionErrors {
+    pub actual: Vec<f64>,
+    pub predicted: Vec<f64>,
+    /// Absolute relative errors in percent: 100·|pred - act| / act.
+    pub errors_pct: Vec<f64>,
+}
+
+impl PredictionErrors {
+    pub fn new(actual: Vec<f64>, predicted: Vec<f64>) -> PredictionErrors {
+        assert_eq!(actual.len(), predicted.len());
+        let errors_pct = actual
+            .iter()
+            .zip(&predicted)
+            .map(|(&a, &p)| {
+                assert!(a > 0.0, "actual execution time must be positive");
+                100.0 * (p - a).abs() / a
+            })
+            .collect();
+        PredictionErrors { actual, predicted, errors_pct }
+    }
+
+    /// Table 1 "Mean (%)".
+    pub fn mean_pct(&self) -> f64 {
+        stats::mean(&self.errors_pct)
+    }
+
+    /// Table 1 "Variance (%)": population variance of the percent errors.
+    pub fn variance_pct(&self) -> f64 {
+        stats::variance(&self.errors_pct)
+    }
+
+    pub fn median_pct(&self) -> f64 {
+        stats::percentile(&self.errors_pct, 50.0)
+    }
+
+    pub fn max_pct(&self) -> f64 {
+        stats::max(&self.errors_pct)
+    }
+
+    pub fn r_squared(&self) -> f64 {
+        stats::r_squared(&self.actual, &self.predicted)
+    }
+
+    pub fn len(&self) -> usize {
+        self.errors_pct.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.errors_pct.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_prediction_zero_error() {
+        let e = PredictionErrors::new(vec![100.0, 200.0], vec![100.0, 200.0]);
+        assert_eq!(e.mean_pct(), 0.0);
+        assert_eq!(e.variance_pct(), 0.0);
+        assert_eq!(e.r_squared(), 1.0);
+    }
+
+    #[test]
+    fn known_errors() {
+        // +5% and -10% -> abs errors 5 and 10.
+        let e = PredictionErrors::new(vec![100.0, 200.0], vec![105.0, 180.0]);
+        assert_eq!(e.errors_pct, vec![5.0, 10.0]);
+        assert_eq!(e.mean_pct(), 7.5);
+        assert_eq!(e.variance_pct(), 6.25);
+        assert_eq!(e.median_pct(), 7.5);
+        assert_eq!(e.max_pct(), 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn rejects_nonpositive_actuals() {
+        PredictionErrors::new(vec![0.0], vec![1.0]);
+    }
+}

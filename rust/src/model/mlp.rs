@@ -1,0 +1,276 @@
+//! Nonlinear execution-time model — the paper's own suggestion:
+//! "To be more precise, it is better to use nonlinear modeling techniques
+//! like neural network" (§III).
+//!
+//! A small fully-connected network (2 → H → H → 1, tanh) trained with
+//! Adam on normalized parameters and standardized targets.  Deterministic
+//! given the seed.  Quantified against the cubic in
+//! `rust/benches/ablation.rs` — on the paper's smooth surface the cubic
+//! is already near the noise floor, which is the honest counterpoint to
+//! the paper's suggestion.
+
+use crate::util::rng::Rng;
+
+use super::features::PARAM_SCALE;
+
+/// Training hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpConfig {
+    pub hidden: usize,
+    pub epochs: u32,
+    pub lr: f64,
+    pub seed: u64,
+}
+
+impl Default for MlpConfig {
+    fn default() -> Self {
+        MlpConfig { hidden: 16, epochs: 3000, lr: 0.01, seed: 0 }
+    }
+}
+
+/// A trained network.
+#[derive(Clone, Debug)]
+pub struct MlpModel {
+    pub app_name: String,
+    hidden: usize,
+    // Layer weights (row-major) and biases.
+    w1: Vec<f64>, // hidden x 2
+    b1: Vec<f64>,
+    w2: Vec<f64>, // hidden x hidden
+    b2: Vec<f64>,
+    w3: Vec<f64>, // 1 x hidden
+    b3: f64,
+    // Target standardization.
+    t_mean: f64,
+    t_std: f64,
+}
+
+struct Grads {
+    w1: Vec<f64>,
+    b1: Vec<f64>,
+    w2: Vec<f64>,
+    b2: Vec<f64>,
+    w3: Vec<f64>,
+    b3: f64,
+}
+
+impl MlpModel {
+    /// Train on raw (M, R) rows and execution times.
+    pub fn fit(
+        app_name: &str,
+        params: &[[f64; 2]],
+        times: &[f64],
+        config: MlpConfig,
+    ) -> Result<MlpModel, String> {
+        if params.is_empty() || params.len() != times.len() {
+            return Err("bad training set".into());
+        }
+        let h = config.hidden;
+        let n = params.len();
+        let mut rng = Rng::new(config.seed ^ 0x6d6c_705f_696e_6974);
+
+        // Standardize targets (tanh nets train poorly on ~600s raw scale).
+        let t_mean = times.iter().sum::<f64>() / n as f64;
+        let t_std = (times.iter().map(|t| (t - t_mean).powi(2)).sum::<f64>()
+            / n as f64)
+            .sqrt()
+            .max(1e-9);
+        let targets: Vec<f64> = times.iter().map(|t| (t - t_mean) / t_std).collect();
+        let inputs: Vec<[f64; 2]> = params
+            .iter()
+            .map(|p| [p[0] / PARAM_SCALE, p[1] / PARAM_SCALE])
+            .collect();
+
+        // Xavier-ish init.
+        let mut init = |fan_in: usize, count: usize| -> Vec<f64> {
+            let s = (1.0 / fan_in as f64).sqrt();
+            (0..count).map(|_| rng.normal_ms(0.0, s)).collect()
+        };
+        let mut model = MlpModel {
+            app_name: app_name.to_string(),
+            hidden: h,
+            w1: init(2, h * 2),
+            b1: vec![0.0; h],
+            w2: init(h, h * h),
+            b2: vec![0.0; h],
+            w3: init(h, h),
+            b3: 0.0,
+            t_mean,
+            t_std,
+        };
+
+        // Adam state.
+        let sz = |v: &Vec<f64>| vec![0.0; v.len()];
+        let (mut m1, mut v1) = (sz(&model.w1), sz(&model.w1));
+        let (mut mb1, mut vb1) = (sz(&model.b1), sz(&model.b1));
+        let (mut m2, mut v2) = (sz(&model.w2), sz(&model.w2));
+        let (mut mb2, mut vb2) = (sz(&model.b2), sz(&model.b2));
+        let (mut m3, mut v3) = (sz(&model.w3), sz(&model.w3));
+        let (mut mb3, mut vb3) = (0.0f64, 0.0f64);
+        let (beta1, beta2, eps): (f64, f64, f64) = (0.9, 0.999, 1e-8);
+
+        for epoch in 1..=config.epochs {
+            let g = model.batch_grads(&inputs, &targets);
+            let t = epoch as f64;
+            let bc1 = 1.0 - beta1.powf(t);
+            let bc2 = 1.0 - beta2.powf(t);
+            let adam = |w: &mut [f64], g: &[f64], m: &mut [f64], v: &mut [f64]| {
+                for i in 0..w.len() {
+                    m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+                    v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+                    w[i] -= config.lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + eps);
+                }
+            };
+            adam(&mut model.w1, &g.w1, &mut m1, &mut v1);
+            adam(&mut model.b1, &g.b1, &mut mb1, &mut vb1);
+            adam(&mut model.w2, &g.w2, &mut m2, &mut v2);
+            adam(&mut model.b2, &g.b2, &mut mb2, &mut vb2);
+            adam(&mut model.w3, &g.w3, &mut m3, &mut v3);
+            mb3 = beta1 * mb3 + (1.0 - beta1) * g.b3;
+            vb3 = beta2 * vb3 + (1.0 - beta2) * g.b3 * g.b3;
+            model.b3 -= config.lr * (mb3 / bc1) / ((vb3 / bc2).sqrt() + eps);
+        }
+        Ok(model)
+    }
+
+    /// Forward pass on normalized input, standardized output.
+    fn forward(&self, x: &[f64; 2]) -> (Vec<f64>, Vec<f64>, f64) {
+        let h = self.hidden;
+        let mut a1 = vec![0.0; h];
+        for i in 0..h {
+            a1[i] = (self.w1[i * 2] * x[0] + self.w1[i * 2 + 1] * x[1]
+                + self.b1[i])
+                .tanh();
+        }
+        let mut a2 = vec![0.0; h];
+        for i in 0..h {
+            let mut s = self.b2[i];
+            for j in 0..h {
+                s += self.w2[i * h + j] * a1[j];
+            }
+            a2[i] = s.tanh();
+        }
+        let mut out = self.b3;
+        for j in 0..h {
+            out += self.w3[j] * a2[j];
+        }
+        (a1, a2, out)
+    }
+
+    fn batch_grads(&self, inputs: &[[f64; 2]], targets: &[f64]) -> Grads {
+        let h = self.hidden;
+        let n = inputs.len() as f64;
+        let mut g = Grads {
+            w1: vec![0.0; h * 2],
+            b1: vec![0.0; h],
+            w2: vec![0.0; h * h],
+            b2: vec![0.0; h],
+            w3: vec![0.0; h],
+            b3: 0.0,
+        };
+        for (x, &t) in inputs.iter().zip(targets) {
+            let (a1, a2, out) = self.forward(x);
+            let dout = 2.0 * (out - t) / n; // d(MSE)/d(out)
+            g.b3 += dout;
+            let mut da2 = vec![0.0; h];
+            for j in 0..h {
+                g.w3[j] += dout * a2[j];
+                da2[j] = dout * self.w3[j] * (1.0 - a2[j] * a2[j]);
+            }
+            let mut da1 = vec![0.0; h];
+            for i in 0..h {
+                g.b2[i] += da2[i];
+                for j in 0..h {
+                    g.w2[i * h + j] += da2[i] * a1[j];
+                    da1[j] += da2[i] * self.w2[i * h + j];
+                }
+            }
+            for j in 0..h {
+                let d = da1[j] * (1.0 - a1[j] * a1[j]);
+                g.b1[j] += d;
+                g.w1[j * 2] += d * x[0];
+                g.w1[j * 2 + 1] += d * x[1];
+            }
+        }
+        g
+    }
+
+    /// Predict a raw (M, R) setting in seconds.
+    pub fn predict_one(&self, num_mappers: u32, num_reducers: u32) -> f64 {
+        let x = [
+            num_mappers as f64 / PARAM_SCALE,
+            num_reducers as f64 / PARAM_SCALE,
+        ];
+        let (_, _, out) = self.forward(&x);
+        out * self.t_std + self.t_mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_config(seed: u64) -> MlpConfig {
+        MlpConfig { hidden: 12, epochs: 1500, lr: 0.02, seed }
+    }
+
+    fn surface(m: f64, r: f64) -> f64 {
+        let x = m / 40.0;
+        let y = r / 40.0;
+        500.0 - 120.0 * x + 90.0 * x * x + 60.0 * y * y
+    }
+
+    fn grid() -> (Vec<[f64; 2]>, Vec<f64>) {
+        let mut params = Vec::new();
+        let mut times = Vec::new();
+        for m in (5..=40).step_by(5) {
+            for r in (5..=40).step_by(5) {
+                params.push([m as f64, r as f64]);
+                times.push(surface(m as f64, r as f64));
+            }
+        }
+        (params, times)
+    }
+
+    #[test]
+    fn learns_a_smooth_surface() {
+        let (params, times) = grid();
+        let model =
+            MlpModel::fit("wc", &params, &times, quick_config(1)).unwrap();
+        let mut errs = Vec::new();
+        for (m, r) in [(7, 12), (22, 33), (38, 8), (13, 26)] {
+            let pred = model.predict_one(m, r);
+            let truth = surface(m as f64, r as f64);
+            errs.push((pred - truth).abs() / truth);
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err < 0.05, "mlp mean error {mean_err:.4}");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let (params, times) = grid();
+        let a = MlpModel::fit("x", &params, &times, quick_config(7)).unwrap();
+        let b = MlpModel::fit("x", &params, &times, quick_config(7)).unwrap();
+        assert_eq!(a.predict_one(20, 5), b.predict_one(20, 5));
+        let c = MlpModel::fit("x", &params, &times, quick_config(8)).unwrap();
+        assert_ne!(a.predict_one(20, 5), c.predict_one(20, 5));
+    }
+
+    #[test]
+    fn rejects_empty() {
+        assert!(MlpModel::fit("x", &[], &[], MlpConfig::default()).is_err());
+        assert!(
+            MlpModel::fit("x", &[[1.0, 2.0]], &[], MlpConfig::default()).is_err()
+        );
+    }
+
+    #[test]
+    fn output_in_target_scale() {
+        let (params, times) = grid();
+        let model =
+            MlpModel::fit("x", &params, &times, quick_config(2)).unwrap();
+        let p = model.predict_one(20, 20);
+        assert!(p > 300.0 && p < 800.0, "prediction {p} off the target scale");
+    }
+}

@@ -1,0 +1,19 @@
+//! Modeling phase — the paper's Eqns. 1-6.
+//!
+//! [`features`] builds the per-parameter-cubic design matrix (Eqn. 2);
+//! [`solver`] solves the weighted normal equations in pure Rust (Cholesky)
+//! — the baseline/cross-check backend; [`regression`] wraps fit/predict
+//! behind a backend trait so the production path can swap in the PJRT
+//! artifact executor ([`crate::runtime`]); [`metrics`] computes the
+//! paper's evaluation statistics (Fig. 3 errors, Table 1 moments).
+
+pub mod features;
+pub mod metrics;
+pub mod mlp;
+pub mod ndpoly;
+pub mod regression;
+pub mod solver;
+
+pub use features::{expand_row, expand_rows, NUM_FEATURES, PARAM_SCALE};
+pub use metrics::PredictionErrors;
+pub use regression::{FitBackend, RegressionModel, RustSolverBackend};

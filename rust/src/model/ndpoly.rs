@@ -1,0 +1,376 @@
+//! N-parameter polynomial regression — the paper's §I extension hook
+//! ("the proposed modeling technique can be extended for other
+//! configuration parameters") and its companion work [24], which models
+//! four MapReduce parameters: number of mappers, number of reducers,
+//! file-system (block) size and input-file size.
+//!
+//! Features follow Eqn. 2 generalized: `[1, p1..p1^d, ..., pN..pN^d]`
+//! with per-parameter normalization scales.  The solver is the same
+//! ridge-stabilized Cholesky as the 2-parameter production path.
+
+use crate::util::json::Json;
+
+/// A fitted N-parameter, degree-`d` polynomial model.
+///
+/// `interactions` optionally appends pairwise products `x_i * x_j` of the
+/// normalized first powers.  The paper's Eqn. 2 basis is purely additive
+/// per-parameter — which cannot express e.g. the input_size x block_size
+/// coupling that determines map-task count; the extensions bench
+/// quantifies the gap.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NdPolyModel {
+    pub app_name: String,
+    pub degree: usize,
+    /// Per-parameter normalization divisors (max of the studied range).
+    pub scales: Vec<f64>,
+    pub interactions: bool,
+    pub coeffs: Vec<f64>,
+}
+
+impl NdPolyModel {
+    pub fn num_params(&self) -> usize {
+        self.scales.len()
+    }
+
+    pub fn num_features(&self) -> usize {
+        let n = self.num_params();
+        1 + n * self.degree + if self.interactions { n * (n - 1) / 2 } else { 0 }
+    }
+
+    /// Expand one raw parameter row into the feature vector.
+    pub fn expand(&self, params: &[f64]) -> Vec<f64> {
+        expand(params, &self.scales, self.degree, self.interactions)
+    }
+
+    /// Fit the paper's additive basis (Eqn. 2 generalized).
+    pub fn fit(
+        app_name: &str,
+        rows: &[Vec<f64>],
+        times: &[f64],
+        weights: &[f64],
+        degree: usize,
+        scales: &[f64],
+    ) -> Result<NdPolyModel, String> {
+        Self::fit_opts(app_name, rows, times, weights, degree, scales, false)
+    }
+
+    /// Fit with optional pairwise interaction features.
+    pub fn fit_opts(
+        app_name: &str,
+        rows: &[Vec<f64>],
+        times: &[f64],
+        weights: &[f64],
+        degree: usize,
+        scales: &[f64],
+        interactions: bool,
+    ) -> Result<NdPolyModel, String> {
+        if rows.is_empty() {
+            return Err("empty training set".into());
+        }
+        if rows.len() != times.len() || rows.len() != weights.len() {
+            return Err("rows/times/weights length mismatch".into());
+        }
+        let n = scales.len();
+        if rows.iter().any(|r| r.len() != n) {
+            return Err(format!("every row must have {n} parameters"));
+        }
+        if scales.iter().any(|&s| s <= 0.0) {
+            return Err("scales must be positive".into());
+        }
+        let f = 1 + n * degree + if interactions { n * (n - 1) / 2 } else { 0 };
+        if rows.len() < f {
+            return Err(format!(
+                "need at least {f} rows for {f} features, got {}",
+                rows.len()
+            ));
+        }
+        let x: Vec<Vec<f64>> = rows
+            .iter()
+            .map(|r| expand(r, scales, degree, interactions))
+            .collect();
+        let coeffs = solve_weighted(&x, times, weights, f)?;
+        Ok(NdPolyModel {
+            app_name: app_name.to_string(),
+            degree,
+            scales: scales.to_vec(),
+            interactions,
+            coeffs,
+        })
+    }
+
+    /// Predict one raw parameter row (Eqn. 5).
+    pub fn predict_one(&self, params: &[f64]) -> f64 {
+        self.expand(params)
+            .iter()
+            .zip(&self.coeffs)
+            .map(|(a, b)| a * b)
+            .sum()
+    }
+
+    pub fn predict(&self, rows: &[Vec<f64>]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict_one(r)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app_name.clone())),
+            ("degree", Json::Num(self.degree as f64)),
+            ("scales", Json::from_f64_slice(&self.scales)),
+            ("interactions", Json::Bool(self.interactions)),
+            ("coeffs", Json::from_f64_slice(&self.coeffs)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<NdPolyModel, String> {
+        let m = NdPolyModel {
+            app_name: v.req("app")?.as_str().ok_or("app")?.to_string(),
+            degree: v.req("degree")?.as_u64().ok_or("degree")? as usize,
+            scales: v.req("scales")?.to_f64_vec()?,
+            interactions: v
+                .get("interactions")
+                .and_then(|b| b.as_bool())
+                .unwrap_or(false),
+            coeffs: v.req("coeffs")?.to_f64_vec()?,
+        };
+        if m.coeffs.len() != m.num_features() {
+            return Err(format!(
+                "coeff count {} != features {}",
+                m.coeffs.len(),
+                m.num_features()
+            ));
+        }
+        Ok(m)
+    }
+}
+
+fn expand(
+    params: &[f64],
+    scales: &[f64],
+    degree: usize,
+    interactions: bool,
+) -> Vec<f64> {
+    debug_assert_eq!(params.len(), scales.len());
+    let n = params.len();
+    let mut out = Vec::with_capacity(1 + n * degree + n * (n - 1) / 2);
+    out.push(1.0);
+    let norm: Vec<f64> =
+        params.iter().zip(scales).map(|(&p, &s)| p / s).collect();
+    for &x in &norm {
+        let mut pow = 1.0;
+        for _ in 0..degree {
+            pow *= x;
+            out.push(pow);
+        }
+    }
+    if interactions {
+        for i in 0..n {
+            for j in i + 1..n {
+                out.push(norm[i] * norm[j]);
+            }
+        }
+    }
+    out
+}
+
+/// Weighted normal equations + ridge + dynamic Cholesky.
+fn solve_weighted(
+    x: &[Vec<f64>],
+    t: &[f64],
+    w: &[f64],
+    f: usize,
+) -> Result<Vec<f64>, String> {
+    let mut g = vec![vec![0.0; f]; f];
+    let mut b = vec![0.0; f];
+    for ((row, &wi), &ti) in x.iter().zip(w).zip(t) {
+        for i in 0..f {
+            let wxi = wi * row[i];
+            b[i] += wxi * ti;
+            for j in i..f {
+                g[i][j] += wxi * row[j];
+            }
+        }
+    }
+    for i in 0..f {
+        for j in 0..i {
+            g[i][j] = g[j][i];
+        }
+    }
+    let trace: f64 = (0..f).map(|i| g[i][i]).sum();
+    if trace <= 0.0 {
+        return Err("all-zero system".into());
+    }
+    let mut lam = super::solver::RIDGE_REL * trace / f as f64;
+    for _ in 0..10 {
+        for i in 0..f {
+            g[i][i] += lam;
+        }
+        if let Some(sol) = try_cholesky(&g, &b, f) {
+            return Ok(sol);
+        }
+        lam = (lam * 100.0).max(1e-10);
+    }
+    Err("not positive definite even with ridge".into())
+}
+
+fn try_cholesky(g: &[Vec<f64>], b: &[f64], f: usize) -> Option<Vec<f64>> {
+    let mut l = g.to_vec();
+    for i in 0..f {
+        for j in 0..=i {
+            let mut s = l[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i][j] = s.sqrt();
+            } else {
+                l[i][j] = s / l[j][j];
+            }
+        }
+    }
+    let mut y = vec![0.0; f];
+    for i in 0..f {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    let mut x = vec![0.0; f];
+    for i in (0..f).rev() {
+        let mut s = y[i];
+        for k in i + 1..f {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn surface4(p: &[f64]) -> f64 {
+        // In-family degree-3 surface over 4 normalized params.
+        let x: Vec<f64> = p
+            .iter()
+            .zip(&[40.0, 40.0, 16.0, 256.0])
+            .map(|(v, s)| v / s)
+            .collect();
+        100.0 + 50.0 * x[0] - 30.0 * x[0].powi(2) + 20.0 * x[1]
+            + 400.0 * x[2]
+            + 35.0 * x[2].powi(3)
+            - 25.0 * x[3]
+            + 10.0 * x[3].powi(2)
+    }
+
+    fn sample4(rng: &mut Rng, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                vec![
+                    rng.range_u64(5, 41) as f64,
+                    rng.range_u64(5, 41) as f64,
+                    rng.range_u64(1, 17) as f64,
+                    rng.range_u64(32, 257) as f64,
+                ]
+            })
+            .collect();
+        let times = rows.iter().map(|r| surface4(r)).collect();
+        (rows, times)
+    }
+
+    const SCALES: [f64; 4] = [40.0, 40.0, 16.0, 256.0];
+
+    #[test]
+    fn recovers_in_family_4d_surface() {
+        let mut rng = Rng::new(1);
+        let (rows, times) = sample4(&mut rng, 60);
+        let w = vec![1.0; 60];
+        let m = NdPolyModel::fit("x", &rows, &times, &w, 3, &SCALES).unwrap();
+        assert_eq!(m.num_features(), 13);
+        let (test, truth) = sample4(&mut rng, 30);
+        for (r, &t) in test.iter().zip(&truth) {
+            let pred = m.predict_one(r);
+            assert!((pred - t).abs() / t.abs() < 1e-5, "{pred} vs {t}");
+        }
+    }
+
+    #[test]
+    fn two_param_case_matches_fixed_solver() {
+        let mut rng = Rng::new(2);
+        let rows: Vec<Vec<f64>> = (0..30)
+            .map(|_| vec![rng.range_u64(5, 41) as f64, rng.range_u64(5, 41) as f64])
+            .collect();
+        let times: Vec<f64> = rows
+            .iter()
+            .map(|r| 300.0 + 2.0 * r[0] + 0.05 * r[0] * r[0] + 3.0 * r[1])
+            .collect();
+        let w = vec![1.0; 30];
+        let nd = NdPolyModel::fit("x", &rows, &times, &w, 3, &[40.0, 40.0]).unwrap();
+        let pairs: Vec<[f64; 2]> = rows.iter().map(|r| [r[0], r[1]]).collect();
+        let fixed = crate::model::solver::fit(&pairs, &times, &w).unwrap();
+        for i in 0..7 {
+            assert!((nd.coeffs[i] - fixed[i]).abs() < 1e-8, "coeff {i}");
+        }
+    }
+
+    #[test]
+    fn validation_errors() {
+        let rows = vec![vec![1.0, 2.0]];
+        assert!(NdPolyModel::fit("x", &[], &[], &[], 3, &[1.0]).is_err());
+        assert!(
+            NdPolyModel::fit("x", &rows, &[1.0], &[1.0], 3, &[1.0]).is_err(),
+            "row width mismatch"
+        );
+        assert!(
+            NdPolyModel::fit("x", &rows, &[1.0], &[1.0], 3, &[1.0, -2.0]).is_err(),
+            "negative scale"
+        );
+        // Too few rows for 7 features.
+        let rows2: Vec<Vec<f64>> = (0..3).map(|i| vec![i as f64, 1.0]).collect();
+        assert!(NdPolyModel::fit(
+            "x",
+            &rows2,
+            &[1.0, 2.0, 3.0],
+            &[1.0, 1.0, 1.0],
+            3,
+            &[1.0, 1.0]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut rng = Rng::new(3);
+        let (rows, times) = sample4(&mut rng, 40);
+        let m = NdPolyModel::fit("wc", &rows, &times, &vec![1.0; 40], 2, &SCALES)
+            .unwrap();
+        let back = NdPolyModel::from_json(&m.to_json()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn prop_weighted_padding_invariance() {
+        forall("ndpoly padding", 10, |rng| {
+            let (mut rows, mut times) = sample4(rng, 40);
+            let mut w = vec![1.0; 40];
+            let clean =
+                NdPolyModel::fit("x", &rows, &times, &w, 3, &SCALES).unwrap();
+            // Garbage rows with zero weight change nothing.
+            rows.push(vec![1e9, -5.0, 0.0, 1.0]);
+            times.push(1e15);
+            w.push(0.0);
+            let padded =
+                NdPolyModel::fit("x", &rows, &times, &w, 3, &SCALES).unwrap();
+            for i in 0..clean.coeffs.len() {
+                let scale = clean.coeffs[i].abs().max(1.0);
+                assert!((clean.coeffs[i] - padded.coeffs[i]).abs() / scale < 1e-8);
+            }
+        });
+    }
+}

@@ -1,0 +1,196 @@
+//! The regression model object: fit/predict behind a backend trait.
+//!
+//! Two interchangeable backends implement the paper's Eqn. 6:
+//!
+//! * [`RustSolverBackend`] — pure-Rust Cholesky ([`super::solver`]), used
+//!   as baseline and cross-check;
+//! * [`crate::runtime::XlaBackend`] — the production path executing the
+//!   AOT-compiled JAX+Pallas artifacts via PJRT.
+//!
+//! Both must agree to ~1e-9 relative (asserted in `rust/tests/`).
+
+use crate::profiler::Dataset;
+use crate::util::json::{parse, Json};
+
+use super::features::{evaluate, NUM_FEATURES};
+use super::solver;
+
+/// A fitting backend: raw (M, R) rows + times + weights -> coefficients.
+pub trait FitBackend {
+    fn fit(
+        &mut self,
+        params: &[[f64; 2]],
+        times: &[f64],
+        weights: &[f64],
+    ) -> Result<[f64; NUM_FEATURES], String>;
+
+    /// Batched prediction.  The default evaluates on the CPU; the XLA
+    /// backend overrides this to run the predict artifact.
+    fn predict(
+        &mut self,
+        coeffs: &[f64; NUM_FEATURES],
+        params: &[[f64; 2]],
+    ) -> Result<Vec<f64>, String> {
+        Ok(params.iter().map(|p| evaluate(coeffs, p)).collect())
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust baseline backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RustSolverBackend;
+
+impl FitBackend for RustSolverBackend {
+    fn fit(
+        &mut self,
+        params: &[[f64; 2]],
+        times: &[f64],
+        weights: &[f64],
+    ) -> Result<[f64; NUM_FEATURES], String> {
+        solver::fit(params, times, weights)
+    }
+
+    fn name(&self) -> &'static str {
+        "rust-cholesky"
+    }
+}
+
+/// A fitted per-application model (the paper's "individual model" that the
+/// prediction phase uploads, Fig. 2b).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegressionModel {
+    pub app_name: String,
+    pub coeffs: [f64; NUM_FEATURES],
+    /// Rows used for the fit (diagnostics).
+    pub trained_on: usize,
+}
+
+impl RegressionModel {
+    /// Fit a model from a profiled dataset (unit weights — the dataset
+    /// rows are already per-experiment means per Fig. 2a).
+    pub fn fit_dataset(
+        backend: &mut dyn FitBackend,
+        ds: &Dataset,
+    ) -> Result<RegressionModel, String> {
+        if ds.is_empty() {
+            return Err("empty dataset".into());
+        }
+        let weights = vec![1.0; ds.len()];
+        let coeffs = backend.fit(&ds.params, &ds.times, &weights)?;
+        Ok(RegressionModel {
+            app_name: ds.app_name.clone(),
+            coeffs,
+            trained_on: ds.len(),
+        })
+    }
+
+    /// Predict a single setting (Eqn. 5).
+    pub fn predict_one(&self, num_mappers: u32, num_reducers: u32) -> f64 {
+        evaluate(&self.coeffs, &[num_mappers as f64, num_reducers as f64])
+    }
+
+    /// Predict a batch of raw parameter rows.
+    pub fn predict(&self, params: &[[f64; 2]]) -> Vec<f64> {
+        params.iter().map(|p| evaluate(&self.coeffs, p)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app_name.clone())),
+            ("coeffs", Json::from_f64_slice(&self.coeffs)),
+            ("trained_on", Json::Num(self.trained_on as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<RegressionModel, String> {
+        let app_name =
+            v.req("app")?.as_str().ok_or("app must be str")?.to_string();
+        let cv = v.req("coeffs")?.to_f64_vec()?;
+        if cv.len() != NUM_FEATURES {
+            return Err(format!("expected {NUM_FEATURES} coeffs, got {}", cv.len()));
+        }
+        let mut coeffs = [0.0; NUM_FEATURES];
+        coeffs.copy_from_slice(&cv);
+        let trained_on = v
+            .req("trained_on")?
+            .as_u64()
+            .ok_or("trained_on must be integer")? as usize;
+        Ok(RegressionModel { app_name, coeffs, trained_on })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RegressionModel, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        RegressionModel::from_json(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> Dataset {
+        // Synthetic cubic surface over the paper grid.
+        let mut ds = Dataset {
+            app_name: "synthetic".into(),
+            params: vec![],
+            times: vec![],
+        };
+        for m in (5..=40).step_by(7) {
+            for r in (5..=40).step_by(7) {
+                let x = m as f64 / 40.0;
+                let y = r as f64 / 40.0;
+                ds.params.push([m as f64, r as f64]);
+                ds.times.push(300.0 - 120.0 * x + 90.0 * x * x + 30.0 * y);
+            }
+        }
+        ds
+    }
+
+    #[test]
+    fn fit_and_predict_round_trip() {
+        let ds = dataset();
+        let mut backend = RustSolverBackend;
+        let model = RegressionModel::fit_dataset(&mut backend, &ds).unwrap();
+        assert_eq!(model.trained_on, ds.len());
+        for (p, &t) in ds.params.iter().zip(&ds.times) {
+            let pred = model.predict_one(p[0] as u32, p[1] as u32);
+            assert!((pred - t).abs() / t < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batch_predict_matches_single() {
+        let ds = dataset();
+        let model =
+            RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).unwrap();
+        let batch = model.predict(&ds.params);
+        for (i, p) in ds.params.iter().enumerate() {
+            assert_eq!(batch[i], model.predict_one(p[0] as u32, p[1] as u32));
+        }
+    }
+
+    #[test]
+    fn empty_dataset_is_error() {
+        let ds = Dataset::default();
+        assert!(RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let model =
+            RegressionModel::fit_dataset(&mut RustSolverBackend, &dataset()).unwrap();
+        let back = RegressionModel::from_json(&model.to_json()).unwrap();
+        assert_eq!(model, back);
+    }
+
+    #[test]
+    fn json_rejects_wrong_coeff_count() {
+        let j = parse(r#"{"app":"x","coeffs":[1,2,3],"trained_on":5}"#).unwrap();
+        assert!(RegressionModel::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,410 @@
+//! Pure-Rust weighted least squares via normal equations + Cholesky.
+//!
+//! This is the *baseline* backend (and the cross-check for the PJRT
+//! artifact): it implements exactly the math of `python/compile/model.py`
+//! — weighted Gram assembly, relative ridge, dense solve — so the two
+//! backends must agree to ~1e-9 relative, which `rust/tests/` asserts.
+
+use super::features::{expand_rows, NUM_FEATURES};
+
+/// Relative ridge, identical to `model.RIDGE_REL` on the Python side.
+pub const RIDGE_REL: f64 = 1e-9;
+
+/// Assemble the weighted normal-equation system G = XᵀWX, b = Xᵀ(w∘t).
+pub fn gram_system(
+    x: &[[f64; NUM_FEATURES]],
+    w: &[f64],
+    t: &[f64],
+) -> ([[f64; NUM_FEATURES]; NUM_FEATURES], [f64; NUM_FEATURES]) {
+    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), t.len());
+    let mut g = [[0.0; NUM_FEATURES]; NUM_FEATURES];
+    let mut b = [0.0; NUM_FEATURES];
+    for ((row, &wi), &ti) in x.iter().zip(w).zip(t) {
+        for i in 0..NUM_FEATURES {
+            let wxi = wi * row[i];
+            b[i] += wxi * ti;
+            for j in i..NUM_FEATURES {
+                g[i][j] += wxi * row[j];
+            }
+        }
+    }
+    // Mirror the upper triangle.
+    for i in 0..NUM_FEATURES {
+        for j in 0..i {
+            g[i][j] = g[j][i];
+        }
+    }
+    (g, b)
+}
+
+/// Cholesky factorization (in place, lower triangle).  Returns false if
+/// the matrix is not positive definite.
+fn cholesky(a: &mut [[f64; NUM_FEATURES]; NUM_FEATURES]) -> bool {
+    for i in 0..NUM_FEATURES {
+        for j in 0..=i {
+            let mut sum = a[i][j];
+            for k in 0..j {
+                sum -= a[i][k] * a[j][k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return false;
+                }
+                a[i][j] = sum.sqrt();
+            } else {
+                a[i][j] = sum / a[j][j];
+            }
+        }
+    }
+    true
+}
+
+/// Solve `L Lᵀ x = b` given the Cholesky factor in the lower triangle.
+fn cholesky_solve(
+    l: &[[f64; NUM_FEATURES]; NUM_FEATURES],
+    b: &[f64; NUM_FEATURES],
+) -> [f64; NUM_FEATURES] {
+    let mut y = [0.0; NUM_FEATURES];
+    for i in 0..NUM_FEATURES {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
+        }
+        y[i] = s / l[i][i];
+    }
+    let mut x = [0.0; NUM_FEATURES];
+    for i in (0..NUM_FEATURES).rev() {
+        let mut s = y[i];
+        for k in i + 1..NUM_FEATURES {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
+    }
+    x
+}
+
+/// Weighted cubic-basis least squares (paper Eqn. 6 + relative ridge).
+///
+/// `params`: raw (M, R) rows; `times`: observed totals; `weights`: >= 0,
+/// zero marks ignored rows.  Returns the 7 coefficients over the
+/// normalized basis, or an error for hopelessly singular systems.
+pub fn fit(
+    params: &[[f64; 2]],
+    times: &[f64],
+    weights: &[f64],
+) -> Result<[f64; NUM_FEATURES], String> {
+    let x = expand_rows(params);
+    let (mut g, b) = gram_system(&x, weights, times);
+    let trace: f64 = (0..NUM_FEATURES).map(|i| g[i][i]).sum();
+    if trace <= 0.0 {
+        return Err("all-zero system (no live rows?)".into());
+    }
+    let lam = RIDGE_REL * trace / NUM_FEATURES as f64;
+    for i in 0..NUM_FEATURES {
+        g[i][i] += lam;
+    }
+    // Cholesky; on failure escalate the ridge a few times (handles
+    // rank-deficient training grids the same way a pivoted solve would,
+    // while staying dependency-free).
+    let mut lam_boost = lam.max(1e-12);
+    for _ in 0..8 {
+        let mut l = g;
+        if cholesky(&mut l) {
+            return Ok(cholesky_solve(&l, &b));
+        }
+        for i in 0..NUM_FEATURES {
+            g[i][i] += lam_boost;
+        }
+        lam_boost *= 100.0;
+    }
+    Err("Gram matrix not positive definite even with ridge".into())
+}
+
+// -------------------------------------------------------- generic degree
+
+/// Expand one row into a degree-`d` per-parameter polynomial basis:
+/// `[1, p1, .., p1^d, p2, .., p2^d]` (the paper's Eqn. 2 generalized —
+/// its choice of d = 3 is ablated in `rust/benches/ablation.rs`).
+pub fn expand_row_degree(params: &[f64; 2], degree: usize) -> Vec<f64> {
+    let mut out = Vec::with_capacity(1 + 2 * degree);
+    out.push(1.0);
+    for &p in params {
+        let x = p / super::features::PARAM_SCALE;
+        let mut pow = 1.0;
+        for _ in 0..degree {
+            pow *= x;
+            out.push(pow);
+        }
+    }
+    out
+}
+
+/// Evaluate a degree-`d` model fitted by [`fit_poly`].
+pub fn evaluate_poly(coeffs: &[f64], params: &[f64; 2], degree: usize) -> f64 {
+    expand_row_degree(params, degree)
+        .iter()
+        .zip(coeffs)
+        .map(|(a, b)| a * b)
+        .sum()
+}
+
+/// Weighted least squares for an arbitrary per-parameter degree
+/// (dynamic-size Cholesky; the fixed-size path above stays allocation-free
+/// for the production degree).
+pub fn fit_poly(
+    params: &[[f64; 2]],
+    times: &[f64],
+    weights: &[f64],
+    degree: usize,
+) -> Result<Vec<f64>, String> {
+    assert!(degree >= 1 && degree <= 8, "degree out of supported range");
+    let f = 1 + 2 * degree;
+    let mut g = vec![vec![0.0; f]; f];
+    let mut b = vec![0.0; f];
+    for ((p, &w), &t) in params.iter().zip(weights).zip(times) {
+        let row = expand_row_degree(p, degree);
+        for i in 0..f {
+            let wxi = w * row[i];
+            b[i] += wxi * t;
+            for j in i..f {
+                g[i][j] += wxi * row[j];
+            }
+        }
+    }
+    for i in 0..f {
+        for j in 0..i {
+            g[i][j] = g[j][i];
+        }
+    }
+    let trace: f64 = (0..f).map(|i| g[i][i]).sum();
+    if trace <= 0.0 {
+        return Err("all-zero system".into());
+    }
+    let mut lam = RIDGE_REL * trace / f as f64;
+    for _ in 0..10 {
+        for i in 0..f {
+            g[i][i] += lam;
+        }
+        // Dynamic Cholesky.
+        let mut l = g.clone();
+        let mut ok = true;
+        'outer: for i in 0..f {
+            for j in 0..=i {
+                let mut s = l[i][j];
+                for k in 0..j {
+                    s -= l[i][k] * l[j][k];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        ok = false;
+                        break 'outer;
+                    }
+                    l[i][j] = s.sqrt();
+                } else {
+                    l[i][j] = s / l[j][j];
+                }
+            }
+        }
+        if ok {
+            let mut y = vec![0.0; f];
+            for i in 0..f {
+                let mut s = b[i];
+                for k in 0..i {
+                    s -= l[i][k] * y[k];
+                }
+                y[i] = s / l[i][i];
+            }
+            let mut x = vec![0.0; f];
+            for i in (0..f).rev() {
+                let mut s = y[i];
+                for k in i + 1..f {
+                    s -= l[k][i] * x[k];
+                }
+                x[i] = s / l[i][i];
+            }
+            return Ok(x);
+        }
+        lam = (lam * 100.0).max(1e-10);
+    }
+    Err("not positive definite even with ridge".into())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::features::evaluate;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn surface(p: &[f64; 2]) -> f64 {
+        let x = p[0] / 40.0;
+        let y = p[1] / 40.0;
+        200.0 - 150.0 * x + 180.0 * x * x - 60.0 * x * x * x + 40.0 * y + 25.0 * y * y
+    }
+
+    fn grid(rng: &mut Rng, n: usize) -> Vec<[f64; 2]> {
+        (0..n)
+            .map(|_| {
+                [
+                    rng.range_u64(5, 41) as f64,
+                    rng.range_u64(5, 41) as f64,
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_in_family_surface() {
+        let mut rng = Rng::new(1);
+        let params = grid(&mut rng, 30);
+        let times: Vec<f64> = params.iter().map(surface).collect();
+        let w = vec![1.0; 30];
+        let coeffs = fit(&params, &times, &w).unwrap();
+        for (p, &t) in params.iter().zip(&times) {
+            let pred = evaluate(&coeffs, p);
+            assert!((pred - t).abs() / t < 1e-6, "pred {pred} vs {t}");
+        }
+    }
+
+    #[test]
+    fn zero_weight_rows_ignored() {
+        let mut rng = Rng::new(2);
+        let mut params = grid(&mut rng, 20);
+        let mut times: Vec<f64> = params.iter().map(surface).collect();
+        let mut w = vec![1.0; 20];
+        // Append garbage rows with zero weight.
+        params.push([1e6, -7.0]);
+        times.push(1e12);
+        w.push(0.0);
+        let with_garbage = fit(&params, &times, &w).unwrap();
+        let clean = fit(&params[..20], &times[..20], &w[..20]).unwrap();
+        for i in 0..NUM_FEATURES {
+            assert!((with_garbage[i] - clean[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn degenerate_grid_survives_via_ridge() {
+        // Single mapper count -> columns 1..3 collinear with intercept.
+        let params: Vec<[f64; 2]> =
+            (5..25).map(|r| [20.0, r as f64]).collect();
+        let times: Vec<f64> = params.iter().map(surface).collect();
+        let w = vec![1.0; params.len()];
+        let coeffs = fit(&params, &times, &w).unwrap();
+        assert!(coeffs.iter().all(|c| c.is_finite()));
+        // In-sample predictions still good.
+        for (p, &t) in params.iter().zip(&times) {
+            assert!((evaluate(&coeffs, p) - t).abs() / t < 0.02);
+        }
+    }
+
+    #[test]
+    fn all_zero_weights_is_error() {
+        let params = vec![[10.0, 10.0]];
+        assert!(fit(&params, &[100.0], &[0.0]).is_err());
+    }
+
+    #[test]
+    fn prop_weighted_reps_equal_mean() {
+        // k identical-weight repetitions == one mean row with weight k
+        // (the paper's five-run averaging as weights).
+        forall("weighted reps", 20, |rng| {
+            let params = grid(rng, 12);
+            let reps = 5usize;
+            let mut all_p = Vec::new();
+            let mut all_t = Vec::new();
+            let mut means = Vec::new();
+            for p in &params {
+                let base = surface(p);
+                let ts: Vec<f64> =
+                    (0..reps).map(|_| base * rng.lognormal(0.05)).collect();
+                means.push(ts.iter().sum::<f64>() / reps as f64);
+                for &t in &ts {
+                    all_p.push(*p);
+                    all_t.push(t);
+                }
+            }
+            let a = fit(&all_p, &all_t, &vec![1.0; all_t.len()]).unwrap();
+            let b = fit(&params, &means, &vec![reps as f64; params.len()]).unwrap();
+            for i in 0..NUM_FEATURES {
+                let scale = a[i].abs().max(1.0);
+                assert!((a[i] - b[i]).abs() / scale < 1e-7, "coeff {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn degree3_poly_matches_fixed_path() {
+        let mut rng = Rng::new(3);
+        let params = grid(&mut rng, 30);
+        let times: Vec<f64> = params
+            .iter()
+            .map(|p| surface(p) * rng.lognormal(0.03))
+            .collect();
+        let w = vec![1.0; 30];
+        let fixed = fit(&params, &times, &w).unwrap();
+        let dynamic = fit_poly(&params, &times, &w, 3).unwrap();
+        // Same math, different feature ORDER: fixed is [1,p1,p1^2,p1^3,
+        // p2,p2^2,p2^3]; dynamic degree-3 matches exactly.
+        for i in 0..NUM_FEATURES {
+            assert!((fixed[i] - dynamic[i]).abs() < 1e-9, "coeff {i}");
+        }
+    }
+
+    #[test]
+    fn higher_degree_fits_at_least_as_well() {
+        let mut rng = Rng::new(4);
+        let params = grid(&mut rng, 40);
+        let times: Vec<f64> = params
+            .iter()
+            .map(|p| surface(p) * rng.lognormal(0.05))
+            .collect();
+        let w = vec![1.0; 40];
+        let mut prev_ss = f64::INFINITY;
+        for d in 1..=4 {
+            let c = fit_poly(&params, &times, &w, d).unwrap();
+            let ss: f64 = params
+                .iter()
+                .zip(&times)
+                .map(|(p, &t)| (evaluate_poly(&c, p, d) - t).powi(2))
+                .sum();
+            assert!(ss <= prev_ss * (1.0 + 1e-9), "degree {d}: {ss} > {prev_ss}");
+            prev_ss = ss;
+        }
+    }
+
+    #[test]
+    fn degree1_is_a_plane() {
+        let params: Vec<[f64; 2]> =
+            (0..20).map(|i| [5.0 + i as f64, 45.0 - i as f64]).collect();
+        let times: Vec<f64> =
+            params.iter().map(|p| 10.0 + 2.0 * p[0] + 3.0 * p[1]).collect();
+        let c = fit_poly(&params, &times, &vec![1.0; 20], 1).unwrap();
+        assert_eq!(c.len(), 3);
+        for (p, &t) in params.iter().zip(&times) {
+            assert!((evaluate_poly(&c, p, 1) - t).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prop_fit_residual_not_worse_than_mean_predictor() {
+        forall("fit beats mean", 15, |rng| {
+            let params = grid(rng, 25);
+            let times: Vec<f64> = params
+                .iter()
+                .map(|p| surface(p) * rng.lognormal(0.1))
+                .collect();
+            let w = vec![1.0; 25];
+            let coeffs = fit(&params, &times, &w).unwrap();
+            let mean = times.iter().sum::<f64>() / 25.0;
+            let ss_fit: f64 = params
+                .iter()
+                .zip(&times)
+                .map(|(p, &t)| (evaluate(&coeffs, p) - t).powi(2))
+                .sum();
+            let ss_mean: f64 = times.iter().map(|&t| (t - mean).powi(2)).sum();
+            assert!(ss_fit <= ss_mean * (1.0 + 1e-9));
+        });
+    }
+}

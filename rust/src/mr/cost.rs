@@ -1,0 +1,358 @@
+//! Task-level cost model.
+//!
+//! Translates (bytes, node spec, app profile, config) into task durations.
+//! Constants are 2011-commodity-hardware figures; each app's CPU
+//! coefficients can be *calibrated* from functional execution
+//! (see `crate::apps::profiles::calibrate`), keeping the model honest.
+
+use crate::cluster::{Network, NodeSpec};
+
+/// Per-application cost coefficients.  CPU work is expressed in
+/// nanoseconds per byte *at 1 GHz*, so node clock differences fall out as
+/// `ns_per_byte / cpu_ghz` — the paper's heterogeneity axis.
+#[derive(Clone, Debug)]
+pub struct AppProfile {
+    pub name: String,
+    /// Map-function CPU cost per input byte (tokenize/parse/emit).
+    pub map_cpu_ns_per_byte: f64,
+    /// Reduce-function CPU cost per shuffled byte.
+    pub reduce_cpu_ns_per_byte: f64,
+    /// Shuffle bytes per input byte (post-combiner map-output selectivity).
+    pub selectivity: f64,
+    /// Final output bytes per input byte.
+    pub output_ratio: f64,
+    /// True for Hadoop-streaming jobs (mapper/reducer in Python): adds
+    /// per-byte pipe cost, slower task startup and extra run-to-run noise —
+    /// the effect the paper blames for Exim's larger prediction error.
+    pub streaming: bool,
+    /// Lognormal sigma for per-task duration noise ("temporal changes").
+    pub noise_sigma: f64,
+    /// Lognormal sigma for whole-run noise: background daemons / system
+    /// load during that execution (the paper's §V.B explanation for
+    /// prediction error, amplified for streaming jobs whose extra
+    /// processes contend for the lone CPU).
+    pub job_sigma: f64,
+}
+
+impl AppProfile {
+    /// Effective CPU ns/byte including the streaming pipe penalty.
+    fn eff_map_ns(&self) -> f64 {
+        self.map_cpu_ns_per_byte + if self.streaming { STREAMING_PIPE_NS_PER_BYTE } else { 0.0 }
+    }
+
+    fn eff_reduce_ns(&self) -> f64 {
+        self.reduce_cpu_ns_per_byte
+            + if self.streaming { STREAMING_PIPE_NS_PER_BYTE } else { 0.0 }
+    }
+
+    /// Per-task run-to-run noise sigma (streaming doubles it, §V.B).
+    pub fn task_sigma(&self) -> f64 {
+        if self.streaming {
+            self.noise_sigma * 2.0
+        } else {
+            self.noise_sigma
+        }
+    }
+
+    /// Whole-run noise sigma (streaming doubles it, §V.B).
+    pub fn run_sigma(&self) -> f64 {
+        if self.streaming {
+            self.job_sigma * 2.0
+        } else {
+            self.job_sigma
+        }
+    }
+}
+
+// ------------------------------------------------------------ constants
+
+/// JVM spawn per task attempt (Hadoop 0.20 launched a fresh JVM unless
+/// reuse was configured; the paper-era default is no reuse).
+pub const TASK_STARTUP_S: f64 = 3.0;
+/// Mean TaskTracker heartbeat interval: task assignment in 0.20 happens on
+/// heartbeats, so every launch waits U(0, 2·mean) for its tracker to call
+/// in.  This is the per-task overhead that penalizes large mapper counts.
+pub const HEARTBEAT_MEAN_S: f64 = 1.5;
+/// Per-reduce-task output commit: rename + NameNode metadata round trips.
+pub const REDUCE_COMMIT_S: f64 = 1.2;
+/// Extra startup for streaming tasks (fork Python interpreter + pipes).
+pub const STREAMING_STARTUP_S: f64 = 0.9;
+/// Per-byte cost of pushing records through the streaming stdin/stdout
+/// pipe at 1 GHz.
+pub const STREAMING_PIPE_NS_PER_BYTE: f64 = 35.0;
+/// Sort CPU cost per map-output byte at 1 GHz (quicksort + serialization).
+pub const SORT_NS_PER_BYTE: f64 = 28.0;
+/// Merge CPU cost per byte per merge pass at 1 GHz.
+pub const MERGE_NS_PER_BYTE: f64 = 12.0;
+/// Job-level setup/teardown (submit, split computation, commit).
+pub const JOB_OVERHEAD_S: f64 = 6.0;
+
+/// Map-side costs for one split on one node.
+#[derive(Clone, Copy, Debug)]
+pub struct MapCost {
+    pub startup_s: f64,
+    pub read_s: f64,
+    pub cpu_s: f64,
+    pub spill_s: f64,
+    pub spills: u32,
+    pub out_bytes: u64,
+}
+
+impl MapCost {
+    pub fn total_s(&self) -> f64 {
+        self.startup_s + self.read_s + self.cpu_s + self.spill_s
+    }
+}
+
+/// Compute map-task cost for `split_bytes` of input on `node`.
+///
+/// `local` is the HDFS locality decision from the scheduler; remote reads
+/// pay the network instead of (most of) the local disk.
+pub fn map_cost(
+    app: &AppProfile,
+    node: &NodeSpec,
+    net: &Network,
+    split_bytes: u64,
+    local: bool,
+) -> MapCost {
+    let ghz = node.speed();
+    let startup_s =
+        TASK_STARTUP_S + if app.streaming { STREAMING_STARTUP_S } else { 0.0 };
+
+    // Input: local disk scan or remote fetch (remote also writes through
+    // the local page cache; dominated by the slower of net and disk).
+    let read_s = if local {
+        split_bytes as f64 / (node.disk_read_mbps * 1e6)
+    } else {
+        let net_s = net.transfer_secs(split_bytes, 2, 2); // typical contention
+        let disk_s = split_bytes as f64 / (node.disk_read_mbps * 1e6);
+        net_s.max(disk_s)
+    };
+
+    let cpu_s =
+        split_bytes as f64 * app.eff_map_ns() * 1e-9 / ghz * node.cache_penalty();
+
+    // Map-output sort & spill: output beyond the in-JVM sort buffer spills
+    // to disk in passes; more than `merge_factor` spill files would add
+    // intermediate merges, approximated by one extra pass per overflow.
+    let out_bytes = (split_bytes as f64 * app.selectivity) as u64;
+    let buffer = node.sort_buffer_bytes();
+    let spills = (out_bytes + buffer - 1) / buffer.max(1);
+    let spills = spills.max(1) as u32;
+    let sort_cpu_s = out_bytes as f64 * SORT_NS_PER_BYTE * 1e-9 / ghz
+        * node.cache_penalty();
+    let spill_io_s = out_bytes as f64 / (node.disk_write_mbps * 1e6);
+    // Multi-spill maps re-read + merge the bytes that overflowed the
+    // buffer at task end.  Cost scales with the *excess* bytes (continuous
+    // in split size) rather than jumping at integer spill counts — on real
+    // hardware the page cache and combiner smear this boundary out.
+    let excess = out_bytes.saturating_sub(buffer) as f64;
+    let merge_extra_s = if excess > 0.0 {
+        (excess + out_bytes as f64).min(2.0 * excess) / (node.disk_read_mbps * 1e6)
+            + excess * MERGE_NS_PER_BYTE * 1e-9 / ghz
+    } else {
+        0.0
+    };
+    MapCost {
+        startup_s,
+        read_s,
+        cpu_s,
+        spill_s: sort_cpu_s + spill_io_s + merge_extra_s,
+        spills,
+        out_bytes,
+    }
+}
+
+/// Reduce-side (post-shuffle) costs for one reducer.
+#[derive(Clone, Copy, Debug)]
+pub struct ReduceCost {
+    pub startup_s: f64,
+    pub merge_s: f64,
+    pub cpu_s: f64,
+    pub write_s: f64,
+    pub merge_passes: u32,
+}
+
+impl ReduceCost {
+    pub fn total_s(&self) -> f64 {
+        self.startup_s + self.merge_s + self.cpu_s + self.write_s
+    }
+}
+
+/// Cost of the merge+reduce+write stages for one reducer that received
+/// `volume` shuffled bytes from `num_maps` map outputs.
+pub fn reduce_cost(
+    app: &AppProfile,
+    node: &NodeSpec,
+    net: &Network,
+    volume: u64,
+    num_maps: u32,
+    merge_factor: u32,
+    replication: usize,
+) -> ReduceCost {
+    let ghz = node.speed();
+    let startup_s =
+        TASK_STARTUP_S + if app.streaming { STREAMING_STARTUP_S } else { 0.0 };
+
+    // Multi-pass merge of `num_maps` segments with fan-in `merge_factor`.
+    // The integer pass count is kept for counters, but the *cost* uses the
+    // continuous pass equivalent log_factor(segments/factor): Hadoop's
+    // merger only re-reads the subset of segments merged in intermediate
+    // rounds, so effective IO grows smoothly, not in cliff steps.
+    let segments = num_maps.max(1);
+    let merge_passes = {
+        let mut s = segments;
+        let mut p = 0u32;
+        while s > merge_factor {
+            s = s.div_ceil(merge_factor);
+            p += 1;
+        }
+        p
+    };
+    let passes_f = if segments > merge_factor {
+        (segments as f64 / merge_factor as f64).ln() / (merge_factor as f64).ln()
+    } else {
+        0.0
+    };
+    // Every effective pass reads + writes the volume; the final in-memory
+    // merge feeding the reducer costs CPU only.
+    let pass_io_s = volume as f64
+        * (1.0 / (node.disk_read_mbps * 1e6) + 1.0 / (node.disk_write_mbps * 1e6));
+    let pass_cpu_s =
+        volume as f64 * MERGE_NS_PER_BYTE * 1e-9 / ghz * node.cache_penalty();
+    let merge_s = passes_f * (pass_io_s + pass_cpu_s) + pass_cpu_s;
+
+    let cpu_s = volume as f64 * app.eff_reduce_ns() * 1e-9 / ghz
+        * node.cache_penalty();
+
+    // Output commit: local write plus (replication-1) pipeline copies over
+    // the network; HDFS pipelining overlaps them, so cost is the max of
+    // local disk and the slowest network hop.
+    let out_bytes = (volume as f64 * app.output_ratio / app.selectivity.max(1e-9)) as u64;
+    let disk_s = out_bytes as f64 / (node.disk_write_mbps * 1e6);
+    let extra = replication.saturating_sub(1) as u32;
+    let net_s = if extra > 0 {
+        net.transfer_secs(out_bytes, 2, 2)
+    } else {
+        0.0
+    };
+    ReduceCost {
+        startup_s,
+        merge_s,
+        cpu_s,
+        write_s: disk_s.max(net_s) + REDUCE_COMMIT_S,
+        merge_passes,
+    }
+}
+
+/// Synthetic profile for framework tests (not a real application).
+#[cfg(test)]
+pub(crate) fn test_profile(streaming: bool) -> AppProfile {
+    AppProfile {
+        name: "test".into(),
+        map_cpu_ns_per_byte: 150.0,
+        reduce_cpu_ns_per_byte: 40.0,
+        selectivity: 0.3,
+        output_ratio: 0.2,
+        streaming,
+        noise_sigma: 0.03,
+        job_sigma: 0.01,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Cluster;
+
+    fn setup() -> (Cluster, AppProfile) {
+        (Cluster::paper_cluster(), test_profile(false))
+    }
+
+    #[test]
+    fn map_cost_scales_with_split_size() {
+        let (c, app) = setup();
+        let small = map_cost(&app, &c.nodes[0].spec, &c.network, 100 << 20, true);
+        let large = map_cost(&app, &c.nodes[0].spec, &c.network, 400 << 20, true);
+        assert!(large.total_s() > 3.0 * small.total_s());
+        // Startup does not scale.
+        assert_eq!(small.startup_s, large.startup_s);
+    }
+
+    #[test]
+    fn fast_node_beats_slow_node_on_cpu() {
+        let (c, app) = setup();
+        let fast = map_cost(&app, &c.nodes[0].spec, &c.network, 256 << 20, true);
+        let slow = map_cost(&app, &c.nodes[2].spec, &c.network, 256 << 20, true);
+        assert!(slow.cpu_s > fast.cpu_s);
+        // 2.9/2.5 clock ratio plus cache penalty.
+        let ratio = slow.cpu_s / fast.cpu_s;
+        assert!(ratio > 1.1 && ratio < 1.35, "ratio {ratio}");
+    }
+
+    #[test]
+    fn remote_read_slower_than_local() {
+        let (c, app) = setup();
+        let local = map_cost(&app, &c.nodes[0].spec, &c.network, 256 << 20, true);
+        let remote = map_cost(&app, &c.nodes[0].spec, &c.network, 256 << 20, false);
+        assert!(remote.read_s >= local.read_s);
+        assert_eq!(remote.cpu_s, local.cpu_s);
+    }
+
+    #[test]
+    fn big_splits_spill_more() {
+        let (c, app) = setup();
+        // Slow node has a smaller sort buffer -> spills earlier.
+        let spec = &c.nodes[2].spec;
+        let small = map_cost(&app, spec, &c.network, 64 << 20, true);
+        let big = map_cost(&app, spec, &c.network, 1 << 30, true);
+        assert_eq!(small.spills, 1);
+        assert!(big.spills > 1, "1 GB split must spill (got {})", big.spills);
+        assert!(big.spill_s > small.spill_s);
+    }
+
+    #[test]
+    fn streaming_adds_startup_and_cpu() {
+        let (c, _) = setup();
+        let plain = map_cost(&test_profile(false), &c.nodes[0].spec, &c.network, 256 << 20, true);
+        let stream = map_cost(&test_profile(true), &c.nodes[0].spec, &c.network, 256 << 20, true);
+        assert!(stream.startup_s > plain.startup_s);
+        assert!(stream.cpu_s > plain.cpu_s);
+    }
+
+    #[test]
+    fn streaming_doubles_noise() {
+        assert_eq!(test_profile(true).task_sigma(), 2.0 * test_profile(false).task_sigma());
+    }
+
+    #[test]
+    fn merge_passes_follow_fanin() {
+        let (c, app) = setup();
+        let spec = &c.nodes[0].spec;
+        let few = reduce_cost(&app, spec, &c.network, 100 << 20, 8, 10, 3);
+        let many = reduce_cost(&app, spec, &c.network, 100 << 20, 40, 10, 3);
+        assert_eq!(few.merge_passes, 0); // 8 segments <= factor 10
+        assert_eq!(many.merge_passes, 1); // 40 -> 4 segments
+        assert!(many.merge_s > few.merge_s);
+    }
+
+    #[test]
+    fn replication_write_costs_network() {
+        let (c, app) = setup();
+        let spec = &c.nodes[0].spec;
+        let r1 = reduce_cost(&app, spec, &c.network, 200 << 20, 10, 10, 1);
+        let r3 = reduce_cost(&app, spec, &c.network, 200 << 20, 10, 10, 3);
+        assert!(r3.write_s >= r1.write_s);
+    }
+
+    #[test]
+    fn totals_are_positive_and_finite() {
+        let (c, app) = setup();
+        for node in &c.nodes {
+            let m = map_cost(&app, &node.spec, &c.network, 8 << 30, false);
+            let r = reduce_cost(&app, &node.spec, &c.network, 1 << 30, 40, 10, 3);
+            assert!(m.total_s().is_finite() && m.total_s() > 0.0);
+            assert!(r.total_s().is_finite() && r.total_s() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! The timed MapReduce framework: a discrete-event Hadoop-0.20 model.
+//!
+//! `runner::run_job` simulates one job on a [`crate::cluster::Cluster`]:
+//! input splits with HDFS locality, slot-based map scheduling in waves,
+//! spill/merge on the map side, shuffle with network contention overlapped
+//! with the map phase (slowstart), merge + reduce + replicated output
+//! write, speculative execution of stragglers, and multiplicative
+//! run-to-run noise ("temporal changes", paper §IV.A).
+//!
+//! The *functional* counterpart (what the job computes) lives in
+//! [`crate::api::engine`]; both execute the same app definitions.
+
+pub mod config;
+pub mod cost;
+pub mod outcome;
+pub mod runner;
+pub mod split;
+
+pub use config::JobConfig;
+pub use outcome::{JobResult, TaskStat};
+pub use runner::run_job;
+pub use split::{plan_splits, SplitPlan};

@@ -1,0 +1,102 @@
+//! Job execution results: makespan, phase breakdown and counters.
+
+use crate::sim::SimTime;
+
+/// Per-task-attempt record (kept for diagnostics and the report module).
+#[derive(Clone, Debug)]
+pub struct TaskStat {
+    pub index: u32,
+    pub node: usize,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub local: bool,
+    pub speculative: bool,
+}
+
+impl TaskStat {
+    pub fn duration_s(&self) -> f64 {
+        self.end.since(self.start).as_secs()
+    }
+}
+
+/// Aggregate counters, mirroring Hadoop's JobCounters.
+#[derive(Clone, Debug, Default)]
+pub struct Counters {
+    pub data_local_maps: u64,
+    pub remote_maps: u64,
+    pub speculative_maps: u64,
+    pub speculative_wins: u64,
+    pub map_spills: u64,
+    pub shuffle_bytes: u64,
+    pub output_bytes: u64,
+    pub events_processed: u64,
+    /// Total CPU-seconds consumed by committed task attempts — the
+    /// quantity the authors' companion work [24] models ("total CPU tick
+    /// clocks"); reproduced by the `cpu-model` extension experiment.
+    pub cpu_seconds: f64,
+}
+
+/// The outcome of one simulated job execution.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    /// Total execution time — the paper's dependent variable T.
+    pub total_time_s: f64,
+    /// End of the map phase (all maps committed).
+    pub map_phase_s: f64,
+    /// Time when the first reducer launched (slowstart).
+    pub first_reduce_s: f64,
+    pub maps: Vec<TaskStat>,
+    pub reduces: Vec<TaskStat>,
+    pub counters: Counters,
+}
+
+impl JobResult {
+    /// Map waves actually executed (`maps` holds one committed attempt per
+    /// task).
+    pub fn map_waves(&self, total_slots: u32) -> u32 {
+        (self.maps.len() as u32).div_ceil(total_slots.max(1))
+    }
+
+    /// Fraction of (non-speculative) maps that ran data-local.
+    pub fn locality_fraction(&self) -> f64 {
+        let c = &self.counters;
+        let total = c.data_local_maps + c.remote_maps;
+        if total == 0 {
+            0.0
+        } else {
+            c.data_local_maps as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_duration() {
+        let t = TaskStat {
+            index: 0,
+            node: 1,
+            start: SimTime::from_secs(2.0),
+            end: SimTime::from_secs(5.5),
+            local: true,
+            speculative: false,
+        };
+        assert!((t.duration_s() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn locality_fraction_handles_zero() {
+        let r = JobResult {
+            total_time_s: 0.0,
+            map_phase_s: 0.0,
+            first_reduce_s: 0.0,
+            maps: vec![],
+            reduces: vec![],
+            counters: Counters::default(),
+        };
+        assert_eq!(r.locality_fraction(), 0.0);
+        assert_eq!(r.map_waves(8), 0);
+    }
+}

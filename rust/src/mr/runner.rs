@@ -1,0 +1,540 @@
+//! Discrete-event simulation of one MapReduce job.
+//!
+//! Mirrors Hadoop 0.20's execution structure:
+//!
+//! 1. **Map phase** — slot-limited waves with HDFS locality preference,
+//!    per-attempt durations from [`super::cost`] times lognormal noise,
+//!    speculative backup attempts for stragglers.
+//! 2. **Shuffle** — per-reducer fetch overlapped with the map phase after
+//!    slowstart, fair-share network contention, per-map fetch latency,
+//!    hash-partition volume skew.
+//! 3. **Reduce phase** — slot-limited waves of merge + reduce + replicated
+//!    output write.
+//!
+//! Everything stochastic flows from `config.seed` via forked RNG streams,
+//! so a `(cluster, app, config)` triple is exactly reproducible.
+
+use crate::cluster::Cluster;
+use crate::dfs::NameNode;
+use crate::sim::{EventQueue, SimTime};
+use crate::util::rng::Rng;
+
+use super::config::JobConfig;
+use super::cost::{self, AppProfile, JOB_OVERHEAD_S};
+use super::outcome::{Counters, JobResult, TaskStat};
+use super::split::{plan_splits, SplitPlan};
+
+#[derive(Clone, Debug)]
+enum Ev {
+    /// A map attempt finished: (task index, attempt id).
+    MapDone(u32, u32),
+    /// A reduce task finished: task index.
+    ReduceDone(u32),
+}
+
+/// One task attempt: (attempt id, node, start, expected end, local).
+type Attempt = (u32, usize, SimTime, SimTime, bool);
+
+struct MapTask {
+    split: SplitPlan,
+    done: bool,
+    end: SimTime,
+    speculated: bool,
+    /// Original + at most one speculative backup — fixed storage instead
+    /// of a per-task Vec (allocation showed up in the job hot loop).
+    attempts: [Option<Attempt>; 2],
+    num_attempts: u8,
+}
+
+/// Simulate one job run; returns the paper's dependent variable (total
+/// execution time) plus the full phase/task breakdown.
+pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobResult {
+    config.validate().expect("invalid job config");
+    let rng = Rng::new(config.seed ^ 0x6a6f_625f_7275_6e73);
+    let mut q: EventQueue<Ev> = EventQueue::new();
+
+    // ---- input layout: balanced ingest across the cluster
+    let mut nn = NameNode::new(cluster.num_nodes(), config.replication);
+    let file =
+        nn.plan_balanced_file("/job/input", config.input_bytes, &mut rng.fork(1));
+    let num_tasks = config.map_tasks();
+    let splits = plan_splits(&file, num_tasks);
+
+    // ---- per-node slot state (local copy; the shared Cluster is immutable)
+    let mut free_map: Vec<u32> = cluster.nodes.iter().map(|n| n.spec.map_slots).collect();
+    let mut free_red: Vec<u32> =
+        cluster.nodes.iter().map(|n| n.spec.reduce_slots).collect();
+
+    let mut counters = Counters::default();
+    let mut maps: Vec<MapTask> = splits
+        .into_iter()
+        .map(|split| MapTask {
+            split,
+            done: false,
+            end: SimTime::ZERO,
+            speculated: false,
+            attempts: [None, None],
+            num_attempts: 0,
+        })
+        .collect();
+    let mut pending: Vec<u32> = (0..num_tasks).collect();
+    let mut completed_maps = 0u32;
+    let mut map_stats: Vec<TaskStat> = Vec::new();
+    let mut noise_rng = rng.fork(2);
+    let mut next_attempt = 0u32;
+
+    // Launch a map attempt for task `idx` on `node` at time `now`.
+    macro_rules! launch_map {
+        ($idx:expr, $node:expr, $now:expr, $spec:expr) => {{
+            let idx = $idx as usize;
+            let node = $node;
+            let local = maps[idx].split.preferred.contains(&node);
+            let c = cost::map_cost(
+                app,
+                &cluster.nodes[node].spec,
+                &cluster.network,
+                maps[idx].split.len,
+                local,
+            );
+            let noise = noise_rng.lognormal(app.task_sigma());
+            // Heartbeat-driven assignment: the slot sits idle until its
+            // tracker's next heartbeat (Hadoop 0.20 assigns on heartbeat).
+            let hb = noise_rng.f64() * 2.0 * cost::HEARTBEAT_MEAN_S;
+            counters.cpu_seconds += (c.cpu_s + c.spill_s) * noise;
+            let dur = SimTime::from_secs(c.total_s() * noise + hb);
+            let attempt = next_attempt;
+            next_attempt += 1;
+            let end = $now + dur;
+            let slot = maps[idx].num_attempts as usize;
+            maps[idx].attempts[slot] = Some((attempt, node, $now, end, local));
+            maps[idx].num_attempts += 1;
+            free_map[node] -= 1;
+            counters.map_spills += (c.spills - 1) as u64;
+            if $spec {
+                counters.speculative_maps += 1;
+            } else if local {
+                counters.data_local_maps += 1;
+            } else {
+                counters.remote_maps += 1;
+            }
+            q.push_at(end, Ev::MapDone($idx, attempt));
+        }};
+    }
+
+    // Locality-aware pick: first pending split preferring `node`, else the
+    // first pending split (rack/any fallback — one rack here).
+    let pick_for = |pending: &mut Vec<u32>, maps: &[MapTask], node: usize| -> Option<u32> {
+        let pos = pending
+            .iter()
+            .position(|&i| maps[i as usize].split.preferred.contains(&node))
+            .or(if pending.is_empty() { None } else { Some(0) })?;
+        Some(pending.remove(pos))
+    };
+
+    // ---- prime all map slots at job start
+    let t0 = SimTime::from_secs(JOB_OVERHEAD_S * 0.7); // setup before first task
+    {
+        // Deterministic node order; fill every slot while work remains.
+        let mut progress = true;
+        while progress {
+            progress = false;
+            for node in 0..cluster.num_nodes() {
+                if free_map[node] > 0 {
+                    if let Some(idx) = pick_for(&mut pending, &maps, node) {
+                        launch_map!(idx, node, t0, false);
+                        progress = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- map-phase event loop
+    let slowstart_target =
+        ((config.slowstart * num_tasks as f64).ceil() as u32).max(1);
+    let mut slowstart_time: Option<SimTime> = None;
+    let mut map_phase_end = t0;
+
+    while let Some((now, ev)) = q.pop() {
+        let Ev::MapDone(idx, attempt) = ev else {
+            unreachable!("reduce events are simulated in phase 2")
+        };
+        let iu = idx as usize;
+        // Find this attempt; release its slot.
+        let (_, node, start, _, local) = maps[iu]
+            .attempts
+            .iter()
+            .flatten()
+            .find(|a| a.0 == attempt)
+            .copied()
+            .expect("unknown attempt");
+        free_map[node] += 1;
+
+        if maps[iu].done {
+            // A duplicate (speculative or original) already committed; this
+            // attempt is the loser and is simply discarded (Hadoop kills it).
+            continue;
+        }
+        maps[iu].done = true;
+        maps[iu].end = now;
+        completed_maps += 1;
+        map_phase_end = map_phase_end.max(now);
+        let first_attempt = maps[iu].attempts[0].expect("original attempt").0;
+        let was_speculative =
+            maps[iu].num_attempts > 1 && attempt != first_attempt;
+        if was_speculative {
+            counters.speculative_wins += 1;
+        }
+        map_stats.push(TaskStat {
+            index: idx,
+            node,
+            start,
+            end: now,
+            local,
+            speculative: attempt != first_attempt,
+        });
+
+        if completed_maps >= slowstart_target && slowstart_time.is_none() {
+            slowstart_time = Some(now);
+        }
+
+        // Refill the freed slot: pending work first, else speculation.
+        if let Some(next) = pick_for(&mut pending, &maps, node) {
+            launch_map!(next, node, now, false);
+        } else if config.speculative {
+            // Find the running, un-speculated task with the most remaining
+            // time; back it up here if >25% of its span remains.
+            let candidate = maps
+                .iter()
+                .enumerate()
+                .filter(|(_, t)| !t.done && !t.speculated && t.num_attempts > 0)
+                .map(|(i, t)| {
+                    let a = t.attempts[0].unwrap();
+                    (i, a.3, a.2)
+                })
+                .filter(|&(_, exp_end, start)| {
+                    exp_end > now
+                        && (exp_end.since(now).as_secs())
+                            > 0.25 * exp_end.since(start).as_secs()
+                })
+                .max_by_key(|&(_, exp_end, _)| exp_end);
+            if let Some((cand, _, _)) = candidate {
+                maps[cand].speculated = true;
+                launch_map!(cand as u32, node, now, true);
+            }
+        }
+    }
+    assert_eq!(completed_maps, num_tasks, "all maps must finish");
+    let slowstart_time = slowstart_time.unwrap_or(map_phase_end);
+
+    // ---- shuffle volumes: hash partitioning gives near-even shares with
+    // mild skew; model as noisy weights normalized to total map output.
+    let total_shuffle: u64 = maps
+        .iter()
+        .map(|t| (t.split.len as f64 * app.selectivity) as u64)
+        .sum();
+    counters.shuffle_bytes = total_shuffle;
+    let mut skew_rng = rng.fork(3);
+    let mut weights: Vec<f64> = (0..config.num_reducers)
+        .map(|_| (1.0 + 0.08 * skew_rng.normal()).max(0.2))
+        .collect();
+    let wsum: f64 = weights.iter().sum();
+    for w in &mut weights {
+        *w /= wsum;
+    }
+    let volumes: Vec<u64> = weights
+        .iter()
+        .map(|w| (total_shuffle as f64 * w) as u64)
+        .collect();
+
+    // ---- reduce phase DES
+    // Reducers launch at slowstart (or when a slot frees), fetch overlapped
+    // with remaining maps, then merge/reduce/write.
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let mut reduce_stats: Vec<TaskStat> = Vec::new();
+    let cpu_acc = std::cell::Cell::new(0.0f64);
+    let mut red_pending: Vec<u32> = (0..config.num_reducers).collect();
+    let mut red_noise = rng.fork(4);
+    let nodes = cluster.num_nodes();
+    let active_estimate = config
+        .num_reducers
+        .min(cluster.total_reduce_slots());
+
+    // Snapshot contention: reducers concurrently fetching per node.
+    let streams_per_node = active_estimate.div_ceil(nodes as u32).max(1);
+    let bw = cluster
+        .network
+        .transfer_bps(streams_per_node, streams_per_node)
+        .min(cluster.network.bisection_bps() / active_estimate.max(1) as f64);
+
+    let launch_reduce = |r: u32,
+                             node: usize,
+                             start: SimTime,
+                             q: &mut EventQueue<Ev>,
+                             red_noise: &mut Rng,
+                             reduce_stats: &mut Vec<TaskStat>| {
+        let vol = volumes[r as usize];
+        // Fetch: volume at fair-share bandwidth + per-map fetch round trips.
+        let fetch_overhead_s = num_tasks as f64
+            * cluster.network.fetch_latency_s
+            / config.parallel_copies as f64;
+        let fetch_s = vol as f64 / bw + fetch_overhead_s;
+        // Cannot complete before the last map's output exists; after that,
+        // the tail of the final wave still has to cross the wire.
+        let tail_s = (vol as f64 / num_tasks.max(1) as f64) / bw
+            + cluster.network.fetch_latency_s;
+        let fetch_end = (start + SimTime::from_secs(fetch_s))
+            .max(map_phase_end + SimTime::from_secs(tail_s));
+        let c = cost::reduce_cost(
+            app,
+            &cluster.nodes[node].spec,
+            &cluster.network,
+            vol,
+            num_tasks,
+            config.merge_factor,
+            config.replication,
+        );
+        let noise = red_noise.lognormal(app.task_sigma());
+        let hb = red_noise.f64() * 2.0 * cost::HEARTBEAT_MEAN_S;
+        cpu_acc.set(cpu_acc.get() + (c.cpu_s + c.merge_s) * noise);
+        let end = fetch_end + SimTime::from_secs(c.total_s() * noise + hb);
+        reduce_stats.push(TaskStat {
+            index: r,
+            node,
+            start,
+            end,
+            local: true,
+            speculative: false,
+        });
+        q.push_at(end, Ev::ReduceDone(r));
+    };
+
+    // Prime reduce slots at slowstart, spreading across nodes round-robin.
+    {
+        let mut progress = true;
+        while progress && !red_pending.is_empty() {
+            progress = false;
+            for node in 0..nodes {
+                if free_red[node] > 0 && !red_pending.is_empty() {
+                    let r = red_pending.remove(0);
+                    free_red[node] -= 1;
+                    launch_reduce(
+                        r,
+                        node,
+                        slowstart_time,
+                        &mut q,
+                        &mut red_noise,
+                        &mut reduce_stats,
+                    );
+                    progress = true;
+                }
+            }
+        }
+    }
+
+    let mut last_end = map_phase_end;
+    while let Some((now, ev)) = q.pop() {
+        let Ev::ReduceDone(r) = ev else { unreachable!() };
+        let node = reduce_stats.iter().find(|t| t.index == r).unwrap().node;
+        free_red[node] += 1;
+        last_end = last_end.max(now);
+        if let Some(next) = (!red_pending.is_empty()).then(|| red_pending.remove(0)) {
+            free_red[node] -= 1;
+            launch_reduce(next, node, now, &mut q, &mut red_noise, &mut reduce_stats);
+        }
+    }
+
+    counters.cpu_seconds += cpu_acc.get();
+    counters.output_bytes = (config.input_bytes as f64 * app.output_ratio) as u64;
+    counters.events_processed = map_stats.len() as u64 + reduce_stats.len() as u64;
+
+    // Job commit + cleanup, plus whole-run "temporal changes": background
+    // processes during this particular execution (paper §V.B) scale the
+    // entire run multiplicatively.
+    let total = last_end + SimTime::from_secs(JOB_OVERHEAD_S * 0.3);
+    let run_noise = rng.fork(5).lognormal(app.run_sigma());
+    JobResult {
+        // Phase summaries all carry the whole-run factor (background load
+        // slows every phase); per-task stats stay in unnoised sim time.
+        total_time_s: total.as_secs() * run_noise,
+        map_phase_s: map_phase_end.as_secs() * run_noise,
+        first_reduce_s: slowstart_time.as_secs() * run_noise,
+        maps: map_stats,
+        reduces: reduce_stats,
+        counters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mr::cost::test_profile;
+    use crate::util::bytes::GB;
+    use crate::util::prop::forall;
+
+    use crate::mr::config::SplitPolicy;
+
+    /// Direct split policy: these tests exercise slot/wave mechanics and
+    /// need the task count to equal the mapper setting exactly.
+    fn run(m: u32, r: u32, seed: u64) -> JobResult {
+        let cluster = Cluster::paper_cluster();
+        let app = test_profile(false);
+        let config = JobConfig::paper_default(m, r)
+            .with_seed(seed)
+            .with_split_policy(SplitPolicy::Direct);
+        run_job(&cluster, &app, &config)
+    }
+
+    #[test]
+    fn hadoop_hint_policy_runs_block_bound_tasks() {
+        let cluster = Cluster::paper_cluster();
+        let app = test_profile(false);
+        // Default paper config: 8 GB / 64 MB blocks -> 128 tasks whatever
+        // the mapper hint says (faithful Hadoop 0.20 semantics).
+        for hint in [5, 20, 40] {
+            let config = JobConfig::paper_default(hint, 5).with_seed(1);
+            assert_eq!(config.map_tasks(), 128);
+            let res = run_job(&cluster, &app, &config);
+            assert_eq!(res.maps.len(), 128, "hint {hint}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = run(20, 5, 7);
+        let b = run(20, 5, 7);
+        assert_eq!(a.total_time_s, b.total_time_s);
+        assert_eq!(a.counters.shuffle_bytes, b.counters.shuffle_bytes);
+    }
+
+    #[test]
+    fn different_seeds_jitter() {
+        let a = run(20, 5, 1);
+        let b = run(20, 5, 2);
+        assert_ne!(a.total_time_s, b.total_time_s);
+        // ...but only modestly (noise, not chaos).
+        let ratio = a.total_time_s / b.total_time_s;
+        assert!(ratio > 0.7 && ratio < 1.4, "ratio {ratio}");
+    }
+
+    #[test]
+    fn all_tasks_accounted() {
+        let res = run(23, 9, 3);
+        // Exactly one committed attempt per map task (winner of original
+        // vs speculative backup).
+        assert_eq!(res.maps.len(), 23);
+        assert_eq!(res.reduces.len(), 9);
+        assert_eq!(
+            res.counters.data_local_maps + res.counters.remote_maps,
+            23
+        );
+    }
+
+    #[test]
+    fn phases_ordered() {
+        let res = run(20, 5, 4);
+        assert!(res.first_reduce_s <= res.map_phase_s);
+        assert!(res.map_phase_s < res.total_time_s);
+        // Task stats are in unnoised sim time; the noised total divided by
+        // a generous noise bound must still cover the last reduce end.
+        let last_reduce = res
+            .reduces
+            .iter()
+            .map(|t| t.end.as_secs())
+            .fold(0.0, f64::max);
+        assert!(last_reduce > 0.0);
+        assert!(res.total_time_s > 0.5 * last_reduce, "run noise out of band");
+    }
+
+    #[test]
+    fn locality_is_high_with_replication_3() {
+        // 3 replicas on 4 nodes: nearly every split has a local home.
+        let res = run(40, 5, 5);
+        assert!(res.locality_fraction() > 0.8, "{}", res.locality_fraction());
+    }
+
+    #[test]
+    fn more_mappers_than_slots_waves() {
+        let res = run(40, 5, 6);
+        // 8 map slots -> expect ~5 waves; starts must not all be at t0.
+        let starts: Vec<f64> =
+            res.maps.iter().map(|t| t.start.as_secs()).collect();
+        let earliest = starts.iter().cloned().fold(f64::INFINITY, f64::min);
+        let latest = starts.iter().cloned().fold(0.0, f64::max);
+        assert!(latest > earliest + 1.0, "waves must stagger starts");
+    }
+
+    #[test]
+    fn shuffle_bytes_match_selectivity() {
+        let res = run(16, 8, 8);
+        let expect = (8.0 * GB as f64 * 0.3) as u64;
+        let got = res.counters.shuffle_bytes;
+        let rel = (got as f64 - expect as f64).abs() / expect as f64;
+        assert!(rel < 0.01, "shuffle {got} vs {expect}");
+    }
+
+    #[test]
+    fn single_mapper_single_reducer() {
+        let res = run(1, 1, 9);
+        assert_eq!(res.maps.iter().filter(|t| !t.speculative).count(), 1);
+        assert_eq!(res.reduces.len(), 1);
+        assert!(res.total_time_s > 0.0);
+    }
+
+    #[test]
+    fn speculation_toggle_changes_nothing_when_off() {
+        let cluster = Cluster::paper_cluster();
+        let app = test_profile(false);
+        let mut config = JobConfig::paper_default(20, 5)
+            .with_seed(11)
+            .with_split_policy(SplitPolicy::Direct);
+        config.speculative = false;
+        let res = run_job(&cluster, &app, &config);
+        assert_eq!(res.counters.speculative_maps, 0);
+        assert!(res.maps.iter().all(|t| !t.speculative));
+    }
+
+    #[test]
+    fn prop_makespan_bounds() {
+        forall("makespan sane", 20, |rng| {
+            let m = rng.range_u64(1, 48) as u32;
+            let r = rng.range_u64(1, 48) as u32;
+            let res = run(m, r, rng.next_u64());
+            // Sanity window: longer than fixed overheads, shorter than a
+            // serial execution of everything on the slowest node.
+            assert!(res.total_time_s > JOB_OVERHEAD_S);
+            assert!(
+                res.total_time_s < 50_000.0,
+                "m={m} r={r}: {}",
+                res.total_time_s
+            );
+            // Reduce phase must end at/after map phase.
+            assert!(res.total_time_s >= res.map_phase_s);
+        });
+    }
+
+    #[test]
+    fn prop_noise_free_config_monotone_slots() {
+        // With noise suppressed, a cluster with more map slots can't be
+        // slower for the same job.
+        forall("slots monotone", 8, |rng| {
+            let m = rng.range_u64(8, 40) as u32;
+            let mut app = test_profile(false);
+            app.noise_sigma = 0.0;
+            let config = JobConfig::paper_default(m, 5)
+                .with_seed(1)
+                .with_split_policy(SplitPolicy::Direct);
+            let small = Cluster::paper_cluster();
+            let mut big = Cluster::paper_cluster();
+            for n in &mut big.nodes {
+                n.spec.map_slots += 2;
+            }
+            let t_small = run_job(&small, &app, &config).total_time_s;
+            let t_big = run_job(&big, &app, &config).total_time_s;
+            assert!(
+                t_big <= t_small * 1.02,
+                "m={m}: big {t_big} vs small {t_small}"
+            );
+        });
+    }
+}

@@ -1,0 +1,108 @@
+//! Input split planning: file byte ranges + locality candidates.
+
+use crate::cluster::node::NodeId;
+use crate::dfs::FileMeta;
+
+/// One planned input split.
+#[derive(Clone, Debug)]
+pub struct SplitPlan {
+    pub index: u32,
+    pub offset: u64,
+    pub len: u64,
+    /// Nodes holding replicas of (most of) this split, best first.
+    pub preferred: Vec<NodeId>,
+}
+
+/// Divide `file` into `n` equal byte ranges and attach locality hints.
+///
+/// The paper sets the number of mappers directly, so split count == map
+/// count (in real Hadoop this is `min(splits, mapred.map.tasks)`-ish; for
+/// the studied range the identity holds).
+pub fn plan_splits(file: &FileMeta, n: u32) -> Vec<SplitPlan> {
+    let n = n.max(1);
+    let base = file.len / n as u64;
+    let rem = file.len % n as u64;
+    let mut out = Vec::with_capacity(n as usize);
+    let mut off = 0;
+    for i in 0..n {
+        // Distribute the remainder over the first `rem` splits so sizes
+        // differ by at most one byte.
+        let len = base + if (i as u64) < rem { 1 } else { 0 };
+        // Hadoop reports at most 3 locations per split (the hosts covering
+        // the most bytes); schedulers treat only those as "local".
+        let preferred = file
+            .nodes_covering(off, off + len)
+            .into_iter()
+            .take(3)
+            .map(|(node, _)| node)
+            .collect();
+        out.push(SplitPlan { index: i, offset: off, len, preferred });
+        off += len;
+    }
+    debug_assert_eq!(off, file.len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfs::NameNode;
+    use crate::util::bytes::MB;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn file(len: u64, seed: u64) -> FileMeta {
+        let mut nn = NameNode::new(4, 3);
+        let mut rng = Rng::new(seed);
+        nn.create_file("/in", len, 0, &mut rng).clone()
+    }
+
+    #[test]
+    fn splits_tile_file_evenly() {
+        let f = file(1000 * MB, 1);
+        let splits = plan_splits(&f, 7);
+        assert_eq!(splits.len(), 7);
+        let total: u64 = splits.iter().map(|s| s.len).sum();
+        assert_eq!(total, f.len);
+        let max = splits.iter().map(|s| s.len).max().unwrap();
+        let min = splits.iter().map(|s| s.len).min().unwrap();
+        assert!(max - min <= 1, "even split sizes");
+    }
+
+    #[test]
+    fn splits_are_contiguous() {
+        let f = file(123_456_789, 2);
+        let splits = plan_splits(&f, 13);
+        let mut expect = 0;
+        for s in &splits {
+            assert_eq!(s.offset, expect);
+            expect += s.len;
+        }
+        assert_eq!(expect, f.len);
+    }
+
+    #[test]
+    fn preferred_nodes_hold_replicas() {
+        let f = file(640 * MB, 3);
+        for s in plan_splits(&f, 10) {
+            assert!(!s.preferred.is_empty());
+            // Writer node 0 replicates every block, so it must appear.
+            assert!(s.preferred.contains(&0));
+        }
+    }
+
+    #[test]
+    fn prop_any_file_any_split_count() {
+        forall("split planning", 40, |rng| {
+            let len = rng.range_u64(1, 4_000_000_000);
+            let n = rng.range_u64(1, 64) as u32;
+            let f = file(len, rng.next_u64());
+            let splits = plan_splits(&f, n);
+            assert_eq!(splits.len(), n as usize);
+            assert_eq!(splits.iter().map(|s| s.len).sum::<u64>(), len);
+            for w in splits.windows(2) {
+                assert_eq!(w[0].offset + w[0].len, w[1].offset);
+            }
+        });
+    }
+}

@@ -1,0 +1,209 @@
+//! Profiling campaigns: which (M, R) settings to run.
+//!
+//! The paper (§V.A) uses "20 sets of two configuration parameters values
+//! ... chosen between 5 to 40" for modeling, and tests on further random
+//! settings in the same range (§V.B).
+
+use crate::apps::AppId;
+use crate::cluster::Cluster;
+use crate::util::rng::Rng;
+
+use super::dataset::Dataset;
+use super::experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
+
+/// Parameter range studied by the paper.
+pub const PARAM_MIN: u32 = 5;
+pub const PARAM_MAX: u32 = 40;
+
+/// A profiling campaign: a list of experiment settings for one app.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub app: AppId,
+    pub specs: Vec<ExperimentSpec>,
+    pub reps: u32,
+    pub base_seed: u64,
+}
+
+impl Campaign {
+    /// Run every experiment, returning both raw results and the dataset.
+    pub fn run(&self, cluster: &Cluster) -> (Vec<ExperimentResult>, Dataset) {
+        let results: Vec<ExperimentResult> = self
+            .specs
+            .iter()
+            .map(|s| run_experiment(cluster, s, self.reps, self.base_seed))
+            .collect();
+        let ds = Dataset::from_results(self.app, &results);
+        (results, ds)
+    }
+}
+
+/// Sample `n` distinct settings uniformly from the paper's range.
+pub fn random_specs(app: AppId, n: usize, rng: &mut Rng) -> Vec<ExperimentSpec> {
+    let mut specs = Vec::with_capacity(n);
+    let mut seen = std::collections::HashSet::new();
+    while specs.len() < n {
+        let m = rng.range_u64(PARAM_MIN as u64, PARAM_MAX as u64 + 1) as u32;
+        let r = rng.range_u64(PARAM_MIN as u64, PARAM_MAX as u64 + 1) as u32;
+        if seen.insert((m, r)) {
+            specs.push(ExperimentSpec::new(app, m, r));
+        }
+    }
+    specs
+}
+
+/// Space-filling training settings: a jittered grid covering the range
+/// more evenly than pure uniform sampling (the paper does not specify its
+/// 20 sets; a spread design is the natural reading of "20 sets ... chosen
+/// between 5 to 40").
+pub fn spread_specs(app: AppId, n: usize, rng: &mut Rng) -> Vec<ExperimentSpec> {
+    // 5x4 (or similar) lattice over [5,40]^2, jittered by +-2.
+    let cols = (n as f64).sqrt().ceil() as usize;
+    let rows = n.div_ceil(cols);
+    let span = (PARAM_MAX - PARAM_MIN) as f64;
+    let mut specs = Vec::with_capacity(n);
+    'outer: for i in 0..rows {
+        for j in 0..cols {
+            if specs.len() >= n {
+                break 'outer;
+            }
+            let fx = if cols > 1 { j as f64 / (cols - 1) as f64 } else { 0.5 };
+            let fy = if rows > 1 { i as f64 / (rows - 1) as f64 } else { 0.5 };
+            let jitter = |rng: &mut Rng| rng.range_f64(-2.0, 2.0);
+            let m = (PARAM_MIN as f64 + fx * span + jitter(rng))
+                .round()
+                .clamp(PARAM_MIN as f64, PARAM_MAX as f64) as u32;
+            let r = (PARAM_MIN as f64 + fy * span + jitter(rng))
+                .round()
+                .clamp(PARAM_MIN as f64, PARAM_MAX as f64) as u32;
+            specs.push(ExperimentSpec::new(app, m, r));
+        }
+    }
+    specs
+}
+
+/// The paper's evaluation protocol for one app: 20 training settings and
+/// 20 random held-out test settings, 5 reps each.
+pub fn paper_campaign(app: AppId, seed: u64) -> (Campaign, Campaign) {
+    let mut rng = Rng::new(seed ^ 0xCA3F_0CA3_F0CA_3F0C);
+    let train = Campaign {
+        app,
+        specs: spread_specs(app, 20, &mut rng),
+        reps: REPS,
+        base_seed: seed,
+    };
+    // Held-out settings must be disjoint from training (prediction of
+    // *new* experiments, Fig. 2b).
+    let train_set: std::collections::HashSet<(u32, u32)> = train
+        .specs
+        .iter()
+        .map(|s| (s.num_mappers, s.num_reducers))
+        .collect();
+    let mut test_specs = Vec::new();
+    while test_specs.len() < 20 {
+        for s in random_specs(app, 20 - test_specs.len(), &mut rng) {
+            if !train_set.contains(&(s.num_mappers, s.num_reducers)) {
+                test_specs.push(s);
+            }
+        }
+    }
+    let test = Campaign {
+        app,
+        specs: test_specs,
+        reps: REPS,
+        // Different session seed: test-time runs are new executions.
+        base_seed: seed.wrapping_add(0x7E57),
+    };
+    (train, test)
+}
+
+/// Full-grid sweep for the Fig. 4 surface: every (M, R) on a step lattice.
+pub fn grid_specs(app: AppId, step: u32) -> Vec<ExperimentSpec> {
+    let mut out = Vec::new();
+    let mut m = PARAM_MIN;
+    while m <= PARAM_MAX {
+        let mut r = PARAM_MIN;
+        while r <= PARAM_MAX {
+            out.push(ExperimentSpec::new(app, m, r));
+            r += step;
+        }
+        m += step;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+
+    #[test]
+    fn paper_campaign_shape() {
+        let (train, test) = paper_campaign(AppId::WordCount, 42);
+        assert_eq!(train.specs.len(), 20);
+        assert_eq!(test.specs.len(), 20);
+        assert_eq!(train.reps, 5);
+        for s in train.specs.iter().chain(&test.specs) {
+            assert!((PARAM_MIN..=PARAM_MAX).contains(&s.num_mappers));
+            assert!((PARAM_MIN..=PARAM_MAX).contains(&s.num_reducers));
+        }
+        // Held-out settings are disjoint from training settings.
+        let train_set: std::collections::HashSet<(u32, u32)> = train
+            .specs
+            .iter()
+            .map(|s| (s.num_mappers, s.num_reducers))
+            .collect();
+        for s in &test.specs {
+            assert!(!train_set.contains(&(s.num_mappers, s.num_reducers)));
+        }
+    }
+
+    #[test]
+    fn spread_covers_corners_roughly() {
+        let mut rng = Rng::new(1);
+        let specs = spread_specs(AppId::WordCount, 20, &mut rng);
+        assert_eq!(specs.len(), 20);
+        let min_m = specs.iter().map(|s| s.num_mappers).min().unwrap();
+        let max_m = specs.iter().map(|s| s.num_mappers).max().unwrap();
+        assert!(min_m <= 10, "low corner covered, got {min_m}");
+        assert!(max_m >= 35, "high corner covered, got {max_m}");
+    }
+
+    #[test]
+    fn random_specs_distinct() {
+        forall("random specs distinct", 10, |rng| {
+            let n = rng.range_usize(1, 40);
+            let specs = random_specs(AppId::Grep, n, rng);
+            let set: std::collections::HashSet<(u32, u32)> = specs
+                .iter()
+                .map(|s| (s.num_mappers, s.num_reducers))
+                .collect();
+            assert_eq!(set.len(), n);
+        });
+    }
+
+    #[test]
+    fn grid_specs_lattice() {
+        let g = grid_specs(AppId::WordCount, 5);
+        // 5,10,...,40 -> 8 values per axis.
+        assert_eq!(g.len(), 64);
+        assert!(g.iter().any(|s| s.num_mappers == 40 && s.num_reducers == 40));
+    }
+
+    #[test]
+    fn campaign_runs_produce_dataset() {
+        let cluster = Cluster::paper_cluster();
+        let c = Campaign {
+            app: AppId::WordCount,
+            specs: vec![
+                ExperimentSpec::new(AppId::WordCount, 10, 10),
+                ExperimentSpec::new(AppId::WordCount, 20, 5),
+            ],
+            reps: 2,
+            base_seed: 3,
+        };
+        let (results, ds) = c.run(&cluster);
+        assert_eq!(results.len(), 2);
+        assert_eq!(ds.len(), 2);
+        assert!(ds.times.iter().all(|&t| t > 0.0));
+    }
+}

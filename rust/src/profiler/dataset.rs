@@ -1,0 +1,144 @@
+//! Profiled datasets: the (params, time) rows feeding the regression,
+//! with JSON persistence.
+
+use std::path::Path;
+
+use crate::apps::AppId;
+use crate::util::json::{parse, Json};
+
+use super::experiment::{ExperimentResult, ExperimentSpec};
+
+/// A set of profiled experiments for one application.
+#[derive(Clone, Debug, Default)]
+pub struct Dataset {
+    pub app_name: String,
+    /// (num_mappers, num_reducers) rows.
+    pub params: Vec<[f64; 2]>,
+    /// Mean total execution time per row, seconds.
+    pub times: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn from_results(app: AppId, results: &[ExperimentResult]) -> Dataset {
+        Dataset {
+            app_name: app.name().to_string(),
+            params: results.iter().map(|r| r.spec.params()).collect(),
+            times: results.iter().map(|r| r.mean_time_s).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    pub fn push(&mut self, spec: &ExperimentSpec, time_s: f64) {
+        self.params.push(spec.params());
+        self.times.push(time_s);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("app", Json::Str(self.app_name.clone())),
+            (
+                "params",
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|p| Json::from_f64_slice(p))
+                        .collect(),
+                ),
+            ),
+            ("times", Json::from_f64_slice(&self.times)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Dataset, String> {
+        let app_name = v.req("app")?.as_str().ok_or("app must be str")?.to_string();
+        let params = v
+            .req("params")?
+            .as_arr()
+            .ok_or("params must be array")?
+            .iter()
+            .map(|row| {
+                let xs = row.to_f64_vec()?;
+                if xs.len() != 2 {
+                    return Err(format!("param row must have 2 entries, got {}", xs.len()));
+                }
+                Ok([xs[0], xs[1]])
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let times = v.req("times")?.to_f64_vec()?;
+        if params.len() != times.len() {
+            return Err(format!(
+                "params rows {} != times rows {}",
+                params.len(),
+                times.len()
+            ));
+        }
+        Ok(Dataset { app_name, params, times })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &Path) -> Result<Dataset, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Dataset::from_json(&parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Dataset {
+        Dataset {
+            app_name: "wordcount".into(),
+            params: vec![[5.0, 10.0], [20.0, 5.0]],
+            times: vec![300.5, 250.25],
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let d = sample();
+        let j = d.to_json();
+        let back = Dataset::from_json(&j).unwrap();
+        assert_eq!(back.app_name, d.app_name);
+        assert_eq!(back.params, d.params);
+        assert_eq!(back.times, d.times);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let d = sample();
+        let path = std::env::temp_dir().join("mrtuner_test_dataset.json");
+        d.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.params, d.params);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_mismatched_lengths() {
+        let j = parse(r#"{"app":"x","params":[[1,2]],"times":[1,2]}"#).unwrap();
+        assert!(Dataset::from_json(&j).is_err());
+        let j = parse(r#"{"app":"x","params":[[1,2,3]],"times":[1]}"#).unwrap();
+        assert!(Dataset::from_json(&j).is_err());
+        let j = parse(r#"{"params":[],"times":[]}"#).unwrap();
+        assert!(Dataset::from_json(&j).is_err(), "missing app field");
+    }
+
+    #[test]
+    fn push_appends() {
+        let mut d = sample();
+        d.push(&ExperimentSpec::new(AppId::WordCount, 40, 40), 500.0);
+        assert_eq!(d.len(), 3);
+        assert_eq!(d.params[2], [40.0, 40.0]);
+    }
+}

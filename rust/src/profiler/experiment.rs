@@ -1,0 +1,143 @@
+//! One experiment: an (app, M, R) setting run `REPS` times and averaged.
+
+use crate::apps::AppId;
+use crate::cluster::Cluster;
+use crate::mr::{run_job, JobConfig};
+use crate::util::stats;
+
+/// The paper repeats every experiment five times and keeps the mean
+/// (§IV.A: "we run an experiment five times and then the mean of these
+/// total execution time values is chosen").
+pub const REPS: u32 = 5;
+
+/// An experiment setting: the paper's two studied configuration parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ExperimentSpec {
+    pub app: AppId,
+    pub num_mappers: u32,
+    pub num_reducers: u32,
+}
+
+impl ExperimentSpec {
+    pub fn new(app: AppId, m: u32, r: u32) -> ExperimentSpec {
+        ExperimentSpec { app, num_mappers: m, num_reducers: r }
+    }
+
+    /// Parameter row for the regression: (p1, p2) = (M, R).
+    pub fn params(&self) -> [f64; 2] {
+        [self.num_mappers as f64, self.num_reducers as f64]
+    }
+}
+
+/// Profiled outcome of one experiment.
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub spec: ExperimentSpec,
+    /// The training/evaluation target: mean of the rep times.
+    pub mean_time_s: f64,
+    /// Per-repetition observations (kept for variance diagnostics).
+    pub rep_times_s: Vec<f64>,
+}
+
+impl ExperimentResult {
+    pub fn rep_stddev(&self) -> f64 {
+        stats::stddev(&self.rep_times_s)
+    }
+}
+
+/// Run one experiment: `reps` simulated executions with distinct run seeds
+/// (modeling the paper's five wall-clock runs), averaged.
+///
+/// `base_seed` identifies the profiling session; each repetition derives
+/// `seed = hash(base_seed, spec, rep)` so experiments are independent and
+/// the whole campaign is reproducible.
+pub fn run_experiment(
+    cluster: &Cluster,
+    spec: &ExperimentSpec,
+    reps: u32,
+    base_seed: u64,
+) -> ExperimentResult {
+    let app = spec.app.profile();
+    let mut rep_times_s = Vec::with_capacity(reps as usize);
+    for rep in 0..reps {
+        let seed = mix(base_seed, spec, rep);
+        let config =
+            JobConfig::paper_default(spec.num_mappers, spec.num_reducers)
+                .with_seed(seed);
+        let result = run_job(cluster, &app, &config);
+        rep_times_s.push(result.total_time_s);
+    }
+    ExperimentResult {
+        spec: *spec,
+        mean_time_s: stats::mean(&rep_times_s),
+        rep_times_s,
+    }
+}
+
+fn mix(base: u64, spec: &ExperimentSpec, rep: u32) -> u64 {
+    let mut h = base ^ 0x9E37_79B9_7F4A_7C15;
+    for v in [
+        spec.app as u64,
+        spec.num_mappers as u64,
+        spec.num_reducers as u64,
+        rep as u64,
+    ] {
+        h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = h.rotate_left(23).wrapping_mul(0x94D0_49BB_1331_11EB);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_reps_averaged() {
+        let cluster = Cluster::paper_cluster();
+        let spec = ExperimentSpec::new(AppId::WordCount, 20, 5);
+        let res = run_experiment(&cluster, &spec, REPS, 42);
+        assert_eq!(res.rep_times_s.len(), 5);
+        let mean = res.rep_times_s.iter().sum::<f64>() / 5.0;
+        assert!((res.mean_time_s - mean).abs() < 1e-9);
+        // Reps differ (temporal noise) but cluster around the mean.
+        assert!(res.rep_stddev() > 0.0);
+        assert!(res.rep_stddev() < 0.2 * res.mean_time_s);
+    }
+
+    #[test]
+    fn reproducible_for_same_session_seed() {
+        let cluster = Cluster::paper_cluster();
+        let spec = ExperimentSpec::new(AppId::EximParse, 10, 10);
+        let a = run_experiment(&cluster, &spec, 3, 7);
+        let b = run_experiment(&cluster, &spec, 3, 7);
+        assert_eq!(a.rep_times_s, b.rep_times_s);
+        let c = run_experiment(&cluster, &spec, 3, 8);
+        assert_ne!(a.rep_times_s, c.rep_times_s);
+    }
+
+    #[test]
+    fn distinct_specs_get_distinct_streams() {
+        let cluster = Cluster::paper_cluster();
+        let a = run_experiment(
+            &cluster,
+            &ExperimentSpec::new(AppId::WordCount, 20, 5),
+            2,
+            1,
+        );
+        let b = run_experiment(
+            &cluster,
+            &ExperimentSpec::new(AppId::WordCount, 20, 6),
+            2,
+            1,
+        );
+        // Different settings must not share per-rep noise draws.
+        assert_ne!(a.rep_times_s[0], b.rep_times_s[0]);
+    }
+
+    #[test]
+    fn params_row() {
+        let spec = ExperimentSpec::new(AppId::Grep, 15, 30);
+        assert_eq!(spec.params(), [15.0, 30.0]);
+    }
+}

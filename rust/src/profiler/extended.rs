@@ -1,0 +1,205 @@
+//! Extended profiling — the paper's §I extension hook and its companion
+//! work [24]:
+//!
+//! * **four configuration parameters**: number of mappers, number of
+//!   reducers, input-file size and file-system (HDFS block) size;
+//! * **two modeled outputs**: total execution time (this paper) and total
+//!   CPU seconds ("CPU tick clocks", [24]).
+
+use crate::apps::AppId;
+use crate::cluster::Cluster;
+use crate::mr::config::SplitPolicy;
+use crate::mr::{run_job, JobConfig};
+use crate::util::bytes::{GB, MB};
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// A four-parameter experiment setting.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ext4Spec {
+    pub app: AppId,
+    pub num_mappers: u32,
+    pub num_reducers: u32,
+    pub input_gb: f64,
+    pub block_mb: u32,
+}
+
+/// Studied ranges (paper range for M/R; practical 2011 ranges for the
+/// rest; the paper's own setup is input 8 GB, block 64 MB).
+pub const INPUT_GB_RANGE: (f64, f64) = (1.0, 16.0);
+pub const BLOCK_MB_CHOICES: [u32; 4] = [32, 64, 128, 256];
+
+/// Per-parameter normalization scales, in raw-row order.
+pub fn scales() -> Vec<f64> {
+    vec![40.0, 40.0, INPUT_GB_RANGE.1, 256.0]
+}
+
+impl Ext4Spec {
+    /// Regression row: (M, R, input_gb, block_mb).
+    pub fn params(&self) -> Vec<f64> {
+        vec![
+            self.num_mappers as f64,
+            self.num_reducers as f64,
+            self.input_gb,
+            self.block_mb as f64,
+        ]
+    }
+
+    pub fn job_config(&self, seed: u64) -> JobConfig {
+        let mut cfg =
+            JobConfig::paper_default(self.num_mappers, self.num_reducers);
+        cfg.input_bytes = (self.input_gb * GB as f64) as u64;
+        cfg.split_policy =
+            SplitPolicy::HadoopHint { block_bytes: self.block_mb as u64 * MB };
+        cfg.with_seed(seed)
+    }
+}
+
+/// Sample `n` random settings over the 4-D range.
+pub fn random_ext4(app: AppId, n: usize, rng: &mut Rng) -> Vec<Ext4Spec> {
+    (0..n)
+        .map(|_| Ext4Spec {
+            app,
+            num_mappers: rng.range_u64(5, 41) as u32,
+            num_reducers: rng.range_u64(5, 41) as u32,
+            input_gb: (rng.range_f64(INPUT_GB_RANGE.0, INPUT_GB_RANGE.1) * 2.0)
+                .round()
+                / 2.0,
+            block_mb: *rng.choice(&BLOCK_MB_CHOICES),
+        })
+        .collect()
+}
+
+/// Profiled outcome of one extended experiment (means over `reps`).
+#[derive(Clone, Debug)]
+pub struct Ext4Result {
+    pub spec: Ext4Spec,
+    pub mean_time_s: f64,
+    pub mean_cpu_s: f64,
+}
+
+/// Run one extended experiment.
+pub fn run_ext4(
+    cluster: &Cluster,
+    spec: &Ext4Spec,
+    reps: u32,
+    base_seed: u64,
+) -> Ext4Result {
+    let profile = spec.app.profile();
+    let mut times = Vec::with_capacity(reps as usize);
+    let mut cpus = Vec::with_capacity(reps as usize);
+    for rep in 0..reps {
+        let mut h = base_seed ^ 0xe474_5f65_7874_3464;
+        for v in [
+            spec.num_mappers as u64,
+            spec.num_reducers as u64,
+            (spec.input_gb * 2.0) as u64,
+            spec.block_mb as u64,
+            rep as u64,
+        ] {
+            h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h = h.rotate_left(19).wrapping_mul(0x94D0_49BB_1331_11EB);
+        }
+        let res = run_job(cluster, &profile, &spec.job_config(h));
+        times.push(res.total_time_s);
+        cpus.push(res.counters.cpu_seconds);
+    }
+    Ext4Result {
+        spec: *spec,
+        mean_time_s: stats::mean(&times),
+        mean_cpu_s: stats::mean(&cpus),
+    }
+}
+
+/// Run a whole campaign; returns raw rows for both modeled outputs.
+pub fn run_ext4_campaign(
+    cluster: &Cluster,
+    specs: &[Ext4Spec],
+    reps: u32,
+    base_seed: u64,
+) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+    let mut rows = Vec::with_capacity(specs.len());
+    let mut times = Vec::with_capacity(specs.len());
+    let mut cpus = Vec::with_capacity(specs.len());
+    for s in specs {
+        let r = run_ext4(cluster, s, reps, base_seed);
+        rows.push(s.params());
+        times.push(r.mean_time_s);
+        cpus.push(r.mean_cpu_s);
+    }
+    (rows, times, cpus)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trip_into_config() {
+        let s = Ext4Spec {
+            app: AppId::WordCount,
+            num_mappers: 20,
+            num_reducers: 5,
+            input_gb: 4.0,
+            block_mb: 128,
+        };
+        let cfg = s.job_config(9);
+        assert_eq!(cfg.input_bytes, 4 * GB);
+        assert_eq!(
+            cfg.split_policy,
+            SplitPolicy::HadoopHint { block_bytes: 128 * MB }
+        );
+        // 4 GB / 128 MB blocks -> 32 tasks.
+        assert_eq!(cfg.map_tasks(), 32);
+        assert_eq!(s.params(), vec![20.0, 5.0, 4.0, 128.0]);
+    }
+
+    #[test]
+    fn random_specs_in_range() {
+        let mut rng = Rng::new(1);
+        for s in random_ext4(AppId::EximParse, 50, &mut rng) {
+            assert!((5..=40).contains(&s.num_mappers));
+            assert!((5..=40).contains(&s.num_reducers));
+            assert!(s.input_gb >= 1.0 && s.input_gb <= 16.0);
+            assert!(BLOCK_MB_CHOICES.contains(&s.block_mb));
+        }
+    }
+
+    #[test]
+    fn bigger_input_costs_more_time_and_cpu() {
+        let cluster = Cluster::paper_cluster();
+        let mut small = Ext4Spec {
+            app: AppId::WordCount,
+            num_mappers: 20,
+            num_reducers: 5,
+            input_gb: 2.0,
+            block_mb: 64,
+        };
+        let a = run_ext4(&cluster, &small, 3, 1);
+        small.input_gb = 8.0;
+        let b = run_ext4(&cluster, &small, 3, 1);
+        assert!(b.mean_time_s > a.mean_time_s);
+        assert!(b.mean_cpu_s > a.mean_cpu_s);
+        assert!(a.mean_cpu_s > 0.0);
+    }
+
+    #[test]
+    fn block_size_changes_task_count_and_time() {
+        let cluster = Cluster::paper_cluster();
+        let base = Ext4Spec {
+            app: AppId::WordCount,
+            num_mappers: 20,
+            num_reducers: 5,
+            input_gb: 8.0,
+            block_mb: 32,
+        };
+        let many_tasks = run_ext4(&cluster, &base, 3, 2);
+        let few = Ext4Spec { block_mb: 256, ..base };
+        let few_tasks = run_ext4(&cluster, &few, 3, 2);
+        // 256 tasks vs 32 tasks: per-task startup overhead dominates the
+        // small-block configuration.
+        assert!(many_tasks.mean_time_s != few_tasks.mean_time_s);
+        assert_eq!(base.job_config(0).map_tasks(), 256);
+        assert_eq!(few.job_config(0).map_tasks(), 32);
+    }
+}

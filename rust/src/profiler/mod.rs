@@ -1,0 +1,14 @@
+//! Profiling phase — the paper's Fig. 2a algorithm.
+//!
+//! "For each set of configuration parameters values S_j = (M_j, R_j): run
+//! φ_i five times with S_j ... assign average total execution time as the
+//! total execution time of the experiment."
+
+pub mod campaign;
+pub mod dataset;
+pub mod experiment;
+pub mod extended;
+
+pub use campaign::{paper_campaign, Campaign};
+pub use dataset::Dataset;
+pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};

@@ -1,0 +1,198 @@
+//! End-to-end validation driver (DESIGN.md §7).
+//!
+//! Exercises every layer on a real small workload and checks the paper's
+//! headline claims:
+//!
+//! 1. generate real corpus/mainlog bytes and *functionally execute*
+//!    WordCount and Exim parsing through the MapReduce engine, verifying
+//!    outputs against independently computed ground truth;
+//! 2. calibrate app profiles from the functional run;
+//! 3. profile the paper's 20-setting campaign on the simulated 4-node
+//!    cluster (5 reps, averaged — Fig. 2a);
+//! 4. fit via the AOT JAX+Pallas artifact through PJRT (or the pure-Rust
+//!    baseline when artifacts are absent) — both backends cross-checked;
+//! 5. predict 20 held-out settings and evaluate Fig. 3 / Table 1 metrics;
+//! 6. spot-check the Fig. 4 surface shape.
+//!
+//! Used by `examples/e2e_repro.rs` and `mrtuner e2e`; the run for the
+//! record is in EXPERIMENTS.md.
+
+use std::collections::HashMap;
+
+use crate::api::engine::{execute, ExecOptions};
+use crate::api::traits::HashPartitioner;
+use crate::apps::{profiles, AppId};
+use crate::model::regression::{RegressionModel, RustSolverBackend};
+use crate::model::features::NUM_FEATURES;
+use crate::model::FitBackend;
+use crate::util::bytes::fmt_secs;
+use crate::util::rng::Rng;
+
+use super::experiments;
+
+/// Outcome summary (also printed step by step).
+#[derive(Clone, Debug)]
+pub struct E2eOutcome {
+    pub wordcount_mean_err_pct: f64,
+    pub exim_mean_err_pct: f64,
+    pub backend: &'static str,
+    pub surface_min: (u32, u32),
+    pub headline_reproduced: bool,
+}
+
+pub fn run(seed: u64) -> Result<E2eOutcome, String> {
+    println!("=== mrtuner end-to-end validation (seed {seed}) ===\n");
+
+    // ---- step 1: functional execution on real bytes -------------------
+    println!("[1/6] functional MapReduce execution on generated data");
+    let mut rng = Rng::new(seed);
+    let corpus = crate::datagen::corpus::generate(&mut rng, 512 * 1024);
+    let (wc_map, wc_red, wc_comb) = AppId::WordCount.functional();
+    let wc_out = execute(
+        wc_map.as_ref(),
+        wc_red.as_ref(),
+        &corpus,
+        &ExecOptions {
+            num_reducers: 8,
+            combiner: wc_comb.as_deref(),
+            partitioner: &HashPartitioner,
+            num_splits: 16,
+        },
+    );
+    // Ground truth via a plain hash map.
+    let mut truth: HashMap<&str, u64> = HashMap::new();
+    for w in corpus.split_whitespace() {
+        *truth.entry(w).or_insert(0) += 1;
+    }
+    let the = wc_out
+        .all_pairs()
+        .into_iter()
+        .find(|p| p.key == "the")
+        .ok_or("wordcount lost 'the'")?;
+    if the.value != truth["the"].to_string() {
+        return Err(format!(
+            "wordcount mismatch for 'the': {} vs {}",
+            the.value, truth["the"]
+        ));
+    }
+    if wc_out.output_records != truth.len() as u64 {
+        return Err("wordcount vocabulary size mismatch".into());
+    }
+    println!(
+        "      wordcount: {} words, {} distinct, counts verified",
+        wc_out.map_output_records, wc_out.output_records
+    );
+
+    let mainlog = crate::datagen::exim_log::generate(&mut rng, 512 * 1024);
+    let (ex_map, ex_red, _) = AppId::EximParse.functional();
+    let ex_out = execute(
+        ex_map.as_ref(),
+        ex_red.as_ref(),
+        &mainlog,
+        &ExecOptions {
+            num_reducers: 8,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 16,
+        },
+    );
+    let mut ids = std::collections::HashSet::new();
+    for line in mainlog.lines() {
+        if let Some(id) = crate::apps::exim::message_id(line) {
+            ids.insert(id);
+        }
+    }
+    if ex_out.output_records != ids.len() as u64 {
+        return Err(format!(
+            "exim transaction count mismatch: {} vs {}",
+            ex_out.output_records,
+            ids.len()
+        ));
+    }
+    println!(
+        "      exim: {} log lines -> {} transactions, grouping verified",
+        ex_out.input_records, ex_out.output_records
+    );
+
+    // ---- step 2: profile calibration ----------------------------------
+    println!("[2/6] profile calibration from functional runs");
+    let (wc_cal, wc_drift) = profiles::calibrate(&profiles::wordcount(), &wc_out);
+    let (ex_cal, ex_drift) = profiles::calibrate(&profiles::exim(), &ex_out);
+    println!(
+        "      wordcount selectivity {:.3} (drift {:.2}), exim {:.3} (drift {:.2})",
+        wc_cal.selectivity, wc_drift, ex_cal.selectivity, ex_drift
+    );
+
+    // ---- step 3+4+5: the paper's pipeline -----------------------------
+    println!("[3/6] profiling campaigns (20 settings x 5 reps, simulated 4-node cluster)");
+    println!("[4/6] fit via AOT artifact (PJRT) with pure-Rust cross-check");
+    println!("[5/6] predict 20 held-out settings per app");
+    let wc = experiments::fig3(AppId::WordCount, seed);
+    let ex = experiments::fig3(AppId::EximParse, seed);
+
+    // Cross-check the production backend against the baseline solver.
+    let mut baseline = RustSolverBackend;
+    let weights = vec![1.0; wc.train.len()];
+    let check = baseline.fit(&wc.train.params, &wc.train.times, &weights)?;
+    for i in 0..NUM_FEATURES {
+        let scale = check[i].abs().max(1.0);
+        if (check[i] - wc.model.coeffs[i]).abs() / scale > 1e-6 {
+            return Err(format!(
+                "backend disagreement on coeff {i}: {} vs {}",
+                wc.model.coeffs[i], check[i]
+            ));
+        }
+    }
+    for d in [&wc, &ex] {
+        println!(
+            "      {:<10} mean err {:.2}%  variance {:.2}%  max {:.2}%  (backend {})",
+            d.app.name(),
+            d.errors.mean_pct(),
+            d.errors.variance_pct(),
+            d.errors.max_pct(),
+            d.backend
+        );
+    }
+
+    // ---- step 6: surface sanity ---------------------------------------
+    println!("[6/6] Fig. 4 surface spot-check (step-5 lattice, 3 reps)");
+    let surf = experiments::fig4(AppId::WordCount, 5, 3, seed);
+    let (bm, br) = surf.argmin();
+    println!(
+        "      wordcount minimum at M={bm}, R={br} (paper: 20, 5), mean {}",
+        fmt_secs(surf.mean_time())
+    );
+
+    let headline = wc.errors.mean_pct() < 5.0 && ex.errors.mean_pct() < 5.0;
+    println!(
+        "\nheadline (mean prediction error < 5% for both apps): {}",
+        if headline { "REPRODUCED" } else { "NOT REPRODUCED" }
+    );
+    // Secondary shape claims.
+    println!(
+        "exim error > wordcount error (streaming noise): {}",
+        if ex.errors.mean_pct() > wc.errors.mean_pct() { "yes" } else { "no (within noise)" }
+    );
+
+    Ok(E2eOutcome {
+        wordcount_mean_err_pct: wc.errors.mean_pct(),
+        exim_mean_err_pct: ex.errors.mean_pct(),
+        backend: wc.backend,
+        surface_min: (bm, br),
+        headline_reproduced: headline,
+    })
+}
+
+// Save a fitted model for later `mrtuner predict` convenience.
+pub fn save_models(seed: u64, dir: &std::path::Path) -> Result<(), String> {
+    let cluster = crate::cluster::Cluster::paper_cluster();
+    let (mut backend, _) = experiments::default_backend();
+    for app in AppId::paper_apps() {
+        let (train, _) = crate::profiler::paper_campaign(app, seed);
+        let (_, ds) = train.run(&cluster);
+        let model = RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
+        let path = dir.join(format!("{}_model.json", app.name()));
+        model.save(&path).map_err(|e| e.to_string())?;
+    }
+    Ok(())
+}

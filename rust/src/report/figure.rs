@@ -1,0 +1,138 @@
+//! ASCII figures (bar strips, surfaces) and CSV emission.
+
+/// Render paired series (actual vs predicted) as an ASCII strip chart —
+/// the shape of the paper's Fig. 3a/3c.
+pub fn strip_chart(
+    title: &str,
+    labels: &[String],
+    actual: &[f64],
+    predicted: &[f64],
+    width: usize,
+) -> String {
+    assert_eq!(actual.len(), predicted.len());
+    let max = actual
+        .iter()
+        .chain(predicted)
+        .cloned()
+        .fold(f64::MIN_POSITIVE, f64::max);
+    let mut out = format!("{title}\n");
+    let bar = |v: f64| {
+        let n = ((v / max) * width as f64).round() as usize;
+        "#".repeat(n.min(width))
+    };
+    for i in 0..actual.len() {
+        let label = labels.get(i).map(String::as_str).unwrap_or("");
+        out.push_str(&format!(
+            "{label:>10} actual    {:>8.1}s |{}\n",
+            actual[i],
+            bar(actual[i])
+        ));
+        out.push_str(&format!(
+            "{:>10} predicted {:>8.1}s |{}\n",
+            "",
+            predicted[i],
+            bar(predicted[i])
+        ));
+    }
+    out
+}
+
+/// Render an error-percent series — the shape of Fig. 3b/3d.
+pub fn error_chart(title: &str, labels: &[String], errors_pct: &[f64]) -> String {
+    let mut out = format!("{title}\n");
+    for (i, &e) in errors_pct.iter().enumerate() {
+        let label = labels.get(i).map(String::as_str).unwrap_or("");
+        let n = (e * 4.0).round() as usize;
+        out.push_str(&format!("{label:>10} {e:>6.2}% |{}\n", "*".repeat(n.min(120))));
+    }
+    out
+}
+
+/// Render a (M, R) -> value surface as an ASCII heatmap grid — Fig. 4.
+pub fn surface(
+    title: &str,
+    ms: &[u32],
+    rs: &[u32],
+    values: &[f64], // row-major [ms.len() * rs.len()]
+) -> String {
+    assert_eq!(values.len(), ms.len() * rs.len());
+    let mut out = format!("{title}\n      ");
+    for r in rs {
+        out.push_str(&format!("R={r:<7}"));
+    }
+    out.push('\n');
+    for (i, m) in ms.iter().enumerate() {
+        out.push_str(&format!("M={m:<4}"));
+        for j in 0..rs.len() {
+            out.push_str(&format!("{:>8.1}", values[i * rs.len() + j]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Write series as CSV (header + rows).  Columns must be equal length.
+pub fn csv(header: &[&str], columns: &[&[f64]]) -> String {
+    assert!(!columns.is_empty());
+    let rows = columns[0].len();
+    assert!(columns.iter().all(|c| c.len() == rows), "ragged columns");
+    let mut out = header.join(",");
+    out.push('\n');
+    for i in 0..rows {
+        let row: Vec<String> = columns.iter().map(|c| format!("{}", c[i])).collect();
+        out.push_str(&row.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_chart_renders_both_series() {
+        let s = strip_chart(
+            "fig3a",
+            &["e1".into()],
+            &[100.0],
+            &[95.0],
+            20,
+        );
+        assert!(s.contains("actual"));
+        assert!(s.contains("predicted"));
+        assert!(s.contains("100.0s"));
+    }
+
+    #[test]
+    fn surface_layout() {
+        let s = surface("fig4", &[5, 10], &[5, 40], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(s.contains("M=5"));
+        assert!(s.contains("R=40"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn csv_round_shape() {
+        let s = csv(&["a", "b"], &[&[1.0, 2.0], &[3.0, 4.0]]);
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines, vec!["a,b", "1,3", "2,4"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn csv_rejects_ragged() {
+        csv(&["a", "b"], &[&[1.0], &[1.0, 2.0]]);
+    }
+
+    #[test]
+    fn error_chart_scales_stars() {
+        let s = error_chart("err", &["x".into(), "y".into()], &[1.0, 5.0]);
+        let stars: Vec<usize> = s
+            .lines()
+            .skip(1)
+            .map(|l| l.matches('*').count())
+            .collect();
+        assert!(stars[1] > stars[0]);
+    }
+}

@@ -1,0 +1,14 @@
+//! Regeneration of the paper's evaluation artifacts.
+//!
+//! [`experiments`] runs the full pipelines behind Fig. 3, Fig. 4 and
+//! Table 1; [`table`] and [`figure`] render them as ASCII and CSV.  The
+//! CLI (`mrtuner fig3|fig4|table1`) and the benches
+//! (`rust/benches/fig*_*.rs`) both call into this module, so the printed
+//! rows are identical no matter the entry point.
+
+pub mod e2e;
+pub mod experiments;
+pub mod figure;
+pub mod table;
+
+pub use experiments::{fig3, fig4, table1, Fig3Data, Fig4Data, Table1Row};

@@ -1,0 +1,75 @@
+//! ASCII table renderer.
+
+/// Render rows as a boxed ASCII table; the first row is the header.
+pub fn render(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let sep = |c: char| -> String {
+        let mut s = String::from("+");
+        for w in &widths {
+            s.push_str(&c.to_string().repeat(w + 2));
+            s.push('+');
+        }
+        s.push('\n');
+        s
+    };
+    let mut out = sep('-');
+    for (ri, row) in rows.iter().enumerate() {
+        out.push('|');
+        for (i, w) in widths.iter().enumerate() {
+            let cell = row.get(i).map(String::as_str).unwrap_or("");
+            out.push_str(&format!(" {cell:>w$} |", w = w));
+        }
+        out.push('\n');
+        if ri == 0 {
+            out.push_str(&sep('='));
+        }
+    }
+    out.push_str(&sep('-'));
+    out
+}
+
+/// Convenience: stringify a float with fixed decimals.
+pub fn f(v: f64, decimals: usize) -> String {
+    format!("{v:.decimals$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let t = render(&[
+            vec!["app".into(), "mean".into()],
+            vec!["wordcount".into(), f(0.92, 2), "extra".into()],
+        ]);
+        assert!(t.contains("| wordcount |"));
+        assert!(t.contains("0.92"));
+        assert!(t.contains("===")); // header separator
+        // Ragged rows are padded, not dropped.
+        assert!(t.contains("extra"));
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        assert_eq!(render(&[]), "");
+    }
+
+    #[test]
+    fn alignment_right_justified() {
+        let t = render(&[
+            vec!["x".into(), "value".into()],
+            vec!["a".into(), "1".into()],
+        ]);
+        assert!(t.contains("|     1 |"), "{t}");
+    }
+}

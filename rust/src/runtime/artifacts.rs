@@ -1,0 +1,162 @@
+//! Artifact discovery and manifest validation.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) records
+//! the shapes and constants the artifacts were lowered with.  The runtime
+//! refuses to run against artifacts whose constants disagree with the Rust
+//! mirror in [`crate::model::features`] — catching drift between the two
+//! sides at startup instead of as silent numerical garbage.
+
+use std::path::{Path, PathBuf};
+
+use crate::model::features::{NUM_FEATURES, PARAM_SCALE};
+use crate::util::json::{parse, Json};
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub num_features: usize,
+    pub param_scale: f64,
+    pub fit_rows: usize,
+    pub predict_rows: usize,
+    pub ridge_rel: f64,
+    pub fit_path: PathBuf,
+    pub predict_path: PathBuf,
+}
+
+impl Manifest {
+    pub fn parse_json(dir: &Path, v: &Json) -> Result<Manifest, String> {
+        let req_u = |k: &str| -> Result<usize, String> {
+            Ok(v.req(k)?.as_u64().ok_or_else(|| format!("{k} must be int"))? as usize)
+        };
+        let arts = v.req("artifacts")?;
+        let file = |k: &str| -> Result<PathBuf, String> {
+            Ok(dir.join(
+                arts.req(k)?.as_str().ok_or_else(|| format!("{k} must be str"))?,
+            ))
+        };
+        let m = Manifest {
+            num_features: req_u("num_features")?,
+            param_scale: v.req("param_scale")?.as_f64().ok_or("param_scale")?,
+            fit_rows: req_u("fit_rows")?,
+            predict_rows: req_u("predict_rows")?,
+            ridge_rel: v.req("ridge_rel")?.as_f64().ok_or("ridge_rel")?,
+            fit_path: file("fit")?,
+            predict_path: file("predict")?,
+        };
+        let dtype = v.req("dtype")?.as_str().ok_or("dtype")?;
+        if dtype != "f64" {
+            return Err(format!("artifacts must be f64, got {dtype}"));
+        }
+        Ok(m)
+    }
+
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        let m = Manifest::parse_json(dir, &parse(&text)?)?;
+        m.check_compatible()?;
+        for p in [&m.fit_path, &m.predict_path] {
+            if !p.exists() {
+                return Err(format!("missing artifact {} (run `make artifacts`)", p.display()));
+            }
+        }
+        Ok(m)
+    }
+
+    /// Verify the Python-side constants match the Rust mirrors.
+    pub fn check_compatible(&self) -> Result<(), String> {
+        if self.num_features != NUM_FEATURES {
+            return Err(format!(
+                "feature-count drift: artifacts {} vs rust {NUM_FEATURES}",
+                self.num_features
+            ));
+        }
+        if (self.param_scale - PARAM_SCALE).abs() > 1e-12 {
+            return Err(format!(
+                "param-scale drift: artifacts {} vs rust {PARAM_SCALE}",
+                self.param_scale
+            ));
+        }
+        if self.fit_rows == 0 || self.predict_rows == 0 {
+            return Err("degenerate artifact shapes".into());
+        }
+        Ok(())
+    }
+}
+
+/// Locate the artifacts directory: `$MRTUNER_ARTIFACTS`, else `artifacts/`
+/// relative to the workspace root (where `make artifacts` puts it).
+pub fn default_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("MRTUNER_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    // Walk up from the executable-relative CWD to find `artifacts/`.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json(features: u64, scale: f64) -> Json {
+        parse(&format!(
+            r#"{{"num_features":{features},"param_scale":{scale},"fit_rows":64,
+                "predict_rows":64,"ridge_rel":1e-9,"dtype":"f64",
+                "artifacts":{{"fit":"fit.hlo.txt","predict":"predict.hlo.txt"}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse_json(Path::new("/x"), &sample_json(7, 40.0)).unwrap();
+        assert_eq!(m.num_features, 7);
+        assert_eq!(m.fit_rows, 64);
+        assert_eq!(m.fit_path, Path::new("/x/fit.hlo.txt"));
+        m.check_compatible().unwrap();
+    }
+
+    #[test]
+    fn rejects_feature_drift() {
+        let m = Manifest::parse_json(Path::new("/x"), &sample_json(9, 40.0)).unwrap();
+        assert!(m.check_compatible().unwrap_err().contains("feature-count drift"));
+    }
+
+    #[test]
+    fn rejects_scale_drift() {
+        let m = Manifest::parse_json(Path::new("/x"), &sample_json(7, 32.0)).unwrap();
+        assert!(m.check_compatible().unwrap_err().contains("param-scale drift"));
+    }
+
+    #[test]
+    fn rejects_non_f64() {
+        let j = parse(
+            r#"{"num_features":7,"param_scale":40,"fit_rows":64,"predict_rows":64,
+                "ridge_rel":1e-9,"dtype":"f32",
+                "artifacts":{"fit":"a","predict":"b"}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::parse_json(Path::new("/x"), &j).is_err());
+    }
+
+    #[test]
+    fn load_real_artifacts_if_built() {
+        let dir = default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).expect("built artifacts must validate");
+            assert_eq!(m.num_features, NUM_FEATURES);
+            assert!(m.fit_path.exists());
+        }
+    }
+}

@@ -1,0 +1,103 @@
+//! [`crate::model::FitBackend`] implementation over the PJRT runtime:
+//! padding, weighting, and batch-chunking around the fixed AOT shapes.
+
+use anyhow::Result;
+
+use crate::model::features::NUM_FEATURES;
+use crate::model::regression::FitBackend;
+
+use super::pjrt::XlaRuntime;
+
+/// Production fitting/prediction backend: executes the AOT artifacts.
+pub struct XlaBackend {
+    pub runtime: XlaRuntime,
+}
+
+impl XlaBackend {
+    pub fn new(runtime: XlaRuntime) -> XlaBackend {
+        XlaBackend { runtime }
+    }
+
+    pub fn load_default() -> Result<XlaBackend> {
+        Ok(XlaBackend::new(XlaRuntime::load_default()?))
+    }
+
+    /// Pad a training set to the artifact's row count.  Rows beyond the
+    /// live data get weight 0, which the weighted Gram kernel nullifies
+    /// exactly (property-tested on the Python side and cross-checked in
+    /// `rust/tests/`).
+    fn pad_fit(
+        &self,
+        params: &[[f64; 2]],
+        times: &[f64],
+        weights: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>), String> {
+        let rows = self.runtime.manifest.fit_rows;
+        if params.len() > rows {
+            return Err(format!(
+                "training set of {} rows exceeds the artifact capacity {rows}; \
+                 re-lower with a larger FIT_ROWS or chunk the campaign",
+                params.len()
+            ));
+        }
+        let mut p = vec![0.0; rows * 2];
+        let mut t = vec![0.0; rows];
+        let mut w = vec![0.0; rows];
+        for (i, row) in params.iter().enumerate() {
+            p[2 * i] = row[0];
+            p[2 * i + 1] = row[1];
+            t[i] = times[i];
+            w[i] = weights[i];
+        }
+        Ok((p, t, w))
+    }
+}
+
+impl FitBackend for XlaBackend {
+    fn fit(
+        &mut self,
+        params: &[[f64; 2]],
+        times: &[f64],
+        weights: &[f64],
+    ) -> Result<[f64; NUM_FEATURES], String> {
+        if params.len() != times.len() || params.len() != weights.len() {
+            return Err("params/times/weights length mismatch".into());
+        }
+        if weights.iter().all(|&w| w == 0.0) {
+            return Err("all-zero weights".into());
+        }
+        let (p, t, w) = self.pad_fit(params, times, weights)?;
+        self.runtime
+            .fit_padded(&p, &t, &w)
+            .map_err(|e| format!("{e:#}"))
+    }
+
+    /// Batched prediction through the predict artifact, chunked to the
+    /// fixed batch size.  Padding rows are zeros; their outputs are
+    /// sliced away.
+    fn predict(
+        &mut self,
+        coeffs: &[f64; NUM_FEATURES],
+        params: &[[f64; 2]],
+    ) -> Result<Vec<f64>, String> {
+        let rows = self.runtime.manifest.predict_rows;
+        let mut out = Vec::with_capacity(params.len());
+        for chunk in params.chunks(rows) {
+            let mut p = vec![0.0; rows * 2];
+            for (i, row) in chunk.iter().enumerate() {
+                p[2 * i] = row[0];
+                p[2 * i + 1] = row[1];
+            }
+            let preds = self
+                .runtime
+                .predict_padded(coeffs, &p)
+                .map_err(|e| format!("{e:#}"))?;
+            out.extend_from_slice(&preds[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+}

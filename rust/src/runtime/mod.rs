@@ -1,0 +1,15 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX+Pallas artifacts.
+//!
+//! The production path of the three-layer architecture: `make artifacts`
+//! lowers the L2 JAX model (which calls the L1 Pallas kernels) to HLO
+//! *text* once at build time; this module loads those files, compiles them
+//! on the PJRT CPU client, and executes them from Rust with f64 literals.
+//! Python never runs at request time.
+
+pub mod artifacts;
+pub mod backend;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use backend::XlaBackend;
+pub use pjrt::XlaRuntime;

@@ -1,0 +1,134 @@
+//! The PJRT executor: compile-once, execute-many of the HLO artifacts.
+//!
+//! Follows the pattern validated in `/opt/xla-example/load_hlo`: HLO text
+//! -> `HloModuleProto::from_text_file` -> `XlaComputation` -> compile on
+//! the CPU PJRT client -> execute with `Literal` inputs.  Artifacts are
+//! lowered with `return_tuple=True`, so results unwrap via `to_tuple1`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::features::NUM_FEATURES;
+
+use super::artifacts::{default_dir, Manifest};
+
+/// Loaded runtime: PJRT client plus the two compiled executables.
+pub struct XlaRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    fit_exe: xla::PjRtLoadedExecutable,
+    predict_exe: xla::PjRtLoadedExecutable,
+    /// Executions served (perf counter for the coordinator's metrics).
+    pub fit_calls: std::cell::Cell<u64>,
+    pub predict_calls: std::cell::Cell<u64>,
+}
+
+impl XlaRuntime {
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<XlaRuntime> {
+        Self::load(&default_dir())
+    }
+
+    /// Load and compile both artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<XlaRuntime> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let fit_exe = compile(&client, &manifest.fit_path)?;
+        let predict_exe = compile(&client, &manifest.predict_path)?;
+        Ok(XlaRuntime {
+            manifest,
+            client,
+            fit_exe,
+            predict_exe,
+            fit_calls: std::cell::Cell::new(0),
+            predict_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the fit artifact on an already-padded system.
+    ///
+    /// All slices must have exactly the manifest shapes
+    /// (`fit_rows` rows); use [`super::backend::XlaBackend`] for the
+    /// pad-and-weight convenience layer.
+    pub fn fit_padded(
+        &self,
+        params: &[f64], // fit_rows * 2, row-major
+        times: &[f64],  // fit_rows
+        weights: &[f64],
+    ) -> Result<[f64; NUM_FEATURES]> {
+        let rows = self.manifest.fit_rows;
+        anyhow::ensure!(params.len() == rows * 2, "params must be {rows}x2");
+        anyhow::ensure!(times.len() == rows, "times must be len {rows}");
+        anyhow::ensure!(weights.len() == rows, "weights must be len {rows}");
+        let p = xla::Literal::vec1(params).reshape(&[rows as i64, 2])?;
+        let t = xla::Literal::vec1(times);
+        let w = xla::Literal::vec1(weights);
+        let result = self.fit_exe.execute::<xla::Literal>(&[p, t, w])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f64>()?;
+        anyhow::ensure!(
+            v.len() == NUM_FEATURES,
+            "fit artifact returned {} values",
+            v.len()
+        );
+        self.fit_calls.set(self.fit_calls.get() + 1);
+        let mut coeffs = [0.0; NUM_FEATURES];
+        coeffs.copy_from_slice(&v);
+        Ok(coeffs)
+    }
+
+    /// Execute the predict artifact on an already-padded batch.
+    pub fn predict_padded(
+        &self,
+        coeffs: &[f64; NUM_FEATURES],
+        params: &[f64], // predict_rows * 2, row-major
+    ) -> Result<Vec<f64>> {
+        let rows = self.manifest.predict_rows;
+        anyhow::ensure!(params.len() == rows * 2, "params must be {rows}x2");
+        let c = xla::Literal::vec1(coeffs.as_slice());
+        let p = xla::Literal::vec1(params).reshape(&[rows as i64, 2])?;
+        let result = self.predict_exe.execute::<xla::Literal>(&[c, p])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f64>()?;
+        anyhow::ensure!(v.len() == rows, "predict artifact returned {}", v.len());
+        self.predict_calls.set(self.predict_calls.get() + 1);
+        Ok(v)
+    }
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compile {}", path.display()))
+}
+
+// NOTE: runtime tests that need built artifacts live in
+// `rust/tests/runtime_integration.rs`; unit tests here only cover pieces
+// that work without artifacts.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_missing_dir_fails_cleanly() {
+        let err = match XlaRuntime::load(Path::new("/nonexistent-artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("load must fail without artifacts"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Event queue with deterministic ordering.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::time::SimTime;
+
+/// An event scheduled at `time`; `seq` breaks ties FIFO so simulation
+/// results do not depend on heap internals.
+#[derive(Clone, Debug)]
+pub struct Scheduled<E> {
+    pub time: SimTime,
+    pub seq: u64,
+    pub event: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap behaviour inside BinaryHeap (max-heap).
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// The simulation event queue.
+#[derive(Debug)]
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    next_seq: u64,
+    now: SimTime,
+    popped: u64,
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0, now: SimTime::ZERO, popped: 0 }
+    }
+
+    /// Current simulated time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events processed so far (perf counter).
+    pub fn popped(&self) -> u64 {
+        self.popped
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `event` at absolute time `at`.  Scheduling in the past
+    /// (before `now`) is a simulation bug and panics.
+    pub fn push_at(&mut self, at: SimTime, event: E) {
+        assert!(
+            at >= self.now,
+            "event scheduled in the past: {at:?} < now {:?}",
+            self.now
+        );
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Scheduled { time: at, seq, event });
+    }
+
+    /// Schedule `event` after a delay from now.
+    pub fn push_after(&mut self, delay: SimTime, event: E) {
+        self.push_at(self.now + delay, event);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        let s = self.heap.pop()?;
+        debug_assert!(s.time >= self.now);
+        self.now = s.time;
+        self.popped += 1;
+        Some((s.time, s.event))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime(30), "c");
+        q.push_at(SimTime(10), "a");
+        q.push_at(SimTime(20), "b");
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push_at(SimTime(5), i);
+        }
+        let order: Vec<_> = std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime(10), ());
+        q.pop();
+        assert_eq!(q.now(), SimTime(10));
+        q.push_after(SimTime(5), ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime(15));
+        assert_eq!(q.popped(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled in the past")]
+    fn rejects_past_events() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime(10), ());
+        q.pop();
+        q.push_at(SimTime(5), ());
+    }
+
+    #[test]
+    fn prop_random_schedules_pop_sorted() {
+        forall("eventqueue sorted", 50, |rng: &mut Rng| {
+            let mut q = EventQueue::new();
+            let n = rng.range_usize(1, 200);
+            for i in 0..n {
+                q.push_at(SimTime(rng.range_u64(0, 1000)), i);
+            }
+            let mut last = SimTime::ZERO;
+            let mut count = 0;
+            while let Some((t, _)) = q.pop() {
+                assert!(t >= last);
+                last = t;
+                count += 1;
+            }
+            assert_eq!(count, n);
+        });
+    }
+
+    #[test]
+    fn prop_equal_times_preserve_insertion_order() {
+        forall("fifo ties", 30, |rng: &mut Rng| {
+            let mut q = EventQueue::new();
+            let t = SimTime(rng.range_u64(0, 50));
+            let n = rng.range_usize(2, 50);
+            for i in 0..n {
+                q.push_at(t, i);
+            }
+            let order: Vec<_> =
+                std::iter::from_fn(|| q.pop()).map(|(_, e)| e).collect();
+            assert_eq!(order, (0..n).collect::<Vec<_>>());
+        });
+    }
+}

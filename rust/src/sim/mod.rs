@@ -1,0 +1,12 @@
+//! Discrete-event simulation core.
+//!
+//! A minimal but genuine DES kernel: a virtual clock in integer
+//! microseconds (exact ordering, no float ties) and a binary-heap event
+//! queue with deterministic FIFO tie-breaking.  The MapReduce framework
+//! (`crate::mr`) drives all task lifecycle through this queue.
+
+pub mod engine;
+pub mod time;
+
+pub use engine::{EventQueue, Scheduled};
+pub use time::SimTime;

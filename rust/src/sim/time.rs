@@ -1,0 +1,116 @@
+//! Simulated time as integer microseconds.
+//!
+//! Integer time makes event ordering exact and platform-independent —
+//! float accumulation would make `(seed, config) -> makespan` fragile
+//! across optimization levels.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time (microseconds since simulation start).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    /// Construct from (possibly fractional) seconds; sub-microsecond
+    /// amounts round to nearest.  Negative durations clamp to zero.
+    pub fn from_secs(s: f64) -> SimTime {
+        if s <= 0.0 {
+            return SimTime(0);
+        }
+        SimTime((s * 1e6).round() as u64)
+    }
+
+    pub fn from_micros(us: u64) -> SimTime {
+        SimTime(us)
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    pub fn max(self, other: SimTime) -> SimTime {
+        SimTime(self.0.max(other.0))
+    }
+
+    pub fn min(self, other: SimTime) -> SimTime {
+        SimTime(self.0.min(other.0))
+    }
+
+    /// Saturating difference (durations are non-negative).
+    pub fn since(self, earlier: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(earlier.0))
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign for SimTime {
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+
+impl Sub for SimTime {
+    type Output = SimTime;
+    fn sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", crate::util::bytes::fmt_secs(self.as_secs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secs_round_trip() {
+        let t = SimTime::from_secs(1.5);
+        assert_eq!(t.as_micros(), 1_500_000);
+        assert!((t.as_secs() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_clamps() {
+        assert_eq!(SimTime::from_secs(-3.0), SimTime::ZERO);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = SimTime::from_micros(10);
+        let b = SimTime::from_micros(4);
+        assert_eq!(a + b, SimTime::from_micros(14));
+        assert_eq!(a - b, SimTime::from_micros(6));
+        assert_eq!(b - a, SimTime::ZERO); // saturating
+        assert_eq!(a.max(b), a);
+        assert_eq!(a.min(b), b);
+        assert_eq!(a.since(b), SimTime::from_micros(6));
+    }
+
+    #[test]
+    fn ordering_is_exact() {
+        assert!(SimTime(1) < SimTime(2));
+        assert_eq!(SimTime(5).max(SimTime(5)), SimTime(5));
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(SimTime::from_secs(75.0).to_string(), "1m15s");
+    }
+}

@@ -1,0 +1,108 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! `cargo bench` targets are built with `harness = false` and drive this
+//! kit: warmup + timed iterations, robust summary statistics, and a
+//! uniform output format the perf pass (EXPERIMENTS.md §Perf) records.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.mean_s
+    }
+}
+
+fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` for `warmup` unmeasured plus `iters` measured iterations and
+/// print one summary line.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let st = BenchStats {
+        name: name.to_string(),
+        iters,
+        mean_s: stats::mean(&samples),
+        stddev_s: stats::stddev(&samples),
+        min_s: stats::min(&samples),
+        p50_s: stats::percentile(&samples, 50.0),
+        p99_s: stats::percentile(&samples, 99.0),
+    };
+    println!(
+        "bench {:<44} {:>10}/iter  (p50 {:>10}, p99 {:>10}, min {:>10}, n={})",
+        st.name,
+        fmt_t(st.mean_s),
+        fmt_t(st.p50_s),
+        fmt_t(st.p99_s),
+        fmt_t(st.min_s),
+        st.iters
+    );
+    st
+}
+
+/// Print a section header (keeps bench output greppable).
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print a labeled scalar result (for report-style benches that check
+/// reproduction quality rather than time).
+pub fn report(label: &str, value: impl std::fmt::Display) {
+    println!("result {label:<50} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_requested_iterations() {
+        let mut n = 0u32;
+        let st = bench("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7); // warmup + iters
+        assert_eq!(st.iters, 5);
+        assert!(st.mean_s >= 0.0);
+        assert!(st.min_s <= st.p50_s);
+        assert!(st.p50_s <= st.p99_s + 1e-12);
+    }
+
+    #[test]
+    fn throughput_scales() {
+        let st = bench("sleepless", 0, 3, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(st.throughput(1000.0) > 0.0);
+    }
+}

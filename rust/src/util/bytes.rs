@@ -1,0 +1,54 @@
+//! Byte-size constants and formatting.
+
+pub const KB: u64 = 1 << 10;
+pub const MB: u64 = 1 << 20;
+pub const GB: u64 = 1 << 30;
+
+/// Render a byte count in the most natural unit ("8.0 GB", "640.0 MB").
+pub fn fmt_bytes(b: u64) -> String {
+    let bf = b as f64;
+    if b >= GB {
+        format!("{:.1} GB", bf / GB as f64)
+    } else if b >= MB {
+        format!("{:.1} MB", bf / MB as f64)
+    } else if b >= KB {
+        format!("{:.1} KB", bf / KB as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Render seconds as "1h02m03s" / "4m05s" / "12.3s".
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        let h = (s / 3600.0).floor();
+        let m = ((s - h * 3600.0) / 60.0).floor();
+        let sec = s - h * 3600.0 - m * 60.0;
+        format!("{h:.0}h{m:02.0}m{sec:02.0}s")
+    } else if s >= 60.0 {
+        let m = (s / 60.0).floor();
+        format!("{m:.0}m{:02.0}s", s - m * 60.0)
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats_bytes() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2 * KB), "2.0 KB");
+        assert_eq!(fmt_bytes(8 * GB), "8.0 GB");
+        assert_eq!(fmt_bytes(1536 * MB), "1.5 GB");
+    }
+
+    #[test]
+    fn formats_secs() {
+        assert_eq!(fmt_secs(12.34), "12.3s");
+        assert_eq!(fmt_secs(65.0), "1m05s");
+        assert_eq!(fmt_secs(3723.0), "1h02m03s");
+    }
+}

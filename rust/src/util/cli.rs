@@ -1,0 +1,152 @@
+//! Tiny command-line parser: `binary SUBCOMMAND --flag value --switch`.
+//!
+//! Hand-rolled because no argument-parsing crate is available offline.
+//! Unknown flags are an error (catches typos in experiment scripts).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        if i < argv.len() && !argv[i].starts_with("--") {
+            out.subcommand = Some(argv[i].clone());
+            i += 1;
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            let name = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{a}'"))?;
+            if name.is_empty() {
+                return Err("empty flag name".into());
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                out.flags.insert(name.to_string(), argv[i + 1].clone());
+                i += 1;
+            } else {
+                out.switches.push(name.to_string());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    fn mark(&self, name: &str) {
+        self.consumed.borrow_mut().push(name.to_string());
+    }
+
+    pub fn str_opt(&self, name: &str) -> Option<String> {
+        self.mark(name);
+        self.flags.get(name).cloned()
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.str_opt(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: bad integer '{s}'")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.str_opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: bad number '{s}'")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.mark(name);
+        self.switches.iter().any(|s| s == name)
+    }
+
+    /// Error on any flag/switch never consumed by the subcommand.
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.switches.iter().map(|s| s.as_str()))
+            .filter(|n| !seen.iter().any(|s| s == n))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flag(s): {}", unknown.join(", ")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(&argv(&[
+            "profile", "--app", "wordcount", "--reps=5", "--verbose",
+        ]))
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("profile"));
+        assert_eq!(a.str_opt("app").as_deref(), Some("wordcount"));
+        assert_eq!(a.u64_or("reps", 1).unwrap(), 5);
+        assert!(a.switch("verbose"));
+        assert!(!a.switch("quiet"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["fit"])).unwrap();
+        assert_eq!(a.u64_or("seed", 42).unwrap(), 42);
+        assert_eq!(a.f64_or("noise", 0.1).unwrap(), 0.1);
+        assert_eq!(a.str_or("app", "wordcount"), "wordcount");
+    }
+
+    #[test]
+    fn rejects_bad_values_and_unknown() {
+        let a = Args::parse(&argv(&["x", "--n", "abc"])).unwrap();
+        assert!(a.u64_or("n", 0).is_err());
+        let b = Args::parse(&argv(&["x", "--typo", "1"])).unwrap();
+        assert!(b.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // "--shift -3" would parse -3 as a flag; "=" form handles negatives.
+        let a = Args::parse(&argv(&["x", "--shift=-3.5"])).unwrap();
+        assert_eq!(a.f64_or("shift", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = Args::parse(&argv(&["--help"])).unwrap();
+        assert_eq!(a.subcommand, None);
+        assert!(a.switch("help"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Self-contained utility layer.
+//!
+//! The offline vendor set ships only the `xla` crate closure, so everything
+//! a framework normally pulls from crates.io — PRNG, statistics, JSON,
+//! CLI parsing, property testing — is implemented here from scratch.
+
+pub mod benchkit;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,72 @@
+//! Minimal property-testing harness (no proptest available offline).
+//!
+//! `forall(name, cases, |rng| ...)` runs a closure against `cases`
+//! deterministically derived RNG streams; a failing case panics with the
+//! seed so it can be replayed with `replay(seed, f)`.  No shrinking — cases
+//! are kept small and structured instead.
+
+use super::rng::Rng;
+
+/// Base seed; change via MRTUNER_PROP_SEED to explore new corners in CI.
+fn base_seed() -> u64 {
+    std::env::var("MRTUNER_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x6d72_7475_6e65_7221)
+}
+
+/// Run `f` for `cases` independent seeds.  `f` gets a fresh RNG per case and
+/// should panic (assert) on property violation.
+pub fn forall<F: FnMut(&mut Rng)>(name: &str, cases: u32, mut f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed on case {case} (replay seed {seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        forall("counting", 17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+
+    #[test]
+    fn cases_get_distinct_streams() {
+        let mut seen = Vec::new();
+        forall("distinct", 8, |rng| seen.push(rng.next_u64()));
+        let mut sorted = seen.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), seen.len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        forall("fails", 4, |rng| {
+            assert!(rng.f64() < 2.0); // always true...
+            panic!("boom"); // ...then explicit failure
+        });
+    }
+}

@@ -1,0 +1,155 @@
+//! Integration: the prediction service + TCP server/client end to end,
+//! including concurrency, batching behaviour and failure handling.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use mrtuner::coordinator::client::Client;
+use mrtuner::coordinator::{
+    ModelRegistry, PredictionService, Server, ServiceConfig,
+};
+use mrtuner::model::features::{evaluate, NUM_FEATURES};
+use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
+
+fn test_model(app: &str) -> RegressionModel {
+    let mut coeffs = [0.0; NUM_FEATURES];
+    coeffs[0] = 250.0;
+    coeffs[1] = 120.0;
+    coeffs[4] = -30.0;
+    RegressionModel { app_name: app.into(), coeffs, trained_on: 20 }
+}
+
+fn start_service() -> Arc<PredictionService> {
+    let mut reg = ModelRegistry::new();
+    reg.insert(test_model("wordcount"));
+    reg.insert(test_model("exim"));
+    Arc::new(PredictionService::start(
+        || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+        reg,
+        ServiceConfig::default(),
+    ))
+}
+
+#[test]
+fn many_threads_hammering_the_service() {
+    let svc = start_service();
+    let mut handles = Vec::new();
+    for t in 0..8u32 {
+        let svc = Arc::clone(&svc);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..100u32 {
+                let m = 5 + ((t * 100 + i) % 36);
+                let r = 5 + (i % 36);
+                let app = if i % 2 == 0 { "wordcount" } else { "exim" };
+                let got = svc.predict(app, m, r).unwrap();
+                let want =
+                    evaluate(&test_model(app).coeffs, &[m as f64, r as f64]);
+                assert!((got - want).abs() < 1e-9, "t{t} i{i}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = &svc.metrics;
+    assert_eq!(m.requests.load(Ordering::Relaxed), 800);
+    assert!(m.backend_errors.load(Ordering::Relaxed) == 0);
+    // Concurrency must have produced at least some multi-request batches.
+    assert!(m.mean_batch_size() > 1.0, "mean batch {}", m.mean_batch_size());
+}
+
+#[test]
+fn tcp_round_trip() {
+    let svc = start_service();
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&svc)).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut client = Client::connect(&addr).unwrap();
+    let pred = client.predict("wordcount", 20, 5).unwrap();
+    let want = evaluate(&test_model("wordcount").coeffs, &[20.0, 5.0]);
+    assert!((pred - want).abs() < 1e-9);
+
+    let models = client.models().unwrap();
+    assert_eq!(models, vec!["exim".to_string(), "wordcount".to_string()]);
+
+    let (requests, batches, mean_batch) = client.health().unwrap();
+    assert!(requests >= 1);
+    assert!(batches >= 1);
+    assert!(mean_batch >= 1.0);
+
+    // Unknown app comes back as a protocol-level error, not a hang.
+    let err = client.predict("nope", 1, 1).unwrap_err();
+    assert!(err.contains("no model"), "{err}");
+
+    server.shutdown();
+}
+
+#[test]
+fn tcp_multiple_clients_parallel() {
+    let svc = start_service();
+    let mut server = Server::start("127.0.0.1:0", Arc::clone(&svc)).unwrap();
+    let addr = server.addr.to_string();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            for i in 0..25u32 {
+                let m = 5 + ((t * 25 + i) % 36);
+                let got = c.predict("exim", m, 10).unwrap();
+                let want =
+                    evaluate(&test_model("exim").coeffs, &[m as f64, 10.0]);
+                assert!((got - want).abs() < 1e-9);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 100);
+    server.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_errors_not_disconnects() {
+    use std::io::{BufRead, BufReader, Write};
+    let svc = start_service();
+    let mut server = Server::start("127.0.0.1:0", svc).unwrap();
+    let stream = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+
+    for (req, needle) in [
+        ("garbage", "bad json"),
+        (r#"{"op":"teleport"}"#, "unknown op"),
+        (r#"{"no_op":1}"#, "missing 'op'"),
+        (r#"{"op":"predict","app":"wordcount"}"#, "mappers"),
+    ] {
+        writer.write_all(format!("{req}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":false"), "{req} -> {line}");
+        assert!(line.contains(needle), "{req} -> {line}");
+    }
+    // The connection still works afterwards.
+    writer
+        .write_all(
+            b"{\"op\":\"predict\",\"app\":\"wordcount\",\"mappers\":10,\"reducers\":10}\n",
+        )
+        .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    server.shutdown();
+}
+
+#[test]
+fn hot_model_swap_visible_to_inflight_clients() {
+    let svc = start_service();
+    let before = svc.predict("wordcount", 20, 5).unwrap();
+    let mut replacement = test_model("wordcount");
+    replacement.coeffs[0] += 100.0;
+    svc.install_model(replacement);
+    let after = svc.predict("wordcount", 20, 5).unwrap();
+    assert!((after - before - 100.0).abs() < 1e-9);
+}

@@ -1,0 +1,155 @@
+//! Integration: the benchmark applications executed *functionally* over
+//! generated data, verified against independently computed ground truth —
+//! the proof that the framework's MapReduce semantics are real.
+
+use std::collections::{HashMap, HashSet};
+
+use mrtuner::api::engine::{execute, ExecOptions};
+use mrtuner::api::traits::HashPartitioner;
+use mrtuner::apps::{exim, AppId};
+use mrtuner::datagen;
+use mrtuner::util::prop::forall;
+use mrtuner::util::rng::Rng;
+
+fn opts(app: AppId, r: u32, splits: u32) -> (AppId, u32, u32) {
+    (app, r, splits)
+}
+
+fn run_app(
+    app: AppId,
+    input: &str,
+    r: u32,
+    splits: u32,
+) -> mrtuner::api::engine::JobOutput {
+    let (mapper, reducer, combiner) = app.functional();
+    let o = ExecOptions {
+        num_reducers: r,
+        combiner: combiner.as_deref(),
+        partitioner: &HashPartitioner,
+        num_splits: splits,
+    };
+    execute(mapper.as_ref(), reducer.as_ref(), input, &o)
+}
+
+#[test]
+fn wordcount_matches_hashmap_ground_truth() {
+    let mut rng = Rng::new(1);
+    let corpus = datagen::corpus::generate(&mut rng, 300_000);
+    let out = run_app(AppId::WordCount, &corpus, 7, 9);
+
+    let mut truth: HashMap<&str, u64> = HashMap::new();
+    for w in corpus.split_whitespace() {
+        *truth.entry(w).or_insert(0) += 1;
+    }
+    let pairs = out.all_pairs();
+    assert_eq!(pairs.len(), truth.len(), "vocabulary size");
+    for p in &pairs {
+        assert_eq!(
+            p.value.parse::<u64>().unwrap(),
+            truth[p.key.as_str()],
+            "count for {}",
+            p.key
+        );
+    }
+}
+
+#[test]
+fn exim_matches_transaction_ground_truth() {
+    let mut rng = Rng::new(2);
+    let log = datagen::exim_log::generate(&mut rng, 300_000);
+    let out = run_app(AppId::EximParse, &log, 5, 7);
+
+    let mut truth: HashMap<String, Vec<&str>> = HashMap::new();
+    for line in log.lines() {
+        if let Some(id) = exim::message_id(line) {
+            truth.entry(id.to_string()).or_default().push(line);
+        }
+    }
+    let pairs = out.all_pairs();
+    assert_eq!(pairs.len(), truth.len(), "transaction count");
+    for p in &pairs {
+        let mut expect = truth[&p.key].clone();
+        expect.sort();
+        assert_eq!(p.value, expect.join("|"), "transaction {}", p.key);
+    }
+}
+
+#[test]
+fn grep_matches_line_scan() {
+    let mut rng = Rng::new(3);
+    // Mix corpus lines with injected "error" lines.
+    let mut text = datagen::corpus::generate(&mut rng, 50_000);
+    text.push_str("an error\nerror error here\nclean line\n");
+    let out = run_app(AppId::Grep, &text, 3, 4);
+    let truth: usize = text.lines().map(|l| l.matches("error").count()).sum();
+    let pairs = out.all_pairs();
+    if truth == 0 {
+        assert!(pairs.is_empty());
+    } else {
+        assert_eq!(pairs.len(), 1);
+        assert_eq!(pairs[0].value.parse::<usize>().unwrap(), truth);
+    }
+}
+
+#[test]
+fn prop_results_invariant_to_parallelism_knobs() {
+    // The defining MapReduce property: output is independent of the
+    // number of reducers and splits (the paper's tunables change *time*,
+    // never *answers*).
+    forall("parallelism invariance", 6, |rng| {
+        let corpus = datagen::corpus::generate(rng, 20_000);
+        let base = run_app(AppId::WordCount, &corpus, 1, 1).all_pairs();
+        let r = rng.range_u64(2, 40) as u32;
+        let s = rng.range_u64(2, 16) as u32;
+        let got = run_app(AppId::WordCount, &corpus, r, s).all_pairs();
+        assert_eq!(got, base, "r={r} s={s}");
+    });
+}
+
+#[test]
+fn prop_exim_invariant_to_parallelism_knobs() {
+    forall("exim parallelism invariance", 4, |rng| {
+        let log = datagen::exim_log::generate(rng, 30_000);
+        let base = run_app(AppId::EximParse, &log, 1, 1).all_pairs();
+        let r = rng.range_u64(2, 40) as u32;
+        let s = rng.range_u64(2, 16) as u32;
+        let got = run_app(AppId::EximParse, &log, r, s).all_pairs();
+        assert_eq!(got, base, "r={r} s={s}");
+    });
+}
+
+#[test]
+fn partitions_are_disjoint_and_complete() {
+    let mut rng = Rng::new(4);
+    let corpus = datagen::corpus::generate(&mut rng, 40_000);
+    let out = run_app(AppId::WordCount, &corpus, 11, 5);
+    let mut seen: HashSet<String> = HashSet::new();
+    for part in &out.partitions {
+        for p in part {
+            assert!(seen.insert(p.key.clone()), "key {} in two partitions", p.key);
+        }
+    }
+    let mut truth: HashSet<&str> = HashSet::new();
+    for w in corpus.split_whitespace() {
+        truth.insert(w);
+    }
+    assert_eq!(seen.len(), truth.len());
+}
+
+#[test]
+fn counters_are_consistent() {
+    let mut rng = Rng::new(5);
+    let corpus = datagen::corpus::generate(&mut rng, 60_000);
+    let out = run_app(AppId::WordCount, &corpus, 4, 6);
+    assert_eq!(out.input_bytes as usize, corpus.len());
+    assert_eq!(out.input_records as usize, corpus.lines().count());
+    // Combiner can only shrink the shuffle.
+    assert!(out.shuffle_records <= out.map_output_records);
+    assert!(out.shuffle_bytes <= out.map_output_bytes);
+    // Reduce output = distinct keys.
+    assert_eq!(
+        out.output_records,
+        out.all_pairs().len() as u64
+    );
+    let _ = opts(AppId::WordCount, 1, 1);
+}

@@ -1,0 +1,166 @@
+//! Integration: the paper's full pipeline (profile → fit → predict) over
+//! the simulated cluster, including the headline-claim reproduction and
+//! the experiment drivers used by the benches.
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::model::regression::{RegressionModel, RustSolverBackend};
+use mrtuner::profiler::{paper_campaign, run_experiment, Dataset, ExperimentSpec};
+use mrtuner::report::experiments::{fig3, fig4, table1};
+
+#[test]
+fn paper_headline_under_5_percent_for_both_apps() {
+    for row in table1(42) {
+        assert!(
+            row.mean_pct < 5.0,
+            "{}: mean error {:.2}% breaks the paper's headline",
+            row.app.name(),
+            row.mean_pct
+        );
+        assert!(row.variance_pct.is_finite() && row.variance_pct >= 0.0);
+    }
+}
+
+#[test]
+fn error_ordering_matches_paper() {
+    // §V.B: streaming makes Exim's prediction error larger than
+    // WordCount's.  Use the multi-seed mean to avoid single-session flukes.
+    let mut wc = 0.0;
+    let mut ex = 0.0;
+    for seed in [42, 7, 2012] {
+        let rows = table1(seed);
+        wc += rows[0].mean_pct;
+        ex += rows[1].mean_pct;
+    }
+    assert!(
+        ex > wc,
+        "exim mean error {ex:.3} must exceed wordcount {wc:.3} (3-seed sums)"
+    );
+}
+
+#[test]
+fn fig3_protocol_shapes() {
+    let d = fig3(AppId::WordCount, 11);
+    assert_eq!(d.errors.len(), 20, "20 held-out settings");
+    assert_eq!(d.train.len(), 20, "20 training settings");
+    assert_eq!(d.model.trained_on, 20);
+    // Predictions and actuals must be on the same scale.
+    for (a, p) in d.errors.actual.iter().zip(&d.errors.predicted) {
+        assert!(*a > 60.0 && *a < 3600.0, "actual {a}");
+        assert!((p - a).abs() / a < 0.5, "gross misprediction {p} vs {a}");
+    }
+}
+
+#[test]
+fn fig4_shape_claims() {
+    let wc = fig4(AppId::WordCount, 7, 3, 5);
+    let ex = fig4(AppId::EximParse, 7, 3, 5);
+    // WordCount runs substantially slower (paper: ~2x).
+    let ratio = wc.mean_time() / ex.mean_time();
+    assert!(ratio > 1.3, "wordcount/exim ratio {ratio:.2}");
+    // Surfaces are positive and bounded.
+    for t in wc.times.iter().chain(&ex.times) {
+        assert!(*t > 60.0 && *t < 7200.0);
+    }
+    // Configuration choice matters: the spread over the grid is real.
+    assert!(wc.fluctuation() > 0.02);
+}
+
+#[test]
+fn model_transfers_within_app_but_not_across() {
+    // §I: a model fitted for one application must not be used for another.
+    let cluster = Cluster::paper_cluster();
+    let (wc_train, _) = paper_campaign(AppId::WordCount, 3);
+    let (_, wc_ds) = wc_train.run(&cluster);
+    let model =
+        RegressionModel::fit_dataset(&mut RustSolverBackend, &wc_ds).unwrap();
+
+    // Same app, fresh runs: good.
+    let same = run_experiment(
+        &cluster,
+        &ExperimentSpec::new(AppId::WordCount, 22, 9),
+        5,
+        888,
+    );
+    let pred = model.predict_one(22, 9);
+    let err_same = (pred - same.mean_time_s).abs() / same.mean_time_s;
+    assert!(err_same < 0.10, "within-app error {err_same:.3}");
+
+    // Different app, same platform: prediction should be way off.
+    let other = run_experiment(
+        &cluster,
+        &ExperimentSpec::new(AppId::EximParse, 22, 9),
+        5,
+        888,
+    );
+    let err_cross = (pred - other.mean_time_s).abs() / other.mean_time_s;
+    assert!(
+        err_cross > 0.25,
+        "cross-app prediction unexpectedly good: {err_cross:.3}"
+    );
+}
+
+#[test]
+fn model_does_not_transfer_across_platforms() {
+    // §I: the model of an application on one platform may not predict the
+    // same application on another platform.
+    let paper = Cluster::paper_cluster();
+    let (train, _) = paper_campaign(AppId::WordCount, 4);
+    let (_, ds) = train.run(&paper);
+    let model = RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).unwrap();
+
+    // A beefier platform: twice the nodes.
+    let mut specs = Vec::new();
+    for n in paper.nodes.iter().cycle().take(8) {
+        specs.push(n.spec.clone());
+    }
+    let big = Cluster::new(
+        specs,
+        mrtuner::cluster::Network::switched_ethernet_1gbps(8),
+    );
+    let spec = ExperimentSpec::new(AppId::WordCount, 20, 5);
+    let actual = run_experiment(&big, &spec, 5, 99).mean_time_s;
+    let pred = model.predict_one(20, 5);
+    let err = (pred - actual).abs() / actual;
+    assert!(err > 0.2, "cross-platform prediction unexpectedly good: {err:.3}");
+}
+
+#[test]
+fn dataset_round_trip_through_files_preserves_fit() {
+    let cluster = Cluster::paper_cluster();
+    let (train, _) = paper_campaign(AppId::EximParse, 8);
+    let (_, ds) = train.run(&cluster);
+    let path = std::env::temp_dir().join("mrtuner_e2e_dataset.json");
+    ds.save(&path).unwrap();
+    let loaded = Dataset::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let m1 = RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).unwrap();
+    let m2 = RegressionModel::fit_dataset(&mut RustSolverBackend, &loaded).unwrap();
+    for i in 0..m1.coeffs.len() {
+        assert!((m1.coeffs[i] - m2.coeffs[i]).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn five_rep_averaging_reduces_variance() {
+    // The paper's justification for averaging: the mean of five runs is a
+    // steadier target than a single run.
+    let cluster = Cluster::paper_cluster();
+    let spec = ExperimentSpec::new(AppId::EximParse, 20, 5);
+    let singles: Vec<f64> = (0..20)
+        .map(|i| run_experiment(&cluster, &spec, 1, 3000 + i).mean_time_s)
+        .collect();
+    let averaged: Vec<f64> = (0..20)
+        .map(|i| run_experiment(&cluster, &spec, 5, 7000 + i).mean_time_s)
+        .collect();
+    let var = |xs: &[f64]| {
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+    };
+    assert!(
+        var(&averaged) < var(&singles),
+        "averaging must shrink variance: {} vs {}",
+        var(&averaged),
+        var(&singles)
+    );
+}

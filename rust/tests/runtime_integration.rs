@@ -1,0 +1,157 @@
+//! Integration: the PJRT artifact backend must agree with the pure-Rust
+//! baseline solver on fits and predictions — this is the contract that
+//! lets the coordinator treat the AOT path as a drop-in production
+//! backend for the paper's Eqn. 6.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message) if
+//! the artifacts have not been built.
+
+use mrtuner::model::features::NUM_FEATURES;
+use mrtuner::model::regression::{FitBackend, RustSolverBackend};
+use mrtuner::runtime::{artifacts, XlaBackend};
+use mrtuner::util::rng::Rng;
+
+fn xla_backend() -> Option<XlaBackend> {
+    let dir = artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(XlaBackend::load_default().expect("load artifacts"))
+}
+
+fn paper_grid(rng: &mut Rng, n: usize) -> Vec<[f64; 2]> {
+    (0..n)
+        .map(|_| {
+            [
+                rng.range_u64(5, 41) as f64,
+                rng.range_u64(5, 41) as f64,
+            ]
+        })
+        .collect()
+}
+
+fn surface(p: &[f64; 2]) -> f64 {
+    let x = p[0] / 40.0;
+    let y = p[1] / 40.0;
+    420.0 - 260.0 * x + 310.0 * x * x - 120.0 * x * x * x + 28.0 * y + 55.0 * y * y
+}
+
+#[test]
+fn fit_agrees_with_rust_solver() {
+    let Some(mut xla) = xla_backend() else { return };
+    let mut rust = RustSolverBackend;
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed);
+        let n = rng.range_usize(10, 65);
+        let params = paper_grid(&mut rng, n);
+        let times: Vec<f64> = params
+            .iter()
+            .map(|p| surface(p) * rng.lognormal(0.05))
+            .collect();
+        let w = vec![1.0; n];
+        let a = xla.fit(&params, &times, &w).expect("xla fit");
+        let b = rust.fit(&params, &times, &w).expect("rust fit");
+        for i in 0..NUM_FEATURES {
+            let scale = b[i].abs().max(1.0);
+            assert!(
+                (a[i] - b[i]).abs() / scale < 1e-8,
+                "seed {seed} coeff {i}: xla {} vs rust {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn predict_agrees_with_cpu_evaluation() {
+    let Some(mut xla) = xla_backend() else { return };
+    let mut rng = Rng::new(77);
+    let coeffs: [f64; NUM_FEATURES] =
+        std::array::from_fn(|_| rng.range_f64(-300.0, 500.0));
+    // Cover: empty batch boundary (1 row), exact batch, multi-chunk.
+    for n in [1usize, 63, 64, 65, 200] {
+        let params = paper_grid(&mut rng, n);
+        let got = xla.predict(&coeffs, &params).expect("xla predict");
+        assert_eq!(got.len(), n);
+        let mut rust = RustSolverBackend;
+        let want = rust.predict(&coeffs, &params).unwrap();
+        for i in 0..n {
+            assert!(
+                (got[i] - want[i]).abs() < 1e-9 * want[i].abs().max(1.0),
+                "n={n} row {i}: {} vs {}",
+                got[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn fit_weights_and_padding_are_exact() {
+    let Some(mut xla) = xla_backend() else { return };
+    let mut rng = Rng::new(5);
+    let params = paper_grid(&mut rng, 12);
+    let times: Vec<f64> = params.iter().map(surface).collect();
+
+    // (a) exact-fit property on in-family data
+    let w = vec![1.0; 12];
+    let coeffs = xla.fit(&params, &times, &w).unwrap();
+    let preds = xla.predict(&coeffs, &params).unwrap();
+    for (p, t) in preds.iter().zip(&times) {
+        assert!((p - t).abs() / t < 1e-5, "{p} vs {t}");
+    }
+
+    // (b) weight-5 mean rows == five repetitions (paper's averaging);
+    // 12 settings x 5 reps = 60 rows fits the 64-row artifact.
+    let mut all_p = Vec::new();
+    let mut all_t = Vec::new();
+    for p in &params {
+        for _ in 0..5 {
+            all_p.push(*p);
+            all_t.push(surface(p) * rng.lognormal(0.02));
+        }
+    }
+    // means with weight 5
+    let means: Vec<f64> = (0..12)
+        .map(|i| all_t[5 * i..5 * i + 5].iter().sum::<f64>() / 5.0)
+        .collect();
+    let a = xla.fit(&all_p, &all_t, &vec![1.0; 60]).unwrap();
+    let b = xla.fit(&params, &means, &vec![5.0; 12]).unwrap();
+    for i in 0..NUM_FEATURES {
+        let scale = a[i].abs().max(1.0);
+        assert!((a[i] - b[i]).abs() / scale < 1e-7, "coeff {i}");
+    }
+}
+
+#[test]
+fn fit_rejects_oversized_and_degenerate_inputs() {
+    let Some(mut xla) = xla_backend() else { return };
+    let rows = xla.runtime.manifest.fit_rows;
+    let too_many = vec![[10.0, 10.0]; rows + 1];
+    let times = vec![100.0; rows + 1];
+    let w = vec![1.0; rows + 1];
+    assert!(xla.fit(&too_many, &times, &w).unwrap_err().contains("exceeds"));
+
+    assert!(xla
+        .fit(&[[10.0, 10.0]], &[100.0], &[0.0])
+        .unwrap_err()
+        .contains("all-zero"));
+
+    assert!(xla.fit(&[[10.0, 10.0]], &[100.0, 2.0], &[1.0]).is_err());
+}
+
+#[test]
+fn runtime_counters_track_executions() {
+    let Some(mut xla) = xla_backend() else { return };
+    let before_fit = xla.runtime.fit_calls.get();
+    let before_pred = xla.runtime.predict_calls.get();
+    let params = vec![[20.0, 5.0], [10.0, 10.0], [40.0, 40.0], [5.0, 5.0]];
+    let times = vec![500.0, 620.0, 520.0, 760.0];
+    let coeffs = xla.fit(&params, &times, &[1.0; 4]).unwrap();
+    xla.predict(&coeffs, &vec![[20.0, 5.0]; 130]).unwrap();
+    assert_eq!(xla.runtime.fit_calls.get(), before_fit + 1);
+    // 130 rows at batch 64 -> 3 chunks.
+    assert_eq!(xla.runtime.predict_calls.get(), before_pred + 3);
+}

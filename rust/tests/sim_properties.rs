@@ -1,0 +1,278 @@
+//! Property tests and failure injection across the simulator, cost
+//! model, scheduler and service — the invariants DESIGN.md commits to.
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::{Cluster, Network, NodeSpec};
+use mrtuner::coordinator::{
+    evaluate_order, fifo_order, sjf_order, JobRequest, ModelRegistry,
+    PredictionService, ServiceConfig,
+};
+use mrtuner::model::features::NUM_FEATURES;
+use mrtuner::model::regression::{FitBackend, RegressionModel};
+use mrtuner::mr::config::SplitPolicy;
+use mrtuner::mr::cost;
+use mrtuner::mr::{run_job, JobConfig};
+use mrtuner::util::bytes::{GB, MB};
+use mrtuner::util::prop::forall;
+
+fn wc() -> mrtuner::mr::cost::AppProfile {
+    AppId::WordCount.profile()
+}
+
+// ----------------------------------------------------------- cost model
+
+#[test]
+fn prop_map_cost_monotone_in_bytes() {
+    let c = Cluster::paper_cluster();
+    forall("map cost monotone", 30, |rng| {
+        let a = rng.range_u64(1 * MB, 2 * GB);
+        let b = a + rng.range_u64(1, GB);
+        let node = &c.nodes[rng.range_usize(0, 4)].spec;
+        let local = rng.bool(0.5);
+        let ca = cost::map_cost(&wc(), node, &c.network, a, local);
+        let cb = cost::map_cost(&wc(), node, &c.network, b, local);
+        assert!(cb.total_s() >= ca.total_s(), "bytes {a} vs {b}");
+    });
+}
+
+#[test]
+fn prop_reduce_cost_monotone_in_volume() {
+    let c = Cluster::paper_cluster();
+    forall("reduce cost monotone", 30, |rng| {
+        let a = rng.range_u64(1 * MB, GB);
+        let b = a + rng.range_u64(1, GB);
+        let node = &c.nodes[rng.range_usize(0, 4)].spec;
+        let maps = rng.range_u64(1, 200) as u32;
+        let ca = cost::reduce_cost(&wc(), node, &c.network, a, maps, 10, 3);
+        let cb = cost::reduce_cost(&wc(), node, &c.network, b, maps, 10, 3);
+        assert!(cb.total_s() >= ca.total_s());
+    });
+}
+
+#[test]
+fn prop_faster_cpu_never_slower() {
+    let c = Cluster::paper_cluster();
+    forall("cpu speed helps", 20, |rng| {
+        let bytes = rng.range_u64(16 * MB, GB);
+        let mut fast = c.nodes[0].spec.clone();
+        let mut slow = fast.clone();
+        fast.cpu_ghz = 3.4;
+        slow.cpu_ghz = 1.7;
+        let cf = cost::map_cost(&wc(), &fast, &c.network, bytes, true);
+        let cs = cost::map_cost(&wc(), &slow, &c.network, bytes, true);
+        assert!(cf.total_s() <= cs.total_s());
+    });
+}
+
+// ------------------------------------------------------------ simulator
+
+#[test]
+fn prop_more_input_takes_longer() {
+    let cluster = Cluster::paper_cluster();
+    let mut app = wc();
+    app.noise_sigma = 0.0;
+    app.job_sigma = 0.0;
+    forall("input monotone", 10, |rng| {
+        let mut cfg = JobConfig::paper_default(20, 5).with_seed(1);
+        cfg.input_bytes = rng.range_u64(GB, 4 * GB);
+        let t_small = run_job(&cluster, &app, &cfg).total_time_s;
+        let mut big = cfg.clone();
+        big.input_bytes = cfg.input_bytes * 2;
+        let t_big = run_job(&cluster, &app, &big).total_time_s;
+        assert!(t_big > t_small, "{t_big} vs {t_small}");
+    });
+}
+
+#[test]
+fn prop_total_time_bounded_by_serial_execution() {
+    let cluster = Cluster::paper_cluster();
+    forall("parallel beats serial", 10, |rng| {
+        let m = rng.range_u64(5, 41) as u32;
+        let r = rng.range_u64(5, 41) as u32;
+        let cfg = JobConfig::paper_default(m, r)
+            .with_seed(rng.next_u64())
+            .with_split_policy(SplitPolicy::Direct);
+        let res = run_job(&cluster, &wc(), &cfg);
+        // Serial bound: every committed task on the slowest node, one at
+        // a time (generous x2 for noise).
+        let serial: f64 = res
+            .maps
+            .iter()
+            .chain(&res.reduces)
+            .map(|t| t.duration_s())
+            .sum();
+        assert!(
+            res.total_time_s < 2.0 * serial + 60.0,
+            "m={m} r={r}: {} vs serial {serial}",
+            res.total_time_s
+        );
+    });
+}
+
+#[test]
+fn replication_one_reduces_locality() {
+    let cluster = Cluster::paper_cluster();
+    // Default (HadoopHint) policy: 64 MB single-block splits, where each
+    // split has exactly `replication` candidate homes.
+    let mut lo = 0.0;
+    let mut hi = 0.0;
+    for seed in 0..5 {
+        let mut cfg = JobConfig::paper_default(40, 5).with_seed(seed);
+        cfg.replication = 1;
+        lo += run_job(&cluster, &wc(), &cfg).locality_fraction();
+        cfg.replication = 3;
+        hi += run_job(&cluster, &wc(), &cfg).locality_fraction();
+    }
+    assert!(
+        hi > lo,
+        "replication 3 locality {hi} must beat replication 1 {lo}"
+    );
+}
+
+#[test]
+fn degenerate_configs_rejected() {
+    let cluster = Cluster::paper_cluster();
+    let mut cfg = JobConfig::paper_default(20, 5);
+    cfg.input_bytes = 0;
+    assert!(cfg.validate().is_err());
+    let result = std::panic::catch_unwind(|| {
+        run_job(&cluster, &wc(), &cfg);
+    });
+    assert!(result.is_err(), "zero-byte job must be rejected");
+}
+
+#[test]
+fn single_node_cluster_works() {
+    let spec = NodeSpec {
+        name: "solo".into(),
+        cpu_ghz: 2.0,
+        ram_bytes: GB,
+        disk_bytes: 100 * GB,
+        cache_kb: 512,
+        disk_read_mbps: 70.0,
+        disk_write_mbps: 55.0,
+        map_slots: 2,
+        reduce_slots: 1,
+    };
+    let cluster = Cluster::new(vec![spec], Network::switched_ethernet_1gbps(1));
+    let cfg = JobConfig::paper_default(10, 3).with_seed(1);
+    let res = run_job(&cluster, &wc(), &cfg);
+    assert!(res.total_time_s.is_finite() && res.total_time_s > 0.0);
+    // Everything is local on one node.
+    assert!((res.locality_fraction() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn speculative_execution_wins_sometimes() {
+    // With heavy-tailed task noise, backups must occasionally beat the
+    // original attempt.
+    let cluster = Cluster::paper_cluster();
+    let mut app = wc();
+    app.noise_sigma = 0.5;
+    let mut wins = 0;
+    for seed in 0..30 {
+        let cfg = JobConfig::paper_default(20, 5)
+            .with_seed(seed)
+            .with_split_policy(SplitPolicy::Direct);
+        wins += run_job(&cluster, &app, &cfg).counters.speculative_wins;
+    }
+    assert!(wins > 0, "no speculative win in 30 noisy runs");
+}
+
+#[test]
+fn slowstart_extremes() {
+    let cluster = Cluster::paper_cluster();
+    for slowstart in [0.0, 1.0] {
+        let mut cfg = JobConfig::paper_default(20, 5).with_seed(2);
+        cfg.slowstart = slowstart;
+        let res = run_job(&cluster, &wc(), &cfg);
+        assert!(res.total_time_s > 0.0);
+        assert!(res.first_reduce_s <= res.map_phase_s + 1e-9);
+    }
+}
+
+// ------------------------------------------------------------- scheduler
+
+#[test]
+fn prop_sjf_is_permutation_and_no_worse_with_oracle() {
+    let cluster = Cluster::paper_cluster();
+    forall("sjf permutation + optimality", 5, |rng| {
+        let apps = [AppId::WordCount, AppId::EximParse, AppId::Grep];
+        let jobs: Vec<JobRequest> = (0..rng.range_u64(2, 8))
+            .map(|i| JobRequest {
+                app: *rng.choice(&apps),
+                num_mappers: rng.range_u64(5, 41) as u32,
+                num_reducers: rng.range_u64(5, 41) as u32,
+                seed: i,
+            })
+            .collect();
+        // Oracle predictions = true simulated durations.
+        let order = sjf_order(&jobs, |j| {
+            let cfg = JobConfig::paper_default(j.num_mappers, j.num_reducers)
+                .with_seed(j.seed);
+            Some(run_job(&cluster, &j.app.profile(), &cfg).total_time_s)
+        });
+        let mut sorted = order.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..jobs.len()).collect::<Vec<_>>(), "permutation");
+
+        let sjf = evaluate_order(&cluster, &jobs, &order);
+        let fifo = evaluate_order(&cluster, &jobs, &fifo_order(&jobs));
+        assert!(
+            sjf.mean_completion_s <= fifo.mean_completion_s + 1e-6,
+            "oracle SJF must not lose to FIFO"
+        );
+        assert!((sjf.makespan_s - fifo.makespan_s).abs() < 1e-6);
+    });
+}
+
+// --------------------------------------------------------------- service
+
+/// A backend that always fails — exercises error propagation.
+struct BrokenBackend;
+impl FitBackend for BrokenBackend {
+    fn fit(
+        &mut self,
+        _: &[[f64; 2]],
+        _: &[f64],
+        _: &[f64],
+    ) -> Result<[f64; NUM_FEATURES], String> {
+        Err("broken".into())
+    }
+    fn predict(
+        &mut self,
+        _: &[f64; NUM_FEATURES],
+        _: &[[f64; 2]],
+    ) -> Result<Vec<f64>, String> {
+        Err("backend exploded".into())
+    }
+    fn name(&self) -> &'static str {
+        "broken"
+    }
+}
+
+#[test]
+fn service_surfaces_backend_failures() {
+    let mut reg = ModelRegistry::new();
+    reg.insert(RegressionModel {
+        app_name: "wordcount".into(),
+        coeffs: [1.0; NUM_FEATURES],
+        trained_on: 20,
+    });
+    let svc = PredictionService::start(
+        || Box::new(BrokenBackend) as Box<dyn FitBackend>,
+        reg,
+        ServiceConfig::default(),
+    );
+    let err = svc.predict("wordcount", 20, 5).unwrap_err();
+    assert!(err.contains("exploded"), "{err}");
+    assert!(
+        svc.metrics
+            .backend_errors
+            .load(std::sync::atomic::Ordering::Relaxed)
+            >= 1
+    );
+    // The worker survives failed batches.
+    let err2 = svc.predict("wordcount", 10, 10).unwrap_err();
+    assert!(err2.contains("exploded"));
+}
