@@ -7,7 +7,7 @@
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
 use mrtuner::model::regression::RegressionModel;
-use mrtuner::profiler::paper_campaign;
+use mrtuner::profiler::{paper_campaign, CampaignExecutor};
 use mrtuner::report::experiments::{default_backend, fig3};
 use mrtuner::util::benchkit::{bench, report, section};
 
@@ -49,8 +49,13 @@ fn main() {
     section("pipeline stage timings");
     let cluster = Cluster::paper_cluster();
     let (train_c, _) = paper_campaign(AppId::WordCount, 42);
-    bench("profile campaign (20 settings x 5 reps)", 1, 5, || {
+    bench("profile campaign (20 settings x 5 reps, serial)", 1, 5, || {
         std::hint::black_box(train_c.run(&cluster));
+    });
+    bench("profile campaign (parallel executor)", 1, 5, || {
+        // Fresh executor per iteration so the rep cache stays cold.
+        let exec = CampaignExecutor::machine_sized();
+        std::hint::black_box(train_c.run_with(&cluster, &exec));
     });
     let (_, ds) = train_c.run(&cluster);
     let (mut backend, name) = default_backend();

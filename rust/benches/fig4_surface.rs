@@ -10,8 +10,11 @@
 //!
 //! Run: `cargo bench --bench fig4_surface`
 
+use std::time::Instant;
+
 use mrtuner::apps::AppId;
-use mrtuner::report::experiments::fig4;
+use mrtuner::profiler::CampaignExecutor;
+use mrtuner::report::experiments::{fig4, fig4_with};
 use mrtuner::report::figure;
 use mrtuner::util::benchkit::{bench, report, section};
 
@@ -60,4 +63,61 @@ fn main() {
     bench("fig4 lattice sweep (64 settings x 1 rep)", 1, 3, || {
         std::hint::black_box(fig4(AppId::EximParse, 5, 1, 7));
     });
+
+    // ------------------------------------------- parallel executor scaling
+    // The acceptance bar for the campaign executor: a parallel Fig-4 grid
+    // sweep must be bit-identical to the serial sweep and >= 2x faster on
+    // a multi-core host.  Fresh executors per run keep the cache cold so
+    // the timings measure simulation, not lookups.
+    section("campaign executor scaling (Fig. 4 grid, 64 settings x 3 reps)");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let time_sweep = |jobs: usize| -> (f64, Vec<f64>) {
+        let exec = CampaignExecutor::new(jobs);
+        let t0 = Instant::now();
+        let d = fig4_with(&exec, AppId::WordCount, 5, 3, 42);
+        (t0.elapsed().as_secs_f64(), d.times)
+    };
+    let (serial_s, serial_times) = time_sweep(1);
+    report("serial sweep (jobs=1)", format!("{serial_s:.3} s"));
+    let mut counts: Vec<usize> = [2, 4, cores].into_iter().filter(|&j| j > 1).collect();
+    counts.sort_unstable();
+    counts.dedup();
+    for jobs in counts {
+        let (par_s, par_times) = time_sweep(jobs);
+        let identical = par_times == serial_times;
+        report(
+            &format!("parallel sweep (jobs={jobs})"),
+            format!(
+                "{par_s:.3} s  speedup {:.2}x  bit-identical: {}",
+                serial_s / par_s,
+                if identical { "yes" } else { "NO — DETERMINISM BUG" }
+            ),
+        );
+        assert!(identical, "parallel sweep diverged from serial");
+    }
+    report(
+        &format!("host cores = {cores}; >= 2x target"),
+        if cores >= 4 {
+            "expect speedup >= 2x at jobs=cores"
+        } else {
+            "host too small to show 2x; run on a multi-core box"
+        },
+    );
+
+    // Cache: re-sweeping the same session is pure lookup.
+    let exec = CampaignExecutor::new(cores);
+    let t0 = Instant::now();
+    std::hint::black_box(fig4_with(&exec, AppId::WordCount, 5, 3, 42));
+    let cold = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    std::hint::black_box(fig4_with(&exec, AppId::WordCount, 5, 3, 42));
+    let warm = t0.elapsed().as_secs_f64();
+    report(
+        "cached re-sweep",
+        format!(
+            "{:.1} us (cold {cold:.3} s, {} hits)",
+            warm * 1e6,
+            exec.cache_hits()
+        ),
+    );
 }

@@ -15,7 +15,9 @@ use mrtuner::cluster::Cluster;
 use mrtuner::coordinator::{ModelRegistry, PredictionService, ServiceConfig};
 use mrtuner::model::features::NUM_FEATURES;
 use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
-use mrtuner::mr::{run_job, JobConfig};
+use mrtuner::mr::{run_job, run_job_in, JobConfig, JobContext};
+use mrtuner::profiler::campaign::grid_specs;
+use mrtuner::profiler::CampaignExecutor;
 use mrtuner::runtime::{artifacts, XlaBackend};
 use mrtuner::util::benchkit::{bench, report, section};
 use mrtuner::util::rng::Rng;
@@ -62,6 +64,40 @@ fn main() {
         });
         std::hint::black_box(run_job(&cluster, &AppId::WordCount.profile(), &config));
     });
+    // JobContext reuse: the same job without per-run layout planning.
+    {
+        let profile = AppId::WordCount.profile();
+        let base = JobConfig::paper_default(20, 5);
+        let ctx = JobContext::for_session(&cluster, &base, 1);
+        let mut seed = 0u64;
+        bench("run_job_in wordcount (shared JobContext)", 2, 30, || {
+            seed += 1;
+            let config = base.clone().with_seed(seed);
+            std::hint::black_box(run_job_in(&cluster, &profile, &config, &ctx));
+        });
+    }
+
+    // -------------------------------------------------- campaign executor
+    section("campaign executor (Fig. 4 grid, 64 settings x 1 rep)");
+    let specs = grid_specs(AppId::WordCount, 5);
+    for jobs in [1usize, 2, 4, 8] {
+        bench(&format!("grid sweep, jobs={jobs}"), 0, 3, || {
+            // Fresh executor per iteration: cold cache, measure simulation.
+            let exec = CampaignExecutor::new(jobs);
+            std::hint::black_box(exec.run_specs(&cluster, &specs, 1, 7));
+        });
+    }
+    {
+        let exec = CampaignExecutor::machine_sized();
+        exec.run_specs(&cluster, &specs, 1, 7); // warm the cache
+        let st = bench("grid sweep, warm cache", 1, 10, || {
+            std::hint::black_box(exec.run_specs(&cluster, &specs, 1, 7));
+        });
+        report(
+            "cached settings/sec",
+            format!("{:.0}  ({} hits recorded)", st.throughput(specs.len() as f64), exec.cache_hits()),
+        );
+    }
 
     // ------------------------------------------------------------- fitting
     section("fit backends (paper Eqn. 6)");

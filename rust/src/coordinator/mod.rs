@@ -23,6 +23,8 @@ pub mod server;
 pub mod service;
 
 pub use registry::ModelRegistry;
-pub use scheduler::{evaluate_order, fifo_order, sjf_order, JobRequest};
+pub use scheduler::{
+    evaluate_order, fifo_order, predicted_times, sjf_order, what_if, JobRequest,
+};
 pub use server::Server;
 pub use service::{PredictionService, ServiceConfig, ServiceMetrics};

@@ -10,6 +10,7 @@
 use crate::apps::AppId;
 use crate::cluster::Cluster;
 use crate::mr::{run_job, JobConfig};
+use crate::profiler::{CampaignExecutor, ExperimentSpec, RepJob};
 use crate::util::stats;
 
 /// A job waiting in the submission queue.
@@ -20,6 +21,18 @@ pub struct JobRequest {
     pub num_reducers: u32,
     /// Seed for its eventual execution (a distinct wall-clock run).
     pub seed: u64,
+}
+
+impl JobRequest {
+    fn spec(&self) -> ExperimentSpec {
+        ExperimentSpec::new(self.app, self.num_mappers, self.num_reducers)
+    }
+
+    /// The executor work item for this job's what-if simulation: one rep
+    /// of its setting, in a session keyed by the job's own seed.
+    fn rep_job(&self) -> RepJob {
+        RepJob { spec: self.spec(), rep: 0, base_seed: self.seed }
+    }
 }
 
 /// Arrival order (identity permutation).
@@ -55,21 +68,29 @@ pub struct ScheduleOutcome {
     pub mean_completion_s: f64,
 }
 
-/// Execute `jobs` in `order` and measure completion times.
-pub fn evaluate_order(
-    cluster: &Cluster,
-    jobs: &[JobRequest],
-    order: &[usize],
-) -> ScheduleOutcome {
-    assert_eq!(jobs.len(), order.len());
-    let mut completion = vec![0.0; jobs.len()];
+/// Debug-check that `order` visits every job exactly once — a duplicate
+/// or missing index silently corrupts completion times otherwise.
+fn debug_assert_permutation(order: &[usize], n: usize) {
+    debug_assert_eq!(order.len(), n);
+    debug_assert!(
+        {
+            let mut seen = vec![false; n];
+            order
+                .iter()
+                .all(|&i| i < n && !std::mem::replace(&mut seen[i], true))
+        },
+        "order must be a permutation of 0..{n}, got {order:?}"
+    );
+}
+
+/// Prefix-sum `times` along `order` into a [`ScheduleOutcome`] — the one
+/// replay rule shared by [`evaluate_order`] and [`what_if`], so the
+/// planner and the measurement can never optimize different objectives.
+fn replay(times: &[f64], order: &[usize]) -> ScheduleOutcome {
+    let mut completion = vec![0.0; times.len()];
     let mut clock = 0.0;
     for &idx in order {
-        let j = &jobs[idx];
-        let config = JobConfig::paper_default(j.num_mappers, j.num_reducers)
-            .with_seed(j.seed);
-        let res = run_job(cluster, &j.app.profile(), &config);
-        clock += res.total_time_s;
+        clock += times[idx];
         completion[idx] = clock;
     }
     ScheduleOutcome {
@@ -77,6 +98,63 @@ pub fn evaluate_order(
         mean_completion_s: stats::mean(&completion),
         completion_s: completion,
     }
+}
+
+/// Execute `jobs` in `order` and measure completion times.  Each job's
+/// duration is simulated from its own `seed` (a private layout), exactly
+/// as before contexts existed.
+pub fn evaluate_order(
+    cluster: &Cluster,
+    jobs: &[JobRequest],
+    order: &[usize],
+) -> ScheduleOutcome {
+    assert_eq!(jobs.len(), order.len());
+    debug_assert_permutation(order, jobs.len());
+    let times: Vec<f64> = jobs
+        .iter()
+        .map(|j| {
+            let config = JobConfig::paper_default(j.num_mappers, j.num_reducers)
+                .with_seed(j.seed);
+            run_job(cluster, &j.app.profile(), &config).total_time_s
+        })
+        .collect();
+    replay(&times, order)
+}
+
+/// Simulated duration of each job (submission order), via the profiling
+/// executor: durations fan out over its worker pool and are cached, so
+/// evaluating many candidate orders costs **one simulation per job,
+/// total** — the what-if path the smarter scheduler needs.
+pub fn predicted_times(
+    executor: &CampaignExecutor,
+    cluster: &Cluster,
+    jobs: &[JobRequest],
+) -> Vec<f64> {
+    let items: Vec<RepJob> = jobs.iter().map(|j| j.rep_job()).collect();
+    executor.run_reps(cluster, &items)
+}
+
+/// Replay a candidate `order` from the executor's cached per-job times
+/// (jobs run back-to-back, whole-cluster occupancy).  The first call
+/// simulates every job once; every further order for the same queue is
+/// pure arithmetic on cache hits.
+///
+/// Durations come from the executor's *profiling protocol* — session
+/// layout plus a `mix`-derived run seed — so they form one internally
+/// consistent what-if universe across orders, but they are not the same
+/// draws as [`evaluate_order`], which re-simulates each job from its raw
+/// `seed` with a private layout.  Use `what_if` to compare candidate
+/// orders cheaply; use `evaluate_order` to measure the realized benefit
+/// of the order you picked.
+pub fn what_if(
+    executor: &CampaignExecutor,
+    cluster: &Cluster,
+    jobs: &[JobRequest],
+    order: &[usize],
+) -> ScheduleOutcome {
+    assert_eq!(jobs.len(), order.len());
+    debug_assert_permutation(order, jobs.len());
+    replay(&predicted_times(executor, cluster, jobs), order)
 }
 
 #[cfg(test)]
@@ -142,6 +220,40 @@ mod tests {
             sjf.mean_completion_s,
             fifo.mean_completion_s
         );
+    }
+
+    #[test]
+    fn what_if_orders_share_one_simulation_per_job() {
+        let cluster = Cluster::paper_cluster();
+        let js = jobs();
+        let exec = CampaignExecutor::new(2);
+        let fifo = what_if(&exec, &cluster, &js, &fifo_order(&js));
+        assert_eq!(exec.cache_misses(), js.len() as u64, "one sim per job");
+        // SJF from the same cached predictions.
+        let times = predicted_times(&exec, &cluster, &js);
+        let order = sjf_order(&js, |j| {
+            let idx = js
+                .iter()
+                .position(|k| k.seed == j.seed)
+                .expect("job present");
+            Some(times[idx])
+        });
+        let sjf = what_if(&exec, &cluster, &js, &order);
+        // No further simulation happened: every replay was a cache hit.
+        assert_eq!(exec.cache_misses(), js.len() as u64);
+        assert!(exec.cache_hits() >= 2 * js.len() as u64);
+        // Same work, same makespan; SJF no worse on mean completion.
+        assert!((sjf.makespan_s - fifo.makespan_s).abs() < 1e-9);
+        assert!(sjf.mean_completion_s <= fifo.mean_completion_s + 1e-9);
+    }
+
+    #[test]
+    fn what_if_is_deterministic_across_executors() {
+        let cluster = Cluster::paper_cluster();
+        let js = jobs();
+        let a = what_if(&CampaignExecutor::serial(), &cluster, &js, &fifo_order(&js));
+        let b = what_if(&CampaignExecutor::new(4), &cluster, &js, &fifo_order(&js));
+        assert_eq!(a.completion_s, b.completion_s);
     }
 
     #[test]

@@ -18,10 +18,22 @@ use mrtuner::cluster::Cluster;
 use mrtuner::coordinator::{ModelRegistry, PredictionService, Server, ServiceConfig};
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig};
-use mrtuner::profiler::{paper_campaign, Dataset};
+use mrtuner::profiler::{paper_campaign, CampaignExecutor, Dataset};
 use mrtuner::report::{e2e, experiments, figure, table};
 use mrtuner::util::bytes::fmt_secs;
 use mrtuner::util::cli::Args;
+
+/// Build the profiling executor from `--jobs N` (default: one worker per
+/// core).  Campaign output is bit-identical whatever the worker count.
+fn executor_from(args: &Args) -> Result<CampaignExecutor, String> {
+    match args.str_opt("jobs") {
+        None => Ok(CampaignExecutor::machine_sized()),
+        Some(s) => {
+            let n: u64 = s.parse().map_err(|_| format!("--jobs: bad integer '{s}'"))?;
+            Ok(CampaignExecutor::new(n as usize))
+        }
+    }
+}
 
 fn main() {
     let args = match Args::from_env() {
@@ -41,10 +53,7 @@ fn main() {
         "fig4" => cmd_fig4(&args),
         "table1" => cmd_table1(&args),
         "serve" => cmd_serve(&args),
-        "e2e" => {
-            let seed = args.u64_or("seed", 42).unwrap_or(42);
-            e2e::run(seed).map(|_| ())
-        }
+        "e2e" => cmd_e2e(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -63,15 +72,17 @@ fn print_help() {
          (reproduction of Rizvandi et al., 2012)\n\n\
          USAGE: mrtuner <SUBCOMMAND> [--flags]\n\n\
          SUBCOMMANDS\n\
-           profile  --app A [--seed N] [--out FILE]      profile 20 training settings\n\
+           profile  --app A [--seed N] [--out FILE] [--jobs N]\n\
            fit      --data FILE [--out FILE]             fit model from dataset\n\
            predict  --model FILE --mappers M --reducers R\n\
            run-job  --app A --mappers M --reducers R [--seed N]\n\
-           fig3     --app A [--seed N] [--csv FILE]      actual-vs-predicted + errors\n\
-           fig4     --app A [--step N] [--reps N] [--csv FILE]\n\
-           table1   [--seed N]                           mean/variance of errors\n\
-           serve    [--addr HOST:PORT]                   TCP prediction service\n\
-           e2e      [--seed N]                           full pipeline validation\n\n\
+           fig3     --app A [--seed N] [--csv FILE] [--jobs N]\n\
+           fig4     --app A [--step N] [--reps N] [--csv FILE] [--jobs N]\n\
+           table1   [--seed N] [--jobs N]                mean/variance of errors\n\
+           serve    [--addr HOST:PORT] [--jobs N]        TCP prediction service\n\
+           e2e      [--seed N] [--jobs N]                full pipeline validation\n\n\
+         --jobs N sets the profiling worker count (default: all cores);\n\
+         campaign results are bit-identical for any N.\n\n\
          APPS: wordcount | exim | grep"
     );
 }
@@ -84,16 +95,18 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     let app = parse_app(args)?;
     let seed = args.u64_or("seed", 42)?;
     let out = args.str_or("out", &format!("{}_train.json", app.name()));
+    let executor = executor_from(args)?;
     args.reject_unknown()?;
     let cluster = Cluster::paper_cluster();
     let (train, _) = paper_campaign(app, seed);
     eprintln!(
-        "profiling {} settings x {} reps for {} ...",
+        "profiling {} settings x {} reps for {} ({} workers) ...",
         train.specs.len(),
         train.reps,
-        app.name()
+        app.name(),
+        executor.jobs()
     );
-    let (results, ds) = train.run(&cluster);
+    let (results, ds) = train.run_with(&cluster, &executor);
     for r in &results {
         eprintln!(
             "  M={:<3} R={:<3} mean {:>8} (+-{:.1}s over {} reps)",
@@ -177,8 +190,9 @@ fn cmd_fig3(args: &Args) -> Result<(), String> {
     let app = parse_app(args)?;
     let seed = args.u64_or("seed", 42)?;
     let csv_out = args.str_opt("csv");
+    let executor = executor_from(args)?;
     args.reject_unknown()?;
-    let d = experiments::fig3(app, seed);
+    let d = experiments::fig3_with(&executor, app, seed);
     let labels: Vec<String> = d
         .test_specs
         .iter()
@@ -233,8 +247,9 @@ fn cmd_fig4(args: &Args) -> Result<(), String> {
     let reps = args.u64_or("reps", 5)? as u32;
     let seed = args.u64_or("seed", 42)?;
     let csv_out = args.str_opt("csv");
+    let executor = executor_from(args)?;
     args.reject_unknown()?;
-    let d = experiments::fig4(app, step, reps, seed);
+    let d = experiments::fig4_with(&executor, app, step, reps, seed);
     println!(
         "{}",
         figure::surface(
@@ -268,8 +283,9 @@ fn cmd_fig4(args: &Args) -> Result<(), String> {
 
 fn cmd_table1(args: &Args) -> Result<(), String> {
     let seed = args.u64_or("seed", 42)?;
+    let executor = executor_from(args)?;
     args.reject_unknown()?;
-    let rows = experiments::table1(seed);
+    let rows = experiments::table1_with(&executor, seed);
     let mut t = vec![vec![
         "application".to_string(),
         "mean (%)".to_string(),
@@ -296,18 +312,27 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn cmd_e2e(args: &Args) -> Result<(), String> {
+    let seed = args.u64_or("seed", 42)?;
+    let executor = executor_from(args)?;
+    args.reject_unknown()?;
+    e2e::run_with(seed, &executor).map(|_| ())
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let seed = args.u64_or("seed", 42)?;
+    let executor = executor_from(args)?;
     args.reject_unknown()?;
-    // Fit models for all apps up front (profiling on the simulated cluster).
+    // Fit models for all apps up front (profiling on the simulated cluster,
+    // fanned out over the campaign executor).
     let cluster = Cluster::paper_cluster();
     let mut registry = ModelRegistry::new();
     {
         let (mut backend, name) = experiments::default_backend();
         for app in AppId::all() {
             let (train, _) = paper_campaign(app, seed);
-            let (_, ds) = train.run(&cluster);
+            let (_, ds) = train.run_with(&cluster, &executor);
             let model = RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
             eprintln!("fitted {} ({} rows) via {name}", app.name(), ds.len());
             registry.insert(model);

@@ -1,0 +1,206 @@
+//! Shared per-job setup: the HDFS block layout and the input split plan.
+//!
+//! Profiling campaigns run the *same job shape* hundreds of times (5 reps
+//! per setting, 64+ settings per grid sweep), and under the default
+//! [`super::config::SplitPolicy::HadoopHint`] every setting in the paper's
+//! 5..=40 range even shares one task count.  Re-planning the NameNode
+//! placement and the splits on every repetition was pure waste — and it is
+//! also unfaithful: the paper ingests its 8 GB input into HDFS **once**
+//! and then profiles against that fixed layout.
+//!
+//! A [`JobContext`] captures that once-per-session work.  It is built per
+//! `(cluster, config shape)` and borrowed by [`super::runner::run_job_in`];
+//! the [`crate::profiler::CampaignExecutor`] shares one context across all
+//! repetitions and worker threads of a campaign.
+
+use crate::cluster::Cluster;
+use crate::dfs::{FileMeta, NameNode};
+use crate::util::rng::{splitmix64, Rng};
+
+use super::config::JobConfig;
+use super::split::{plan_splits, SplitPlan};
+
+/// Salt mixed into `config.seed` to derive the per-run RNG root (shared
+/// with the runner so standalone `run_job` keeps its historical streams).
+pub(crate) const JOB_SEED_SALT: u64 = 0x6a6f_625f_7275_6e73;
+
+/// Fork stream id historically used for the input-layout RNG.
+pub(crate) const LAYOUT_STREAM: u64 = 1;
+
+/// The configuration fields that determine the input layout and split
+/// plan.  Two configs with equal shapes can share one [`JobContext`]:
+/// everything else (`seed`, reducer count, slowstart, speculation, ...)
+/// only affects the event simulation, never the plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ContextShape {
+    pub num_nodes: usize,
+    pub replication: usize,
+    pub input_bytes: u64,
+    pub map_tasks: u32,
+}
+
+impl ContextShape {
+    pub fn of(cluster: &Cluster, config: &JobConfig) -> ContextShape {
+        ContextShape {
+            num_nodes: cluster.num_nodes(),
+            replication: config.replication,
+            input_bytes: config.input_bytes,
+            map_tasks: config.map_tasks(),
+        }
+    }
+}
+
+/// Reusable per-job setup: balanced-ingest block layout plus the split
+/// plan with locality hints.  Building one costs a NameNode placement
+/// pass over the whole input (~128 blocks for the paper's 8 GB); borrowing
+/// it makes repetitions pay only for event simulation.
+#[derive(Clone, Debug)]
+pub struct JobContext {
+    shape: ContextShape,
+    pub file: FileMeta,
+    pub splits: Vec<SplitPlan>,
+}
+
+impl JobContext {
+    /// Plan the layout for `(cluster, config)` drawing placement decisions
+    /// from `layout_rng`.
+    pub fn build(
+        cluster: &Cluster,
+        config: &JobConfig,
+        layout_rng: &mut Rng,
+    ) -> JobContext {
+        let shape = ContextShape::of(cluster, config);
+        let mut nn = NameNode::new(shape.num_nodes, shape.replication);
+        let file = nn.plan_balanced_file("/job/input", shape.input_bytes, layout_rng);
+        let splits = plan_splits(&file, shape.map_tasks);
+        JobContext { shape, file, splits }
+    }
+
+    /// Per-run context: the layout stream is forked from the run seed,
+    /// reproducing exactly the layout `run_job` planned inline before
+    /// contexts existed — standalone `run_job` stays bit-identical.
+    pub fn for_job(cluster: &Cluster, config: &JobConfig) -> JobContext {
+        let rng = Rng::new(config.seed ^ JOB_SEED_SALT);
+        JobContext::build(cluster, config, &mut rng.fork(LAYOUT_STREAM))
+    }
+
+    /// Session context shared across repetitions: the layout depends only
+    /// on the profiling session (`base_seed`) and the config shape, the
+    /// way the paper's input is ingested once and profiled repeatedly.
+    /// Per-rep seeds keep driving all task and run noise.
+    pub fn for_session(
+        cluster: &Cluster,
+        config: &JobConfig,
+        base_seed: u64,
+    ) -> JobContext {
+        let shape = ContextShape::of(cluster, config);
+        // Chain the session and shape into one seed through the shared
+        // SplitMix64 step (same mixer the RNG itself seeds from).  Each
+        // field is folded into the previous output before remixing, so the
+        // seed is position-sensitive, not a function of the field sum.
+        let mut seed = base_seed ^ 0x6c61_796f_7574_3031; // "layout01"
+        for v in [
+            shape.num_nodes as u64,
+            shape.replication as u64,
+            shape.input_bytes,
+            shape.map_tasks as u64,
+        ] {
+            let mut state = seed ^ v;
+            seed = splitmix64(&mut state);
+        }
+        JobContext::build(cluster, config, &mut Rng::new(seed))
+    }
+
+    pub fn shape(&self) -> ContextShape {
+        self.shape
+    }
+
+    /// Whether this context was planned for the given `(cluster, config)`
+    /// shape — the reuse contract `run_job_in` enforces.
+    pub fn matches(&self, cluster: &Cluster, config: &JobConfig) -> bool {
+        self.shape == ContextShape::of(cluster, config)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mr::config::SplitPolicy;
+
+    #[test]
+    fn shape_ignores_sim_only_knobs() {
+        let cluster = Cluster::paper_cluster();
+        let a = JobConfig::paper_default(20, 5).with_seed(1);
+        let mut b = JobConfig::paper_default(20, 40).with_seed(999);
+        b.slowstart = 0.9;
+        b.speculative = false;
+        // Same hint policy + input -> same task count -> same shape.
+        assert_eq!(ContextShape::of(&cluster, &a), ContextShape::of(&cluster, &b));
+        let ctx = JobContext::for_session(&cluster, &a, 7);
+        assert!(ctx.matches(&cluster, &b));
+    }
+
+    #[test]
+    fn shape_tracks_task_count_and_input() {
+        let cluster = Cluster::paper_cluster();
+        let a = JobConfig::paper_default(20, 5);
+        let direct = a.clone().with_split_policy(SplitPolicy::Direct);
+        assert_ne!(
+            ContextShape::of(&cluster, &a),
+            ContextShape::of(&cluster, &direct)
+        );
+        let mut small = a.clone();
+        small.input_bytes /= 2;
+        assert!(!JobContext::for_session(&cluster, &a, 7).matches(&cluster, &small));
+    }
+
+    #[test]
+    fn session_context_is_deterministic_and_rep_independent() {
+        let cluster = Cluster::paper_cluster();
+        let config = JobConfig::paper_default(20, 5).with_seed(123);
+        let a = JobContext::for_session(&cluster, &config, 42);
+        // A different run seed must not perturb the session layout.
+        let b = JobContext::for_session(&cluster, &config.clone().with_seed(456), 42);
+        assert_eq!(a.splits.len(), b.splits.len());
+        for (x, y) in a.splits.iter().zip(&b.splits) {
+            assert_eq!(x.offset, y.offset);
+            assert_eq!(x.len, y.len);
+            assert_eq!(x.preferred, y.preferred);
+        }
+        // A different session seed yields a different placement.
+        let c = JobContext::for_session(&cluster, &config, 43);
+        assert!(
+            a.splits.iter().zip(&c.splits).any(|(x, y)| x.preferred != y.preferred),
+            "distinct sessions should not share a layout"
+        );
+    }
+
+    #[test]
+    fn for_job_layout_pins_the_historical_stream() {
+        // `run_job`'s bit-compatibility claim rests on this exact
+        // derivation (the salt and fork stream the old inline planning
+        // used).  The literals are repeated here on purpose: a change to
+        // JOB_SEED_SALT / LAYOUT_STREAM or to for_job's internals must
+        // fail this test, not silently shift every simulated time.
+        let cluster = Cluster::paper_cluster();
+        let config = JobConfig::paper_default(20, 5).with_seed(77);
+        let rng = Rng::new(config.seed ^ 0x6a6f_625f_7275_6e73);
+        let expect = JobContext::build(&cluster, &config, &mut rng.fork(1));
+        let got = JobContext::for_job(&cluster, &config);
+        assert_eq!(expect.splits.len(), got.splits.len());
+        for (a, b) in expect.splits.iter().zip(&got.splits) {
+            assert_eq!(a.preferred, b.preferred);
+        }
+    }
+
+    #[test]
+    fn splits_tile_the_configured_input() {
+        let cluster = Cluster::paper_cluster();
+        let config = JobConfig::paper_default(17, 9);
+        let ctx = JobContext::for_job(&cluster, &config);
+        assert_eq!(ctx.splits.len(), config.map_tasks() as usize);
+        let total: u64 = ctx.splits.iter().map(|s| s.len).sum();
+        assert_eq!(total, config.input_bytes);
+        assert_eq!(ctx.shape().map_tasks, config.map_tasks());
+    }
+}

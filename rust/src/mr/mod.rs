@@ -11,12 +11,14 @@
 //! [`crate::api::engine`]; both execute the same app definitions.
 
 pub mod config;
+pub mod context;
 pub mod cost;
 pub mod outcome;
 pub mod runner;
 pub mod split;
 
 pub use config::JobConfig;
+pub use context::{ContextShape, JobContext};
 pub use outcome::{JobResult, TaskStat};
-pub use runner::run_job;
+pub use runner::{run_job, run_job_in};
 pub use split::{plan_splits, SplitPlan};

@@ -15,14 +15,14 @@
 //! so a `(cluster, app, config)` triple is exactly reproducible.
 
 use crate::cluster::Cluster;
-use crate::dfs::NameNode;
 use crate::sim::{EventQueue, SimTime};
 use crate::util::rng::Rng;
 
 use super::config::JobConfig;
+use super::context::{JobContext, JOB_SEED_SALT};
 use super::cost::{self, AppProfile, JOB_OVERHEAD_S};
 use super::outcome::{Counters, JobResult, TaskStat};
-use super::split::{plan_splits, SplitPlan};
+use super::split::SplitPlan;
 
 #[derive(Clone, Debug)]
 enum Ev {
@@ -35,8 +35,10 @@ enum Ev {
 /// One task attempt: (attempt id, node, start, expected end, local).
 type Attempt = (u32, usize, SimTime, SimTime, bool);
 
-struct MapTask {
-    split: SplitPlan,
+struct MapTask<'a> {
+    /// Borrowed from the shared [`JobContext`]: splits are session-level
+    /// data, so repetitions must not re-clone 128 plans per run.
+    split: &'a SplitPlan,
     done: bool,
     end: SimTime,
     speculated: bool,
@@ -48,17 +50,42 @@ struct MapTask {
 
 /// Simulate one job run; returns the paper's dependent variable (total
 /// execution time) plus the full phase/task breakdown.
+///
+/// Plans a private [`JobContext`] from the run seed (bit-identical to the
+/// historical inline planning) and delegates to [`run_job_in`].  Callers
+/// that run the same shape repeatedly — campaigns, grid sweeps, what-if
+/// replays — should build one context and use [`run_job_in`] directly
+/// (the [`crate::profiler::CampaignExecutor`] does exactly that).
 pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobResult {
+    let ctx = JobContext::for_job(cluster, config);
+    run_job_in(cluster, app, config, &ctx)
+}
+
+/// Simulate one job run against a pre-planned, shared [`JobContext`].
+///
+/// The context must have been planned for this `(cluster, config)` shape
+/// (see [`JobContext::matches`]); only the event simulation — task noise,
+/// heartbeats, shuffle skew, run-level "temporal changes" — draws from
+/// `config.seed` here, so repetitions can borrow one layout.
+pub fn run_job_in(
+    cluster: &Cluster,
+    app: &AppProfile,
+    config: &JobConfig,
+    ctx: &JobContext,
+) -> JobResult {
     config.validate().expect("invalid job config");
-    let rng = Rng::new(config.seed ^ 0x6a6f_625f_7275_6e73);
+    assert!(
+        ctx.matches(cluster, config),
+        "JobContext shape {:?} does not match this (cluster, config)",
+        ctx.shape()
+    );
+    let rng = Rng::new(config.seed ^ JOB_SEED_SALT);
+    // One event queue drives the whole job; its clock (`now()`) is the
+    // simulation clock for both phases.
     let mut q: EventQueue<Ev> = EventQueue::new();
 
-    // ---- input layout: balanced ingest across the cluster
-    let mut nn = NameNode::new(cluster.num_nodes(), config.replication);
-    let file =
-        nn.plan_balanced_file("/job/input", config.input_bytes, &mut rng.fork(1));
-    let num_tasks = config.map_tasks();
-    let splits = plan_splits(&file, num_tasks);
+    // ---- input layout: planned once in the shared context
+    let num_tasks = ctx.shape().map_tasks;
 
     // ---- per-node slot state (local copy; the shared Cluster is immutable)
     let mut free_map: Vec<u32> = cluster.nodes.iter().map(|n| n.spec.map_slots).collect();
@@ -66,8 +93,9 @@ pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobRe
         cluster.nodes.iter().map(|n| n.spec.reduce_slots).collect();
 
     let mut counters = Counters::default();
-    let mut maps: Vec<MapTask> = splits
-        .into_iter()
+    let mut maps: Vec<MapTask<'_>> = ctx
+        .splits
+        .iter()
         .map(|split| MapTask {
             split,
             done: false,
@@ -123,7 +151,7 @@ pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobRe
 
     // Locality-aware pick: first pending split preferring `node`, else the
     // first pending split (rack/any fallback — one rack here).
-    let pick_for = |pending: &mut Vec<u32>, maps: &[MapTask], node: usize| -> Option<u32> {
+    let pick_for = |pending: &mut Vec<u32>, maps: &[MapTask<'_>], node: usize| -> Option<u32> {
         let pos = pending
             .iter()
             .position(|&i| maps[i as usize].split.preferred.contains(&node))
@@ -155,9 +183,10 @@ pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobRe
     let mut slowstart_time: Option<SimTime> = None;
     let mut map_phase_end = t0;
 
-    while let Some((now, ev)) = q.pop() {
+    while let Some((_, ev)) = q.pop() {
+        let now = q.now();
         let Ev::MapDone(idx, attempt) = ev else {
-            unreachable!("reduce events are simulated in phase 2")
+            unreachable!("reduce events are scheduled only after the map phase")
         };
         let iu = idx as usize;
         // Find this attempt; release its slot.
@@ -249,8 +278,10 @@ pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobRe
 
     // ---- reduce phase DES
     // Reducers launch at slowstart (or when a slot frees), fetch overlapped
-    // with remaining maps, then merge/reduce/write.
-    let mut q: EventQueue<Ev> = EventQueue::new();
+    // with remaining maps, then merge/reduce/write.  The same queue keeps
+    // driving the clock; it is rebased to the slowstart instant because
+    // reducers launch before the last (possibly speculative) map event.
+    q.rebase(slowstart_time);
     let mut reduce_stats: Vec<TaskStat> = Vec::new();
     let cpu_acc = std::cell::Cell::new(0.0f64);
     let mut red_pending: Vec<u32> = (0..config.num_reducers).collect();
@@ -333,7 +364,8 @@ pub fn run_job(cluster: &Cluster, app: &AppProfile, config: &JobConfig) -> JobRe
     }
 
     let mut last_end = map_phase_end;
-    while let Some((now, ev)) = q.pop() {
+    while let Some((_, ev)) = q.pop() {
+        let now = q.now();
         let Ev::ReduceDone(r) = ev else { unreachable!() };
         let node = reduce_stats.iter().find(|t| t.index == r).unwrap().node;
         free_red[node] += 1;
@@ -397,6 +429,46 @@ mod tests {
             let res = run_job(&cluster, &app, &config);
             assert_eq!(res.maps.len(), 128, "hint {hint}");
         }
+    }
+
+    #[test]
+    fn run_job_in_with_for_job_context_matches_run_job() {
+        let cluster = Cluster::paper_cluster();
+        let app = test_profile(false);
+        let config = JobConfig::paper_default(20, 5).with_seed(77);
+        let a = run_job(&cluster, &app, &config);
+        let ctx = JobContext::for_job(&cluster, &config);
+        let b = run_job_in(&cluster, &app, &config, &ctx);
+        assert_eq!(a.total_time_s, b.total_time_s);
+        assert_eq!(a.counters.shuffle_bytes, b.counters.shuffle_bytes);
+        assert_eq!(a.maps.len(), b.maps.len());
+        assert_eq!(a.reduces.len(), b.reduces.len());
+    }
+
+    #[test]
+    fn shared_context_isolates_layout_from_run_noise() {
+        let cluster = Cluster::paper_cluster();
+        let app = test_profile(false);
+        let base = JobConfig::paper_default(20, 5);
+        let ctx = JobContext::for_session(&cluster, &base, 9);
+        let a = run_job_in(&cluster, &app, &base.clone().with_seed(1), &ctx);
+        let b = run_job_in(&cluster, &app, &base.clone().with_seed(2), &ctx);
+        assert_ne!(a.total_time_s, b.total_time_s, "run noise still per-seed");
+        // Same seed + same context is exactly reproducible.
+        let a2 = run_job_in(&cluster, &app, &base.clone().with_seed(1), &ctx);
+        assert_eq!(a.total_time_s, a2.total_time_s);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn mismatched_context_rejected() {
+        let cluster = Cluster::paper_cluster();
+        let app = test_profile(false);
+        let config = JobConfig::paper_default(20, 5);
+        let mut other = config.clone();
+        other.input_bytes /= 2;
+        let ctx = JobContext::for_session(&cluster, &other, 1);
+        run_job_in(&cluster, &app, &config, &ctx);
     }
 
     #[test]

@@ -9,7 +9,8 @@ use crate::cluster::Cluster;
 use crate::util::rng::Rng;
 
 use super::dataset::Dataset;
-use super::experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
+use super::executor::CampaignExecutor;
+use super::experiment::{ExperimentResult, ExperimentSpec, REPS};
 
 /// Parameter range studied by the paper.
 pub const PARAM_MIN: u32 = 5;
@@ -25,20 +26,38 @@ pub struct Campaign {
 }
 
 impl Campaign {
-    /// Run every experiment, returning both raw results and the dataset.
+    /// Run every experiment serially, returning both raw results and the
+    /// dataset.  Shorthand for [`Campaign::run_with`] on a one-shot serial
+    /// executor; callers running several campaigns (or wanting the worker
+    /// pool) should share one [`CampaignExecutor`] instead.
     pub fn run(&self, cluster: &Cluster) -> (Vec<ExperimentResult>, Dataset) {
-        let results: Vec<ExperimentResult> = self
-            .specs
-            .iter()
-            .map(|s| run_experiment(cluster, s, self.reps, self.base_seed))
-            .collect();
-        let ds = Dataset::from_results(self.app, &results);
-        (results, ds)
+        self.run_with(cluster, &CampaignExecutor::serial())
+    }
+
+    /// Run every experiment through `executor` (parallel fan-out + rep
+    /// cache).  Results are in spec order and bit-identical to a serial
+    /// run for the same `base_seed`, whatever the worker count.
+    pub fn run_with(
+        &self,
+        cluster: &Cluster,
+        executor: &CampaignExecutor,
+    ) -> (Vec<ExperimentResult>, Dataset) {
+        executor.run_campaign(cluster, self)
     }
 }
 
+/// Number of distinct settings in the paper's `[PARAM_MIN, PARAM_MAX]^2`
+/// parameter lattice — the hard upper bound on any distinct sample.
+pub const LATTICE_SIZE: usize =
+    ((PARAM_MAX - PARAM_MIN + 1) * (PARAM_MAX - PARAM_MIN + 1)) as usize;
+
 /// Sample `n` distinct settings uniformly from the paper's range.
+///
+/// The lattice holds only [`LATTICE_SIZE`] (= 36 × 36 = 1296) distinct
+/// `(M, R)` pairs, so `n` is clamped to that bound — asking for more used
+/// to spin the rejection loop forever.
 pub fn random_specs(app: AppId, n: usize, rng: &mut Rng) -> Vec<ExperimentSpec> {
+    let n = n.min(LATTICE_SIZE);
     let mut specs = Vec::with_capacity(n);
     let mut seen = std::collections::HashSet::new();
     while specs.len() < n {
@@ -179,6 +198,21 @@ mod tests {
                 .collect();
             assert_eq!(set.len(), n);
         });
+    }
+
+    #[test]
+    fn random_specs_clamped_to_lattice() {
+        assert_eq!(LATTICE_SIZE, 1296);
+        let mut rng = Rng::new(5);
+        // Asking for more than the lattice holds must terminate with every
+        // distinct setting exactly once, not spin forever.
+        let specs = random_specs(AppId::WordCount, LATTICE_SIZE + 500, &mut rng);
+        assert_eq!(specs.len(), LATTICE_SIZE);
+        let set: std::collections::HashSet<(u32, u32)> = specs
+            .iter()
+            .map(|s| (s.num_mappers, s.num_reducers))
+            .collect();
+        assert_eq!(set.len(), LATTICE_SIZE);
     }
 
     #[test]

@@ -1,0 +1,402 @@
+//! Parallel, caching campaign executor.
+//!
+//! Profiling is the dominant cost of the paper's pipeline: every `(M, R)`
+//! setting is simulated [`super::experiment::REPS`] times and averaged
+//! (§IV.A), and grid sweeps (Fig. 4) multiply that by 64+ settings.  The
+//! executor rebuilds that path around two ideas:
+//!
+//! 1. **Fan-out.** Repetitions are independent by construction — every
+//!    rep derives its seed from `mix(base_seed, spec, rep)` and its HDFS
+//!    layout from a session-level [`JobContext`] — so misses fan out over
+//!    a `std::thread::scope` worker pool.  Results are assembled in input
+//!    order, making parallel output **bit-identical** to serial for any
+//!    worker count.
+//! 2. **Caching.** Completed reps are cached under `(spec, rep,
+//!    base_seed)`, so campaigns that overlap — train/test protocols, grid
+//!    sweeps revisiting training settings, scheduler what-if replays —
+//!    never re-simulate a setting.
+//!
+//! The executor runs the paper's standard job shape
+//! ([`JobConfig::paper_default`]); the extended 4-parameter sweeps in
+//! [`super::extended`] keep their own driver.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::apps::AppId;
+use crate::cluster::Cluster;
+use crate::mr::context::{ContextShape, JobContext};
+use crate::mr::cost::AppProfile;
+use crate::mr::{run_job_in, JobConfig};
+use crate::util::stats;
+
+use super::campaign::Campaign;
+use super::dataset::Dataset;
+use super::experiment::{mix, ExperimentResult, ExperimentSpec};
+
+/// Cache key for one simulated repetition.  Includes a fingerprint of the
+/// cluster the rep ran on: one long-lived executor may be queried with
+/// several clusters (capacity what-ifs), and times from one hardware model
+/// must never answer for another.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+struct RepKey {
+    cluster: u64,
+    app: AppId,
+    num_mappers: u32,
+    num_reducers: u32,
+    rep: u32,
+    base_seed: u64,
+}
+
+impl RepKey {
+    fn new(cluster_fp: u64, spec: &ExperimentSpec, rep: u32, base_seed: u64) -> RepKey {
+        RepKey {
+            cluster: cluster_fp,
+            app: spec.app,
+            num_mappers: spec.num_mappers,
+            num_reducers: spec.num_reducers,
+            rep,
+            base_seed,
+        }
+    }
+}
+
+/// Order-sensitive digest of every simulation-relevant cluster field.
+fn cluster_fingerprint(cluster: &Cluster) -> u64 {
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    cluster.num_nodes().hash(&mut h);
+    for node in &cluster.nodes {
+        let s = &node.spec;
+        s.cpu_ghz.to_bits().hash(&mut h);
+        s.ram_bytes.hash(&mut h);
+        s.disk_bytes.hash(&mut h);
+        s.cache_kb.hash(&mut h);
+        s.disk_read_mbps.to_bits().hash(&mut h);
+        s.disk_write_mbps.to_bits().hash(&mut h);
+        s.map_slots.hash(&mut h);
+        s.reduce_slots.hash(&mut h);
+    }
+    cluster.network.nic_bps.to_bits().hash(&mut h);
+    cluster.network.fetch_latency_s.to_bits().hash(&mut h);
+    cluster.network.nodes.hash(&mut h);
+    h.finish()
+}
+
+/// One unit of executor work: a single repetition of one setting within
+/// a profiling session.
+#[derive(Clone, Copy, Debug)]
+pub struct RepJob {
+    pub spec: ExperimentSpec,
+    pub rep: u32,
+    pub base_seed: u64,
+}
+
+impl RepJob {
+    fn key(&self, cluster_fp: u64) -> RepKey {
+        RepKey::new(cluster_fp, &self.spec, self.rep, self.base_seed)
+    }
+
+    fn config(&self) -> JobConfig {
+        JobConfig::paper_default(self.spec.num_mappers, self.spec.num_reducers)
+            .with_seed(mix(self.base_seed, &self.spec, self.rep))
+    }
+}
+
+/// The campaign executor: a worker pool plus a rep-level result cache.
+///
+/// One executor is meant to live for a whole analysis session (an `e2e`
+/// run, a CLI invocation, a service lifetime) so overlapping campaigns
+/// share both the cache and the per-session job contexts.
+pub struct CampaignExecutor {
+    jobs: usize,
+    cache: Mutex<HashMap<RepKey, f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CampaignExecutor {
+    /// Executor with `jobs` workers (clamped to at least 1).
+    pub fn new(jobs: usize) -> CampaignExecutor {
+        CampaignExecutor {
+            jobs: jobs.max(1),
+            cache: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Single-worker executor — the serial reference behaviour.
+    pub fn serial() -> CampaignExecutor {
+        CampaignExecutor::new(1)
+    }
+
+    /// Executor sized to the host: one worker per available core.
+    pub fn machine_sized() -> CampaignExecutor {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        CampaignExecutor::new(n)
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Reps answered without a fresh simulation (cache hits plus
+    /// duplicates coalesced within one call).
+    pub fn cache_hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Reps actually simulated so far.
+    pub fn cache_misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct reps currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().expect("executor cache poisoned").len()
+    }
+
+    /// Simulate every repetition in `items`, returning total execution
+    /// times in input order.
+    ///
+    /// Cached reps are returned without re-simulation; misses fan out over
+    /// the worker pool.  Output is bit-identical for any worker count:
+    /// each rep's seed and layout derive from `(base_seed, spec, rep)`
+    /// alone, never from scheduling order, and results are written back by
+    /// input index.
+    pub fn run_reps(&self, cluster: &Cluster, items: &[RepJob]) -> Vec<f64> {
+        let cluster_fp = cluster_fingerprint(cluster);
+        let mut out = vec![f64::NAN; items.len()];
+        // `todo` holds the first item index per distinct missing key;
+        // duplicate items within one call alias the same simulation.
+        let mut todo: Vec<usize> = Vec::new();
+        let mut alias: Vec<(usize, usize)> = Vec::new();
+        {
+            let cache = self.cache.lock().expect("executor cache poisoned");
+            let mut pending: HashMap<RepKey, usize> = HashMap::new();
+            for (i, item) in items.iter().enumerate() {
+                let key = item.key(cluster_fp);
+                if let Some(&t) = cache.get(&key) {
+                    out[i] = t;
+                } else if let Some(&k) = pending.get(&key) {
+                    alias.push((i, k));
+                } else {
+                    pending.insert(key, todo.len());
+                    todo.push(i);
+                }
+            }
+        }
+        self.hits
+            .fetch_add((items.len() - todo.len()) as u64, Ordering::Relaxed);
+        self.misses.fetch_add(todo.len() as u64, Ordering::Relaxed);
+        if todo.is_empty() {
+            return out;
+        }
+
+        // Build each distinct (shape, session) context and each distinct
+        // app profile once, up front and serially, so workers only pay for
+        // event simulation — the JobContext reuse contract.  `ctx_keys[k]`
+        // and `cfgs[k]` resolve todo item `k` without re-deriving anything.
+        let mut contexts: HashMap<(ContextShape, u64), JobContext> = HashMap::new();
+        let mut profiles: HashMap<AppId, AppProfile> = HashMap::new();
+        let mut ctx_keys: Vec<(ContextShape, u64)> = Vec::with_capacity(todo.len());
+        let mut cfgs: Vec<JobConfig> = Vec::with_capacity(todo.len());
+        for &i in &todo {
+            let item = &items[i];
+            let config = item.config();
+            let key = (ContextShape::of(cluster, &config), item.base_seed);
+            contexts
+                .entry(key)
+                .or_insert_with(|| JobContext::for_session(cluster, &config, item.base_seed));
+            profiles
+                .entry(item.spec.app)
+                .or_insert_with(|| item.spec.app.profile());
+            ctx_keys.push(key);
+            cfgs.push(config);
+        }
+
+        // Each todo item k simulates items[todo[k]] against its context.
+        let run_one = |k: usize| -> f64 {
+            let item = &items[todo[k]];
+            let ctx = &contexts[&ctx_keys[k]];
+            let profile = &profiles[&item.spec.app];
+            run_job_in(cluster, profile, &cfgs[k], ctx).total_time_s
+        };
+
+        let workers = self.jobs.min(todo.len());
+        if workers <= 1 {
+            for k in 0..todo.len() {
+                out[todo[k]] = run_one(k);
+            }
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let computed: Vec<(usize, f64)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|_| {
+                        scope.spawn(|| {
+                            let mut local = Vec::new();
+                            loop {
+                                let k = cursor.fetch_add(1, Ordering::Relaxed);
+                                if k >= todo.len() {
+                                    break;
+                                }
+                                local.push((todo[k], run_one(k)));
+                            }
+                            local
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("executor worker panicked"))
+                    .collect()
+            });
+            for (i, t) in computed {
+                out[i] = t;
+            }
+        }
+
+        for &(i, k) in &alias {
+            out[i] = out[todo[k]];
+        }
+
+        let mut cache = self.cache.lock().expect("executor cache poisoned");
+        for &i in &todo {
+            cache.insert(items[i].key(cluster_fp), out[i]);
+        }
+        out
+    }
+
+    /// Run `reps` repetitions of every spec (one profiling session keyed
+    /// by `base_seed`), returning per-spec averaged results in spec order.
+    pub fn run_specs(
+        &self,
+        cluster: &Cluster,
+        specs: &[ExperimentSpec],
+        reps: u32,
+        base_seed: u64,
+    ) -> Vec<ExperimentResult> {
+        let items: Vec<RepJob> = specs
+            .iter()
+            .flat_map(|s| (0..reps).map(move |rep| RepJob { spec: *s, rep, base_seed }))
+            .collect();
+        let times = self.run_reps(cluster, &items);
+        specs
+            .iter()
+            .enumerate()
+            .map(|(si, s)| {
+                let lo = si * reps as usize;
+                let rep_times_s = times[lo..lo + reps as usize].to_vec();
+                ExperimentResult {
+                    spec: *s,
+                    mean_time_s: stats::mean(&rep_times_s),
+                    rep_times_s,
+                }
+            })
+            .collect()
+    }
+
+    /// Run a whole campaign, returning raw results and the fitted-on
+    /// dataset — the executor-backed replacement for `Campaign::run`.
+    pub fn run_campaign(
+        &self,
+        cluster: &Cluster,
+        campaign: &Campaign,
+    ) -> (Vec<ExperimentResult>, Dataset) {
+        let results =
+            self.run_specs(cluster, &campaign.specs, campaign.reps, campaign.base_seed);
+        let ds = Dataset::from_results(campaign.app, &results);
+        (results, ds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(m: u32, r: u32) -> ExperimentSpec {
+        ExperimentSpec::new(AppId::WordCount, m, r)
+    }
+
+    #[test]
+    fn serial_and_parallel_reps_are_bit_identical() {
+        let cluster = Cluster::paper_cluster();
+        let specs = [spec(10, 10), spec(20, 5), spec(35, 30)];
+        let serial = CampaignExecutor::serial().run_specs(&cluster, &specs, 3, 11);
+        for jobs in [2, 4] {
+            let par = CampaignExecutor::new(jobs).run_specs(&cluster, &specs, 3, 11);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.rep_times_s, b.rep_times_s, "jobs={jobs}");
+                assert_eq!(a.mean_time_s, b.mean_time_s, "jobs={jobs}");
+            }
+        }
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let cluster = Cluster::paper_cluster();
+        let exec = CampaignExecutor::new(2);
+        let specs = [spec(10, 10), spec(20, 5)];
+        exec.run_specs(&cluster, &specs, 2, 3);
+        assert_eq!(exec.cache_misses(), 4);
+        assert_eq!(exec.cache_hits(), 0);
+        assert_eq!(exec.cache_len(), 4);
+        // Re-running the same session is pure cache.
+        let again = exec.run_specs(&cluster, &specs, 2, 3);
+        assert_eq!(exec.cache_misses(), 4);
+        assert_eq!(exec.cache_hits(), 4);
+        assert!(again.iter().all(|r| r.rep_times_s.iter().all(|t| t.is_finite())));
+        // A different session seed must not hit.
+        exec.run_specs(&cluster, &specs, 2, 4);
+        assert_eq!(exec.cache_misses(), 8);
+        assert_eq!(exec.cache_hits(), 4);
+    }
+
+    #[test]
+    fn cached_values_equal_fresh_computation() {
+        let cluster = Cluster::paper_cluster();
+        let exec = CampaignExecutor::new(2);
+        let warm = exec.run_specs(&cluster, &[spec(20, 5)], 2, 9);
+        let cached = exec.run_specs(&cluster, &[spec(20, 5)], 2, 9);
+        let fresh = CampaignExecutor::serial().run_specs(&cluster, &[spec(20, 5)], 2, 9);
+        assert_eq!(warm[0].rep_times_s, cached[0].rep_times_s);
+        assert_eq!(warm[0].rep_times_s, fresh[0].rep_times_s);
+    }
+
+    #[test]
+    fn duplicate_items_in_one_call_are_coalesced() {
+        let cluster = Cluster::paper_cluster();
+        let exec = CampaignExecutor::new(4);
+        let items = [RepJob { spec: spec(20, 5), rep: 0, base_seed: 1 }; 3];
+        let times = exec.run_reps(&cluster, &items);
+        assert_eq!(exec.cache_misses(), 1, "one simulation for three duplicates");
+        assert_eq!(exec.cache_hits(), 2);
+        assert_eq!(times[0], times[1]);
+        assert_eq!(times[1], times[2]);
+    }
+
+    #[test]
+    fn cache_is_cluster_aware() {
+        let paper = Cluster::paper_cluster();
+        let mut big = Cluster::paper_cluster();
+        for n in &mut big.nodes {
+            n.spec.map_slots += 2;
+        }
+        let exec = CampaignExecutor::serial();
+        let a = exec.run_specs(&paper, &[spec(20, 5)], 1, 7);
+        let b = exec.run_specs(&big, &[spec(20, 5)], 1, 7);
+        // Same (spec, rep, base_seed) on a different cluster must be a
+        // fresh simulation, not a stale hit.
+        assert_eq!(exec.cache_misses(), 2);
+        assert_eq!(exec.cache_hits(), 0);
+        assert_ne!(a[0].rep_times_s, b[0].rep_times_s);
+    }
+
+    #[test]
+    fn executor_clamps_zero_jobs() {
+        assert_eq!(CampaignExecutor::new(0).jobs(), 1);
+        assert!(CampaignExecutor::machine_sized().jobs() >= 1);
+    }
+}

@@ -2,8 +2,9 @@
 
 use crate::apps::AppId;
 use crate::cluster::Cluster;
-use crate::mr::{run_job, JobConfig};
 use crate::util::stats;
+
+use super::executor::CampaignExecutor;
 
 /// The paper repeats every experiment five times and keeps the mean
 /// (§IV.A: "we run an experiment five times and then the mean of these
@@ -50,31 +51,27 @@ impl ExperimentResult {
 ///
 /// `base_seed` identifies the profiling session; each repetition derives
 /// `seed = hash(base_seed, spec, rep)` so experiments are independent and
-/// the whole campaign is reproducible.
+/// the whole campaign is reproducible.  The HDFS layout is a session-level
+/// artifact (planned once per `(base_seed, shape)` and shared by all
+/// repetitions — see [`crate::mr::JobContext`]); this is a convenience
+/// wrapper over a one-shot serial [`CampaignExecutor`], so it agrees
+/// bit-for-bit with executor-driven campaigns.
 pub fn run_experiment(
     cluster: &Cluster,
     spec: &ExperimentSpec,
     reps: u32,
     base_seed: u64,
 ) -> ExperimentResult {
-    let app = spec.app.profile();
-    let mut rep_times_s = Vec::with_capacity(reps as usize);
-    for rep in 0..reps {
-        let seed = mix(base_seed, spec, rep);
-        let config =
-            JobConfig::paper_default(spec.num_mappers, spec.num_reducers)
-                .with_seed(seed);
-        let result = run_job(cluster, &app, &config);
-        rep_times_s.push(result.total_time_s);
-    }
-    ExperimentResult {
-        spec: *spec,
-        mean_time_s: stats::mean(&rep_times_s),
-        rep_times_s,
-    }
+    CampaignExecutor::serial()
+        .run_specs(cluster, std::slice::from_ref(spec), reps, base_seed)
+        .pop()
+        .expect("one spec in, one result out")
 }
 
-fn mix(base: u64, spec: &ExperimentSpec, rep: u32) -> u64 {
+/// Derive the run seed for one repetition of one setting within a
+/// profiling session — the executor's determinism contract hinges on this
+/// depending only on `(base_seed, spec, rep)`.
+pub(crate) fn mix(base: u64, spec: &ExperimentSpec, rep: u32) -> u64 {
     let mut h = base ^ 0x9E37_79B9_7F4A_7C15;
     for v in [
         spec.app as u64,

@@ -6,9 +6,11 @@
 
 pub mod campaign;
 pub mod dataset;
+pub mod executor;
 pub mod experiment;
 pub mod extended;
 
 pub use campaign::{paper_campaign, Campaign};
 pub use dataset::Dataset;
+pub use executor::{CampaignExecutor, RepJob};
 pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};

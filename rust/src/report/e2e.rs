@@ -25,6 +25,7 @@ use crate::apps::{profiles, AppId};
 use crate::model::regression::{RegressionModel, RustSolverBackend};
 use crate::model::features::NUM_FEATURES;
 use crate::model::FitBackend;
+use crate::profiler::CampaignExecutor;
 use crate::util::bytes::fmt_secs;
 use crate::util::rng::Rng;
 
@@ -40,8 +41,17 @@ pub struct E2eOutcome {
     pub headline_reproduced: bool,
 }
 
+/// Run the validation with a machine-sized profiling executor (output is
+/// bit-identical whatever the worker count).
 pub fn run(seed: u64) -> Result<E2eOutcome, String> {
-    println!("=== mrtuner end-to-end validation (seed {seed}) ===\n");
+    run_with(seed, &CampaignExecutor::machine_sized())
+}
+
+pub fn run_with(seed: u64, executor: &CampaignExecutor) -> Result<E2eOutcome, String> {
+    println!(
+        "=== mrtuner end-to-end validation (seed {seed}, {} profiling workers) ===\n",
+        executor.jobs()
+    );
 
     // ---- step 1: functional execution on real bytes -------------------
     println!("[1/6] functional MapReduce execution on generated data");
@@ -127,8 +137,8 @@ pub fn run(seed: u64) -> Result<E2eOutcome, String> {
     println!("[3/6] profiling campaigns (20 settings x 5 reps, simulated 4-node cluster)");
     println!("[4/6] fit via AOT artifact (PJRT) with pure-Rust cross-check");
     println!("[5/6] predict 20 held-out settings per app");
-    let wc = experiments::fig3(AppId::WordCount, seed);
-    let ex = experiments::fig3(AppId::EximParse, seed);
+    let wc = experiments::fig3_with(executor, AppId::WordCount, seed);
+    let ex = experiments::fig3_with(executor, AppId::EximParse, seed);
 
     // Cross-check the production backend against the baseline solver.
     let mut baseline = RustSolverBackend;
@@ -156,11 +166,17 @@ pub fn run(seed: u64) -> Result<E2eOutcome, String> {
 
     // ---- step 6: surface sanity ---------------------------------------
     println!("[6/6] Fig. 4 surface spot-check (step-5 lattice, 3 reps)");
-    let surf = experiments::fig4(AppId::WordCount, 5, 3, seed);
+    let surf = experiments::fig4_with(executor, AppId::WordCount, 5, 3, seed);
     let (bm, br) = surf.argmin();
     println!(
         "      wordcount minimum at M={bm}, R={br} (paper: 20, 5), mean {}",
         fmt_secs(surf.mean_time())
+    );
+    println!(
+        "      profiling executor: {} simulated reps, {} cache hits, {} workers",
+        executor.cache_misses(),
+        executor.cache_hits(),
+        executor.jobs()
     );
 
     let headline = wc.errors.mean_pct() < 5.0 && ex.errors.mean_pct() < 5.0;
@@ -186,10 +202,11 @@ pub fn run(seed: u64) -> Result<E2eOutcome, String> {
 // Save a fitted model for later `mrtuner predict` convenience.
 pub fn save_models(seed: u64, dir: &std::path::Path) -> Result<(), String> {
     let cluster = crate::cluster::Cluster::paper_cluster();
+    let executor = CampaignExecutor::machine_sized();
     let (mut backend, _) = experiments::default_backend();
     for app in AppId::paper_apps() {
         let (train, _) = crate::profiler::paper_campaign(app, seed);
-        let (_, ds) = train.run(&cluster);
+        let (_, ds) = train.run_with(&cluster, &executor);
         let model = RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
         let path = dir.join(format!("{}_model.json", app.name()));
         model.save(&path).map_err(|e| e.to_string())?;

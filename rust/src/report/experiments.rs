@@ -11,7 +11,7 @@ use crate::cluster::Cluster;
 use crate::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
 use crate::model::PredictionErrors;
 use crate::profiler::campaign::{grid_specs, paper_campaign};
-use crate::profiler::{Dataset, ExperimentSpec};
+use crate::profiler::{CampaignExecutor, Dataset, ExperimentSpec};
 use crate::runtime::{artifacts, XlaBackend};
 
 /// Pick the production backend when artifacts are built, else the
@@ -38,18 +38,25 @@ pub struct Fig3Data {
     pub train: Dataset,
 }
 
-/// Run the paper's Fig. 3 protocol for one application.
+/// Run the paper's Fig. 3 protocol for one application (serial executor).
 pub fn fig3(app: AppId, seed: u64) -> Fig3Data {
+    fig3_with(&CampaignExecutor::serial(), app, seed)
+}
+
+/// Fig. 3 protocol through a shared [`CampaignExecutor`]: both campaigns
+/// fan out over its worker pool, and overlapping settings (e.g. a later
+/// grid sweep at the same session seed) come from its cache.
+pub fn fig3_with(executor: &CampaignExecutor, app: AppId, seed: u64) -> Fig3Data {
     let cluster = Cluster::paper_cluster();
     let (train_c, test_c) = paper_campaign(app, seed);
-    let (_, train) = train_c.run(&cluster);
+    let (_, train) = executor.run_campaign(&cluster, &train_c);
     let (mut backend, backend_name) = default_backend();
     let model = RegressionModel::fit_dataset(backend.as_mut(), &train)
         .expect("fit must succeed on a 20-point campaign");
 
     // Held-out: run the *actual* experiments (new seeds = new wall-clock
     // runs) and predict them through the backend's batched predict.
-    let (_, test) = test_c.run(&cluster);
+    let (_, test) = executor.run_campaign(&cluster, &test_c);
     let predicted = backend
         .predict(&model.coeffs, &test.params)
         .expect("predict");
@@ -99,8 +106,22 @@ impl Fig4Data {
     }
 }
 
-/// Run the Fig. 4 sweep for one application on a `step`-spaced lattice.
+/// Run the Fig. 4 sweep for one application on a `step`-spaced lattice
+/// (serial executor).
 pub fn fig4(app: AppId, step: u32, reps: u32, seed: u64) -> Fig4Data {
+    fig4_with(&CampaignExecutor::serial(), app, step, reps, seed)
+}
+
+/// Fig. 4 sweep through a shared [`CampaignExecutor`]: the whole lattice
+/// (64+ settings × reps) is one fan-out over the worker pool, and settings
+/// already profiled at this session seed are cache hits.
+pub fn fig4_with(
+    executor: &CampaignExecutor,
+    app: AppId,
+    step: u32,
+    reps: u32,
+    seed: u64,
+) -> Fig4Data {
     let cluster = Cluster::paper_cluster();
     let specs = grid_specs(app, step);
     let mut ms: Vec<u32> = specs.iter().map(|s| s.num_mappers).collect();
@@ -110,11 +131,10 @@ pub fn fig4(app: AppId, step: u32, reps: u32, seed: u64) -> Fig4Data {
         .take_while(|s| s.num_mappers == specs[0].num_mappers)
         .map(|s| s.num_reducers)
         .collect();
-    let times: Vec<f64> = specs
-        .iter()
-        .map(|s| {
-            crate::profiler::run_experiment(&cluster, s, reps, seed).mean_time_s
-        })
+    let times: Vec<f64> = executor
+        .run_specs(&cluster, &specs, reps, seed)
+        .into_iter()
+        .map(|r| r.mean_time_s)
         .collect();
     Fig4Data { app, ms, rs, times }
 }
@@ -130,12 +150,17 @@ pub struct Table1Row {
     pub paper_variance_pct: f64,
 }
 
-/// Regenerate Table 1 (both paper applications).
+/// Regenerate Table 1 (both paper applications, serial executor).
 pub fn table1(seed: u64) -> Vec<Table1Row> {
+    table1_with(&CampaignExecutor::serial(), seed)
+}
+
+/// Table 1 through a shared [`CampaignExecutor`].
+pub fn table1_with(executor: &CampaignExecutor, seed: u64) -> Vec<Table1Row> {
     AppId::paper_apps()
         .into_iter()
         .map(|app| {
-            let d = fig3(app, seed);
+            let d = fig3_with(executor, app, seed);
             let (pm, pv) = match app {
                 AppId::WordCount => (0.9204, 2.6013),
                 AppId::EximParse => (2.7982, 6.7008),

@@ -91,6 +91,23 @@ impl<E> EventQueue<E> {
         self.push_at(self.now + delay, event);
     }
 
+    /// Rebase the clock to `at` for a new simulation phase.
+    ///
+    /// Phase-structured simulations (e.g. a map phase whose stragglers
+    /// outlive the point where the next phase logically starts) drain the
+    /// queue, then restart the clock at the next phase's origin.  Only
+    /// valid on an empty queue — rebasing with events pending would
+    /// reorder history.  `popped()` and FIFO sequence numbers continue
+    /// across phases.
+    pub fn rebase(&mut self, at: SimTime) {
+        assert!(
+            self.heap.is_empty(),
+            "rebase on a non-empty queue ({} events pending)",
+            self.heap.len()
+        );
+        self.now = at;
+    }
+
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         let s = self.heap.pop()?;
@@ -137,6 +154,30 @@ mod tests {
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, SimTime(15));
         assert_eq!(q.popped(), 2);
+    }
+
+    #[test]
+    fn rebase_starts_a_new_phase() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime(100), ());
+        q.pop();
+        assert_eq!(q.now(), SimTime(100));
+        // Drained: the clock may be rebased backwards for phase 2.
+        q.rebase(SimTime(40));
+        assert_eq!(q.now(), SimTime(40));
+        q.push_after(SimTime(5), ());
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, SimTime(45));
+        // popped() spans phases.
+        assert_eq!(q.popped(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty queue")]
+    fn rebase_rejects_pending_events() {
+        let mut q = EventQueue::new();
+        q.push_at(SimTime(10), ());
+        q.rebase(SimTime(0));
     }
 
     #[test]

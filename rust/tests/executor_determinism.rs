@@ -1,0 +1,94 @@
+//! Integration: the parallel campaign executor is a pure optimization —
+//! bit-identical results for any worker count, and a rep cache that turns
+//! overlapping campaigns (train/test protocols, grid sweeps, what-if
+//! replays) into lookups.
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::profiler::campaign::grid_specs;
+use mrtuner::profiler::{
+    paper_campaign, run_experiment, CampaignExecutor, ExperimentSpec,
+};
+use mrtuner::report::experiments::{fig4, fig4_with};
+
+#[test]
+fn parallel_campaign_bit_identical_to_serial() {
+    let cluster = Cluster::paper_cluster();
+    let (train, _) = paper_campaign(AppId::WordCount, 42);
+    let (serial_results, serial_ds) =
+        CampaignExecutor::serial().run_campaign(&cluster, &train);
+    for jobs in [4usize, 8] {
+        let (results, ds) = CampaignExecutor::new(jobs).run_campaign(&cluster, &train);
+        // Bit-level equality: same params, same times, same per-rep raws.
+        assert_eq!(ds.params, serial_ds.params, "jobs={jobs}");
+        assert_eq!(ds.times, serial_ds.times, "jobs={jobs}");
+        for (a, b) in results.iter().zip(&serial_results) {
+            assert_eq!(a.rep_times_s, b.rep_times_s, "jobs={jobs}");
+            assert_eq!(
+                a.mean_time_s.to_bits(),
+                b.mean_time_s.to_bits(),
+                "jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_fig4_surface_bit_identical_to_serial() {
+    let serial = fig4(AppId::EximParse, 7, 2, 9);
+    let par = fig4_with(&CampaignExecutor::new(4), AppId::EximParse, 7, 2, 9);
+    assert_eq!(serial.ms, par.ms);
+    assert_eq!(serial.rs, par.rs);
+    assert_eq!(serial.times, par.times);
+}
+
+#[test]
+fn overlapping_grid_and_train_specs_hit_the_cache() {
+    let cluster = Cluster::paper_cluster();
+    let exec = CampaignExecutor::new(4);
+    let seed = 21;
+    // "Training": a few hand-picked settings that sit on the step-7 grid.
+    let train: Vec<ExperimentSpec> = [(5, 5), (12, 19), (26, 33)]
+        .iter()
+        .map(|&(m, r)| ExperimentSpec::new(AppId::Grep, m, r))
+        .collect();
+    let train_results = exec.run_specs(&cluster, &train, 2, seed);
+    let misses_after_train = exec.cache_misses();
+    assert_eq!(misses_after_train, (train.len() * 2) as u64);
+    assert_eq!(exec.cache_hits(), 0);
+
+    // Grid sweep at the same session seed: the three shared settings come
+    // back from cache (both reps each), only the rest simulate.
+    let grid = grid_specs(AppId::Grep, 7);
+    assert!(train.iter().all(|t| grid
+        .iter()
+        .any(|g| (g.num_mappers, g.num_reducers) == (t.num_mappers, t.num_reducers))));
+    let grid_results = exec.run_specs(&cluster, &grid, 2, seed);
+    assert_eq!(exec.cache_hits(), (train.len() * 2) as u64);
+    assert_eq!(
+        exec.cache_misses(),
+        misses_after_train + ((grid.len() - train.len()) * 2) as u64
+    );
+
+    // Cached rows agree exactly with the original computation.
+    for t in &train_results {
+        let g = grid_results
+            .iter()
+            .find(|g| g.spec == t.spec)
+            .expect("shared setting present in grid results");
+        assert_eq!(g.rep_times_s, t.rep_times_s);
+    }
+}
+
+#[test]
+fn executor_agrees_with_run_experiment() {
+    let cluster = Cluster::paper_cluster();
+    let spec = ExperimentSpec::new(AppId::WordCount, 20, 5);
+    let direct = run_experiment(&cluster, &spec, 3, 77);
+    let via_exec = CampaignExecutor::new(4)
+        .run_specs(&cluster, &[spec], 3, 77)
+        .pop()
+        .unwrap();
+    assert_eq!(direct.rep_times_s, via_exec.rep_times_s);
+    assert_eq!(direct.mean_time_s, via_exec.mean_time_s);
+}
