@@ -14,8 +14,11 @@ use super::traits::{Combiner, Mapper, Partitioner, Reducer};
 
 /// Knobs mirroring the JobConf fields that matter functionally.
 pub struct ExecOptions<'a> {
+    /// Number of reduce partitions.
     pub num_reducers: u32,
+    /// Optional combiner run per split before the shuffle.
     pub combiner: Option<&'a dyn Combiner>,
+    /// Key → partition assignment.
     pub partitioner: &'a dyn Partitioner,
     /// Input split count (affects combiner aggregation scope, not results).
     pub num_splits: u32,
@@ -26,14 +29,21 @@ pub struct ExecOptions<'a> {
 pub struct JobOutput {
     /// Final output, one vec per reducer (sorted by key within each).
     pub partitions: Vec<Vec<Pair>>,
+    /// Input records read across all splits.
     pub input_records: u64,
+    /// Input bytes read.
     pub input_bytes: u64,
+    /// Records emitted by mappers (pre-combiner).
     pub map_output_records: u64,
+    /// Bytes emitted by mappers (pre-combiner).
     pub map_output_bytes: u64,
     /// After combiner (== map output if no combiner).
     pub shuffle_records: u64,
+    /// Bytes crossing the shuffle (post-combiner).
     pub shuffle_bytes: u64,
+    /// Records in the final output.
     pub output_records: u64,
+    /// Bytes in the final output.
     pub output_bytes: u64,
 }
 

@@ -5,11 +5,14 @@
 /// workloads the paper evaluates (WordCount, Exim mainlog lines).
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Pair {
+    /// The record key (sort/shuffle identity).
     pub key: String,
+    /// The record value.
     pub value: String,
 }
 
 impl Pair {
+    /// Convenience constructor from anything string-like.
     pub fn new(key: impl Into<String>, value: impl Into<String>) -> Pair {
         Pair { key: key.into(), value: value.into() }
     }

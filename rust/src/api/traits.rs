@@ -6,11 +6,13 @@ use super::kv::Pair;
 /// lines (key = byte offset rendered as string, value = the line), exactly
 /// like Hadoop's `TextInputFormat`.
 pub trait Mapper: Send + Sync {
+    /// Process one input record, appending intermediate pairs to `out`.
     fn map(&self, offset: u64, line: &str, out: &mut Vec<Pair>);
 }
 
 /// Folds all values sharing a key into output pairs.
 pub trait Reducer: Send + Sync {
+    /// Fold every value of `key` into zero or more output pairs.
     fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>);
 }
 
@@ -18,11 +20,13 @@ pub trait Reducer: Send + Sync {
 /// algebraically compatible with the reducer; correctness is property-
 /// tested per app (combiner on == combiner off).
 pub trait Combiner: Send + Sync {
+    /// Pre-aggregate the values of `key` seen within one split.
     fn combine(&self, key: &str, values: &[String], out: &mut Vec<Pair>);
 }
 
 /// Routes a key to one of `num_reducers` partitions.
 pub trait Partitioner: Send + Sync {
+    /// The partition (reducer index) `key` routes to.
     fn partition(&self, key: &str, num_reducers: u32) -> u32;
 }
 

@@ -10,6 +10,7 @@ use crate::api::{Combiner, Mapper, Pair, Reducer};
 
 /// Emits `<pattern, count>` for every line containing the pattern.
 pub struct GrepMapper {
+    /// Substring to search each line for.
     pub pattern: String,
 }
 

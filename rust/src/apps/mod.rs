@@ -22,12 +22,16 @@ use crate::mr::cost::AppProfile;
 /// The applications known to the framework.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum AppId {
+    /// The paper's first benchmark: Java WordCount.
     WordCount,
+    /// The paper's second benchmark: Exim mainlog parsing (streaming).
     EximParse,
+    /// Extension app: distributed grep.
     Grep,
 }
 
 impl AppId {
+    /// Parse a CLI/JSON app name (accepts common aliases).
     pub fn parse(name: &str) -> Result<AppId, String> {
         match name.to_ascii_lowercase().as_str() {
             "wordcount" | "wc" => Ok(AppId::WordCount),
@@ -39,6 +43,7 @@ impl AppId {
         }
     }
 
+    /// Canonical name (round-trips through [`AppId::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             AppId::WordCount => "wordcount",
@@ -47,6 +52,7 @@ impl AppId {
         }
     }
 
+    /// Every application, paper benchmarks first.
     pub fn all() -> [AppId; 3] {
         [AppId::WordCount, AppId::EximParse, AppId::Grep]
     }

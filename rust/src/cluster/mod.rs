@@ -18,11 +18,14 @@ use crate::util::bytes::{GB, MB};
 /// A cluster: node specs plus derived runtime state.
 #[derive(Clone, Debug)]
 pub struct Cluster {
+    /// Worker nodes (index == [`Node::id`]).
     pub nodes: Vec<Node>,
+    /// Shared network model.
     pub network: Network,
 }
 
 impl Cluster {
+    /// Build a cluster from node specs and a network description.
     pub fn new(specs: Vec<NodeSpec>, network: Network) -> Cluster {
         let nodes = specs.into_iter().enumerate().map(|(i, s)| Node::new(i, s)).collect();
         Cluster { nodes, network }
@@ -66,14 +69,17 @@ impl Cluster {
         )
     }
 
+    /// Number of worker nodes.
     pub fn num_nodes(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Cluster-wide map-slot capacity.
     pub fn total_map_slots(&self) -> u32 {
         self.nodes.iter().map(|n| n.spec.map_slots).sum()
     }
 
+    /// Cluster-wide reduce-slot capacity.
     pub fn total_reduce_slots(&self) -> u32 {
         self.nodes.iter().map(|n| n.spec.reduce_slots).sum()
     }

@@ -12,10 +12,12 @@ pub struct Network {
     pub nic_bps: f64,
     /// Per-connection setup latency (TCP + Jetty fetch handshake), seconds.
     pub fetch_latency_s: f64,
+    /// Number of attached nodes.
     pub nodes: usize,
 }
 
 impl Network {
+    /// 100 Mbit/s switched Ethernet (for what-if comparisons).
     pub fn switched_ethernet_100mbps(nodes: usize) -> Network {
         Network {
             nic_bps: 100.0e6 / 8.0, // 100 Mbit/s -> 12.5 MB/s

@@ -2,45 +2,57 @@
 
 use super::spec::NodeSpec;
 
+/// Node index within its cluster.
 pub type NodeId = usize;
 
 /// A worker node: immutable spec plus live slot accounting.
 #[derive(Clone, Debug)]
 pub struct Node {
+    /// Index within the cluster's node list.
     pub id: NodeId,
+    /// Immutable hardware description.
     pub spec: NodeSpec,
+    /// Map slots currently running a task.
     pub busy_map_slots: u32,
+    /// Reduce slots currently running a task.
     pub busy_reduce_slots: u32,
 }
 
 impl Node {
+    /// Fresh node with all slots free.
     pub fn new(id: NodeId, spec: NodeSpec) -> Node {
         Node { id, spec, busy_map_slots: 0, busy_reduce_slots: 0 }
     }
 
+    /// Map slots available right now.
     pub fn free_map_slots(&self) -> u32 {
         self.spec.map_slots - self.busy_map_slots
     }
 
+    /// Reduce slots available right now.
     pub fn free_reduce_slots(&self) -> u32 {
         self.spec.reduce_slots - self.busy_reduce_slots
     }
 
+    /// Occupy one map slot (panics on overdraw — a scheduler bug).
     pub fn take_map_slot(&mut self) {
         assert!(self.free_map_slots() > 0, "no free map slot on node {}", self.id);
         self.busy_map_slots += 1;
     }
 
+    /// Free one map slot (panics on underflow — a scheduler bug).
     pub fn release_map_slot(&mut self) {
         assert!(self.busy_map_slots > 0, "map slot underflow on node {}", self.id);
         self.busy_map_slots -= 1;
     }
 
+    /// Occupy one reduce slot (panics on overdraw — a scheduler bug).
     pub fn take_reduce_slot(&mut self) {
         assert!(self.free_reduce_slots() > 0, "no free reduce slot on node {}", self.id);
         self.busy_reduce_slots += 1;
     }
 
+    /// Free one reduce slot (panics on underflow — a scheduler bug).
     pub fn release_reduce_slot(&mut self) {
         assert!(self.busy_reduce_slots > 0, "reduce slot underflow on node {}", self.id);
         self.busy_reduce_slots -= 1;

@@ -4,18 +4,24 @@
 /// [`crate::cluster::Cluster::paper_cluster`]).
 #[derive(Clone, Debug, PartialEq)]
 pub struct NodeSpec {
+    /// Human-readable label (diagnostics only).
     pub name: String,
     /// CPU clock — the paper's primary heterogeneity axis; task CPU cost
     /// scales as `work / cpu_ghz`.
     pub cpu_ghz: f64,
+    /// Physical RAM.
     pub ram_bytes: u64,
+    /// Local disk capacity.
     pub disk_bytes: u64,
+    /// CPU cache size (paper reports it per node; minor cost-model input).
     pub cache_kb: u64,
-    /// Sequential read/write bandwidth (2011-era SATA).
+    /// Sequential read bandwidth (2011-era SATA).
     pub disk_read_mbps: f64,
+    /// Sequential write bandwidth.
     pub disk_write_mbps: f64,
-    /// Hadoop 0.20 fixed slot model.
+    /// Hadoop 0.20 fixed slot model: concurrent map tasks.
     pub map_slots: u32,
+    /// Concurrent reduce tasks.
     pub reduce_slots: u32,
 }
 

@@ -12,6 +12,7 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running prediction server.
     pub fn connect(addr: &str) -> std::io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let writer = stream.try_clone()?;

@@ -24,7 +24,8 @@ pub mod service;
 
 pub use registry::ModelRegistry;
 pub use scheduler::{
-    evaluate_order, fifo_order, predicted_times, sjf_order, what_if, JobRequest,
+    evaluate_order, fifo_order, predicted_times, sjf_order, what_if,
+    what_if_with_stats, JobRequest,
 };
 pub use server::Server;
 pub use service::{PredictionService, ServiceConfig, ServiceMetrics};

@@ -17,38 +17,47 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// Empty registry.
     pub fn new() -> ModelRegistry {
         ModelRegistry::default()
     }
 
+    /// Insert (or replace) the model for its application.
     pub fn insert(&mut self, model: RegressionModel) {
         self.models.insert(model.app_name.clone(), model);
     }
 
+    /// The model for `app`, if one was uploaded.
     pub fn get(&self, app: &str) -> Option<&RegressionModel> {
         self.models.get(app)
     }
 
+    /// Remove and return the model for `app`.
     pub fn remove(&mut self, app: &str) -> Option<RegressionModel> {
         self.models.remove(app)
     }
 
+    /// Registered application names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
 
+    /// Number of registered models.
     pub fn len(&self) -> usize {
         self.models.len()
     }
 
+    /// Whether the registry holds no models.
     pub fn is_empty(&self) -> bool {
         self.models.is_empty()
     }
 
+    /// Serialize every model as a JSON array.
     pub fn to_json(&self) -> Json {
         Json::Arr(self.models.values().map(|m| m.to_json()).collect())
     }
 
+    /// Rebuild a registry from [`ModelRegistry::to_json`] output.
     pub fn from_json(v: &Json) -> Result<ModelRegistry, String> {
         let mut reg = ModelRegistry::new();
         for item in v.as_arr().ok_or("registry must be a JSON array")? {
@@ -57,10 +66,12 @@ impl ModelRegistry {
         Ok(reg)
     }
 
+    /// Persist to a JSON file.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string())
     }
 
+    /// Load from a file written by [`ModelRegistry::save`].
     pub fn load(path: &Path) -> Result<ModelRegistry, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         ModelRegistry::from_json(&parse(&text)?)

@@ -10,14 +10,17 @@
 use crate::apps::AppId;
 use crate::cluster::Cluster;
 use crate::mr::{run_job, JobConfig};
-use crate::profiler::{CampaignExecutor, ExperimentSpec, RepJob};
+use crate::profiler::{CampaignExecutor, ExecutorStats, ExperimentSpec, RepJob};
 use crate::util::stats;
 
 /// A job waiting in the submission queue.
 #[derive(Clone, Copy, Debug)]
 pub struct JobRequest {
+    /// Application to run.
     pub app: AppId,
+    /// Requested map-task count.
     pub num_mappers: u32,
+    /// Requested reduce-task count.
     pub num_reducers: u32,
     /// Seed for its eventual execution (a distinct wall-clock run).
     pub seed: u64,
@@ -64,7 +67,9 @@ where
 pub struct ScheduleOutcome {
     /// Completion time of each job in *submission index* order.
     pub completion_s: Vec<f64>,
+    /// Time when the last job finishes.
     pub makespan_s: f64,
+    /// Mean job completion time (the SJF objective).
     pub mean_completion_s: f64,
 }
 
@@ -157,6 +162,21 @@ pub fn what_if(
     replay(&predicted_times(executor, cluster, jobs), order)
 }
 
+/// [`what_if`] plus the executor's combined counters — how many of the
+/// replayed durations were simulated fresh vs answered from the
+/// in-memory cache or the persistent profile store.  Schedulers sharing
+/// a store across processes use this to confirm their what-ifs are
+/// warm-started rather than silently re-simulating the queue.
+pub fn what_if_with_stats(
+    executor: &CampaignExecutor,
+    cluster: &Cluster,
+    jobs: &[JobRequest],
+    order: &[usize],
+) -> (ScheduleOutcome, ExecutorStats) {
+    let outcome = what_if(executor, cluster, jobs, order);
+    (outcome, executor.stats())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +265,20 @@ mod tests {
         // Same work, same makespan; SJF no worse on mean completion.
         assert!((sjf.makespan_s - fifo.makespan_s).abs() < 1e-9);
         assert!(sjf.mean_completion_s <= fifo.mean_completion_s + 1e-9);
+    }
+
+    #[test]
+    fn what_if_with_stats_reports_counters() {
+        let cluster = Cluster::paper_cluster();
+        let js = jobs();
+        let exec = CampaignExecutor::new(2);
+        let (a, st1) = what_if_with_stats(&exec, &cluster, &js, &fifo_order(&js));
+        assert_eq!(st1.simulated, js.len() as u64);
+        assert!(!st1.store_attached);
+        let (b, st2) = what_if_with_stats(&exec, &cluster, &js, &fifo_order(&js));
+        assert_eq!(st2.simulated, js.len() as u64, "replay is pure cache");
+        assert!(st2.mem_hits >= js.len() as u64);
+        assert_eq!(a.completion_s, b.completion_s);
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::service::PredictionService;
 
 /// A running TCP server.
 pub struct Server {
+    /// The bound address (useful with ephemeral ports).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
@@ -64,6 +65,7 @@ impl Server {
         Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
     }
 
+    /// Stop accepting, drain connection threads, and join the acceptor.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {

@@ -39,9 +39,13 @@ impl Default for ServiceConfig {
 /// Service counters (all monotonic).
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
+    /// Predictions requested.
     pub requests: AtomicU64,
+    /// Backend executions (each serves one coalesced batch).
     pub batches: AtomicU64,
+    /// Backend calls that returned an error.
     pub backend_errors: AtomicU64,
+    /// Largest batch coalesced so far.
     pub max_batch_seen: AtomicU64,
 }
 
@@ -73,6 +77,7 @@ struct PredictReq {
 pub struct PredictionService {
     tx: Sender<Msg>,
     registry: Arc<RwLock<ModelRegistry>>,
+    /// Live service counters (shared with the worker thread).
     pub metrics: Arc<ServiceMetrics>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -146,6 +151,7 @@ impl PredictionService {
         self.registry.write().unwrap().insert(model);
     }
 
+    /// Names of the currently installed models.
     pub fn model_names(&self) -> Vec<String> {
         self.registry.read().unwrap().names()
     }

@@ -3,6 +3,7 @@
 use crate::cluster::node::NodeId;
 use crate::util::bytes::MB;
 
+/// Globally unique block identifier.
 pub type BlockId = u64;
 
 /// Hadoop 0.20 default dfs.block.size.
@@ -11,9 +12,11 @@ pub const DEFAULT_BLOCK_BYTES: u64 = 64 * MB;
 /// One replicated block of a file.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Block {
+    /// Unique id assigned by the NameNode.
     pub id: BlockId,
     /// Byte offset of this block within its file.
     pub offset: u64,
+    /// Block length in bytes (the tail block may be short).
     pub len: u64,
     /// Nodes holding a replica (first is the "primary" written locally).
     pub replicas: Vec<NodeId>,

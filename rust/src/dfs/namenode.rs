@@ -9,8 +9,11 @@ use crate::util::rng::Rng;
 /// Metadata for one stored file.
 #[derive(Clone, Debug)]
 pub struct FileMeta {
+    /// Full DFS path.
     pub path: String,
+    /// File length in bytes.
     pub len: u64,
+    /// Blocks sorted by offset.
     pub blocks: Vec<Block>,
 }
 
@@ -53,11 +56,14 @@ pub struct NameNode {
     files: BTreeMap<String, FileMeta>,
     next_block: BlockId,
     num_nodes: usize,
+    /// Effective replication factor (clamped to cluster size).
     pub replication: usize,
+    /// Block size used for new files.
     pub block_bytes: u64,
 }
 
 impl NameNode {
+    /// NameNode for a cluster of `num_nodes` with the given replication.
     pub fn new(num_nodes: usize, replication: usize) -> NameNode {
         assert!(num_nodes > 0);
         NameNode {
@@ -159,14 +165,17 @@ impl NameNode {
         self.files.get(path).unwrap()
     }
 
+    /// Metadata for `path`, if it exists.
     pub fn stat(&self, path: &str) -> Option<&FileMeta> {
         self.files.get(path)
     }
 
+    /// Remove `path`; returns whether it existed.
     pub fn delete(&mut self, path: &str) -> bool {
         self.files.remove(path).is_some()
     }
 
+    /// Number of stored files.
     pub fn num_files(&self) -> usize {
         self.files.len()
     }

@@ -21,6 +21,12 @@
 //!   and a predicted-time-aware job scheduler;
 //! * [`report`] — regeneration of every figure/table in the paper's
 //!   evaluation (Fig. 3, Fig. 4, Table 1).
+//!
+//! Prose documentation lives in `docs/ARCHITECTURE.md` (layer walkthrough,
+//! campaign/store data flow) and `docs/PAPER_MAPPING.md` (paper artifact →
+//! module/test index).
+
+#![warn(missing_docs)]
 
 pub mod api;
 pub mod apps;

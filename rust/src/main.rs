@@ -10,29 +10,66 @@
 //!   table1    regenerate Table 1 (both paper applications)
 //!   serve     start the TCP prediction service
 //!   e2e       full end-to-end validation (same driver as examples/e2e_repro)
+//!   store     inspect/compact/clear a persistent profile store
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
 use mrtuner::coordinator::{ModelRegistry, PredictionService, Server, ServiceConfig};
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig};
-use mrtuner::profiler::{paper_campaign, CampaignExecutor, Dataset};
+use mrtuner::profiler::{paper_campaign, CampaignExecutor, Dataset, ProfileStore};
 use mrtuner::report::{e2e, experiments, figure, table};
 use mrtuner::util::bytes::fmt_secs;
 use mrtuner::util::cli::Args;
 
+/// The machine-wide store directory from `MRTUNER_STORE`, if set.
+fn env_store_path() -> Option<String> {
+    std::env::var("MRTUNER_STORE").ok().filter(|s| !s.is_empty())
+}
+
+/// Resolve the persistent profile-store directory: `--store PATH` wins,
+/// then the `MRTUNER_STORE` environment variable; `--no-store` disables
+/// both (one-off cold runs, benchmarking).
+fn store_path_from(args: &Args) -> Option<String> {
+    let explicit = args.str_opt("store");
+    if args.switch("no-store") {
+        return None;
+    }
+    explicit.or_else(env_store_path)
+}
+
 /// Build the profiling executor from `--jobs N` (default: one worker per
-/// core).  Campaign output is bit-identical whatever the worker count.
+/// core), attaching the persistent profile store when one is configured.
+/// Campaign output is bit-identical whatever the worker count, and warm
+/// store runs are bit-identical to cold ones.
 fn executor_from(args: &Args) -> Result<CampaignExecutor, String> {
-    match args.str_opt("jobs") {
-        None => Ok(CampaignExecutor::machine_sized()),
+    let exec = match args.str_opt("jobs") {
+        None => CampaignExecutor::machine_sized(),
         Some(s) => {
             let n: u64 = s.parse().map_err(|_| format!("--jobs: bad integer '{s}'"))?;
-            Ok(CampaignExecutor::new(n as usize))
+            CampaignExecutor::new(n as usize)
         }
+    };
+    match store_path_from(args) {
+        Some(p) => {
+            let store = ProfileStore::open(Path::new(&p))?;
+            eprintln!(
+                "profile store: {} ({} stored reps)",
+                p,
+                store.len()
+            );
+            Ok(exec.with_store(store))
+        }
+        None => Ok(exec),
     }
+}
+
+/// One-line machine-greppable summary of where this invocation's reps
+/// came from (simulated vs in-memory vs on-disk).
+fn report_executor(executor: &CampaignExecutor) {
+    eprintln!("executor stats: {}", executor.stats());
 }
 
 fn main() {
@@ -54,6 +91,7 @@ fn main() {
         "table1" => cmd_table1(&args),
         "serve" => cmd_serve(&args),
         "e2e" => cmd_e2e(&args),
+        "store" => cmd_store(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -80,9 +118,15 @@ fn print_help() {
            fig4     --app A [--step N] [--reps N] [--csv FILE] [--jobs N]\n\
            table1   [--seed N] [--jobs N]                mean/variance of errors\n\
            serve    [--addr HOST:PORT] [--jobs N]        TCP prediction service\n\
-           e2e      [--seed N] [--jobs N]                full pipeline validation\n\n\
+           e2e      [--seed N] [--jobs N]                full pipeline validation\n\
+           store    <stats|compact|clear> --store PATH   persistent profile store\n\n\
          --jobs N sets the profiling worker count (default: all cores);\n\
          campaign results are bit-identical for any N.\n\n\
+         --store PATH attaches a persistent on-disk profile store to any\n\
+         profiling subcommand: completed reps are saved and every later\n\
+         invocation warm-starts from them (bit-identical to a cold run).\n\
+         MRTUNER_STORE=PATH does the same machine-wide; --no-store\n\
+         disables both for one invocation.\n\n\
          APPS: wordcount | exim | grep"
     );
 }
@@ -119,6 +163,7 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     }
     ds.save(&PathBuf::from(&out)).map_err(|e| e.to_string())?;
     println!("wrote {out} ({} rows)", ds.len());
+    report_executor(&executor);
     Ok(())
 }
 
@@ -238,6 +283,7 @@ fn cmd_fig3(args: &Args) -> Result<(), String> {
         std::fs::write(&path, csv).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    report_executor(&executor);
     Ok(())
 }
 
@@ -278,6 +324,7 @@ fn cmd_fig4(args: &Args) -> Result<(), String> {
         std::fs::write(&path, csv).map_err(|e| e.to_string())?;
         println!("wrote {path}");
     }
+    report_executor(&executor);
     Ok(())
 }
 
@@ -309,7 +356,46 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
         "headline claim (mean error < 5%): {}",
         if all_under_5 { "REPRODUCED" } else { "NOT reproduced" }
     );
+    report_executor(&executor);
     Ok(())
+}
+
+fn cmd_store(args: &Args) -> Result<(), String> {
+    let action = args
+        .positional(0)
+        .ok_or("usage: mrtuner store <stats|compact|clear> --store PATH")?;
+    let path = args
+        .str_opt("store")
+        .or_else(env_store_path)
+        .ok_or("--store PATH (or MRTUNER_STORE) required")?;
+    args.reject_unknown()?;
+    let dir = PathBuf::from(&path);
+    match action.as_str() {
+        "stats" => {
+            // Peek: report what is on disk without rewriting anything.
+            let store = ProfileStore::peek(&dir)?;
+            println!("store {}: {}", dir.display(), store.stats());
+            Ok(())
+        }
+        "compact" => {
+            let store = ProfileStore::open(&dir)?;
+            let st = store.stats();
+            println!(
+                "store {}: merged {} segment(s); {st}",
+                dir.display(),
+                st.merged_segments
+            );
+            Ok(())
+        }
+        "clear" => {
+            let removed = ProfileStore::clear(&dir)?;
+            println!("store {}: removed {removed} file(s)", dir.display());
+            Ok(())
+        }
+        other => {
+            Err(format!("unknown store action '{other}' (stats | compact | clear)"))
+        }
+    }
 }
 
 fn cmd_e2e(args: &Args) -> Result<(), String> {
@@ -338,6 +424,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             registry.insert(model);
         }
     }
+    report_executor(&executor);
     let service = std::sync::Arc::new(PredictionService::start(
         || experiments::default_backend().0,
         registry,

@@ -9,13 +9,16 @@ use crate::util::stats;
 /// Prediction errors for a set of held-out experiments.
 #[derive(Clone, Debug)]
 pub struct PredictionErrors {
+    /// Measured total execution times (seconds).
     pub actual: Vec<f64>,
+    /// Model-predicted times (seconds), same order.
     pub predicted: Vec<f64>,
     /// Absolute relative errors in percent: 100·|pred - act| / act.
     pub errors_pct: Vec<f64>,
 }
 
 impl PredictionErrors {
+    /// Pair up actual and predicted times and compute percent errors.
     pub fn new(actual: Vec<f64>, predicted: Vec<f64>) -> PredictionErrors {
         assert_eq!(actual.len(), predicted.len());
         let errors_pct = actual
@@ -39,22 +42,27 @@ impl PredictionErrors {
         stats::variance(&self.errors_pct)
     }
 
+    /// Median percent error (robust companion to the mean).
     pub fn median_pct(&self) -> f64 {
         stats::percentile(&self.errors_pct, 50.0)
     }
 
+    /// Worst-case percent error.
     pub fn max_pct(&self) -> f64 {
         stats::max(&self.errors_pct)
     }
 
+    /// Coefficient of determination between actual and predicted times.
     pub fn r_squared(&self) -> f64 {
         stats::r_squared(&self.actual, &self.predicted)
     }
 
+    /// Number of held-out experiments evaluated.
     pub fn len(&self) -> usize {
         self.errors_pct.len()
     }
 
+    /// Whether no experiments were evaluated.
     pub fn is_empty(&self) -> bool {
         self.errors_pct.is_empty()
     }

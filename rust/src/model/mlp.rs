@@ -16,9 +16,13 @@ use super::features::PARAM_SCALE;
 /// Training hyper-parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct MlpConfig {
+    /// Hidden-layer width.
     pub hidden: usize,
+    /// Full-batch gradient-descent epochs.
     pub epochs: u32,
+    /// Learning rate.
     pub lr: f64,
+    /// Weight-init RNG seed.
     pub seed: u64,
 }
 
@@ -31,6 +35,7 @@ impl Default for MlpConfig {
 /// A trained network.
 #[derive(Clone, Debug)]
 pub struct MlpModel {
+    /// Application this network was trained for.
     pub app_name: String,
     hidden: usize,
     // Layer weights (row-major) and biases.

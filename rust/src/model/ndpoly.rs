@@ -19,19 +19,25 @@ use crate::util::json::Json;
 /// quantifies the gap.
 #[derive(Clone, Debug, PartialEq)]
 pub struct NdPolyModel {
+    /// Application this model was trained for.
     pub app_name: String,
+    /// Polynomial degree per parameter.
     pub degree: usize,
     /// Per-parameter normalization divisors (max of the studied range).
     pub scales: Vec<f64>,
+    /// Whether pairwise interaction terms are appended.
     pub interactions: bool,
+    /// Fitted coefficients, [`NdPolyModel::num_features`] long.
     pub coeffs: Vec<f64>,
 }
 
 impl NdPolyModel {
+    /// Number of raw parameters this model takes.
     pub fn num_params(&self) -> usize {
         self.scales.len()
     }
 
+    /// Length of the expanded feature vector.
     pub fn num_features(&self) -> usize {
         let n = self.num_params();
         1 + n * self.degree + if self.interactions { n * (n - 1) / 2 } else { 0 }
@@ -107,10 +113,12 @@ impl NdPolyModel {
             .sum()
     }
 
+    /// Predict a batch of raw parameter rows.
     pub fn predict(&self, rows: &[Vec<f64>]) -> Vec<f64> {
         rows.iter().map(|r| self.predict_one(r)).collect()
     }
 
+    /// Serialize for persistence.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("app", Json::Str(self.app_name.clone())),
@@ -121,6 +129,7 @@ impl NdPolyModel {
         ])
     }
 
+    /// Rebuild from [`NdPolyModel::to_json`] output.
     pub fn from_json(v: &Json) -> Result<NdPolyModel, String> {
         let m = NdPolyModel {
             app_name: v.req("app")?.as_str().ok_or("app")?.to_string(),

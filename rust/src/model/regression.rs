@@ -17,6 +17,7 @@ use super::solver;
 
 /// A fitting backend: raw (M, R) rows + times + weights -> coefficients.
 pub trait FitBackend {
+    /// Solve the weighted least-squares fit (paper Eqn. 6).
     fn fit(
         &mut self,
         params: &[[f64; 2]],
@@ -34,6 +35,7 @@ pub trait FitBackend {
         Ok(params.iter().map(|p| evaluate(coeffs, p)).collect())
     }
 
+    /// Short backend name for reports ("xla-pjrt", "rust-cholesky").
     fn name(&self) -> &'static str;
 }
 
@@ -60,7 +62,9 @@ impl FitBackend for RustSolverBackend {
 /// prediction phase uploads, Fig. 2b).
 #[derive(Clone, Debug, PartialEq)]
 pub struct RegressionModel {
+    /// Application this model was fitted for (models don't transfer).
     pub app_name: String,
+    /// Fitted coefficients in [`crate::model::features`] order.
     pub coeffs: [f64; NUM_FEATURES],
     /// Rows used for the fit (diagnostics).
     pub trained_on: usize,
@@ -95,6 +99,7 @@ impl RegressionModel {
         params.iter().map(|p| evaluate(&self.coeffs, p)).collect()
     }
 
+    /// Serialize for persistence / the model registry.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("app", Json::Str(self.app_name.clone())),
@@ -103,6 +108,7 @@ impl RegressionModel {
         ])
     }
 
+    /// Rebuild from [`RegressionModel::to_json`] output.
     pub fn from_json(v: &Json) -> Result<RegressionModel, String> {
         let app_name =
             v.req("app")?.as_str().ok_or("app must be str")?.to_string();
@@ -119,10 +125,12 @@ impl RegressionModel {
         Ok(RegressionModel { app_name, coeffs, trained_on })
     }
 
+    /// Persist to a JSON file.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string())
     }
 
+    /// Load from a file written by [`RegressionModel::save`].
     pub fn load(path: &std::path::Path) -> Result<RegressionModel, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         RegressionModel::from_json(&parse(&text)?)

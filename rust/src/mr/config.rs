@@ -14,7 +14,10 @@ pub enum SplitPolicy {
     /// <1% on WordCount — and why the authors could not explain their
     /// "optimal" mapper count ("the reason ... is not clear", §V.B): the
     /// parameter's structural effect is null in that range, leaving noise.
-    HadoopHint { block_bytes: u64 },
+    HadoopHint {
+        /// HDFS block size used as the split-size ceiling.
+        block_bytes: u64,
+    },
     /// `num_mappers` sets the split count exactly (modern engines; also
     /// the naive reading of the paper).  Exposes slot-wave quantization
     /// cliffs that a cubic cannot fit — quantified in the ablation bench.
@@ -84,11 +87,13 @@ impl JobConfig {
         }
     }
 
+    /// Builder: same config with a different run seed.
     pub fn with_seed(mut self, seed: u64) -> JobConfig {
         self.seed = seed;
         self
     }
 
+    /// Builder: same config with a different [`SplitPolicy`].
     pub fn with_split_policy(mut self, policy: SplitPolicy) -> JobConfig {
         self.split_policy = policy;
         self
@@ -99,6 +104,7 @@ impl JobConfig {
         self.split_policy.task_count(self.num_mappers, self.input_bytes)
     }
 
+    /// Reject degenerate configurations before they reach the simulator.
     pub fn validate(&self) -> Result<(), String> {
         if self.num_mappers == 0 {
             return Err("num_mappers must be >= 1".into());

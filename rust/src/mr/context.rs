@@ -33,13 +33,18 @@ pub(crate) const LAYOUT_STREAM: u64 = 1;
 /// only affects the event simulation, never the plan.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ContextShape {
+    /// Cluster size the layout was planned for.
     pub num_nodes: usize,
+    /// HDFS replication factor.
     pub replication: usize,
+    /// Total input size.
     pub input_bytes: u64,
+    /// Actual map-task count (after [`crate::mr::config::SplitPolicy`]).
     pub map_tasks: u32,
 }
 
 impl ContextShape {
+    /// The shape of `(cluster, config)`.
     pub fn of(cluster: &Cluster, config: &JobConfig) -> ContextShape {
         ContextShape {
             num_nodes: cluster.num_nodes(),
@@ -57,7 +62,9 @@ impl ContextShape {
 #[derive(Clone, Debug)]
 pub struct JobContext {
     shape: ContextShape,
+    /// The ingested input file's block layout.
     pub file: FileMeta,
+    /// Planned splits with locality hints.
     pub splits: Vec<SplitPlan>,
 }
 
@@ -111,6 +118,7 @@ impl JobContext {
         JobContext::build(cluster, config, &mut Rng::new(seed))
     }
 
+    /// The shape this context was planned for.
     pub fn shape(&self) -> ContextShape {
         self.shape
     }

@@ -12,6 +12,7 @@ use crate::cluster::{Network, NodeSpec};
 /// `ns_per_byte / cpu_ghz` — the paper's heterogeneity axis.
 #[derive(Clone, Debug)]
 pub struct AppProfile {
+    /// Application name (matches [`crate::apps::AppId::name`]).
     pub name: String,
     /// Map-function CPU cost per input byte (tokenize/parse/emit).
     pub map_cpu_ns_per_byte: f64,
@@ -90,15 +91,22 @@ pub const JOB_OVERHEAD_S: f64 = 6.0;
 /// Map-side costs for one split on one node.
 #[derive(Clone, Copy, Debug)]
 pub struct MapCost {
+    /// JVM/task-launch overhead.
     pub startup_s: f64,
+    /// Input read time (local disk or network).
     pub read_s: f64,
+    /// Map-function CPU time.
     pub cpu_s: f64,
+    /// Sort + spill + extra-merge time.
     pub spill_s: f64,
+    /// Number of spill passes.
     pub spills: u32,
+    /// Map-output bytes produced.
     pub out_bytes: u64,
 }
 
 impl MapCost {
+    /// Total map-task service time.
     pub fn total_s(&self) -> f64 {
         self.startup_s + self.read_s + self.cpu_s + self.spill_s
     }
@@ -166,14 +174,20 @@ pub fn map_cost(
 /// Reduce-side (post-shuffle) costs for one reducer.
 #[derive(Clone, Copy, Debug)]
 pub struct ReduceCost {
+    /// JVM/task-launch overhead.
     pub startup_s: f64,
+    /// Multi-pass merge time for the fetched map outputs.
     pub merge_s: f64,
+    /// Reduce-function CPU time.
     pub cpu_s: f64,
+    /// Replicated output-write time.
     pub write_s: f64,
+    /// Merge passes performed.
     pub merge_passes: u32,
 }
 
 impl ReduceCost {
+    /// Total reduce-task service time (excluding shuffle wait).
     pub fn total_s(&self) -> f64 {
         self.startup_s + self.merge_s + self.cpu_s + self.write_s
     }

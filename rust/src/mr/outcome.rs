@@ -5,15 +5,22 @@ use crate::sim::SimTime;
 /// Per-task-attempt record (kept for diagnostics and the report module).
 #[derive(Clone, Debug)]
 pub struct TaskStat {
+    /// Task index within its phase.
     pub index: u32,
+    /// Node the committed attempt ran on.
     pub node: usize,
+    /// Launch time.
     pub start: SimTime,
+    /// Commit time.
     pub end: SimTime,
+    /// Whether the input read was data-local (maps only).
     pub local: bool,
+    /// Whether the committed attempt was speculative.
     pub speculative: bool,
 }
 
 impl TaskStat {
+    /// Wall-clock duration of the committed attempt.
     pub fn duration_s(&self) -> f64 {
         self.end.since(self.start).as_secs()
     }
@@ -22,13 +29,21 @@ impl TaskStat {
 /// Aggregate counters, mirroring Hadoop's JobCounters.
 #[derive(Clone, Debug, Default)]
 pub struct Counters {
+    /// Maps that read their split from a local replica.
     pub data_local_maps: u64,
+    /// Maps that fetched their split over the network.
     pub remote_maps: u64,
+    /// Speculative map attempts launched.
     pub speculative_maps: u64,
+    /// Speculative attempts that beat the original.
     pub speculative_wins: u64,
+    /// Map-side spill passes across all tasks.
     pub map_spills: u64,
+    /// Bytes crossing the shuffle.
     pub shuffle_bytes: u64,
+    /// Bytes written to the replicated output.
     pub output_bytes: u64,
+    /// Discrete events processed by the simulator.
     pub events_processed: u64,
     /// Total CPU-seconds consumed by committed task attempts — the
     /// quantity the authors' companion work [24] models ("total CPU tick
@@ -45,8 +60,11 @@ pub struct JobResult {
     pub map_phase_s: f64,
     /// Time when the first reducer launched (slowstart).
     pub first_reduce_s: f64,
+    /// Committed map attempts, one per task.
     pub maps: Vec<TaskStat>,
+    /// Committed reduce attempts, one per task.
     pub reduces: Vec<TaskStat>,
+    /// Aggregate Hadoop-style counters.
     pub counters: Counters,
 }
 

@@ -6,8 +6,11 @@ use crate::dfs::FileMeta;
 /// One planned input split.
 #[derive(Clone, Debug)]
 pub struct SplitPlan {
+    /// Split index (== map task index).
     pub index: u32,
+    /// Byte offset within the input file.
     pub offset: u64,
+    /// Split length in bytes.
     pub len: u64,
     /// Nodes holding replicas of (most of) this split, best first.
     pub preferred: Vec<NodeId>,

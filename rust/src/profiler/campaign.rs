@@ -12,16 +12,21 @@ use super::dataset::Dataset;
 use super::executor::CampaignExecutor;
 use super::experiment::{ExperimentResult, ExperimentSpec, REPS};
 
-/// Parameter range studied by the paper.
+/// Lower end of the parameter range studied by the paper.
 pub const PARAM_MIN: u32 = 5;
+/// Upper end of the parameter range studied by the paper.
 pub const PARAM_MAX: u32 = 40;
 
 /// A profiling campaign: a list of experiment settings for one app.
 #[derive(Clone, Debug)]
 pub struct Campaign {
+    /// Application under test.
     pub app: AppId,
+    /// Settings to profile, in order.
     pub specs: Vec<ExperimentSpec>,
+    /// Repetitions per setting (the paper uses 5).
     pub reps: u32,
+    /// Profiling-session seed (layout + per-rep noise derive from it).
     pub base_seed: u64,
 }
 

@@ -11,6 +11,7 @@ use super::experiment::{ExperimentResult, ExperimentSpec};
 /// A set of profiled experiments for one application.
 #[derive(Clone, Debug, Default)]
 pub struct Dataset {
+    /// Application the rows were profiled for.
     pub app_name: String,
     /// (num_mappers, num_reducers) rows.
     pub params: Vec<[f64; 2]>,
@@ -19,6 +20,7 @@ pub struct Dataset {
 }
 
 impl Dataset {
+    /// Collapse experiment results into regression rows (spec → mean).
     pub fn from_results(app: AppId, results: &[ExperimentResult]) -> Dataset {
         Dataset {
             app_name: app.name().to_string(),
@@ -27,19 +29,23 @@ impl Dataset {
         }
     }
 
+    /// Number of rows.
     pub fn len(&self) -> usize {
         self.times.len()
     }
 
+    /// Whether the dataset has no rows.
     pub fn is_empty(&self) -> bool {
         self.times.is_empty()
     }
 
+    /// Append one profiled row.
     pub fn push(&mut self, spec: &ExperimentSpec, time_s: f64) {
         self.params.push(spec.params());
         self.times.push(time_s);
     }
 
+    /// Serialize for persistence.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("app", Json::Str(self.app_name.clone())),
@@ -56,6 +62,7 @@ impl Dataset {
         ])
     }
 
+    /// Rebuild from [`Dataset::to_json`] output (validates row counts).
     pub fn from_json(v: &Json) -> Result<Dataset, String> {
         let app_name = v.req("app")?.as_str().ok_or("app must be str")?.to_string();
         let params = v
@@ -82,10 +89,12 @@ impl Dataset {
         Ok(Dataset { app_name, params, times })
     }
 
+    /// Persist to a JSON file.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_json().to_string())
     }
 
+    /// Load from a file written by [`Dataset::save`].
     pub fn load(path: &Path) -> Result<Dataset, String> {
         let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
         Dataset::from_json(&parse(&text)?)

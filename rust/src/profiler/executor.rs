@@ -19,9 +19,15 @@
 //! The executor runs the paper's standard job shape
 //! ([`JobConfig::paper_default`]); the extended 4-parameter sweeps in
 //! [`super::extended`] keep their own driver.
+//!
+//! With a [`ProfileStore`] attached ([`CampaignExecutor::with_store`]),
+//! the miss path consults the on-disk store before simulating and writes
+//! fresh results back, so repeated CLI invocations warm-start from every
+//! prior session on the machine.  [`CampaignExecutor::stats`] reports the
+//! combined in-memory + on-disk picture.
 
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::fmt;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -35,67 +41,71 @@ use crate::util::stats;
 use super::campaign::Campaign;
 use super::dataset::Dataset;
 use super::experiment::{mix, ExperimentResult, ExperimentSpec};
+use super::store::{ProfileStore, StoreKey};
 
-/// Cache key for one simulated repetition.  Includes a fingerprint of the
+/// Cache key for one simulated repetition — [`StoreKey`], the same
+/// identity the persistent store uses.  Includes a fingerprint of the
 /// cluster the rep ran on: one long-lived executor may be queried with
 /// several clusters (capacity what-ifs), and times from one hardware model
 /// must never answer for another.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
-struct RepKey {
-    cluster: u64,
-    app: AppId,
-    num_mappers: u32,
-    num_reducers: u32,
-    rep: u32,
-    base_seed: u64,
-}
-
-impl RepKey {
-    fn new(cluster_fp: u64, spec: &ExperimentSpec, rep: u32, base_seed: u64) -> RepKey {
-        RepKey {
-            cluster: cluster_fp,
-            app: spec.app,
-            num_mappers: spec.num_mappers,
-            num_reducers: spec.num_reducers,
-            rep,
-            base_seed,
-        }
+fn rep_key(cluster_fp: u64, spec: &ExperimentSpec, rep: u32, base_seed: u64) -> StoreKey {
+    StoreKey {
+        cluster: cluster_fp,
+        app: spec.app,
+        num_mappers: spec.num_mappers,
+        num_reducers: spec.num_reducers,
+        rep,
+        base_seed,
     }
 }
 
 /// Order-sensitive digest of every simulation-relevant cluster field.
+///
+/// Hand-rolled (the same mixing recipe as `experiment::mix`) rather than
+/// std's `DefaultHasher` because the value is persisted inside on-disk
+/// [`StoreKey`] records: std's hasher algorithm is documented as
+/// unstable across Rust releases, and a toolchain upgrade must not
+/// silently orphan every stored rep.  Changing this recipe requires
+/// bumping [`super::store::STORE_FORMAT_VERSION`].
 fn cluster_fingerprint(cluster: &Cluster) -> u64 {
-    let mut h = std::collections::hash_map::DefaultHasher::new();
-    cluster.num_nodes().hash(&mut h);
+    fn mix(h: u64, v: u64) -> u64 {
+        let x = h ^ v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x.rotate_left(23).wrapping_mul(0x94D0_49BB_1331_11EB)
+    }
+    let mut h = 0x6d72_7475_6e65_7221_u64; // "mrtuner!"
+    h = mix(h, cluster.num_nodes() as u64);
     for node in &cluster.nodes {
         let s = &node.spec;
-        s.cpu_ghz.to_bits().hash(&mut h);
-        s.ram_bytes.hash(&mut h);
-        s.disk_bytes.hash(&mut h);
-        s.cache_kb.hash(&mut h);
-        s.disk_read_mbps.to_bits().hash(&mut h);
-        s.disk_write_mbps.to_bits().hash(&mut h);
-        s.map_slots.hash(&mut h);
-        s.reduce_slots.hash(&mut h);
+        h = mix(h, s.cpu_ghz.to_bits());
+        h = mix(h, s.ram_bytes);
+        h = mix(h, s.disk_bytes);
+        h = mix(h, s.cache_kb);
+        h = mix(h, s.disk_read_mbps.to_bits());
+        h = mix(h, s.disk_write_mbps.to_bits());
+        h = mix(h, s.map_slots as u64);
+        h = mix(h, s.reduce_slots as u64);
     }
-    cluster.network.nic_bps.to_bits().hash(&mut h);
-    cluster.network.fetch_latency_s.to_bits().hash(&mut h);
-    cluster.network.nodes.hash(&mut h);
-    h.finish()
+    h = mix(h, cluster.network.nic_bps.to_bits());
+    h = mix(h, cluster.network.fetch_latency_s.to_bits());
+    h = mix(h, cluster.network.nodes as u64);
+    h
 }
 
 /// One unit of executor work: a single repetition of one setting within
 /// a profiling session.
 #[derive(Clone, Copy, Debug)]
 pub struct RepJob {
+    /// The (app, M, R) setting to simulate.
     pub spec: ExperimentSpec,
+    /// Repetition index within the profiling session.
     pub rep: u32,
+    /// Profiling-session seed.
     pub base_seed: u64,
 }
 
 impl RepJob {
-    fn key(&self, cluster_fp: u64) -> RepKey {
-        RepKey::new(cluster_fp, &self.spec, self.rep, self.base_seed)
+    fn key(&self, cluster_fp: u64) -> StoreKey {
+        rep_key(cluster_fp, &self.spec, self.rep, self.base_seed)
     }
 
     fn config(&self) -> JobConfig {
@@ -111,9 +121,11 @@ impl RepJob {
 /// share both the cache and the per-session job contexts.
 pub struct CampaignExecutor {
     jobs: usize,
-    cache: Mutex<HashMap<RepKey, f64>>,
+    cache: Mutex<HashMap<StoreKey, f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    store_hits: AtomicU64,
+    store: Option<ProfileStore>,
 }
 
 impl CampaignExecutor {
@@ -124,7 +136,24 @@ impl CampaignExecutor {
             cache: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            store_hits: AtomicU64::new(0),
+            store: None,
         }
+    }
+
+    /// Attach a persistent [`ProfileStore`]: cache misses consult it
+    /// before simulating, fresh results are written back, and the store
+    /// is flushed at every campaign boundary (and on drop).  Warm output
+    /// is bit-identical to cold output — stored values are the very rep
+    /// results the executor produced.
+    pub fn with_store(mut self, store: ProfileStore) -> CampaignExecutor {
+        self.store = Some(store);
+        self
+    }
+
+    /// The attached persistent store, if any.
+    pub fn store(&self) -> Option<&ProfileStore> {
+        self.store.as_ref()
     }
 
     /// Single-worker executor — the serial reference behaviour.
@@ -138,12 +167,13 @@ impl CampaignExecutor {
         CampaignExecutor::new(n)
     }
 
+    /// Worker-pool size.
     pub fn jobs(&self) -> usize {
         self.jobs
     }
 
-    /// Reps answered without a fresh simulation (cache hits plus
-    /// duplicates coalesced within one call).
+    /// Reps answered from the in-memory cache (including duplicates
+    /// coalesced within one call).
     pub fn cache_hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
@@ -153,9 +183,40 @@ impl CampaignExecutor {
         self.misses.load(Ordering::Relaxed)
     }
 
-    /// Distinct reps currently cached.
+    /// Reps answered from the persistent store (zero when none attached).
+    pub fn store_hits(&self) -> u64 {
+        self.store_hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct reps currently in the in-memory cache.
     pub fn cache_len(&self) -> usize {
         self.cache.lock().expect("executor cache poisoned").len()
+    }
+
+    /// Combined in-memory **and** on-disk picture of this executor — the
+    /// per-instance counters alone under-report once a store is attached
+    /// or `--jobs` splits work across calls, so consumers should print
+    /// this instead.
+    pub fn stats(&self) -> ExecutorStats {
+        ExecutorStats {
+            jobs: self.jobs,
+            simulated: self.cache_misses(),
+            mem_hits: self.cache_hits(),
+            store_hits: self.store_hits(),
+            mem_entries: self.cache_len(),
+            store_entries: self.store.as_ref().map(|s| s.len()).unwrap_or(0),
+            store_attached: self.store.is_some(),
+        }
+    }
+
+    /// Flush the attached store's buffered records to disk now (no-op
+    /// without a store).  `run_reps` already does this at every campaign
+    /// boundary; long-lived services can call it on their own cadence.
+    pub fn flush_store(&self) -> Result<(), String> {
+        match &self.store {
+            Some(s) => s.flush(),
+            None => Ok(()),
+        }
     }
 
     /// Simulate every repetition in `items`, returning total execution
@@ -173,13 +234,22 @@ impl CampaignExecutor {
         // duplicate items within one call alias the same simulation.
         let mut todo: Vec<usize> = Vec::new();
         let mut alias: Vec<(usize, usize)> = Vec::new();
+        let mut store_hit_count: u64 = 0;
         {
-            let cache = self.cache.lock().expect("executor cache poisoned");
-            let mut pending: HashMap<RepKey, usize> = HashMap::new();
+            let mut cache = self.cache.lock().expect("executor cache poisoned");
+            let mut pending: HashMap<StoreKey, usize> = HashMap::new();
             for (i, item) in items.iter().enumerate() {
                 let key = item.key(cluster_fp);
                 if let Some(&t) = cache.get(&key) {
                     out[i] = t;
+                } else if let Some(t) =
+                    self.store.as_ref().and_then(|s| s.get(&key))
+                {
+                    // On-disk hit: promote into the in-memory cache so
+                    // repeats within this session are memory-speed.
+                    out[i] = t;
+                    cache.insert(key, t);
+                    store_hit_count += 1;
                 } else if let Some(&k) = pending.get(&key) {
                     alias.push((i, k));
                 } else {
@@ -188,8 +258,11 @@ impl CampaignExecutor {
                 }
             }
         }
-        self.hits
-            .fetch_add((items.len() - todo.len()) as u64, Ordering::Relaxed);
+        self.store_hits.fetch_add(store_hit_count, Ordering::Relaxed);
+        self.hits.fetch_add(
+            items.len() as u64 - todo.len() as u64 - store_hit_count,
+            Ordering::Relaxed,
+        );
         self.misses.fetch_add(todo.len() as u64, Ordering::Relaxed);
         if todo.is_empty() {
             return out;
@@ -262,9 +335,22 @@ impl CampaignExecutor {
             out[i] = out[todo[k]];
         }
 
-        let mut cache = self.cache.lock().expect("executor cache poisoned");
-        for &i in &todo {
-            cache.insert(items[i].key(cluster_fp), out[i]);
+        {
+            let mut cache = self.cache.lock().expect("executor cache poisoned");
+            for &i in &todo {
+                cache.insert(items[i].key(cluster_fp), out[i]);
+            }
+        }
+        // Write fresh results through to the persistent store and flush:
+        // every `run_reps` call is a campaign boundary, and a flush here
+        // means a crash later never loses completed simulations.
+        if let Some(store) = &self.store {
+            for &i in &todo {
+                store.put(items[i].key(cluster_fp), out[i]);
+            }
+            if let Err(e) = store.flush() {
+                eprintln!("warn: profile store flush failed: {e}");
+            }
         }
         out
     }
@@ -309,6 +395,44 @@ impl CampaignExecutor {
             self.run_specs(cluster, &campaign.specs, campaign.reps, campaign.base_seed);
         let ds = Dataset::from_results(campaign.app, &results);
         (results, ds)
+    }
+}
+
+/// Combined in-memory + on-disk executor counters, for CLI/e2e/scheduler
+/// reporting.  `simulated` is the work actually done; `mem_hits` and
+/// `store_hits` are the work avoided, split by which layer answered.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecutorStats {
+    /// Worker-pool size.
+    pub jobs: usize,
+    /// Reps simulated fresh (the executor's `cache_misses`).
+    pub simulated: u64,
+    /// Reps answered by the in-memory cache (incl. coalesced duplicates).
+    pub mem_hits: u64,
+    /// Reps answered by the persistent store.
+    pub store_hits: u64,
+    /// Distinct reps in the in-memory cache.
+    pub mem_entries: usize,
+    /// Distinct reps in the persistent store (0 when none attached).
+    pub store_entries: usize,
+    /// Whether a persistent store is attached.
+    pub store_attached: bool,
+}
+
+impl fmt::Display for ExecutorStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "jobs={} simulated={} mem_hits={} store_hits={} mem_entries={} \
+             store_entries={} store={}",
+            self.jobs,
+            self.simulated,
+            self.mem_hits,
+            self.store_hits,
+            self.mem_entries,
+            self.store_entries,
+            if self.store_attached { "on" } else { "off" }
+        )
     }
 }
 
@@ -398,5 +522,51 @@ mod tests {
     fn executor_clamps_zero_jobs() {
         assert_eq!(CampaignExecutor::new(0).jobs(), 1);
         assert!(CampaignExecutor::machine_sized().jobs() >= 1);
+    }
+
+    #[test]
+    fn stats_combine_memory_and_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_exec_stats_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cluster = Cluster::paper_cluster();
+        let specs = [spec(10, 10), spec(20, 5)];
+        {
+            let exec = CampaignExecutor::new(2)
+                .with_store(ProfileStore::open(&dir).unwrap());
+            exec.run_specs(&cluster, &specs, 2, 3);
+            let st = exec.stats();
+            assert_eq!(st.simulated, 4);
+            assert_eq!(st.mem_hits, 0);
+            assert_eq!(st.store_hits, 0);
+            assert_eq!(st.mem_entries, 4);
+            assert_eq!(st.store_entries, 4, "fresh reps written through");
+            assert!(st.store_attached);
+            assert!(st.to_string().contains("simulated=4"));
+        }
+        // A second executor on the same directory answers purely from
+        // disk: zero simulations, bit-identical results.
+        let cold = CampaignExecutor::serial().run_specs(&cluster, &specs, 2, 3);
+        let exec2 = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&dir).unwrap());
+        let warm = exec2.run_specs(&cluster, &specs, 2, 3);
+        let st = exec2.stats();
+        assert_eq!(st.simulated, 0);
+        assert_eq!(st.store_hits, 4);
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.rep_times_s, b.rep_times_s);
+        }
+        drop(exec2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn storeless_executor_stats_read_off() {
+        let exec = CampaignExecutor::serial();
+        let st = exec.stats();
+        assert!(!st.store_attached);
+        assert_eq!(st.store_entries, 0);
+        assert!(st.to_string().contains("store=off"));
+        assert!(exec.flush_store().is_ok(), "flush without store is a no-op");
     }
 }

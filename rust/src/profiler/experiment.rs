@@ -14,12 +14,16 @@ pub const REPS: u32 = 5;
 /// An experiment setting: the paper's two studied configuration parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ExperimentSpec {
+    /// Application under test.
     pub app: AppId,
+    /// The paper's first parameter: number of map tasks.
     pub num_mappers: u32,
+    /// The paper's second parameter: number of reduce tasks.
     pub num_reducers: u32,
 }
 
 impl ExperimentSpec {
+    /// Spec for `(app, M, R)`.
     pub fn new(app: AppId, m: u32, r: u32) -> ExperimentSpec {
         ExperimentSpec { app, num_mappers: m, num_reducers: r }
     }
@@ -33,6 +37,7 @@ impl ExperimentSpec {
 /// Profiled outcome of one experiment.
 #[derive(Clone, Debug)]
 pub struct ExperimentResult {
+    /// The setting that was profiled.
     pub spec: ExperimentSpec,
     /// The training/evaluation target: mean of the rep times.
     pub mean_time_s: f64,
@@ -41,6 +46,7 @@ pub struct ExperimentResult {
 }
 
 impl ExperimentResult {
+    /// Run-to-run spread of the repetitions (temporal noise).
     pub fn rep_stddev(&self) -> f64 {
         stats::stddev(&self.rep_times_s)
     }

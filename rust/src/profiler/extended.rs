@@ -17,16 +17,22 @@ use crate::util::stats;
 /// A four-parameter experiment setting.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Ext4Spec {
+    /// Application profiled.
     pub app: AppId,
+    /// Number of map tasks.
     pub num_mappers: u32,
+    /// Number of reduce tasks.
     pub num_reducers: u32,
+    /// Input size in GB (third studied parameter).
     pub input_gb: f64,
+    /// HDFS block size in MB (fourth studied parameter).
     pub block_mb: u32,
 }
 
 /// Studied ranges (paper range for M/R; practical 2011 ranges for the
 /// rest; the paper's own setup is input 8 GB, block 64 MB).
 pub const INPUT_GB_RANGE: (f64, f64) = (1.0, 16.0);
+/// Block sizes swept by the 4-parameter extension.
 pub const BLOCK_MB_CHOICES: [u32; 4] = [32, 64, 128, 256];
 
 /// Per-parameter normalization scales, in raw-row order.
@@ -45,6 +51,7 @@ impl Ext4Spec {
         ]
     }
 
+    /// The simulator config for this setting at the given run seed.
     pub fn job_config(&self, seed: u64) -> JobConfig {
         let mut cfg =
             JobConfig::paper_default(self.num_mappers, self.num_reducers);
@@ -73,8 +80,11 @@ pub fn random_ext4(app: AppId, n: usize, rng: &mut Rng) -> Vec<Ext4Spec> {
 /// Profiled outcome of one extended experiment (means over `reps`).
 #[derive(Clone, Debug)]
 pub struct Ext4Result {
+    /// The setting profiled.
     pub spec: Ext4Spec,
+    /// Mean total execution time over the reps.
     pub mean_time_s: f64,
+    /// Mean total CPU-seconds over the reps (companion-work target).
     pub mean_cpu_s: f64,
 }
 

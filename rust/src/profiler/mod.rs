@@ -3,14 +3,21 @@
 //! "For each set of configuration parameters values S_j = (M_j, R_j): run
 //! φ_i five times with S_j ... assign average total execution time as the
 //! total execution time of the experiment."
+//!
+//! [`campaign`] chooses the settings, [`executor`] runs them (parallel
+//! fan-out + rep-level cache), [`store`] persists completed reps on disk
+//! so later processes warm-start, [`dataset`] shapes results for the
+//! regression, and [`extended`] hosts the beyond-paper 4-parameter sweeps.
 
 pub mod campaign;
 pub mod dataset;
 pub mod executor;
 pub mod experiment;
 pub mod extended;
+pub mod store;
 
 pub use campaign::{paper_campaign, Campaign};
 pub use dataset::Dataset;
-pub use executor::{CampaignExecutor, RepJob};
+pub use executor::{CampaignExecutor, ExecutorStats, RepJob};
 pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
+pub use store::{ProfileStore, StoreKey, StoreStats, STORE_FORMAT_VERSION};

@@ -1,0 +1,773 @@
+//! Persistent, versioned, on-disk profile store.
+//!
+//! Profiling is the expensive phase of the paper's pipeline — every
+//! setting is simulated repeatedly before regression modeling can begin —
+//! and PR 1's in-memory executor cache only helps within one process.
+//! This store spills that cache to disk so *any* CLI invocation
+//! (`profile`, `fig3`, `fig4`, `table1`, `e2e`, `serve`, scheduler
+//! what-ifs) warm-starts from every prior session on the machine.
+//!
+//! # On-disk layout
+//!
+//! A store is a directory:
+//!
+//! ```text
+//! store/
+//!   index.jsonl            compacted records (atomically replaced)
+//!   seg-<pid>-<n>-<t>.jsonl  append-only segment, one per writing session
+//!   seg-....jsonl.lock     liveness lock while that segment is open
+//!   compact.lock           held briefly while rewriting the index
+//! ```
+//!
+//! Each line is one record, serialized with the repo's hand-rolled JSON
+//! ([`crate::util::json`]).  `u64` values (cluster fingerprint, session
+//! seed) and the `f64` execution time travel as fixed-width hex strings
+//! ([`crate::util::bytes::hex_u64`]) so every bit round-trips — stored
+//! values are the same bit-identical rep results the executor produces,
+//! which is what makes warm runs byte-identical to cold ones.
+//!
+//! # Concurrency and crash safety
+//!
+//! * Every writing session appends to its **own** uniquely-named segment
+//!   file, so two processes sharing a store directory never interleave
+//!   writes.
+//! * A live segment is marked by a `.lock` file (created before the
+//!   segment, removed on drop); compaction merges a locked segment's
+//!   flushed lines but never deletes the file under a live writer.
+//!   Locks carry the writer's pid — a lock whose process is gone
+//!   (crashed session) is reclaimed together with its segment.
+//! * On open, segments are folded into `index.jsonl` via
+//!   write-to-temp + atomic rename, guarded by `compact.lock` taken
+//!   *before* the directory is read (`create_new`, so only one process
+//!   compacts at a time; losers just skip the pass, and a stale lock
+//!   left by a crashed compactor is reclaimed after ten minutes).
+//! * Corruption is tolerated, never fatal: an unreadable file or a
+//!   truncated/garbled line is counted, logged to stderr, and skipped.
+//!   Lines whose `"v"` field differs from [`STORE_FORMAT_VERSION`] are
+//!   skipped too, and their segment is preserved for whichever build
+//!   understands it.
+
+use std::collections::HashMap;
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use crate::apps::AppId;
+use crate::util::bytes::{hex_u64, parse_hex_u64};
+use crate::util::json::{parse, Json};
+
+/// Store format version; bump when the record schema changes.  Readers
+/// skip (and preserve) records written under any other version.
+pub const STORE_FORMAT_VERSION: u32 = 1;
+
+const INDEX_FILE: &str = "index.jsonl";
+const COMPACT_LOCK: &str = "compact.lock";
+
+/// A `compact.lock` older than this is assumed to be the debris of a
+/// crashed process (a compaction pass takes well under a second) and is
+/// reclaimed, so one crash can never disable compaction forever.
+const STALE_COMPACT_LOCK: Duration = Duration::from_secs(600);
+
+/// Distinguishes session segments from everything else in the directory.
+const SEGMENT_PREFIX: &str = "seg-";
+const SEGMENT_SUFFIX: &str = ".jsonl";
+
+/// Makes segment names unique when one process opens several stores (or
+/// several executors share a directory) within one clock tick.
+static SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Identity of one simulated repetition — the executor's cache key made
+/// persistent.  The cluster fingerprint keeps times from one hardware
+/// model from ever answering for another; `base_seed` keys the profiling
+/// session so distinct sessions never alias.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct StoreKey {
+    /// Fingerprint of every simulation-relevant cluster field.
+    pub cluster: u64,
+    /// Application profiled.
+    pub app: AppId,
+    /// Number of map tasks (the paper's first parameter).
+    pub num_mappers: u32,
+    /// Number of reduce tasks (the paper's second parameter).
+    pub num_reducers: u32,
+    /// Repetition index within the profiling session.
+    pub rep: u32,
+    /// Profiling-session seed.
+    pub base_seed: u64,
+}
+
+/// Why a record line failed to decode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecordError {
+    /// The line is a valid record of a different store-format version.
+    StaleVersion(u64),
+    /// The line is not a valid record at all (truncated write, garbage).
+    Corrupt(String),
+}
+
+/// Serialize one `(key, total execution time)` record as a JSON line.
+pub fn encode_record(key: &StoreKey, time_s: f64) -> String {
+    // "t" is a redundant human-readable copy; "bits" is authoritative.
+    Json::obj(vec![
+        ("v", Json::Num(STORE_FORMAT_VERSION as f64)),
+        ("cluster", Json::Str(hex_u64(key.cluster))),
+        ("app", Json::Str(key.app.name().to_string())),
+        ("m", Json::Num(key.num_mappers as f64)),
+        ("r", Json::Num(key.num_reducers as f64)),
+        ("rep", Json::Num(key.rep as f64)),
+        ("seed", Json::Str(hex_u64(key.base_seed))),
+        ("bits", Json::Str(hex_u64(time_s.to_bits()))),
+        ("t", Json::Num(time_s)),
+    ])
+    .to_string()
+}
+
+/// Decode a record line written by [`encode_record`].
+pub fn decode_record(line: &str) -> Result<(StoreKey, f64), RecordError> {
+    let v = parse(line).map_err(RecordError::Corrupt)?;
+    let ver = v.req_u64("v").map_err(RecordError::Corrupt)?;
+    if ver != STORE_FORMAT_VERSION as u64 {
+        return Err(RecordError::StaleVersion(ver));
+    }
+    let decode = || -> Result<(StoreKey, f64), String> {
+        let key = StoreKey {
+            cluster: parse_hex_u64(v.req_str("cluster")?)?,
+            app: AppId::parse(v.req_str("app")?)?,
+            num_mappers: v.req_u32("m")?,
+            num_reducers: v.req_u32("r")?,
+            rep: v.req_u32("rep")?,
+            base_seed: parse_hex_u64(v.req_str("seed")?)?,
+        };
+        let bits = parse_hex_u64(v.req_str("bits")?)?;
+        Ok((key, f64::from_bits(bits)))
+    };
+    decode().map_err(RecordError::Corrupt)
+}
+
+/// What `open` saw on disk, plus the live pending-write count.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Distinct records currently loaded.
+    pub entries: usize,
+    /// Segment files present when the store was opened.
+    pub segments_seen: usize,
+    /// Segments folded into the index (and deleted) by the open pass.
+    pub merged_segments: usize,
+    /// Files that could not be read at all (skipped, logged).
+    pub corrupt_segments: usize,
+    /// Undecodable lines inside otherwise readable files.
+    pub corrupt_lines: usize,
+    /// Lines of a different store-format version (skipped, preserved).
+    pub stale_lines: usize,
+    /// Whether the open pass rewrote the index.
+    pub compacted: bool,
+}
+
+impl std::fmt::Display for StoreStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "entries={} segments_seen={} merged={} corrupt_segments={} \
+             corrupt_lines={} stale_lines={} compacted={}",
+            self.entries,
+            self.segments_seen,
+            self.merged_segments,
+            self.corrupt_segments,
+            self.corrupt_lines,
+            self.stale_lines,
+            self.compacted
+        )
+    }
+}
+
+struct SegmentWriter {
+    file: fs::File,
+    lock: PathBuf,
+}
+
+impl SegmentWriter {
+    /// Create a fresh uniquely-named segment, taking its liveness lock
+    /// *first* so a concurrent compaction never deletes it underneath us.
+    fn create(dir: &Path) -> Result<SegmentWriter, String> {
+        let nonce = SEG_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let name = format!(
+            "{SEGMENT_PREFIX}{:08x}-{:04x}-{}{SEGMENT_SUFFIX}",
+            std::process::id(),
+            nonce,
+            hex_u64(nanos)
+        );
+        let path = dir.join(&name);
+        let lock = lock_path(&path);
+        let mut lf = OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&lock)
+            .map_err(|e| format!("store: create lock {}: {e}", lock.display()))?;
+        let _ = writeln!(lf, "{}", std::process::id());
+        let file = OpenOptions::new()
+            .append(true)
+            .create_new(true)
+            .open(&path)
+            .map_err(|e| format!("store: create segment {}: {e}", path.display()))?;
+        Ok(SegmentWriter { file, lock })
+    }
+}
+
+impl Drop for SegmentWriter {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.lock);
+    }
+}
+
+struct Inner {
+    /// Key → `f64::to_bits` of the stored time (bit-exact by design).
+    entries: HashMap<StoreKey, u64>,
+    /// Encoded lines not yet appended to this session's segment.
+    dirty: Vec<String>,
+    /// Lazily created on first flush, so read-only sessions leave no file.
+    writer: Option<SegmentWriter>,
+}
+
+/// The persistent profile store: an in-memory view of every record on
+/// disk, plus an append-only writer for this session's new results.
+///
+/// The [`super::CampaignExecutor`] reads through it on cache misses and
+/// writes freshly simulated reps back; `flush` runs at campaign
+/// boundaries and on drop.  All methods take `&self` and are safe to call
+/// from the executor's worker threads.
+pub struct ProfileStore {
+    dir: PathBuf,
+    inner: Mutex<Inner>,
+    stats: StoreStats,
+}
+
+impl ProfileStore {
+    /// Open (creating if needed) the store at `dir`, folding any
+    /// completed segments into the index — the compaction pass.
+    pub fn open(dir: &Path) -> Result<ProfileStore, String> {
+        ProfileStore::open_with(dir, true)
+    }
+
+    /// Open without compacting — inspection (`store stats`) and tests.
+    pub fn peek(dir: &Path) -> Result<ProfileStore, String> {
+        ProfileStore::open_with(dir, false)
+    }
+
+    fn open_with(dir: &Path, compact: bool) -> Result<ProfileStore, String> {
+        fs::create_dir_all(dir)
+            .map_err(|e| format!("store: create dir {}: {e}", dir.display()))?;
+
+        // The compaction lock must be taken *before* reading: compaction
+        // is a read-modify-write of the whole directory, and rewriting
+        // the index from a pre-lock snapshot could overwrite a newer
+        // index whose source segments are already deleted — losing data.
+        let guard = if compact { CompactGuard::acquire(dir) } else { None };
+        if compact && guard.is_none() {
+            eprintln!("store: compaction lock busy; skipping compaction pass");
+        }
+
+        let scan = scan_dir(dir)?;
+        let mut stats = scan.stats;
+        if guard.is_some() && !scan.mergeable.is_empty() {
+            if scan.index_unreadable {
+                // Rewriting the index now would replace the (unreadable
+                // but possibly recoverable) old index with segment data
+                // only.  Leave everything in place for manual recovery.
+                eprintln!(
+                    "store: index unreadable; compaction disabled to avoid data loss"
+                );
+            } else {
+                match write_index(dir, &scan.entries) {
+                    Ok(()) => {
+                        for p in &scan.mergeable {
+                            // Best-effort; also reclaim a dead writer's
+                            // leftover lock so it stops shadowing opens.
+                            let _ = fs::remove_file(p);
+                            let _ = fs::remove_file(lock_path(p));
+                        }
+                        stats.compacted = true;
+                        stats.merged_segments = scan.mergeable.len();
+                    }
+                    Err(e) => eprintln!("store: compaction skipped: {e}"),
+                }
+            }
+        }
+        drop(guard);
+
+        stats.entries = scan.entries.len();
+        Ok(ProfileStore {
+            dir: dir.to_path_buf(),
+            inner: Mutex::new(Inner {
+                entries: scan.entries,
+                dirty: Vec::new(),
+                writer: None,
+            }),
+            stats,
+        })
+    }
+
+    /// Directory this store lives in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Stats snapshot from the open pass, with `entries` refreshed to the
+    /// live count.
+    pub fn stats(&self) -> StoreStats {
+        let mut s = self.stats;
+        s.entries = self.len();
+        s
+    }
+
+    /// Stored time for `key`, if any prior session simulated it.
+    pub fn get(&self, key: &StoreKey) -> Option<f64> {
+        let inner = self.inner.lock().expect("store mutex poisoned");
+        inner.entries.get(key).map(|&bits| f64::from_bits(bits))
+    }
+
+    /// Record a freshly simulated time.  Buffered in memory until
+    /// [`ProfileStore::flush`]; a value already on disk is not rewritten.
+    pub fn put(&self, key: StoreKey, time_s: f64) {
+        let mut inner = self.inner.lock().expect("store mutex poisoned");
+        let bits = time_s.to_bits();
+        match inner.entries.insert(key, bits) {
+            Some(old) if old == bits => {}
+            _ => inner.dirty.push(encode_record(&key, time_s)),
+        }
+    }
+
+    /// Distinct records currently held (disk + this session's new ones).
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("store mutex poisoned").entries.len()
+    }
+
+    /// Whether the store holds no records.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records buffered but not yet appended to this session's segment.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().expect("store mutex poisoned").dirty.len()
+    }
+
+    /// Append buffered records to this session's segment (created, with
+    /// its liveness lock, on first flush).  Called by the executor at
+    /// campaign boundaries and from `Drop`.
+    pub fn flush(&self) -> Result<(), String> {
+        let mut guard = self.inner.lock().expect("store mutex poisoned");
+        let inner = &mut *guard;
+        if inner.dirty.is_empty() {
+            return Ok(());
+        }
+        if inner.writer.is_none() {
+            inner.writer = Some(SegmentWriter::create(&self.dir)?);
+        }
+        let writer = inner.writer.as_mut().expect("writer just created");
+        let mut buf = inner.dirty.join("\n");
+        buf.push('\n');
+        writer
+            .file
+            .write_all(buf.as_bytes())
+            .map_err(|e| format!("store: append failed: {e}"))?;
+        writer
+            .file
+            .flush()
+            .map_err(|e| format!("store: flush failed: {e}"))?;
+        inner.dirty.clear();
+        Ok(())
+    }
+
+    /// Delete every store file under `dir` (index, segments, locks,
+    /// leftover temp files).  Returns how many files were removed; a
+    /// missing directory is an empty store, not an error.
+    pub fn clear(dir: &Path) -> Result<usize, String> {
+        let rd = match fs::read_dir(dir) {
+            Ok(rd) => rd,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(format!("store: read {}: {e}", dir.display())),
+        };
+        let mut removed = 0;
+        for entry in rd {
+            let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let ours = name == INDEX_FILE
+                || name == COMPACT_LOCK
+                || name.starts_with(&format!("{INDEX_FILE}.tmp-"))
+                || (name.starts_with(SEGMENT_PREFIX)
+                    && (name.ends_with(SEGMENT_SUFFIX)
+                        || name.ends_with(&format!("{SEGMENT_SUFFIX}.lock"))));
+            if ours {
+                fs::remove_file(entry.path())
+                    .map_err(|e| format!("store: remove {name}: {e}"))?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+impl Drop for ProfileStore {
+    fn drop(&mut self) {
+        if let Err(e) = self.flush() {
+            eprintln!("store: flush on drop failed: {e}");
+        }
+        // Dropping `inner` drops the SegmentWriter, releasing its lock.
+    }
+}
+
+/// Everything one pass over the store directory learns.
+struct Scan {
+    entries: HashMap<StoreKey, u64>,
+    /// Segments safe to fold into the index and delete: readable, not
+    /// held by a live writer, and free of other-version records.
+    mergeable: Vec<PathBuf>,
+    stats: StoreStats,
+    /// The index existed but could not be read — compaction must not
+    /// rewrite it from segment data alone.
+    index_unreadable: bool,
+}
+
+/// Read the index and every segment under `dir` into memory, tolerating
+/// (and tallying) corruption.  Load order is deterministic (sorted
+/// names), and by determinism of the simulator any duplicate keys carry
+/// equal values, so later-wins is harmless.
+fn scan_dir(dir: &Path) -> Result<Scan, String> {
+    let mut scan = Scan {
+        entries: HashMap::new(),
+        mergeable: Vec::new(),
+        stats: StoreStats::default(),
+        index_unreadable: false,
+    };
+    let index_path = dir.join(INDEX_FILE);
+    match fs::read_to_string(&index_path) {
+        Ok(text) => {
+            load_lines(&index_path, &text, &mut scan.entries, &mut scan.stats)
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+        Err(e) => {
+            scan.stats.corrupt_segments += 1;
+            scan.index_unreadable = true;
+            eprintln!(
+                "store: skipping unreadable index {}: {e}",
+                index_path.display()
+            );
+        }
+    }
+
+    for path in segment_paths(dir)? {
+        scan.stats.segments_seen += 1;
+        let locked = segment_is_locked(&path);
+        match fs::read_to_string(&path) {
+            Ok(text) => {
+                let stale_before = scan.stats.stale_lines;
+                load_lines(&path, &text, &mut scan.entries, &mut scan.stats);
+                // A locked segment is still being written; one with
+                // other-version lines belongs to another build.  Both
+                // are merged-from but never deleted.
+                if !locked && scan.stats.stale_lines == stale_before {
+                    scan.mergeable.push(path);
+                }
+            }
+            // Raced with another process's compaction: the segment's
+            // records are in the index that pass wrote.  Not corruption.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                scan.stats.corrupt_segments += 1;
+                eprintln!(
+                    "store: skipping unreadable segment {}: {e}",
+                    path.display()
+                );
+            }
+        }
+    }
+    Ok(scan)
+}
+
+/// Liveness-lock path for a segment file (`<segment>.lock`).
+fn lock_path(segment: &Path) -> PathBuf {
+    let name = segment
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    segment.with_file_name(format!("{name}.lock"))
+}
+
+/// Whether `segment` is held by a **live** writer.  Lock files carry the
+/// writer's pid; a lock whose process is gone (crashed writer) no longer
+/// protects the segment, so compaction can reclaim it.  An empty or
+/// garbled lock is treated as live — it may be mid-creation.
+fn segment_is_locked(segment: &Path) -> bool {
+    let lock = lock_path(segment);
+    match fs::read_to_string(&lock) {
+        Err(_) if !lock.exists() => false,
+        Err(_) => true, // unreadable lock: assume live
+        Ok(text) => match text.trim().parse::<u32>() {
+            Ok(pid) => pid_alive(pid),
+            Err(_) => true, // pid not written yet: assume live
+        },
+    }
+}
+
+/// Stores are per-machine (the lock protocol relies on a shared pid
+/// namespace), so /proc is authoritative on Linux; elsewhere be
+/// conservative and treat every lock holder as alive.
+#[cfg(target_os = "linux")]
+fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pid_alive(_pid: u32) -> bool {
+    true
+}
+
+/// All segment files under `dir`, sorted by name.
+fn segment_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let rd = fs::read_dir(dir).map_err(|e| format!("store: read {}: {e}", dir.display()))?;
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with(SEGMENT_PREFIX) && name.ends_with(SEGMENT_SUFFIX) {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Fold every decodable line of `text` into `entries`, tallying skips.
+fn load_lines(
+    path: &Path,
+    text: &str,
+    entries: &mut HashMap<StoreKey, u64>,
+    stats: &mut StoreStats,
+) {
+    let mut first_bad = true;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match decode_record(line) {
+            Ok((key, time_s)) => {
+                entries.insert(key, time_s.to_bits());
+            }
+            Err(RecordError::StaleVersion(_)) => stats.stale_lines += 1,
+            Err(RecordError::Corrupt(e)) => {
+                stats.corrupt_lines += 1;
+                if first_bad {
+                    first_bad = false;
+                    eprintln!(
+                        "store: skipping corrupt line(s) in {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Rewrite the index from `entries` via write-to-temp + atomic rename.
+/// Must only be called while holding the [`CompactGuard`].
+fn write_index(dir: &Path, entries: &HashMap<StoreKey, u64>) -> Result<(), String> {
+    // Sorted lines make the index byte-deterministic: compacting an
+    // already-compact store rewrites the identical file (idempotence).
+    let mut lines: Vec<String> = entries
+        .iter()
+        .map(|(k, &bits)| encode_record(k, f64::from_bits(bits)))
+        .collect();
+    lines.sort();
+    let mut body = lines.join("\n");
+    if !body.is_empty() {
+        body.push('\n');
+    }
+    let tmp = dir.join(format!("{INDEX_FILE}.tmp-{}", std::process::id()));
+    fs::write(&tmp, body).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    fs::rename(&tmp, dir.join(INDEX_FILE))
+        .map_err(|e| format!("rename {}: {e}", tmp.display()))
+}
+
+/// Holds `compact.lock` for the duration of one scan-and-rewrite pass.
+struct CompactGuard {
+    path: PathBuf,
+}
+
+impl CompactGuard {
+    fn acquire(dir: &Path) -> Option<CompactGuard> {
+        let path = dir.join(COMPACT_LOCK);
+        for attempt in 0..2 {
+            match OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Some(CompactGuard { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    // A crashed compactor must not disable compaction
+                    // forever: reclaim locks far older than any real
+                    // pass and retry once.
+                    if attempt == 0 && compact_lock_is_stale(&path) {
+                        eprintln!(
+                            "store: reclaiming stale {}",
+                            path.display()
+                        );
+                        let _ = fs::remove_file(&path);
+                        continue;
+                    }
+                    return None;
+                }
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+fn compact_lock_is_stale(path: &Path) -> bool {
+    fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| t.elapsed().ok())
+        .map(|age| age > STALE_COMPACT_LOCK)
+        .unwrap_or(false)
+}
+
+impl Drop for CompactGuard {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: u32, r: u32, rep: u32, seed: u64) -> StoreKey {
+        StoreKey {
+            cluster: 0xDEAD_BEEF_0BAD_F00D,
+            app: AppId::WordCount,
+            num_mappers: m,
+            num_reducers: r,
+            rep,
+            base_seed: seed,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_store_unit_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn record_round_trips_bit_exactly() {
+        for (i, t) in [1523.25, 0.1 + 0.2, f64::MIN_POSITIVE, 1e300].iter().enumerate() {
+            let k = key(20, 5, i as u32, u64::MAX - i as u64);
+            let line = encode_record(&k, *t);
+            let (k2, t2) = decode_record(&line).unwrap();
+            assert_eq!(k2, k);
+            assert_eq!(t2.to_bits(), t.to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_classifies_stale_and_corrupt() {
+        let line = encode_record(&key(5, 5, 0, 1), 2.0);
+        let stale = line.replace("\"v\":1", "\"v\":999");
+        assert_eq!(
+            decode_record(&stale),
+            Err(RecordError::StaleVersion(999))
+        );
+        for bad in ["", "not json", "{\"v\":1}", "{\"x\":2}", "[1,2,3]"] {
+            match decode_record(bad) {
+                Err(RecordError::Corrupt(_)) => {}
+                other => panic!("expected corrupt for {bad:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn put_get_flush_reopen() {
+        let dir = tmp_dir("basic");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            assert!(store.is_empty());
+            store.put(key(20, 5, 0, 42), 100.5);
+            store.put(key(20, 5, 1, 42), 101.5);
+            assert_eq!(store.pending(), 2);
+            store.flush().unwrap();
+            assert_eq!(store.pending(), 0);
+            assert_eq!(store.get(&key(20, 5, 0, 42)), Some(100.5));
+        }
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 2);
+        assert_eq!(store.get(&key(20, 5, 1, 42)), Some(101.5));
+        assert!(store.get(&key(20, 5, 2, 42)).is_none());
+        drop(store);
+        assert!(ProfileStore::clear(&dir).unwrap() >= 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rewriting_known_value_stays_clean() {
+        let dir = tmp_dir("rewrite");
+        let store = ProfileStore::open(&dir).unwrap();
+        store.put(key(5, 5, 0, 7), 3.5);
+        store.flush().unwrap();
+        store.put(key(5, 5, 0, 7), 3.5);
+        assert_eq!(store.pending(), 0, "identical value not re-queued");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn drop_flushes_and_releases_lock() {
+        let dir = tmp_dir("droplock");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            store.put(key(10, 10, 0, 9), 55.0);
+            store.flush().unwrap();
+            // Live session: exactly one lock file present.
+            let locks = std::fs::read_dir(&dir)
+                .unwrap()
+                .filter(|e| {
+                    e.as_ref()
+                        .unwrap()
+                        .file_name()
+                        .to_string_lossy()
+                        .ends_with(".lock")
+                })
+                .count();
+            assert_eq!(locks, 1);
+        }
+        let locks = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|e| {
+                e.as_ref()
+                    .unwrap()
+                    .file_name()
+                    .to_string_lossy()
+                    .ends_with(".lock")
+            })
+            .count();
+        assert_eq!(locks, 0, "locks released on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn clear_of_missing_dir_is_empty() {
+        let dir = tmp_dir("missing");
+        assert_eq!(ProfileStore::clear(&dir).unwrap(), 0);
+    }
+}

@@ -34,10 +34,15 @@ use super::experiments;
 /// Outcome summary (also printed step by step).
 #[derive(Clone, Debug)]
 pub struct E2eOutcome {
+    /// WordCount mean prediction error (Table 1 row 1).
     pub wordcount_mean_err_pct: f64,
+    /// Exim mean prediction error (Table 1 row 2).
     pub exim_mean_err_pct: f64,
+    /// Fit/predict backend actually used ("xla-pjrt" or "rust-cholesky").
     pub backend: &'static str,
+    /// (M, R) of the Fig. 4 surface minimum.
     pub surface_min: (u32, u32),
+    /// Whether both apps came in under the paper's 5 % headline.
     pub headline_reproduced: bool,
 }
 
@@ -47,6 +52,8 @@ pub fn run(seed: u64) -> Result<E2eOutcome, String> {
     run_with(seed, &CampaignExecutor::machine_sized())
 }
 
+/// Run the validation through a caller-supplied executor (so CLI `--jobs`
+/// and `--store` settings apply to every campaign inside).
 pub fn run_with(seed: u64, executor: &CampaignExecutor) -> Result<E2eOutcome, String> {
     println!(
         "=== mrtuner end-to-end validation (seed {seed}, {} profiling workers) ===\n",
@@ -172,12 +179,9 @@ pub fn run_with(seed: u64, executor: &CampaignExecutor) -> Result<E2eOutcome, St
         "      wordcount minimum at M={bm}, R={br} (paper: 20, 5), mean {}",
         fmt_secs(surf.mean_time())
     );
-    println!(
-        "      profiling executor: {} simulated reps, {} cache hits, {} workers",
-        executor.cache_misses(),
-        executor.cache_hits(),
-        executor.jobs()
-    );
+    // Combined in-memory + on-disk accounting: with a persistent store
+    // attached, `simulated` can be zero on a fully warm-started run.
+    println!("      profiling executor: {}", executor.stats());
 
     let headline = wc.errors.mean_pct() < 5.0 && ex.errors.mean_pct() < 5.0;
     println!(
@@ -199,7 +203,7 @@ pub fn run_with(seed: u64, executor: &CampaignExecutor) -> Result<E2eOutcome, St
     })
 }
 
-// Save a fitted model for later `mrtuner predict` convenience.
+/// Save a fitted model per paper app for later `mrtuner predict` use.
 pub fn save_models(seed: u64, dir: &std::path::Path) -> Result<(), String> {
     let cluster = crate::cluster::Cluster::paper_cluster();
     let executor = CampaignExecutor::machine_sized();

@@ -30,11 +30,17 @@ pub fn default_backend() -> (Box<dyn FitBackend>, &'static str) {
 /// and per-experiment errors on 20 held-out random settings.
 #[derive(Clone, Debug)]
 pub struct Fig3Data {
+    /// Application evaluated.
     pub app: AppId,
+    /// Fit/predict backend used.
     pub backend: &'static str,
+    /// The 20 held-out settings, in plot order.
     pub test_specs: Vec<ExperimentSpec>,
+    /// Actual-vs-predicted errors on the held-out settings.
     pub errors: PredictionErrors,
+    /// The model fitted on the training campaign.
     pub model: RegressionModel,
+    /// Training dataset (for cross-checks and reuse).
     pub train: Dataset,
 }
 
@@ -74,8 +80,11 @@ pub fn fig3_with(executor: &CampaignExecutor, app: AppId, seed: u64) -> Fig3Data
 /// surface.
 #[derive(Clone, Debug)]
 pub struct Fig4Data {
+    /// Application swept.
     pub app: AppId,
+    /// Mapper-axis lattice values.
     pub ms: Vec<u32>,
+    /// Reducer-axis lattice values.
     pub rs: Vec<u32>,
     /// Row-major surface `[ms.len() * rs.len()]`, seconds.
     pub times: Vec<f64>,
@@ -101,6 +110,7 @@ impl Fig4Data {
         (max - min) / min
     }
 
+    /// Mean execution time over the whole surface.
     pub fn mean_time(&self) -> f64 {
         crate::util::stats::mean(&self.times)
     }
@@ -142,11 +152,15 @@ pub fn fig4_with(
 /// One row of Table 1: mean and variance of prediction errors.
 #[derive(Clone, Debug)]
 pub struct Table1Row {
+    /// Application evaluated.
     pub app: AppId,
+    /// Reproduced mean prediction error (%).
     pub mean_pct: f64,
+    /// Reproduced variance of prediction errors (%).
     pub variance_pct: f64,
     /// Paper's reported values for side-by-side comparison.
     pub paper_mean_pct: f64,
+    /// Paper's reported variance.
     pub paper_variance_pct: f64,
 }
 

@@ -14,16 +14,24 @@ use crate::util::json::{parse, Json};
 /// Parsed artifact manifest.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
+    /// Feature-vector length the artifacts were compiled for.
     pub num_features: usize,
+    /// Parameter normalization divisor baked into the artifacts.
     pub param_scale: f64,
+    /// Fixed training-batch row count of the fit artifact.
     pub fit_rows: usize,
+    /// Fixed batch row count of the predict artifact.
     pub predict_rows: usize,
+    /// Relative ridge regularization baked into the fit artifact.
     pub ridge_rel: f64,
+    /// Path to the fit HLO text.
     pub fit_path: PathBuf,
+    /// Path to the predict HLO text.
     pub predict_path: PathBuf,
 }
 
 impl Manifest {
+    /// Parse a manifest JSON document, resolving paths relative to `dir`.
     pub fn parse_json(dir: &Path, v: &Json) -> Result<Manifest, String> {
         let req_u = |k: &str| -> Result<usize, String> {
             Ok(v.req(k)?.as_u64().ok_or_else(|| format!("{k} must be int"))? as usize)

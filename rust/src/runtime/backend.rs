@@ -10,14 +10,17 @@ use super::pjrt::XlaRuntime;
 
 /// Production fitting/prediction backend: executes the AOT artifacts.
 pub struct XlaBackend {
+    /// The loaded PJRT runtime executing both artifacts.
     pub runtime: XlaRuntime,
 }
 
 impl XlaBackend {
+    /// Wrap an already-loaded runtime.
     pub fn new(runtime: XlaRuntime) -> XlaBackend {
         XlaBackend { runtime }
     }
 
+    /// Load the runtime from the default artifacts directory.
     pub fn load_default() -> Result<XlaBackend> {
         Ok(XlaBackend::new(XlaRuntime::load_default()?))
     }

@@ -15,12 +15,14 @@ use super::artifacts::{default_dir, Manifest};
 
 /// Loaded runtime: PJRT client plus the two compiled executables.
 pub struct XlaRuntime {
+    /// The manifest the artifacts were loaded from.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     fit_exe: xla::PjRtLoadedExecutable,
     predict_exe: xla::PjRtLoadedExecutable,
-    /// Executions served (perf counter for the coordinator's metrics).
+    /// Fit executions served (perf counter for the coordinator's metrics).
     pub fit_calls: std::cell::Cell<u64>,
+    /// Predict executions served.
     pub predict_calls: std::cell::Cell<u64>,
 }
 
@@ -46,6 +48,7 @@ impl XlaRuntime {
         })
     }
 
+    /// Name of the PJRT platform serving the executables.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -9,8 +9,11 @@ use super::time::SimTime;
 /// results do not depend on heap internals.
 #[derive(Clone, Debug)]
 pub struct Scheduled<E> {
+    /// When the event fires.
     pub time: SimTime,
+    /// Scheduling order, for deterministic FIFO tie-breaks.
     pub seq: u64,
+    /// The event payload.
     pub event: E,
 }
 
@@ -51,6 +54,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// Empty queue at time zero.
     pub fn new() -> Self {
         EventQueue { heap: BinaryHeap::new(), next_seq: 0, now: SimTime::ZERO, popped: 0 }
     }
@@ -65,10 +69,12 @@ impl<E> EventQueue<E> {
         self.popped
     }
 
+    /// Events still pending.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are pending.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

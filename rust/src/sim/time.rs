@@ -12,6 +12,7 @@ use std::ops::{Add, AddAssign, Sub};
 pub struct SimTime(pub u64);
 
 impl SimTime {
+    /// Simulation start.
     pub const ZERO: SimTime = SimTime(0);
 
     /// Construct from (possibly fractional) seconds; sub-microsecond
@@ -23,22 +24,27 @@ impl SimTime {
         SimTime((s * 1e6).round() as u64)
     }
 
+    /// Construct from whole microseconds.
     pub fn from_micros(us: u64) -> SimTime {
         SimTime(us)
     }
 
+    /// This instant as fractional seconds.
     pub fn as_secs(self) -> f64 {
         self.0 as f64 / 1e6
     }
 
+    /// This instant as whole microseconds.
     pub fn as_micros(self) -> u64 {
         self.0
     }
 
+    /// Later of two instants.
     pub fn max(self, other: SimTime) -> SimTime {
         SimTime(self.0.max(other.0))
     }
 
+    /// Earlier of two instants.
     pub fn min(self, other: SimTime) -> SimTime {
         SimTime(self.0.min(other.0))
     }

@@ -11,16 +11,24 @@ use super::stats;
 /// Timing summary for one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Case label.
     pub name: String,
+    /// Timed iterations.
     pub iters: u32,
+    /// Mean iteration time.
     pub mean_s: f64,
+    /// Iteration-time standard deviation.
     pub stddev_s: f64,
+    /// Fastest iteration.
     pub min_s: f64,
+    /// Median iteration time.
     pub p50_s: f64,
+    /// 99th-percentile iteration time.
     pub p99_s: f64,
 }
 
 impl BenchStats {
+    /// Units processed per second at the mean iteration time.
     pub fn throughput(&self, units_per_iter: f64) -> f64 {
         units_per_iter / self.mean_s
     }

@@ -1,8 +1,29 @@
-//! Byte-size constants and formatting.
+//! Byte-size constants, formatting, and fixed-width hex codecs.
 
+/// One kibibyte (2^10 bytes).
 pub const KB: u64 = 1 << 10;
+/// One mebibyte (2^20 bytes).
 pub const MB: u64 = 1 << 20;
+/// One gibibyte (2^30 bytes).
 pub const GB: u64 = 1 << 30;
+
+/// Render a `u64` as fixed-width (16-digit) lowercase hex.
+///
+/// The profile store persists `u64` seeds, fingerprints and `f64` bit
+/// patterns this way because JSON numbers are f64 and silently lose
+/// integer precision above 2^53 — a hex string round-trips every bit.
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Parse a `u64` from the hex form written by [`hex_u64`] (any length up
+/// to 16 digits, case-insensitive).
+pub fn parse_hex_u64(s: &str) -> Result<u64, String> {
+    if s.is_empty() || s.len() > 16 {
+        return Err(format!("bad hex u64 '{s}'"));
+    }
+    u64::from_str_radix(s, 16).map_err(|_| format!("bad hex u64 '{s}'"))
+}
 
 /// Render a byte count in the most natural unit ("8.0 GB", "640.0 MB").
 pub fn fmt_bytes(b: u64) -> String {
@@ -43,6 +64,17 @@ mod tests {
         assert_eq!(fmt_bytes(2 * KB), "2.0 KB");
         assert_eq!(fmt_bytes(8 * GB), "8.0 GB");
         assert_eq!(fmt_bytes(1536 * MB), "1.5 GB");
+    }
+
+    #[test]
+    fn hex_u64_round_trips() {
+        for v in [0u64, 1, 0x53, u64::MAX, 0x9E37_79B9_7F4A_7C15] {
+            assert_eq!(parse_hex_u64(&hex_u64(v)).unwrap(), v);
+        }
+        assert_eq!(hex_u64(0x53), "0000000000000053");
+        assert!(parse_hex_u64("").is_err());
+        assert!(parse_hex_u64("xyz").is_err());
+        assert!(parse_hex_u64("00000000000000000").is_err(), "17 digits");
     }
 
     #[test]

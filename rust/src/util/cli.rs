@@ -1,16 +1,23 @@
-//! Tiny command-line parser: `binary SUBCOMMAND --flag value --switch`.
+//! Tiny command-line parser:
+//! `binary SUBCOMMAND [ACTION...] --flag value --switch`.
 //!
 //! Hand-rolled because no argument-parsing crate is available offline.
-//! Unknown flags are an error (catches typos in experiment scripts).
+//! Unknown flags are an error (catches typos in experiment scripts), and
+//! so are positional arguments the subcommand never consumed.
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, positional actions, `--flag value`
+/// pairs and bare `--switch`es, with consumption tracking so typos fail.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First bare token, if any (`mrtuner <SUBCOMMAND> ...`).
     pub subcommand: Option<String>,
+    positionals: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
+    consumed_pos: std::cell::RefCell<usize>,
 }
 
 impl Args {
@@ -24,9 +31,16 @@ impl Args {
         }
         while i < argv.len() {
             let a = &argv[i];
-            let name = a
-                .strip_prefix("--")
-                .ok_or_else(|| format!("expected --flag, got '{a}'"))?;
+            let name = match a.strip_prefix("--") {
+                Some(name) => name,
+                None => {
+                    // Bare token that is not a flag value: a positional
+                    // action (`mrtuner store stats --store DIR`).
+                    out.positionals.push(a.clone());
+                    i += 1;
+                    continue;
+                }
+            };
             if name.is_empty() {
                 return Err("empty flag name".into());
             }
@@ -43,6 +57,14 @@ impl Args {
         Ok(out)
     }
 
+    /// The `i`-th positional argument after the subcommand, if present.
+    pub fn positional(&self, i: usize) -> Option<String> {
+        let mut hw = self.consumed_pos.borrow_mut();
+        *hw = (*hw).max(i + 1);
+        self.positionals.get(i).cloned()
+    }
+
+    /// Parse the process arguments.
     pub fn from_env() -> Result<Args, String> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&argv)
@@ -52,15 +74,18 @@ impl Args {
         self.consumed.borrow_mut().push(name.to_string());
     }
 
+    /// `--name value`, if given.
     pub fn str_opt(&self, name: &str) -> Option<String> {
         self.mark(name);
         self.flags.get(name).cloned()
     }
 
+    /// `--name value` with a default.
     pub fn str_or(&self, name: &str, default: &str) -> String {
         self.str_opt(name).unwrap_or_else(|| default.to_string())
     }
 
+    /// Integer flag with a default; bad values are an error.
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, String> {
         match self.str_opt(name) {
             None => Ok(default),
@@ -68,6 +93,7 @@ impl Args {
         }
     }
 
+    /// Float flag with a default; bad values are an error.
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.str_opt(name) {
             None => Ok(default),
@@ -75,12 +101,14 @@ impl Args {
         }
     }
 
+    /// Whether the bare switch `--name` was given.
     pub fn switch(&self, name: &str) -> bool {
         self.mark(name);
         self.switches.iter().any(|s| s == name)
     }
 
-    /// Error on any flag/switch never consumed by the subcommand.
+    /// Error on any flag/switch/positional never consumed by the
+    /// subcommand.
     pub fn reject_unknown(&self) -> Result<(), String> {
         let seen = self.consumed.borrow();
         let unknown: Vec<&str> = self
@@ -90,11 +118,17 @@ impl Args {
             .chain(self.switches.iter().map(|s| s.as_str()))
             .filter(|n| !seen.iter().any(|s| s == n))
             .collect();
-        if unknown.is_empty() {
-            Ok(())
-        } else {
-            Err(format!("unknown flag(s): {}", unknown.join(", ")))
+        if !unknown.is_empty() {
+            return Err(format!("unknown flag(s): {}", unknown.join(", ")));
         }
+        let hw = *self.consumed_pos.borrow();
+        if self.positionals.len() > hw {
+            return Err(format!(
+                "unexpected argument(s): {}",
+                self.positionals[hw..].join(", ")
+            ));
+        }
+        Ok(())
     }
 }
 
@@ -141,6 +175,23 @@ mod tests {
         // "--shift -3" would parse -3 as a flag; "=" form handles negatives.
         let a = Args::parse(&argv(&["x", "--shift=-3.5"])).unwrap();
         assert_eq!(a.f64_or("shift", 0.0).unwrap(), -3.5);
+    }
+
+    #[test]
+    fn positionals_after_subcommand() {
+        let a = Args::parse(&argv(&["store", "stats", "--store", "d"])).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("store"));
+        assert_eq!(a.positional(0).as_deref(), Some("stats"));
+        assert_eq!(a.positional(1), None);
+        assert_eq!(a.str_opt("store").as_deref(), Some("d"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn unconsumed_positionals_rejected() {
+        let a = Args::parse(&argv(&["store", "stats", "oops"])).unwrap();
+        assert_eq!(a.positional(0).as_deref(), Some("stats"));
+        assert!(a.reject_unknown().is_err(), "'oops' never consumed");
     }
 
     #[test]

@@ -11,19 +11,27 @@ use std::fmt;
 /// (stable diffs for datasets checked into EXPERIMENTS runs).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always an f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array of values.
     Arr(Vec<Json>),
+    /// An object; BTreeMap keeps key order deterministic.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Object field lookup; `None` for non-objects and missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -31,6 +39,7 @@ impl Json {
         }
     }
 
+    /// The number value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -38,6 +47,7 @@ impl Json {
         }
     }
 
+    /// The value as a `u64`, if it is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -45,6 +55,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -52,6 +63,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -59,6 +71,7 @@ impl Json {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -71,10 +84,32 @@ impl Json {
         self.get(key).ok_or_else(|| format!("missing field '{key}'"))
     }
 
+    /// Fetch a required string field.
+    pub fn req_str(&self, key: &str) -> Result<&str, String> {
+        self.req(key)?
+            .as_str()
+            .ok_or_else(|| format!("field '{key}' must be a string"))
+    }
+
+    /// Fetch a required non-negative integer field (exact in f64).
+    pub fn req_u64(&self, key: &str) -> Result<u64, String> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| format!("field '{key}' must be a non-negative integer"))
+    }
+
+    /// Fetch a required `u32` field.
+    pub fn req_u32(&self, key: &str) -> Result<u32, String> {
+        let v = self.req_u64(key)?;
+        u32::try_from(v).map_err(|_| format!("field '{key}' out of u32 range"))
+    }
+
+    /// Array of numbers from a slice.
     pub fn from_f64_slice(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Flatten an all-number array back into a `Vec<f64>`.
     pub fn to_f64_vec(&self) -> Result<Vec<f64>, String> {
         self.as_arr()
             .ok_or_else(|| "expected array".to_string())?
@@ -147,6 +182,7 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
 
 // ---------------------------------------------------------------- parsing
 
+/// Parse one complete JSON document (trailing garbage is an error).
 pub fn parse(input: &str) -> Result<Json, String> {
     let mut p = Parser { b: input.as_bytes(), i: 0 };
     p.skip_ws();
@@ -406,6 +442,22 @@ mod tests {
     fn integers_render_without_exponent() {
         assert_eq!(Json::Num(64.0).to_string(), "64");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    #[test]
+    fn required_field_helpers() {
+        let v = parse(r#"{"s":"x","n":7,"neg":-1,"f":1.5}"#).unwrap();
+        assert_eq!(v.req_str("s").unwrap(), "x");
+        assert_eq!(v.req_u64("n").unwrap(), 7);
+        assert_eq!(v.req_u32("n").unwrap(), 7);
+        assert!(v.req_str("n").is_err());
+        assert!(v.req_u64("neg").is_err());
+        assert!(v.req_u64("f").is_err());
+        assert!(v.req_u64("missing").is_err());
+        assert!(parse(&format!("{{\"big\":{}}}", (1u64 << 40)))
+            .unwrap()
+            .req_u32("big")
+            .is_err());
     }
 
     #[test]

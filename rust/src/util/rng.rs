@@ -53,6 +53,7 @@ impl Rng {
         Rng { s, gauss_spare: None }
     }
 
+    /// Next raw 64-bit draw (xoshiro256** step).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
@@ -90,6 +91,7 @@ impl Rng {
         }
     }
 
+    /// Uniform integer in `[lo, hi)` as `usize`.
     pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.range_u64(lo as u64, hi as u64) as usize
     }
@@ -99,6 +101,7 @@ impl Rng {
         lo + (hi - lo) * self.f64()
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -162,6 +165,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Zipf distribution over `1..=n` with exponent `s` (`s != 1`).
     pub fn new(n: u64, s: f64) -> Self {
         assert!(n >= 1 && s > 0.0 && (s - 1.0).abs() > 1e-9, "s != 1, n >= 1");
         let h = |x: f64| (x.powf(1.0 - s) - 1.0) / (1.0 - s);

@@ -27,6 +27,7 @@ pub fn sample_variance(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
 }
 
+/// Sample standard deviation.
 pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
@@ -49,10 +50,12 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Smallest element (`inf` when empty).
 pub fn min(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::INFINITY, f64::min)
 }
 
+/// Largest element (`-inf` when empty).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
@@ -85,10 +88,12 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         OnlineStats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold one observation in (Welford update).
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -98,14 +103,17 @@ impl OnlineStats {
         self.max = self.max.max(x);
     }
 
+    /// Observations folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Running population variance.
     pub fn variance(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -114,18 +122,22 @@ impl OnlineStats {
         }
     }
 
+    /// Running standard deviation.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Smallest observation.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest observation.
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Fold another accumulator in (parallel-merge form).
     pub fn merge(&mut self, other: &OnlineStats) {
         if other.n == 0 {
             return;

@@ -1,0 +1,304 @@
+//! Integration tests for the persistent on-disk profile store.
+//!
+//! Covers the store's contract end to end: bit-exact record codec
+//! (property-tested), cross-process warm starts (a second executor and a
+//! genuinely separate spawned `mrtuner` process), corruption tolerance,
+//! and compaction idempotence.
+
+use std::path::PathBuf;
+use std::process::Command;
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::profiler::store::{decode_record, encode_record, RecordError};
+use mrtuner::profiler::{CampaignExecutor, ExperimentSpec, ProfileStore, StoreKey};
+use mrtuner::util::prop::forall;
+
+/// Unique per-test scratch directory (removed up front so reruns are
+/// deterministic even after a crashed run).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mrtuner_store_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn spec(m: u32, r: u32) -> ExperimentSpec {
+    ExperimentSpec::new(AppId::WordCount, m, r)
+}
+
+fn seg_files(dir: &PathBuf) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| {
+            let n = p.file_name().unwrap().to_string_lossy().into_owned();
+            n.starts_with("seg-") && n.ends_with(".jsonl")
+        })
+        .collect();
+    out.sort();
+    out
+}
+
+#[test]
+fn record_codec_round_trips_any_key_and_bits() {
+    forall("store record round-trip", 200, |rng| {
+        let apps = AppId::all();
+        let key = StoreKey {
+            cluster: rng.next_u64(),
+            app: apps[rng.range_usize(0, apps.len())],
+            num_mappers: rng.next_u64() as u32,
+            num_reducers: rng.next_u64() as u32,
+            rep: rng.next_u64() as u32,
+            base_seed: rng.next_u64(),
+        };
+        // Arbitrary bit patterns, including NaNs/infinities/subnormals:
+        // the codec must preserve every bit, not just "nice" times.
+        let time_s = f64::from_bits(rng.next_u64());
+        let line = encode_record(&key, time_s);
+        let (k2, t2) = decode_record(&line).expect("round trip");
+        assert_eq!(k2, key);
+        assert_eq!(t2.to_bits(), time_s.to_bits());
+    });
+}
+
+#[test]
+fn version_bump_is_stale_not_corrupt() {
+    let key = StoreKey {
+        cluster: 1,
+        app: AppId::Grep,
+        num_mappers: 5,
+        num_reducers: 5,
+        rep: 0,
+        base_seed: 2,
+    };
+    let line = encode_record(&key, 10.0).replace("\"v\":1", "\"v\":2");
+    assert_eq!(decode_record(&line), Err(RecordError::StaleVersion(2)));
+}
+
+#[test]
+fn second_executor_on_same_dir_simulates_nothing() {
+    let dir = scratch("reuse");
+    let cluster = Cluster::paper_cluster();
+    let specs = [spec(10, 10), spec(20, 5), spec(35, 30)];
+
+    let cold = {
+        let exec = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&dir).unwrap());
+        let res = exec.run_specs(&cluster, &specs, 2, 11);
+        assert_eq!(exec.cache_misses(), 6);
+        res
+    }; // drop flushes the store and releases the segment lock
+
+    let exec2 = CampaignExecutor::new(4)
+        .with_store(ProfileStore::open(&dir).unwrap());
+    let warm = exec2.run_specs(&cluster, &specs, 2, 11);
+    assert_eq!(exec2.cache_misses(), 0, "fully warm-started from disk");
+    assert_eq!(exec2.store_hits(), 6);
+    let st = exec2.stats();
+    assert_eq!(st.simulated, 0);
+    assert_eq!(st.store_entries, 6);
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(a.rep_times_s, b.rep_times_s, "warm is bit-identical");
+        assert_eq!(a.mean_time_s, b.mean_time_s);
+    }
+    drop(exec2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The ISSUE 2 acceptance criterion: a `fig4` sweep run twice in two
+/// separate OS processes with `--store` performs zero simulations on the
+/// second run, store-hit count equals rep count, and the output is
+/// bit-identical to the cold run.
+#[test]
+fn fig4_across_two_processes_is_warm_and_bit_identical() {
+    let dir = scratch("fig4");
+    let csv1 = dir.join("run1.csv");
+    let csv2 = dir.join("run2.csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bin = env!("CARGO_BIN_EXE_mrtuner");
+
+    let run = |csv: &PathBuf| {
+        let out = Command::new(bin)
+            .args([
+                "fig4",
+                "--app",
+                "wordcount",
+                "--step",
+                "20",
+                "--reps",
+                "2",
+                "--seed",
+                "7",
+                "--jobs",
+                "2",
+                "--store",
+            ])
+            .arg(&dir)
+            .arg("--csv")
+            .arg(csv)
+            .output()
+            .expect("spawn mrtuner fig4");
+        assert!(
+            out.status.success(),
+            "fig4 failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        String::from_utf8_lossy(&out.stderr).into_owned()
+    };
+
+    // step 20 on [5,40] → M,R ∈ {5,25} → 4 settings × 2 reps = 8 reps.
+    let err1 = run(&csv1);
+    assert!(err1.contains("simulated=8"), "cold run simulates all: {err1}");
+    let err2 = run(&csv2);
+    assert!(err2.contains("simulated=0"), "warm run simulates none: {err2}");
+    assert!(err2.contains("store_hits=8"), "store answers every rep: {err2}");
+
+    let a = std::fs::read(&csv1).unwrap();
+    let b = std::fs::read(&csv2).unwrap();
+    assert!(!a.is_empty());
+    assert_eq!(a, b, "warm output bit-identical to cold output");
+
+    // The store subcommand sees the same picture from a third process.
+    let stats = Command::new(bin)
+        .args(["store", "stats", "--store"])
+        .arg(&dir)
+        .output()
+        .expect("spawn mrtuner store stats");
+    assert!(stats.status.success());
+    let text = String::from_utf8_lossy(&stats.stdout).into_owned();
+    assert!(text.contains("entries=8"), "8 stored reps: {text}");
+
+    let cleared = Command::new(bin)
+        .args(["store", "clear", "--store"])
+        .arg(&dir)
+        .output()
+        .expect("spawn mrtuner store clear");
+    assert!(cleared.status.success());
+    let store = ProfileStore::peek(&dir).unwrap();
+    assert!(store.is_empty(), "clear removed every record");
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_segment_recovers_good_lines() {
+    let dir = scratch("trunc");
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        for rep in 0..3 {
+            store.put(
+                StoreKey {
+                    cluster: 9,
+                    app: AppId::WordCount,
+                    num_mappers: 20,
+                    num_reducers: 5,
+                    rep,
+                    base_seed: 4,
+                },
+                100.0 + rep as f64,
+            );
+        }
+        store.flush().unwrap();
+    }
+    // Simulate a crash mid-append: a truncated record at the segment tail.
+    let segs = seg_files(&dir);
+    assert_eq!(segs.len(), 1);
+    let mut bytes = std::fs::read(&segs[0]).unwrap();
+    bytes.extend_from_slice(b"{\"v\":1,\"cluster\":\"00");
+    std::fs::write(&segs[0], bytes).unwrap();
+
+    // And a wholly unreadable (non-UTF-8) segment alongside it.
+    let bogus = dir.join("seg-ffffffff-0000-bogus.jsonl");
+    std::fs::write(&bogus, [0xFF, 0xFE, 0x00, 0x80]).unwrap();
+
+    let store = ProfileStore::open(&dir).unwrap();
+    let st = store.stats();
+    assert_eq!(store.len(), 3, "good lines all recovered");
+    assert_eq!(st.corrupt_lines, 1, "truncated tail counted");
+    assert_eq!(st.corrupt_segments, 1, "unreadable file counted");
+    assert!(
+        bogus.exists(),
+        "unreadable segment preserved, never deleted"
+    );
+    // The recovered records are still served.
+    let got = store.get(&StoreKey {
+        cluster: 9,
+        app: AppId::WordCount,
+        num_mappers: 20,
+        num_reducers: 5,
+        rep: 2,
+        base_seed: 4,
+    });
+    assert_eq!(got, Some(102.0));
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn compaction_is_idempotent() {
+    let dir = scratch("compact");
+    // Two separate writing sessions → two segments.  `peek` keeps the
+    // second session's open from compacting the first one's segment.
+    for session in 0..2u64 {
+        let store = ProfileStore::peek(&dir).unwrap();
+        store.put(
+            StoreKey {
+                cluster: 7,
+                app: AppId::EximParse,
+                num_mappers: 10 + session as u32,
+                num_reducers: 10,
+                rep: 0,
+                base_seed: 1,
+            },
+            50.5 + session as f64,
+        );
+        store.flush().unwrap();
+    }
+    assert_eq!(seg_files(&dir).len(), 2);
+
+    // First compacting open folds both segments into the index.
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        let st = store.stats();
+        assert!(st.compacted);
+        assert_eq!(st.merged_segments, 2);
+        assert_eq!(store.len(), 2);
+    }
+    assert!(seg_files(&dir).is_empty(), "merged segments deleted");
+    let index = dir.join("index.jsonl");
+    let first = std::fs::read(&index).unwrap();
+    assert!(!first.is_empty());
+
+    // Re-opening an already-compact store changes nothing on disk and
+    // loses nothing in memory.
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        let st = store.stats();
+        assert!(!st.compacted, "nothing left to merge");
+        assert_eq!(store.len(), 2);
+    }
+    let second = std::fs::read(&index).unwrap();
+    assert_eq!(first, second, "index byte-stable across compactions");
+
+    // Writing the identical records again queues nothing new, so a third
+    // open still finds a byte-identical index.
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        store.put(
+            StoreKey {
+                cluster: 7,
+                app: AppId::EximParse,
+                num_mappers: 10,
+                num_reducers: 10,
+                rep: 0,
+                base_seed: 1,
+            },
+            50.5,
+        );
+        assert_eq!(store.pending(), 0, "known value not re-queued");
+    }
+    let third = std::fs::read(&index).unwrap();
+    assert_eq!(first, third);
+    let _ = std::fs::remove_dir_all(&dir);
+}

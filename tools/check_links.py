@@ -1,0 +1,62 @@
+#!/usr/bin/env python3
+"""Markdown link checker for docs/ and README.md.
+
+Verifies that every relative link target in the repo's prose docs exists
+on disk (anchors are stripped; external http(s)/mailto links are
+skipped).  Zero-dependency by design — runs anywhere python3 does.
+
+Usage: python3 tools/check_links.py  (from the repo root; exits non-zero
+on the first pass if any link is broken, listing all of them)
+"""
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files(root):
+    files = [os.path.join(root, "README.md")]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        for name in sorted(os.listdir(docs)):
+            if name.endswith(".md"):
+                files.append(os.path.join(docs, name))
+    return [f for f in files if os.path.isfile(f)]
+
+
+def check(root):
+    broken = []
+    checked = 0
+    for path in doc_files(root):
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            checked += 1
+            dest = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(dest):
+                broken.append((os.path.relpath(path, root), target))
+    return checked, broken
+
+
+def main():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    checked, broken = check(root)
+    if broken:
+        for src, target in broken:
+            print(f"BROKEN LINK in {src}: {target}", file=sys.stderr)
+        print(f"{len(broken)} broken link(s) out of {checked}", file=sys.stderr)
+        return 1
+    print(f"all {checked} relative links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
