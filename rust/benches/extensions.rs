@@ -17,23 +17,18 @@ use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
 use mrtuner::model::mlp::{MlpConfig, MlpModel};
 use mrtuner::model::ndpoly::NdPolyModel;
-use mrtuner::profiler::extended::{random_ext4, run_ext4_campaign, scales};
-use mrtuner::profiler::paper_campaign;
+use mrtuner::profiler::extended::{random_ext4, scales};
+use mrtuner::profiler::{paper_campaign, CampaignExecutor};
 use mrtuner::util::benchkit::{bench, report, section};
 use mrtuner::util::rng::Rng;
 use mrtuner::util::stats;
 
-fn mean_abs_err_pct(pred: &[f64], truth: &[f64]) -> f64 {
-    let errs: Vec<f64> = pred
-        .iter()
-        .zip(truth)
-        .map(|(p, t)| 100.0 * (p - t).abs() / t)
-        .collect();
-    stats::mean(&errs)
-}
-
 fn main() {
     let cluster = Cluster::paper_cluster();
+    // One machine-sized executor for every sweep below: the 4-parameter
+    // campaigns fan out over all cores and overlapping settings are
+    // answered from the rep cache, exactly like the 2-parameter path.
+    let exec = CampaignExecutor::machine_sized();
 
     // ---------------------------------------- 1+2: 4-parameter modeling
     for app in [AppId::WordCount, AppId::EximParse] {
@@ -41,13 +36,15 @@ fn main() {
         let mut rng = Rng::new(2024);
         let train_specs = random_ext4(app, 60, &mut rng);
         let test_specs = random_ext4(app, 25, &mut rng);
-        let (rows, times, cpus) = run_ext4_campaign(&cluster, &train_specs, 5, 1);
-        let (trows, ttimes, tcpus) = run_ext4_campaign(&cluster, &test_specs, 5, 2);
+        let (rows, times, cpus) =
+            exec.run_ext4_campaign(&cluster, &train_specs, 5, 1);
+        let (trows, ttimes, tcpus) =
+            exec.run_ext4_campaign(&cluster, &test_specs, 5, 2);
         let w = vec![1.0; rows.len()];
 
         let time_model =
             NdPolyModel::fit(app.name(), &rows, &times, &w, 3, &scales()).unwrap();
-        let terr = mean_abs_err_pct(&time_model.predict(&trows), &ttimes);
+        let terr = stats::mean_abs_err_pct(&time_model.predict(&trows), &ttimes);
         report(
             &format!("{} T(M,R,input,block) held-out error", app.name()),
             format!("{terr:.3}%  ({} features, paper's additive basis)", time_model.num_features()),
@@ -58,7 +55,7 @@ fn main() {
             app.name(), &rows, &times, &w, 3, &scales(), true,
         )
         .unwrap();
-        let ierr = mean_abs_err_pct(&inter_model.predict(&trows), &ttimes);
+        let ierr = stats::mean_abs_err_pct(&inter_model.predict(&trows), &ttimes);
         report(
             &format!("{} same + pairwise interactions", app.name()),
             format!("{ierr:.3}%  ({} features)", inter_model.num_features()),
@@ -66,7 +63,7 @@ fn main() {
 
         let cpu_model =
             NdPolyModel::fit(app.name(), &rows, &cpus, &w, 3, &scales()).unwrap();
-        let cerr = mean_abs_err_pct(&cpu_model.predict(&trows), &tcpus);
+        let cerr = stats::mean_abs_err_pct(&cpu_model.predict(&trows), &tcpus);
         report(
             &format!("{} CPU-seconds model held-out error ([24])", app.name()),
             format!("{cerr:.3}%"),
@@ -95,7 +92,7 @@ fn main() {
         .collect();
     report(
         "MLP (2-16-16-1, 4000 epochs) held-out error",
-        format!("{:.3}%", mean_abs_err_pct(&mlp_preds, &test.times)),
+        format!("{:.3}%", stats::mean_abs_err_pct(&mlp_preds, &test.times)),
     );
     let cubic = mrtuner::model::solver::fit(
         &train.params,
@@ -110,7 +107,7 @@ fn main() {
         .collect();
     report(
         "cubic (paper) held-out error",
-        format!("{:.3}%", mean_abs_err_pct(&cubic_preds, &test.times)),
+        format!("{:.3}%", stats::mean_abs_err_pct(&cubic_preds, &test.times)),
     );
     bench("MLP training (20 rows, 4000 epochs)", 0, 3, || {
         std::hint::black_box(
@@ -135,4 +132,6 @@ fn main() {
         "grep error < 5% (protocol generalizes)",
         if d.errors.mean_pct() < 5.0 { "yes" } else { "NO" },
     );
+
+    report("executor", exec.stats());
 }

@@ -34,7 +34,7 @@ impl JobRequest {
     /// The executor work item for this job's what-if simulation: one rep
     /// of its setting, in a session keyed by the job's own seed.
     fn rep_job(&self) -> RepJob {
-        RepJob { spec: self.spec(), rep: 0, base_seed: self.seed }
+        RepJob::paper(self.spec(), 0, self.seed)
     }
 }
 
@@ -46,14 +46,21 @@ pub fn fifo_order(jobs: &[JobRequest]) -> Vec<usize> {
 /// Shortest-predicted-job-first order, using per-app predictions
 /// `predict(app, m, r) -> seconds`.  Ties break by arrival order
 /// (stable sort), unknown-model jobs go last in arrival order.
+///
+/// A non-finite prediction (a degenerate fit can produce NaN or infinite
+/// coefficients) is treated as unknown-model rather than fed to the
+/// comparator — sorting on it used to panic the scheduler.
 pub fn sjf_order<F>(jobs: &[JobRequest], mut predict: F) -> Vec<usize>
 where
     F: FnMut(&JobRequest) -> Option<f64>,
 {
-    let mut keyed: Vec<(usize, Option<f64>)> =
-        jobs.iter().enumerate().map(|(i, j)| (i, predict(j))).collect();
+    let mut keyed: Vec<(usize, Option<f64>)> = jobs
+        .iter()
+        .enumerate()
+        .map(|(i, j)| (i, predict(j).filter(|t| t.is_finite())))
+        .collect();
     keyed.sort_by(|a, b| match (&a.1, &b.1) {
-        (Some(x), Some(y)) => x.partial_cmp(y).unwrap().then(a.0.cmp(&b.0)),
+        (Some(x), Some(y)) => x.total_cmp(y).then(a.0.cmp(&b.0)),
         (Some(_), None) => std::cmp::Ordering::Less,
         (None, Some(_)) => std::cmp::Ordering::Greater,
         (None, None) => a.0.cmp(&b.0),
@@ -218,6 +225,23 @@ mod tests {
             (j.app != AppId::Grep).then_some(300.0)
         });
         assert_eq!(&order[3..], &[1, 4], "unpredictable jobs last, stable");
+    }
+
+    #[test]
+    fn non_finite_predictions_are_unknown_not_a_panic() {
+        let js = jobs();
+        // A degenerate fit: NaN for Grep, +inf for Exim, finite times for
+        // WordCount.  This used to panic in the sort comparator.
+        let order = sjf_order(&js, |j| {
+            Some(match j.app {
+                AppId::WordCount => 300.0,
+                AppId::EximParse => f64::INFINITY,
+                AppId::Grep => f64::NAN,
+            })
+        });
+        // Finite predictions first (tie → arrival order), the non-finite
+        // ones stable-last exactly like unknown models.
+        assert_eq!(order, vec![0, 3, 1, 2, 4]);
     }
 
     #[test]

@@ -165,6 +165,10 @@ pub fn dispatch(line: &str, service: &PredictionService) -> Json {
                     "batches",
                     Json::Num(m.batches.load(Ordering::Relaxed) as f64),
                 ),
+                (
+                    "rejected",
+                    Json::Num(m.rejected.load(Ordering::Relaxed) as f64),
+                ),
                 ("mean_batch", Json::Num(m.mean_batch_size())),
             ])
         }

@@ -45,18 +45,27 @@ pub struct ServiceMetrics {
     pub batches: AtomicU64,
     /// Backend calls that returned an error.
     pub backend_errors: AtomicU64,
+    /// Requests rejected before reaching a backend (unknown application).
+    /// These never produce a batch, so they are excluded from
+    /// [`ServiceMetrics::mean_batch_size`].
+    pub rejected: AtomicU64,
     /// Largest batch coalesced so far.
     pub max_batch_seen: AtomicU64,
 }
 
 impl ServiceMetrics {
-    /// Mean requests per backend call — the batching amortization factor.
+    /// Mean *served* requests per backend call — the batching
+    /// amortization factor.  Rejected (unknown-app) requests increment
+    /// `requests` but never cost a backend call; counting them here used
+    /// to overstate amortization.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.load(Ordering::Relaxed);
         if b == 0 {
             0.0
         } else {
-            self.requests.load(Ordering::Relaxed) as f64 / b as f64
+            let req = self.requests.load(Ordering::Relaxed);
+            let rej = self.rejected.load(Ordering::Relaxed);
+            req.saturating_sub(rej) as f64 / b as f64
         }
     }
 }
@@ -225,6 +234,7 @@ fn serve_batch(
             reg.get(&app).map(|m| m.coeffs)
         };
         let Some(coeffs) = coeffs else {
+            metrics.rejected.fetch_add(reqs.len() as u64, Ordering::Relaxed);
             for r in reqs {
                 let _ = r
                     .resp
@@ -288,6 +298,21 @@ mod tests {
         let svc = service();
         let err = svc.predict("sort", 10, 10).unwrap_err();
         assert!(err.contains("no model"));
+    }
+
+    #[test]
+    fn rejected_requests_do_not_inflate_mean_batch() {
+        let svc = service();
+        svc.predict("sort", 10, 10).unwrap_err();
+        svc.predict("sort", 12, 10).unwrap_err();
+        svc.predict("wordcount", 20, 5).unwrap();
+        let m = &svc.metrics;
+        assert_eq!(m.requests.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 2);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1, "rejects cost no backend call");
+        // One served request over one batch: the mean must be 1.0, not
+        // the 3.0 the old requests/batches ratio reported.
+        assert!((m.mean_batch_size() - 1.0).abs() < 1e-12);
     }
 
     #[test]

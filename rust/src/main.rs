@@ -8,6 +8,7 @@
 //!   fig3      regenerate Fig. 3 (a,b or c,d) for one application
 //!   fig4      regenerate the Fig. 4 execution-time surface
 //!   table1    regenerate Table 1 (both paper applications)
+//!   ext4      extended 4-parameter sweep (M, R, input, block; time + CPU)
 //!   serve     start the TCP prediction service
 //!   e2e       full end-to-end validation (same driver as examples/e2e_repro)
 //!   store     inspect/compact/clear a persistent profile store
@@ -17,12 +18,16 @@ use std::path::{Path, PathBuf};
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
 use mrtuner::coordinator::{ModelRegistry, PredictionService, Server, ServiceConfig};
+use mrtuner::model::ndpoly::NdPolyModel;
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig};
+use mrtuner::profiler::extended::{random_ext4, scales};
 use mrtuner::profiler::{paper_campaign, CampaignExecutor, Dataset, ProfileStore};
 use mrtuner::report::{e2e, experiments, figure, table};
 use mrtuner::util::bytes::fmt_secs;
 use mrtuner::util::cli::Args;
+use mrtuner::util::rng::Rng;
+use mrtuner::util::stats;
 
 /// The machine-wide store directory from `MRTUNER_STORE`, if set.
 fn env_store_path() -> Option<String> {
@@ -89,6 +94,7 @@ fn main() {
         "fig3" => cmd_fig3(&args),
         "fig4" => cmd_fig4(&args),
         "table1" => cmd_table1(&args),
+        "ext4" => cmd_ext4(&args),
         "serve" => cmd_serve(&args),
         "e2e" => cmd_e2e(&args),
         "store" => cmd_store(&args),
@@ -117,6 +123,9 @@ fn print_help() {
            fig3     --app A [--seed N] [--csv FILE] [--jobs N]\n\
            fig4     --app A [--step N] [--reps N] [--csv FILE] [--jobs N]\n\
            table1   [--seed N] [--jobs N]                mean/variance of errors\n\
+           ext4     --app A [--train N] [--test N] [--reps N] [--seed N]\n\
+                    [--csv FILE] [--jobs N]              4-parameter sweep:\n\
+                    T and CPU-seconds vs (M, R, input GB, block MB)\n\
            serve    [--addr HOST:PORT] [--jobs N]        TCP prediction service\n\
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
            store    <stats|compact|clear> --store PATH   persistent profile store\n\n\
@@ -356,6 +365,136 @@ fn cmd_table1(args: &Args) -> Result<(), String> {
         "headline claim (mean error < 5%): {}",
         if all_under_5 { "REPRODUCED" } else { "NOT reproduced" }
     );
+    report_executor(&executor);
+    Ok(())
+}
+
+fn cmd_ext4(args: &Args) -> Result<(), String> {
+    let app = parse_app(args)?;
+    let seed = args.u64_or("seed", 42)?;
+    let train_n = args.u64_or("train", 60)? as usize;
+    let test_n = args.u64_or("test", 25)? as usize;
+    let reps = args.u64_or("reps", 5)? as u32;
+    let csv_out = args.str_opt("csv");
+    let executor = executor_from(args)?;
+    args.reject_unknown()?;
+    if train_n == 0 || test_n == 0 || reps == 0 {
+        return Err("--train, --test and --reps must all be >= 1".into());
+    }
+    let cluster = Cluster::paper_cluster();
+    // Settings are sampled from the CLI seed; profiling sessions reuse
+    // the paper protocol's split (train at `seed`, held-out at a distinct
+    // session so test runs are genuinely new executions).
+    let mut rng = Rng::new(seed ^ 0xE474_5377_3E50_5EED);
+    let train_specs = random_ext4(app, train_n, &mut rng);
+    let test_specs = random_ext4(app, test_n, &mut rng);
+    eprintln!(
+        "ext4 profiling {} train + {} test settings x {} reps for {} ({} workers) ...",
+        train_specs.len(),
+        test_specs.len(),
+        reps,
+        app.name(),
+        executor.jobs()
+    );
+    let (rows, times, cpus) =
+        executor.run_ext4_campaign(&cluster, &train_specs, reps, seed);
+    let (trows, ttimes, tcpus) = executor.run_ext4_campaign(
+        &cluster,
+        &test_specs,
+        reps,
+        seed.wrapping_add(0x7E57),
+    );
+
+    let w = vec![1.0; rows.len()];
+    let time_model =
+        NdPolyModel::fit(app.name(), &rows, &times, &w, 3, &scales())?;
+    let cpu_model =
+        NdPolyModel::fit(app.name(), &rows, &cpus, &w, 3, &scales())?;
+    let tpred = time_model.predict(&trows);
+    let cpred = cpu_model.predict(&trows);
+
+    println!(
+        "ext4 ({}) — held-out predictions over (M, R, input GB, block MB)",
+        app.name()
+    );
+    let mut t = vec![vec![
+        "M".to_string(),
+        "R".to_string(),
+        "input (GB)".to_string(),
+        "block (MB)".to_string(),
+        "actual T (s)".to_string(),
+        "predicted T (s)".to_string(),
+        "err (%)".to_string(),
+    ]];
+    for (i, s) in test_specs.iter().enumerate() {
+        t.push(vec![
+            s.num_mappers.to_string(),
+            s.num_reducers.to_string(),
+            table::f(s.input_gb, 1),
+            s.block_mb.to_string(),
+            table::f(ttimes[i], 1),
+            table::f(tpred[i], 1),
+            table::f(100.0 * (tpred[i] - ttimes[i]).abs() / ttimes[i], 2),
+        ]);
+    }
+    print!("{}", table::render(&t));
+
+    println!(
+        "T(M,R,input,block) additive basis : mean |err| {:.3}% ({} features)",
+        stats::mean_abs_err_pct(&tpred, &ttimes),
+        time_model.num_features()
+    );
+    // The additive Eqn.-2 basis cannot express the input x block coupling
+    // (it sets the map-task count); pairwise interactions close the gap
+    // when the training set is big enough to identify them.
+    let inter_features = NdPolyModel::feature_count(scales().len(), 3, true);
+    if rows.len() >= inter_features {
+        let inter = NdPolyModel::fit_opts(
+            app.name(),
+            &rows,
+            &times,
+            &w,
+            3,
+            &scales(),
+            true,
+        )?;
+        println!(
+            "  + pairwise interactions         : mean |err| {:.3}% ({} features)",
+            stats::mean_abs_err_pct(&inter.predict(&trows), &ttimes),
+            inter.num_features()
+        );
+    } else {
+        println!(
+            "  + pairwise interactions         : skipped \
+             (needs >= {inter_features} training settings)"
+        );
+    }
+    println!(
+        "CPU-seconds model ([24])          : mean |err| {:.3}%",
+        stats::mean_abs_err_pct(&cpred, &tcpus)
+    );
+
+    if let Some(path) = csv_out {
+        let ms: Vec<f64> = test_specs.iter().map(|s| s.num_mappers as f64).collect();
+        let rs: Vec<f64> = test_specs.iter().map(|s| s.num_reducers as f64).collect();
+        let igb: Vec<f64> = test_specs.iter().map(|s| s.input_gb).collect();
+        let blk: Vec<f64> = test_specs.iter().map(|s| s.block_mb as f64).collect();
+        let csv = figure::csv(
+            &[
+                "mappers",
+                "reducers",
+                "input_gb",
+                "block_mb",
+                "actual_s",
+                "predicted_s",
+                "actual_cpu_s",
+                "predicted_cpu_s",
+            ],
+            &[&ms, &rs, &igb, &blk, &ttimes, &tpred, &tcpus, &cpred],
+        );
+        std::fs::write(&path, csv).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    }
     report_executor(&executor);
     Ok(())
 }

@@ -37,10 +37,21 @@ impl NdPolyModel {
         self.scales.len()
     }
 
+    /// Expanded feature count for `num_params` raw parameters at
+    /// `degree`, with or without pairwise interactions — the one formula
+    /// shared by fitting validation and callers sizing training sets.
+    pub fn feature_count(
+        num_params: usize,
+        degree: usize,
+        interactions: bool,
+    ) -> usize {
+        1 + num_params * degree
+            + if interactions { num_params * (num_params - 1) / 2 } else { 0 }
+    }
+
     /// Length of the expanded feature vector.
     pub fn num_features(&self) -> usize {
-        let n = self.num_params();
-        1 + n * self.degree + if self.interactions { n * (n - 1) / 2 } else { 0 }
+        NdPolyModel::feature_count(self.num_params(), self.degree, self.interactions)
     }
 
     /// Expand one raw parameter row into the feature vector.
@@ -83,7 +94,7 @@ impl NdPolyModel {
         if scales.iter().any(|&s| s <= 0.0) {
             return Err("scales must be positive".into());
         }
-        let f = 1 + n * degree + if interactions { n * (n - 1) / 2 } else { 0 };
+        let f = NdPolyModel::feature_count(n, degree, interactions);
         if rows.len() < f {
             return Err(format!(
                 "need at least {f} rows for {f} features, got {}",

@@ -51,6 +51,44 @@ pub struct Counters {
     pub cpu_seconds: f64,
 }
 
+/// The per-repetition slice of a [`JobResult`] that the profiling layers
+/// cache and persist: the paper's dependent variable (total execution
+/// time) plus the companion work's modeled output (total CPU seconds,
+/// [24]'s "CPU tick clocks").
+///
+/// `cpu_s` is `None` only for records migrated from version-1 profile
+/// stores, which predate CPU capture; everything the simulator produces
+/// carries both figures.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RepOutcome {
+    /// Total execution time in seconds.
+    pub time_s: f64,
+    /// Total CPU-seconds, when recorded.
+    pub cpu_s: Option<f64>,
+}
+
+impl RepOutcome {
+    /// Outcome carrying both modeled outputs.
+    pub fn full(time_s: f64, cpu_s: f64) -> RepOutcome {
+        RepOutcome { time_s, cpu_s: Some(cpu_s) }
+    }
+
+    /// Time-only outcome (a record migrated from a v1 profile store).
+    pub fn time_only(time_s: f64) -> RepOutcome {
+        RepOutcome { time_s, cpu_s: None }
+    }
+
+    /// Bit-level equality, NaN-safe — the store's dedup predicate.
+    pub fn same_bits(&self, other: &RepOutcome) -> bool {
+        self.time_s.to_bits() == other.time_s.to_bits()
+            && match (self.cpu_s, other.cpu_s) {
+                (Some(a), Some(b)) => a.to_bits() == b.to_bits(),
+                (None, None) => true,
+                _ => false,
+            }
+    }
+}
+
 /// The outcome of one simulated job execution.
 #[derive(Clone, Debug)]
 pub struct JobResult {
@@ -69,6 +107,11 @@ pub struct JobResult {
 }
 
 impl JobResult {
+    /// The per-rep outcome profiling caches and persists for this run.
+    pub fn rep_outcome(&self) -> RepOutcome {
+        RepOutcome::full(self.total_time_s, self.counters.cpu_seconds)
+    }
+
     /// Map waves actually executed (`maps` holds one committed attempt per
     /// task).
     pub fn map_waves(&self, total_slots: u32) -> u32 {
@@ -102,6 +145,26 @@ mod tests {
             speculative: false,
         };
         assert!((t.duration_s() - 3.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rep_outcome_distills_time_and_cpu() {
+        let mut r = JobResult {
+            total_time_s: 123.5,
+            map_phase_s: 0.0,
+            first_reduce_s: 0.0,
+            maps: vec![],
+            reduces: vec![],
+            counters: Counters::default(),
+        };
+        r.counters.cpu_seconds = 456.25;
+        let o = r.rep_outcome();
+        assert_eq!(o, RepOutcome::full(123.5, 456.25));
+        assert!(o.same_bits(&o));
+        assert!(!o.same_bits(&RepOutcome::time_only(123.5)));
+        // NaN-safe: identical NaN bits compare equal.
+        let n = RepOutcome::time_only(f64::NAN);
+        assert!(n.same_bits(&RepOutcome::time_only(f64::NAN)));
     }
 
     #[test]

@@ -16,9 +16,12 @@
 //!    sweeps revisiting training settings, scheduler what-if replays —
 //!    never re-simulate a setting.
 //!
-//! The executor runs the paper's standard job shape
-//! ([`JobConfig::paper_default`]); the extended 4-parameter sweeps in
-//! [`super::extended`] keep their own driver.
+//! The executor runs **any spec shape** through one pipeline: work
+//! arrives as [`RepJob`]s whose [`RepSpec`] yields the simulator
+//! [`JobConfig`] and the stable [`StoreKey`] material the caches use —
+//! the paper's 2-parameter settings ([`RepSpec::Paper`]) and the extended
+//! 4-parameter sweeps ([`RepSpec::Ext4`]) both inherit parallelism and
+//! persistence from the same code path.
 //!
 //! With a [`ProfileStore`] attached ([`CampaignExecutor::with_store`]),
 //! the miss path consults the on-disk store before simulating and writes
@@ -35,29 +38,14 @@ use crate::apps::AppId;
 use crate::cluster::Cluster;
 use crate::mr::context::{ContextShape, JobContext};
 use crate::mr::cost::AppProfile;
-use crate::mr::{run_job_in, JobConfig};
+use crate::mr::{run_job_in, JobConfig, RepOutcome};
 use crate::util::stats;
 
 use super::campaign::Campaign;
 use super::dataset::Dataset;
 use super::experiment::{mix, ExperimentResult, ExperimentSpec};
+use super::extended::{mix_ext4, Ext4Result, Ext4Spec};
 use super::store::{ProfileStore, StoreKey};
-
-/// Cache key for one simulated repetition — [`StoreKey`], the same
-/// identity the persistent store uses.  Includes a fingerprint of the
-/// cluster the rep ran on: one long-lived executor may be queried with
-/// several clusters (capacity what-ifs), and times from one hardware model
-/// must never answer for another.
-fn rep_key(cluster_fp: u64, spec: &ExperimentSpec, rep: u32, base_seed: u64) -> StoreKey {
-    StoreKey {
-        cluster: cluster_fp,
-        app: spec.app,
-        num_mappers: spec.num_mappers,
-        num_reducers: spec.num_reducers,
-        rep,
-        base_seed,
-    }
-}
 
 /// Order-sensitive digest of every simulation-relevant cluster field.
 ///
@@ -91,12 +79,95 @@ fn cluster_fingerprint(cluster: &Cluster) -> u64 {
     h
 }
 
+/// The setting one repetition profiles — the rep-work abstraction that
+/// lets *any* spec shape run through the executor.  A variant supplies
+/// two things: the simulator [`JobConfig`] (including its shape's
+/// historical per-rep seed derivation) and the stable [`StoreKey`]
+/// material the in-memory cache and the persistent store share.
+///
+/// **Soundness invariant:** a [`StoreKey`] fully determines the
+/// `JobConfig` simulated under it.  The key carries every config-relevant
+/// coordinate `(app, M, R, input_gb, block_mb, rep, base_seed)` plus the
+/// cluster fingerprint, and the seed derivation is a pure function of
+/// those coordinates — so two work items with equal keys always describe
+/// the *same* simulation and may alias freely.  In particular, an
+/// [`RepSpec::Ext4`] setting on the paper plane
+/// ([`Ext4Spec::is_paper_plane`]) uses the 2-parameter derivation and is
+/// bit-identical to the corresponding [`RepSpec::Paper`] item.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RepSpec {
+    /// The paper's 2-parameter shape, at paper-default input/block.
+    Paper(ExperimentSpec),
+    /// The extended 4-parameter shape (input and block size swept too).
+    Ext4(Ext4Spec),
+}
+
+impl RepSpec {
+    /// Application this setting profiles.
+    pub fn app(&self) -> AppId {
+        match self {
+            RepSpec::Paper(s) => s.app,
+            RepSpec::Ext4(s) => s.app,
+        }
+    }
+
+    /// Persistent identity of one rep of this setting.  Paper-shape reps
+    /// key under the paper-default input/block plane — exactly where
+    /// records migrated from v1 stores land, so pre-v2 data keeps
+    /// answering 2-parameter lookups.
+    fn key(&self, cluster_fp: u64, rep: u32, base_seed: u64) -> StoreKey {
+        let (app, m, r, input_gb, block_mb) = match self {
+            RepSpec::Paper(s) => (
+                s.app,
+                s.num_mappers,
+                s.num_reducers,
+                StoreKey::PAPER_INPUT_GB,
+                StoreKey::PAPER_BLOCK_MB,
+            ),
+            RepSpec::Ext4(s) => {
+                (s.app, s.num_mappers, s.num_reducers, s.input_gb, s.block_mb)
+            }
+        };
+        StoreKey {
+            cluster: cluster_fp,
+            app,
+            num_mappers: m,
+            num_reducers: r,
+            input_gb_bits: input_gb.to_bits(),
+            block_mb,
+            rep,
+            base_seed,
+        }
+    }
+
+    /// The simulator config for one repetition, with the shape's
+    /// historical seed derivation (bit-compatibility with pre-executor
+    /// drivers and with every record already on disk).
+    fn config(&self, rep: u32, base_seed: u64) -> JobConfig {
+        match self {
+            RepSpec::Paper(s) => {
+                JobConfig::paper_default(s.num_mappers, s.num_reducers)
+                    .with_seed(mix(base_seed, s, rep))
+            }
+            RepSpec::Ext4(s) if s.is_paper_plane() => {
+                // On the paper plane the extended setting *is* the paper
+                // setting; deriving the same seed makes the shared
+                // StoreKey sound (same key ⇒ same simulation).
+                let paper =
+                    ExperimentSpec::new(s.app, s.num_mappers, s.num_reducers);
+                s.job_config(mix(base_seed, &paper, rep))
+            }
+            RepSpec::Ext4(s) => s.job_config(mix_ext4(base_seed, s, rep)),
+        }
+    }
+}
+
 /// One unit of executor work: a single repetition of one setting within
 /// a profiling session.
 #[derive(Clone, Copy, Debug)]
 pub struct RepJob {
-    /// The (app, M, R) setting to simulate.
-    pub spec: ExperimentSpec,
+    /// The setting to simulate.
+    pub spec: RepSpec,
     /// Repetition index within the profiling session.
     pub rep: u32,
     /// Profiling-session seed.
@@ -104,13 +175,22 @@ pub struct RepJob {
 }
 
 impl RepJob {
+    /// A repetition of a paper-shape (2-parameter) setting.
+    pub fn paper(spec: ExperimentSpec, rep: u32, base_seed: u64) -> RepJob {
+        RepJob { spec: RepSpec::Paper(spec), rep, base_seed }
+    }
+
+    /// A repetition of an extended 4-parameter setting.
+    pub fn ext4(spec: Ext4Spec, rep: u32, base_seed: u64) -> RepJob {
+        RepJob { spec: RepSpec::Ext4(spec), rep, base_seed }
+    }
+
     fn key(&self, cluster_fp: u64) -> StoreKey {
-        rep_key(cluster_fp, &self.spec, self.rep, self.base_seed)
+        self.spec.key(cluster_fp, self.rep, self.base_seed)
     }
 
     fn config(&self) -> JobConfig {
-        JobConfig::paper_default(self.spec.num_mappers, self.spec.num_reducers)
-            .with_seed(mix(self.base_seed, &self.spec, self.rep))
+        self.spec.config(self.rep, self.base_seed)
     }
 }
 
@@ -121,7 +201,7 @@ impl RepJob {
 /// share both the cache and the per-session job contexts.
 pub struct CampaignExecutor {
     jobs: usize,
-    cache: Mutex<HashMap<StoreKey, f64>>,
+    cache: Mutex<HashMap<StoreKey, RepOutcome>>,
     hits: AtomicU64,
     misses: AtomicU64,
     store_hits: AtomicU64,
@@ -228,8 +308,40 @@ impl CampaignExecutor {
     /// alone, never from scheduling order, and results are written back by
     /// input index.
     pub fn run_reps(&self, cluster: &Cluster, items: &[RepJob]) -> Vec<f64> {
+        self.run_units(cluster, items, false)
+            .iter()
+            .map(|o| o.time_s)
+            .collect()
+    }
+
+    /// Simulate every repetition in `items`, returning full per-rep
+    /// outcomes (time **and** CPU seconds) in input order — the entry
+    /// point the extended 4-parameter pipeline uses.
+    ///
+    /// Every returned outcome carries the CPU figure: a cached record
+    /// lacking it (data migrated from a v1 store) counts as a miss here
+    /// and is re-simulated, upgrading the stored record in place.
+    pub fn run_outcomes(
+        &self,
+        cluster: &Cluster,
+        items: &[RepJob],
+    ) -> Vec<RepOutcome> {
+        self.run_units(cluster, items, true)
+    }
+
+    /// Shared engine behind [`CampaignExecutor::run_reps`] and
+    /// [`CampaignExecutor::run_outcomes`]: `need_cpu` decides whether a
+    /// CPU-less cached outcome may answer, or must be re-simulated.
+    fn run_units(
+        &self,
+        cluster: &Cluster,
+        items: &[RepJob],
+        need_cpu: bool,
+    ) -> Vec<RepOutcome> {
         let cluster_fp = cluster_fingerprint(cluster);
-        let mut out = vec![f64::NAN; items.len()];
+        let usable =
+            |o: &RepOutcome| -> bool { !need_cpu || o.cpu_s.is_some() };
+        let mut out = vec![RepOutcome::time_only(f64::NAN); items.len()];
         // `todo` holds the first item index per distinct missing key;
         // duplicate items within one call alias the same simulation.
         let mut todo: Vec<usize> = Vec::new();
@@ -240,15 +352,18 @@ impl CampaignExecutor {
             let mut pending: HashMap<StoreKey, usize> = HashMap::new();
             for (i, item) in items.iter().enumerate() {
                 let key = item.key(cluster_fp);
-                if let Some(&t) = cache.get(&key) {
-                    out[i] = t;
-                } else if let Some(t) =
-                    self.store.as_ref().and_then(|s| s.get(&key))
+                if let Some(o) = cache.get(&key).copied().filter(&usable) {
+                    out[i] = o;
+                } else if let Some(o) = self
+                    .store
+                    .as_ref()
+                    .and_then(|s| s.get(&key))
+                    .filter(&usable)
                 {
                     // On-disk hit: promote into the in-memory cache so
                     // repeats within this session are memory-speed.
-                    out[i] = t;
-                    cache.insert(key, t);
+                    out[i] = o;
+                    cache.insert(key, o);
                     store_hit_count += 1;
                 } else if let Some(&k) = pending.get(&key) {
                     alias.push((i, k));
@@ -284,18 +399,18 @@ impl CampaignExecutor {
                 .entry(key)
                 .or_insert_with(|| JobContext::for_session(cluster, &config, item.base_seed));
             profiles
-                .entry(item.spec.app)
-                .or_insert_with(|| item.spec.app.profile());
+                .entry(item.spec.app())
+                .or_insert_with(|| item.spec.app().profile());
             ctx_keys.push(key);
             cfgs.push(config);
         }
 
         // Each todo item k simulates items[todo[k]] against its context.
-        let run_one = |k: usize| -> f64 {
+        let run_one = |k: usize| -> RepOutcome {
             let item = &items[todo[k]];
             let ctx = &contexts[&ctx_keys[k]];
-            let profile = &profiles[&item.spec.app];
-            run_job_in(cluster, profile, &cfgs[k], ctx).total_time_s
+            let profile = &profiles[&item.spec.app()];
+            run_job_in(cluster, profile, &cfgs[k], ctx).rep_outcome()
         };
 
         let workers = self.jobs.min(todo.len());
@@ -305,7 +420,7 @@ impl CampaignExecutor {
             }
         } else {
             let cursor = AtomicUsize::new(0);
-            let computed: Vec<(usize, f64)> = std::thread::scope(|scope| {
+            let computed: Vec<(usize, RepOutcome)> = std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..workers)
                     .map(|_| {
                         scope.spawn(|| {
@@ -326,8 +441,8 @@ impl CampaignExecutor {
                     .flat_map(|h| h.join().expect("executor worker panicked"))
                     .collect()
             });
-            for (i, t) in computed {
-                out[i] = t;
+            for (i, o) in computed {
+                out[i] = o;
             }
         }
 
@@ -342,8 +457,8 @@ impl CampaignExecutor {
             }
         }
         // Write fresh results through to the persistent store and flush:
-        // every `run_reps` call is a campaign boundary, and a flush here
-        // means a crash later never loses completed simulations.
+        // every run_reps/run_outcomes call is a campaign boundary, and a
+        // flush here means a crash later never loses completed work.
         if let Some(store) = &self.store {
             for &i in &todo {
                 store.put(items[i].key(cluster_fp), out[i]);
@@ -366,7 +481,7 @@ impl CampaignExecutor {
     ) -> Vec<ExperimentResult> {
         let items: Vec<RepJob> = specs
             .iter()
-            .flat_map(|s| (0..reps).map(move |rep| RepJob { spec: *s, rep, base_seed }))
+            .flat_map(|s| (0..reps).map(move |rep| RepJob::paper(*s, rep, base_seed)))
             .collect();
         let times = self.run_reps(cluster, &items);
         specs
@@ -395,6 +510,64 @@ impl CampaignExecutor {
             self.run_specs(cluster, &campaign.specs, campaign.reps, campaign.base_seed);
         let ds = Dataset::from_results(campaign.app, &results);
         (results, ds)
+    }
+
+    /// Run `reps` repetitions of every extended 4-parameter setting (one
+    /// profiling session keyed by `base_seed`), returning per-spec
+    /// averaged results — both modeled outputs — in spec order.
+    ///
+    /// Same contract as [`CampaignExecutor::run_specs`]: parallel output
+    /// is bit-identical to serial, overlapping sweeps hit the rep cache,
+    /// and an attached [`ProfileStore`] warm-starts later processes.
+    pub fn run_ext4_specs(
+        &self,
+        cluster: &Cluster,
+        specs: &[Ext4Spec],
+        reps: u32,
+        base_seed: u64,
+    ) -> Vec<Ext4Result> {
+        let items: Vec<RepJob> = specs
+            .iter()
+            .flat_map(|s| (0..reps).map(move |rep| RepJob::ext4(*s, rep, base_seed)))
+            .collect();
+        let outcomes = self.run_outcomes(cluster, &items);
+        specs
+            .iter()
+            .enumerate()
+            .map(|(si, s)| {
+                let lo = si * reps as usize;
+                let chunk = &outcomes[lo..lo + reps as usize];
+                let times: Vec<f64> = chunk.iter().map(|o| o.time_s).collect();
+                let cpus: Vec<f64> = chunk
+                    .iter()
+                    .map(|o| {
+                        o.cpu_s.expect("run_outcomes returns full outcomes")
+                    })
+                    .collect();
+                Ext4Result {
+                    spec: *s,
+                    mean_time_s: stats::mean(&times),
+                    mean_cpu_s: stats::mean(&cpus),
+                }
+            })
+            .collect()
+    }
+
+    /// Run a whole extended campaign, returning regression rows plus the
+    /// two modeled outputs — the executor-backed replacement for the old
+    /// serial `extended::run_ext4_campaign` driver.
+    pub fn run_ext4_campaign(
+        &self,
+        cluster: &Cluster,
+        specs: &[Ext4Spec],
+        reps: u32,
+        base_seed: u64,
+    ) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+        let results = self.run_ext4_specs(cluster, specs, reps, base_seed);
+        let rows = specs.iter().map(|s| s.params()).collect();
+        let times = results.iter().map(|r| r.mean_time_s).collect();
+        let cpus = results.iter().map(|r| r.mean_cpu_s).collect();
+        (rows, times, cpus)
     }
 }
 
@@ -493,7 +666,7 @@ mod tests {
     fn duplicate_items_in_one_call_are_coalesced() {
         let cluster = Cluster::paper_cluster();
         let exec = CampaignExecutor::new(4);
-        let items = [RepJob { spec: spec(20, 5), rep: 0, base_seed: 1 }; 3];
+        let items = [RepJob::paper(spec(20, 5), 0, 1); 3];
         let times = exec.run_reps(&cluster, &items);
         assert_eq!(exec.cache_misses(), 1, "one simulation for three duplicates");
         assert_eq!(exec.cache_hits(), 2);
@@ -516,6 +689,129 @@ mod tests {
         assert_eq!(exec.cache_misses(), 2);
         assert_eq!(exec.cache_hits(), 0);
         assert_ne!(a[0].rep_times_s, b[0].rep_times_s);
+    }
+
+    #[test]
+    fn ext4_serial_and_parallel_are_bit_identical() {
+        let cluster = Cluster::paper_cluster();
+        let specs = [
+            Ext4Spec {
+                app: AppId::WordCount,
+                num_mappers: 20,
+                num_reducers: 5,
+                input_gb: 2.0,
+                block_mb: 64,
+            },
+            Ext4Spec {
+                app: AppId::WordCount,
+                num_mappers: 10,
+                num_reducers: 30,
+                input_gb: 4.5,
+                block_mb: 128,
+            },
+        ];
+        let serial =
+            CampaignExecutor::serial().run_ext4_specs(&cluster, &specs, 3, 11);
+        for jobs in [2, 4] {
+            let par = CampaignExecutor::new(jobs)
+                .run_ext4_specs(&cluster, &specs, 3, 11);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.mean_time_s.to_bits(), b.mean_time_s.to_bits());
+                assert_eq!(a.mean_cpu_s.to_bits(), b.mean_cpu_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn paper_plane_ext4_aliases_paper_reps() {
+        let cluster = Cluster::paper_cluster();
+        let exec = CampaignExecutor::new(2);
+        // 2-parameter campaign first: reps cached with full outcomes.
+        let paper = exec.run_specs(&cluster, &[spec(20, 5)], 2, 7);
+        assert_eq!(exec.cache_misses(), 2);
+        // The same point of the 4-D space at paper-default input/block is
+        // the same simulation: pure cache, bit-identical times.
+        let e = Ext4Spec {
+            app: AppId::WordCount,
+            num_mappers: 20,
+            num_reducers: 5,
+            input_gb: 8.0,
+            block_mb: 64,
+        };
+        assert!(e.is_paper_plane());
+        let ext = exec.run_ext4_specs(&cluster, &[e], 2, 7);
+        assert_eq!(exec.cache_misses(), 2, "no new simulation");
+        assert_eq!(exec.cache_hits(), 2);
+        assert_eq!(ext[0].mean_time_s.to_bits(), paper[0].mean_time_s.to_bits());
+        // Off the paper plane the key differs and a fresh sim runs.
+        let off = Ext4Spec { block_mb: 128, ..e };
+        exec.run_ext4_specs(&cluster, &[off], 2, 7);
+        assert_eq!(exec.cache_misses(), 4);
+    }
+
+    #[test]
+    fn cpu_less_store_records_answer_times_but_not_outcomes() {
+        let base = std::env::temp_dir()
+            .join(format!("mrtuner_exec_v1up_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let dir_a = base.join("a");
+        let dir_b = base.join("b");
+        let cluster = Cluster::paper_cluster();
+        let item = RepJob::paper(spec(20, 5), 0, 3);
+
+        // Cold run into store A to learn the executor-derived key and the
+        // full outcome under it.
+        {
+            let exec = CampaignExecutor::serial()
+                .with_store(ProfileStore::open(&dir_a).unwrap());
+            exec.run_reps(&cluster, &[item]);
+        }
+        let (key, full) = {
+            let text = std::fs::read_dir(&dir_a)
+                .unwrap()
+                .map(|e| e.unwrap().path())
+                .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+                .map(|p| std::fs::read_to_string(p).unwrap())
+                .collect::<String>();
+            let line = text.lines().find(|l| !l.trim().is_empty()).unwrap();
+            let (k, o, _) = super::super::store::decode_record(line).unwrap();
+            (k, o)
+        };
+        assert!(full.cpu_s.is_some(), "executor stores full outcomes");
+
+        // Store B holds the same record *without* the CPU figure — what a
+        // migrated v1 store looks like after open.
+        std::fs::create_dir_all(&dir_b).unwrap();
+        std::fs::write(
+            dir_b.join("index.jsonl"),
+            format!(
+                "{}\n",
+                super::super::store::encode_record(
+                    &key,
+                    &RepOutcome::time_only(full.time_s)
+                )
+            ),
+        )
+        .unwrap();
+
+        let exec = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&dir_b).unwrap());
+        // Time-only consumers are answered from the CPU-less record ...
+        let times = exec.run_reps(&cluster, &[item]);
+        assert_eq!(exec.cache_misses(), 0);
+        assert_eq!(exec.store_hits(), 1);
+        assert_eq!(times[0].to_bits(), full.time_s.to_bits());
+        // ... but an outcome consumer re-simulates and upgrades in place.
+        let outs = exec.run_outcomes(&cluster, &[item]);
+        assert_eq!(exec.cache_misses(), 1, "CPU-less entry is a miss here");
+        assert!(outs[0].same_bits(&full), "re-simulation is bit-identical");
+        assert_eq!(
+            exec.store().unwrap().get(&key),
+            Some(full),
+            "stored record upgraded with the CPU figure"
+        );
+        drop(exec);
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

@@ -5,14 +5,23 @@
 //!   reducers, input-file size and file-system (HDFS block) size;
 //! * **two modeled outputs**: total execution time (this paper) and total
 //!   CPU seconds ("CPU tick clocks", [24]).
+//!
+//! Since the executor generalization, these sweeps run through the same
+//! [`CampaignExecutor`] as the paper's 2-parameter campaigns — parallel
+//! fan-out, in-memory rep cache, persistent-store warm starts — via
+//! [`crate::profiler::RepSpec::Ext4`].  The free functions here are
+//! serial-executor conveniences, exactly like
+//! [`super::experiment::run_experiment`].
 
 use crate::apps::AppId;
 use crate::cluster::Cluster;
 use crate::mr::config::SplitPolicy;
-use crate::mr::{run_job, JobConfig};
+use crate::mr::JobConfig;
+use crate::profiler::store::StoreKey;
 use crate::util::bytes::{GB, MB};
 use crate::util::rng::Rng;
-use crate::util::stats;
+
+use super::executor::CampaignExecutor;
 
 /// A four-parameter experiment setting.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -60,6 +69,37 @@ impl Ext4Spec {
             SplitPolicy::HadoopHint { block_bytes: self.block_mb as u64 * MB };
         cfg.with_seed(seed)
     }
+
+    /// Whether this setting lies on the **paper plane** of the 4-D space:
+    /// input and block size at their paper-default values.  Such a
+    /// setting *is* the corresponding 2-parameter experiment, bit for bit
+    /// — same [`JobConfig`], same per-rep seed derivation, same
+    /// `StoreKey` — so the executor's caches may (correctly) answer one
+    /// shape's reps with the other's.
+    pub fn is_paper_plane(&self) -> bool {
+        self.input_gb.to_bits() == StoreKey::PAPER_INPUT_GB.to_bits()
+            && self.block_mb == StoreKey::PAPER_BLOCK_MB
+    }
+}
+
+/// Derive the run seed for one repetition of one extended setting within
+/// a profiling session — the historical `run_ext4` recipe, kept verbatim
+/// so executor-backed sweeps reproduce the pre-executor seed streams.
+/// Settings on the paper plane use the 2-parameter derivation instead
+/// (see [`Ext4Spec::is_paper_plane`]); the executor handles that split.
+pub(crate) fn mix_ext4(base: u64, spec: &Ext4Spec, rep: u32) -> u64 {
+    let mut h = base ^ 0xe474_5f65_7874_3464;
+    for v in [
+        spec.num_mappers as u64,
+        spec.num_reducers as u64,
+        (spec.input_gb * 2.0) as u64,
+        spec.block_mb as u64,
+        rep as u64,
+    ] {
+        h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        h = h.rotate_left(19).wrapping_mul(0x94D0_49BB_1331_11EB);
+    }
+    h
 }
 
 /// Sample `n` random settings over the 4-D range.
@@ -88,56 +128,34 @@ pub struct Ext4Result {
     pub mean_cpu_s: f64,
 }
 
-/// Run one extended experiment.
+/// Run one extended experiment: `reps` simulated executions, averaged.
+///
+/// Convenience wrapper over a one-shot serial
+/// [`CampaignExecutor::run_ext4_specs`], so it agrees bit-for-bit with
+/// executor-driven (parallel, store-backed) sweeps.
 pub fn run_ext4(
     cluster: &Cluster,
     spec: &Ext4Spec,
     reps: u32,
     base_seed: u64,
 ) -> Ext4Result {
-    let profile = spec.app.profile();
-    let mut times = Vec::with_capacity(reps as usize);
-    let mut cpus = Vec::with_capacity(reps as usize);
-    for rep in 0..reps {
-        let mut h = base_seed ^ 0xe474_5f65_7874_3464;
-        for v in [
-            spec.num_mappers as u64,
-            spec.num_reducers as u64,
-            (spec.input_gb * 2.0) as u64,
-            spec.block_mb as u64,
-            rep as u64,
-        ] {
-            h ^= v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
-            h = h.rotate_left(19).wrapping_mul(0x94D0_49BB_1331_11EB);
-        }
-        let res = run_job(cluster, &profile, &spec.job_config(h));
-        times.push(res.total_time_s);
-        cpus.push(res.counters.cpu_seconds);
-    }
-    Ext4Result {
-        spec: *spec,
-        mean_time_s: stats::mean(&times),
-        mean_cpu_s: stats::mean(&cpus),
-    }
+    CampaignExecutor::serial()
+        .run_ext4_specs(cluster, std::slice::from_ref(spec), reps, base_seed)
+        .pop()
+        .expect("one spec in, one result out")
 }
 
 /// Run a whole campaign; returns raw rows for both modeled outputs.
+/// Serial shorthand for [`CampaignExecutor::run_ext4_campaign`] —
+/// callers wanting the worker pool or the persistent store should share
+/// one executor instead.
 pub fn run_ext4_campaign(
     cluster: &Cluster,
     specs: &[Ext4Spec],
     reps: u32,
     base_seed: u64,
 ) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
-    let mut rows = Vec::with_capacity(specs.len());
-    let mut times = Vec::with_capacity(specs.len());
-    let mut cpus = Vec::with_capacity(specs.len());
-    for s in specs {
-        let r = run_ext4(cluster, s, reps, base_seed);
-        rows.push(s.params());
-        times.push(r.mean_time_s);
-        cpus.push(r.mean_cpu_s);
-    }
-    (rows, times, cpus)
+    CampaignExecutor::serial().run_ext4_campaign(cluster, specs, reps, base_seed)
 }
 
 #[cfg(test)]
@@ -162,6 +180,26 @@ mod tests {
         // 4 GB / 128 MB blocks -> 32 tasks.
         assert_eq!(cfg.map_tasks(), 32);
         assert_eq!(s.params(), vec![20.0, 5.0, 4.0, 128.0]);
+    }
+
+    #[test]
+    fn paper_plane_is_the_paper_default_config() {
+        let mut s = Ext4Spec {
+            app: AppId::WordCount,
+            num_mappers: 20,
+            num_reducers: 5,
+            input_gb: 8.0,
+            block_mb: 64,
+        };
+        assert!(s.is_paper_plane());
+        // The whole cache-soundness argument: on the paper plane the
+        // extended config *is* the paper-default config.
+        assert_eq!(s.job_config(7), JobConfig::paper_default(20, 5).with_seed(7));
+        s.input_gb = 4.0;
+        assert!(!s.is_paper_plane());
+        s.input_gb = 8.0;
+        s.block_mb = 128;
+        assert!(!s.is_paper_plane());
     }
 
     #[test]

@@ -5,9 +5,11 @@
 //! total execution time of the experiment."
 //!
 //! [`campaign`] chooses the settings, [`executor`] runs them (parallel
-//! fan-out + rep-level cache), [`store`] persists completed reps on disk
-//! so later processes warm-start, [`dataset`] shapes results for the
-//! regression, and [`extended`] hosts the beyond-paper 4-parameter sweeps.
+//! fan-out + rep-level cache over *any* spec shape, via [`RepSpec`]),
+//! [`store`] persists completed reps on disk so later processes
+//! warm-start, [`dataset`] shapes results for the regression, and
+//! [`extended`] hosts the beyond-paper 4-parameter sweeps — which run
+//! through the same executor and store as the paper campaigns.
 
 pub mod campaign;
 pub mod dataset;
@@ -18,6 +20,7 @@ pub mod store;
 
 pub use campaign::{paper_campaign, Campaign};
 pub use dataset::Dataset;
-pub use executor::{CampaignExecutor, ExecutorStats, RepJob};
+pub use executor::{CampaignExecutor, ExecutorStats, RepJob, RepSpec};
 pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
+pub use extended::{run_ext4, run_ext4_campaign, Ext4Result, Ext4Spec};
 pub use store::{ProfileStore, StoreKey, StoreStats, STORE_FORMAT_VERSION};

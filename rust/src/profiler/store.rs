@@ -21,7 +21,8 @@
 //!
 //! Each line is one record, serialized with the repo's hand-rolled JSON
 //! ([`crate::util::json`]).  `u64` values (cluster fingerprint, session
-//! seed) and the `f64` execution time travel as fixed-width hex strings
+//! seed, input-size bits) and the `f64` outcome figures (execution time
+//! and CPU seconds) travel as fixed-width hex strings
 //! ([`crate::util::bytes::hex_u64`]) so every bit round-trips — stored
 //! values are the same bit-identical rep results the executor produces,
 //! which is what makes warm runs byte-identical to cold ones.
@@ -43,9 +44,10 @@
 //!   left by a crashed compactor is reclaimed after ten minutes).
 //! * Corruption is tolerated, never fatal: an unreadable file or a
 //!   truncated/garbled line is counted, logged to stderr, and skipped.
-//!   Lines whose `"v"` field differs from [`STORE_FORMAT_VERSION`] are
-//!   skipped too, and their segment is preserved for whichever build
-//!   understands it.
+//!   Lines whose `"v"` field is *newer* than [`STORE_FORMAT_VERSION`]
+//!   are skipped too, and their segment is preserved for whichever build
+//!   understands it; v1 lines are migrated on read (see
+//!   [`STORE_FORMAT_VERSION`]) and rewritten as v2 by compaction.
 
 use std::collections::HashMap;
 use std::fs::{self, OpenOptions};
@@ -56,12 +58,22 @@ use std::sync::Mutex;
 use std::time::{Duration, SystemTime, UNIX_EPOCH};
 
 use crate::apps::AppId;
+use crate::mr::RepOutcome;
 use crate::util::bytes::{hex_u64, parse_hex_u64};
 use crate::util::json::{parse, Json};
 
-/// Store format version; bump when the record schema changes.  Readers
-/// skip (and preserve) records written under any other version.
-pub const STORE_FORMAT_VERSION: u32 = 1;
+/// Store format version; bump when the record schema changes.
+///
+/// * **v1** (PR 2): 2-parameter keys `(cluster, app, m, r, rep, seed)`
+///   holding a bare execution time.
+/// * **v2**: keys additionally carry `input_gb`/`block_mb` (the extended
+///   4-parameter sweep axes) and records hold a [`RepOutcome`] — total
+///   time plus total CPU seconds.  v1 lines are **migrated on read**:
+///   they decode into v2 keys at the paper-default input/block values
+///   with the CPU figure absent, so existing stores keep answering.
+///
+/// Readers skip (and preserve) records of any *newer* version.
+pub const STORE_FORMAT_VERSION: u32 = 2;
 
 const INDEX_FILE: &str = "index.jsonl";
 const COMPACT_LOCK: &str = "compact.lock";
@@ -93,58 +105,115 @@ pub struct StoreKey {
     pub num_mappers: u32,
     /// Number of reduce tasks (the paper's second parameter).
     pub num_reducers: u32,
+    /// Input size in GB — the extended sweep's third parameter — as raw
+    /// `f64` bits (`f64` has no `Eq`/`Hash`; bits keep the key exact).
+    /// The paper's own setup is [`StoreKey::PAPER_INPUT_GB`].
+    pub input_gb_bits: u64,
+    /// HDFS block size in MB — the extended sweep's fourth parameter.
+    /// The paper's own setup is [`StoreKey::PAPER_BLOCK_MB`].
+    pub block_mb: u32,
     /// Repetition index within the profiling session.
     pub rep: u32,
     /// Profiling-session seed.
     pub base_seed: u64,
 }
 
+impl StoreKey {
+    /// Input size of the paper's testbed (`JobConfig::paper_default`) —
+    /// where 2-parameter keys, and migrated v1 records, live in the 4-D
+    /// parameter space.
+    pub const PAPER_INPUT_GB: f64 = 8.0;
+    /// HDFS block size of the paper's testbed.
+    pub const PAPER_BLOCK_MB: u32 = 64;
+
+    /// Input size in GB.
+    pub fn input_gb(&self) -> f64 {
+        f64::from_bits(self.input_gb_bits)
+    }
+}
+
 /// Why a record line failed to decode.
 #[derive(Clone, Debug, PartialEq)]
 pub enum RecordError {
-    /// The line is a valid record of a different store-format version.
+    /// The line is a record of a store-format version this build cannot
+    /// read (newer than [`STORE_FORMAT_VERSION`], or 0/garbage).
     StaleVersion(u64),
     /// The line is not a valid record at all (truncated write, garbage).
     Corrupt(String),
 }
 
-/// Serialize one `(key, total execution time)` record as a JSON line.
-pub fn encode_record(key: &StoreKey, time_s: f64) -> String {
-    // "t" is a redundant human-readable copy; "bits" is authoritative.
-    Json::obj(vec![
+/// Serialize one `(key, per-rep outcome)` record as a v2 JSON line.
+pub fn encode_record(key: &StoreKey, outcome: &RepOutcome) -> String {
+    // "t"/"cpu" are redundant human-readable copies; the hex "bits"
+    // fields are authoritative.  "cbits"/"cpu" are omitted when the CPU
+    // figure is unknown (v1-migrated data).
+    let mut pairs = vec![
         ("v", Json::Num(STORE_FORMAT_VERSION as f64)),
         ("cluster", Json::Str(hex_u64(key.cluster))),
         ("app", Json::Str(key.app.name().to_string())),
         ("m", Json::Num(key.num_mappers as f64)),
         ("r", Json::Num(key.num_reducers as f64)),
+        ("igb", Json::Str(hex_u64(key.input_gb_bits))),
+        ("blk", Json::Num(key.block_mb as f64)),
         ("rep", Json::Num(key.rep as f64)),
         ("seed", Json::Str(hex_u64(key.base_seed))),
-        ("bits", Json::Str(hex_u64(time_s.to_bits()))),
-        ("t", Json::Num(time_s)),
-    ])
-    .to_string()
+        ("bits", Json::Str(hex_u64(outcome.time_s.to_bits()))),
+        ("t", Json::Num(outcome.time_s)),
+    ];
+    if let Some(cpu) = outcome.cpu_s {
+        pairs.push(("cbits", Json::Str(hex_u64(cpu.to_bits()))));
+        pairs.push(("cpu", Json::Num(cpu)));
+    }
+    Json::obj(pairs).to_string()
 }
 
-/// Decode a record line written by [`encode_record`].
-pub fn decode_record(line: &str) -> Result<(StoreKey, f64), RecordError> {
+/// Decode a record line written by [`encode_record`] (v2) or by the v1
+/// store, returning the key, the outcome, and the version the line was
+/// written under.
+///
+/// v1 lines are migrated on the fly: their key lands at the paper-default
+/// input/block values (the only point v1 could describe) and the CPU
+/// figure is absent — they are never orphaned, and compaction rewrites
+/// them as v2.
+pub fn decode_record(
+    line: &str,
+) -> Result<(StoreKey, RepOutcome, u32), RecordError> {
     let v = parse(line).map_err(RecordError::Corrupt)?;
     let ver = v.req_u64("v").map_err(RecordError::Corrupt)?;
-    if ver != STORE_FORMAT_VERSION as u64 {
-        return Err(RecordError::StaleVersion(ver));
-    }
-    let decode = || -> Result<(StoreKey, f64), String> {
+    let decode = |legacy_v1: bool| -> Result<(StoreKey, RepOutcome), String> {
+        let (input_gb_bits, block_mb) = if legacy_v1 {
+            (StoreKey::PAPER_INPUT_GB.to_bits(), StoreKey::PAPER_BLOCK_MB)
+        } else {
+            (parse_hex_u64(v.req_str("igb")?)?, v.req_u32("blk")?)
+        };
         let key = StoreKey {
             cluster: parse_hex_u64(v.req_str("cluster")?)?,
             app: AppId::parse(v.req_str("app")?)?,
             num_mappers: v.req_u32("m")?,
             num_reducers: v.req_u32("r")?,
+            input_gb_bits,
+            block_mb,
             rep: v.req_u32("rep")?,
             base_seed: parse_hex_u64(v.req_str("seed")?)?,
         };
-        let bits = parse_hex_u64(v.req_str("bits")?)?;
-        Ok((key, f64::from_bits(bits)))
+        let time_s = f64::from_bits(parse_hex_u64(v.req_str("bits")?)?);
+        let cpu_s = match v.get("cbits") {
+            None => None,
+            Some(j) => Some(f64::from_bits(parse_hex_u64(
+                j.as_str().ok_or("cbits: expected hex string")?,
+            )?)),
+        };
+        Ok((key, RepOutcome { time_s, cpu_s }))
     };
-    decode().map_err(RecordError::Corrupt)
+    match ver {
+        2 => decode(false)
+            .map(|(k, o)| (k, o, 2))
+            .map_err(RecordError::Corrupt),
+        1 => decode(true)
+            .map(|(k, o)| (k, o, 1))
+            .map_err(RecordError::Corrupt),
+        other => Err(RecordError::StaleVersion(other)),
+    }
 }
 
 /// What `open` saw on disk, plus the live pending-write count.
@@ -160,8 +229,11 @@ pub struct StoreStats {
     pub corrupt_segments: usize,
     /// Undecodable lines inside otherwise readable files.
     pub corrupt_lines: usize,
-    /// Lines of a different store-format version (skipped, preserved).
+    /// Lines of a *newer* store-format version (skipped, preserved).
     pub stale_lines: usize,
+    /// v1 lines migrated on read into v2 keys (rewritten as v2 by the
+    /// next compaction).
+    pub migrated_lines: usize,
     /// Whether the open pass rewrote the index.
     pub compacted: bool,
 }
@@ -171,13 +243,14 @@ impl std::fmt::Display for StoreStats {
         write!(
             f,
             "entries={} segments_seen={} merged={} corrupt_segments={} \
-             corrupt_lines={} stale_lines={} compacted={}",
+             corrupt_lines={} stale_lines={} migrated={} compacted={}",
             self.entries,
             self.segments_seen,
             self.merged_segments,
             self.corrupt_segments,
             self.corrupt_lines,
             self.stale_lines,
+            self.migrated_lines,
             self.compacted
         )
     }
@@ -227,8 +300,9 @@ impl Drop for SegmentWriter {
 }
 
 struct Inner {
-    /// Key → `f64::to_bits` of the stored time (bit-exact by design).
-    entries: HashMap<StoreKey, u64>,
+    /// Key → stored per-rep outcome (held as the very `f64`s that were
+    /// decoded/produced, so every bit round-trips by construction).
+    entries: HashMap<StoreKey, RepOutcome>,
     /// Encoded lines not yet appended to this session's segment.
     dirty: Vec<String>,
     /// Lazily created on first flush, so read-only sessions leave no file.
@@ -326,20 +400,25 @@ impl ProfileStore {
         s
     }
 
-    /// Stored time for `key`, if any prior session simulated it.
-    pub fn get(&self, key: &StoreKey) -> Option<f64> {
+    /// Stored outcome for `key`, if any prior session simulated it.
+    pub fn get(&self, key: &StoreKey) -> Option<RepOutcome> {
         let inner = self.inner.lock().expect("store mutex poisoned");
-        inner.entries.get(key).map(|&bits| f64::from_bits(bits))
+        inner.entries.get(key).copied()
     }
 
-    /// Record a freshly simulated time.  Buffered in memory until
-    /// [`ProfileStore::flush`]; a value already on disk is not rewritten.
-    pub fn put(&self, key: StoreKey, time_s: f64) {
+    /// Record a freshly simulated outcome.  Buffered in memory until
+    /// [`ProfileStore::flush`]; a value already on disk is not rewritten,
+    /// and a CPU-less value (v1-migrated) never displaces a full one —
+    /// though a full outcome *does* upgrade a CPU-less record in place.
+    pub fn put(&self, key: StoreKey, outcome: RepOutcome) {
         let mut inner = self.inner.lock().expect("store mutex poisoned");
-        let bits = time_s.to_bits();
-        match inner.entries.insert(key, bits) {
-            Some(old) if old == bits => {}
-            _ => inner.dirty.push(encode_record(&key, time_s)),
+        match inner.entries.get(&key) {
+            Some(old) if old.same_bits(&outcome) => {}
+            Some(old) if old.cpu_s.is_some() && outcome.cpu_s.is_none() => {}
+            _ => {
+                inner.entries.insert(key, outcome);
+                inner.dirty.push(encode_record(&key, &outcome));
+            }
         }
     }
 
@@ -426,9 +505,10 @@ impl Drop for ProfileStore {
 
 /// Everything one pass over the store directory learns.
 struct Scan {
-    entries: HashMap<StoreKey, u64>,
+    entries: HashMap<StoreKey, RepOutcome>,
     /// Segments safe to fold into the index and delete: readable, not
-    /// held by a live writer, and free of other-version records.
+    /// held by a live writer, and free of newer-version records (v1
+    /// segments *are* mergeable — migration rewrites them as v2).
     mergeable: Vec<PathBuf>,
     stats: StoreStats,
     /// The index existed but could not be read — compaction must not
@@ -439,7 +519,9 @@ struct Scan {
 /// Read the index and every segment under `dir` into memory, tolerating
 /// (and tallying) corruption.  Load order is deterministic (sorted
 /// names), and by determinism of the simulator any duplicate keys carry
-/// equal values, so later-wins is harmless.
+/// equal values, so later-wins is harmless — with one exception handled
+/// in [`load_lines`]: a CPU-less (v1-migrated) duplicate never displaces
+/// a full outcome, whatever the load order.
 fn scan_dir(dir: &Path) -> Result<Scan, String> {
     let mut scan = Scan {
         entries: HashMap::new(),
@@ -546,11 +628,15 @@ fn segment_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
     Ok(out)
 }
 
-/// Fold every decodable line of `text` into `entries`, tallying skips.
+/// Fold every decodable line of `text` into `entries`, tallying skips
+/// and v1 migrations.  On duplicate keys the later line wins, except
+/// that a CPU-less outcome never displaces a full one (an executor
+/// upgrade record must beat the migrated v1 line it upgrades, whichever
+/// file loads first).
 fn load_lines(
     path: &Path,
     text: &str,
-    entries: &mut HashMap<StoreKey, u64>,
+    entries: &mut HashMap<StoreKey, RepOutcome>,
     stats: &mut StoreStats,
 ) {
     let mut first_bad = true;
@@ -560,8 +646,17 @@ fn load_lines(
             continue;
         }
         match decode_record(line) {
-            Ok((key, time_s)) => {
-                entries.insert(key, time_s.to_bits());
+            Ok((key, outcome, ver)) => {
+                if ver < STORE_FORMAT_VERSION {
+                    stats.migrated_lines += 1;
+                }
+                match entries.get(&key) {
+                    Some(old)
+                        if old.cpu_s.is_some() && outcome.cpu_s.is_none() => {}
+                    _ => {
+                        entries.insert(key, outcome);
+                    }
+                }
             }
             Err(RecordError::StaleVersion(_)) => stats.stale_lines += 1,
             Err(RecordError::Corrupt(e)) => {
@@ -580,12 +675,15 @@ fn load_lines(
 
 /// Rewrite the index from `entries` via write-to-temp + atomic rename.
 /// Must only be called while holding the [`CompactGuard`].
-fn write_index(dir: &Path, entries: &HashMap<StoreKey, u64>) -> Result<(), String> {
+fn write_index(
+    dir: &Path,
+    entries: &HashMap<StoreKey, RepOutcome>,
+) -> Result<(), String> {
     // Sorted lines make the index byte-deterministic: compacting an
     // already-compact store rewrites the identical file (idempotence).
     let mut lines: Vec<String> = entries
         .iter()
-        .map(|(k, &bits)| encode_record(k, f64::from_bits(bits)))
+        .map(|(k, outcome)| encode_record(k, outcome))
         .collect();
     lines.sort();
     let mut body = lines.join("\n");
@@ -658,9 +756,27 @@ mod tests {
             app: AppId::WordCount,
             num_mappers: m,
             num_reducers: r,
+            input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+            block_mb: StoreKey::PAPER_BLOCK_MB,
             rep,
             base_seed: seed,
         }
+    }
+
+    /// A record line exactly as the v1 (PR 2) store wrote it.
+    fn v1_line(k: &StoreKey, time_s: f64) -> String {
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("cluster", Json::Str(hex_u64(k.cluster))),
+            ("app", Json::Str(k.app.name().to_string())),
+            ("m", Json::Num(k.num_mappers as f64)),
+            ("r", Json::Num(k.num_reducers as f64)),
+            ("rep", Json::Num(k.rep as f64)),
+            ("seed", Json::Str(hex_u64(k.base_seed))),
+            ("bits", Json::Str(hex_u64(time_s.to_bits()))),
+            ("t", Json::Num(time_s)),
+        ])
+        .to_string()
     }
 
     fn tmp_dir(tag: &str) -> PathBuf {
@@ -673,27 +789,94 @@ mod tests {
     #[test]
     fn record_round_trips_bit_exactly() {
         for (i, t) in [1523.25, 0.1 + 0.2, f64::MIN_POSITIVE, 1e300].iter().enumerate() {
-            let k = key(20, 5, i as u32, u64::MAX - i as u64);
-            let line = encode_record(&k, *t);
-            let (k2, t2) = decode_record(&line).unwrap();
-            assert_eq!(k2, k);
-            assert_eq!(t2.to_bits(), t.to_bits());
+            let mut k = key(20, 5, i as u32, u64::MAX - i as u64);
+            k.input_gb_bits = (1.5 + i as f64).to_bits();
+            k.block_mb = 32 << i;
+            for outcome in
+                [RepOutcome::full(*t, t * 4.0 + 1.0), RepOutcome::time_only(*t)]
+            {
+                let line = encode_record(&k, &outcome);
+                let (k2, o2, ver) = decode_record(&line).unwrap();
+                assert_eq!(k2, k);
+                assert_eq!(ver, STORE_FORMAT_VERSION);
+                assert!(o2.same_bits(&outcome));
+            }
         }
     }
 
     #[test]
     fn decode_classifies_stale_and_corrupt() {
-        let line = encode_record(&key(5, 5, 0, 1), 2.0);
-        let stale = line.replace("\"v\":1", "\"v\":999");
+        let line = encode_record(&key(5, 5, 0, 1), &RepOutcome::full(2.0, 3.0));
+        let stale = line.replace("\"v\":2", "\"v\":999");
         assert_eq!(
             decode_record(&stale),
             Err(RecordError::StaleVersion(999))
         );
-        for bad in ["", "not json", "{\"v\":1}", "{\"x\":2}", "[1,2,3]"] {
+        for bad in ["", "not json", "{\"v\":2}", "{\"v\":1}", "{\"x\":2}", "[1,2,3]"] {
             match decode_record(bad) {
                 Err(RecordError::Corrupt(_)) => {}
                 other => panic!("expected corrupt for {bad:?}, got {other:?}"),
             }
+        }
+    }
+
+    #[test]
+    fn v1_lines_migrate_to_paper_default_keys() {
+        let k = key(20, 5, 3, 42);
+        let (k2, o2, ver) = decode_record(&v1_line(&k, 1523.25)).unwrap();
+        assert_eq!(ver, 1);
+        // The migrated key lands exactly where the 2-parameter executor
+        // path keys its reps: the paper-default input/block plane.
+        assert_eq!(k2, k);
+        assert_eq!(k2.input_gb(), StoreKey::PAPER_INPUT_GB);
+        assert_eq!(k2.block_mb, StoreKey::PAPER_BLOCK_MB);
+        assert_eq!(o2, RepOutcome::time_only(1523.25));
+    }
+
+    #[test]
+    fn v1_segment_survives_compaction_and_answers_v2_lookup() {
+        let dir = tmp_dir("migrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key(20, 5, 0, 7);
+        std::fs::write(
+            dir.join("seg-cafe0000-0000-legacy.jsonl"),
+            format!("{}\n{}\n", v1_line(&k, 100.5), v1_line(&key(20, 5, 1, 7), 101.5)),
+        )
+        .unwrap();
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            let st = store.stats();
+            assert_eq!(st.migrated_lines, 2);
+            assert_eq!(st.merged_segments, 1, "v1 segment folded, not orphaned");
+            assert_eq!(st.stale_lines, 0);
+            assert_eq!(store.get(&k), Some(RepOutcome::time_only(100.5)));
+        }
+        // The rewritten index is pure v2 and still answers after reopen.
+        let index = std::fs::read_to_string(dir.join(INDEX_FILE)).unwrap();
+        assert!(index.contains("\"v\":2"));
+        assert!(!index.contains("\"v\":1"));
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.stats().migrated_lines, 0, "migration is one-time");
+        assert_eq!(store.get(&k), Some(RepOutcome::time_only(100.5)));
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_outcome_beats_migrated_duplicate_in_any_load_order() {
+        let k = key(10, 10, 0, 1);
+        let full = RepOutcome::full(55.0, 44.0);
+        for lines in [
+            // v1-migrated first, upgrade second ...
+            format!("{}\n{}\n", v1_line(&k, 55.0), encode_record(&k, &full)),
+            // ... and the reverse: the full outcome must win either way.
+            format!("{}\n{}\n", encode_record(&k, &full), v1_line(&k, 55.0)),
+        ] {
+            let mut entries = HashMap::new();
+            let mut stats = StoreStats::default();
+            load_lines(Path::new("test"), &lines, &mut entries, &mut stats);
+            assert_eq!(stats.migrated_lines, 1);
+            assert_eq!(entries.get(&k), Some(&full));
         }
     }
 
@@ -703,16 +886,22 @@ mod tests {
         {
             let store = ProfileStore::open(&dir).unwrap();
             assert!(store.is_empty());
-            store.put(key(20, 5, 0, 42), 100.5);
-            store.put(key(20, 5, 1, 42), 101.5);
+            store.put(key(20, 5, 0, 42), RepOutcome::full(100.5, 1.25));
+            store.put(key(20, 5, 1, 42), RepOutcome::full(101.5, 2.25));
             assert_eq!(store.pending(), 2);
             store.flush().unwrap();
             assert_eq!(store.pending(), 0);
-            assert_eq!(store.get(&key(20, 5, 0, 42)), Some(100.5));
+            assert_eq!(
+                store.get(&key(20, 5, 0, 42)),
+                Some(RepOutcome::full(100.5, 1.25))
+            );
         }
         let store = ProfileStore::open(&dir).unwrap();
         assert_eq!(store.len(), 2);
-        assert_eq!(store.get(&key(20, 5, 1, 42)), Some(101.5));
+        assert_eq!(
+            store.get(&key(20, 5, 1, 42)),
+            Some(RepOutcome::full(101.5, 2.25))
+        );
         assert!(store.get(&key(20, 5, 2, 42)).is_none());
         drop(store);
         assert!(ProfileStore::clear(&dir).unwrap() >= 1);
@@ -723,10 +912,20 @@ mod tests {
     fn rewriting_known_value_stays_clean() {
         let dir = tmp_dir("rewrite");
         let store = ProfileStore::open(&dir).unwrap();
-        store.put(key(5, 5, 0, 7), 3.5);
+        store.put(key(5, 5, 0, 7), RepOutcome::full(3.5, 0.5));
         store.flush().unwrap();
-        store.put(key(5, 5, 0, 7), 3.5);
+        store.put(key(5, 5, 0, 7), RepOutcome::full(3.5, 0.5));
         assert_eq!(store.pending(), 0, "identical value not re-queued");
+        // A CPU-less duplicate (migration debris) is not queued either,
+        // and does not displace the full outcome.
+        store.put(key(5, 5, 0, 7), RepOutcome::time_only(3.5));
+        assert_eq!(store.pending(), 0, "downgrade never queued");
+        assert_eq!(store.get(&key(5, 5, 0, 7)), Some(RepOutcome::full(3.5, 0.5)));
+        // But a full outcome upgrades a CPU-less record in place.
+        store.put(key(6, 6, 0, 7), RepOutcome::time_only(9.0));
+        store.put(key(6, 6, 0, 7), RepOutcome::full(9.0, 1.0));
+        assert_eq!(store.pending(), 2, "upgrade re-queued");
+        assert_eq!(store.get(&key(6, 6, 0, 7)), Some(RepOutcome::full(9.0, 1.0)));
         drop(store);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -736,7 +935,7 @@ mod tests {
         let dir = tmp_dir("droplock");
         {
             let store = ProfileStore::open(&dir).unwrap();
-            store.put(key(10, 10, 0, 9), 55.0);
+            store.put(key(10, 10, 0, 9), RepOutcome::full(55.0, 5.0));
             store.flush().unwrap();
             // Live session: exactly one lock file present.
             let locks = std::fs::read_dir(&dir)

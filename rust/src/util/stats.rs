@@ -39,7 +39,9 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // `total_cmp` is a total order: NaNs (e.g. from a degenerate model
+    // fit upstream) sort to the ends instead of panicking the comparator.
+    v.sort_by(|a, b| a.total_cmp(b));
     let pos = q / 100.0 * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -58,6 +60,17 @@ pub fn min(xs: &[f64]) -> f64 {
 /// Largest element (`-inf` when empty).
 pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Mean absolute percentage error of `pred` against `truth` — the
+/// held-out metric the extension sweeps and benches report.
+pub fn mean_abs_err_pct(pred: &[f64], truth: &[f64]) -> f64 {
+    let errs: Vec<f64> = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| 100.0 * (p - t).abs() / t)
+        .collect();
+    mean(&errs)
 }
 
 /// Coefficient of determination of predictions vs observations.
@@ -187,6 +200,18 @@ mod tests {
         // Unsorted input is handled.
         let ys = [4.0, 1.0, 3.0, 2.0];
         assert_eq!(percentile(&ys, 50.0), 2.5);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan() {
+        // This used to panic via `partial_cmp(..).unwrap()`.
+        let xs = [2.0, f64::NAN, 1.0, 3.0];
+        // Positive NaN sorts last under total_cmp: low quantiles stay
+        // finite and answer from the real data ...
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        // ... and the top quantile lands on the NaN, honestly.
+        assert!(percentile(&xs, 100.0).is_nan());
     }
 
     #[test]

@@ -10,8 +10,11 @@ use std::process::Command;
 
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
+use mrtuner::mr::RepOutcome;
 use mrtuner::profiler::store::{decode_record, encode_record, RecordError};
 use mrtuner::profiler::{CampaignExecutor, ExperimentSpec, ProfileStore, StoreKey};
+use mrtuner::util::bytes::hex_u64;
+use mrtuner::util::json::Json;
 use mrtuner::util::prop::forall;
 
 /// Unique per-test scratch directory (removed up front so reruns are
@@ -49,16 +52,25 @@ fn record_codec_round_trips_any_key_and_bits() {
             app: apps[rng.range_usize(0, apps.len())],
             num_mappers: rng.next_u64() as u32,
             num_reducers: rng.next_u64() as u32,
+            input_gb_bits: rng.next_u64(),
+            block_mb: rng.next_u64() as u32,
             rep: rng.next_u64() as u32,
             base_seed: rng.next_u64(),
         };
         // Arbitrary bit patterns, including NaNs/infinities/subnormals:
-        // the codec must preserve every bit, not just "nice" times.
+        // the codec must preserve every bit, not just "nice" values —
+        // with and without the CPU figure.
         let time_s = f64::from_bits(rng.next_u64());
-        let line = encode_record(&key, time_s);
-        let (k2, t2) = decode_record(&line).expect("round trip");
+        let outcome = if rng.next_u64() % 2 == 0 {
+            RepOutcome::full(time_s, f64::from_bits(rng.next_u64()))
+        } else {
+            RepOutcome::time_only(time_s)
+        };
+        let line = encode_record(&key, &outcome);
+        let (k2, o2, ver) = decode_record(&line).expect("round trip");
         assert_eq!(k2, key);
-        assert_eq!(t2.to_bits(), time_s.to_bits());
+        assert_eq!(ver, 2);
+        assert!(o2.same_bits(&outcome));
     });
 }
 
@@ -69,11 +81,88 @@ fn version_bump_is_stale_not_corrupt() {
         app: AppId::Grep,
         num_mappers: 5,
         num_reducers: 5,
+        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+        block_mb: StoreKey::PAPER_BLOCK_MB,
         rep: 0,
         base_seed: 2,
     };
-    let line = encode_record(&key, 10.0).replace("\"v\":1", "\"v\":2");
-    assert_eq!(decode_record(&line), Err(RecordError::StaleVersion(2)));
+    let line = encode_record(&key, &RepOutcome::full(10.0, 1.0))
+        .replace("\"v\":2", "\"v\":3");
+    assert_eq!(decode_record(&line), Err(RecordError::StaleVersion(3)));
+}
+
+/// A record line exactly as the v1 (PR 2) store wrote it.
+fn v1_line(key: &StoreKey, time_s: f64) -> String {
+    Json::obj(vec![
+        ("v", Json::Num(1.0)),
+        ("cluster", Json::Str(hex_u64(key.cluster))),
+        ("app", Json::Str(key.app.name().to_string())),
+        ("m", Json::Num(key.num_mappers as f64)),
+        ("r", Json::Num(key.num_reducers as f64)),
+        ("rep", Json::Num(key.rep as f64)),
+        ("seed", Json::Str(hex_u64(key.base_seed))),
+        ("bits", Json::Str(hex_u64(time_s.to_bits()))),
+        ("t", Json::Num(time_s)),
+    ])
+    .to_string()
+}
+
+/// The ISSUE 3 migration criterion end to end: a store written by the v1
+/// build keeps answering after the v2 bump — the executor warm-starts
+/// from it with **zero** simulations and bit-identical times, and the
+/// first compaction rewrites it as v2 without orphaning anything.
+#[test]
+fn v1_store_warm_starts_v2_executor_without_resimulating() {
+    let dir = scratch("v1migrate");
+    let cluster = Cluster::paper_cluster();
+    let specs = [spec(10, 10), spec(20, 5)];
+
+    // Cold v2 run to learn the authoritative keys and times.
+    let cold = {
+        let exec = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&dir).unwrap());
+        exec.run_specs(&cluster, &specs, 2, 11)
+    };
+    // Rewrite the store as the v1 build would have left it: every record
+    // a v1 line (no input/block fields, no CPU figure).
+    let mut v1_records = Vec::new();
+    for path in std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+    {
+        for line in std::fs::read_to_string(&path).unwrap().lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (key, outcome, _) = decode_record(line).unwrap();
+            v1_records.push(v1_line(&key, outcome.time_s));
+        }
+        std::fs::remove_file(&path).unwrap();
+    }
+    assert_eq!(v1_records.len(), 4);
+    std::fs::write(
+        dir.join("seg-0000cafe-0000-v1legacy.jsonl"),
+        v1_records.join("\n") + "\n",
+    )
+    .unwrap();
+
+    // A v2 executor over the v1 store: zero simulations, identical bits.
+    let exec = CampaignExecutor::new(4)
+        .with_store(ProfileStore::open(&dir).unwrap());
+    let st = exec.store().unwrap().stats();
+    assert_eq!(st.migrated_lines, 4, "every v1 line migrated");
+    assert_eq!(st.stale_lines, 0, "nothing orphaned");
+    let warm = exec.run_specs(&cluster, &specs, 2, 11);
+    assert_eq!(exec.stats().simulated, 0, "warm from migrated records");
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(a.rep_times_s, b.rep_times_s);
+    }
+    drop(exec);
+    // Compaction rewrote the records as v2.
+    let index = std::fs::read_to_string(dir.join("index.jsonl")).unwrap();
+    assert!(index.contains("\"v\":2") && !index.contains("\"v\":1"));
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -193,10 +282,12 @@ fn truncated_segment_recovers_good_lines() {
                     app: AppId::WordCount,
                     num_mappers: 20,
                     num_reducers: 5,
+                    input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                    block_mb: StoreKey::PAPER_BLOCK_MB,
                     rep,
                     base_seed: 4,
                 },
-                100.0 + rep as f64,
+                RepOutcome::full(100.0 + rep as f64, 10.0 + rep as f64),
             );
         }
         store.flush().unwrap();
@@ -227,10 +318,12 @@ fn truncated_segment_recovers_good_lines() {
         app: AppId::WordCount,
         num_mappers: 20,
         num_reducers: 5,
+        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+        block_mb: StoreKey::PAPER_BLOCK_MB,
         rep: 2,
         base_seed: 4,
     });
-    assert_eq!(got, Some(102.0));
+    assert_eq!(got, Some(RepOutcome::full(102.0, 12.0)));
     drop(store);
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -248,10 +341,12 @@ fn compaction_is_idempotent() {
                 app: AppId::EximParse,
                 num_mappers: 10 + session as u32,
                 num_reducers: 10,
+                input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                block_mb: StoreKey::PAPER_BLOCK_MB,
                 rep: 0,
                 base_seed: 1,
             },
-            50.5 + session as f64,
+            RepOutcome::full(50.5 + session as f64, 5.5),
         );
         store.flush().unwrap();
     }
@@ -291,10 +386,12 @@ fn compaction_is_idempotent() {
                 app: AppId::EximParse,
                 num_mappers: 10,
                 num_reducers: 10,
+                input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                block_mb: StoreKey::PAPER_BLOCK_MB,
                 rep: 0,
                 base_seed: 1,
             },
-            50.5,
+            RepOutcome::full(50.5, 5.5),
         );
         assert_eq!(store.pending(), 0, "known value not re-queued");
     }
