@@ -1,14 +1,101 @@
 //! Blocking TCP client for the prediction server.
+//!
+//! Failures are **typed** ([`ClientError`]): a transport failure, a
+//! server-reported error, and a malformed reply are different bugs with
+//! different fixes, and the old stringly-typed path (worse, its
+//! `unwrap_or(0.0)` on missing fields) let a truncated reply read as "0
+//! seconds predicted".  Every field the client consumes is now required
+//! and validated.
 
+use std::fmt;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 use crate::util::json::{parse, Json};
 
+use super::service::Prediction;
+
+/// Why a client call failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ClientError {
+    /// Transport failure: connect, write, read, or connection closed.
+    Io(String),
+    /// The server answered `ok:false` with this message (protocol-level
+    /// error: unknown app, bad request, retrain failure ...).
+    Server(String),
+    /// The server's reply was syntactically or structurally invalid — a
+    /// truncated line, missing field, or non-finite number.  These used
+    /// to be silently mapped to `0.0`.
+    Malformed(String),
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io error: {e}"),
+            ClientError::Server(e) => write!(f, "server error: {e}"),
+            ClientError::Malformed(e) => write!(f, "malformed response: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Server-side outcome of a `retrain` request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetrainReply {
+    /// Store records newly discovered by the server's poll.
+    pub new_records: u64,
+    /// `(application, new version)` for every hot-swapped refit.
+    pub refits: Vec<(String, u64)>,
+}
+
+/// Metadata of one served model, from `model_info`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelInfoReply {
+    /// Application the model serves.
+    pub app: String,
+    /// Registry version currently live.
+    pub version: u64,
+    /// Distinct settings the fit used.
+    pub trained_on: u64,
+    /// Training RMSE in seconds (absent for models installed without
+    /// diagnostics).
+    pub fit_rmse: Option<f64>,
+    /// Fitted coefficients in feature order.
+    pub coeffs: Vec<f64>,
+}
+
 /// A connected client.
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+}
+
+fn io_err(e: impl fmt::Display) -> ClientError {
+    ClientError::Io(e.to_string())
+}
+
+/// Extract a required `f64` field (via the shared [`Json::req`]
+/// helpers), additionally rejecting non-finite values.
+fn req_f64(resp: &Json, key: &str) -> Result<f64, ClientError> {
+    let v = resp
+        .req(key)
+        .and_then(|j| {
+            j.as_f64()
+                .ok_or_else(|| format!("field '{key}' must be a number"))
+        })
+        .map_err(ClientError::Malformed)?;
+    if v.is_finite() {
+        Ok(v)
+    } else {
+        Err(ClientError::Malformed(format!("field '{key}' is not finite")))
+    }
+}
+
+/// Extract a required integer field via the shared [`Json::req_u64`].
+fn req_u64(resp: &Json, key: &str) -> Result<u64, ClientError> {
+    resp.req_u64(key).map_err(ClientError::Malformed)
 }
 
 impl Client {
@@ -19,57 +106,249 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream), writer })
     }
 
-    fn round_trip(&mut self, req: &Json) -> Result<Json, String> {
+    fn round_trip(&mut self, req: &Json) -> Result<Json, ClientError> {
         self.writer
             .write_all(format!("{req}\n").as_bytes())
-            .map_err(|e| e.to_string())?;
+            .map_err(io_err)?;
         let mut line = String::new();
-        self.reader.read_line(&mut line).map_err(|e| e.to_string())?;
-        let resp = parse(line.trim())?;
-        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
-            return Err(resp
-                .get("error")
-                .and_then(|e| e.as_str())
-                .unwrap_or("unknown server error")
-                .to_string());
+        let n = self.reader.read_line(&mut line).map_err(io_err)?;
+        if n == 0 {
+            return Err(ClientError::Io("server closed the connection".into()));
         }
-        Ok(resp)
+        if !line.ends_with('\n') {
+            // EOF mid-line: the reply was cut off, not merely empty.
+            return Err(ClientError::Malformed(format!(
+                "truncated reply: {line:?}"
+            )));
+        }
+        let resp = parse(line.trim()).map_err(ClientError::Malformed)?;
+        match resp.get("ok").and_then(|v| v.as_bool()) {
+            Some(true) => Ok(resp),
+            Some(false) => Err(ClientError::Server(
+                resp.get("error")
+                    .and_then(|e| e.as_str())
+                    .unwrap_or("unknown server error")
+                    .to_string(),
+            )),
+            None => Err(ClientError::Malformed(
+                "'ok' field missing or not a bool".into(),
+            )),
+        }
     }
 
     /// Predict total execution time for an `(app, M, R)` setting.
-    pub fn predict(&mut self, app: &str, mappers: u32, reducers: u32) -> Result<f64, String> {
+    pub fn predict(
+        &mut self,
+        app: &str,
+        mappers: u32,
+        reducers: u32,
+    ) -> Result<f64, ClientError> {
+        self.predict_versioned(app, mappers, reducers).map(|p| p.seconds)
+    }
+
+    /// [`Client::predict`] plus the serving model's version (the same
+    /// [`Prediction`] the in-process service returns) — lets callers
+    /// confirm which refit answered after a `retrain`.
+    pub fn predict_versioned(
+        &mut self,
+        app: &str,
+        mappers: u32,
+        reducers: u32,
+    ) -> Result<Prediction, ClientError> {
         let req = Json::obj(vec![
             ("op", Json::Str("predict".into())),
             ("app", Json::Str(app.into())),
             ("mappers", Json::Num(mappers as f64)),
             ("reducers", Json::Num(reducers as f64)),
         ]);
-        self.round_trip(&req)?
-            .get("predicted_s")
-            .and_then(|v| v.as_f64())
-            .ok_or_else(|| "malformed response".to_string())
+        let resp = self.round_trip(&req)?;
+        Ok(Prediction {
+            seconds: req_f64(&resp, "predicted_s")?,
+            version: req_u64(&resp, "version")?,
+        })
     }
 
     /// List applications with installed models.
-    pub fn models(&mut self) -> Result<Vec<String>, String> {
+    pub fn models(&mut self) -> Result<Vec<String>, ClientError> {
         let req = Json::obj(vec![("op", Json::Str("models".into()))]);
-        Ok(self
-            .round_trip(&req)?
-            .get("models")
-            .and_then(|v| v.as_arr())
-            .map(|a| {
-                a.iter()
-                    .filter_map(|x| x.as_str().map(str::to_string))
-                    .collect()
+        let resp = self.round_trip(&req)?;
+        let arr = resp.get("models").and_then(|v| v.as_arr()).ok_or_else(
+            || ClientError::Malformed("'models' missing or not an array".into()),
+        )?;
+        arr.iter()
+            .map(|x| {
+                x.as_str().map(str::to_string).ok_or_else(|| {
+                    ClientError::Malformed(
+                        "'models' entry is not a string".into(),
+                    )
+                })
             })
-            .unwrap_or_default())
+            .collect()
+    }
+
+    /// Ask the server to tail its profile store and hot-swap refit
+    /// models (`retrain` op; requires the server to have a trainer).
+    pub fn retrain(&mut self) -> Result<RetrainReply, ClientError> {
+        let req = Json::obj(vec![("op", Json::Str("retrain".into()))]);
+        let resp = self.round_trip(&req)?;
+        let arr = resp.get("refits").and_then(|v| v.as_arr()).ok_or_else(
+            || ClientError::Malformed("'refits' missing or not an array".into()),
+        )?;
+        let mut refits = Vec::with_capacity(arr.len());
+        for item in arr {
+            let app = item
+                .get("app")
+                .and_then(|a| a.as_str())
+                .ok_or_else(|| {
+                    ClientError::Malformed("refit entry missing 'app'".into())
+                })?
+                .to_string();
+            refits.push((app, req_u64(item, "version")?));
+        }
+        Ok(RetrainReply {
+            new_records: req_u64(&resp, "new_records")?,
+            refits,
+        })
+    }
+
+    /// Metadata (version, row count, fit RMSE, coefficients) of the
+    /// model currently serving `app`.
+    pub fn model_info(
+        &mut self,
+        app: &str,
+    ) -> Result<ModelInfoReply, ClientError> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("model_info".into())),
+            ("app", Json::Str(app.into())),
+        ]);
+        let resp = self.round_trip(&req)?;
+        let coeffs = resp
+            .get("coeffs")
+            .and_then(|v| v.to_f64_vec().ok())
+            .ok_or_else(|| {
+                ClientError::Malformed(
+                    "'coeffs' missing or not a number array".into(),
+                )
+            })?;
+        Ok(ModelInfoReply {
+            app: resp
+                .get("app")
+                .and_then(|a| a.as_str())
+                .ok_or_else(|| {
+                    ClientError::Malformed("'app' missing".into())
+                })?
+                .to_string(),
+            version: req_u64(&resp, "version")?,
+            trained_on: req_u64(&resp, "trained_on")?,
+            // fit_rmse is genuinely optional (unknown for hand-installed
+            // models) — but when present it must be a finite number.
+            fit_rmse: match resp.get("fit_rmse") {
+                None => None,
+                Some(_) => Some(req_f64(&resp, "fit_rmse")?),
+            },
+            coeffs,
+        })
     }
 
     /// Service health counters: (requests, batches, mean batch size).
-    pub fn health(&mut self) -> Result<(u64, u64, f64), String> {
+    /// Every field is required — a reply missing one is
+    /// [`ClientError::Malformed`], where it used to read as zero.
+    pub fn health(&mut self) -> Result<(u64, u64, f64), ClientError> {
         let req = Json::obj(vec![("op", Json::Str("health".into()))]);
         let resp = self.round_trip(&req)?;
-        let g = |k: &str| resp.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
-        Ok((g("requests") as u64, g("batches") as u64, g("mean_batch")))
+        Ok((
+            req_u64(&resp, "requests")?,
+            req_u64(&resp, "batches")?,
+            req_f64(&resp, "mean_batch")?,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// A one-shot fake server: accepts one connection, reads one line,
+    /// writes `reply` verbatim (no newline added), and closes.
+    fn fake_server(reply: &'static str) -> String {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 1024];
+            use std::io::Read;
+            let _ = stream.read(&mut buf);
+            stream.write_all(reply.as_bytes()).unwrap();
+            // Dropping the stream closes it mid-line.
+        });
+        addr
+    }
+
+    #[test]
+    fn truncated_reply_is_malformed_not_zero() {
+        // Cut off mid-number, no trailing newline.
+        let addr = fake_server(r#"{"ok":true,"predicted_s":51"#);
+        let mut c = Client::connect(&addr).unwrap();
+        match c.predict("wordcount", 20, 5) {
+            Err(ClientError::Malformed(msg)) => {
+                assert!(msg.contains("truncated"), "{msg}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_field_is_malformed_not_zero() {
+        let addr = fake_server("{\"ok\":true}\n");
+        let mut c = Client::connect(&addr).unwrap();
+        match c.predict("wordcount", 20, 5) {
+            Err(ClientError::Malformed(msg)) => {
+                assert!(msg.contains("predicted_s"), "{msg}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn missing_health_fields_are_malformed_not_zero() {
+        // The old client read this as (0, 0, 0.0).
+        let addr = fake_server("{\"ok\":true,\"requests\":3}\n");
+        let mut c = Client::connect(&addr).unwrap();
+        match c.health() {
+            Err(ClientError::Malformed(msg)) => {
+                assert!(msg.contains("batches"), "{msg}")
+            }
+            other => panic!("expected Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn server_error_is_typed() {
+        let addr = fake_server("{\"ok\":false,\"error\":\"no model\"}\n");
+        let mut c = Client::connect(&addr).unwrap();
+        assert_eq!(
+            c.predict("x", 1, 1),
+            Err(ClientError::Server("no model".into()))
+        );
+    }
+
+    #[test]
+    fn closed_connection_is_io() {
+        let addr = fake_server("");
+        let mut c = Client::connect(&addr).unwrap();
+        match c.predict("x", 1, 1) {
+            Err(ClientError::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn error_display_names_the_kind() {
+        assert!(ClientError::Io("x".into()).to_string().contains("io"));
+        assert!(ClientError::Server("x".into()).to_string().contains("server"));
+        assert!(ClientError::Malformed("x".into())
+            .to_string()
+            .contains("malformed"));
     }
 }

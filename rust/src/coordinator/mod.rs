@@ -12,7 +12,10 @@
 //!   executions of the predict artifact (fixed 64-row batches);
 //! * [`server`] / [`client`] — a line-delimited JSON TCP protocol;
 //! * [`scheduler`] — a predicted-time-aware (SJF) job scheduler evaluated
-//!   against FIFO on the simulated cluster.
+//!   against FIFO on the simulated cluster;
+//! * [`trainer`] — online retraining: tails the persistent profile
+//!   store, refits incrementally, and hot-swaps versioned models into
+//!   the live registry (the profile → model loop, closed).
 //!
 //! Rust owns the event loop and process lifecycle; Python never runs here.
 
@@ -21,11 +24,16 @@ pub mod registry;
 pub mod scheduler;
 pub mod server;
 pub mod service;
+pub mod trainer;
 
-pub use registry::ModelRegistry;
+pub use registry::{ModelEntry, ModelRegistry};
 pub use scheduler::{
-    evaluate_order, fifo_order, predicted_times, sjf_order, what_if,
+    evaluate_order, fifo_order, predicted_times, predicted_times_live,
+    sjf_order, sjf_order_from_times, sjf_order_live, what_if,
     what_if_with_stats, JobRequest,
 };
 pub use server::Server;
-pub use service::{PredictionService, ServiceConfig, ServiceMetrics};
+pub use service::{
+    Prediction, PredictionService, ServiceConfig, ServiceMetrics,
+};
+pub use trainer::{Refit, RetrainSummary, Trainer, TrainerReport};

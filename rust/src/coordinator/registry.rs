@@ -3,6 +3,12 @@
 //! The paper is explicit that models do not transfer across applications
 //! or platforms (§I); the registry therefore keys strictly by application
 //! name, and a missing entry is an error rather than a fallback.
+//!
+//! Entries are **versioned**: every publish bumps a per-application
+//! monotonic counter and records fit diagnostics, so the serving layer
+//! can hot-swap a refit atomically (under its `RwLock`) while in-flight
+//! batches finish on the version they started with and every response
+//! names the version that produced it.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -10,10 +16,62 @@ use std::path::Path;
 use crate::model::RegressionModel;
 use crate::util::json::{parse, Json};
 
+/// A registered model plus its serving metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelEntry {
+    /// The fitted per-application model (carries `trained_on`).
+    pub model: RegressionModel,
+    /// Per-application version, starting at 1 and bumped by every
+    /// publish — strictly monotonic for the registry's lifetime, so
+    /// observed versions order refits.
+    pub version: u64,
+    /// Root-mean-square residual of the fit on its own training rows
+    /// (seconds).  `NaN` when unknown, e.g. for models installed without
+    /// fit diagnostics.
+    pub fit_rmse: f64,
+}
+
+impl ModelEntry {
+    /// Serialize entry metadata alongside the model fields.  A `NaN`
+    /// `fit_rmse` is omitted (hand-rolled JSON has no NaN literal).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("app", Json::Str(self.model.app_name.clone())),
+            ("coeffs", Json::from_f64_slice(&self.model.coeffs)),
+            ("trained_on", Json::Num(self.model.trained_on as f64)),
+            ("version", Json::Num(self.version as f64)),
+        ];
+        if self.fit_rmse.is_finite() {
+            pairs.push(("fit_rmse", Json::Num(self.fit_rmse)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Rebuild from [`ModelEntry::to_json`] output.  Files written before
+    /// entries were versioned load as version 1 with unknown `fit_rmse`.
+    pub fn from_json(v: &Json) -> Result<ModelEntry, String> {
+        let model = RegressionModel::from_json(v)?;
+        let version = match v.get("version") {
+            Some(j) => j.as_u64().ok_or("version must be integer")?,
+            None => 1,
+        };
+        let fit_rmse = v
+            .get("fit_rmse")
+            .and_then(|j| j.as_f64())
+            .unwrap_or(f64::NAN);
+        Ok(ModelEntry { model, version, fit_rmse })
+    }
+}
+
 /// Thread-compatible model registry (wrap in `RwLock` for sharing).
 #[derive(Clone, Debug, Default)]
 pub struct ModelRegistry {
-    models: BTreeMap<String, RegressionModel>,
+    models: BTreeMap<String, ModelEntry>,
+    /// Last version assigned per application — kept separately from the
+    /// live entries so removing an app and publishing it again continues
+    /// its version sequence instead of restarting at 1 (clients order
+    /// refits by observed version).
+    last_versions: BTreeMap<String, u64>,
 }
 
 impl ModelRegistry {
@@ -22,19 +80,40 @@ impl ModelRegistry {
         ModelRegistry::default()
     }
 
-    /// Insert (or replace) the model for its application.
+    /// Insert (or replace) the model for its application without fit
+    /// diagnostics.  Shorthand for [`ModelRegistry::publish`] with an
+    /// unknown RMSE; the entry still gets the next version.
     pub fn insert(&mut self, model: RegressionModel) {
-        self.models.insert(model.app_name.clone(), model);
+        self.publish(model, f64::NAN);
+    }
+
+    /// Publish a (re)fitted model: the entry replaces any predecessor and
+    /// carries the next per-application version plus the fit's training
+    /// RMSE.  Returns the version assigned.  Versions survive
+    /// [`ModelRegistry::remove`]: re-publishing a removed app continues
+    /// its sequence.
+    pub fn publish(&mut self, model: RegressionModel, fit_rmse: f64) -> u64 {
+        let name = model.app_name.clone();
+        let version = self.last_versions.get(&name).copied().unwrap_or(0) + 1;
+        self.last_versions.insert(name.clone(), version);
+        self.models.insert(name, ModelEntry { model, version, fit_rmse });
+        version
     }
 
     /// The model for `app`, if one was uploaded.
     pub fn get(&self, app: &str) -> Option<&RegressionModel> {
+        self.models.get(app).map(|e| &e.model)
+    }
+
+    /// The full entry (model + version + diagnostics) for `app`.
+    pub fn entry(&self, app: &str) -> Option<&ModelEntry> {
         self.models.get(app)
     }
 
-    /// Remove and return the model for `app`.
+    /// Remove and return the model for `app`.  The app's version counter
+    /// is retained, so a later publish continues the sequence.
     pub fn remove(&mut self, app: &str) -> Option<RegressionModel> {
-        self.models.remove(app)
+        self.models.remove(app).map(|e| e.model)
     }
 
     /// Registered application names, sorted.
@@ -52,16 +131,20 @@ impl ModelRegistry {
         self.models.is_empty()
     }
 
-    /// Serialize every model as a JSON array.
+    /// Serialize every entry as a JSON array.
     pub fn to_json(&self) -> Json {
-        Json::Arr(self.models.values().map(|m| m.to_json()).collect())
+        Json::Arr(self.models.values().map(|e| e.to_json()).collect())
     }
 
-    /// Rebuild a registry from [`ModelRegistry::to_json`] output.
+    /// Rebuild a registry from [`ModelRegistry::to_json`] output (or from
+    /// a pre-versioning file of bare models, which load as version 1).
     pub fn from_json(v: &Json) -> Result<ModelRegistry, String> {
         let mut reg = ModelRegistry::new();
         for item in v.as_arr().ok_or("registry must be a JSON array")? {
-            reg.insert(RegressionModel::from_json(item)?);
+            let entry = ModelEntry::from_json(item)?;
+            let name = entry.model.app_name.clone();
+            reg.last_versions.insert(name.clone(), entry.version);
+            reg.models.insert(name, entry);
         }
         Ok(reg)
     }
@@ -117,13 +200,64 @@ mod tests {
     }
 
     #[test]
+    fn publish_versions_are_monotonic_per_app() {
+        let mut r = ModelRegistry::new();
+        assert_eq!(r.publish(model("wc"), 1.5), 1);
+        assert_eq!(r.publish(model("wc"), 1.25), 2);
+        assert_eq!(r.publish(model("grep"), 0.5), 1, "versions are per-app");
+        assert_eq!(r.publish(model("wc"), 1.0), 3);
+        let e = r.entry("wc").unwrap();
+        assert_eq!(e.version, 3);
+        assert_eq!(e.fit_rmse, 1.0);
+        assert_eq!(e.model.trained_on, 20);
+        // `insert` participates in the same version sequence.
+        r.insert(model("wc"));
+        let e = r.entry("wc").unwrap();
+        assert_eq!(e.version, 4);
+        assert!(e.fit_rmse.is_nan());
+    }
+
+    #[test]
+    fn remove_does_not_reset_the_version_sequence() {
+        let mut r = ModelRegistry::new();
+        assert_eq!(r.publish(model("wc"), 1.0), 1);
+        assert_eq!(r.publish(model("wc"), 1.0), 2);
+        assert!(r.remove("wc").is_some());
+        assert!(r.get("wc").is_none());
+        // Re-registering continues the sequence — a client that cached
+        // version 2 must never see a fresher model labeled 1.
+        assert_eq!(r.publish(model("wc"), 1.0), 3);
+        // And the sequence survives a JSON round-trip.
+        let mut back = ModelRegistry::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.publish(model("wc"), 1.0), 4);
+    }
+
+    #[test]
     fn json_round_trip() {
         let mut r = ModelRegistry::new();
-        r.insert(model("a"));
+        r.publish(model("a"), 2.5);
+        r.publish(model("a"), 2.25);
         r.insert(model("b"));
         let back = ModelRegistry::from_json(&r.to_json()).unwrap();
         assert_eq!(back.names(), r.names());
         assert_eq!(back.get("a"), r.get("a"));
+        assert_eq!(back.entry("a").unwrap().version, 2);
+        assert_eq!(back.entry("a").unwrap().fit_rmse, 2.25);
+        assert_eq!(back.entry("b").unwrap().version, 1);
+        assert!(back.entry("b").unwrap().fit_rmse.is_nan());
+    }
+
+    #[test]
+    fn pre_versioning_files_load_as_version_one() {
+        // A registry file written before entries carried versions.
+        let j = parse(
+            r#"[{"app":"wc","coeffs":[1,1,1,1,1,1,1],"trained_on":20}]"#,
+        )
+        .unwrap();
+        let r = ModelRegistry::from_json(&j).unwrap();
+        let e = r.entry("wc").unwrap();
+        assert_eq!(e.version, 1);
+        assert!(e.fit_rmse.is_nan());
     }
 
     #[test]

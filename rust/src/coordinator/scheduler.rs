@@ -50,14 +50,22 @@ pub fn fifo_order(jobs: &[JobRequest]) -> Vec<usize> {
 /// A non-finite prediction (a degenerate fit can produce NaN or infinite
 /// coefficients) is treated as unknown-model rather than fed to the
 /// comparator — sorting on it used to panic the scheduler.
-pub fn sjf_order<F>(jobs: &[JobRequest], mut predict: F) -> Vec<usize>
+pub fn sjf_order<F>(jobs: &[JobRequest], predict: F) -> Vec<usize>
 where
     F: FnMut(&JobRequest) -> Option<f64>,
 {
-    let mut keyed: Vec<(usize, Option<f64>)> = jobs
+    let times: Vec<Option<f64>> = jobs.iter().map(predict).collect();
+    sjf_order_from_times(&times)
+}
+
+/// Shortest-first order from precomputed per-job predictions (submission
+/// order; `None` = no model).  Same tie-break and non-finite handling as
+/// [`sjf_order`], which delegates here.
+pub fn sjf_order_from_times(times: &[Option<f64>]) -> Vec<usize> {
+    let mut keyed: Vec<(usize, Option<f64>)> = times
         .iter()
         .enumerate()
-        .map(|(i, j)| (i, predict(j).filter(|t| t.is_finite())))
+        .map(|(i, t)| (i, t.filter(|t| t.is_finite())))
         .collect();
     keyed.sort_by(|a, b| match (&a.1, &b.1) {
         (Some(x), Some(y)) => x.total_cmp(y).then(a.0.cmp(&b.0)),
@@ -66,6 +74,44 @@ where
         (None, None) => a.0.cmp(&b.0),
     });
     keyed.into_iter().map(|(i, _)| i).collect()
+}
+
+/// Predict each job's duration against the **live** serving registry
+/// (through the batching service, so a queue costs one coalesced cycle).
+/// `None` where the service has no model for the app (or the request
+/// failed) — those jobs schedule last, like any unknown-model job.
+pub fn predicted_times_live(
+    service: &crate::coordinator::PredictionService,
+    jobs: &[JobRequest],
+) -> Vec<Option<f64>> {
+    // Fan the queue out asynchronously first so the batcher can coalesce
+    // it, then collect in submission order.
+    let rxs: Vec<_> = jobs
+        .iter()
+        .map(|j| {
+            service.predict_async(j.app.name(), j.num_mappers, j.num_reducers)
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|rx| match rx {
+            Ok(rx) => match rx.recv() {
+                Ok(Ok(p)) => Some(p.seconds),
+                _ => None,
+            },
+            Err(_) => None,
+        })
+        .collect()
+}
+
+/// SJF order against the live registry: every re-plan reads the models
+/// *currently* installed, so a hot-swapped refit (a new application
+/// published, a tightened fit) changes the very next schedule — no
+/// restart, no stale plan.
+pub fn sjf_order_live(
+    service: &crate::coordinator::PredictionService,
+    jobs: &[JobRequest],
+) -> Vec<usize> {
+    sjf_order_from_times(&predicted_times_live(service, jobs))
 }
 
 /// Outcome of replaying a schedule on the simulated cluster (jobs run
@@ -242,6 +288,43 @@ mod tests {
         // Finite predictions first (tie → arrival order), the non-finite
         // ones stable-last exactly like unknown models.
         assert_eq!(order, vec![0, 3, 1, 2, 4]);
+    }
+
+    #[test]
+    fn live_replanning_follows_a_hot_swap() {
+        use crate::coordinator::{ModelRegistry, PredictionService, ServiceConfig};
+        use crate::model::features::NUM_FEATURES;
+        use crate::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
+
+        let flat = |app: &str, base: f64| {
+            let mut coeffs = [0.0; NUM_FEATURES];
+            coeffs[0] = base;
+            RegressionModel { app_name: app.into(), coeffs, trained_on: 20 }
+        };
+        let mut reg = ModelRegistry::new();
+        reg.insert(flat("wordcount", 100.0));
+        reg.insert(flat("exim", 200.0));
+        let svc = PredictionService::start(
+            || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+            reg,
+            ServiceConfig::default(),
+        );
+        let js = jobs();
+        // Grep has no model: its jobs (1 and 4) go last; wordcount (100s)
+        // sorts before exim (200s).
+        let before = sjf_order_live(&svc, &js);
+        assert_eq!(&before[3..], &[1, 4], "unknown-model jobs last");
+        assert_eq!(before[..3], [0, 3, 2]);
+        // Hot-swap: grep appears, wordcount gets much slower.  The very
+        // next re-plan reflects both — no restart.
+        svc.install_model(flat("grep", 10.0));
+        svc.install_model(flat("wordcount", 500.0));
+        let after = sjf_order_live(&svc, &js);
+        assert_eq!(after, vec![1, 4, 2, 0, 3]);
+        // And the times feeding the plan are the live registry's.
+        let times = predicted_times_live(&svc, &js);
+        assert_eq!(times[1], Some(10.0));
+        assert_eq!(times[0], Some(500.0));
     }
 
     #[test]

@@ -4,52 +4,89 @@
 //!
 //! ```text
 //! -> {"op":"predict","app":"wordcount","mappers":20,"reducers":5}
-//! <- {"ok":true,"predicted_s":512.4}
+//! <- {"ok":true,"predicted_s":512.4,"version":1}
 //! -> {"op":"models"}
 //! <- {"ok":true,"models":["exim","wordcount"]}
+//! -> {"op":"model_info","app":"wordcount"}
+//! <- {"ok":true,"app":"wordcount","version":2,"trained_on":20,
+//!     "fit_rmse":1.25,"coeffs":[...]}
+//! -> {"op":"retrain"}
+//! <- {"ok":true,"new_records":180,"refits":[{"app":"grep","version":1}]}
 //! -> {"op":"health"}
-//! <- {"ok":true,"requests":123,"batches":17,"mean_batch":7.2}
+//! <- {"ok":true,"requests":123,"batches":17,"rejected":0,
+//!     "lock_poisoned":0,"mean_batch":7.2}
 //! ```
 //!
 //! One thread per connection (the request path is bounded by the batcher,
-//! not by connection concurrency at this scale).
+//! not by connection concurrency at this scale).  Finished connection
+//! handles are reaped every accept iteration, so the tracked set stays
+//! bounded under sustained short-lived traffic.
+//!
+//! `retrain` drives the online [`Trainer`]: it tails the profile store
+//! and hot-swaps refit models into the registry, so a freshly profiled
+//! application becomes predictable without restarting the server.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::util::json::{parse, Json};
 
 use super::service::PredictionService;
+use super::trainer::Trainer;
 
 /// A running TCP server.
 pub struct Server {
     /// The bound address (useful with ephemeral ports).
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    live_conns: Arc<AtomicUsize>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
 }
 
 impl Server {
     /// Bind to `addr` (use port 0 for an ephemeral port) and serve
-    /// requests against `service`.
-    pub fn start(addr: &str, service: Arc<PredictionService>) -> std::io::Result<Server> {
+    /// requests against `service`, with no trainer (`retrain` is an
+    /// error).
+    pub fn start(
+        addr: &str,
+        service: Arc<PredictionService>,
+    ) -> std::io::Result<Server> {
+        Server::start_with(addr, service, None)
+    }
+
+    /// [`Server::start`], optionally wiring an online [`Trainer`] so the
+    /// `retrain` op can tail the profile store and hot-swap models.
+    pub fn start_with(
+        addr: &str,
+        service: Arc<PredictionService>,
+        trainer: Option<Arc<Mutex<Trainer>>>,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let accept_stop = Arc::clone(&stop);
+        let live_conns = Arc::new(AtomicUsize::new(0));
+        let live = Arc::clone(&live_conns);
         let accept_thread = std::thread::spawn(move || {
             // Poll-accept so shutdown is prompt.
             listener.set_nonblocking(true).ok();
             let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
             while !accept_stop.load(Ordering::Relaxed) {
+                // Reap finished handlers *every* iteration — accepting or
+                // idle — so sustained short-lived traffic cannot grow the
+                // handle set without bound (it used to grow until
+                // shutdown).
+                conns.retain(|h| !h.is_finished());
+                live.store(conns.len(), Ordering::Relaxed);
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let svc = Arc::clone(&service);
+                        let tr = trainer.clone();
                         let cstop = Arc::clone(&accept_stop);
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, svc, cstop);
+                            let _ = handle_conn(stream, svc, tr, cstop);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -61,8 +98,21 @@ impl Server {
             for c in conns {
                 let _ = c.join();
             }
+            live.store(0, Ordering::Relaxed);
         });
-        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(Server {
+            addr: local,
+            stop,
+            live_conns,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    /// Connection-handler threads currently tracked by the accept loop
+    /// (finished handlers are reaped each iteration).  Observability for
+    /// the soak tests and the `serve` CLI.
+    pub fn tracked_connections(&self) -> usize {
+        self.live_conns.load(Ordering::Relaxed)
     }
 
     /// Stop accepting, drain connection threads, and join the acceptor.
@@ -80,35 +130,96 @@ impl Drop for Server {
     }
 }
 
+/// Largest request line the server buffers.  Real requests are a few
+/// hundred bytes; the cap exists so a client streaming bytes with no
+/// newline cannot grow a handler's buffer without bound now that
+/// partial reads survive timeouts.
+const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Read one `\n`-terminated request into `buf`, which may already hold
+/// a partial line from a previous timeout (partials are preserved, not
+/// discarded).  Returns `Ok(true)` with the full line buffered,
+/// `Ok(false)` on clean EOF.  A read timeout surfaces as
+/// `WouldBlock`/`TimedOut` (caller retries, keeping `buf`); a line past
+/// [`MAX_LINE_BYTES`] surfaces as `InvalidData`.
+fn read_line_bounded(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<bool> {
+    loop {
+        let available = match reader.fill_buf() {
+            Ok(bytes) => bytes,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if available.is_empty() {
+            return Ok(false); // client closed
+        }
+        let newline = available.iter().position(|&b| b == b'\n');
+        let take = newline.map(|i| i + 1).unwrap_or(available.len());
+        buf.extend_from_slice(&available[..take]);
+        reader.consume(take);
+        if newline.is_some() {
+            return Ok(true);
+        }
+        if buf.len() > MAX_LINE_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "request line too long",
+            ));
+        }
+    }
+}
+
 fn handle_conn(
     stream: TcpStream,
     service: Arc<PredictionService>,
+    trainer: Option<Arc<Mutex<Trainer>>>,
     stop: Arc<AtomicBool>,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
+    let mut buf: Vec<u8> = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             return Ok(());
         }
-        line.clear();
-        match reader.read_line(&mut line) {
-            Ok(0) => return Ok(()), // client closed
-            Ok(_) => {
-                if line.trim().is_empty() {
-                    continue;
+        match read_line_bounded(&mut reader, &mut buf) {
+            Ok(false) => return Ok(()), // client closed
+            Ok(true) => {
+                {
+                    let line = String::from_utf8_lossy(&buf);
+                    let trimmed = line.trim();
+                    if !trimmed.is_empty() {
+                        let resp =
+                            dispatch(trimmed, &service, trainer.as_deref());
+                        writer.write_all(resp.to_string().as_bytes())?;
+                        writer.write_all(b"\n")?;
+                    }
                 }
-                let resp = dispatch(line.trim(), &service);
-                writer.write_all(resp.to_string().as_bytes())?;
-                writer.write_all(b"\n")?;
+                // One request fully consumed: only now is it safe to
+                // drop the buffer.
+                buf.clear();
             }
             Err(e)
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                continue
+                // Read timeout while a request is mid-line: `buf` holds
+                // the partial bytes already received, and clearing it
+                // here (as this loop once did) silently discarded them —
+                // corrupting the stream framing for a slow client.  Keep
+                // the partial read; the next pass appends the rest.
+                continue;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // Oversized request line: answer once, then hang up —
+                // the client is outside the protocol.
+                let resp = err("request line too long");
+                let _ = writer.write_all(resp.to_string().as_bytes());
+                let _ = writer.write_all(b"\n");
+                return Ok(());
             }
             Err(e) => return Err(e),
         }
@@ -120,7 +231,11 @@ fn err(msg: &str) -> Json {
 }
 
 /// Handle one request line (exposed for unit testing without sockets).
-pub fn dispatch(line: &str, service: &PredictionService) -> Json {
+pub fn dispatch(
+    line: &str,
+    service: &PredictionService,
+    trainer: Option<&Mutex<Trainer>>,
+) -> Json {
     let req = match parse(line) {
         Ok(v) => v,
         Err(e) => return err(&format!("bad json: {e}")),
@@ -136,10 +251,11 @@ pub fn dispatch(line: &str, service: &PredictionService) -> Json {
             let (Some(m), Some(r)) = (m, r) else {
                 return err("predict requires integer 'mappers' and 'reducers'");
             };
-            match service.predict(app, m as u32, r as u32) {
+            match service.predict_versioned(app, m as u32, r as u32) {
                 Ok(p) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
-                    ("predicted_s", Json::Num(p)),
+                    ("predicted_s", Json::Num(p.seconds)),
+                    ("version", Json::Num(p.version as f64)),
                 ]),
                 Err(e) => err(&e),
             }
@@ -153,6 +269,77 @@ pub fn dispatch(line: &str, service: &PredictionService) -> Json {
                 ),
             ),
         ]),
+        Some("model_info") => {
+            let app = match req.get("app").and_then(|a| a.as_str()) {
+                Some(a) => a,
+                None => return err("model_info requires 'app'"),
+            };
+            match service.model_info(app) {
+                None => err(&format!("no model for application '{app}'")),
+                Some(entry) => {
+                    let mut pairs = vec![
+                        ("ok", Json::Bool(true)),
+                        ("app", Json::Str(entry.model.app_name.clone())),
+                        ("version", Json::Num(entry.version as f64)),
+                        (
+                            "trained_on",
+                            Json::Num(entry.model.trained_on as f64),
+                        ),
+                        ("coeffs", Json::from_f64_slice(&entry.model.coeffs)),
+                    ];
+                    if entry.fit_rmse.is_finite() {
+                        pairs.push(("fit_rmse", Json::Num(entry.fit_rmse)));
+                    }
+                    Json::obj(pairs)
+                }
+            }
+        }
+        Some("retrain") => match trainer {
+            None => err(
+                "no trainer attached (start the server with a profile store)",
+            ),
+            Some(t) => {
+                // Recover from poison: the trainer's state is a plain
+                // map of reps, safe to reuse after a panicked poll.
+                let mut tr = match t.lock() {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+                match tr.retrain(service) {
+                    Ok(summary) => Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        (
+                            "new_records",
+                            Json::Num(summary.new_records as f64),
+                        ),
+                        (
+                            "refits",
+                            Json::Arr(
+                                summary
+                                    .published
+                                    .iter()
+                                    .map(|(app, version)| {
+                                        Json::obj(vec![
+                                            (
+                                                "app",
+                                                Json::Str(
+                                                    app.name().to_string(),
+                                                ),
+                                            ),
+                                            (
+                                                "version",
+                                                Json::Num(*version as f64),
+                                            ),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ]),
+                    Err(e) => err(&format!("retrain failed: {e}")),
+                }
+            }
+        },
         Some("health") => {
             let m = &service.metrics;
             Json::obj(vec![
@@ -168,6 +355,10 @@ pub fn dispatch(line: &str, service: &PredictionService) -> Json {
                 (
                     "rejected",
                     Json::Num(m.rejected.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "lock_poisoned",
+                    Json::Num(m.lock_poisoned.load(Ordering::Relaxed) as f64),
                 ),
                 ("mean_batch", Json::Num(m.mean_batch_size())),
             ])
@@ -209,29 +400,38 @@ mod tests {
         let resp = dispatch(
             r#"{"op":"predict","app":"wordcount","mappers":20,"reducers":5}"#,
             &svc,
+            None,
         );
         assert_eq!(resp.get("ok").unwrap().as_bool(), Some(true));
         assert_eq!(resp.get("predicted_s").unwrap().as_f64(), Some(400.0));
+        assert_eq!(resp.get("version").unwrap().as_u64(), Some(1));
     }
 
     #[test]
     fn dispatch_errors() {
         let svc = service();
         assert_eq!(
-            dispatch("not json", &svc).get("ok").unwrap().as_bool(),
+            dispatch("not json", &svc, None).get("ok").unwrap().as_bool(),
             Some(false)
         );
         assert_eq!(
-            dispatch(r#"{"op":"predict","app":"nope","mappers":1,"reducers":1}"#, &svc)
+            dispatch(
+                r#"{"op":"predict","app":"nope","mappers":1,"reducers":1}"#,
+                &svc,
+                None
+            )
+            .get("ok")
+            .unwrap()
+            .as_bool(),
+            Some(false)
+        );
+        let e = dispatch(r#"{"op":"predict","app":"wordcount"}"#, &svc, None);
+        assert!(e.get("error").unwrap().as_str().unwrap().contains("mappers"));
+        assert_eq!(
+            dispatch(r#"{"op":"explode"}"#, &svc, None)
                 .get("ok")
                 .unwrap()
                 .as_bool(),
-            Some(false)
-        );
-        let e = dispatch(r#"{"op":"predict","app":"wordcount"}"#, &svc);
-        assert!(e.get("error").unwrap().as_str().unwrap().contains("mappers"));
-        assert_eq!(
-            dispatch(r#"{"op":"explode"}"#, &svc).get("ok").unwrap().as_bool(),
             Some(false)
         );
     }
@@ -239,13 +439,53 @@ mod tests {
     #[test]
     fn dispatch_models_and_health() {
         let svc = service();
-        let m = dispatch(r#"{"op":"models"}"#, &svc);
+        let m = dispatch(r#"{"op":"models"}"#, &svc, None);
         assert_eq!(
             m.get("models").unwrap().as_arr().unwrap()[0].as_str(),
             Some("wordcount")
         );
         svc.predict("wordcount", 10, 10).unwrap();
-        let h = dispatch(r#"{"op":"health"}"#, &svc);
+        let h = dispatch(r#"{"op":"health"}"#, &svc, None);
         assert!(h.get("requests").unwrap().as_f64().unwrap() >= 1.0);
+        assert_eq!(h.get("lock_poisoned").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn dispatch_model_info() {
+        let svc = service();
+        let info =
+            dispatch(r#"{"op":"model_info","app":"wordcount"}"#, &svc, None);
+        assert_eq!(info.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(info.get("version").unwrap().as_u64(), Some(1));
+        assert_eq!(info.get("trained_on").unwrap().as_u64(), Some(20));
+        assert_eq!(
+            info.get("coeffs").unwrap().as_arr().unwrap().len(),
+            NUM_FEATURES
+        );
+        // Unknown RMSE (installed, not refit) is omitted, not NaN.
+        assert!(info.get("fit_rmse").is_none());
+        let missing =
+            dispatch(r#"{"op":"model_info","app":"nope"}"#, &svc, None);
+        assert_eq!(missing.get("ok").unwrap().as_bool(), Some(false));
+        let noapp = dispatch(r#"{"op":"model_info"}"#, &svc, None);
+        assert!(noapp
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("app"));
+    }
+
+    #[test]
+    fn dispatch_retrain_without_trainer_is_error() {
+        let svc = service();
+        let resp = dispatch(r#"{"op":"retrain"}"#, &svc, None);
+        assert_eq!(resp.get("ok").unwrap().as_bool(), Some(false));
+        assert!(resp
+            .get("error")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .contains("no trainer"));
     }
 }

@@ -10,15 +10,22 @@
 //! until either `max_batch` requests are queued or `max_wait` has elapsed
 //! since the first one.  Both knobs are in [`ServiceConfig`] and are
 //! swept by `rust/benches/perf_hotpath.rs`.
+//!
+//! Models hot-swap: [`PredictionService::publish_model`] replaces an
+//! application's entry atomically under the registry `RwLock`, so a batch
+//! that already resolved its coefficients finishes on the old version
+//! while every later batch sees the new one — each [`Prediction`] names
+//! the version that served it, and per-caller observed versions are
+//! monotonic.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
 
 use crate::model::regression::FitBackend;
 
-use super::registry::ModelRegistry;
+use super::registry::{ModelEntry, ModelRegistry};
 
 /// Service tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -51,6 +58,14 @@ pub struct ServiceMetrics {
     pub rejected: AtomicU64,
     /// Largest batch coalesced so far.
     pub max_batch_seen: AtomicU64,
+    /// Times the registry lock was found poisoned and recovered.  A
+    /// panicking worker poisons the `RwLock`, but the registry itself is
+    /// always consistent (swaps are single `BTreeMap` inserts), so the
+    /// service recovers — and clears the poison — instead of failing
+    /// every later request.  Because recovery clears the flag, this
+    /// counts panic *incidents* (± racing observers), not every lock
+    /// acquisition after one.
+    pub lock_poisoned: AtomicU64,
 }
 
 impl ServiceMetrics {
@@ -70,6 +85,16 @@ impl ServiceMetrics {
     }
 }
 
+/// One served prediction: the predicted total time and the version of
+/// the application model that produced it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Prediction {
+    /// Predicted total execution time, seconds.
+    pub seconds: f64,
+    /// Registry version of the model that served the request.
+    pub version: u64,
+}
+
 enum Msg {
     Predict(PredictReq),
     Shutdown,
@@ -78,7 +103,39 @@ enum Msg {
 struct PredictReq {
     app: String,
     params: [f64; 2],
-    resp: Sender<Result<f64, String>>,
+    resp: Sender<Result<Prediction, String>>,
+}
+
+/// Lock the registry for reading, recovering from poison (see
+/// [`ServiceMetrics::lock_poisoned`]).  The poison flag is cleared so
+/// one panic is counted once, not on every later acquisition.
+fn registry_read<'a>(
+    registry: &'a RwLock<ModelRegistry>,
+    metrics: &ServiceMetrics,
+) -> RwLockReadGuard<'a, ModelRegistry> {
+    match registry.read() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            metrics.lock_poisoned.fetch_add(1, Ordering::Relaxed);
+            registry.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Lock the registry for writing, recovering from poison.
+fn registry_write<'a>(
+    registry: &'a RwLock<ModelRegistry>,
+    metrics: &ServiceMetrics,
+) -> RwLockWriteGuard<'a, ModelRegistry> {
+    match registry.write() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            metrics.lock_poisoned.fetch_add(1, Ordering::Relaxed);
+            registry.clear_poison();
+            poisoned.into_inner()
+        }
+    }
 }
 
 /// Handle to the running service.  Cloneable; dropping the last handle
@@ -122,28 +179,12 @@ impl PredictionService {
         PredictionService { tx, registry, metrics, worker: Some(worker) }
     }
 
-    /// Blocking single prediction.
-    pub fn predict(&self, app: &str, num_mappers: u32, num_reducers: u32) -> Result<f64, String> {
-        let (rtx, rrx) = channel();
-        self.tx
-            .send(Msg::Predict(PredictReq {
-                app: app.to_string(),
-                params: [num_mappers as f64, num_reducers as f64],
-                resp: rtx,
-            }))
-            .map_err(|_| "service stopped".to_string())?;
-        rrx.recv().map_err(|_| "service dropped request".to_string())?
-    }
-
-    /// Fire a prediction without blocking; the result arrives on the
-    /// returned receiver.  This is what lets callers build big concurrent
-    /// batches from one thread (used by the benches and the server).
-    pub fn predict_async(
+    fn enqueue(
         &self,
         app: &str,
         num_mappers: u32,
         num_reducers: u32,
-    ) -> Result<Receiver<Result<f64, String>>, String> {
+    ) -> Result<Receiver<Result<Prediction, String>>, String> {
         let (rtx, rrx) = channel();
         self.tx
             .send(Msg::Predict(PredictReq {
@@ -155,14 +196,71 @@ impl PredictionService {
         Ok(rrx)
     }
 
-    /// Install or replace an application model.
+    /// Blocking single prediction (seconds only; see
+    /// [`PredictionService::predict_versioned`] for the serving version).
+    pub fn predict(
+        &self,
+        app: &str,
+        num_mappers: u32,
+        num_reducers: u32,
+    ) -> Result<f64, String> {
+        self.predict_versioned(app, num_mappers, num_reducers)
+            .map(|p| p.seconds)
+    }
+
+    /// Blocking single prediction, with the model version that served it.
+    pub fn predict_versioned(
+        &self,
+        app: &str,
+        num_mappers: u32,
+        num_reducers: u32,
+    ) -> Result<Prediction, String> {
+        let rrx = self.enqueue(app, num_mappers, num_reducers)?;
+        rrx.recv().map_err(|_| "service dropped request".to_string())?
+    }
+
+    /// Fire a prediction without blocking; the result arrives on the
+    /// returned receiver.  This is what lets callers build big concurrent
+    /// batches from one thread (used by the benches and the server).
+    pub fn predict_async(
+        &self,
+        app: &str,
+        num_mappers: u32,
+        num_reducers: u32,
+    ) -> Result<Receiver<Result<Prediction, String>>, String> {
+        self.enqueue(app, num_mappers, num_reducers)
+    }
+
+    /// Install or replace an application model without fit diagnostics.
     pub fn install_model(&self, model: crate::model::RegressionModel) {
-        self.registry.write().unwrap().insert(model);
+        self.publish_model(model, f64::NAN);
+    }
+
+    /// Publish a (re)fitted model into the live registry — the atomic
+    /// hot-swap: in-flight batches that already resolved their
+    /// coefficients finish on the old version, every later batch sees
+    /// the new one.  Returns the version assigned.
+    pub fn publish_model(
+        &self,
+        model: crate::model::RegressionModel,
+        fit_rmse: f64,
+    ) -> u64 {
+        registry_write(&self.registry, &self.metrics).publish(model, fit_rmse)
+    }
+
+    /// The registry entry (model + version + diagnostics) for `app`.
+    pub fn model_info(&self, app: &str) -> Option<ModelEntry> {
+        registry_read(&self.registry, &self.metrics).entry(app).cloned()
     }
 
     /// Names of the currently installed models.
     pub fn model_names(&self) -> Vec<String> {
-        self.registry.read().unwrap().names()
+        registry_read(&self.registry, &self.metrics).names()
+    }
+
+    #[cfg(test)]
+    fn registry_handle(&self) -> Arc<RwLock<ModelRegistry>> {
+        Arc::clone(&self.registry)
     }
 }
 
@@ -229,11 +327,14 @@ fn serve_batch(
         by_app.entry(r.app.clone()).or_default().push(r);
     }
     for (app, reqs) in by_app {
-        let coeffs = {
-            let reg = registry.read().unwrap();
-            reg.get(&app).map(|m| m.coeffs)
+        // Resolve (coefficients, version) in one registry read so the
+        // whole app-batch is served by a single consistent model even if
+        // a publish lands mid-cycle.
+        let looked_up = {
+            let reg = registry_read(registry, metrics);
+            reg.entry(&app).map(|e| (e.model.coeffs, e.version))
         };
-        let Some(coeffs) = coeffs else {
+        let Some((coeffs, version)) = looked_up else {
             metrics.rejected.fetch_add(reqs.len() as u64, Ordering::Relaxed);
             for r in reqs {
                 let _ = r
@@ -247,7 +348,8 @@ fn serve_batch(
         match backend.lock().unwrap().predict(&coeffs, &params) {
             Ok(preds) => {
                 for (r, p) in reqs.into_iter().zip(preds) {
-                    let _ = r.resp.send(Ok(p));
+                    let _ =
+                        r.resp.send(Ok(Prediction { seconds: p, version }));
                 }
             }
             Err(e) => {
@@ -263,8 +365,8 @@ fn serve_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::regression::{RegressionModel, RustSolverBackend};
     use crate::model::features::{evaluate, NUM_FEATURES};
+    use crate::model::regression::{RegressionModel, RustSolverBackend};
 
     fn test_model(app: &str) -> RegressionModel {
         let mut coeffs = [0.0; NUM_FEATURES];
@@ -326,7 +428,8 @@ mod tests {
             let got = rx.recv().unwrap().unwrap();
             let m = 5 + (i as u32 % 36);
             let want = evaluate(&test_model("x").coeffs, &[m as f64, 5.0]);
-            assert!((got - want).abs() < 1e-12, "req {i}");
+            assert!((got.seconds - want).abs() < 1e-12, "req {i}");
+            assert_eq!(got.version, 1);
         }
         let batches = svc.metrics.batches.load(Ordering::Relaxed);
         assert!(batches < 200, "batching must coalesce: {batches} batches");
@@ -341,6 +444,46 @@ mod tests {
         svc.install_model(test_model("grep"));
         assert!(svc.predict("grep", 10, 10).is_ok());
         assert_eq!(svc.model_names(), vec!["grep", "wordcount"]);
+    }
+
+    #[test]
+    fn publish_bumps_served_version() {
+        let svc = service();
+        let p1 = svc.predict_versioned("wordcount", 20, 5).unwrap();
+        assert_eq!(p1.version, 1);
+        let mut refit = test_model("wordcount");
+        refit.coeffs[0] += 50.0;
+        let v = svc.publish_model(refit, 0.25);
+        assert_eq!(v, 2);
+        let p2 = svc.predict_versioned("wordcount", 20, 5).unwrap();
+        assert_eq!(p2.version, 2);
+        assert!((p2.seconds - p1.seconds - 50.0).abs() < 1e-9);
+        let info = svc.model_info("wordcount").unwrap();
+        assert_eq!(info.version, 2);
+        assert_eq!(info.fit_rmse, 0.25);
+        assert!(svc.model_info("nope").is_none());
+    }
+
+    #[test]
+    fn poisoned_registry_recovers_and_is_counted() {
+        let svc = service();
+        // Panic while holding the write lock — the classic poisoner.
+        let registry = svc.registry_handle();
+        let _ = std::thread::spawn(move || {
+            let _guard = registry.write().unwrap();
+            panic!("poison the registry lock");
+        })
+        .join();
+        // Every later call recovers instead of panicking ...
+        let got = svc.predict("wordcount", 20, 5).unwrap();
+        let want = evaluate(&test_model("x").coeffs, &[20.0, 5.0]);
+        assert!((got - want).abs() < 1e-12);
+        svc.install_model(test_model("grep"));
+        assert_eq!(svc.model_names(), vec!["grep", "wordcount"]);
+        // ... and the *incident* is counted exactly once: recovery
+        // clears the poison, so the later calls above took the clean
+        // path instead of re-counting the same panic forever.
+        assert_eq!(svc.metrics.lock_poisoned.load(Ordering::Relaxed), 1);
     }
 
     #[test]

@@ -1,0 +1,374 @@
+//! Online retraining: close the profile → model loop.
+//!
+//! The paper's pipeline is profile → model → predict (Fig. 2), and the
+//! authors' companion work on CPU-usage prediction (arXiv:1203.4054,
+//! refined in arXiv:1303.3632) observes that these linear models are
+//! cheap to refit as new profiling samples arrive.  This module acts on
+//! that: a [`Trainer`] *tails* the persistent
+//! [`ProfileStore`](crate::profiler::ProfileStore) — re-scanning the
+//! store directory for records appended by other sessions and reading
+//! its own journal since the last generation — folds fresh paper-plane
+//! repetitions into per-application training state, refits through the
+//! incremental [`FitAccumulator`], and publishes each refit as a new
+//! **versioned** model into the serving registry
+//! ([`PredictionService::publish_model`], an atomic hot-swap under the
+//! registry's `RwLock`).
+//!
+//! A server started against a warm store therefore serves every
+//! application the store has ever profiled, and picks up newly profiled
+//! applications (and tightened fits of old ones) on the next retrain —
+//! without restart.
+//!
+//! **Exactness:** a refit is not an approximation.  Per setting the
+//! trainer keeps every rep time (keyed `(session, rep)`, so means are
+//! computed over a deterministic order), and the accumulator path is
+//! bit-identical to a from-scratch
+//! [`RegressionModel::fit_dataset`] over the same per-setting mean rows
+//! in the same (sorted) order — asserted end-to-end in
+//! `rust/tests/trainer_loop.rs`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::apps::AppId;
+use crate::cluster::Cluster;
+use crate::model::features::{evaluate, NUM_FEATURES};
+use crate::model::regression::{FitAccumulator, RegressionModel};
+use crate::profiler::{cluster_fingerprint, ProfileStore, StoreKey};
+
+use super::service::PredictionService;
+
+/// Per-application training state: every paper-plane repetition seen so
+/// far, grouped by setting.  Rep times key by `(session seed, rep)` so
+/// iteration order — and therefore every mean — is deterministic
+/// whatever order records arrived in.
+#[derive(Clone, Debug, Default)]
+struct AppState {
+    /// `(M, R)` → `(base_seed, rep)` → observed total time.
+    reps: BTreeMap<(u32, u32), BTreeMap<(u64, u32), f64>>,
+    /// Whether new reps arrived since the last successful refit.
+    dirty: bool,
+}
+
+/// One refit produced by a [`Trainer::poll`].
+#[derive(Clone, Debug)]
+pub struct Refit {
+    /// Application the model was refit for.
+    pub app: AppId,
+    /// The freshly fitted model (`trained_on` = distinct settings).
+    pub model: RegressionModel,
+    /// Root-mean-square residual on the training rows, seconds.
+    pub fit_rmse: f64,
+}
+
+/// Everything one [`Trainer::poll`] learned and produced.
+#[derive(Clone, Debug, Default)]
+pub struct TrainerReport {
+    /// Store records newly discovered by this poll (all clusters/planes,
+    /// before filtering).
+    pub new_records: u64,
+    /// Refits ready to publish, in application order.
+    pub refits: Vec<Refit>,
+    /// Store generation after the poll (diagnostics).
+    pub generation: u64,
+}
+
+/// Summary of a [`Trainer::retrain`]: the poll plus what was published.
+#[derive(Clone, Debug, Default)]
+pub struct RetrainSummary {
+    /// Store records newly discovered by the poll.
+    pub new_records: u64,
+    /// `(application, assigned version)` for every hot-swapped refit.
+    pub published: Vec<(AppId, u64)>,
+}
+
+/// The trainer: profile-store tailer + incremental refitter.
+///
+/// Synchronous by design — [`Trainer::poll`] does one bounded unit of
+/// work — so the serving layer decides the cadence: the CLI's
+/// `serve --retrain-every N` drives it from a background thread, and the
+/// server's `retrain` op drives it on demand.  Wrap in a `Mutex` to
+/// share between the two.
+pub struct Trainer {
+    store: ProfileStore,
+    cluster_fp: u64,
+    generation: u64,
+    min_settings: usize,
+    apps: BTreeMap<AppId, AppState>,
+}
+
+impl Trainer {
+    /// Trainer over an already-open store, training models for `cluster`
+    /// (records keyed under any other cluster fingerprint are ignored —
+    /// the paper's models do not transfer across platforms, §I).
+    pub fn new(store: ProfileStore, cluster: &Cluster) -> Trainer {
+        Trainer {
+            store,
+            cluster_fp: cluster_fingerprint(cluster),
+            generation: 0,
+            // A cubic per-parameter basis has NUM_FEATURES unknowns;
+            // refuse to publish fits with fewer distinct settings.
+            min_settings: NUM_FEATURES,
+            apps: BTreeMap::new(),
+        }
+    }
+
+    /// Open the store at `dir` (without compacting — the trainer is a
+    /// reader; profiling sessions own compaction) and build a trainer
+    /// over it.
+    pub fn open(dir: &Path, cluster: &Cluster) -> Result<Trainer, String> {
+        Ok(Trainer::new(ProfileStore::peek(dir)?, cluster))
+    }
+
+    /// Minimum distinct settings before an application is fit at all.
+    pub fn min_settings(&self) -> usize {
+        self.min_settings
+    }
+
+    /// Store generation the trainer has ingested up to.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// One tail-and-refit cycle: re-scan the store directory for records
+    /// other sessions appended, ingest everything past the trainer's
+    /// cursor, and refit every application that gained data.  Returns
+    /// the refits *without* publishing them (that is
+    /// [`Trainer::retrain`]), so the core loop is testable against a
+    /// bare store.
+    pub fn poll(&mut self) -> Result<TrainerReport, String> {
+        self.store.refresh()?;
+        let (fresh, generation) = self.store.read_since(self.generation);
+        self.generation = generation;
+        let mut new_records = 0u64;
+        for (key, outcome) in fresh {
+            new_records += 1;
+            if !self.wanted(&key) {
+                continue;
+            }
+            let state = self.apps.entry(key.app).or_default();
+            state
+                .reps
+                .entry((key.num_mappers, key.num_reducers))
+                .or_default()
+                .insert((key.base_seed, key.rep), outcome.time_s);
+            state.dirty = true;
+        }
+        let mut refits = Vec::new();
+        for (app, state) in &mut self.apps {
+            if !state.dirty || state.reps.len() < self.min_settings {
+                continue;
+            }
+            match fit_app(*app, state) {
+                Ok(refit) => {
+                    state.dirty = false;
+                    refits.push(refit);
+                }
+                // A degenerate system for one app must not stall the
+                // loop for the others; leave it dirty so the next poll
+                // (with more data) retries.
+                Err(e) => {
+                    eprintln!("trainer: refit of {} skipped: {e}", app.name())
+                }
+            }
+        }
+        Ok(TrainerReport { new_records, refits, generation })
+    }
+
+    /// Poll once and hot-swap every refit into `service` as a new model
+    /// version.  The swap is atomic per application: requests already
+    /// batched against the old coefficients finish on the old version,
+    /// later ones see the new.
+    pub fn retrain(
+        &mut self,
+        service: &PredictionService,
+    ) -> Result<RetrainSummary, String> {
+        let report = self.poll()?;
+        let mut published = Vec::new();
+        for refit in report.refits {
+            let version = service.publish_model(refit.model, refit.fit_rmse);
+            published.push((refit.app, version));
+        }
+        Ok(RetrainSummary { new_records: report.new_records, published })
+    }
+
+    /// Whether a store record feeds this trainer: right cluster, and on
+    /// the paper plane (the 2-parameter model's home; extended-sweep
+    /// records model different inputs and would bias the fit).
+    fn wanted(&self, key: &StoreKey) -> bool {
+        key.cluster == self.cluster_fp
+            && key.input_gb_bits == StoreKey::PAPER_INPUT_GB.to_bits()
+            && key.block_mb == StoreKey::PAPER_BLOCK_MB
+    }
+}
+
+/// Fit one application from its retained per-setting reps: per-setting
+/// mean rows in sorted `(M, R)` order through the rank-1 accumulator —
+/// the order and arithmetic a from-scratch
+/// [`RegressionModel::fit_dataset`] over the same rows would use, so the
+/// result is bit-identical to it.
+fn fit_app(app: AppId, state: &AppState) -> Result<Refit, String> {
+    let mut acc = FitAccumulator::new();
+    let mut params = Vec::with_capacity(state.reps.len());
+    let mut means = Vec::with_capacity(state.reps.len());
+    for (&(m, r), reps) in &state.reps {
+        let times: Vec<f64> = reps.values().copied().collect();
+        let mean = crate::util::stats::mean(&times);
+        let row = [m as f64, r as f64];
+        acc.add_row(&row, mean, 1.0);
+        params.push(row);
+        means.push(mean);
+    }
+    let coeffs = acc.solve()?;
+    let mut sq = 0.0;
+    for (p, &t) in params.iter().zip(&means) {
+        let e = evaluate(&coeffs, p) - t;
+        sq += e * e;
+    }
+    let fit_rmse = (sq / means.len() as f64).sqrt();
+    Ok(Refit {
+        app,
+        model: RegressionModel {
+            app_name: app.name().to_string(),
+            coeffs,
+            trained_on: means.len(),
+        },
+        fit_rmse,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::regression::RustSolverBackend;
+    use crate::profiler::{CampaignExecutor, Dataset, ExperimentSpec};
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_trainer_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Settings spanning enough of the grid to identify the cubic.
+    fn settings(app: AppId) -> Vec<ExperimentSpec> {
+        let mut out = Vec::new();
+        for m in [5u32, 12, 19, 26, 33, 40] {
+            for r in [5u32, 22, 40] {
+                out.push(ExperimentSpec::new(app, m, r));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn poll_fits_store_contents_and_tracks_generation() {
+        let dir = tmp_dir("poll");
+        let cluster = Cluster::paper_cluster();
+        {
+            let exec = CampaignExecutor::new(2)
+                .with_store(ProfileStore::open(&dir).unwrap());
+            exec.run_specs(&cluster, &settings(AppId::WordCount), 2, 11);
+        }
+        let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+        let report = trainer.poll().unwrap();
+        assert_eq!(report.new_records, 36, "18 settings x 2 reps");
+        assert_eq!(report.refits.len(), 1);
+        let refit = &report.refits[0];
+        assert_eq!(refit.app, AppId::WordCount);
+        assert_eq!(refit.model.trained_on, 18);
+        assert!(refit.fit_rmse.is_finite());
+        // Nothing new: the next poll is a no-op.
+        let again = trainer.poll().unwrap();
+        assert_eq!(again.new_records, 0);
+        assert!(again.refits.is_empty());
+        drop(trainer);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refit_matches_from_scratch_fit_dataset_exactly() {
+        let dir = tmp_dir("exact");
+        let cluster = Cluster::paper_cluster();
+        let specs = settings(AppId::Grep);
+        let results = {
+            let exec = CampaignExecutor::new(2)
+                .with_store(ProfileStore::open(&dir).unwrap());
+            exec.run_specs(&cluster, &specs, 3, 7)
+        };
+        // From-scratch fit over the same reps: per-setting mean rows in
+        // sorted (M, R) order — exactly the trainer's construction.
+        let mut rows: Vec<(ExperimentSpec, f64)> = results
+            .iter()
+            .map(|r| (r.spec, r.mean_time_s))
+            .collect();
+        rows.sort_by_key(|(s, _)| (s.num_mappers, s.num_reducers));
+        let mut ds = Dataset {
+            app_name: "grep".into(),
+            params: Vec::new(),
+            times: Vec::new(),
+        };
+        for (spec, mean) in &rows {
+            ds.push(spec, *mean);
+        }
+        let scratch =
+            RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).unwrap();
+
+        let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+        let report = trainer.poll().unwrap();
+        let refit = &report.refits[0];
+        for i in 0..NUM_FEATURES {
+            assert!(
+                (refit.model.coeffs[i] - scratch.coeffs[i]).abs() < 1e-9,
+                "coeff {i}: {} vs {}",
+                refit.model.coeffs[i],
+                scratch.coeffs[i]
+            );
+        }
+        drop(trainer);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn too_few_settings_do_not_publish_a_model() {
+        let dir = tmp_dir("thin");
+        let cluster = Cluster::paper_cluster();
+        {
+            let exec = CampaignExecutor::serial()
+                .with_store(ProfileStore::open(&dir).unwrap());
+            // Three settings < NUM_FEATURES: not identifiable.
+            let specs: Vec<ExperimentSpec> = settings(AppId::WordCount)
+                .into_iter()
+                .take(3)
+                .collect();
+            exec.run_specs(&cluster, &specs, 2, 11);
+        }
+        let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+        let report = trainer.poll().unwrap();
+        assert_eq!(report.new_records, 6);
+        assert!(report.refits.is_empty(), "below min_settings");
+        drop(trainer);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn records_from_other_clusters_are_ignored() {
+        let dir = tmp_dir("cluster");
+        let cluster = Cluster::paper_cluster();
+        let mut other = Cluster::paper_cluster();
+        for n in &mut other.nodes {
+            n.spec.map_slots += 2;
+        }
+        {
+            let exec = CampaignExecutor::serial()
+                .with_store(ProfileStore::open(&dir).unwrap());
+            exec.run_specs(&other, &settings(AppId::WordCount), 1, 11);
+        }
+        let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+        let report = trainer.poll().unwrap();
+        assert_eq!(report.new_records, 18, "seen in the journal");
+        assert!(report.refits.is_empty(), "but trained on none of them");
+        drop(trainer);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -17,8 +17,9 @@
 //! * [`model`] — feature expansion + pure-Rust least squares (baseline);
 //! * [`runtime`] — PJRT execution of the JAX+Pallas AOT fit/predict
 //!   artifacts (the production path: Python never runs at request time);
-//! * [`coordinator`] — a prediction service with dynamic request batching
-//!   and a predicted-time-aware job scheduler;
+//! * [`coordinator`] — a prediction service with dynamic request batching,
+//!   an online trainer that tails the profile store and hot-swaps
+//!   versioned model refits, and a predicted-time-aware job scheduler;
 //! * [`report`] — regeneration of every figure/table in the paper's
 //!   evaluation (Fig. 3, Fig. 4, Table 1).
 //!

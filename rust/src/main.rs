@@ -14,10 +14,13 @@
 //!   store     inspect/compact/clear a persistent profile store
 
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
-use mrtuner::coordinator::{ModelRegistry, PredictionService, Server, ServiceConfig};
+use mrtuner::coordinator::{
+    ModelRegistry, PredictionService, Server, ServiceConfig, Trainer,
+};
 use mrtuner::model::ndpoly::NdPolyModel;
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig};
@@ -126,7 +129,11 @@ fn print_help() {
            ext4     --app A [--train N] [--test N] [--reps N] [--seed N]\n\
                     [--csv FILE] [--jobs N]              4-parameter sweep:\n\
                     T and CPU-seconds vs (M, R, input GB, block MB)\n\
-           serve    [--addr HOST:PORT] [--jobs N]        TCP prediction service\n\
+           serve    [--addr HOST:PORT] [--jobs N] [--retrain-every SECS]\n\
+                    TCP prediction service; with --store it also runs the\n\
+                    online trainer (protocol op `retrain`, plus a periodic\n\
+                    refit every SECS seconds) so newly profiled apps are\n\
+                    served without restart\n\
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
            store    <stats|compact|clear> --store PATH   persistent profile store\n\n\
          --jobs N sets the profiling worker count (default: all cores);\n\
@@ -547,10 +554,22 @@ fn cmd_e2e(args: &Args) -> Result<(), String> {
 fn cmd_serve(args: &Args) -> Result<(), String> {
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let seed = args.u64_or("seed", 42)?;
+    let retrain_every = args.u64_or("retrain-every", 0)?;
+    let store_dir = store_path_from(args);
     let executor = executor_from(args)?;
     args.reject_unknown()?;
-    // Fit models for all apps up front (profiling on the simulated cluster,
-    // fanned out over the campaign executor).
+    if retrain_every > 0 && store_dir.is_none() {
+        return Err(
+            "--retrain-every requires a profile store (--store PATH or \
+             MRTUNER_STORE)"
+                .into(),
+        );
+    }
+    // Profile all apps up front (on the simulated cluster, fanned out
+    // over the campaign executor).  Without a store the models are fit
+    // and installed here; with one, the reps land in the store and the
+    // trainer's initial sync below does the (one and only) startup fit
+    // per app — fitting here too would publish every model twice.
     let cluster = Cluster::paper_cluster();
     let mut registry = ModelRegistry::new();
     {
@@ -558,21 +577,75 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         for app in AppId::all() {
             let (train, _) = paper_campaign(app, seed);
             let (_, ds) = train.run_with(&cluster, &executor);
-            let model = RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
-            eprintln!("fitted {} ({} rows) via {name}", app.name(), ds.len());
-            registry.insert(model);
+            if store_dir.is_some() {
+                eprintln!("profiled {} ({} rows)", app.name(), ds.len());
+            } else {
+                let model =
+                    RegressionModel::fit_dataset(backend.as_mut(), &ds)?;
+                eprintln!(
+                    "fitted {} ({} rows) via {name}",
+                    app.name(),
+                    ds.len()
+                );
+                registry.insert(model);
+            }
         }
     }
     report_executor(&executor);
-    let service = std::sync::Arc::new(PredictionService::start(
+    let service = Arc::new(PredictionService::start(
         || experiments::default_backend().0,
         registry,
         ServiceConfig::default(),
     ));
-    let server = Server::start(&addr, service).map_err(|e| e.to_string())?;
+    // With a store configured, wire the online trainer: `retrain` over
+    // the protocol (and the periodic thread below) tails the store and
+    // hot-swaps refit models — newly profiled apps become predictable
+    // without restarting the server.
+    let trainer = match &store_dir {
+        Some(dir) => {
+            let mut t = Trainer::open(Path::new(dir), &cluster)?;
+            // Sync to everything already profiled (including the startup
+            // campaigns above, flushed through the executor's store).
+            let summary = t.retrain(&service).map_err(|e| {
+                format!("initial retrain from {dir} failed: {e}")
+            })?;
+            eprintln!(
+                "trainer: synced {} store record(s); {} model(s) published",
+                summary.new_records,
+                summary.published.len()
+            );
+            Some(Arc::new(Mutex::new(t)))
+        }
+        None => None,
+    };
+    if retrain_every > 0 {
+        let trainer = Arc::clone(trainer.as_ref().expect("checked above"));
+        let service = Arc::clone(&service);
+        std::thread::spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(retrain_every));
+            let mut t = match trainer.lock() {
+                Ok(guard) => guard,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            match t.retrain(&service) {
+                Ok(summary) => {
+                    for (app, version) in &summary.published {
+                        eprintln!(
+                            "trainer: hot-swapped {} -> v{version}",
+                            app.name()
+                        );
+                    }
+                }
+                Err(e) => eprintln!("trainer: periodic retrain failed: {e}"),
+            }
+        });
+    }
+    let server = Server::start_with(&addr, service, trainer)
+        .map_err(|e| e.to_string())?;
     println!("prediction service listening on {}", server.addr);
     println!("protocol: one JSON object per line, e.g.");
     println!("  {{\"op\":\"predict\",\"app\":\"wordcount\",\"mappers\":20,\"reducers\":5}}");
+    println!("  ops: predict | models | model_info | retrain | health");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -12,7 +12,7 @@
 use crate::profiler::Dataset;
 use crate::util::json::{parse, Json};
 
-use super::features::{evaluate, NUM_FEATURES};
+use super::features::{evaluate, expand_row, NUM_FEATURES};
 use super::solver;
 
 /// A fitting backend: raw (M, R) rows + times + weights -> coefficients.
@@ -55,6 +55,98 @@ impl FitBackend for RustSolverBackend {
 
     fn name(&self) -> &'static str {
         "rust-cholesky"
+    }
+}
+
+/// Incremental normal-equations accumulator for the paper's Eqn. 6 fit.
+///
+/// Folding one sample is a rank-1 update of the Gram system — O(p²) in
+/// the feature count — so a refit after new profiling data costs
+/// O(rows · p²) *without re-reading any prior sample*: callers retain
+/// only this accumulator (and whatever per-row bookkeeping they need),
+/// not the dataset.  This is what lets the online trainer
+/// ([`crate::coordinator::trainer`]) keep models fresh as the profile
+/// store grows, per the companion CPU-prediction work (arXiv:1203.4054).
+///
+/// **Exactness contract:** adding rows one at a time performs the same
+/// floating-point operations, in the same order, as the batch assembly
+/// in [`solver::gram_system`], and [`FitAccumulator::solve`] runs the
+/// same ridge policy as [`solver::fit`] — so an incremental fit is
+/// *bit-identical* to a from-scratch fit over the same rows in the same
+/// order, not an approximation.
+#[derive(Clone, Debug)]
+pub struct FitAccumulator {
+    /// Upper triangle of G = XᵀWX (mirrored at solve time).
+    g: [[f64; NUM_FEATURES]; NUM_FEATURES],
+    /// b = Xᵀ(w∘t).
+    b: [f64; NUM_FEATURES],
+    rows: usize,
+}
+
+impl Default for FitAccumulator {
+    fn default() -> Self {
+        FitAccumulator::new()
+    }
+}
+
+impl FitAccumulator {
+    /// Empty accumulator (fitting it is an error until a row is added).
+    pub fn new() -> FitAccumulator {
+        FitAccumulator {
+            g: [[0.0; NUM_FEATURES]; NUM_FEATURES],
+            b: [0.0; NUM_FEATURES],
+            rows: 0,
+        }
+    }
+
+    /// Fold one observation — a raw `(M, R)` row, its observed time and
+    /// its weight — into the system.  O(p²), independent of how many
+    /// rows came before.
+    pub fn add_row(&mut self, params: &[f64; 2], time_s: f64, weight: f64) {
+        let row = expand_row(params);
+        for i in 0..NUM_FEATURES {
+            let wxi = weight * row[i];
+            self.b[i] += wxi * time_s;
+            for j in i..NUM_FEATURES {
+                self.g[i][j] += wxi * row[j];
+            }
+        }
+        self.rows += 1;
+    }
+
+    /// Rows folded in so far.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Fold another accumulator's system into this one (Gram systems are
+    /// additive, so shards built independently can be combined).
+    pub fn merge(&mut self, other: &FitAccumulator) {
+        for i in 0..NUM_FEATURES {
+            self.b[i] += other.b[i];
+            for j in i..NUM_FEATURES {
+                self.g[i][j] += other.g[i][j];
+            }
+        }
+        self.rows += other.rows;
+    }
+
+    /// Solve the accumulated system with the production ridge policy —
+    /// the same code path as [`solver::fit`], so the coefficients match
+    /// a batch fit of the same rows bit-for-bit.
+    pub fn solve(&self) -> Result<[f64; NUM_FEATURES], String> {
+        if self.rows == 0 {
+            return Err("empty accumulator".into());
+        }
+        // Mirror the upper triangle exactly as `gram_system` does before
+        // handing the full matrix to the shared solver.
+        let mut g = self.g;
+        for i in 0..NUM_FEATURES {
+            for j in 0..i {
+                g[i][j] = g[j][i];
+            }
+        }
+        solver::solve_gram(g, self.b)
     }
 }
 
@@ -200,5 +292,80 @@ mod tests {
     fn json_rejects_wrong_coeff_count() {
         let j = parse(r#"{"app":"x","coeffs":[1,2,3],"trained_on":5}"#).unwrap();
         assert!(RegressionModel::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn accumulator_is_bit_identical_to_batch_fit() {
+        let ds = dataset();
+        let weights = vec![1.0; ds.len()];
+        let batch =
+            solver::fit(&ds.params, &ds.times, &weights).unwrap();
+        let mut acc = FitAccumulator::new();
+        for (p, &t) in ds.params.iter().zip(&ds.times) {
+            acc.add_row(p, t, 1.0);
+        }
+        assert_eq!(acc.rows(), ds.len());
+        let incremental = acc.solve().unwrap();
+        for i in 0..NUM_FEATURES {
+            assert_eq!(
+                incremental[i].to_bits(),
+                batch[i].to_bits(),
+                "coeff {i} must be bit-identical, not approximate"
+            );
+        }
+    }
+
+    #[test]
+    fn accumulator_matches_fit_dataset_coefficients() {
+        let ds = dataset();
+        let model =
+            RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).unwrap();
+        let mut acc = FitAccumulator::new();
+        for (p, &t) in ds.params.iter().zip(&ds.times) {
+            acc.add_row(p, t, 1.0);
+        }
+        let coeffs = acc.solve().unwrap();
+        for i in 0..NUM_FEATURES {
+            assert_eq!(coeffs[i].to_bits(), model.coeffs[i].to_bits());
+        }
+    }
+
+    #[test]
+    fn merged_shards_solve_like_one_stream() {
+        let ds = dataset();
+        let mut whole = FitAccumulator::new();
+        let mut left = FitAccumulator::new();
+        let mut right = FitAccumulator::new();
+        let half = ds.len() / 2;
+        for (i, (p, &t)) in ds.params.iter().zip(&ds.times).enumerate() {
+            whole.add_row(p, t, 1.0);
+            if i < half {
+                left.add_row(p, t, 1.0);
+            } else {
+                right.add_row(p, t, 1.0);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left.rows(), whole.rows());
+        let a = left.solve().unwrap();
+        let b = whole.solve().unwrap();
+        for i in 0..NUM_FEATURES {
+            // Merging reorders the additions, so equality is numerical
+            // (same scale-aware tolerance as the solver's reorder tests)
+            // rather than bitwise here.
+            let scale = a[i].abs().max(1.0);
+            assert!(
+                (a[i] - b[i]).abs() / scale < 1e-7,
+                "coeff {i}: {} vs {}",
+                a[i],
+                b[i]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_accumulator_is_error() {
+        assert!(FitAccumulator::new().solve().is_err());
+        assert_eq!(FitAccumulator::default().rows(), 0);
     }
 }

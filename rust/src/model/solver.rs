@@ -95,7 +95,19 @@ pub fn fit(
     weights: &[f64],
 ) -> Result<[f64; NUM_FEATURES], String> {
     let x = expand_rows(params);
-    let (mut g, b) = gram_system(&x, weights, times);
+    let (g, b) = gram_system(&x, weights, times);
+    solve_gram(g, b)
+}
+
+/// Solve an assembled normal-equation system with the production ridge
+/// policy (relative ridge, escalated on Cholesky failure) — the shared
+/// back half of [`fit`] and the incremental
+/// [`crate::model::regression::FitAccumulator`] path, so batch and
+/// incremental fits of the same Gram are bit-identical by construction.
+pub fn solve_gram(
+    mut g: [[f64; NUM_FEATURES]; NUM_FEATURES],
+    b: [f64; NUM_FEATURES],
+) -> Result<[f64; NUM_FEATURES], String> {
     let trace: f64 = (0..NUM_FEATURES).map(|i| g[i][i]).sum();
     if trace <= 0.0 {
         return Err("all-zero system (no live rows?)".into());

@@ -55,7 +55,11 @@ use super::store::{ProfileStore, StoreKey};
 /// unstable across Rust releases, and a toolchain upgrade must not
 /// silently orphan every stored rep.  Changing this recipe requires
 /// bumping [`super::store::STORE_FORMAT_VERSION`].
-fn cluster_fingerprint(cluster: &Cluster) -> u64 {
+///
+/// Public because every consumer of raw [`StoreKey`]s (the online
+/// trainer, store-inspection tools) must derive the *same* fingerprint
+/// the executor keyed its records under.
+pub fn cluster_fingerprint(cluster: &Cluster) -> u64 {
     fn mix(h: u64, v: u64) -> u64 {
         let x = h ^ v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
         x.rotate_left(23).wrapping_mul(0x94D0_49BB_1331_11EB)

@@ -20,7 +20,9 @@ pub mod store;
 
 pub use campaign::{paper_campaign, Campaign};
 pub use dataset::Dataset;
-pub use executor::{CampaignExecutor, ExecutorStats, RepJob, RepSpec};
+pub use executor::{
+    cluster_fingerprint, CampaignExecutor, ExecutorStats, RepJob, RepSpec,
+};
 pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
 pub use extended::{run_ext4, run_ext4_campaign, Ext4Result, Ext4Spec};
 pub use store::{ProfileStore, StoreKey, StoreStats, STORE_FORMAT_VERSION};

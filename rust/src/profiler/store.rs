@@ -95,7 +95,7 @@ static SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
 /// persistent.  The cluster fingerprint keeps times from one hardware
 /// model from ever answering for another; `base_seed` keys the profiling
 /// session so distinct sessions never alias.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct StoreKey {
     /// Fingerprint of every simulation-relevant cluster field.
     pub cluster: u64,
@@ -303,6 +303,17 @@ struct Inner {
     /// Key → stored per-rep outcome (held as the very `f64`s that were
     /// decoded/produced, so every bit round-trips by construction).
     entries: HashMap<StoreKey, RepOutcome>,
+    /// Key of every record this store instance has accepted, in
+    /// acceptance order: the on-disk records found at open (sorted, so
+    /// the order is deterministic), then every `put`/`refresh`
+    /// insertion.  `journal.len()` is the store's **generation**;
+    /// consumers tail the store by remembering the generation they last
+    /// read ([`ProfileStore::read_since`]).  Keys only — the outcome
+    /// always lives in `entries` (which never shrinks), so the journal
+    /// does not double the store's resident memory.  An upgraded record
+    /// (CPU figure added) appears twice; both occurrences resolve to
+    /// the live (upgraded) outcome.
+    journal: Vec<StoreKey>,
     /// Encoded lines not yet appended to this session's segment.
     dirty: Vec<String>,
     /// Lazily created on first flush, so read-only sessions leave no file.
@@ -320,6 +331,13 @@ pub struct ProfileStore {
     dir: PathBuf,
     inner: Mutex<Inner>,
     stats: StoreStats,
+    /// Per-file refresh bookkeeping: store file name → length as of the
+    /// last successful ingest of that file.  [`ProfileStore::refresh`]
+    /// re-parses only files whose length changed (segments are
+    /// append-only; the index is replaced wholesale by compaction), so
+    /// an idle poll is a directory stat and a steady-state poll costs
+    /// the changed files, not the whole store.
+    refresh_state: Mutex<HashMap<String, u64>>,
 }
 
 impl ProfileStore {
@@ -376,14 +394,20 @@ impl ProfileStore {
         drop(guard);
 
         stats.entries = scan.entries.len();
+        // Seed the journal with everything already on disk, sorted by key
+        // so the initial generation's contents are deterministic.
+        let mut journal: Vec<StoreKey> = scan.entries.keys().copied().collect();
+        journal.sort();
         Ok(ProfileStore {
             dir: dir.to_path_buf(),
             inner: Mutex::new(Inner {
                 entries: scan.entries,
+                journal,
                 dirty: Vec::new(),
                 writer: None,
             }),
             stats,
+            refresh_state: Mutex::new(HashMap::new()),
         })
     }
 
@@ -417,9 +441,131 @@ impl ProfileStore {
             Some(old) if old.cpu_s.is_some() && outcome.cpu_s.is_none() => {}
             _ => {
                 inner.entries.insert(key, outcome);
+                inner.journal.push(key);
                 inner.dirty.push(encode_record(&key, &outcome));
             }
         }
+    }
+
+    /// Monotonic change counter: how many records this store instance has
+    /// accepted so far (disk records found at open plus every later
+    /// insertion).  A consumer that remembers the generation it last saw
+    /// reads exactly the new records via [`ProfileStore::read_since`] —
+    /// the change-detection contract the online trainer tails.
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().expect("store mutex poisoned").journal.len() as u64
+    }
+
+    /// Every record accepted after `generation`, plus the generation that
+    /// snapshot corresponds to (pass it back next time).  `read_since(0)`
+    /// returns the whole store in deterministic order.  The stream is an
+    /// upsert log: a key may repeat when its record was upgraded in place
+    /// (CPU figure added) — every occurrence carries the live record, so
+    /// later entries are consistent with earlier ones.
+    pub fn read_since(
+        &self,
+        generation: u64,
+    ) -> (Vec<(StoreKey, RepOutcome)>, u64) {
+        let inner = self.inner.lock().expect("store mutex poisoned");
+        let from = (generation as usize).min(inner.journal.len());
+        let records = inner.journal[from..]
+            .iter()
+            .map(|k| {
+                let outcome = inner
+                    .entries
+                    .get(k)
+                    .copied()
+                    .expect("journaled key always resident");
+                (*k, outcome)
+            })
+            .collect();
+        (records, inner.journal.len() as u64)
+    }
+
+    /// Re-scan the store directory and fold in records written by *other*
+    /// sessions since this store was opened (their flushed segment lines
+    /// and any index rewritten by their compactions).  Returns how many
+    /// records were new.  Records this instance already holds are left
+    /// untouched — in particular a full outcome is never displaced by a
+    /// CPU-less duplicate, and by the determinism invariant equal keys
+    /// carry equal values, so keeping the resident record is always
+    /// sound.  This is the polling half of the trainer's
+    /// profile-store-to-model loop.
+    ///
+    /// Polls are incremental: store files are fingerprinted by
+    /// `(name, length)`, and only *changed* files are re-parsed — an
+    /// idle poll is a directory stat, a steady-state poll re-reads just
+    /// the growing segment(s), and the (large) index is re-read only
+    /// when a compaction replaced it.  Lengths are recorded only after
+    /// a file was successfully ingested, so a transient read failure
+    /// can never suppress future re-scans; a torn tail line (racing a
+    /// writer's flush) is skipped now and re-parsed when the file next
+    /// grows, because any completed write changes the length observed
+    /// *before* this read started.
+    pub fn refresh(&self) -> Result<u64, String> {
+        let fingerprint = dir_fingerprint(&self.dir)?;
+        let changed: Vec<(String, u64)> = {
+            let state =
+                self.refresh_state.lock().expect("store refresh-state poisoned");
+            fingerprint
+                .iter()
+                .filter(|(name, len)| state.get(name) != Some(len))
+                .cloned()
+                .collect()
+        };
+        if changed.is_empty() {
+            return Ok(0);
+        }
+        // Re-parse only the changed files, tolerating (and logging)
+        // corruption exactly like the open pass.
+        let mut parsed: HashMap<StoreKey, RepOutcome> = HashMap::new();
+        let mut stats = StoreStats::default();
+        let mut ingested: Vec<(String, u64)> = Vec::new();
+        for (name, len) in changed {
+            let path = self.dir.join(&name);
+            match fs::read_to_string(&path) {
+                Ok(text) => {
+                    load_lines(&path, &text, &mut parsed, &mut stats);
+                    ingested.push((name, len));
+                }
+                // Deleted mid-refresh (racing compaction): its records
+                // are in the rewritten index, whose length changed too.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => eprintln!(
+                    "store: refresh skipping unreadable {}: {e}",
+                    path.display()
+                ),
+            }
+        }
+        let mut inner = self.inner.lock().expect("store mutex poisoned");
+        let mut fresh: Vec<(StoreKey, RepOutcome)> = parsed
+            .into_iter()
+            .filter(|(k, o)| match inner.entries.get(k) {
+                None => true,
+                Some(old) => old.cpu_s.is_none() && o.cpu_s.is_some(),
+            })
+            .collect();
+        // Sort so concurrent writers' records land in the journal in a
+        // deterministic order whatever the directory scan produced.
+        fresh.sort_by(|a, b| a.0.cmp(&b.0));
+        let new_records = fresh.len() as u64;
+        for (key, outcome) in fresh {
+            inner.entries.insert(key, outcome);
+            inner.journal.push(key);
+        }
+        drop(inner);
+        let mut state =
+            self.refresh_state.lock().expect("store refresh-state poisoned");
+        // Forget files compaction removed, so the map stays bounded by
+        // the live file set ...
+        state.retain(|name, _| fingerprint.iter().any(|(n, _)| n == name));
+        // ... and record the pre-read lengths of what was ingested (a
+        // write landing mid-read makes the next poll re-read that file —
+        // the safe direction).
+        for (name, len) in ingested {
+            state.insert(name, len);
+        }
+        Ok(new_records)
     }
 
     /// Distinct records currently held (disk + this session's new ones).
@@ -610,6 +756,33 @@ fn pid_alive(pid: u32) -> bool {
 #[cfg(not(target_os = "linux"))]
 fn pid_alive(_pid: u32) -> bool {
     true
+}
+
+/// `(name, length)` of every store file (index + segments) under `dir`,
+/// sorted by name — the cheap change detector behind
+/// [`ProfileStore::refresh`].  Segments are append-only and compaction
+/// replaces whole files, so any new record changes some file's length
+/// (or the file set).
+fn dir_fingerprint(dir: &Path) -> Result<Vec<(String, u64)>, String> {
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("store: read {}: {e}", dir.display()))?;
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let ours = name == INDEX_FILE
+            || (name.starts_with(SEGMENT_PREFIX)
+                && name.ends_with(SEGMENT_SUFFIX));
+        if !ours {
+            continue;
+        }
+        // A file deleted mid-scan (racing compaction) counts as length 0;
+        // the next pass sees the final state.
+        let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+        out.push((name, len));
+    }
+    out.sort();
+    Ok(out)
 }
 
 /// All segment files under `dir`, sorted by name.
@@ -968,5 +1141,89 @@ mod tests {
     fn clear_of_missing_dir_is_empty() {
         let dir = tmp_dir("missing");
         assert_eq!(ProfileStore::clear(&dir).unwrap(), 0);
+    }
+
+    #[test]
+    fn generation_counts_disk_and_live_insertions() {
+        let dir = tmp_dir("generation");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            assert_eq!(store.generation(), 0);
+            store.put(key(20, 5, 0, 1), RepOutcome::full(100.0, 1.0));
+            store.put(key(20, 5, 1, 1), RepOutcome::full(101.0, 2.0));
+            assert_eq!(store.generation(), 2);
+            // Re-putting a known value does not advance the generation.
+            store.put(key(20, 5, 0, 1), RepOutcome::full(100.0, 1.0));
+            assert_eq!(store.generation(), 2);
+            store.flush().unwrap();
+        }
+        // A fresh open seeds the journal with everything on disk.
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.generation(), 2);
+        let (all, generation) = store.read_since(0);
+        assert_eq!(generation, 2);
+        assert_eq!(all.len(), 2);
+        // Sorted by key: rep 0 before rep 1.
+        assert_eq!(all[0].0.rep, 0);
+        assert_eq!(all[1].0.rep, 1);
+        // Tail from the snapshot: nothing new yet.
+        let (fresh, g2) = store.read_since(generation);
+        assert!(fresh.is_empty());
+        assert_eq!(g2, generation);
+        store.put(key(30, 5, 0, 1), RepOutcome::full(200.0, 3.0));
+        let (fresh, g3) = store.read_since(generation);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].0.num_mappers, 30);
+        assert_eq!(g3, 3);
+        // A generation past the end is clamped, not a panic.
+        assert!(store.read_since(u64::MAX).0.is_empty());
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refresh_picks_up_other_sessions_records() {
+        let dir = tmp_dir("refresh");
+        let reader = ProfileStore::open(&dir).unwrap();
+        let before = reader.generation();
+        // A concurrent writer session appends and flushes two records.
+        {
+            let writer = ProfileStore::open(&dir).unwrap();
+            writer.put(key(10, 10, 0, 5), RepOutcome::full(50.0, 5.0));
+            writer.put(key(10, 10, 1, 5), RepOutcome::full(51.0, 6.0));
+            writer.flush().unwrap();
+        }
+        // Invisible until refresh ...
+        assert!(reader.get(&key(10, 10, 0, 5)).is_none());
+        assert_eq!(reader.refresh().unwrap(), 2);
+        assert_eq!(
+            reader.get(&key(10, 10, 0, 5)),
+            Some(RepOutcome::full(50.0, 5.0))
+        );
+        let (fresh, _) = reader.read_since(before);
+        assert_eq!(fresh.len(), 2);
+        // ... and refreshing again finds nothing new.
+        assert_eq!(reader.refresh().unwrap(), 0);
+        drop(reader);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refresh_never_downgrades_a_full_outcome() {
+        let dir = tmp_dir("refresh_downgrade");
+        let reader = ProfileStore::open(&dir).unwrap();
+        let k = key(15, 15, 0, 9);
+        reader.put(k, RepOutcome::full(70.0, 7.0));
+        // Another session leaves a CPU-less duplicate on disk (v1 debris).
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("seg-beef0000-0000-dup.jsonl"),
+            format!("{}\n", encode_record(&k, &RepOutcome::time_only(70.0))),
+        )
+        .unwrap();
+        assert_eq!(reader.refresh().unwrap(), 0, "downgrade not folded");
+        assert_eq!(reader.get(&k), Some(RepOutcome::full(70.0, 7.0)));
+        drop(reader);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

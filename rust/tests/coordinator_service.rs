@@ -77,9 +77,15 @@ fn tcp_round_trip() {
     assert!(batches >= 1);
     assert!(mean_batch >= 1.0);
 
-    // Unknown app comes back as a protocol-level error, not a hang.
+    // Unknown app comes back as a *typed* protocol-level error, not a
+    // hang (and not a transport or parse failure).
     let err = client.predict("nope", 1, 1).unwrap_err();
-    assert!(err.contains("no model"), "{err}");
+    match &err {
+        mrtuner::coordinator::client::ClientError::Server(msg) => {
+            assert!(msg.contains("no model"), "{msg}")
+        }
+        other => panic!("expected Server error, got {other:?}"),
+    }
 
     server.shutdown();
 }
@@ -146,10 +152,84 @@ fn malformed_requests_get_errors_not_disconnects() {
 #[test]
 fn hot_model_swap_visible_to_inflight_clients() {
     let svc = start_service();
-    let before = svc.predict("wordcount", 20, 5).unwrap();
+    let before = svc.predict_versioned("wordcount", 20, 5).unwrap();
+    assert_eq!(before.version, 1);
     let mut replacement = test_model("wordcount");
     replacement.coeffs[0] += 100.0;
-    svc.install_model(replacement);
-    let after = svc.predict("wordcount", 20, 5).unwrap();
-    assert!((after - before - 100.0).abs() < 1e-9);
+    let v = svc.publish_model(replacement, 0.5);
+    assert_eq!(v, 2);
+    let after = svc.predict_versioned("wordcount", 20, 5).unwrap();
+    assert_eq!(after.version, 2);
+    assert!((after.seconds - before.seconds - 100.0).abs() < 1e-9);
+}
+
+/// The hot-swap concurrency contract: N threads hammer `predict` while
+/// the main thread publishes a stream of refits.  No request may error,
+/// every answer must be self-consistent with *some* published version,
+/// and the versions each thread observes must be monotonic.
+#[test]
+fn hot_swap_under_concurrent_predict_load() {
+    let svc = start_service();
+    let swaps = 30u64;
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut handles = Vec::new();
+    for t in 0..6u32 {
+        let svc = Arc::clone(&svc);
+        let stop = Arc::clone(&stop);
+        handles.push(std::thread::spawn(move || {
+            let mut last_version = 0u64;
+            let mut served = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let m = 5 + ((served as u32 + t) % 36);
+                let p = svc
+                    .predict_versioned("wordcount", m, 5)
+                    .expect("predict must never fail during a hot swap");
+                assert!(
+                    p.version >= last_version,
+                    "served versions must be monotonic: {} then {}",
+                    last_version,
+                    p.version
+                );
+                // Version k serves coefficients with intercept shifted by
+                // (k - 1) * 10: the answer must match its own version,
+                // whichever side of a swap the batch landed on.
+                let mut coeffs = test_model("wordcount").coeffs;
+                coeffs[0] += (p.version - 1) as f64 * 10.0;
+                let want = evaluate(&coeffs, &[m as f64, 5.0]);
+                assert!(
+                    (p.seconds - want).abs() < 1e-9,
+                    "answer inconsistent with its version {}",
+                    p.version
+                );
+                last_version = p.version;
+                served += 1;
+            }
+            (served, last_version)
+        }));
+    }
+    // Publish refits mid-flight, each shifting the intercept by +10.
+    for k in 2..=swaps {
+        let mut refit = test_model("wordcount");
+        refit.coeffs[0] += (k - 1) as f64 * 10.0;
+        let v = svc.publish_model(refit, 0.1);
+        assert_eq!(v, k, "publisher is the only writer");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    stop.store(true, Ordering::Relaxed);
+    let mut total = 0;
+    for h in handles {
+        let (served, last) = h.join().unwrap();
+        assert!(served > 0);
+        assert!(last <= swaps);
+        total += served;
+    }
+    assert_eq!(
+        svc.metrics.backend_errors.load(Ordering::Relaxed),
+        0,
+        "no request errored across {total} predictions and {swaps} swaps"
+    );
+    assert_eq!(svc.metrics.rejected.load(Ordering::Relaxed), 0);
+    // At least one worker must have observed a post-swap version.
+    let final_info = svc.model_info("wordcount").unwrap();
+    assert_eq!(final_info.version, swaps);
 }

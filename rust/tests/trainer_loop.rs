@@ -1,0 +1,226 @@
+//! End-to-end acceptance for the profile → model loop: a server started
+//! against a warm store serves `predict`; a later profiling campaign
+//! appends reps for a *new* application to the same store; after
+//! `retrain` the server answers `predict` for the new app **without
+//! restart**, with refit coefficients matching a from-scratch
+//! `RegressionModel::fit_dataset` over the same reps to within 1e-9.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use mrtuner::apps::AppId;
+use mrtuner::cluster::Cluster;
+use mrtuner::coordinator::client::{Client, ClientError};
+use mrtuner::coordinator::{
+    ModelRegistry, PredictionService, Server, ServiceConfig, Trainer,
+};
+use mrtuner::model::features::NUM_FEATURES;
+use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
+use mrtuner::profiler::{
+    CampaignExecutor, Dataset, ExperimentResult, ExperimentSpec, ProfileStore,
+};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mrtuner_trainer_loop_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small grid that still identifies the 7-coefficient cubic.
+fn settings(app: AppId) -> Vec<ExperimentSpec> {
+    let mut out = Vec::new();
+    for m in [5u32, 12, 19, 26, 33, 40] {
+        for r in [5u32, 22, 40] {
+            out.push(ExperimentSpec::new(app, m, r));
+        }
+    }
+    out
+}
+
+/// Profile `app` into the store at `dir` with its own executor instance
+/// (a separate "profiling campaign" session), returning the raw results.
+fn run_campaign(
+    dir: &Path,
+    app: AppId,
+    reps: u32,
+    seed: u64,
+) -> Vec<ExperimentResult> {
+    let exec = CampaignExecutor::new(2)
+        .with_store(ProfileStore::open(dir).expect("open store"));
+    let cluster = Cluster::paper_cluster();
+    exec.run_specs(&cluster, &settings(app), reps, seed)
+}
+
+/// From-scratch reference fit over the same reps the trainer saw: one
+/// mean row per setting, rows sorted by `(M, R)` — the trainer's
+/// deterministic construction.
+fn fit_from_scratch(app: AppId, results: &[ExperimentResult]) -> RegressionModel {
+    let mut rows: Vec<(ExperimentSpec, f64)> =
+        results.iter().map(|r| (r.spec, r.mean_time_s)).collect();
+    rows.sort_by_key(|(s, _)| (s.num_mappers, s.num_reducers));
+    let mut ds = Dataset {
+        app_name: app.name().to_string(),
+        params: Vec::new(),
+        times: Vec::new(),
+    };
+    for (spec, mean) in &rows {
+        ds.push(spec, *mean);
+    }
+    RegressionModel::fit_dataset(&mut RustSolverBackend, &ds).expect("fit")
+}
+
+#[test]
+fn profile_retrain_predict_without_restart() {
+    let dir = tmp_dir("e2e");
+    let cluster = Cluster::paper_cluster();
+
+    // ---- 1. A prior session warms the store with a wordcount campaign.
+    let wc_results = run_campaign(&dir, AppId::WordCount, 2, 11);
+
+    // ---- 2. A server starts against the warm store: empty registry, a
+    // trainer synced once at startup (as `serve --store` does).
+    let service = Arc::new(PredictionService::start(
+        || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+        ModelRegistry::new(),
+        ServiceConfig::default(),
+    ));
+    let trainer = {
+        let mut t = Trainer::open(&dir, &cluster).expect("open trainer");
+        let summary = t.retrain(&service).expect("initial retrain");
+        assert_eq!(summary.published, vec![(AppId::WordCount, 1)]);
+        Arc::new(Mutex::new(t))
+    };
+    let server = Server::start_with(
+        "127.0.0.1:0",
+        Arc::clone(&service),
+        Some(Arc::clone(&trainer)),
+    )
+    .unwrap();
+    let addr = server.addr.to_string();
+
+    // The warm-store app serves immediately, version 1 ...
+    let mut client = Client::connect(&addr).unwrap();
+    let p = client.predict_versioned("wordcount", 20, 5).unwrap();
+    assert_eq!(p.version, 1);
+    assert!(p.seconds.is_finite() && p.seconds > 0.0);
+    // ... and the wordcount coefficients already match a from-scratch
+    // fit over the store's reps.
+    let scratch_wc = fit_from_scratch(AppId::WordCount, &wc_results);
+    let info = client.model_info("wordcount").unwrap();
+    for i in 0..NUM_FEATURES {
+        assert!(
+            (info.coeffs[i] - scratch_wc.coeffs[i]).abs() < 1e-9,
+            "wordcount coeff {i}"
+        );
+    }
+    assert_eq!(info.trained_on, 18);
+    assert!(info.fit_rmse.is_some());
+
+    // Grep has never been profiled: a typed protocol error.
+    match client.predict("grep", 20, 5) {
+        Err(ClientError::Server(msg)) => assert!(msg.contains("no model")),
+        other => panic!("expected no-model error, got {other:?}"),
+    }
+
+    // ---- 3. A *subsequent* profiling campaign appends reps for a new
+    // app to the same store (its own executor + store session).
+    let grep_results = run_campaign(&dir, AppId::Grep, 3, 7);
+
+    // Still unknown until a retrain tails the store ...
+    assert!(client.predict("grep", 20, 5).is_err());
+
+    // ---- 4. `retrain` over the wire: the server picks the new app up
+    // without restart.
+    let reply = client.retrain().unwrap();
+    assert_eq!(reply.new_records, 54, "18 settings x 3 reps of grep");
+    assert_eq!(reply.refits, vec![("grep".to_string(), 1)]);
+
+    let p = client.predict_versioned("grep", 20, 5).unwrap();
+    assert_eq!(p.version, 1);
+    assert!(p.seconds.is_finite() && p.seconds > 0.0);
+
+    // ---- 5. The acceptance bound: refit coefficients match the
+    // from-scratch fit over the same reps to within 1e-9.
+    let scratch = fit_from_scratch(AppId::Grep, &grep_results);
+    let info = client.model_info("grep").unwrap();
+    assert_eq!(info.version, 1);
+    assert_eq!(info.trained_on, 18);
+    for i in 0..NUM_FEATURES {
+        assert!(
+            (info.coeffs[i] - scratch.coeffs[i]).abs() < 1e-9,
+            "grep coeff {i}: {} vs {}",
+            info.coeffs[i],
+            scratch.coeffs[i]
+        );
+    }
+    // The served prediction is the refit model's own prediction.
+    assert!((p.seconds - scratch.predict_one(20, 5)).abs() < 1e-9);
+
+    // ---- 6. More wordcount data (a new session) tightens the fit: the
+    // next retrain publishes version 2, trained on more reps, while
+    // untouched apps keep their version.
+    run_campaign(&dir, AppId::WordCount, 2, 99);
+    let reply = client.retrain().unwrap();
+    assert_eq!(reply.refits, vec![("wordcount".to_string(), 2)]);
+    let p2 = client.predict_versioned("wordcount", 20, 5).unwrap();
+    assert_eq!(p2.version, 2, "hot-swapped refit serves immediately");
+    assert_eq!(client.model_info("grep").unwrap().version, 1);
+    // A retrain with nothing new refits nothing.
+    let idle = client.retrain().unwrap();
+    assert_eq!(idle.new_records, 0);
+    assert!(idle.refits.is_empty());
+
+    drop(client);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The same loop through the in-process API, hammered concurrently: the
+/// retrain hot-swap must never error a single in-flight predict.
+#[test]
+fn concurrent_predicts_survive_a_retrain_swap() {
+    let dir = tmp_dir("swap");
+    let cluster = Cluster::paper_cluster();
+    run_campaign(&dir, AppId::WordCount, 2, 11);
+
+    let service = Arc::new(PredictionService::start(
+        || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+        ModelRegistry::new(),
+        ServiceConfig::default(),
+    ));
+    let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+    trainer.retrain(&service).unwrap();
+
+    // New data lands while traffic is in flight.
+    run_campaign(&dir, AppId::WordCount, 2, 42);
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for _ in 0..4 {
+        let service = Arc::clone(&service);
+        let stop = Arc::clone(&stop);
+        workers.push(std::thread::spawn(move || {
+            let mut last = 0u64;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let p = service
+                    .predict_versioned("wordcount", 20, 5)
+                    .expect("no errors mid-swap");
+                assert!(p.version >= last, "monotonic versions");
+                last = p.version;
+            }
+            last
+        }));
+    }
+    let summary = trainer.retrain(&service).unwrap();
+    assert_eq!(summary.published, vec![(AppId::WordCount, 2)]);
+    // Let the workers observe the new version before stopping.
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let finals: Vec<u64> =
+        workers.into_iter().map(|w| w.join().unwrap()).collect();
+    assert!(
+        finals.iter().any(|&v| v == 2),
+        "some worker must see the swapped version: {finals:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
