@@ -89,6 +89,30 @@ pub struct RetrainSummary {
 /// `serve --retrain-every N` drives it from a background thread, and the
 /// server's `retrain` op drives it on demand.  Wrap in a `Mutex` to
 /// share between the two.
+///
+/// The trainer is format-agnostic: `refresh`/`read_since` fold in
+/// whatever other sessions flushed — binary v3 segments and legacy JSONL
+/// alike — and paper-plane reps are *pinned* against the store's
+/// size-capped eviction precisely so a tailing trainer never loses
+/// training data between two polls.
+///
+/// ```
+/// use mrtuner::cluster::Cluster;
+/// use mrtuner::coordinator::Trainer;
+///
+/// let dir = std::env::temp_dir()
+///     .join(format!("mrtuner_doc_trainer_{}", std::process::id()));
+/// let _ = std::fs::remove_dir_all(&dir);
+/// let cluster = Cluster::paper_cluster();
+/// let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+/// // An empty store: nothing to ingest, nothing to refit — the loop is
+/// // driven entirely by what profiling campaigns append later.
+/// let report = trainer.poll().unwrap();
+/// assert_eq!(report.new_records, 0);
+/// assert!(report.refits.is_empty());
+/// # drop(trainer);
+/// # let _ = std::fs::remove_dir_all(&dir);
+/// ```
 pub struct Trainer {
     store: ProfileStore,
     cluster_fp: u64,

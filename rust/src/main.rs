@@ -12,6 +12,7 @@
 //!   serve     start the TCP prediction service
 //!   e2e       full end-to-end validation (same driver as examples/e2e_repro)
 //!   store     inspect/compact/clear a persistent profile store
+//!   bench     store/executor microbenchmarks -> BENCH_*.json
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -23,12 +24,18 @@ use mrtuner::coordinator::{
 };
 use mrtuner::model::ndpoly::NdPolyModel;
 use mrtuner::model::regression::RegressionModel;
-use mrtuner::mr::{run_job, JobConfig};
-use mrtuner::profiler::extended::{random_ext4, scales};
-use mrtuner::profiler::{paper_campaign, CampaignExecutor, Dataset, ProfileStore};
+use mrtuner::mr::{run_job, JobConfig, RepOutcome};
+use mrtuner::profiler::extended::{random_ext4, scales, Ext4Spec};
+use mrtuner::profiler::store::{encode_record, read_file_records};
+use mrtuner::profiler::{
+    paper_campaign, CampaignExecutor, Dataset, ExperimentSpec, ProfileStore,
+    StoreKey,
+};
 use mrtuner::report::{e2e, experiments, figure, table};
+use mrtuner::util::benchkit::{bench, BenchStats};
 use mrtuner::util::bytes::fmt_secs;
 use mrtuner::util::cli::Args;
+use mrtuner::util::json::Json;
 use mrtuner::util::rng::Rng;
 use mrtuner::util::stats;
 
@@ -48,6 +55,34 @@ fn store_path_from(args: &Args) -> Option<String> {
     explicit.or_else(env_store_path)
 }
 
+/// Resolve the store size cap in bytes: `--store-max-mb N` wins, then the
+/// `MRTUNER_STORE_MAX_MB` environment variable.  When set, compaction
+/// evicts least-recently-used records (paper-plane reps are pinned) so
+/// the index never exceeds the cap.
+fn store_cap_from(args: &Args) -> Result<Option<u64>, String> {
+    // Track where the value came from, so a bad value blames the knob
+    // the user actually turned (flag vs environment variable).
+    let (raw, source) = match args.str_opt("store-max-mb") {
+        Some(s) => (Some(s), "--store-max-mb"),
+        None => (
+            std::env::var("MRTUNER_STORE_MAX_MB").ok().filter(|s| !s.is_empty()),
+            "MRTUNER_STORE_MAX_MB",
+        ),
+    };
+    match raw {
+        None => Ok(None),
+        Some(s) => {
+            let mb: u64 = s
+                .parse()
+                .map_err(|_| format!("{source}: bad integer '{s}'"))?;
+            if mb == 0 {
+                return Err(format!("{source} must be >= 1"));
+            }
+            Ok(Some(mb * 1024 * 1024))
+        }
+    }
+}
+
 /// Build the profiling executor from `--jobs N` (default: one worker per
 /// core), attaching the persistent profile store when one is configured.
 /// Campaign output is bit-identical whatever the worker count, and warm
@@ -60,9 +95,14 @@ fn executor_from(args: &Args) -> Result<CampaignExecutor, String> {
             CampaignExecutor::new(n as usize)
         }
     };
+    // Parse the cap unconditionally (so the flag is always recognized)
+    // but only *validate* it when a store is actually configured — a
+    // storeless run must not be blocked by a malformed machine-wide
+    // MRTUNER_STORE_MAX_MB that could never affect it.
+    let cap = store_cap_from(args);
     match store_path_from(args) {
         Some(p) => {
-            let store = ProfileStore::open(Path::new(&p))?;
+            let store = ProfileStore::open_capped(Path::new(&p), cap?)?;
             eprintln!(
                 "profile store: {} ({} stored reps)",
                 p,
@@ -101,6 +141,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "e2e" => cmd_e2e(&args),
         "store" => cmd_store(&args),
+        "bench" => cmd_bench(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -129,20 +170,27 @@ fn print_help() {
            ext4     --app A [--train N] [--test N] [--reps N] [--seed N]\n\
                     [--csv FILE] [--jobs N]              4-parameter sweep:\n\
                     T and CPU-seconds vs (M, R, input GB, block MB)\n\
-           serve    [--addr HOST:PORT] [--jobs N] [--retrain-every SECS]\n\
+           serve    [--addr HOST:PORT] [--seed N] [--jobs N]\n\
+                    [--retrain-every SECS]\n\
                     TCP prediction service; with --store it also runs the\n\
                     online trainer (protocol op `retrain`, plus a periodic\n\
                     refit every SECS seconds) so newly profiled apps are\n\
                     served without restart\n\
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
-           store    <stats|compact|clear> --store PATH   persistent profile store\n\n\
+           store    <stats|compact|clear> --store PATH [--store-max-mb N]\n\
+                    persistent profile store maintenance\n\
+           bench    <store|campaign> [--records N] [--reps N] [--jobs N]\n\
+                    [--out FILE]  store/executor microbenchmarks; writes\n\
+                    BENCH_store.json / BENCH_campaign.json\n\n\
          --jobs N sets the profiling worker count (default: all cores);\n\
          campaign results are bit-identical for any N.\n\n\
          --store PATH attaches a persistent on-disk profile store to any\n\
          profiling subcommand: completed reps are saved and every later\n\
          invocation warm-starts from them (bit-identical to a cold run).\n\
          MRTUNER_STORE=PATH does the same machine-wide; --no-store\n\
-         disables both for one invocation.\n\n\
+         disables both for one invocation.  --store-max-mb N (or\n\
+         MRTUNER_STORE_MAX_MB=N) caps the compacted store size: coldest\n\
+         records are evicted first, paper-plane reps are never evicted.\n\n\
          APPS: wordcount | exim | grep"
     );
 }
@@ -514,7 +562,17 @@ fn cmd_store(args: &Args) -> Result<(), String> {
         .str_opt("store")
         .or_else(env_store_path)
         .ok_or("--store PATH (or MRTUNER_STORE) required")?;
+    // Parse the cap but validate it only on the `compact` path: stats
+    // and clear must keep working on fleets that export a (possibly
+    // malformed) machine-wide MRTUNER_STORE_MAX_MB.
+    let cap = store_cap_from(args);
     args.reject_unknown()?;
+    // The *explicit* flag on a non-compact action is a user error —
+    // nobody should believe `stats --store-max-mb N` reported against
+    // a cap.
+    if args.str_opt("store-max-mb").is_some() && action != "compact" {
+        return Err("--store-max-mb only applies to `store compact`".into());
+    }
     let dir = PathBuf::from(&path);
     match action.as_str() {
         "stats" => {
@@ -524,7 +582,7 @@ fn cmd_store(args: &Args) -> Result<(), String> {
             Ok(())
         }
         "compact" => {
-            let store = ProfileStore::open(&dir)?;
+            let store = ProfileStore::open_capped(&dir, cap?)?;
             let st = store.stats();
             println!(
                 "store {}: merged {} segment(s); {st}",
@@ -542,6 +600,284 @@ fn cmd_store(args: &Args) -> Result<(), String> {
             Err(format!("unknown store action '{other}' (stats | compact | clear)"))
         }
     }
+}
+
+/// One benchkit case rendered into the `BENCH_*.json` schema.
+fn bench_case(st: &BenchStats, units: f64) -> Json {
+    Json::obj(vec![
+        ("name", Json::Str(st.name.clone())),
+        ("iters", Json::Num(st.iters as f64)),
+        ("mean_s", Json::Num(st.mean_s)),
+        ("min_s", Json::Num(st.min_s)),
+        ("p50_s", Json::Num(st.p50_s)),
+        ("units_per_s", Json::Num(st.throughput(units))),
+    ])
+}
+
+fn cmd_bench(args: &Args) -> Result<(), String> {
+    let what = args
+        .positional(0)
+        .ok_or("usage: mrtuner bench <store|campaign> [--flags]")?;
+    match what.as_str() {
+        "store" => bench_store(args),
+        "campaign" => bench_campaign(args),
+        other => {
+            Err(format!("unknown bench target '{other}' (store | campaign)"))
+        }
+    }
+}
+
+/// Store-scaling benchmark: the same record population as a legacy JSONL
+/// store and as a binary v3 store, timed through open/compact/lookup,
+/// plus a real (small) campaign asserting cold → warm executor
+/// bit-identity across both formats.  Results land in `BENCH_store.json`
+/// (`--out`), the perf-trajectory artifact CI validates.
+fn bench_store(args: &Args) -> Result<(), String> {
+    let records = args.u64_or("records", 100_000)? as usize;
+    let out = args.str_or("out", "BENCH_store.json");
+    args.reject_unknown()?;
+    if records == 0 {
+        return Err("--records must be >= 1".into());
+    }
+    let base = std::env::temp_dir()
+        .join(format!("mrtuner_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).map_err(|e| e.to_string())?;
+
+    // Synthetic but realistically-shaped population: distinct keys spread
+    // over the 4-parameter lattice, plausible outcome figures.
+    let mut rng = Rng::new(0xBE4C_57F0_4E5E_ED00);
+    let apps = AppId::all();
+    let recs: Vec<(StoreKey, RepOutcome)> = (0..records)
+        .map(|i| {
+            let key = StoreKey {
+                cluster: 0xC1A5_7E12_3456_789A,
+                app: apps[i % apps.len()],
+                num_mappers: 5 + (i % 36) as u32,
+                num_reducers: 5 + ((i / 36) % 36) as u32,
+                input_gb_bits: (1.0 + (i % 31) as f64 * 0.5).to_bits(),
+                block_mb: [32u32, 64, 128, 256][(i / 7) % 4],
+                rep: i as u32,
+                base_seed: 42,
+            };
+            let time_s = 100.0 + rng.range_f64(0.0, 1000.0);
+            (key, RepOutcome::full(time_s, time_s * rng.range_f64(0.5, 4.0)))
+        })
+        .collect();
+
+    // A v2-era store: the whole population as one JSONL index.
+    let jsonl_dir = base.join("jsonl");
+    std::fs::create_dir_all(&jsonl_dir).map_err(|e| e.to_string())?;
+    let mut body = String::with_capacity(records * 180);
+    for (k, o) in &recs {
+        body.push_str(&encode_record(k, o));
+        body.push('\n');
+    }
+    std::fs::write(jsonl_dir.join("index.jsonl"), &body)
+        .map_err(|e| e.to_string())?;
+
+    // The same population as a compacted binary v3 store.
+    let bin_dir = base.join("binary");
+    {
+        let store = ProfileStore::open(&bin_dir)?;
+        for (k, o) in &recs {
+            store.put(*k, *o);
+        }
+        store.flush()?;
+    }
+    {
+        let store = ProfileStore::open(&bin_dir)?;
+        if store.len() != records {
+            return Err(format!(
+                "bench store: expected {records} records, found {}",
+                store.len()
+            ));
+        }
+    }
+
+    println!("bench store: {records} records per store");
+    let mut cases: Vec<Json> = Vec::new();
+
+    // Open (= parse the whole index) per format, via `peek` so the pass
+    // is a pure read: the latency every warm CLI invocation pays.
+    let jsonl_open = bench("open JSONL (v2) store, cold parse", 1, 3, || {
+        std::hint::black_box(ProfileStore::peek(&jsonl_dir).unwrap().len());
+    });
+    cases.push(bench_case(&jsonl_open, records as f64));
+    let bin_open = bench("open binary (v3) store, cold parse", 1, 3, || {
+        std::hint::black_box(ProfileStore::peek(&bin_dir).unwrap().len());
+    });
+    cases.push(bench_case(&bin_open, records as f64));
+
+    // One-shot: the upgrade compaction that rewrites JSONL as binary.
+    let migrate_dir = base.join("migrate");
+    std::fs::create_dir_all(&migrate_dir).map_err(|e| e.to_string())?;
+    std::fs::write(migrate_dir.join("index.jsonl"), &body)
+        .map_err(|e| e.to_string())?;
+    let migrate = bench("compact: migrate JSONL -> binary index", 0, 1, || {
+        std::hint::black_box(ProfileStore::open(&migrate_dir).unwrap().len());
+    });
+    cases.push(bench_case(&migrate, records as f64));
+
+    // Resident lookup rate (bounds the executor's store-hit cost).
+    {
+        let store = ProfileStore::peek(&bin_dir)?;
+        let lookups = bench("get() every record, resident", 1, 3, || {
+            for (k, _) in &recs {
+                std::hint::black_box(store.get(k));
+            }
+        });
+        cases.push(bench_case(&lookups, records as f64));
+    }
+
+    // Cold → warm executor bit-identity across formats, on real
+    // simulations (the store's whole correctness claim in one check).
+    let cluster = Cluster::paper_cluster();
+    let specs = [
+        ExperimentSpec::new(AppId::WordCount, 10, 5),
+        ExperimentSpec::new(AppId::WordCount, 20, 5),
+    ];
+    let camp_dir = base.join("campaign");
+    let cold = {
+        let exec = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&camp_dir)?);
+        exec.run_specs(&cluster, &specs, 2, 11)
+    };
+    let warm_bin = {
+        let exec = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&camp_dir)?);
+        let res = exec.run_specs(&cluster, &specs, 2, 11);
+        if exec.stats().simulated != 0 {
+            return Err("bench store: binary warm run re-simulated".into());
+        }
+        res
+    };
+    // Rewrite the campaign store as v2 JSONL and warm-start from that.
+    let mut lines = String::new();
+    for entry in std::fs::read_dir(&camp_dir).map_err(|e| e.to_string())? {
+        let path = entry.map_err(|e| e.to_string())?.path();
+        if path.extension().is_some_and(|x| x == "bin") {
+            for (k, o, _) in read_file_records(&path)? {
+                lines.push_str(&encode_record(&k, &o));
+                lines.push('\n');
+            }
+        }
+    }
+    ProfileStore::clear(&camp_dir)?;
+    std::fs::write(camp_dir.join("index.jsonl"), &lines)
+        .map_err(|e| e.to_string())?;
+    let warm_jsonl = {
+        let exec = CampaignExecutor::new(2)
+            .with_store(ProfileStore::open(&camp_dir)?);
+        let res = exec.run_specs(&cluster, &specs, 2, 11);
+        if exec.stats().simulated != 0 {
+            return Err("bench store: JSONL warm run re-simulated".into());
+        }
+        res
+    };
+    let bit_identical =
+        cold.iter().zip(&warm_bin).zip(&warm_jsonl).all(|((a, b), c)| {
+            a.rep_times_s == b.rep_times_s && a.rep_times_s == c.rep_times_s
+        });
+
+    let speedup = jsonl_open.mean_s / bin_open.mean_s;
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("store".into())),
+        ("schema", Json::Num(1.0)),
+        ("records", Json::Num(records as f64)),
+        ("cases", Json::Arr(cases)),
+        ("binary_vs_jsonl_open_speedup", Json::Num(speedup)),
+        ("bit_identical_cold_warm", Json::Bool(bit_identical)),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).map_err(|e| e.to_string())?;
+    println!(
+        "binary open speedup over JSONL: {speedup:.2}x; \
+         cold/warm bit-identical: {bit_identical}"
+    );
+    println!("wrote {out}");
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
+/// Executor-scaling benchmark on a deliberately skewed extended grid:
+/// serial vs work-stealing parallel dispatch, asserting bit-identity, to
+/// `BENCH_campaign.json` (`--out`).
+fn bench_campaign(args: &Args) -> Result<(), String> {
+    let reps = args.u64_or("reps", 1)? as u32;
+    let out = args.str_or("out", "BENCH_campaign.json");
+    // Same defaulting as executor_from: one worker per core.
+    let jobs = match args.str_opt("jobs") {
+        None => CampaignExecutor::machine_sized().jobs(),
+        Some(s) => {
+            s.parse().map_err(|_| format!("--jobs: bad integer '{s}'"))?
+        }
+    };
+    args.reject_unknown()?;
+    if reps == 0 {
+        return Err("--reps must be >= 1".into());
+    }
+    let cluster = Cluster::paper_cluster();
+    // Every sixth setting is a 256-map monster, the rest are 4-map
+    // quickies — the shape that starves equal-share splits and shows
+    // what chunk stealing buys.
+    let specs: Vec<Ext4Spec> = (0..12u32)
+        .map(|i| {
+            let heavy = i % 6 == 0;
+            Ext4Spec {
+                app: AppId::WordCount,
+                num_mappers: 5 + i,
+                num_reducers: 5 + (i % 3) * 10,
+                input_gb: if heavy { 8.0 } else { 1.0 },
+                block_mb: if heavy { 32 } else { 256 },
+            }
+        })
+        .collect();
+    let units = (specs.len() as u32 * reps) as f64;
+    println!(
+        "bench campaign: {} settings x {reps} rep(s), {jobs} workers",
+        specs.len()
+    );
+    let serial = bench("skewed ext4 grid, serial", 0, 2, || {
+        let exec = CampaignExecutor::serial();
+        std::hint::black_box(exec.run_ext4_specs(&cluster, &specs, reps, 7));
+    });
+    let stolen = bench(
+        &format!("skewed ext4 grid, jobs={jobs} (work stealing)"),
+        0,
+        2,
+        || {
+            let exec = CampaignExecutor::new(jobs);
+            std::hint::black_box(
+                exec.run_ext4_specs(&cluster, &specs, reps, 7),
+            );
+        },
+    );
+    let a = CampaignExecutor::serial().run_ext4_specs(&cluster, &specs, reps, 7);
+    let b = CampaignExecutor::new(jobs).run_ext4_specs(&cluster, &specs, reps, 7);
+    let bit_identical = a.iter().zip(&b).all(|(x, y)| {
+        x.mean_time_s.to_bits() == y.mean_time_s.to_bits()
+            && x.mean_cpu_s.to_bits() == y.mean_cpu_s.to_bits()
+    });
+    let speedup = serial.mean_s / stolen.mean_s;
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("campaign".into())),
+        ("schema", Json::Num(1.0)),
+        ("records", Json::Num(units)),
+        ("jobs", Json::Num(jobs as f64)),
+        (
+            "cases",
+            Json::Arr(vec![
+                bench_case(&serial, units),
+                bench_case(&stolen, units),
+            ]),
+        ),
+        ("parallel_speedup", Json::Num(speedup)),
+        ("bit_identical_serial_parallel", Json::Bool(bit_identical)),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).map_err(|e| e.to_string())?;
+    println!("parallel speedup: {speedup:.2}x; bit-identical: {bit_identical}");
+    println!("wrote {out}");
+    Ok(())
 }
 
 fn cmd_e2e(args: &Args) -> Result<(), String> {

@@ -74,6 +74,21 @@ impl FitBackend for RustSolverBackend {
 /// same ridge policy as [`solver::fit`] — so an incremental fit is
 /// *bit-identical* to a from-scratch fit over the same rows in the same
 /// order, not an approximation.
+///
+/// ```
+/// use mrtuner::model::regression::FitAccumulator;
+///
+/// let mut acc = FitAccumulator::new();
+/// for m in [5.0, 10.0, 20.0, 40.0] {
+///     for r in [5.0, 10.0, 20.0, 40.0] {
+///         // A plane is inside the cubic family, so the fit recovers it.
+///         acc.add_row(&[m, r], 100.0 + 2.0 * m + 3.0 * r, 1.0);
+///     }
+/// }
+/// assert_eq!(acc.rows(), 16);
+/// let coeffs = acc.solve().unwrap();
+/// assert!(coeffs.iter().all(|c| c.is_finite()));
+/// ```
 #[derive(Clone, Debug)]
 pub struct FitAccumulator {
     /// Upper triangle of G = XᵀWX (mirrored at solve time).

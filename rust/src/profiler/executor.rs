@@ -8,9 +8,13 @@
 //! 1. **Fan-out.** Repetitions are independent by construction — every
 //!    rep derives its seed from `mix(base_seed, spec, rep)` and its HDFS
 //!    layout from a session-level [`JobContext`] — so misses fan out over
-//!    a `std::thread::scope` worker pool.  Results are assembled in input
-//!    order, making parallel output **bit-identical** to serial for any
-//!    worker count.
+//!    a `std::thread::scope` worker pool with **work-stealing chunked
+//!    dispatch**: chunks are dealt to per-worker deques and idle workers
+//!    steal from busy ones, so a skewed grid (one 256-map ext4 setting
+//!    among 4-map ones) cannot strand the pool behind one worker.
+//!    Results are assembled in input order, making parallel output
+//!    **bit-identical** to serial for any worker count and any steal
+//!    schedule.
 //! 2. **Caching.** Completed reps are cached under `(spec, rep,
 //!    base_seed)`, so campaigns that overlap — train/test protocols, grid
 //!    sweeps revisiting training settings, scheduler what-if replays —
@@ -29,9 +33,10 @@
 //! prior session on the machine.  [`CampaignExecutor::stats`] reports the
 //! combined in-memory + on-disk picture.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::fmt;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::apps::AppId;
@@ -198,11 +203,63 @@ impl RepJob {
     }
 }
 
+/// Target chunks dealt per worker: enough slack that a worker stuck on
+/// an expensive chunk leaves plenty for the others to steal, few enough
+/// that queue locking stays negligible next to event simulation.
+const CHUNKS_PER_WORKER: usize = 4;
+/// Upper bound on one chunk's item count, so a huge campaign still
+/// produces steal-able units.
+const MAX_CHUNK: usize = 32;
+
+/// Pop the next chunk for worker `wi`: its own deque front first, then a
+/// steal from the back of the nearest non-empty victim.  Chunks are never
+/// re-queued, so every chunk is executed exactly once and `None` means
+/// the whole grid is taken.
+fn next_chunk(
+    queues: &[Mutex<VecDeque<Range<usize>>>],
+    wi: usize,
+) -> Option<Range<usize>> {
+    if let Some(r) = queues[wi].lock().expect("chunk queue poisoned").pop_front()
+    {
+        return Some(r);
+    }
+    let n = queues.len();
+    for d in 1..n {
+        let victim = (wi + d) % n;
+        if let Some(r) =
+            queues[victim].lock().expect("chunk queue poisoned").pop_back()
+        {
+            return Some(r);
+        }
+    }
+    None
+}
+
 /// The campaign executor: a worker pool plus a rep-level result cache.
 ///
 /// One executor is meant to live for a whole analysis session (an `e2e`
 /// run, a CLI invocation, a service lifetime) so overlapping campaigns
-/// share both the cache and the per-session job contexts.
+/// share both the cache and the per-session job contexts.  Misses are
+/// dispatched to the workers as steal-able chunks, so skewed grids keep
+/// every worker busy — with output bit-identical to serial either way.
+///
+/// ```
+/// use mrtuner::apps::AppId;
+/// use mrtuner::cluster::Cluster;
+/// use mrtuner::profiler::{CampaignExecutor, ExperimentSpec};
+///
+/// let cluster = Cluster::paper_cluster();
+/// let exec = CampaignExecutor::new(2);
+/// let specs = [ExperimentSpec::new(AppId::WordCount, 20, 5)];
+/// let results = exec.run_specs(&cluster, &specs, 2, 42);
+/// assert_eq!(results.len(), 1);
+/// assert!(results[0].mean_time_s > 0.0);
+/// // Re-running the same profiling session is answered from the cache,
+/// // bit-identically.
+/// let again = exec.run_specs(&cluster, &specs, 2, 42);
+/// assert_eq!(again[0].rep_times_s, results[0].rep_times_s);
+/// assert_eq!(exec.cache_hits(), 2);
+/// ```
 pub struct CampaignExecutor {
     jobs: usize,
     cache: Mutex<HashMap<StoreKey, RepOutcome>>,
@@ -423,18 +480,44 @@ impl CampaignExecutor {
                 out[todo[k]] = run_one(k);
             }
         } else {
-            let cursor = AtomicUsize::new(0);
+            // Work-stealing chunked dispatch.  Contiguous index chunks are
+            // dealt round-robin onto per-worker deques up front; a worker
+            // drains its own deque from the front and, when empty, steals
+            // from the back of a victim's.  Chunks amortize queue locking
+            // on dense grids; stealing keeps every worker busy on skewed
+            // ones (an ext4 sweep mixes 256-map settings with 4-map ones,
+            // so equal-share splits leave workers idle).  Output stays
+            // bit-identical to serial because results are written back by
+            // input index — scheduling order never touches the data.
+            let chunk = (todo.len() / (workers * CHUNKS_PER_WORKER))
+                .clamp(1, MAX_CHUNK);
+            let queues: Vec<Mutex<VecDeque<Range<usize>>>> =
+                (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+            {
+                let mut lo = 0;
+                let mut w = 0;
+                while lo < todo.len() {
+                    let hi = (lo + chunk).min(todo.len());
+                    queues[w % workers]
+                        .lock()
+                        .expect("chunk queue poisoned")
+                        .push_back(lo..hi);
+                    w += 1;
+                    lo = hi;
+                }
+            }
             let computed: Vec<(usize, RepOutcome)> = std::thread::scope(|scope| {
+                let run_one = &run_one;
+                let todo = &todo;
+                let queues = &queues[..];
                 let handles: Vec<_> = (0..workers)
-                    .map(|_| {
-                        scope.spawn(|| {
+                    .map(|wi| {
+                        scope.spawn(move || {
                             let mut local = Vec::new();
-                            loop {
-                                let k = cursor.fetch_add(1, Ordering::Relaxed);
-                                if k >= todo.len() {
-                                    break;
+                            while let Some(range) = next_chunk(queues, wi) {
+                                for k in range {
+                                    local.push((todo[k], run_one(k)));
                                 }
-                                local.push((todo[k], run_one(k)));
                             }
                             local
                         })
@@ -771,14 +854,16 @@ mod tests {
             exec.run_reps(&cluster, &[item]);
         }
         let (key, full) = {
-            let text = std::fs::read_dir(&dir_a)
+            let mut records = Vec::new();
+            for p in std::fs::read_dir(&dir_a)
                 .unwrap()
                 .map(|e| e.unwrap().path())
-                .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
-                .map(|p| std::fs::read_to_string(p).unwrap())
-                .collect::<String>();
-            let line = text.lines().find(|l| !l.trim().is_empty()).unwrap();
-            let (k, o, _) = super::super::store::decode_record(line).unwrap();
+                .filter(|p| p.extension().is_some_and(|x| x == "bin"))
+            {
+                records
+                    .extend(super::super::store::read_file_records(&p).unwrap());
+            }
+            let (k, o, _) = records.into_iter().next().unwrap();
             (k, o)
         };
         assert!(full.cpu_s.is_some(), "executor stores full outcomes");
@@ -858,6 +943,58 @@ mod tests {
         }
         drop(exec2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn skewed_grid_work_stealing_is_bit_identical_and_complete() {
+        // A deliberately skewed grid: one 256-map monster among cheap
+        // 4-map settings, at worker counts that do not divide the item
+        // count.  Every item must be simulated exactly once and the
+        // output must match serial bit for bit whatever got stolen.
+        let cluster = Cluster::paper_cluster();
+        let specs: Vec<Ext4Spec> = (0..9)
+            .map(|i| Ext4Spec {
+                app: AppId::WordCount,
+                num_mappers: 5 + i,
+                num_reducers: 5,
+                input_gb: if i == 0 { 8.0 } else { 1.0 },
+                block_mb: if i == 0 { 32 } else { 256 },
+            })
+            .collect();
+        let serial =
+            CampaignExecutor::serial().run_ext4_specs(&cluster, &specs, 1, 13);
+        for jobs in [3, 8] {
+            let exec = CampaignExecutor::new(jobs);
+            let par = exec.run_ext4_specs(&cluster, &specs, 1, 13);
+            assert_eq!(exec.cache_misses(), 9, "jobs={jobs}: each item once");
+            assert_eq!(exec.cache_hits(), 0, "jobs={jobs}");
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.mean_time_s.to_bits(), b.mean_time_s.to_bits());
+                assert_eq!(a.mean_cpu_s.to_bits(), b.mean_cpu_s.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_queues_hand_out_every_range_exactly_once() {
+        let queues: Vec<Mutex<VecDeque<Range<usize>>>> =
+            (0..3).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (w, lo) in (0..10).enumerate() {
+            queues[w % 3]
+                .lock()
+                .unwrap()
+                .push_back(lo * 2..lo * 2 + 2);
+        }
+        // Worker 1 drains everything (its own queue plus steals).
+        let mut seen = Vec::new();
+        while let Some(r) = next_chunk(&queues, 1) {
+            seen.extend(r);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+        // And every queue is now empty for the other workers too.
+        assert!(next_chunk(&queues, 0).is_none());
+        assert!(next_chunk(&queues, 2).is_none());
     }
 
     #[test]

@@ -13,19 +13,36 @@
 //!
 //! ```text
 //! store/
-//!   index.jsonl            compacted records (atomically replaced)
-//!   seg-<pid>-<n>-<t>.jsonl  append-only segment, one per writing session
-//!   seg-....jsonl.lock     liveness lock while that segment is open
-//!   compact.lock           held briefly while rewriting the index
+//!   index.bin               compacted records (binary v3, atomically replaced)
+//!   seg-<pid>-<n>-<t>.bin   append-only binary segment, one per writing session
+//!   seg-....bin.lock        liveness lock while that segment is open
+//!   compact.lock            held briefly while rewriting the index
+//!   index.jsonl             legacy v1/v2 index — still read, migrated on the
+//!   seg-....jsonl           fly, and rewritten as v3 by the next compaction
 //! ```
 //!
-//! Each line is one record, serialized with the repo's hand-rolled JSON
-//! ([`crate::util::json`]).  `u64` values (cluster fingerprint, session
-//! seed, input-size bits) and the `f64` outcome figures (execution time
-//! and CPU seconds) travel as fixed-width hex strings
-//! ([`crate::util::bytes::hex_u64`]) so every bit round-trips — stored
-//! values are the same bit-identical rep results the executor produces,
-//! which is what makes warm runs byte-identical to cold ones.
+//! Store format **v3** is binary: a file is an 8-byte header (magic
+//! `MRTS` + little-endian version) followed by length-prefixed records
+//! (see [`encode_record_bin`]).  Every `u64` and `f64` travels as its raw
+//! little-endian bits, so stored values are the same bit-identical rep
+//! results the executor produces — which is what makes warm runs
+//! byte-identical to cold ones — and parsing a million-record store is a
+//! linear scan, not a million JSON documents.  The previous JSONL formats
+//! (v1 from PR 2, v2 from PR 3; see [`encode_record`]) are still decoded
+//! on read and never orphaned.
+//!
+//! # Size cap and eviction
+//!
+//! [`ProfileStore::open_capped`] bounds the compacted index
+//! (`--store-max-mb` / `MRTUNER_STORE_MAX_MB` on the CLI).  Records carry
+//! a **touch** — the generation at which they were last written or
+//! answered a lookup — and when a compaction would exceed the cap, the
+//! least-recently-used records are dropped first.  Capped sessions
+//! persist their lookup recency at flush (deduplicating record frames
+//! the next compaction folds); uncapped sessions bump it in memory only,
+//! so a plain warm run stays write-free.  Repetitions on the paper plane
+//! (input 8 GB, block 64 MB) are **pinned**: they are the online
+//! trainer's training data and are never evicted, whatever the cap.
 //!
 //! # Concurrency and crash safety
 //!
@@ -34,22 +51,22 @@
 //!   writes.
 //! * A live segment is marked by a `.lock` file (created before the
 //!   segment, removed on drop); compaction merges a locked segment's
-//!   flushed lines but never deletes the file under a live writer.
+//!   flushed records but never deletes the file under a live writer.
 //!   Locks carry the writer's pid — a lock whose process is gone
 //!   (crashed session) is reclaimed together with its segment.
-//! * On open, segments are folded into `index.jsonl` via
+//! * On open, segments are folded into `index.bin` via
 //!   write-to-temp + atomic rename, guarded by `compact.lock` taken
 //!   *before* the directory is read (`create_new`, so only one process
 //!   compacts at a time; losers just skip the pass, and a stale lock
 //!   left by a crashed compactor is reclaimed after ten minutes).
 //! * Corruption is tolerated, never fatal: an unreadable file or a
-//!   truncated/garbled line is counted, logged to stderr, and skipped.
-//!   Lines whose `"v"` field is *newer* than [`STORE_FORMAT_VERSION`]
-//!   are skipped too, and their segment is preserved for whichever build
-//!   understands it; v1 lines are migrated on read (see
-//!   [`STORE_FORMAT_VERSION`]) and rewritten as v2 by compaction.
+//!   truncated/garbled record is counted, logged to stderr, and skipped.
+//!   Files or lines of a *newer* store-format version than
+//!   [`STORE_FORMAT_VERSION`] are skipped too, and their segment is
+//!   preserved for whichever build understands it; v1/v2 JSONL data is
+//!   migrated on read and rewritten as v3 by compaction.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::fs::{self, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -64,19 +81,37 @@ use crate::util::json::{parse, Json};
 
 /// Store format version; bump when the record schema changes.
 ///
-/// * **v1** (PR 2): 2-parameter keys `(cluster, app, m, r, rep, seed)`
-///   holding a bare execution time.
-/// * **v2**: keys additionally carry `input_gb`/`block_mb` (the extended
-///   4-parameter sweep axes) and records hold a [`RepOutcome`] — total
-///   time plus total CPU seconds.  v1 lines are **migrated on read**:
-///   they decode into v2 keys at the paper-default input/block values
-///   with the CPU figure absent, so existing stores keep answering.
+/// * **v1** (PR 2): JSONL; 2-parameter keys `(cluster, app, m, r, rep,
+///   seed)` holding a bare execution time.
+/// * **v2** (PR 3): JSONL; keys additionally carry `input_gb`/`block_mb`
+///   (the extended 4-parameter sweep axes) and records hold a
+///   [`RepOutcome`] — total time plus total CPU seconds.
+/// * **v3** (PR 5): binary segments and index — length-prefixed records
+///   behind an `MRTS` file header, raw little-endian bit round-trip for
+///   every `u64`/`f64`, plus a persisted last-hit **touch** generation
+///   that drives size-capped LRU eviction.
 ///
-/// Readers skip (and preserve) records of any *newer* version.
-pub const STORE_FORMAT_VERSION: u32 = 2;
+/// v1/v2 JSONL lines are **migrated on read**: they decode into v3 keys
+/// (v1 lands at the paper-default input/block values with the CPU figure
+/// absent), so existing stores keep answering, and the next compaction
+/// rewrites everything as v3 binary.  Readers skip (and preserve) files
+/// or records of any *newer* version.
+pub const STORE_FORMAT_VERSION: u32 = 3;
 
-const INDEX_FILE: &str = "index.jsonl";
+/// Version written by the legacy JSONL record codec ([`encode_record`]).
+const JSONL_RECORD_VERSION: u32 = 2;
+
+const INDEX_FILE: &str = "index.bin";
+const LEGACY_INDEX_FILE: &str = "index.jsonl";
 const COMPACT_LOCK: &str = "compact.lock";
+
+/// Magic prefix of every binary (v3) store file.
+const BIN_MAGIC: [u8; 4] = *b"MRTS";
+/// Binary file header: magic + little-endian u32 format version.
+const BIN_HEADER_LEN: usize = 8;
+/// Sanity bound on a record's length prefix; anything larger is framing
+/// corruption (a real record is well under 128 bytes).
+const MAX_RECORD_LEN: usize = 4096;
 
 /// A `compact.lock` older than this is assumed to be the debris of a
 /// crashed process (a compaction pass takes well under a second) and is
@@ -85,7 +120,8 @@ const STALE_COMPACT_LOCK: Duration = Duration::from_secs(600);
 
 /// Distinguishes session segments from everything else in the directory.
 const SEGMENT_PREFIX: &str = "seg-";
-const SEGMENT_SUFFIX: &str = ".jsonl";
+const SEGMENT_SUFFIX: &str = ".bin";
+const LEGACY_SEGMENT_SUFFIX: &str = ".jsonl";
 
 /// Makes segment names unique when one process opens several stores (or
 /// several executors share a directory) within one clock tick.
@@ -130,6 +166,15 @@ impl StoreKey {
     pub fn input_gb(&self) -> f64 {
         f64::from_bits(self.input_gb_bits)
     }
+
+    /// Whether this key lies on the **paper plane** (paper-default input
+    /// and block size).  Paper-plane repetitions feed the online trainer
+    /// ([`crate::coordinator::Trainer`]) and are therefore *pinned*:
+    /// size-capped eviction never drops them.
+    pub fn is_paper_plane(&self) -> bool {
+        self.input_gb_bits == StoreKey::PAPER_INPUT_GB.to_bits()
+            && self.block_mb == StoreKey::PAPER_BLOCK_MB
+    }
 }
 
 /// Why a record line failed to decode.
@@ -142,13 +187,18 @@ pub enum RecordError {
     Corrupt(String),
 }
 
-/// Serialize one `(key, per-rep outcome)` record as a v2 JSON line.
+// ------------------------------------------------- legacy JSONL codec
+
+/// Serialize one `(key, per-rep outcome)` record as a **legacy v2 JSON
+/// line** — the format PR 2/PR 3 builds wrote.  Kept for store-upgrade
+/// tests and tooling; the store itself writes the binary v3 codec
+/// ([`encode_record_bin`]) since PR 5.
 pub fn encode_record(key: &StoreKey, outcome: &RepOutcome) -> String {
     // "t"/"cpu" are redundant human-readable copies; the hex "bits"
     // fields are authoritative.  "cbits"/"cpu" are omitted when the CPU
     // figure is unknown (v1-migrated data).
     let mut pairs = vec![
-        ("v", Json::Num(STORE_FORMAT_VERSION as f64)),
+        ("v", Json::Num(JSONL_RECORD_VERSION as f64)),
         ("cluster", Json::Str(hex_u64(key.cluster))),
         ("app", Json::Str(key.app.name().to_string())),
         ("m", Json::Num(key.num_mappers as f64)),
@@ -167,14 +217,14 @@ pub fn encode_record(key: &StoreKey, outcome: &RepOutcome) -> String {
     Json::obj(pairs).to_string()
 }
 
-/// Decode a record line written by [`encode_record`] (v2) or by the v1
-/// store, returning the key, the outcome, and the version the line was
-/// written under.
+/// Decode a legacy JSONL record line written by [`encode_record`] (v2)
+/// or by the v1 store, returning the key, the outcome, and the version
+/// the line was written under.
 ///
 /// v1 lines are migrated on the fly: their key lands at the paper-default
 /// input/block values (the only point v1 could describe) and the CPU
 /// figure is absent — they are never orphaned, and compaction rewrites
-/// them as v2.
+/// them as v3 binary.
 pub fn decode_record(
     line: &str,
 ) -> Result<(StoreKey, RepOutcome, u32), RecordError> {
@@ -216,6 +266,226 @@ pub fn decode_record(
     }
 }
 
+// ------------------------------------------------------ binary v3 codec
+
+/// Exact encoded payload size of one binary record (no length prefix).
+fn payload_len(key: &StoreKey, outcome: &RepOutcome) -> usize {
+    // 5 u64s + 4 u32s + app length byte + app name + cpu flag (+ cpu bits)
+    5 * 8
+        + 4 * 4
+        + 1
+        + key.app.name().len()
+        + 1
+        + if outcome.cpu_s.is_some() { 8 } else { 0 }
+}
+
+/// Exact on-disk size of one framed binary record (length prefix
+/// included) — what the size-cap accounting sums.
+fn frame_len(key: &StoreKey, outcome: &RepOutcome) -> usize {
+    4 + payload_len(key, outcome)
+}
+
+/// The 8-byte header every binary store file starts with.
+fn bin_header() -> [u8; BIN_HEADER_LEN] {
+    let mut h = [0u8; BIN_HEADER_LEN];
+    h[..4].copy_from_slice(&BIN_MAGIC);
+    h[4..].copy_from_slice(&STORE_FORMAT_VERSION.to_le_bytes());
+    h
+}
+
+/// Append one framed binary record to `out`.
+fn encode_record_bin_into(
+    key: &StoreKey,
+    outcome: &RepOutcome,
+    touch: u64,
+    out: &mut Vec<u8>,
+) {
+    let len = payload_len(key, outcome);
+    debug_assert!(len <= MAX_RECORD_LEN);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    let start = out.len();
+    out.extend_from_slice(&key.cluster.to_le_bytes());
+    out.extend_from_slice(&key.base_seed.to_le_bytes());
+    out.extend_from_slice(&key.input_gb_bits.to_le_bytes());
+    out.extend_from_slice(&outcome.time_s.to_bits().to_le_bytes());
+    out.extend_from_slice(&touch.to_le_bytes());
+    out.extend_from_slice(&key.num_mappers.to_le_bytes());
+    out.extend_from_slice(&key.num_reducers.to_le_bytes());
+    out.extend_from_slice(&key.block_mb.to_le_bytes());
+    out.extend_from_slice(&key.rep.to_le_bytes());
+    let name = key.app.name().as_bytes();
+    out.push(name.len() as u8);
+    out.extend_from_slice(name);
+    match outcome.cpu_s {
+        Some(cpu) => {
+            out.push(1);
+            out.extend_from_slice(&cpu.to_bits().to_le_bytes());
+        }
+        None => out.push(0),
+    }
+    debug_assert_eq!(out.len() - start, len);
+}
+
+/// Serialize one record as a length-prefixed **binary v3** frame: the
+/// format the store's segments and index are written in since PR 5.
+/// Every `u64`/`f64` is stored as raw little-endian bits, so arbitrary
+/// bit patterns — NaN payloads included — round-trip exactly.  `touch`
+/// is the record's last-hit generation (drives LRU eviction under a
+/// size cap).
+pub fn encode_record_bin(
+    key: &StoreKey,
+    outcome: &RepOutcome,
+    touch: u64,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame_len(key, outcome));
+    encode_record_bin_into(key, outcome, touch, &mut out);
+    out
+}
+
+/// Bounds-checked little-endian reader over one binary payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| "binary record truncated".to_string())?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// Decode one binary payload (the bytes after a record's length prefix).
+fn decode_payload(b: &[u8]) -> Result<(StoreKey, RepOutcome, u64), String> {
+    let mut c = Cursor { b, i: 0 };
+    let cluster = c.u64()?;
+    let base_seed = c.u64()?;
+    let input_gb_bits = c.u64()?;
+    let time_bits = c.u64()?;
+    let touch = c.u64()?;
+    let num_mappers = c.u32()?;
+    let num_reducers = c.u32()?;
+    let block_mb = c.u32()?;
+    let rep = c.u32()?;
+    let app_len = c.u8()? as usize;
+    let app_bytes = c.take(app_len)?;
+    let app = AppId::parse(
+        std::str::from_utf8(app_bytes)
+            .map_err(|_| "binary record: app name not UTF-8".to_string())?,
+    )?;
+    let cpu_s = match c.u8()? {
+        0 => None,
+        1 => Some(f64::from_bits(c.u64()?)),
+        other => return Err(format!("binary record: bad cpu flag {other}")),
+    };
+    if c.i != b.len() {
+        return Err("binary record: trailing payload bytes".into());
+    }
+    Ok((
+        StoreKey {
+            cluster,
+            app,
+            num_mappers,
+            num_reducers,
+            input_gb_bits,
+            block_mb,
+            rep,
+            base_seed,
+        },
+        RepOutcome { time_s: f64::from_bits(time_bits), cpu_s },
+        touch,
+    ))
+}
+
+/// Decode one framed binary record produced by [`encode_record_bin`]
+/// from the front of `bytes`.  Returns the record, its touch generation,
+/// and the total bytes consumed (prefix + payload), so callers can walk
+/// a concatenated record stream.
+pub fn decode_record_bin(
+    bytes: &[u8],
+) -> Result<(StoreKey, RepOutcome, u64, usize), String> {
+    if bytes.len() < 4 {
+        return Err("binary record truncated (length prefix)".into());
+    }
+    let len =
+        u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes")) as usize;
+    if len == 0 || len > MAX_RECORD_LEN {
+        return Err(format!("binary record: implausible length {len}"));
+    }
+    let end = 4 + len;
+    if bytes.len() < end {
+        return Err("binary record truncated (payload)".into());
+    }
+    let (key, outcome, touch) = decode_payload(&bytes[4..end])?;
+    Ok((key, outcome, touch, end))
+}
+
+/// Strictly decode every record in one store file — binary v3 or legacy
+/// JSONL — returning each record with the version it was stored under
+/// (the file version for binary, the per-line `"v"` for JSONL).  Any
+/// corruption is an error: this is the store-inspection/tooling path,
+/// not the fault-tolerant load path.
+pub fn read_file_records(
+    path: &Path,
+) -> Result<Vec<(StoreKey, RepOutcome, u32)>, String> {
+    let bytes =
+        fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    if bytes.is_empty() {
+        return Ok(out);
+    }
+    if bytes.len() >= 4 && bytes[..4] == BIN_MAGIC {
+        if bytes.len() < BIN_HEADER_LEN {
+            return Err("truncated binary store header".into());
+        }
+        let ver = u32::from_le_bytes(
+            bytes[4..BIN_HEADER_LEN].try_into().expect("4 bytes"),
+        );
+        if ver != STORE_FORMAT_VERSION {
+            return Err(format!("unsupported binary store version {ver}"));
+        }
+        let mut i = BIN_HEADER_LEN;
+        while i < bytes.len() {
+            let (key, outcome, _touch, used) = decode_record_bin(&bytes[i..])?;
+            out.push((key, outcome, ver));
+            i += used;
+        }
+    } else {
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|_| format!("{}: not UTF-8", path.display()))?;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, outcome, ver) =
+                decode_record(line).map_err(|e| format!("{e:?}"))?;
+            out.push((key, outcome, ver));
+        }
+    }
+    Ok(out)
+}
+
+// ----------------------------------------------------------- the store
+
 /// What `open` saw on disk, plus the live pending-write count.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StoreStats {
@@ -227,13 +497,17 @@ pub struct StoreStats {
     pub merged_segments: usize,
     /// Files that could not be read at all (skipped, logged).
     pub corrupt_segments: usize,
-    /// Undecodable lines inside otherwise readable files.
+    /// Undecodable lines/records inside otherwise readable files.
     pub corrupt_lines: usize,
-    /// Lines of a *newer* store-format version (skipped, preserved).
+    /// Lines — or whole binary files — of a *newer* store-format version
+    /// (skipped, preserved).
     pub stale_lines: usize,
-    /// v1 lines migrated on read into v2 keys (rewritten as v2 by the
-    /// next compaction).
+    /// Legacy JSONL (v1/v2) lines migrated on read into v3 records
+    /// (rewritten as binary by the next compaction).
     pub migrated_lines: usize,
+    /// Records dropped by size-capped LRU eviction during this open's
+    /// compaction (never paper-plane reps — those are pinned).
+    pub evicted: usize,
     /// Whether the open pass rewrote the index.
     pub compacted: bool,
 }
@@ -243,7 +517,8 @@ impl std::fmt::Display for StoreStats {
         write!(
             f,
             "entries={} segments_seen={} merged={} corrupt_segments={} \
-             corrupt_lines={} stale_lines={} migrated={} compacted={}",
+             corrupt_lines={} stale_lines={} migrated={} evicted={} \
+             compacted={}",
             self.entries,
             self.segments_seen,
             self.merged_segments,
@@ -251,6 +526,7 @@ impl std::fmt::Display for StoreStats {
             self.corrupt_lines,
             self.stale_lines,
             self.migrated_lines,
+            self.evicted,
             self.compacted
         )
     }
@@ -262,8 +538,9 @@ struct SegmentWriter {
 }
 
 impl SegmentWriter {
-    /// Create a fresh uniquely-named segment, taking its liveness lock
-    /// *first* so a concurrent compaction never deletes it underneath us.
+    /// Create a fresh uniquely-named binary segment (header written
+    /// immediately), taking its liveness lock *first* so a concurrent
+    /// compaction never deletes it underneath us.
     fn create(dir: &Path) -> Result<SegmentWriter, String> {
         let nonce = SEG_COUNTER.fetch_add(1, Ordering::Relaxed);
         let nanos = SystemTime::now()
@@ -284,11 +561,27 @@ impl SegmentWriter {
             .open(&lock)
             .map_err(|e| format!("store: create lock {}: {e}", lock.display()))?;
         let _ = writeln!(lf, "{}", std::process::id());
-        let file = OpenOptions::new()
+        let mut file = match OpenOptions::new()
             .append(true)
             .create_new(true)
             .open(&path)
-            .map_err(|e| format!("store: create segment {}: {e}", path.display()))?;
+        {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = fs::remove_file(&lock);
+                return Err(format!(
+                    "store: create segment {}: {e}",
+                    path.display()
+                ));
+            }
+        };
+        if let Err(e) = file.write_all(&bin_header()) {
+            let _ = fs::remove_file(&lock);
+            return Err(format!(
+                "store: write segment header {}: {e}",
+                path.display()
+            ));
+        }
         Ok(SegmentWriter { file, lock })
     }
 }
@@ -299,10 +592,19 @@ impl Drop for SegmentWriter {
     }
 }
 
+/// One resident record: the outcome plus its last-hit **touch**
+/// generation (persisted in v3 records; 0 for data migrated from JSONL
+/// stores, which therefore evicts first under a cap).
+#[derive(Clone, Copy, Debug, PartialEq)]
+struct StoredRep {
+    outcome: RepOutcome,
+    touch: u64,
+}
+
 struct Inner {
-    /// Key → stored per-rep outcome (held as the very `f64`s that were
+    /// Key → stored record (held as the very `f64`s that were
     /// decoded/produced, so every bit round-trips by construction).
-    entries: HashMap<StoreKey, RepOutcome>,
+    entries: HashMap<StoreKey, StoredRep>,
     /// Key of every record this store instance has accepted, in
     /// acceptance order: the on-disk records found at open (sorted, so
     /// the order is deterministic), then every `put`/`refresh`
@@ -314,9 +616,25 @@ struct Inner {
     /// (CPU figure added) appears twice; both occurrences resolve to
     /// the live (upgraded) outcome.
     journal: Vec<StoreKey>,
-    /// Encoded lines not yet appended to this session's segment.
-    dirty: Vec<String>,
-    /// Lazily created on first flush, so read-only sessions leave no file.
+    /// Encoded binary frames not yet appended to this session's segment.
+    dirty: Vec<u8>,
+    /// Records represented in `dirty` (the `pending()` count).
+    dirty_count: usize,
+    /// Keys whose touch generation changed since the last flush (lookup
+    /// hits and re-puts of known values).  Flush appends a fresh frame
+    /// per touched key so recency survives the process — that is what
+    /// makes cross-session LRU eviction meaningful.  Only populated
+    /// when the store was opened with a size cap: an uncapped warm run
+    /// must stay write-free, not rewrite its whole hit set (the frames
+    /// have no consumer without eviction).  BTreeSet so the flush order
+    /// (and therefore segment bytes) is deterministic.
+    touched: BTreeSet<StoreKey>,
+    /// Whether lookup recency is persisted at flush (capped opens).
+    persist_touches: bool,
+    /// Monotonic touch clock, seeded from the largest touch on disk.
+    clock: u64,
+    /// Lazily created on first flush, so sessions with nothing to
+    /// persist (reads without a cap, inspection) leave no file behind.
     writer: Option<SegmentWriter>,
 }
 
@@ -327,6 +645,37 @@ struct Inner {
 /// writes freshly simulated reps back; `flush` runs at campaign
 /// boundaries and on drop.  All methods take `&self` and are safe to call
 /// from the executor's worker threads.
+///
+/// ```
+/// use mrtuner::apps::AppId;
+/// use mrtuner::mr::RepOutcome;
+/// use mrtuner::profiler::{ProfileStore, StoreKey};
+///
+/// let dir = std::env::temp_dir()
+///     .join(format!("mrtuner_doc_store_{}", std::process::id()));
+/// let _ = std::fs::remove_dir_all(&dir);
+///
+/// let key = StoreKey {
+///     cluster: 0xC0FFEE,
+///     app: AppId::WordCount,
+///     num_mappers: 20,
+///     num_reducers: 5,
+///     input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+///     block_mb: StoreKey::PAPER_BLOCK_MB,
+///     rep: 0,
+///     base_seed: 42,
+/// };
+/// {
+///     let store = ProfileStore::open(&dir).unwrap();
+///     store.put(key, RepOutcome::full(1523.25, 96.5));
+///     store.flush().unwrap();
+/// }
+/// // A later session — any process on the machine — warm-starts from it.
+/// let store = ProfileStore::open(&dir).unwrap();
+/// assert_eq!(store.get(&key), Some(RepOutcome::full(1523.25, 96.5)));
+/// drop(store);
+/// # let _ = std::fs::remove_dir_all(&dir);
+/// ```
 pub struct ProfileStore {
     dir: PathBuf,
     inner: Mutex<Inner>,
@@ -344,15 +693,31 @@ impl ProfileStore {
     /// Open (creating if needed) the store at `dir`, folding any
     /// completed segments into the index — the compaction pass.
     pub fn open(dir: &Path) -> Result<ProfileStore, String> {
-        ProfileStore::open_with(dir, true)
+        ProfileStore::open_with(dir, true, None)
+    }
+
+    /// Open with a size cap on the compacted index, in bytes: when a
+    /// compaction would exceed the cap, the least-recently-used records
+    /// are evicted first (paper-plane reps are pinned and never
+    /// dropped).  The CLI exposes this as `--store-max-mb` /
+    /// `MRTUNER_STORE_MAX_MB`.
+    pub fn open_capped(
+        dir: &Path,
+        max_bytes: Option<u64>,
+    ) -> Result<ProfileStore, String> {
+        ProfileStore::open_with(dir, true, max_bytes)
     }
 
     /// Open without compacting — inspection (`store stats`) and tests.
     pub fn peek(dir: &Path) -> Result<ProfileStore, String> {
-        ProfileStore::open_with(dir, false)
+        ProfileStore::open_with(dir, false, None)
     }
 
-    fn open_with(dir: &Path, compact: bool) -> Result<ProfileStore, String> {
+    fn open_with(
+        dir: &Path,
+        compact: bool,
+        cap_bytes: Option<u64>,
+    ) -> Result<ProfileStore, String> {
         fs::create_dir_all(dir)
             .map_err(|e| format!("store: create dir {}: {e}", dir.display()))?;
 
@@ -365,29 +730,62 @@ impl ProfileStore {
             eprintln!("store: compaction lock busy; skipping compaction pass");
         }
 
-        let scan = scan_dir(dir)?;
+        let mut scan = scan_dir(dir)?;
         let mut stats = scan.stats;
-        if guard.is_some() && !scan.mergeable.is_empty() {
-            if scan.index_unreadable {
-                // Rewriting the index now would replace the (unreadable
-                // but possibly recoverable) old index with segment data
-                // only.  Leave everything in place for manual recovery.
-                eprintln!(
-                    "store: index unreadable; compaction disabled to avoid data loss"
-                );
-            } else {
-                match write_index(dir, &scan.entries) {
-                    Ok(()) => {
-                        for p in &scan.mergeable {
-                            // Best-effort; also reclaim a dead writer's
-                            // leftover lock so it stops shadowing opens.
-                            let _ = fs::remove_file(p);
-                            let _ = fs::remove_file(lock_path(p));
+        if guard.is_some() {
+            let over_cap =
+                cap_bytes.is_some_and(|cap| index_bytes(&scan.entries) > cap);
+            // Compaction is needed when there are segments to fold, when a
+            // legacy JSONL index should be rewritten as v3, or when the
+            // size cap demands eviction.
+            let need =
+                !scan.mergeable.is_empty() || scan.legacy_index || over_cap;
+            if need {
+                if scan.index_unreadable {
+                    // Rewriting the index now would replace the (unreadable
+                    // but possibly recoverable) old index with segment data
+                    // only.  Leave everything in place for manual recovery.
+                    eprintln!(
+                        "store: index unreadable; compaction disabled to avoid data loss"
+                    );
+                } else {
+                    let evicted = match cap_bytes {
+                        Some(cap) => evict_to_cap(&mut scan.entries, cap),
+                        None => Vec::new(),
+                    };
+                    match write_index(dir, &scan.entries) {
+                        Ok(()) => {
+                            for p in &scan.mergeable {
+                                // Best-effort; also reclaim a dead writer's
+                                // leftover lock so it stops shadowing opens.
+                                let _ = fs::remove_file(p);
+                                let _ = fs::remove_file(lock_path(p));
+                            }
+                            // The legacy index is folded into the binary
+                            // one; drop it so it cannot resurrect records.
+                            let _ =
+                                fs::remove_file(dir.join(LEGACY_INDEX_FILE));
+                            stats.compacted = true;
+                            stats.merged_segments = scan.mergeable.len();
+                            stats.evicted = evicted.len();
+                            if !evicted.is_empty() {
+                                eprintln!(
+                                    "store: size cap: evicted {} \
+                                     least-recently-used record(s)",
+                                    evicted.len()
+                                );
+                            }
                         }
-                        stats.compacted = true;
-                        stats.merged_segments = scan.mergeable.len();
+                        Err(e) => {
+                            // The old index is still authoritative: put the
+                            // would-be evictions back so memory keeps
+                            // agreeing with disk (and evicted stays 0).
+                            for (key, sr) in evicted {
+                                scan.entries.insert(key, sr);
+                            }
+                            eprintln!("store: compaction skipped: {e}");
+                        }
                     }
-                    Err(e) => eprintln!("store: compaction skipped: {e}"),
                 }
             }
         }
@@ -398,12 +796,17 @@ impl ProfileStore {
         // so the initial generation's contents are deterministic.
         let mut journal: Vec<StoreKey> = scan.entries.keys().copied().collect();
         journal.sort();
+        let clock = scan.entries.values().map(|sr| sr.touch).max().unwrap_or(0);
         Ok(ProfileStore {
             dir: dir.to_path_buf(),
             inner: Mutex::new(Inner {
                 entries: scan.entries,
                 journal,
                 dirty: Vec::new(),
+                dirty_count: 0,
+                touched: BTreeSet::new(),
+                persist_touches: cap_bytes.is_some(),
+                clock,
                 writer: None,
             }),
             stats,
@@ -424,26 +827,56 @@ impl ProfileStore {
         s
     }
 
-    /// Stored outcome for `key`, if any prior session simulated it.
+    /// Stored outcome for `key`, if any prior session simulated it.  A
+    /// hit bumps the record's touch generation (it was just *used*), so
+    /// hot records survive size-capped eviction; on a capped open the
+    /// bump is persisted at the next flush.
     pub fn get(&self, key: &StoreKey) -> Option<RepOutcome> {
-        let inner = self.inner.lock().expect("store mutex poisoned");
-        inner.entries.get(key).copied()
+        let mut guard = self.inner.lock().expect("store mutex poisoned");
+        let inner = &mut *guard;
+        match inner.entries.get_mut(key) {
+            Some(sr) => {
+                inner.clock += 1;
+                sr.touch = inner.clock;
+                if inner.persist_touches {
+                    inner.touched.insert(*key);
+                }
+                Some(sr.outcome)
+            }
+            None => None,
+        }
     }
 
     /// Record a freshly simulated outcome.  Buffered in memory until
-    /// [`ProfileStore::flush`]; a value already on disk is not rewritten,
-    /// and a CPU-less value (v1-migrated) never displaces a full one —
-    /// though a full outcome *does* upgrade a CPU-less record in place.
+    /// [`ProfileStore::flush`]; a value already on disk is not rewritten
+    /// (its touch generation is bumped instead), and a CPU-less value
+    /// (v1-migrated) never displaces a full one — though a full outcome
+    /// *does* upgrade a CPU-less record in place.
     pub fn put(&self, key: StoreKey, outcome: RepOutcome) {
-        let mut inner = self.inner.lock().expect("store mutex poisoned");
-        match inner.entries.get(&key) {
-            Some(old) if old.same_bits(&outcome) => {}
-            Some(old) if old.cpu_s.is_some() && outcome.cpu_s.is_none() => {}
-            _ => {
-                inner.entries.insert(key, outcome);
-                inner.journal.push(key);
-                inner.dirty.push(encode_record(&key, &outcome));
+        let mut guard = self.inner.lock().expect("store mutex poisoned");
+        let inner = &mut *guard;
+        inner.clock += 1;
+        let clock = inner.clock;
+        let known = match inner.entries.get_mut(&key) {
+            Some(old)
+                if old.outcome.same_bits(&outcome)
+                    || (old.outcome.cpu_s.is_some()
+                        && outcome.cpu_s.is_none()) =>
+            {
+                // Re-putting a known value is a use: recency only.
+                old.touch = clock;
+                if inner.persist_touches {
+                    inner.touched.insert(key);
+                }
+                true
             }
+            _ => false,
+        };
+        if !known {
+            inner.entries.insert(key, StoredRep { outcome, touch: clock });
+            inner.journal.push(key);
+            encode_record_bin_into(&key, &outcome, clock, &mut inner.dirty);
+            inner.dirty_count += 1;
         }
     }
 
@@ -474,7 +907,7 @@ impl ProfileStore {
                 let outcome = inner
                     .entries
                     .get(k)
-                    .copied()
+                    .map(|sr| sr.outcome)
                     .expect("journaled key always resident");
                 (*k, outcome)
             })
@@ -483,14 +916,14 @@ impl ProfileStore {
     }
 
     /// Re-scan the store directory and fold in records written by *other*
-    /// sessions since this store was opened (their flushed segment lines
-    /// and any index rewritten by their compactions).  Returns how many
-    /// records were new.  Records this instance already holds are left
-    /// untouched — in particular a full outcome is never displaced by a
-    /// CPU-less duplicate, and by the determinism invariant equal keys
-    /// carry equal values, so keeping the resident record is always
-    /// sound.  This is the polling half of the trainer's
-    /// profile-store-to-model loop.
+    /// sessions since this store was opened (their flushed segment
+    /// records — binary v3 or legacy JSONL — and any index rewritten by
+    /// their compactions).  Returns how many records were new.  Records
+    /// this instance already holds are left untouched — in particular a
+    /// full outcome is never displaced by a CPU-less duplicate, and by
+    /// the determinism invariant equal keys carry equal values, so
+    /// keeping the resident record is always sound.  This is the polling
+    /// half of the trainer's profile-store-to-model loop.
     ///
     /// Polls are incremental: store files are fingerprinted by
     /// `(name, length)`, and only *changed* files are re-parsed — an
@@ -498,7 +931,7 @@ impl ProfileStore {
     /// the growing segment(s), and the (large) index is re-read only
     /// when a compaction replaced it.  Lengths are recorded only after
     /// a file was successfully ingested, so a transient read failure
-    /// can never suppress future re-scans; a torn tail line (racing a
+    /// can never suppress future re-scans; a torn tail record (racing a
     /// writer's flush) is skipped now and re-parsed when the file next
     /// grows, because any completed write changes the length observed
     /// *before* this read started.
@@ -518,14 +951,14 @@ impl ProfileStore {
         }
         // Re-parse only the changed files, tolerating (and logging)
         // corruption exactly like the open pass.
-        let mut parsed: HashMap<StoreKey, RepOutcome> = HashMap::new();
+        let mut parsed: HashMap<StoreKey, StoredRep> = HashMap::new();
         let mut stats = StoreStats::default();
         let mut ingested: Vec<(String, u64)> = Vec::new();
         for (name, len) in changed {
             let path = self.dir.join(&name);
-            match fs::read_to_string(&path) {
-                Ok(text) => {
-                    load_lines(&path, &text, &mut parsed, &mut stats);
+            match fs::read(&path) {
+                Ok(bytes) => {
+                    let _ = ingest_bytes(&path, &bytes, &mut parsed, &mut stats);
                     ingested.push((name, len));
                 }
                 // Deleted mid-refresh (racing compaction): its records
@@ -537,23 +970,33 @@ impl ProfileStore {
                 ),
             }
         }
-        let mut inner = self.inner.lock().expect("store mutex poisoned");
-        let mut fresh: Vec<(StoreKey, RepOutcome)> = parsed
-            .into_iter()
-            .filter(|(k, o)| match inner.entries.get(k) {
-                None => true,
-                Some(old) => old.cpu_s.is_none() && o.cpu_s.is_some(),
-            })
-            .collect();
+        let mut guard = self.inner.lock().expect("store mutex poisoned");
+        let inner = &mut *guard;
+        let mut fresh: Vec<(StoreKey, StoredRep)> = Vec::new();
+        for (key, sr) in parsed {
+            inner.clock = inner.clock.max(sr.touch);
+            match inner.entries.get_mut(&key) {
+                Some(old) => {
+                    // Another session used this record: keep the newest
+                    // recency, but never downgrade a full outcome.
+                    old.touch = old.touch.max(sr.touch);
+                    if old.outcome.cpu_s.is_none() && sr.outcome.cpu_s.is_some()
+                    {
+                        fresh.push((key, StoredRep { outcome: sr.outcome, touch: old.touch }));
+                    }
+                }
+                None => fresh.push((key, sr)),
+            }
+        }
         // Sort so concurrent writers' records land in the journal in a
         // deterministic order whatever the directory scan produced.
         fresh.sort_by(|a, b| a.0.cmp(&b.0));
         let new_records = fresh.len() as u64;
-        for (key, outcome) in fresh {
-            inner.entries.insert(key, outcome);
+        for (key, sr) in fresh {
+            inner.entries.insert(key, sr);
             inner.journal.push(key);
         }
-        drop(inner);
+        drop(guard);
         let mut state =
             self.refresh_state.lock().expect("store refresh-state poisoned");
         // Forget files compaction removed, so the map stays bounded by
@@ -580,39 +1023,52 @@ impl ProfileStore {
 
     /// Records buffered but not yet appended to this session's segment.
     pub fn pending(&self) -> usize {
-        self.inner.lock().expect("store mutex poisoned").dirty.len()
+        self.inner.lock().expect("store mutex poisoned").dirty_count
     }
 
-    /// Append buffered records to this session's segment (created, with
-    /// its liveness lock, on first flush).  Called by the executor at
-    /// campaign boundaries and from `Drop`.
+    /// Append buffered records — new results, plus (for capped opens)
+    /// recency bumps for records this session looked up — to this
+    /// session's segment (created, with its liveness lock, on first
+    /// flush).  Called by the executor at campaign boundaries and from
+    /// `Drop`.
     pub fn flush(&self) -> Result<(), String> {
         let mut guard = self.inner.lock().expect("store mutex poisoned");
         let inner = &mut *guard;
-        if inner.dirty.is_empty() {
+        if inner.dirty.is_empty() && inner.touched.is_empty() {
             return Ok(());
         }
         if inner.writer.is_none() {
             inner.writer = Some(SegmentWriter::create(&self.dir)?);
         }
+        let mut buf =
+            Vec::with_capacity(inner.dirty.len() + 96 * inner.touched.len());
+        buf.extend_from_slice(&inner.dirty);
+        // Recency bumps travel as full (deduplicating) record frames; the
+        // next compaction folds them and keeps the newest touch.
+        for key in &inner.touched {
+            if let Some(sr) = inner.entries.get(key) {
+                encode_record_bin_into(key, &sr.outcome, sr.touch, &mut buf);
+            }
+        }
         let writer = inner.writer.as_mut().expect("writer just created");
-        let mut buf = inner.dirty.join("\n");
-        buf.push('\n');
         writer
             .file
-            .write_all(buf.as_bytes())
+            .write_all(&buf)
             .map_err(|e| format!("store: append failed: {e}"))?;
         writer
             .file
             .flush()
             .map_err(|e| format!("store: flush failed: {e}"))?;
         inner.dirty.clear();
+        inner.dirty_count = 0;
+        inner.touched.clear();
         Ok(())
     }
 
     /// Delete every store file under `dir` (index, segments, locks,
-    /// leftover temp files).  Returns how many files were removed; a
-    /// missing directory is an empty store, not an error.
+    /// leftover temp files — binary and legacy JSONL alike).  Returns how
+    /// many files were removed; a missing directory is an empty store,
+    /// not an error.
     pub fn clear(dir: &Path) -> Result<usize, String> {
         let rd = match fs::read_dir(dir) {
             Ok(rd) => rd,
@@ -625,11 +1081,16 @@ impl ProfileStore {
             let name = entry.file_name();
             let name = name.to_string_lossy();
             let ours = name == INDEX_FILE
+                || name == LEGACY_INDEX_FILE
                 || name == COMPACT_LOCK
                 || name.starts_with(&format!("{INDEX_FILE}.tmp-"))
+                || name.starts_with(&format!("{LEGACY_INDEX_FILE}.tmp-"))
                 || (name.starts_with(SEGMENT_PREFIX)
                     && (name.ends_with(SEGMENT_SUFFIX)
-                        || name.ends_with(&format!("{SEGMENT_SUFFIX}.lock"))));
+                        || name.ends_with(LEGACY_SEGMENT_SUFFIX)
+                        || name.ends_with(&format!("{SEGMENT_SUFFIX}.lock"))
+                        || name
+                            .ends_with(&format!("{LEGACY_SEGMENT_SUFFIX}.lock"))));
             if ours {
                 fs::remove_file(entry.path())
                     .map_err(|e| format!("store: remove {name}: {e}"))?;
@@ -649,59 +1110,89 @@ impl Drop for ProfileStore {
     }
 }
 
+// --------------------------------------------------- directory scanning
+
 /// Everything one pass over the store directory learns.
 struct Scan {
-    entries: HashMap<StoreKey, RepOutcome>,
+    entries: HashMap<StoreKey, StoredRep>,
     /// Segments safe to fold into the index and delete: readable, not
-    /// held by a live writer, and free of newer-version records (v1
-    /// segments *are* mergeable — migration rewrites them as v2).
+    /// held by a live writer, and free of newer-version records (legacy
+    /// JSONL segments *are* mergeable — migration rewrites them as v3).
     mergeable: Vec<PathBuf>,
     stats: StoreStats,
-    /// The index existed but could not be read — compaction must not
-    /// rewrite it from segment data alone.
+    /// The index existed but could not be read (or belongs to a newer
+    /// build) — compaction must not rewrite it from segment data alone.
     index_unreadable: bool,
+    /// A readable legacy JSONL index is present: compaction should run
+    /// even with no segments to fold, so the index is rewritten as v3.
+    legacy_index: bool,
 }
 
 /// Read the index and every segment under `dir` into memory, tolerating
-/// (and tallying) corruption.  Load order is deterministic (sorted
-/// names), and by determinism of the simulator any duplicate keys carry
-/// equal values, so later-wins is harmless — with one exception handled
-/// in [`load_lines`]: a CPU-less (v1-migrated) duplicate never displaces
-/// a full outcome, whatever the load order.
+/// (and tallying) corruption.  Load order is deterministic (legacy index,
+/// binary index, then segments in sorted name order), and by determinism
+/// of the simulator any duplicate keys carry equal values, so later-wins
+/// is harmless — with one exception handled in [`fold_entry`]: a CPU-less
+/// (v1-migrated) duplicate never displaces a full outcome, whatever the
+/// load order.  Duplicate touches resolve to the maximum (newest use).
 fn scan_dir(dir: &Path) -> Result<Scan, String> {
     let mut scan = Scan {
         entries: HashMap::new(),
         mergeable: Vec::new(),
         stats: StoreStats::default(),
         index_unreadable: false,
+        legacy_index: false,
     };
-    let index_path = dir.join(INDEX_FILE);
-    match fs::read_to_string(&index_path) {
-        Ok(text) => {
-            load_lines(&index_path, &text, &mut scan.entries, &mut scan.stats)
-        }
-        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
-        Err(e) => {
-            scan.stats.corrupt_segments += 1;
-            scan.index_unreadable = true;
-            eprintln!(
-                "store: skipping unreadable index {}: {e}",
-                index_path.display()
-            );
+    for (name, legacy) in [(LEGACY_INDEX_FILE, true), (INDEX_FILE, false)] {
+        let path = dir.join(name);
+        match fs::read(&path) {
+            Ok(bytes) => {
+                let stale_before = scan.stats.stale_lines;
+                let ok = ingest_bytes(
+                    &path,
+                    &bytes,
+                    &mut scan.entries,
+                    &mut scan.stats,
+                );
+                if !ok || scan.stats.stale_lines != stale_before {
+                    // Unreadable, or written by a newer build: either way
+                    // this open does not know the index's full contents.
+                    scan.index_unreadable = true;
+                } else if legacy {
+                    scan.legacy_index = true;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                scan.stats.corrupt_segments += 1;
+                scan.index_unreadable = true;
+                eprintln!(
+                    "store: skipping unreadable index {}: {e}",
+                    path.display()
+                );
+            }
         }
     }
 
     for path in segment_paths(dir)? {
         scan.stats.segments_seen += 1;
         let locked = segment_is_locked(&path);
-        match fs::read_to_string(&path) {
-            Ok(text) => {
+        match fs::read(&path) {
+            Ok(bytes) => {
                 let stale_before = scan.stats.stale_lines;
-                load_lines(&path, &text, &mut scan.entries, &mut scan.stats);
+                let readable = ingest_bytes(
+                    &path,
+                    &bytes,
+                    &mut scan.entries,
+                    &mut scan.stats,
+                );
                 // A locked segment is still being written; one with
-                // other-version lines belongs to another build.  Both
+                // newer-version content belongs to another build.  Both
                 // are merged-from but never deleted.
-                if !locked && scan.stats.stale_lines == stale_before {
+                if readable
+                    && !locked
+                    && scan.stats.stale_lines == stale_before
+                {
                     scan.mergeable.push(path);
                 }
             }
@@ -719,6 +1210,167 @@ fn scan_dir(dir: &Path) -> Result<Scan, String> {
     }
     Ok(scan)
 }
+
+/// Fold one decoded record into the in-memory map: later wins, except a
+/// CPU-less outcome never displaces a full one, and the touch resolves
+/// to the newest (maximum) generation either side has seen.
+fn fold_entry(
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    key: StoreKey,
+    rep: StoredRep,
+) {
+    match entries.get_mut(&key) {
+        Some(old) => {
+            old.touch = old.touch.max(rep.touch);
+            if !(old.outcome.cpu_s.is_some() && rep.outcome.cpu_s.is_none()) {
+                old.outcome = rep.outcome;
+            }
+        }
+        None => {
+            entries.insert(key, rep);
+        }
+    }
+}
+
+/// Fold one store file's bytes into `entries`, dispatching on format:
+/// binary v3 (`MRTS` magic) or legacy JSONL.  Returns `false` when the
+/// file as a whole could not be used (not UTF-8 JSONL, torn binary
+/// header, or a newer binary version) — such files are never merged.
+fn ingest_bytes(
+    path: &Path,
+    bytes: &[u8],
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    stats: &mut StoreStats,
+) -> bool {
+    if bytes.is_empty() {
+        return true;
+    }
+    if bytes.len() >= 4 && bytes[..4] == BIN_MAGIC {
+        if bytes.len() < BIN_HEADER_LEN {
+            // Torn header write: no records to recover.
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated binary header in {}",
+                path.display()
+            );
+            return true;
+        }
+        let ver = u32::from_le_bytes(
+            bytes[4..BIN_HEADER_LEN].try_into().expect("4 bytes"),
+        );
+        if !(3..=STORE_FORMAT_VERSION).contains(&ver) {
+            // A whole file of a newer build: skip and preserve.
+            stats.stale_lines += 1;
+            return true;
+        }
+        load_bin_records(path, bytes, entries, stats);
+        true
+    } else {
+        match std::str::from_utf8(bytes) {
+            Ok(text) => {
+                load_lines(path, text, entries, stats);
+                true
+            }
+            Err(_) => {
+                stats.corrupt_segments += 1;
+                eprintln!(
+                    "store: skipping non-UTF-8, non-binary file {}",
+                    path.display()
+                );
+                false
+            }
+        }
+    }
+}
+
+/// Walk the framed records of a binary store file (header already
+/// validated), tolerating corruption: a garbled payload of plausible
+/// length is skipped record-by-record; a torn length prefix ends the
+/// file (nothing after it can be re-synchronized).
+fn load_bin_records(
+    path: &Path,
+    bytes: &[u8],
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    stats: &mut StoreStats,
+) {
+    let mut i = BIN_HEADER_LEN;
+    let mut first_bad = true;
+    while i < bytes.len() {
+        let Some(prefix) = bytes.get(i..i + 4) else {
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated record tail in {}",
+                path.display()
+            );
+            return;
+        };
+        let len = u32::from_le_bytes(prefix.try_into().expect("4 bytes")) as usize;
+        if len == 0 || len > MAX_RECORD_LEN || i + 4 + len > bytes.len() {
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated/garbled record tail in {}",
+                path.display()
+            );
+            return;
+        }
+        match decode_payload(&bytes[i + 4..i + 4 + len]) {
+            Ok((key, outcome, touch)) => {
+                fold_entry(entries, key, StoredRep { outcome, touch });
+            }
+            Err(e) => {
+                stats.corrupt_lines += 1;
+                if first_bad {
+                    first_bad = false;
+                    eprintln!(
+                        "store: skipping corrupt record(s) in {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        i += 4 + len;
+    }
+}
+
+/// Fold every decodable JSONL line of `text` into `entries`, tallying
+/// skips and migrations.  Duplicate-key resolution is [`fold_entry`]'s.
+fn load_lines(
+    path: &Path,
+    text: &str,
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    stats: &mut StoreStats,
+) {
+    let mut first_bad = true;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match decode_record(line) {
+            Ok((key, outcome, ver)) => {
+                if ver < STORE_FORMAT_VERSION {
+                    stats.migrated_lines += 1;
+                }
+                // JSONL predates touch tracking: migrated records start
+                // at generation 0, i.e. coldest — first out under a cap.
+                fold_entry(entries, key, StoredRep { outcome, touch: 0 });
+            }
+            Err(RecordError::StaleVersion(_)) => stats.stale_lines += 1,
+            Err(RecordError::Corrupt(e)) => {
+                stats.corrupt_lines += 1;
+                if first_bad {
+                    first_bad = false;
+                    eprintln!(
+                        "store: skipping corrupt line(s) in {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------- locks, paths, compaction
 
 /// Liveness-lock path for a segment file (`<segment>.lock`).
 fn lock_path(segment: &Path) -> PathBuf {
@@ -758,6 +1410,15 @@ fn pid_alive(_pid: u32) -> bool {
     true
 }
 
+/// Whether `name` is a store data file (index or segment, either format).
+fn is_store_file(name: &str) -> bool {
+    name == INDEX_FILE
+        || name == LEGACY_INDEX_FILE
+        || (name.starts_with(SEGMENT_PREFIX)
+            && (name.ends_with(SEGMENT_SUFFIX)
+                || name.ends_with(LEGACY_SEGMENT_SUFFIX)))
+}
+
 /// `(name, length)` of every store file (index + segments) under `dir`,
 /// sorted by name — the cheap change detector behind
 /// [`ProfileStore::refresh`].  Segments are append-only and compaction
@@ -770,10 +1431,7 @@ fn dir_fingerprint(dir: &Path) -> Result<Vec<(String, u64)>, String> {
     for entry in rd {
         let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
         let name = entry.file_name().to_string_lossy().into_owned();
-        let ours = name == INDEX_FILE
-            || (name.starts_with(SEGMENT_PREFIX)
-                && name.ends_with(SEGMENT_SUFFIX));
-        if !ours {
+        if !is_store_file(&name) {
             continue;
         }
         // A file deleted mid-scan (racing compaction) counts as length 0;
@@ -785,15 +1443,19 @@ fn dir_fingerprint(dir: &Path) -> Result<Vec<(String, u64)>, String> {
     Ok(out)
 }
 
-/// All segment files under `dir`, sorted by name.
+/// All segment files under `dir` (binary and legacy), sorted by name.
 fn segment_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
-    let rd = fs::read_dir(dir).map_err(|e| format!("store: read {}: {e}", dir.display()))?;
+    let rd = fs::read_dir(dir)
+        .map_err(|e| format!("store: read {}: {e}", dir.display()))?;
     let mut out = Vec::new();
     for entry in rd {
         let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
         let name = entry.file_name();
         let name = name.to_string_lossy();
-        if name.starts_with(SEGMENT_PREFIX) && name.ends_with(SEGMENT_SUFFIX) {
+        if name.starts_with(SEGMENT_PREFIX)
+            && (name.ends_with(SEGMENT_SUFFIX)
+                || name.ends_with(LEGACY_SEGMENT_SUFFIX))
+        {
             out.push(entry.path());
         }
     }
@@ -801,70 +1463,77 @@ fn segment_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
     Ok(out)
 }
 
-/// Fold every decodable line of `text` into `entries`, tallying skips
-/// and v1 migrations.  On duplicate keys the later line wins, except
-/// that a CPU-less outcome never displaces a full one (an executor
-/// upgrade record must beat the migrated v1 line it upgrades, whichever
-/// file loads first).
-fn load_lines(
-    path: &Path,
-    text: &str,
-    entries: &mut HashMap<StoreKey, RepOutcome>,
-    stats: &mut StoreStats,
-) {
-    let mut first_bad = true;
-    for line in text.lines() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        match decode_record(line) {
-            Ok((key, outcome, ver)) => {
-                if ver < STORE_FORMAT_VERSION {
-                    stats.migrated_lines += 1;
-                }
-                match entries.get(&key) {
-                    Some(old)
-                        if old.cpu_s.is_some() && outcome.cpu_s.is_none() => {}
-                    _ => {
-                        entries.insert(key, outcome);
-                    }
-                }
-            }
-            Err(RecordError::StaleVersion(_)) => stats.stale_lines += 1,
-            Err(RecordError::Corrupt(e)) => {
-                stats.corrupt_lines += 1;
-                if first_bad {
-                    first_bad = false;
-                    eprintln!(
-                        "store: skipping corrupt line(s) in {}: {e}",
-                        path.display()
-                    );
-                }
-            }
-        }
-    }
+/// Exact byte size of the binary index [`write_index`] would produce.
+fn index_bytes(entries: &HashMap<StoreKey, StoredRep>) -> u64 {
+    BIN_HEADER_LEN as u64
+        + entries
+            .iter()
+            .map(|(k, sr)| frame_len(k, &sr.outcome) as u64)
+            .sum::<u64>()
 }
 
-/// Rewrite the index from `entries` via write-to-temp + atomic rename.
-/// Must only be called while holding the [`CompactGuard`].
+/// Drop least-recently-used records until the index fits `cap` bytes,
+/// returning what was removed (so a failed index rewrite can restore
+/// them).  Paper-plane repetitions are pinned — they are the online
+/// trainer's training data ([`crate::coordinator::Trainer`] tails
+/// exactly those keys) and must never vanish between two of its polls.
+/// Eviction order is deterministic: ascending `(touch, key)`.  When
+/// pinned records alone exceed the cap, everything unpinned goes and
+/// the overshoot is kept (with a warning) rather than dropping
+/// training data.
+fn evict_to_cap(
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    cap: u64,
+) -> Vec<(StoreKey, StoredRep)> {
+    let mut total = index_bytes(entries);
+    if total <= cap {
+        return Vec::new();
+    }
+    let mut candidates: Vec<(u64, StoreKey)> = entries
+        .iter()
+        .filter(|(k, _)| !k.is_paper_plane())
+        .map(|(k, sr)| (sr.touch, *k))
+        .collect();
+    candidates.sort();
+    let mut evicted = Vec::new();
+    for (_, key) in candidates {
+        if total <= cap {
+            break;
+        }
+        if let Some(sr) = entries.remove(&key) {
+            total -= frame_len(&key, &sr.outcome) as u64;
+            evicted.push((key, sr));
+        }
+    }
+    if total > cap {
+        eprintln!(
+            "store: size cap {cap} B is below the pinned paper-plane \
+             records ({total} B); keeping them anyway"
+        );
+    }
+    evicted
+}
+
+/// Rewrite the index from `entries` as binary v3 via write-to-temp +
+/// atomic rename.  Must only be called while holding the
+/// [`CompactGuard`].
 fn write_index(
     dir: &Path,
-    entries: &HashMap<StoreKey, RepOutcome>,
+    entries: &HashMap<StoreKey, StoredRep>,
 ) -> Result<(), String> {
-    // Sorted lines make the index byte-deterministic: compacting an
+    // Key-sorted records make the index byte-deterministic: compacting an
     // already-compact store rewrites the identical file (idempotence).
-    let mut lines: Vec<String> = entries
-        .iter()
-        .map(|(k, outcome)| encode_record(k, outcome))
-        .collect();
-    lines.sort();
-    let mut body = lines.join("\n");
-    if !body.is_empty() {
-        body.push('\n');
+    let mut records: Vec<(&StoreKey, &StoredRep)> = entries.iter().collect();
+    records.sort_by(|a, b| a.0.cmp(b.0));
+    let mut body = Vec::with_capacity(
+        BIN_HEADER_LEN + records.len() * 96,
+    );
+    body.extend_from_slice(&bin_header());
+    for (key, sr) in records {
+        encode_record_bin_into(key, &sr.outcome, sr.touch, &mut body);
     }
     let tmp = dir.join(format!("{INDEX_FILE}.tmp-{}", std::process::id()));
-    fs::write(&tmp, body).map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    fs::write(&tmp, &body).map_err(|e| format!("write {}: {e}", tmp.display()))?;
     fs::rename(&tmp, dir.join(INDEX_FILE))
         .map_err(|e| format!("rename {}: {e}", tmp.display()))
 }
@@ -960,7 +1629,7 @@ mod tests {
     }
 
     #[test]
-    fn record_round_trips_bit_exactly() {
+    fn jsonl_record_round_trips_bit_exactly() {
         for (i, t) in [1523.25, 0.1 + 0.2, f64::MIN_POSITIVE, 1e300].iter().enumerate() {
             let mut k = key(20, 5, i as u32, u64::MAX - i as u64);
             k.input_gb_bits = (1.5 + i as f64).to_bits();
@@ -971,10 +1640,59 @@ mod tests {
                 let line = encode_record(&k, &outcome);
                 let (k2, o2, ver) = decode_record(&line).unwrap();
                 assert_eq!(k2, k);
-                assert_eq!(ver, STORE_FORMAT_VERSION);
+                assert_eq!(ver, JSONL_RECORD_VERSION);
                 assert!(o2.same_bits(&outcome));
             }
         }
+    }
+
+    #[test]
+    fn binary_record_round_trips_bit_exactly() {
+        for (i, t) in
+            [1523.25, 0.1 + 0.2, f64::MIN_POSITIVE, 1e300, f64::NAN]
+                .iter()
+                .enumerate()
+        {
+            let mut k = key(20, 5, i as u32, u64::MAX - i as u64);
+            k.input_gb_bits = (1.5 + i as f64).to_bits();
+            k.block_mb = 32 << i;
+            for outcome in
+                [RepOutcome::full(*t, t * 4.0 + 1.0), RepOutcome::time_only(*t)]
+            {
+                let frame = encode_record_bin(&k, &outcome, 77 + i as u64);
+                assert_eq!(frame.len(), frame_len(&k, &outcome));
+                let (k2, o2, touch, used) = decode_record_bin(&frame).unwrap();
+                assert_eq!(k2, k);
+                assert_eq!(touch, 77 + i as u64);
+                assert_eq!(used, frame.len());
+                assert!(o2.same_bits(&outcome));
+            }
+        }
+    }
+
+    #[test]
+    fn binary_decode_rejects_truncation_and_garbage() {
+        let frame = encode_record_bin(
+            &key(5, 5, 0, 1),
+            &RepOutcome::full(2.0, 3.0),
+            9,
+        );
+        for cut in [0, 3, 4, frame.len() - 1] {
+            assert!(decode_record_bin(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // A garbled length prefix is implausible, not a panic.
+        let mut bad = frame.clone();
+        bad[0] = 0xFF;
+        bad[1] = 0xFF;
+        bad[2] = 0xFF;
+        bad[3] = 0x7F;
+        assert!(decode_record_bin(&bad).is_err());
+        // Trailing payload bytes are rejected (payload must be exact).
+        let mut padded = frame.clone();
+        let len = u32::from_le_bytes(padded[0..4].try_into().unwrap()) + 1;
+        padded[0..4].copy_from_slice(&len.to_le_bytes());
+        padded.push(0);
+        assert!(decode_record_bin(&padded).is_err());
     }
 
     #[test]
@@ -1003,11 +1721,12 @@ mod tests {
         assert_eq!(k2, k);
         assert_eq!(k2.input_gb(), StoreKey::PAPER_INPUT_GB);
         assert_eq!(k2.block_mb, StoreKey::PAPER_BLOCK_MB);
+        assert!(k2.is_paper_plane());
         assert_eq!(o2, RepOutcome::time_only(1523.25));
     }
 
     #[test]
-    fn v1_segment_survives_compaction_and_answers_v2_lookup() {
+    fn v1_segment_survives_compaction_and_answers_v3_lookup() {
         let dir = tmp_dir("migrate");
         std::fs::create_dir_all(&dir).unwrap();
         let k = key(20, 5, 0, 7);
@@ -1024,13 +1743,60 @@ mod tests {
             assert_eq!(st.stale_lines, 0);
             assert_eq!(store.get(&k), Some(RepOutcome::time_only(100.5)));
         }
-        // The rewritten index is pure v2 and still answers after reopen.
-        let index = std::fs::read_to_string(dir.join(INDEX_FILE)).unwrap();
-        assert!(index.contains("\"v\":2"));
-        assert!(!index.contains("\"v\":1"));
+        // The rewritten index is pure v3 binary and still answers after
+        // reopen.
+        let recs = read_file_records(&dir.join(INDEX_FILE)).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(recs.iter().all(|(_, _, v)| *v == STORE_FORMAT_VERSION));
+        assert!(!dir.join(LEGACY_INDEX_FILE).exists());
         let store = ProfileStore::open(&dir).unwrap();
         assert_eq!(store.stats().migrated_lines, 0, "migration is one-time");
         assert_eq!(store.get(&k), Some(RepOutcome::time_only(100.5)));
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_jsonl_index_is_rewritten_as_binary() {
+        let dir = tmp_dir("legacy_index");
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key(10, 10, 0, 3);
+        std::fs::write(
+            dir.join(LEGACY_INDEX_FILE),
+            format!("{}\n", encode_record(&k, &RepOutcome::full(5.0, 1.0))),
+        )
+        .unwrap();
+        {
+            // No segments at all — the legacy index alone triggers the
+            // upgrade compaction.
+            let store = ProfileStore::open(&dir).unwrap();
+            assert!(store.stats().compacted);
+            assert_eq!(store.get(&k), Some(RepOutcome::full(5.0, 1.0)));
+        }
+        assert!(dir.join(INDEX_FILE).exists());
+        assert!(!dir.join(LEGACY_INDEX_FILE).exists());
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.get(&k), Some(RepOutcome::full(5.0, 1.0)));
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_binary_file_is_preserved_not_merged() {
+        let dir = tmp_dir("stale_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A segment written by a hypothetical v4 build.
+        let mut future = Vec::new();
+        future.extend_from_slice(&BIN_MAGIC);
+        future.extend_from_slice(&4u32.to_le_bytes());
+        future.extend_from_slice(&[1, 2, 3, 4]);
+        let seg = dir.join("seg-feed0000-0000-future.bin");
+        std::fs::write(&seg, &future).unwrap();
+        let store = ProfileStore::open(&dir).unwrap();
+        let st = store.stats();
+        assert_eq!(st.stale_lines, 1, "future file counted as stale");
+        assert_eq!(st.corrupt_lines, 0);
+        assert!(seg.exists(), "preserved for the build that understands it");
         drop(store);
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -1048,8 +1814,8 @@ mod tests {
             let mut entries = HashMap::new();
             let mut stats = StoreStats::default();
             load_lines(Path::new("test"), &lines, &mut entries, &mut stats);
-            assert_eq!(stats.migrated_lines, 1);
-            assert_eq!(entries.get(&k), Some(&full));
+            assert_eq!(stats.migrated_lines, 2, "v1 and v2 lines both migrate");
+            assert_eq!(entries.get(&k).map(|sr| sr.outcome), Some(full));
         }
     }
 
@@ -1224,6 +1990,112 @@ mod tests {
         assert_eq!(reader.refresh().unwrap(), 0, "downgrade not folded");
         assert_eq!(reader.get(&k), Some(RepOutcome::full(70.0, 7.0)));
         drop(reader);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A key off the paper plane, with a distinguishable index `i` and a
+    /// put order that fixes its touch generation.
+    fn ext4_key(i: u32) -> StoreKey {
+        StoreKey {
+            cluster: 0xDEAD_BEEF_0BAD_F00D,
+            app: AppId::WordCount,
+            num_mappers: 5 + i,
+            num_reducers: 7,
+            input_gb_bits: 2.0f64.to_bits(),
+            block_mb: 128,
+            rep: 0,
+            base_seed: 2,
+        }
+    }
+
+    #[test]
+    fn eviction_respects_cap_and_pins_paper_plane() {
+        let dir = tmp_dir("evict");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            // Paper-plane reps first: the *lowest* touch generations, so
+            // only pinning (not recency) can save them.
+            for rep in 0..4 {
+                store.put(key(20, 5, rep, 1), RepOutcome::full(100.0 + rep as f64, 1.0));
+            }
+            // Then 50 extended-sweep records, touches ascending with i.
+            for i in 0..50 {
+                store.put(ext4_key(i), RepOutcome::full(10.0 + i as f64, 0.5));
+            }
+            store.flush().unwrap();
+        }
+        let store = ProfileStore::open_capped(&dir, Some(2048)).unwrap();
+        let st = store.stats();
+        assert!(st.compacted);
+        assert!(st.evicted > 0, "cap forced eviction: {st}");
+        assert!(
+            std::fs::metadata(dir.join(INDEX_FILE)).unwrap().len() <= 2048,
+            "index fits the cap"
+        );
+        for rep in 0..4 {
+            assert!(
+                store.get(&key(20, 5, rep, 1)).is_some(),
+                "paper-plane rep {rep} pinned"
+            );
+        }
+        // LRU order: the coldest extended record went first, the hottest
+        // survived.
+        assert!(store.get(&ext4_key(0)).is_none(), "coldest evicted");
+        assert!(store.get(&ext4_key(49)).is_some(), "hottest kept");
+        drop(store);
+        // Eviction is durable: an uncapped reopen does not resurrect.
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.stats().evicted, 0);
+        assert!(store.get(&ext4_key(0)).is_none());
+        assert!(store.get(&key(20, 5, 0, 1)).is_some());
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capped_open_without_pressure_evicts_nothing() {
+        let dir = tmp_dir("evict_none");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            for i in 0..10 {
+                store.put(ext4_key(i), RepOutcome::full(1.0 + i as f64, 0.1));
+            }
+            store.flush().unwrap();
+        }
+        let store =
+            ProfileStore::open_capped(&dir, Some(1024 * 1024)).unwrap();
+        assert_eq!(store.stats().evicted, 0);
+        assert_eq!(store.len(), 10);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lookup_hits_refresh_recency_across_sessions() {
+        let dir = tmp_dir("touch");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            for i in 0..20 {
+                store.put(ext4_key(i), RepOutcome::full(1.0 + i as f64, 0.1));
+            }
+            store.flush().unwrap();
+        }
+        {
+            // A second *capped* session uses the coldest record; the
+            // hit's touch bump is persisted on drop.  (An uncapped
+            // session bumps recency in memory only — warm runs without a
+            // cap must stay write-free.)
+            let store =
+                ProfileStore::open_capped(&dir, Some(1024 * 1024)).unwrap();
+            assert!(store.get(&ext4_key(0)).is_some());
+        }
+        // Cap sized to keep only a handful: the freshly-used record 0
+        // must now outlive colder neighbours.
+        let store = ProfileStore::open_capped(&dir, Some(400)).unwrap();
+        assert!(store.stats().evicted > 0);
+        assert!(store.get(&ext4_key(0)).is_some(), "recent hit survives");
+        assert!(store.get(&ext4_key(1)).is_none(), "cold neighbour evicted");
+        drop(store);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

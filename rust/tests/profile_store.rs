@@ -10,9 +10,16 @@ use std::process::Command;
 
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
+use mrtuner::coordinator::Trainer;
 use mrtuner::mr::RepOutcome;
-use mrtuner::profiler::store::{decode_record, encode_record, RecordError};
-use mrtuner::profiler::{CampaignExecutor, ExperimentSpec, ProfileStore, StoreKey};
+use mrtuner::profiler::store::{
+    decode_record, decode_record_bin, encode_record, encode_record_bin,
+    read_file_records, RecordError,
+};
+use mrtuner::profiler::{
+    cluster_fingerprint, CampaignExecutor, ExperimentSpec, ProfileStore,
+    StoreKey,
+};
 use mrtuner::util::bytes::hex_u64;
 use mrtuner::util::json::Json;
 use mrtuner::util::prop::forall;
@@ -36,7 +43,7 @@ fn seg_files(dir: &PathBuf) -> Vec<PathBuf> {
         .map(|e| e.unwrap().path())
         .filter(|p| {
             let n = p.file_name().unwrap().to_string_lossy().into_owned();
-            n.starts_with("seg-") && n.ends_with(".jsonl")
+            n.starts_with("seg-") && n.ends_with(".bin")
         })
         .collect();
     out.sort();
@@ -72,6 +79,96 @@ fn record_codec_round_trips_any_key_and_bits() {
         assert_eq!(ver, 2);
         assert!(o2.same_bits(&outcome));
     });
+}
+
+/// The binary v3 codec under the same adversarial population: random
+/// `f64` bit patterns (NaNs with payloads, infinities, subnormals) must
+/// survive the frame round-trip bit for bit, together with the touch
+/// generation the LRU eviction sorts by.
+#[test]
+fn binary_record_round_trips_any_key_and_bits() {
+    forall("binary store record round-trip", 200, |rng| {
+        let apps = AppId::all();
+        let key = StoreKey {
+            cluster: rng.next_u64(),
+            app: apps[rng.range_usize(0, apps.len())],
+            num_mappers: rng.next_u64() as u32,
+            num_reducers: rng.next_u64() as u32,
+            input_gb_bits: rng.next_u64(),
+            block_mb: rng.next_u64() as u32,
+            rep: rng.next_u64() as u32,
+            base_seed: rng.next_u64(),
+        };
+        let time_s = f64::from_bits(rng.next_u64());
+        let outcome = if rng.next_u64() % 2 == 0 {
+            RepOutcome::full(time_s, f64::from_bits(rng.next_u64()))
+        } else {
+            RepOutcome::time_only(time_s)
+        };
+        let touch = rng.next_u64();
+        let frame = encode_record_bin(&key, &outcome, touch);
+        let (k2, o2, t2, used) =
+            decode_record_bin(&frame).expect("binary round trip");
+        assert_eq!(k2, key);
+        assert_eq!(t2, touch);
+        assert_eq!(used, frame.len(), "whole frame consumed");
+        assert!(o2.same_bits(&outcome));
+    });
+}
+
+/// NaN payload bits are the canonical "JSON would destroy this" case:
+/// the binary codec must preserve them exactly, and a store round-trip
+/// through disk must serve them back bit-identically.
+#[test]
+fn binary_codec_and_store_preserve_nan_payloads() {
+    let quiet_payload = f64::from_bits(0x7FF8_0000_0000_BEEF);
+    let signaling = f64::from_bits(0x7FF0_0000_0000_0001);
+    let neg_quiet = f64::from_bits(0xFFF8_0000_0000_0001);
+    let dir = scratch("nanbits");
+    let store = ProfileStore::open(&dir).unwrap();
+    for (rep, t) in [quiet_payload, signaling, neg_quiet, f64::NEG_INFINITY]
+        .into_iter()
+        .enumerate()
+    {
+        let key = StoreKey {
+            cluster: 0xAB,
+            app: AppId::Grep,
+            num_mappers: 5,
+            num_reducers: 5,
+            input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+            block_mb: StoreKey::PAPER_BLOCK_MB,
+            rep: rep as u32,
+            base_seed: 6,
+        };
+        let outcome = RepOutcome::full(t, t);
+        let frame = encode_record_bin(&key, &outcome, 1);
+        let (_, o2, _, _) = decode_record_bin(&frame).unwrap();
+        assert!(o2.same_bits(&outcome), "codec preserves bits of {t:?}");
+        store.put(key, outcome);
+    }
+    store.flush().unwrap();
+    drop(store);
+    let store = ProfileStore::open(&dir).unwrap();
+    for (rep, t) in [quiet_payload, signaling, neg_quiet, f64::NEG_INFINITY]
+        .into_iter()
+        .enumerate()
+    {
+        let got = store
+            .get(&StoreKey {
+                cluster: 0xAB,
+                app: AppId::Grep,
+                num_mappers: 5,
+                num_reducers: 5,
+                input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                block_mb: StoreKey::PAPER_BLOCK_MB,
+                rep: rep as u32,
+                base_seed: 6,
+            })
+            .expect("stored");
+        assert_eq!(got.time_s.to_bits(), t.to_bits(), "rep {rep}");
+    }
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
@@ -129,13 +226,9 @@ fn v1_store_warm_starts_v2_executor_without_resimulating() {
     for path in std::fs::read_dir(&dir)
         .unwrap()
         .map(|e| e.unwrap().path())
-        .filter(|p| p.extension().is_some_and(|x| x == "jsonl"))
+        .filter(|p| p.extension().is_some_and(|x| x == "bin"))
     {
-        for line in std::fs::read_to_string(&path).unwrap().lines() {
-            if line.trim().is_empty() {
-                continue;
-            }
-            let (key, outcome, _) = decode_record(line).unwrap();
+        for (key, outcome, _) in read_file_records(&path).unwrap() {
             v1_records.push(v1_line(&key, outcome.time_s));
         }
         std::fs::remove_file(&path).unwrap();
@@ -159,9 +252,16 @@ fn v1_store_warm_starts_v2_executor_without_resimulating() {
         assert_eq!(a.rep_times_s, b.rep_times_s);
     }
     drop(exec);
-    // Compaction rewrote the records as v2.
-    let index = std::fs::read_to_string(dir.join("index.jsonl")).unwrap();
-    assert!(index.contains("\"v\":2") && !index.contains("\"v\":1"));
+    // Compaction rewrote the records as v3 binary; nothing JSONL is left.
+    let recs = read_file_records(&dir.join("index.bin")).unwrap();
+    assert_eq!(recs.len(), 4);
+    assert!(recs.iter().all(|(_, _, ver)| *ver == 3));
+    assert!(
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .all(|e| !e.unwrap().file_name().to_string_lossy().ends_with(".jsonl")),
+        "no legacy files survive the upgrade compaction"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -361,7 +461,7 @@ fn compaction_is_idempotent() {
         assert_eq!(store.len(), 2);
     }
     assert!(seg_files(&dir).is_empty(), "merged segments deleted");
-    let index = dir.join("index.jsonl");
+    let index = dir.join("index.bin");
     let first = std::fs::read(&index).unwrap();
     assert!(!first.is_empty());
 
@@ -397,5 +497,130 @@ fn compaction_is_idempotent() {
     }
     let third = std::fs::read(&index).unwrap();
     assert_eq!(first, third);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The eviction regression the trainer depends on: a size cap tight
+/// enough to force evictions must never drop paper-plane repetitions —
+/// they are exactly the records the trainer journal references — so a
+/// trainer opened *after* a capped compaction still refits from every
+/// rep, while extended-sweep filler is gone.
+#[test]
+fn eviction_never_drops_trainer_referenced_records() {
+    let dir = scratch("evict_trainer");
+    let cluster = Cluster::paper_cluster();
+    let fp = cluster_fingerprint(&cluster);
+    let paper_key = |m: u32, r: u32, rep: u32| StoreKey {
+        cluster: fp,
+        app: AppId::Grep,
+        num_mappers: m,
+        num_reducers: r,
+        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+        block_mb: StoreKey::PAPER_BLOCK_MB,
+        rep,
+        base_seed: 9,
+    };
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        // 18 settings x 2 reps of synthetic paper-plane training data
+        // (what a profiling campaign would leave for the trainer) ...
+        for (i, m) in [5u32, 12, 19, 26, 33, 40].into_iter().enumerate() {
+            for (j, r) in [5u32, 22, 40].into_iter().enumerate() {
+                for rep in 0..2 {
+                    store.put(
+                        paper_key(m, r, rep),
+                        RepOutcome::full(
+                            200.0 + 3.0 * (i as f64) + 2.0 * (j as f64)
+                                + rep as f64,
+                            50.0,
+                        ),
+                    );
+                }
+            }
+        }
+        // ... drowned in extended-sweep filler that the cap will evict.
+        for i in 0..400u32 {
+            store.put(
+                StoreKey {
+                    cluster: fp,
+                    app: AppId::WordCount,
+                    num_mappers: 5 + (i % 36),
+                    num_reducers: 5,
+                    input_gb_bits: (2.0 + (i / 36) as f64).to_bits(),
+                    block_mb: 128,
+                    rep: i,
+                    base_seed: 77,
+                },
+                RepOutcome::full(10.0 + i as f64, 1.0),
+            );
+        }
+        store.flush().unwrap();
+    }
+    {
+        // ~36 paper records (~75 B each) fit in 8 KB; 400 filler do not.
+        let store = ProfileStore::open_capped(&dir, Some(8 * 1024)).unwrap();
+        let st = store.stats();
+        assert!(st.compacted);
+        assert!(st.evicted > 300, "filler evicted: {st}");
+    }
+    // A freshly opened trainer sees every paper-plane rep and refits.
+    let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+    let report = trainer.poll().unwrap();
+    assert_eq!(report.refits.len(), 1, "grep refits from pinned records");
+    let refit = &report.refits[0];
+    assert_eq!(refit.app, AppId::Grep);
+    assert_eq!(refit.model.trained_on, 18, "no setting lost a rep");
+    assert!(refit.fit_rmse.is_finite());
+    drop(trainer);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `store compact --store-max-mb N` end to end in a spawned process: the
+/// rewritten index respects the cap and the CLI reports the evictions.
+#[test]
+fn store_compact_cli_respects_size_cap() {
+    let dir = scratch("cli_cap");
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        // ~1.6 MB of extended-sweep records (about 80 B each).
+        for i in 0..20_000u32 {
+            store.put(
+                StoreKey {
+                    cluster: 1,
+                    app: AppId::WordCount,
+                    num_mappers: 5 + (i % 36),
+                    num_reducers: 5 + (i % 7),
+                    input_gb_bits: (1.0 + (i % 13) as f64).to_bits(),
+                    block_mb: 256,
+                    rep: i,
+                    base_seed: 3,
+                },
+                RepOutcome::full(5.0 + i as f64, 0.5),
+            );
+        }
+        store.flush().unwrap();
+    }
+    let bin = env!("CARGO_BIN_EXE_mrtuner");
+    let out = Command::new(bin)
+        .args(["store", "compact", "--store-max-mb", "1", "--store"])
+        .arg(&dir)
+        .output()
+        .expect("spawn mrtuner store compact");
+    assert!(
+        out.status.success(),
+        "compact failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(text.contains("compacted=true"), "compacted: {text}");
+    assert!(
+        text.contains("evicted=") && !text.contains("evicted=0 "),
+        "evictions reported: {text}"
+    );
+    let index_len = std::fs::metadata(dir.join("index.bin")).unwrap().len();
+    assert!(
+        index_len <= 1024 * 1024,
+        "index fits the 1 MB cap, got {index_len} B"
+    );
     let _ = std::fs::remove_dir_all(&dir);
 }

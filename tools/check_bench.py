@@ -1,0 +1,107 @@
+#!/usr/bin/env python3
+"""Schema check for BENCH_*.json perf-trajectory files.
+
+`mrtuner bench store|campaign` emits machine-readable benchmark
+summaries; CI generates one per run and this script fails the build if
+an emitted — or committed — file is malformed, so the perf trajectory
+stays parseable forever.  Zero-dependency by design.
+
+Usage:
+    python3 tools/check_bench.py FILE [FILE...]   # check specific files
+    python3 tools/check_bench.py                  # check every committed
+                                                  # BENCH_*.json in the
+                                                  # repo root
+Exits non-zero listing every problem found; checking zero files is a
+pass (no trajectory data yet is fine, malformed data is not).
+"""
+
+import glob
+import json
+import os
+import sys
+
+# The per-bench summary metric that must be present and positive, and
+# the per-bench determinism flag that must be present and true.
+SUMMARY_KEYS = {
+    "store": "binary_vs_jsonl_open_speedup",
+    "campaign": "parallel_speedup",
+}
+IDENTITY_KEYS = {
+    "store": "bit_identical_cold_warm",
+    "campaign": "bit_identical_serial_parallel",
+}
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_file(path, problems):
+    def bad(msg):
+        problems.append(f"{path}: {msg}")
+
+    try:
+        with open(path, encoding="utf-8") as f:
+            doc = json.load(f)
+    except Exception as e:  # noqa: BLE001 - report, don't crash
+        bad(f"not valid JSON ({e})")
+        return
+    if not isinstance(doc, dict):
+        bad("top level must be an object")
+        return
+    bench = doc.get("bench")
+    if bench not in SUMMARY_KEYS:
+        bad(f"'bench' must be one of {sorted(SUMMARY_KEYS)}, got {bench!r}")
+        return
+    if doc.get("schema") != 1:
+        bad(f"'schema' must be 1, got {doc.get('schema')!r}")
+    if not (is_num(doc.get("records")) and doc.get("records", 0) > 0):
+        bad("'records' must be a positive number")
+    cases = doc.get("cases")
+    if not (isinstance(cases, list) and cases):
+        bad("'cases' must be a non-empty list")
+        cases = []
+    for i, case in enumerate(cases):
+        where = f"cases[{i}]"
+        if not isinstance(case, dict):
+            bad(f"{where} must be an object")
+            continue
+        if not (isinstance(case.get("name"), str) and case["name"]):
+            bad(f"{where}.name must be a non-empty string")
+        if not (is_num(case.get("iters")) and case.get("iters", 0) >= 1):
+            bad(f"{where}.iters must be >= 1")
+        for field in ("mean_s", "min_s", "p50_s", "units_per_s"):
+            if not (is_num(case.get(field)) and case.get(field, -1) >= 0):
+                bad(f"{where}.{field} must be a non-negative number")
+    summary = SUMMARY_KEYS[bench]
+    if not (is_num(doc.get(summary)) and doc.get(summary, 0) > 0):
+        bad(f"'{summary}' must be a positive number")
+    identity = IDENTITY_KEYS[bench]
+    if not isinstance(doc.get(identity), bool):
+        bad(f"'{identity}' must be a boolean")
+    elif not doc[identity]:
+        bad(f"'{identity}' is false — determinism regression")
+
+
+def main():
+    if len(sys.argv) > 1:
+        paths = sys.argv[1:]
+    else:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    problems = []
+    for path in paths:
+        if not os.path.isfile(path):
+            problems.append(f"{path}: no such file")
+            continue
+        check_file(path, problems)
+    if problems:
+        for p in problems:
+            print(f"MALFORMED BENCH: {p}", file=sys.stderr)
+        return 1
+    print(f"all {len(paths)} BENCH file(s) well-formed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

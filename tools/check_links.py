@@ -2,11 +2,13 @@
 """Markdown link checker for docs/ and README.md.
 
 Verifies that every relative link target in the repo's prose docs exists
-on disk (anchors are stripped; external http(s)/mailto links are
-skipped).  Zero-dependency by design — runs anywhere python3 does.
+on disk, and that every anchor fragment (`file.md#section` or a
+same-file `#section`) names a real heading in the target document
+(GitHub-style slugs).  External http(s)/mailto links are skipped.
+Zero-dependency by design — runs anywhere python3 does.
 
 Usage: python3 tools/check_links.py  (from the repo root; exits non-zero
-on the first pass if any link is broken, listing all of them)
+on the first pass if any link or anchor is broken, listing all of them)
 """
 
 import os
@@ -14,6 +16,10 @@ import re
 import sys
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
+CODE_FENCE_RE = re.compile(r"^(```|~~~).*?^\1\s*$", re.M | re.S)
+INLINE_CODE_RE = re.compile(r"`([^`]*)`")
+MD_LINK_IN_HEADING_RE = re.compile(r"\[([^\]]*)\]\([^)]*\)")
 
 
 def doc_files(root):
@@ -26,23 +32,70 @@ def doc_files(root):
     return [f for f in files if os.path.isfile(f)]
 
 
+def slugify(heading):
+    """GitHub's anchor algorithm, close enough for our docs: inline code
+    and link markup reduce to their text, then lowercase, spaces to
+    hyphens, and everything except alphanumerics/hyphens/underscores is
+    dropped."""
+    text = INLINE_CODE_RE.sub(r"\1", heading)
+    text = MD_LINK_IN_HEADING_RE.sub(r"\1", text)
+    text = text.strip().lower()
+    out = []
+    for ch in text:
+        if ch.isalnum() or ch == "_":
+            out.append(ch)
+        elif ch in (" ", "-"):
+            out.append("-")
+        # anything else: dropped
+    return "".join(out)
+
+
+def anchors_of(path, cache):
+    """All heading slugs in a markdown file, with GitHub's -1/-2
+    suffixing for duplicates."""
+    if path in cache:
+        return cache[path]
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    # Headings inside code fences are not headings.
+    text = CODE_FENCE_RE.sub("", text)
+    slugs = set()
+    counts = {}
+    for heading in HEADING_RE.findall(text):
+        slug = slugify(heading)
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    cache[path] = slugs
+    return slugs
+
+
 def check(root):
     broken = []
     checked = 0
+    anchor_cache = {}
     for path in doc_files(root):
         base = os.path.dirname(path)
         with open(path, encoding="utf-8") as f:
             text = f.read()
+        # Links inside fenced code blocks are examples, not links.
+        text = CODE_FENCE_RE.sub("", text)
         for target in LINK_RE.findall(text):
-            if target.startswith(("http://", "https://", "mailto:", "#")):
+            if target.startswith(("http://", "https://", "mailto:")):
                 continue
-            rel = target.split("#", 1)[0]
-            if not rel:
+            rel, _, fragment = target.partition("#")
+            dest = path if not rel else os.path.normpath(os.path.join(base, rel))
+            if not rel and not fragment:
                 continue
             checked += 1
-            dest = os.path.normpath(os.path.join(base, rel))
             if not os.path.exists(dest):
                 broken.append((os.path.relpath(path, root), target))
+                continue
+            if fragment and dest.endswith(".md"):
+                if fragment not in anchors_of(dest, anchor_cache):
+                    broken.append(
+                        (os.path.relpath(path, root), f"{target} (no such anchor)")
+                    )
     return checked, broken
 
 
@@ -54,7 +107,7 @@ def main():
             print(f"BROKEN LINK in {src}: {target}", file=sys.stderr)
         print(f"{len(broken)} broken link(s) out of {checked}", file=sys.stderr)
         return 1
-    print(f"all {checked} relative links resolve")
+    print(f"all {checked} relative links and anchors resolve")
     return 0
 
 
