@@ -7,6 +7,7 @@
 //! seconds predicted".  Every field the client consumes is now required
 //! and validated.
 
+use std::collections::HashMap;
 use std::fmt;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -14,6 +15,7 @@ use std::net::TcpStream;
 use crate::util::json::{parse, Json};
 
 use super::service::Prediction;
+use super::wire;
 
 /// Why a client call failed.
 #[derive(Clone, Debug, PartialEq)]
@@ -27,6 +29,16 @@ pub enum ClientError {
     /// truncated line, missing field, or non-finite number.  These used
     /// to be silently mapped to `0.0`.
     Malformed(String),
+    /// The server hung up deliberately with a GOAWAY frame carrying this
+    /// reason (binary protocol only).  Distinguishes a server-initiated
+    /// protocol hang-up from transport loss — the JSON protocol's
+    /// oversize-line hang-up could only surface as an ambiguous
+    /// [`ClientError::Io`]/[`ClientError::Malformed`].
+    GoAway(String),
+    /// Admission control shed this request before a worker saw it
+    /// (binary protocol only).  The connection is fine; retry with
+    /// backoff.
+    Shed,
 }
 
 impl fmt::Display for ClientError {
@@ -35,6 +47,8 @@ impl fmt::Display for ClientError {
             ClientError::Io(e) => write!(f, "io error: {e}"),
             ClientError::Server(e) => write!(f, "server error: {e}"),
             ClientError::Malformed(e) => write!(f, "malformed response: {e}"),
+            ClientError::GoAway(e) => write!(f, "server goaway: {e}"),
+            ClientError::Shed => write!(f, "request shed by admission control"),
         }
     }
 }
@@ -264,6 +278,244 @@ impl Client {
     }
 }
 
+/// What one pipelined request resolved to.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// A predict request succeeded.
+    Predict(Prediction),
+    /// A tunneled JSON op answered with this (raw) JSON object.
+    Json(Json),
+    /// The server failed this one request; the connection lives on.
+    Err(String),
+    /// Admission control shed this request.
+    Shed,
+}
+
+/// What kind of response body a submitted request id expects.
+#[derive(Clone, Copy, Debug)]
+enum ReqKind {
+    Predict,
+    Json,
+}
+
+/// Pipelined binary-protocol client: submit many requests, flush once,
+/// then collect responses by request id (they may arrive out of order
+/// in principle; the current server preserves submission order within a
+/// connection).
+///
+/// ```no_run
+/// # use mrtuner::coordinator::client::PipelinedClient;
+/// let mut c = PipelinedClient::connect("127.0.0.1:4500").unwrap();
+/// let reqs: Vec<(String, u32, u32)> =
+///     (1..=40).map(|m| ("wordcount".to_string(), m, 5)).collect();
+/// let replies = c.predict_many(&reqs, 32).unwrap();
+/// # let _ = replies;
+/// ```
+pub struct PipelinedClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    frames: wire::FrameReader,
+    out: Vec<u8>,
+    next_id: u64,
+    kinds: HashMap<u64, ReqKind>,
+}
+
+impl PipelinedClient {
+    /// Connect and send the binary-protocol preamble.
+    pub fn connect(addr: &str) -> std::io::Result<PipelinedClient> {
+        let stream = TcpStream::connect(addr)?;
+        let mut writer = stream.try_clone()?;
+        let mut hello = Vec::with_capacity(wire::PREAMBLE_LEN);
+        wire::encode_preamble(&mut hello);
+        writer.write_all(&hello)?;
+        Ok(PipelinedClient {
+            reader: BufReader::new(stream),
+            writer,
+            frames: wire::FrameReader::new(),
+            out: Vec::with_capacity(4 * 1024),
+            next_id: 1,
+            kinds: HashMap::new(),
+        })
+    }
+
+    fn fresh_id(&mut self, kind: ReqKind) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.kinds.insert(id, kind);
+        id
+    }
+
+    /// Buffer a predict request; returns its request id.  Nothing is
+    /// written until [`PipelinedClient::flush`].
+    pub fn submit_predict(
+        &mut self,
+        app: &str,
+        mappers: u32,
+        reducers: u32,
+    ) -> u64 {
+        let id = self.fresh_id(ReqKind::Predict);
+        wire::encode_predict_req(&mut self.out, id, app, mappers, reducers);
+        id
+    }
+
+    /// Buffer a tunneled JSON op (same object the line protocol sends);
+    /// returns its request id.
+    pub fn submit_json(&mut self, req: &Json) -> u64 {
+        let id = self.fresh_id(ReqKind::Json);
+        wire::encode_json_req(&mut self.out, id, &req.to_string());
+        id
+    }
+
+    /// Write every buffered request in one syscall.
+    pub fn flush(&mut self) -> Result<(), ClientError> {
+        if self.out.is_empty() {
+            return Ok(());
+        }
+        self.writer.write_all(&self.out).map_err(io_err)?;
+        self.out.clear();
+        Ok(())
+    }
+
+    /// Block until the next response frame arrives; returns
+    /// `(request id, reply)`.  A GOAWAY frame (which answers the
+    /// connection, not a request) surfaces as
+    /// [`ClientError::GoAway`].
+    pub fn recv(&mut self) -> Result<(u64, Reply), ClientError> {
+        loop {
+            let frame = self
+                .frames
+                .next_frame()
+                .map_err(|e| ClientError::Malformed(e.to_string()))?;
+            if let Some(f) = frame {
+                return self.interpret(f);
+            }
+            let available = self.reader.fill_buf().map_err(io_err)?;
+            if available.is_empty() {
+                return Err(ClientError::Io(
+                    "server closed the connection".into(),
+                ));
+            }
+            let n = available.len();
+            self.frames.feed(available);
+            self.reader.consume(n);
+        }
+    }
+
+    fn interpret(
+        &mut self,
+        f: wire::Frame,
+    ) -> Result<(u64, Reply), ClientError> {
+        let text = |body: &[u8]| String::from_utf8_lossy(body).into_owned();
+        match f.tag {
+            wire::RESP_GOAWAY => Err(ClientError::GoAway(text(&f.body))),
+            wire::RESP_SHED => {
+                self.kinds.remove(&f.id);
+                Ok((f.id, Reply::Shed))
+            }
+            wire::RESP_ERR => {
+                self.kinds.remove(&f.id);
+                Ok((f.id, Reply::Err(text(&f.body))))
+            }
+            wire::RESP_OK => match self.kinds.remove(&f.id) {
+                Some(ReqKind::Predict) => {
+                    let p = wire::decode_predict_ok(&f.body)
+                        .map_err(|e| ClientError::Malformed(e.to_string()))?;
+                    Ok((f.id, Reply::Predict(p)))
+                }
+                Some(ReqKind::Json) => {
+                    let v = parse(text(&f.body).trim())
+                        .map_err(ClientError::Malformed)?;
+                    Ok((f.id, Reply::Json(v)))
+                }
+                None => Err(ClientError::Malformed(format!(
+                    "response for unknown request id {}",
+                    f.id
+                ))),
+            },
+            other => Err(ClientError::Malformed(format!(
+                "server sent request tag {other:#04x}"
+            ))),
+        }
+    }
+
+    /// Run `reqs` through the pipeline keeping up to `window` requests
+    /// in flight; per-request outcomes come back in input order (a shed
+    /// request is [`ClientError::Shed`], a server-side failure is
+    /// [`ClientError::Server`] — both isolated to their request).
+    pub fn predict_many(
+        &mut self,
+        reqs: &[(String, u32, u32)],
+        window: usize,
+    ) -> Result<Vec<Result<Prediction, ClientError>>, ClientError> {
+        let window = window.max(1);
+        let mut out: Vec<Option<Result<Prediction, ClientError>>> =
+            reqs.iter().map(|_| None).collect();
+        let mut id_to_idx: HashMap<u64, usize> = HashMap::new();
+        let mut next = 0usize;
+        let mut done = 0usize;
+        while done < reqs.len() {
+            while next < reqs.len() && id_to_idx.len() < window {
+                let (app, m, r) = &reqs[next];
+                let id = self.submit_predict(app, *m, *r);
+                id_to_idx.insert(id, next);
+                next += 1;
+            }
+            self.flush()?;
+            let (id, reply) = self.recv()?;
+            let idx = id_to_idx.remove(&id).ok_or_else(|| {
+                ClientError::Malformed(format!("unknown request id {id}"))
+            })?;
+            out[idx] = Some(match reply {
+                Reply::Predict(p) => Ok(p),
+                Reply::Err(e) => Err(ClientError::Server(e)),
+                Reply::Shed => Err(ClientError::Shed),
+                Reply::Json(_) => {
+                    return Err(ClientError::Malformed(
+                        "json reply to a predict request".into(),
+                    ))
+                }
+            });
+            done += 1;
+        }
+        Ok(out.into_iter().map(|o| o.expect("all replies seen")).collect())
+    }
+
+    /// One tunneled JSON op, request-response (no other requests may be
+    /// outstanding).  `ok:false` replies surface as
+    /// [`ClientError::Server`], like [`Client`]'s methods.
+    pub fn json_op(&mut self, req: &Json) -> Result<Json, ClientError> {
+        let id = self.submit_json(req);
+        self.flush()?;
+        let (got, reply) = self.recv()?;
+        if got != id {
+            return Err(ClientError::Malformed(format!(
+                "reply for id {got}, expected {id}"
+            )));
+        }
+        match reply {
+            Reply::Json(resp) => {
+                match resp.get("ok").and_then(|v| v.as_bool()) {
+                    Some(true) => Ok(resp),
+                    Some(false) => Err(ClientError::Server(
+                        resp.get("error")
+                            .and_then(|e| e.as_str())
+                            .unwrap_or("unknown server error")
+                            .to_string(),
+                    )),
+                    None => Err(ClientError::Malformed(
+                        "'ok' field missing or not a bool".into(),
+                    )),
+                }
+            }
+            Reply::Err(e) => Err(ClientError::Server(e)),
+            Reply::Shed => Err(ClientError::Shed),
+            Reply::Predict(_) => Err(ClientError::Malformed(
+                "predict reply to a json op".into(),
+            )),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -350,5 +602,7 @@ mod tests {
         assert!(ClientError::Malformed("x".into())
             .to_string()
             .contains("malformed"));
+        assert!(ClientError::GoAway("x".into()).to_string().contains("goaway"));
+        assert!(ClientError::Shed.to_string().contains("shed"));
     }
 }

@@ -10,7 +10,11 @@
 //! * [`service`] — a threaded prediction service with **dynamic request
 //!   batching**: concurrent predictions coalesce into single PJRT
 //!   executions of the predict artifact (fixed 64-row batches);
-//! * [`server`] / [`client`] — a line-delimited JSON TCP protocol;
+//! * [`server`] / [`client`] / [`wire`] — a TCP serving surface with
+//!   two protocols behind first-byte autodetection: the legacy
+//!   line-delimited JSON protocol, and a pipelined length-prefixed
+//!   binary protocol whose predict frames are micro-batched through a
+//!   bounded queue with load shedding;
 //! * [`scheduler`] — a predicted-time-aware (SJF) job scheduler evaluated
 //!   against FIFO on the simulated cluster;
 //! * [`trainer`] — online retraining: tails the persistent profile
@@ -25,6 +29,7 @@ pub mod scheduler;
 pub mod server;
 pub mod service;
 pub mod trainer;
+pub mod wire;
 
 pub use registry::{ModelEntry, ModelRegistry};
 pub use scheduler::{
@@ -32,8 +37,9 @@ pub use scheduler::{
     sjf_order, sjf_order_from_times, sjf_order_live, what_if,
     what_if_with_stats, JobRequest,
 };
-pub use server::Server;
+pub use client::{Client, ClientError, PipelinedClient};
+pub use server::{Server, ServeOptions};
 pub use service::{
-    Prediction, PredictionService, ServiceConfig, ServiceMetrics,
+    BatchItem, Prediction, PredictionService, ServiceConfig, ServiceMetrics,
 };
 pub use trainer::{Refit, RetrainSummary, Trainer, TrainerReport};

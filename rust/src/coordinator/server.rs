@@ -1,6 +1,7 @@
-//! Line-delimited JSON TCP server for the prediction service.
+//! TCP server for the prediction service: legacy JSON lines plus the
+//! pipelined binary protocol, behind first-byte autodetection.
 //!
-//! Protocol (one JSON object per line, response per line):
+//! Legacy protocol (v1, one JSON object per line, response per line):
 //!
 //! ```text
 //! -> {"op":"predict","app":"wordcount","mappers":20,"reducers":5}
@@ -13,14 +14,28 @@
 //! -> {"op":"retrain"}
 //! <- {"ok":true,"new_records":180,"refits":[{"app":"grep","version":1}]}
 //! -> {"op":"health"}
-//! <- {"ok":true,"requests":123,"batches":17,"rejected":0,
+//! <- {"ok":true,"requests":123,"batches":17,"rejected":0,"shed":0,
 //!     "lock_poisoned":0,"mean_batch":7.2}
 //! ```
 //!
-//! One thread per connection (the request path is bounded by the batcher,
-//! not by connection concurrency at this scale).  Finished connection
-//! handles are reaped every accept iteration, so the tracked set stays
-//! bounded under sustained short-lived traffic.
+//! Binary protocol (v2, [`super::wire`]): a connection whose first byte
+//! is the preamble magic `M` speaks length-prefixed binary frames with
+//! **pipelining** — many requests in flight, responses carrying request
+//! ids.  Predict frames from every binary connection funnel into one
+//! bounded MPSC queue drained by batch workers that resolve whole
+//! batches through [`PredictionService::predict_batch`] (one atomic
+//! `(coeffs, version)` registry read per app group), and a full queue
+//! sheds load with typed SHED frames instead of queueing unboundedly —
+//! the `shed` counter in `health` is the observability side of that
+//! admission control.  See `docs/OPERATIONS.md` § "Serving at scale".
+//!
+//! One thread per connection remains the accept model (the request path
+//! is bounded by the batch queue, not by connection concurrency at this
+//! scale); binary connections additionally get a writer thread so
+//! response encoding and `write` syscalls coalesce across pipelined
+//! requests.  Finished connection handles are reaped every accept
+//! iteration, so the tracked set stays bounded under sustained
+//! short-lived traffic.
 //!
 //! `retrain` drives the online [`Trainer`]: it tails the profile store
 //! and hot-swaps refit models into the registry, so a freshly profiled
@@ -29,12 +44,159 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::util::json::{parse, Json};
 
-use super::service::PredictionService;
+use super::service::{BatchItem, Prediction, PredictionService};
 use super::trainer::Trainer;
+use super::wire;
+
+/// Serving-path tuning knobs (binary-protocol batching + admission
+/// control).  Defaults are production-shaped; benches sweep them.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Batch worker threads draining the predict queue.  The default of
+    /// one preserves global FIFO batch order, which is what makes
+    /// per-connection response versions monotonic across hot-swaps;
+    /// more workers raise throughput for slow backends at the cost of
+    /// cross-batch ordering.
+    pub workers: usize,
+    /// Bounded depth of the predict job queue.  When the queue is full,
+    /// new predict batches are shed with typed SHED frames (admission
+    /// control) rather than queued without bound.
+    pub queue_depth: usize,
+    /// Most predict requests a connection reader packs into one queued
+    /// job (the micro-batch the workers resolve in one registry read).
+    pub max_batch: usize,
+    /// Artificial delay added before resolving each queued job — fault
+    /// injection for benches and tests that need a deterministically
+    /// backed-up queue to exercise load shedding.  Zero in production.
+    pub batch_delay: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            workers: 1,
+            queue_depth: 1024,
+            max_batch: 512,
+            batch_delay: Duration::ZERO,
+        }
+    }
+}
+
+/// One queued unit of server-side micro-batching: the predict requests
+/// a connection reader drained in one pass, with the channel its writer
+/// thread listens on.
+struct BatchJob {
+    reply: Sender<WriterMsg>,
+    items: Vec<(u64, BatchItem)>,
+}
+
+/// Messages a binary connection's writer thread encodes onto the wire.
+enum WriterMsg {
+    /// Resolved predictions (request id, outcome), one frame each.
+    Predicts(Vec<(u64, Result<Prediction, String>)>),
+    /// A JSON-op response (request id, JSON text).
+    Json(u64, String),
+    /// A per-request error that never reached the service.
+    Err(u64, String),
+    /// Admission control shed these request ids.
+    Shed(Vec<u64>),
+    /// Terminal: write a GOAWAY frame, then shut the socket down.
+    GoAway(String),
+}
+
+/// The shared batch queue plus its worker pool.
+struct Batcher {
+    tx: SyncSender<BatchJob>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Batcher {
+    fn start(
+        service: Arc<PredictionService>,
+        opts: ServeOptions,
+    ) -> Batcher {
+        let (tx, rx) = sync_channel::<BatchJob>(opts.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..opts.workers.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let service = Arc::clone(&service);
+                std::thread::spawn(move || batch_worker(rx, service, opts))
+            })
+            .collect();
+        Batcher { tx, workers }
+    }
+
+    /// Drop the queue sender and join the workers (connection handlers
+    /// holding sender clones must already be gone).
+    fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker loop: take one job (plus whatever else is already queued, up
+/// to the batch cap), resolve the combined batch in one
+/// [`PredictionService::predict_batch`] call, and fan results back to
+/// each connection's writer.
+fn batch_worker(
+    rx: Arc<Mutex<Receiver<BatchJob>>>,
+    service: Arc<PredictionService>,
+    opts: ServeOptions,
+) {
+    loop {
+        // Hold the lock only while collecting; blocking recv under the
+        // lock is fine — with one waiter per queue at a time, a job
+        // wakes the holder, which releases the lock for the next.
+        let jobs = {
+            let guard = match rx.lock() {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+            let first = match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return, // queue closed: server shutting down
+            };
+            let mut jobs = vec![first];
+            let mut total: usize = jobs[0].items.len();
+            while total < opts.max_batch {
+                match guard.try_recv() {
+                    Ok(j) => {
+                        total += j.items.len();
+                        jobs.push(j);
+                    }
+                    Err(_) => break,
+                }
+            }
+            jobs
+        };
+        if !opts.batch_delay.is_zero() {
+            std::thread::sleep(opts.batch_delay);
+        }
+        let items: Vec<BatchItem> = jobs
+            .iter()
+            .flat_map(|j| j.items.iter().map(|(_, it)| it.clone()))
+            .collect();
+        let mut results = service.predict_batch(&items).into_iter();
+        for job in jobs {
+            let replies: Vec<(u64, Result<Prediction, String>)> = job
+                .items
+                .iter()
+                .map(|(id, _)| (*id, results.next().expect("one per item")))
+                .collect();
+            // A dead connection just drops its replies.
+            let _ = job.reply.send(WriterMsg::Predicts(replies));
+        }
+    }
+}
 
 /// A running TCP server.
 pub struct Server {
@@ -43,6 +205,7 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     live_conns: Arc<AtomicUsize>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+    batcher: Option<Batcher>,
 }
 
 impl Server {
@@ -63,12 +226,25 @@ impl Server {
         service: Arc<PredictionService>,
         trainer: Option<Arc<Mutex<Trainer>>>,
     ) -> std::io::Result<Server> {
+        Server::start_tuned(addr, service, trainer, ServeOptions::default())
+    }
+
+    /// [`Server::start_with`] with explicit serving-path tuning
+    /// ([`ServeOptions`]: batch workers, queue depth, shed policy).
+    pub fn start_tuned(
+        addr: &str,
+        service: Arc<PredictionService>,
+        trainer: Option<Arc<Mutex<Trainer>>>,
+        opts: ServeOptions,
+    ) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let accept_stop = Arc::clone(&stop);
         let live_conns = Arc::new(AtomicUsize::new(0));
         let live = Arc::clone(&live_conns);
+        let batcher = Batcher::start(Arc::clone(&service), opts);
+        let batch_tx = batcher.tx.clone();
         let accept_thread = std::thread::spawn(move || {
             // Poll-accept so shutdown is prompt.
             listener.set_nonblocking(true).ok();
@@ -85,8 +261,10 @@ impl Server {
                         let svc = Arc::clone(&service);
                         let tr = trainer.clone();
                         let cstop = Arc::clone(&accept_stop);
+                        let btx = batch_tx.clone();
                         conns.push(std::thread::spawn(move || {
-                            let _ = handle_conn(stream, svc, tr, cstop);
+                            let _ =
+                                handle_conn(stream, svc, tr, cstop, btx, opts);
                         }));
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -105,6 +283,7 @@ impl Server {
             stop,
             live_conns,
             accept_thread: Some(accept_thread),
+            batcher: Some(batcher),
         })
     }
 
@@ -115,11 +294,17 @@ impl Server {
         self.live_conns.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting, drain connection threads, and join the acceptor.
+    /// Stop accepting, drain connection threads, join the acceptor, and
+    /// wind down the batch workers.
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        // All connection handlers are gone, so the workers' queue drains
+        // and closes once the server's own sender drops.
+        if let Some(b) = self.batcher.take() {
+            b.shutdown();
         }
     }
 }
@@ -171,15 +356,55 @@ fn read_line_bounded(
     }
 }
 
+/// Accept-side dispatch: peek the first byte to pick the protocol —
+/// the binary preamble magic (`M`) selects frames, anything else (a
+/// JSON object starts with `{`) falls through to the legacy line
+/// protocol — then run the matching handler to connection end.
 fn handle_conn(
     stream: TcpStream,
     service: Arc<PredictionService>,
     trainer: Option<Arc<Mutex<Trainer>>>,
     stop: Arc<AtomicBool>,
+    batch_tx: SyncSender<BatchJob>,
+    opts: ServeOptions,
 ) -> std::io::Result<()> {
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
+    let first = loop {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        match reader.fill_buf() {
+            Ok([]) => return Ok(()), // closed before a single byte
+            Ok(bytes) => break bytes[0],
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::Interrupted
+                        | std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    if first == wire::WIRE_MAGIC[0] {
+        handle_binary_conn(reader, service, trainer, stop, batch_tx, opts)
+    } else {
+        handle_json_conn(reader, service, trainer, stop)
+    }
+}
+
+/// The legacy JSON line protocol, one request per line.
+fn handle_json_conn(
+    mut reader: BufReader<TcpStream>,
+    service: Arc<PredictionService>,
+    trainer: Option<Arc<Mutex<Trainer>>>,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    let mut writer = reader.get_ref().try_clone()?;
     let mut buf: Vec<u8> = Vec::new();
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -226,6 +451,278 @@ fn handle_conn(
     }
 }
 
+/// Read exactly `n` bytes through the connection's read timeout,
+/// preserving partial progress across timeouts.  `Ok(None)` on EOF.
+fn read_exact_timeout(
+    reader: &mut BufReader<TcpStream>,
+    n: usize,
+    stop: &AtomicBool,
+) -> std::io::Result<Option<Vec<u8>>> {
+    let mut got = Vec::with_capacity(n);
+    while got.len() < n {
+        if stop.load(Ordering::Relaxed) {
+            return Ok(None);
+        }
+        let available = match reader.fill_buf() {
+            Ok(bytes) => bytes,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::Interrupted
+                        | std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => return Err(e),
+        };
+        if available.is_empty() {
+            return Ok(None);
+        }
+        let take = available.len().min(n - got.len());
+        got.extend_from_slice(&available[..take]);
+        reader.consume(take);
+    }
+    Ok(Some(got))
+}
+
+/// The binary frame protocol: validate the preamble, spawn the writer
+/// thread, then decode frames — predicts accumulate into micro-batch
+/// jobs for the shared queue, JSON ops dispatch inline, corruption ends
+/// the connection with a typed GOAWAY.
+fn handle_binary_conn(
+    mut reader: BufReader<TcpStream>,
+    service: Arc<PredictionService>,
+    trainer: Option<Arc<Mutex<Trainer>>>,
+    stop: Arc<AtomicBool>,
+    batch_tx: SyncSender<BatchJob>,
+    opts: ServeOptions,
+) -> std::io::Result<()> {
+    let mut stream = reader.get_ref().try_clone()?;
+    let preamble = match read_exact_timeout(
+        &mut reader,
+        wire::PREAMBLE_LEN,
+        &stop,
+    )? {
+        Some(b) => b,
+        None => return Ok(()),
+    };
+    let arr: [u8; wire::PREAMBLE_LEN] =
+        preamble[..].try_into().expect("read_exact returned n bytes");
+    if let Err(e) = wire::check_preamble(&arr) {
+        // No writer thread yet: answer the bad handshake directly.
+        let mut buf = Vec::new();
+        wire::encode_goaway(&mut buf, &e.to_string());
+        let _ = stream.write_all(&buf);
+        return Ok(());
+    }
+
+    let (tx, rx) = std::sync::mpsc::channel::<WriterMsg>();
+    let writer_thread = std::thread::spawn(move || writer_loop(stream, rx));
+
+    let mut frames = wire::FrameReader::new();
+    let mut pending: Vec<(u64, BatchItem)> = Vec::new();
+    'conn: loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // One read syscall can deliver many pipelined frames; drain them
+        // all, then flush the accumulated predict batch as one job.
+        let available = match reader.fill_buf() {
+            Ok(bytes) => bytes,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::Interrupted
+                        | std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                continue
+            }
+            Err(e) => {
+                drop(tx);
+                let _ = writer_thread.join();
+                return Err(e);
+            }
+        };
+        if available.is_empty() {
+            break; // client closed
+        }
+        frames.feed(available);
+        let consumed = available.len();
+        reader.consume(consumed);
+        loop {
+            match frames.next_frame() {
+                Ok(None) => break,
+                Ok(Some(frame)) => {
+                    if !handle_frame(
+                        frame,
+                        &service,
+                        trainer.as_deref(),
+                        &tx,
+                        &mut pending,
+                    ) {
+                        break 'conn;
+                    }
+                    if pending.len() >= opts.max_batch {
+                        submit_batch(
+                            &batch_tx,
+                            &tx,
+                            &service,
+                            &mut pending,
+                        );
+                    }
+                }
+                Err(e) => {
+                    // Framing is unrecoverable: flush what parsed, then
+                    // say goodbye with the typed frame the JSON protocol
+                    // never had.
+                    submit_batch(&batch_tx, &tx, &service, &mut pending);
+                    let _ = tx.send(WriterMsg::GoAway(e.to_string()));
+                    break 'conn;
+                }
+            }
+        }
+        submit_batch(&batch_tx, &tx, &service, &mut pending);
+    }
+    submit_batch(&batch_tx, &tx, &service, &mut pending);
+    drop(tx);
+    let _ = writer_thread.join();
+    Ok(())
+}
+
+/// Route one decoded frame.  Returns `false` when the connection must
+/// end (protocol misuse answered with GOAWAY).
+fn handle_frame(
+    frame: wire::Frame,
+    service: &PredictionService,
+    trainer: Option<&Mutex<Trainer>>,
+    tx: &Sender<WriterMsg>,
+    pending: &mut Vec<(u64, BatchItem)>,
+) -> bool {
+    match frame.tag {
+        wire::REQ_PREDICT => match wire::decode_predict_req(&frame.body) {
+            Ok((app, mappers, reducers)) => {
+                pending.push((frame.id, BatchItem { app, mappers, reducers }));
+            }
+            Err(e) => {
+                // Malformed body with intact framing: the error is
+                // isolated to this request.
+                let _ = tx.send(WriterMsg::Err(frame.id, e.to_string()));
+            }
+        },
+        wire::REQ_JSON => {
+            // Control-plane ops ride the legacy dispatcher; they are
+            // rare and never block the predict queue.
+            let resp = match std::str::from_utf8(&frame.body) {
+                Ok(text) => dispatch(text.trim(), service, trainer),
+                Err(_) => err("json op body is not UTF-8"),
+            };
+            let _ = tx.send(WriterMsg::Json(frame.id, resp.to_string()));
+        }
+        _ => {
+            // A response tag sent at the server: protocol misuse.
+            let _ = tx.send(WriterMsg::GoAway(format!(
+                "client sent response tag {:#04x}",
+                frame.tag
+            )));
+            return false;
+        }
+    }
+    true
+}
+
+/// Enqueue the pending predict batch; a full queue sheds the whole job
+/// with typed SHED frames and counts it (admission control).
+fn submit_batch(
+    batch_tx: &SyncSender<BatchJob>,
+    reply: &Sender<WriterMsg>,
+    service: &PredictionService,
+    pending: &mut Vec<(u64, BatchItem)>,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let items = std::mem::take(pending);
+    match batch_tx
+        .try_send(BatchJob { reply: reply.clone(), items })
+    {
+        Ok(()) => {}
+        Err(TrySendError::Full(job)) => {
+            service
+                .metrics
+                .shed
+                .fetch_add(job.items.len() as u64, Ordering::Relaxed);
+            let ids = job.items.iter().map(|(id, _)| *id).collect();
+            let _ = reply.send(WriterMsg::Shed(ids));
+        }
+        Err(TrySendError::Disconnected(job)) => {
+            // Server shutting down: answer what we can, typed.
+            let ids = job.items.iter().map(|(id, _)| *id).collect();
+            let _ = reply.send(WriterMsg::Shed(ids));
+        }
+    }
+}
+
+/// Writer thread: encode queued response messages, coalescing every
+/// already-queued message into one buffer per `write` syscall.
+fn writer_loop(mut stream: TcpStream, rx: Receiver<WriterMsg>) {
+    let mut buf: Vec<u8> = Vec::with_capacity(16 * 1024);
+    'out: while let Ok(first) = rx.recv() {
+        buf.clear();
+        let mut done = encode_msg(&mut buf, first);
+        while !done {
+            match rx.try_recv() {
+                Ok(msg) => done = encode_msg(&mut buf, msg),
+                Err(_) => break,
+            }
+        }
+        if stream.write_all(&buf).is_err() {
+            break 'out;
+        }
+        if done {
+            break 'out;
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+}
+
+/// Encode one writer message into `buf`; returns `true` for terminal
+/// messages (GOAWAY), after which the connection closes.
+fn encode_msg(buf: &mut Vec<u8>, msg: WriterMsg) -> bool {
+    match msg {
+        WriterMsg::Predicts(replies) => {
+            for (id, outcome) in replies {
+                match outcome {
+                    Ok(p) => wire::encode_predict_ok(buf, id, &p),
+                    Err(e) => wire::encode_err(buf, id, &e),
+                }
+            }
+            false
+        }
+        WriterMsg::Json(id, text) => {
+            wire::encode_json_ok(buf, id, &text);
+            false
+        }
+        WriterMsg::Err(id, msg) => {
+            wire::encode_err(buf, id, &msg);
+            false
+        }
+        WriterMsg::Shed(ids) => {
+            for id in ids {
+                wire::encode_shed(buf, id);
+            }
+            false
+        }
+        WriterMsg::GoAway(reason) => {
+            wire::encode_goaway(buf, &reason);
+            true
+        }
+    }
+}
+
 fn err(msg: &str) -> Json {
     Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.into()))])
 }
@@ -251,7 +748,16 @@ pub fn dispatch(
             let (Some(m), Some(r)) = (m, r) else {
                 return err("predict requires integer 'mappers' and 'reducers'");
             };
-            match service.predict_versioned(app, m as u32, r as u32) {
+            // The same atomic (coeffs, version) batch path the binary
+            // protocol's workers use — both protocols answer any predict
+            // with exactly the same bits.
+            let item = BatchItem {
+                app: app.to_string(),
+                mappers: m as u32,
+                reducers: r as u32,
+            };
+            match service.predict_batch(std::slice::from_ref(&item)).remove(0)
+            {
                 Ok(p) => Json::obj(vec![
                     ("ok", Json::Bool(true)),
                     ("predicted_s", Json::Num(p.seconds)),
@@ -356,6 +862,7 @@ pub fn dispatch(
                     "rejected",
                     Json::Num(m.rejected.load(Ordering::Relaxed) as f64),
                 ),
+                ("shed", Json::Num(m.shed.load(Ordering::Relaxed) as f64)),
                 (
                     "lock_poisoned",
                     Json::Num(m.lock_poisoned.load(Ordering::Relaxed) as f64),
@@ -448,6 +955,7 @@ mod tests {
         let h = dispatch(r#"{"op":"health"}"#, &svc, None);
         assert!(h.get("requests").unwrap().as_f64().unwrap() >= 1.0);
         assert_eq!(h.get("lock_poisoned").unwrap().as_f64(), Some(0.0));
+        assert_eq!(h.get("shed").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]

@@ -56,6 +56,10 @@ pub struct ServiceMetrics {
     /// These never produce a batch, so they are excluded from
     /// [`ServiceMetrics::mean_batch_size`].
     pub rejected: AtomicU64,
+    /// Requests dropped by server admission control (bounded queue full)
+    /// before reaching the service at all.  Shed requests get a typed
+    /// SHED response; they never increment `requests`.
+    pub shed: AtomicU64,
     /// Largest batch coalesced so far.
     pub max_batch_seen: AtomicU64,
     /// Times the registry lock was found poisoned and recovered.  A
@@ -93,6 +97,18 @@ pub struct Prediction {
     pub seconds: f64,
     /// Registry version of the model that served the request.
     pub version: u64,
+}
+
+/// One request of a synchronous server-side batch (see
+/// [`PredictionService::predict_batch`]).
+#[derive(Clone, Debug)]
+pub struct BatchItem {
+    /// Application to predict for.
+    pub app: String,
+    /// Number of map tasks.
+    pub mappers: u32,
+    /// Number of reduce tasks.
+    pub reducers: u32,
 }
 
 enum Msg {
@@ -229,6 +245,70 @@ impl PredictionService {
         num_reducers: u32,
     ) -> Result<Receiver<Result<Prediction, String>>, String> {
         self.enqueue(app, num_mappers, num_reducers)
+    }
+
+    /// Resolve a whole batch of requests synchronously on the calling
+    /// thread — the server-side micro-batching path.
+    ///
+    /// Like the queued worker ([`PredictionService::predict`]), the
+    /// batch is grouped by application and each group resolves its
+    /// `(coefficients, version)` pair in **one registry read**, so every
+    /// request of a group is served by a single consistent model even
+    /// when a [`PredictionService::publish_model`] hot-swap lands
+    /// mid-batch, and successive batches observe monotonically
+    /// non-decreasing versions.  Predictions are the canonical
+    /// polynomial evaluation ([`crate::model::features::evaluate`]) —
+    /// bit-identical to the queued path on the default backend, which
+    /// is why the JSON and binary server protocols answer with exactly
+    /// the same bits.
+    ///
+    /// Results are returned in input order.  Metrics accounting matches
+    /// the queued path: `requests` counts every item, `rejected` the
+    /// unknown-app items, and `batches` one per app group that reached
+    /// evaluation.
+    pub fn predict_batch(
+        &self,
+        items: &[BatchItem],
+    ) -> Vec<Result<Prediction, String>> {
+        let m = &self.metrics;
+        m.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
+        m.max_batch_seen.fetch_max(items.len() as u64, Ordering::Relaxed);
+        let mut out: Vec<Option<Result<Prediction, String>>> =
+            (0..items.len()).map(|_| None).collect();
+        let mut by_app: std::collections::BTreeMap<&str, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, item) in items.iter().enumerate() {
+            by_app.entry(item.app.as_str()).or_default().push(i);
+        }
+        for (app, idxs) in by_app {
+            let looked_up = {
+                let reg = registry_read(&self.registry, m);
+                reg.entry(app).map(|e| (e.model.coeffs, e.version))
+            };
+            match looked_up {
+                None => {
+                    m.rejected.fetch_add(idxs.len() as u64, Ordering::Relaxed);
+                    for i in idxs {
+                        out[i] = Some(Err(format!(
+                            "no model for application '{app}'"
+                        )));
+                    }
+                }
+                Some((coeffs, version)) => {
+                    m.batches.fetch_add(1, Ordering::Relaxed);
+                    for i in idxs {
+                        let params = [
+                            items[i].mappers as f64,
+                            items[i].reducers as f64,
+                        ];
+                        let seconds =
+                            crate::model::features::evaluate(&coeffs, &params);
+                        out[i] = Some(Ok(Prediction { seconds, version }));
+                    }
+                }
+            }
+        }
+        out.into_iter().map(|r| r.expect("every index filled")).collect()
     }
 
     /// Install or replace an application model without fit diagnostics.
@@ -435,6 +515,61 @@ mod tests {
         assert!(batches < 200, "batching must coalesce: {batches} batches");
         assert!(svc.metrics.mean_batch_size() > 1.0);
         assert!(svc.metrics.max_batch_seen.load(Ordering::Relaxed) > 1);
+    }
+
+    #[test]
+    fn predict_batch_matches_queued_path_bit_for_bit() {
+        let svc = service();
+        let items: Vec<BatchItem> = (0..50)
+            .map(|i| BatchItem {
+                app: if i % 5 == 4 { "nope".into() } else { "wordcount".into() },
+                mappers: 5 + (i % 36),
+                reducers: 5 + (i % 7),
+            })
+            .collect();
+        let batch = svc.predict_batch(&items);
+        assert_eq!(batch.len(), items.len());
+        for (item, got) in items.iter().zip(&batch) {
+            let queued =
+                svc.predict_versioned(&item.app, item.mappers, item.reducers);
+            match (got, queued) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.seconds.to_bits(), b.seconds.to_bits());
+                    assert_eq!(a.version, b.version);
+                }
+                (Err(a), Err(b)) => assert_eq!(a, &b),
+                other => panic!("paths disagree: {other:?}"),
+            }
+        }
+        let m = &svc.metrics;
+        // 50 batched + 50 queued requests, 10 rejected per path.
+        assert_eq!(m.requests.load(Ordering::Relaxed), 100);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 20);
+        assert_eq!(m.max_batch_seen.load(Ordering::Relaxed), 50);
+        assert!(m.mean_batch_size() > 1.0);
+    }
+
+    #[test]
+    fn predict_batch_group_is_version_consistent_across_swap() {
+        let svc = service();
+        // Whole-batch consistency: one registry read per app group means
+        // every item of a group reports the same version.
+        let items: Vec<BatchItem> = (0..8)
+            .map(|i| BatchItem {
+                app: "wordcount".into(),
+                mappers: 10 + i,
+                reducers: 5,
+            })
+            .collect();
+        let before = svc.predict_batch(&items);
+        svc.publish_model(test_model("wordcount"), 0.1);
+        let after = svc.predict_batch(&items);
+        let v1: Vec<u64> =
+            before.iter().map(|r| r.as_ref().unwrap().version).collect();
+        let v2: Vec<u64> =
+            after.iter().map(|r| r.as_ref().unwrap().version).collect();
+        assert!(v1.iter().all(|&v| v == 1), "{v1:?}");
+        assert!(v2.iter().all(|&v| v == 2), "{v2:?}");
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Binary wire protocol v2 for the prediction server.
+//!
+//! The legacy protocol (v1) is one JSON object per line — simple, but a
+//! parse + format per request caps throughput far below the serving
+//! target.  Protocol v2 is length-prefixed binary with **pipelining**:
+//! a client may keep many requests in flight on one connection, and
+//! every response carries the id of the request it answers, so replies
+//! need not arrive in submission order.
+//!
+//! The codec reuses the profile store's v3 idioms (`profiler::store`):
+//! an ASCII magic + little-endian version preamble, length-prefixed
+//! frames, and raw little-endian bit round-trips for every `u64`/`f64`.
+//!
+//! ```text
+//! preamble (client -> server, once):  "MRTW" u32le_version(=2)
+//! frame:    u32le_len | u64le_request_id | u8_tag | body
+//!           (len counts everything after itself: 9 + body bytes)
+//!
+//! request tags                        response tags (high bit set)
+//!   0x01 PREDICT  u16le_app_len,        0x80 OK      predict: f64le_seconds,
+//!        app_utf8, u32le_mappers,                    u64le_version
+//!        u32le_reducers                              json op: utf8 JSON text
+//!   0x02 JSON     utf8 JSON text      0x81 ERR     utf8 message (this
+//!        (same object as the legacy               request failed; the
+//!        line protocol)                           connection lives on)
+//!                                     0x82 SHED    empty (admission control
+//!                                                  dropped the request)
+//!                                     0x83 GOAWAY  utf8 reason; request id
+//!                                                  0; the server hangs up
+//!                                                  after sending it
+//! ```
+//!
+//! The server autodetects the protocol from the first byte of a
+//! connection: `M` (the preamble magic) selects binary, anything else —
+//! `{` or whitespace in practice — falls through to the legacy JSON
+//! line protocol, so existing clients keep working unchanged.
+//!
+//! Framing robustness is part of the contract: a decoder must survive
+//! arbitrary byte-split delivery (partial frames are kept, never
+//! discarded), and must refuse oversize or structurally impossible
+//! frames as [`WireError::Corrupt`] rather than desync or panic —
+//! property-tested in `rust/tests/wire_protocol.rs`.
+
+use super::service::Prediction;
+
+/// Magic prefix of the binary-protocol preamble (the store uses `MRTS`;
+/// the wire uses `MRTW`).
+pub const WIRE_MAGIC: [u8; 4] = *b"MRTW";
+
+/// Wire protocol version carried in the preamble.  Version 1 is the
+/// (implicit) JSON line protocol; the binary protocol starts at 2.
+pub const WIRE_VERSION: u32 = 2;
+
+/// Preamble length: magic + little-endian u32 version.
+pub const PREAMBLE_LEN: usize = 8;
+
+/// Frame header past the length prefix: request id + tag byte.
+pub const FRAME_HEADER_LEN: usize = 9;
+
+/// Largest frame body+header the codec accepts — same bound as the JSON
+/// protocol's line cap, so neither protocol lets a client (or a
+/// corrupted peer) grow a connection buffer without bound.
+pub const MAX_FRAME_LEN: usize = 64 * 1024;
+
+/// Request: predict one `(app, mappers, reducers)` setting.
+pub const REQ_PREDICT: u8 = 0x01;
+/// Request: any legacy JSON op (`models`, `model_info`, `retrain`,
+/// `health`, even `predict`) tunneled as its JSON object text.
+pub const REQ_JSON: u8 = 0x02;
+/// Response: success (body depends on the request tag).
+pub const RESP_OK: u8 = 0x80;
+/// Response: this request failed; body is the error message.  The
+/// connection stays usable — errors are isolated per request.
+pub const RESP_ERR: u8 = 0x81;
+/// Response: admission control shed this request before it reached a
+/// worker.  Retry later, ideally with backoff.
+pub const RESP_SHED: u8 = 0x82;
+/// Response: the server is hanging up; body is the reason.  Carries
+/// request id 0 (it answers the connection, not one request).  This is
+/// the typed replacement for the silent hang-up the JSON protocol gives
+/// an out-of-protocol client.
+pub const RESP_GOAWAY: u8 = 0x83;
+
+/// Why a frame (or preamble) failed to decode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireError {
+    /// Structurally invalid bytes: bad magic, impossible length,
+    /// unknown tag, truncated body.  The stream cannot be trusted past
+    /// this point — the peer should GOAWAY/close, not resync.
+    Corrupt(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Corrupt(m) => write!(f, "corrupt frame: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// One decoded frame: request id, tag byte, raw body.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    /// Client-chosen request id echoed by the response (0 for GOAWAY).
+    pub id: u64,
+    /// One of the `REQ_*` / `RESP_*` tag constants.
+    pub tag: u8,
+    /// Tag-specific payload.
+    pub body: Vec<u8>,
+}
+
+fn u32le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn u64le(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Append the connection preamble (`MRTW` + version) to `buf`.
+pub fn encode_preamble(buf: &mut Vec<u8>) {
+    buf.extend_from_slice(&WIRE_MAGIC);
+    buf.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+}
+
+/// Validate a connection preamble.
+pub fn check_preamble(bytes: &[u8; PREAMBLE_LEN]) -> Result<(), WireError> {
+    if bytes[..4] != WIRE_MAGIC {
+        return Err(WireError::Corrupt(format!(
+            "bad preamble magic {:02x?}",
+            &bytes[..4]
+        )));
+    }
+    let version = u32le(&bytes[4..]);
+    if version != WIRE_VERSION {
+        return Err(WireError::Corrupt(format!(
+            "unsupported wire version {version} (this build speaks \
+             {WIRE_VERSION})"
+        )));
+    }
+    Ok(())
+}
+
+/// Append one frame (`len | id | tag | body`) to `buf`.
+///
+/// Panics if the body would exceed [`MAX_FRAME_LEN`] — encoders own
+/// their payloads and never legitimately produce one that large.
+pub fn encode_frame(buf: &mut Vec<u8>, id: u64, tag: u8, body: &[u8]) {
+    let len = FRAME_HEADER_LEN + body.len();
+    assert!(len <= MAX_FRAME_LEN, "frame body too large: {} bytes", body.len());
+    buf.extend_from_slice(&(len as u32).to_le_bytes());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(tag);
+    buf.extend_from_slice(body);
+}
+
+/// Append a PREDICT request frame.
+pub fn encode_predict_req(
+    buf: &mut Vec<u8>,
+    id: u64,
+    app: &str,
+    mappers: u32,
+    reducers: u32,
+) {
+    let mut body = Vec::with_capacity(2 + app.len() + 8);
+    body.extend_from_slice(&(app.len() as u16).to_le_bytes());
+    body.extend_from_slice(app.as_bytes());
+    body.extend_from_slice(&mappers.to_le_bytes());
+    body.extend_from_slice(&reducers.to_le_bytes());
+    encode_frame(buf, id, REQ_PREDICT, &body);
+}
+
+/// Decode a PREDICT request body into `(app, mappers, reducers)`.
+pub fn decode_predict_req(
+    body: &[u8],
+) -> Result<(String, u32, u32), WireError> {
+    if body.len() < 2 {
+        return Err(WireError::Corrupt("predict body shorter than app length".into()));
+    }
+    let app_len = u16::from_le_bytes([body[0], body[1]]) as usize;
+    let want = 2 + app_len + 8;
+    if body.len() != want {
+        return Err(WireError::Corrupt(format!(
+            "predict body is {} bytes, expected {want}",
+            body.len()
+        )));
+    }
+    let app = std::str::from_utf8(&body[2..2 + app_len])
+        .map_err(|_| WireError::Corrupt("app name is not UTF-8".into()))?
+        .to_string();
+    let m = u32le(&body[2 + app_len..]);
+    let r = u32le(&body[2 + app_len + 4..]);
+    Ok((app, m, r))
+}
+
+/// Append a JSON-op request frame (`text` is the JSON object the legacy
+/// line protocol would have sent, minus the newline).
+pub fn encode_json_req(buf: &mut Vec<u8>, id: u64, text: &str) {
+    encode_frame(buf, id, REQ_JSON, text.as_bytes());
+}
+
+/// Append an OK response to a PREDICT request: raw little-endian bits
+/// of the predicted seconds, then the serving model version.
+pub fn encode_predict_ok(buf: &mut Vec<u8>, id: u64, p: &Prediction) {
+    let mut body = [0u8; 16];
+    body[..8].copy_from_slice(&p.seconds.to_bits().to_le_bytes());
+    body[8..].copy_from_slice(&p.version.to_le_bytes());
+    encode_frame(buf, id, RESP_OK, &body);
+}
+
+/// Decode an OK response to a PREDICT request.
+pub fn decode_predict_ok(body: &[u8]) -> Result<Prediction, WireError> {
+    if body.len() != 16 {
+        return Err(WireError::Corrupt(format!(
+            "predict OK body is {} bytes, expected 16",
+            body.len()
+        )));
+    }
+    Ok(Prediction {
+        seconds: f64::from_bits(u64le(&body[..8])),
+        version: u64le(&body[8..]),
+    })
+}
+
+/// Append an OK response carrying JSON text (answers a JSON-op frame).
+pub fn encode_json_ok(buf: &mut Vec<u8>, id: u64, text: &str) {
+    encode_frame(buf, id, RESP_OK, text.as_bytes());
+}
+
+/// Append a per-request ERR response.
+pub fn encode_err(buf: &mut Vec<u8>, id: u64, msg: &str) {
+    encode_frame(buf, id, RESP_ERR, msg.as_bytes());
+}
+
+/// Append a SHED response (admission control dropped request `id`).
+pub fn encode_shed(buf: &mut Vec<u8>, id: u64) {
+    encode_frame(buf, id, RESP_SHED, &[]);
+}
+
+/// Append a GOAWAY frame (the server hangs up after writing it).
+pub fn encode_goaway(buf: &mut Vec<u8>, reason: &str) {
+    // Bound the reason so the frame always encodes.
+    let msg = reason.as_bytes();
+    let take = msg.len().min(MAX_FRAME_LEN - FRAME_HEADER_LEN);
+    encode_frame(buf, 0, RESP_GOAWAY, &msg[..take]);
+}
+
+/// Incremental frame decoder: feed bytes as they arrive (in any split),
+/// pop complete frames as they become decodable.  Partial frames stay
+/// buffered across feeds — byte-split delivery can never desync the
+/// stream.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already consumed by popped frames (compacted
+    /// lazily so popping is O(frame), not O(buffer)).
+    pos: usize,
+}
+
+impl FrameReader {
+    /// A decoder with an empty buffer.
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Buffer newly received bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Compact before growing: keeps the buffer bounded by
+        // MAX_FRAME_LEN + one feed's worth of bytes.
+        if self.pos > 0 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Bytes buffered but not yet decoded into a popped frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Pop the next complete frame, if one is fully buffered.
+    ///
+    /// `Ok(None)` means "need more bytes"; [`WireError::Corrupt`] means
+    /// the stream is broken (impossible length or unknown tag) and the
+    /// connection should be terminated — there is no resync.
+    pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
+        let avail = &self.buf[self.pos..];
+        if avail.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32le(avail) as usize;
+        if !(FRAME_HEADER_LEN..=MAX_FRAME_LEN).contains(&len) {
+            return Err(WireError::Corrupt(format!(
+                "frame length {len} outside [{FRAME_HEADER_LEN}, \
+                 {MAX_FRAME_LEN}]"
+            )));
+        }
+        if avail.len() < 4 + len {
+            return Ok(None);
+        }
+        let id = u64le(&avail[4..12]);
+        let tag = avail[12];
+        if !matches!(
+            tag,
+            REQ_PREDICT | REQ_JSON | RESP_OK | RESP_ERR | RESP_SHED
+                | RESP_GOAWAY
+        ) {
+            return Err(WireError::Corrupt(format!("unknown tag {tag:#04x}")));
+        }
+        let body = avail[FRAME_HEADER_LEN + 4..4 + len].to_vec();
+        self.pos += 4 + len;
+        Ok(Some(Frame { id, tag, body }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predict_round_trip() {
+        let mut buf = Vec::new();
+        encode_predict_req(&mut buf, 42, "wordcount", 20, 5);
+        let mut fr = FrameReader::new();
+        fr.feed(&buf);
+        let f = fr.next_frame().unwrap().unwrap();
+        assert_eq!(f.id, 42);
+        assert_eq!(f.tag, REQ_PREDICT);
+        assert_eq!(
+            decode_predict_req(&f.body).unwrap(),
+            ("wordcount".into(), 20, 5)
+        );
+        assert!(fr.next_frame().unwrap().is_none());
+    }
+
+    #[test]
+    fn predict_ok_bits_survive() {
+        let p = Prediction { seconds: 512.437_291_8, version: 7 };
+        let mut buf = Vec::new();
+        encode_predict_ok(&mut buf, 9, &p);
+        let mut fr = FrameReader::new();
+        fr.feed(&buf);
+        let f = fr.next_frame().unwrap().unwrap();
+        let got = decode_predict_ok(&f.body).unwrap();
+        assert_eq!(got.seconds.to_bits(), p.seconds.to_bits());
+        assert_eq!(got.version, 7);
+    }
+
+    #[test]
+    fn byte_split_feeds_never_desync() {
+        let mut buf = Vec::new();
+        for i in 0..10u64 {
+            encode_predict_req(&mut buf, i, "exim", 10 + i as u32, 5);
+        }
+        for chunk in [1usize, 2, 3, 7, 13] {
+            let mut fr = FrameReader::new();
+            let mut ids = Vec::new();
+            for piece in buf.chunks(chunk) {
+                fr.feed(piece);
+                while let Some(f) = fr.next_frame().unwrap() {
+                    ids.push(f.id);
+                }
+            }
+            assert_eq!(ids, (0..10).collect::<Vec<_>>(), "chunk {chunk}");
+            assert_eq!(fr.pending_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn oversize_and_tiny_lengths_are_corrupt() {
+        for len in [0u32, 1, 8, (MAX_FRAME_LEN + 1) as u32, u32::MAX] {
+            let mut fr = FrameReader::new();
+            fr.feed(&len.to_le_bytes());
+            fr.feed(&[0u8; 16]);
+            assert!(
+                matches!(fr.next_frame(), Err(WireError::Corrupt(_))),
+                "len {len} must be corrupt"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_tag_is_corrupt() {
+        let mut buf = Vec::new();
+        encode_frame(&mut buf, 1, REQ_PREDICT, &[0, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        buf[12] = 0x7f; // clobber the tag
+        let mut fr = FrameReader::new();
+        fr.feed(&buf);
+        assert!(matches!(fr.next_frame(), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn preamble_round_trip_and_rejections() {
+        let mut buf = Vec::new();
+        encode_preamble(&mut buf);
+        let arr: [u8; PREAMBLE_LEN] = buf[..].try_into().unwrap();
+        check_preamble(&arr).unwrap();
+        let mut bad_magic = arr;
+        bad_magic[0] = b'X';
+        assert!(check_preamble(&bad_magic).is_err());
+        let mut bad_version = arr;
+        bad_version[4] = 99;
+        assert!(check_preamble(&bad_version).is_err());
+    }
+
+    #[test]
+    fn malformed_predict_bodies_are_corrupt() {
+        assert!(decode_predict_req(&[]).is_err());
+        assert!(decode_predict_req(&[5, 0]).is_err()); // truncated
+        let mut buf = Vec::new();
+        encode_predict_req(&mut buf, 1, "grep", 1, 1);
+        // Body with one byte chopped off.
+        let mut fr = FrameReader::new();
+        fr.feed(&buf);
+        let f = fr.next_frame().unwrap().unwrap();
+        assert!(decode_predict_req(&f.body[..f.body.len() - 1]).is_err());
+        assert!(decode_predict_ok(&[1, 2, 3]).is_err());
+    }
+}

@@ -12,7 +12,7 @@
 //!   serve     start the TCP prediction service
 //!   e2e       full end-to-end validation (same driver as examples/e2e_repro)
 //!   store     inspect/compact/clear a persistent profile store
-//!   bench     store/executor microbenchmarks -> BENCH_*.json
+//!   bench     store/executor/serving microbenchmarks -> BENCH_*.json
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -20,8 +20,10 @@ use std::sync::{Arc, Mutex};
 use mrtuner::apps::AppId;
 use mrtuner::cluster::Cluster;
 use mrtuner::coordinator::{
-    ModelRegistry, PredictionService, Server, ServiceConfig, Trainer,
+    Client, ClientError, ModelRegistry, PipelinedClient, PredictionService,
+    ServeOptions, Server, ServiceConfig, Trainer,
 };
+use mrtuner::model::features::NUM_FEATURES;
 use mrtuner::model::ndpoly::NdPolyModel;
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig, RepOutcome};
@@ -171,17 +173,21 @@ fn print_help() {
                     [--csv FILE] [--jobs N]              4-parameter sweep:\n\
                     T and CPU-seconds vs (M, R, input GB, block MB)\n\
            serve    [--addr HOST:PORT] [--seed N] [--jobs N]\n\
-                    [--retrain-every SECS]\n\
-                    TCP prediction service; with --store it also runs the\n\
-                    online trainer (protocol op `retrain`, plus a periodic\n\
-                    refit every SECS seconds) so newly profiled apps are\n\
-                    served without restart\n\
+                    [--retrain-every SECS] [--serve-workers N]\n\
+                    [--serve-queue N]\n\
+                    TCP prediction service (JSON lines + pipelined binary\n\
+                    protocol, autodetected per connection); with --store it\n\
+                    also runs the online trainer (protocol op `retrain`,\n\
+                    plus a periodic refit every SECS seconds) so newly\n\
+                    profiled apps are served without restart\n\
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
            store    <stats|compact|clear> --store PATH [--store-max-mb N]\n\
                     persistent profile store maintenance\n\
-           bench    <store|campaign> [--records N] [--reps N] [--jobs N]\n\
-                    [--out FILE]  store/executor microbenchmarks; writes\n\
-                    BENCH_store.json / BENCH_campaign.json\n\n\
+           bench    <store|campaign|serve> [--records N] [--reps N]\n\
+                    [--jobs N] [--requests N] [--clients N] [--window W]\n\
+                    [--out FILE]  store/executor/serving microbenchmarks;\n\
+                    writes BENCH_store.json / BENCH_campaign.json /\n\
+                    BENCH_serve.json\n\n\
          --jobs N sets the profiling worker count (default: all cores);\n\
          campaign results are bit-identical for any N.\n\n\
          --store PATH attaches a persistent on-disk profile store to any\n\
@@ -617,14 +623,272 @@ fn bench_case(st: &BenchStats, units: f64) -> Json {
 fn cmd_bench(args: &Args) -> Result<(), String> {
     let what = args
         .positional(0)
-        .ok_or("usage: mrtuner bench <store|campaign> [--flags]")?;
+        .ok_or("usage: mrtuner bench <store|campaign|serve> [--flags]")?;
     match what.as_str() {
         "store" => bench_store(args),
         "campaign" => bench_campaign(args),
-        other => {
-            Err(format!("unknown bench target '{other}' (store | campaign)"))
+        "serve" => bench_serve(args),
+        other => Err(format!(
+            "unknown bench target '{other}' (store | campaign | serve)"
+        )),
+    }
+}
+
+/// Synthetic serving model for `bench serve`: coefficients chosen so
+/// predictions vary with (M, R); the intercept parameterizes hot-swap
+/// refits.
+fn serve_bench_model(intercept: f64) -> RegressionModel {
+    let mut coeffs = [0.0; NUM_FEATURES];
+    coeffs[0] = intercept;
+    coeffs[1] = 40.0;
+    coeffs[4] = -8.0;
+    RegressionModel { app_name: "wordcount".into(), coeffs, trained_on: 20 }
+}
+
+/// Serving-path benchmark over a real loopback server: unloaded
+/// round-trip latency and concurrent throughput for both protocols
+/// (legacy JSON lines vs pipelined binary), cross-protocol prediction
+/// bit-identity, version monotonicity under hot-swap, and the shed rate
+/// of a deliberately starved queue.  Results land in `BENCH_serve.json`
+/// (`--out`), the serving leg of the perf trajectory CI validates.
+fn bench_serve(args: &Args) -> Result<(), String> {
+    let requests = args.u64_or("requests", 40_000)? as usize;
+    let clients = args.u64_or("clients", 4)? as usize;
+    let window = args.u64_or("window", 64)? as usize;
+    let out = args.str_or("out", "BENCH_serve.json");
+    args.reject_unknown()?;
+    if requests == 0 || clients == 0 || window == 0 {
+        return Err(
+            "--requests, --clients and --window must all be >= 1".into()
+        );
+    }
+
+    // The bench measures the serving path, not the fit: install a
+    // synthetic model directly.
+    let mut registry = ModelRegistry::new();
+    registry.insert(serve_bench_model(400.0));
+    let service = Arc::new(PredictionService::start(
+        || experiments::default_backend().0,
+        registry,
+        ServiceConfig::default(),
+    ));
+    let server = Server::start_tuned(
+        "127.0.0.1:0",
+        Arc::clone(&service),
+        None,
+        ServeOptions::default(),
+    )
+    .map_err(|e| e.to_string())?;
+    let addr = server.addr.to_string();
+
+    let per_client = requests.div_ceil(clients);
+    let total = per_client * clients;
+    let workload: Vec<(String, u32, u32)> = (0..per_client)
+        .map(|i| {
+            (
+                "wordcount".to_string(),
+                5 + (i % 36) as u32,
+                5 + (i % 7) as u32,
+            )
+        })
+        .collect();
+    println!(
+        "bench serve: {total} predicts, {clients} client(s), window {window}"
+    );
+
+    // Unloaded request-level round-trip latency, per protocol.
+    let lat_iters = requests.clamp(100, 2_000) as u32;
+    let json_lat = {
+        let mut c = Client::connect(&addr).map_err(|e| e.to_string())?;
+        bench("json predict round-trip, unloaded", 50, lat_iters, || {
+            c.predict("wordcount", 20, 5).unwrap();
+        })
+    };
+    let bin_lat = {
+        let mut c =
+            PipelinedClient::connect(&addr).map_err(|e| e.to_string())?;
+        bench("binary predict round-trip, unloaded", 50, lat_iters, || {
+            let id = c.submit_predict("wordcount", 20, 5);
+            c.flush().unwrap();
+            let (got, _) = c.recv().unwrap();
+            assert_eq!(got, id);
+        })
+    };
+
+    // Concurrent throughput: same workload, both protocols.  The JSON
+    // protocol is strictly request-response; the binary protocol keeps
+    // `window` requests in flight per connection.
+    let json_tp = bench("json throughput, concurrent clients", 0, 2, || {
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                s.spawn(|| {
+                    let mut c = Client::connect(&addr).unwrap();
+                    for (app, m, r) in &workload {
+                        c.predict(app, *m, *r).unwrap();
+                    }
+                });
+            }
+        });
+    });
+    let bin_tp =
+        bench("binary pipelined throughput, concurrent clients", 0, 2, || {
+            std::thread::scope(|s| {
+                for _ in 0..clients {
+                    s.spawn(|| {
+                        let mut c = PipelinedClient::connect(&addr).unwrap();
+                        let replies =
+                            c.predict_many(&workload, window).unwrap();
+                        for r in &replies {
+                            r.as_ref().unwrap();
+                        }
+                    });
+                }
+            });
+        });
+
+    // Cross-protocol bit-identity: both protocols must answer every
+    // probe with exactly the same bits and version.
+    let probe: Vec<(String, u32, u32)> = (0..200)
+        .map(|i| {
+            (
+                "wordcount".to_string(),
+                5 + (i % 36) as u32,
+                5 + (i % 7) as u32,
+            )
+        })
+        .collect();
+    let mut bit_identical = true;
+    {
+        let mut jc = Client::connect(&addr).map_err(|e| e.to_string())?;
+        let mut bc =
+            PipelinedClient::connect(&addr).map_err(|e| e.to_string())?;
+        let bin = bc.predict_many(&probe, window).map_err(|e| e.to_string())?;
+        for ((app, m, r), b) in probe.iter().zip(&bin) {
+            let b = b.as_ref().map_err(|e| e.to_string())?;
+            let j =
+                jc.predict_versioned(app, *m, *r).map_err(|e| e.to_string())?;
+            if j.seconds.to_bits() != b.seconds.to_bits()
+                || j.version != b.version
+            {
+                bit_identical = false;
+            }
         }
     }
+
+    // Hot-swap monotonicity: versions observed by a pipelined stream
+    // must never go backwards while refits publish concurrently.
+    let monotonic = {
+        let mut bc =
+            PipelinedClient::connect(&addr).map_err(|e| e.to_string())?;
+        let load: Vec<(String, u32, u32)> = (0..4_000)
+            .map(|i| ("wordcount".to_string(), 5 + (i % 36) as u32, 5))
+            .collect();
+        let swap_service = Arc::clone(&service);
+        let swapper = std::thread::spawn(move || {
+            for k in 0..10u32 {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+                swap_service
+                    .publish_model(serve_bench_model(400.0 + k as f64), 0.0);
+            }
+        });
+        let replies =
+            bc.predict_many(&load, window).map_err(|e| e.to_string())?;
+        swapper.join().map_err(|_| "swapper panicked".to_string())?;
+        let versions: Vec<u64> = replies
+            .iter()
+            .map(|r| r.as_ref().map(|p| p.version))
+            .collect::<Result<_, _>>()
+            .map_err(|e| e.to_string())?;
+        versions.windows(2).all(|w| w[0] <= w[1])
+    };
+
+    // Load shedding on a deliberately starved queue: one slow worker
+    // (fault-injected 2 ms per job), queue depth 1.  Some requests must
+    // come back as typed SHED, the rest must still be answered.
+    let shed_opts = ServeOptions {
+        workers: 1,
+        queue_depth: 1,
+        max_batch: 16,
+        batch_delay: std::time::Duration::from_millis(2),
+    };
+    let shed_server = Server::start_tuned(
+        "127.0.0.1:0",
+        Arc::clone(&service),
+        None,
+        shed_opts,
+    )
+    .map_err(|e| e.to_string())?;
+    let shed_addr = shed_server.addr.to_string();
+    let shed_reqs: Vec<(String, u32, u32)> = (0..600)
+        .map(|i| ("wordcount".to_string(), 5 + (i % 36) as u32, 5))
+        .collect();
+    let mut shed = 0usize;
+    let mut served = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut c =
+                        PipelinedClient::connect(&shed_addr).unwrap();
+                    let replies = c.predict_many(&shed_reqs, 256).unwrap();
+                    replies.iter().fold(
+                        (0usize, 0usize),
+                        |(sh, ok), r| match r {
+                            Err(ClientError::Shed) => (sh + 1, ok),
+                            Ok(_) => (sh, ok + 1),
+                            Err(_) => (sh, ok),
+                        },
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            let (sh, ok) = h.join().unwrap();
+            shed += sh;
+            served += ok;
+        }
+    });
+    let shed_rate = shed as f64 / (2 * shed_reqs.len()) as f64;
+    if served == 0 {
+        return Err("bench serve: starved server answered nothing".into());
+    }
+
+    let json_pps = json_tp.throughput(total as f64);
+    let bin_pps = bin_tp.throughput(total as f64);
+    let ratio = bin_pps / json_pps;
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("serve".into())),
+        ("schema", Json::Num(1.0)),
+        ("records", Json::Num(total as f64)),
+        ("clients", Json::Num(clients as f64)),
+        ("window", Json::Num(window as f64)),
+        (
+            "cases",
+            Json::Arr(vec![
+                bench_case(&json_lat, 1.0),
+                bench_case(&bin_lat, 1.0),
+                bench_case(&json_tp, total as f64),
+                bench_case(&bin_tp, total as f64),
+            ]),
+        ),
+        ("p50_latency_s", Json::Num(bin_lat.p50_s)),
+        ("p99_latency_s", Json::Num(bin_lat.p99_s)),
+        ("json_predictions_per_s", Json::Num(json_pps)),
+        ("binary_predictions_per_s", Json::Num(bin_pps)),
+        ("binary_vs_json_throughput_ratio", Json::Num(ratio)),
+        ("shed_rate", Json::Num(shed_rate)),
+        ("bit_identical_json_binary", Json::Bool(bit_identical)),
+        ("monotonic_versions_under_hot_swap", Json::Bool(monotonic)),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).map_err(|e| e.to_string())?;
+    println!(
+        "binary/json throughput ratio: {ratio:.2}x ({bin_pps:.0} vs \
+         {json_pps:.0} predictions/s); shed rate {shed_rate:.3}; \
+         bit-identical: {bit_identical}; monotonic under hot-swap: \
+         {monotonic}"
+    );
+    println!("wrote {out}");
+    Ok(())
 }
 
 /// Store-scaling benchmark: the same record population as a legacy JSONL
@@ -891,9 +1155,16 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let addr = args.str_or("addr", "127.0.0.1:7070");
     let seed = args.u64_or("seed", 42)?;
     let retrain_every = args.u64_or("retrain-every", 0)?;
+    // Serving-path knobs (binary protocol batching + admission control);
+    // defaults mirror ServeOptions::default().
+    let serve_workers = args.u64_or("serve-workers", 1)? as usize;
+    let serve_queue = args.u64_or("serve-queue", 1024)? as usize;
     let store_dir = store_path_from(args);
     let executor = executor_from(args)?;
     args.reject_unknown()?;
+    if serve_workers == 0 || serve_queue == 0 {
+        return Err("--serve-workers and --serve-queue must be >= 1".into());
+    }
     if retrain_every > 0 && store_dir.is_none() {
         return Err(
             "--retrain-every requires a profile store (--store PATH or \
@@ -976,12 +1247,22 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             }
         });
     }
-    let server = Server::start_with(&addr, service, trainer)
+    let opts = ServeOptions {
+        workers: serve_workers,
+        queue_depth: serve_queue,
+        ..ServeOptions::default()
+    };
+    let server = Server::start_tuned(&addr, service, trainer, opts)
         .map_err(|e| e.to_string())?;
     println!("prediction service listening on {}", server.addr);
-    println!("protocol: one JSON object per line, e.g.");
+    println!("protocols (autodetected per connection):");
+    println!("  JSON lines — one object per line, e.g.");
     println!("  {{\"op\":\"predict\",\"app\":\"wordcount\",\"mappers\":20,\"reducers\":5}}");
     println!("  ops: predict | models | model_info | retrain | health");
+    println!(
+        "  binary v2 — pipelined length-prefixed frames \
+         (docs/OPERATIONS.md, \"Serving at scale\")"
+    );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -6,7 +6,8 @@ use std::sync::Arc;
 
 use mrtuner::coordinator::client::Client;
 use mrtuner::coordinator::{
-    ModelRegistry, PredictionService, Server, ServiceConfig,
+    ModelRegistry, PipelinedClient, PredictionService, ServeOptions, Server,
+    ServiceConfig,
 };
 use mrtuner::model::features::{evaluate, NUM_FEATURES};
 use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
@@ -232,4 +233,69 @@ fn hot_swap_under_concurrent_predict_load() {
     // At least one worker must have observed a post-swap version.
     let final_info = svc.model_info("wordcount").unwrap();
     assert_eq!(final_info.version, swaps);
+}
+
+/// The hot-swap contract, end to end over the binary protocol: clients
+/// keep a pipelined window in flight across the server's batch queue
+/// while refits publish concurrently.  Every reply must succeed, carry
+/// a strictly non-decreasing version in submission order, and be
+/// self-consistent with the version it names — the batch path's atomic
+/// `(coeffs, version)` read, observed through TCP.
+#[test]
+fn hot_swap_under_pipelined_binary_load() {
+    let svc = start_service();
+    let mut server = Server::start_tuned(
+        "127.0.0.1:0",
+        Arc::clone(&svc),
+        None,
+        ServeOptions::default(),
+    )
+    .unwrap();
+    let addr = server.addr.to_string();
+    let swaps = 12u64;
+    let mut handles = Vec::new();
+    for t in 0..3u32 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = PipelinedClient::connect(&addr).unwrap();
+            let reqs: Vec<(String, u32, u32)> = (0..800u32)
+                .map(|i| ("wordcount".to_string(), 5 + ((i + t) % 36), 5))
+                .collect();
+            let replies = c.predict_many(&reqs, 64).unwrap();
+            let mut last = 0u64;
+            for ((_, m, _), r) in reqs.iter().zip(&replies) {
+                let p = r
+                    .as_ref()
+                    .expect("predict must never fail during a hot swap");
+                assert!(
+                    p.version >= last,
+                    "versions must be monotonic: {last} then {}",
+                    p.version
+                );
+                // Version k serves the intercept shifted by (k - 1) * 10.
+                let mut coeffs = test_model("wordcount").coeffs;
+                coeffs[0] += (p.version - 1) as f64 * 10.0;
+                let want = evaluate(&coeffs, &[*m as f64, 5.0]);
+                assert!(
+                    (p.seconds - want).abs() < 1e-9,
+                    "answer inconsistent with its version {}",
+                    p.version
+                );
+                last = p.version;
+            }
+            last
+        }));
+    }
+    // Publish refits while the pipelined windows are in flight.
+    for k in 2..=swaps {
+        let mut refit = test_model("wordcount");
+        refit.coeffs[0] += (k - 1) as f64 * 10.0;
+        assert_eq!(svc.publish_model(refit, 0.1), k);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    for h in handles {
+        let last = h.join().unwrap();
+        assert!((1..=swaps).contains(&last), "impossible version {last}");
+    }
+    server.shutdown();
 }

@@ -12,7 +12,7 @@ use std::time::{Duration, Instant};
 
 use mrtuner::coordinator::client::Client;
 use mrtuner::coordinator::{
-    ModelRegistry, PredictionService, Server, ServiceConfig,
+    ModelRegistry, PipelinedClient, PredictionService, Server, ServiceConfig,
 };
 use mrtuner::model::features::NUM_FEATURES;
 use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
@@ -157,6 +157,42 @@ fn oversized_request_line_is_rejected_not_buffered_forever() {
         );
         std::thread::sleep(Duration::from_millis(20));
     }
+}
+
+/// Binary-protocol churn: threads opening/closing pipelined
+/// connections (each with its own server-side writer thread) must stay
+/// correct and leave the tracked handle set bounded, exactly like the
+/// JSON-lines soak.
+#[test]
+fn soak_binary_pipelined_churn_stays_correct_and_bounded() {
+    let svc = start_service();
+    let server = Server::start("127.0.0.1:0", svc).unwrap();
+    let addr = server.addr.to_string();
+    let mut handles = Vec::new();
+    for t in 0..4u32 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            for _ in 0..10u32 {
+                let mut c = PipelinedClient::connect(&addr).unwrap();
+                let reqs: Vec<(String, u32, u32)> = (0..30u32)
+                    .map(|i| ("wordcount".to_string(), 5 + ((t + i) % 36), 5))
+                    .collect();
+                for r in c.predict_many(&reqs, 8).unwrap() {
+                    let p = r.unwrap();
+                    assert_eq!(p.seconds, 400.0);
+                    assert_eq!(p.version, 1);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        server.tracked_connections() < 20,
+        "{} tracked after binary churn",
+        server.tracked_connections()
+    );
 }
 
 /// Parallel churn: several threads each opening/closing many

@@ -1,0 +1,457 @@
+//! Adversarial and property tests for the binary wire protocol against
+//! a live server: arbitrary byte-split delivery, truncated / oversize /
+//! garbage-magic frames, per-request error isolation, JSON-op
+//! tunneling, and typed GOAWAY + load-shed semantics.
+//!
+//! The framing contract under test: a decoder must survive any byte
+//! split without desync, and structurally impossible bytes must end the
+//! connection with a typed GOAWAY — never a panic, never a resync
+//! guess.  These run in CI under the bounded-time profile (see
+//! `.github/workflows/ci.yml`).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mrtuner::coordinator::client::ClientError;
+use mrtuner::coordinator::wire;
+use mrtuner::coordinator::{
+    ModelRegistry, PipelinedClient, PredictionService, ServeOptions, Server,
+    ServiceConfig,
+};
+use mrtuner::model::features::NUM_FEATURES;
+use mrtuner::model::regression::{FitBackend, RegressionModel, RustSolverBackend};
+use mrtuner::util::json::Json;
+use mrtuner::util::prop::forall;
+
+fn flat_model(app: &str, base: f64) -> RegressionModel {
+    let mut coeffs = [0.0; NUM_FEATURES];
+    coeffs[0] = base;
+    RegressionModel { app_name: app.into(), coeffs, trained_on: 20 }
+}
+
+fn start_service() -> Arc<PredictionService> {
+    let mut reg = ModelRegistry::new();
+    reg.insert(flat_model("wordcount", 400.0));
+    Arc::new(PredictionService::start(
+        || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+        reg,
+        ServiceConfig::default(),
+    ))
+}
+
+fn start_server() -> (Server, String) {
+    let server = Server::start("127.0.0.1:0", start_service()).unwrap();
+    let addr = server.addr.to_string();
+    (server, addr)
+}
+
+/// A raw socket speaking hand-rolled bytes, with a generous read
+/// timeout so a buggy server hangs the test, not CI.
+fn raw_conn(addr: &str) -> TcpStream {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .unwrap();
+    stream
+}
+
+/// Read exactly `want` frames off the wire; panics on close, timeout,
+/// or (the real assertion) any response bytes that fail to parse.
+fn read_frames(stream: &mut TcpStream, want: usize) -> Vec<wire::Frame> {
+    let mut fr = wire::FrameReader::new();
+    let mut out = Vec::new();
+    let mut buf = [0u8; 4096];
+    while out.len() < want {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => panic!("server closed after {}/{want} frames", out.len()),
+            Ok(n) => n,
+            Err(e) => panic!(
+                "read failed after {}/{want} frames: {e}",
+                out.len()
+            ),
+        };
+        fr.feed(&buf[..n]);
+        while let Some(f) = fr.next_frame().expect("server frames must parse")
+        {
+            out.push(f);
+        }
+    }
+    out
+}
+
+/// Read frames until the server hangs up; every byte it sent must
+/// parse as well-formed frames (no trailing garbage).
+fn read_frames_until_eof(stream: &mut TcpStream) -> Vec<wire::Frame> {
+    let mut fr = wire::FrameReader::new();
+    let mut out = Vec::new();
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => n,
+            Err(e) => panic!("read failed awaiting hang-up: {e}"),
+        };
+        fr.feed(&buf[..n]);
+        while let Some(f) = fr.next_frame().expect("server frames must parse")
+        {
+            out.push(f);
+        }
+    }
+    assert_eq!(fr.pending_bytes(), 0, "server hung up mid-frame");
+    out
+}
+
+/// Property: however the client's bytes are split across writes, every
+/// pipelined request gets exactly one correct response — framing never
+/// desyncs.
+#[test]
+fn property_pipelined_predicts_survive_arbitrary_byte_splits() {
+    let (_server, addr) = start_server();
+    forall("byte-split pipelining", 6, |rng| {
+        let n = rng.range_usize(8, 24);
+        let mut buf = Vec::new();
+        wire::encode_preamble(&mut buf);
+        for i in 0..n {
+            wire::encode_predict_req(
+                &mut buf,
+                (i + 1) as u64,
+                "wordcount",
+                5 + (i % 36) as u32,
+                5,
+            );
+        }
+        let mut stream = raw_conn(&addr);
+        let mut sent = 0;
+        while sent < buf.len() {
+            let end = (sent + rng.range_usize(1, 17)).min(buf.len());
+            stream.write_all(&buf[sent..end]).unwrap();
+            stream.flush().unwrap();
+            sent = end;
+        }
+        let frames = read_frames(&mut stream, n);
+        let mut ids: Vec<u64> = frames.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (1..=n as u64).collect::<Vec<_>>());
+        for f in &frames {
+            assert_eq!(f.tag, wire::RESP_OK, "id {}", f.id);
+            let p = wire::decode_predict_ok(&f.body).unwrap();
+            assert_eq!(p.seconds, 400.0);
+            assert_eq!(p.version, 1);
+        }
+    });
+}
+
+/// Two connections writing interleaved chunks must each get exactly
+/// their own request ids back — per-connection framing state never
+/// bleeds across handlers.
+#[test]
+fn interleaved_connections_do_not_cross_talk() {
+    let (_server, addr) = start_server();
+    let build = |base_id: u64| {
+        let mut buf = Vec::new();
+        wire::encode_preamble(&mut buf);
+        for i in 0..5u64 {
+            wire::encode_predict_req(
+                &mut buf,
+                base_id + i,
+                "wordcount",
+                10 + i as u32,
+                5,
+            );
+        }
+        buf
+    };
+    let (a_bytes, b_bytes) = (build(1), build(101));
+    let mut a = raw_conn(&addr);
+    let mut b = raw_conn(&addr);
+    let (mut ai, mut bi) = (0usize, 0usize);
+    while ai < a_bytes.len() || bi < b_bytes.len() {
+        if ai < a_bytes.len() {
+            let end = (ai + 9).min(a_bytes.len());
+            a.write_all(&a_bytes[ai..end]).unwrap();
+            ai = end;
+        }
+        if bi < b_bytes.len() {
+            let end = (bi + 13).min(b_bytes.len());
+            b.write_all(&b_bytes[bi..end]).unwrap();
+            bi = end;
+        }
+    }
+    let mut a_ids: Vec<u64> =
+        read_frames(&mut a, 5).iter().map(|f| f.id).collect();
+    let mut b_ids: Vec<u64> =
+        read_frames(&mut b, 5).iter().map(|f| f.id).collect();
+    a_ids.sort_unstable();
+    b_ids.sort_unstable();
+    assert_eq!(a_ids, (1..=5).collect::<Vec<_>>());
+    assert_eq!(b_ids, (101..=105).collect::<Vec<_>>());
+}
+
+/// A connection opening with the binary magic byte but a wrong magic
+/// tail gets a typed GOAWAY naming the problem, then a hang-up — not
+/// the silent close the JSON protocol used to give.
+#[test]
+fn garbage_magic_preamble_gets_typed_goaway() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    s.write_all(b"MRTX\x02\x00\x00\x00").unwrap();
+    let frames = read_frames_until_eof(&mut s);
+    assert_eq!(frames.len(), 1, "{frames:?}");
+    assert_eq!(frames[0].tag, wire::RESP_GOAWAY);
+    assert_eq!(frames[0].id, 0);
+    let reason = String::from_utf8_lossy(&frames[0].body).into_owned();
+    assert!(reason.contains("magic"), "{reason}");
+}
+
+/// An unsupported wire version is refused with a GOAWAY that names the
+/// version this build speaks.
+#[test]
+fn unsupported_wire_version_gets_typed_goaway() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    s.write_all(b"MRTW").unwrap();
+    s.write_all(&9u32.to_le_bytes()).unwrap();
+    let frames = read_frames_until_eof(&mut s);
+    assert_eq!(frames.len(), 1, "{frames:?}");
+    assert_eq!(frames[0].tag, wire::RESP_GOAWAY);
+    let reason = String::from_utf8_lossy(&frames[0].body).into_owned();
+    assert!(reason.contains("version"), "{reason}");
+}
+
+/// An impossible frame length (here: larger than the 64 KB cap) is
+/// unrecoverable corruption: GOAWAY, then hang-up — the buffer never
+/// grows toward the announced length.
+#[test]
+fn oversize_frame_length_gets_goaway_not_buffered() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    let mut buf = Vec::new();
+    wire::encode_preamble(&mut buf);
+    buf.extend_from_slice(&((wire::MAX_FRAME_LEN + 1) as u32).to_le_bytes());
+    buf.extend_from_slice(&[0u8; 32]);
+    s.write_all(&buf).unwrap();
+    let frames = read_frames_until_eof(&mut s);
+    assert_eq!(frames.len(), 1, "{frames:?}");
+    assert_eq!(frames[0].tag, wire::RESP_GOAWAY);
+    let reason = String::from_utf8_lossy(&frames[0].body).into_owned();
+    assert!(reason.contains("length"), "{reason}");
+}
+
+/// A client vanishing mid-frame is not an error worth answering: the
+/// server just closes, and the listener keeps serving new connections.
+#[test]
+fn truncated_frame_then_close_is_harmless() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    let mut buf = Vec::new();
+    wire::encode_preamble(&mut buf);
+    wire::encode_predict_req(&mut buf, 1, "wordcount", 20, 5);
+    // Preamble plus five bytes of frame, then a half-close.
+    s.write_all(&buf[..wire::PREAMBLE_LEN + 5]).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let frames = read_frames_until_eof(&mut s);
+    assert!(frames.is_empty(), "{frames:?}");
+    // The server is still healthy for the next client.
+    let mut c = PipelinedClient::connect(&addr).unwrap();
+    let id = c.submit_predict("wordcount", 20, 5);
+    c.flush().unwrap();
+    let (got, _) = c.recv().unwrap();
+    assert_eq!(got, id);
+}
+
+/// A malformed request *body* inside intact framing is isolated to its
+/// request id: RESP_ERR for the broken one, normal service for every
+/// other request before and after it.
+#[test]
+fn malformed_predict_body_is_isolated_per_request() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    let mut buf = Vec::new();
+    wire::encode_preamble(&mut buf);
+    // Body announces a 513-byte app name in a 3-byte body.
+    wire::encode_frame(&mut buf, 7, wire::REQ_PREDICT, &[1, 2, 3]);
+    wire::encode_predict_req(&mut buf, 8, "wordcount", 20, 5);
+    s.write_all(&buf).unwrap();
+    let frames = read_frames(&mut s, 2);
+    for f in &frames {
+        match f.id {
+            7 => assert_eq!(f.tag, wire::RESP_ERR, "{f:?}"),
+            8 => {
+                assert_eq!(f.tag, wire::RESP_OK, "{f:?}");
+                let p = wire::decode_predict_ok(&f.body).unwrap();
+                assert_eq!(p.seconds, 400.0);
+            }
+            other => panic!("unrequested id {other}"),
+        }
+    }
+    // The connection survived the bad request.
+    let mut more = Vec::new();
+    wire::encode_predict_req(&mut more, 9, "wordcount", 21, 5);
+    s.write_all(&more).unwrap();
+    let after = read_frames(&mut s, 1);
+    assert_eq!(after[0].id, 9);
+    assert_eq!(after[0].tag, wire::RESP_OK);
+}
+
+/// Unknown-app failures ride the batch path as per-request server
+/// errors: surrounding requests on the same pipelined connection are
+/// untouched.
+#[test]
+fn unknown_app_errors_are_isolated_per_request() {
+    let (_server, addr) = start_server();
+    let mut c = PipelinedClient::connect(&addr).unwrap();
+    let reqs = vec![
+        ("wordcount".to_string(), 10, 5),
+        ("nosuchapp".to_string(), 10, 5),
+        ("wordcount".to_string(), 11, 5),
+    ];
+    let replies = c.predict_many(&reqs, 8).unwrap();
+    assert_eq!(replies.len(), 3);
+    assert_eq!(replies[0].as_ref().unwrap().seconds, 400.0);
+    match &replies[1] {
+        Err(ClientError::Server(msg)) => {
+            assert!(msg.contains("no model"), "{msg}")
+        }
+        other => panic!("expected isolated server error, got {other:?}"),
+    }
+    assert_eq!(replies[2].as_ref().unwrap().seconds, 400.0);
+}
+
+/// Structural corruption mid-stream (after valid traffic) ends the
+/// connection with a GOAWAY as the final frame; everything the server
+/// sent up to the hang-up still parses cleanly.
+#[test]
+fn corrupt_framing_mid_stream_ends_with_goaway() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    let mut buf = Vec::new();
+    wire::encode_preamble(&mut buf);
+    wire::encode_predict_req(&mut buf, 1, "wordcount", 20, 5);
+    // A length below the frame-header minimum: unrecoverable.
+    buf.extend_from_slice(&3u32.to_le_bytes());
+    buf.extend_from_slice(&[0u8; 16]);
+    s.write_all(&buf).unwrap();
+    let frames = read_frames_until_eof(&mut s);
+    let last = frames.last().expect("a GOAWAY must be sent");
+    assert_eq!(last.tag, wire::RESP_GOAWAY, "{frames:?}");
+    // Any frames before the GOAWAY answer request 1; a GOAWAY may also
+    // outrun that in-flight reply — both are within the contract.
+    for f in &frames[..frames.len() - 1] {
+        assert_eq!(f.id, 1, "{f:?}");
+        assert!(
+            matches!(f.tag, wire::RESP_OK | wire::RESP_SHED),
+            "{f:?}"
+        );
+    }
+}
+
+/// A client writing response tags is outside the protocol: typed
+/// GOAWAY naming the misuse, then hang-up.
+#[test]
+fn client_sending_response_tag_gets_goaway() {
+    let (_server, addr) = start_server();
+    let mut s = raw_conn(&addr);
+    let mut buf = Vec::new();
+    wire::encode_preamble(&mut buf);
+    wire::encode_frame(&mut buf, 3, wire::RESP_OK, &[0u8; 16]);
+    s.write_all(&buf).unwrap();
+    let frames = read_frames_until_eof(&mut s);
+    assert_eq!(frames.len(), 1, "{frames:?}");
+    assert_eq!(frames[0].tag, wire::RESP_GOAWAY);
+    let reason = String::from_utf8_lossy(&frames[0].body).into_owned();
+    assert!(reason.contains("response tag"), "{reason}");
+}
+
+/// The whole legacy JSON surface tunnels through REQ_JSON frames, and
+/// a tunneled predict answers with exactly the bits the native binary
+/// predict produces.
+#[test]
+fn json_ops_tunnel_through_binary_frames() {
+    let (_server, addr) = start_server();
+    let mut c = PipelinedClient::connect(&addr).unwrap();
+
+    let models = c
+        .json_op(&Json::obj(vec![("op", Json::Str("models".into()))]))
+        .unwrap();
+    let names: Vec<&str> = models
+        .get("models")
+        .and_then(|v| v.as_arr())
+        .unwrap()
+        .iter()
+        .filter_map(|v| v.as_str())
+        .collect();
+    assert_eq!(names, vec!["wordcount"]);
+
+    let health = c
+        .json_op(&Json::obj(vec![("op", Json::Str("health".into()))]))
+        .unwrap();
+    assert_eq!(health.get("shed").and_then(|v| v.as_f64()), Some(0.0));
+
+    let tunneled = c
+        .json_op(&Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            ("app", Json::Str("wordcount".into())),
+            ("mappers", Json::Num(20.0)),
+            ("reducers", Json::Num(5.0)),
+        ]))
+        .unwrap();
+    let via_json = tunneled.get("predicted_s").and_then(|v| v.as_f64());
+
+    let id = c.submit_predict("wordcount", 20, 5);
+    c.flush().unwrap();
+    let (got, reply) = c.recv().unwrap();
+    assert_eq!(got, id);
+    let native = match reply {
+        mrtuner::coordinator::client::Reply::Predict(p) => p.seconds,
+        other => panic!("expected predict reply, got {other:?}"),
+    };
+    assert_eq!(via_json.map(f64::to_bits), Some(native.to_bits()));
+}
+
+/// Admission control under a deliberately starved queue: some requests
+/// come back as typed SHED (surfaced as [`ClientError::Shed`]), the
+/// rest are answered correctly, and the `shed` health counter agrees
+/// with what the client observed.
+#[test]
+fn starved_queue_sheds_typed_and_counted() {
+    let svc = start_service();
+    let opts = ServeOptions {
+        workers: 1,
+        queue_depth: 1,
+        max_batch: 4,
+        batch_delay: Duration::from_millis(5),
+    };
+    let mut server =
+        Server::start_tuned("127.0.0.1:0", Arc::clone(&svc), None, opts)
+            .unwrap();
+    let addr = server.addr.to_string();
+    let reqs: Vec<(String, u32, u32)> = (0..200u32)
+        .map(|i| ("wordcount".to_string(), 5 + (i % 36), 5))
+        .collect();
+    let mut c = PipelinedClient::connect(&addr).unwrap();
+    let replies = c.predict_many(&reqs, 128).unwrap();
+    let mut shed = 0u64;
+    let mut served = 0u64;
+    for r in &replies {
+        match r {
+            Ok(p) => {
+                assert_eq!(p.seconds, 400.0);
+                served += 1;
+            }
+            Err(ClientError::Shed) => shed += 1,
+            Err(other) => panic!("only Ok or Shed expected, got {other:?}"),
+        }
+    }
+    assert_eq!(served + shed, 200);
+    assert!(served > 0, "starved server answered nothing");
+    assert!(shed > 0, "queue depth 1 with a 5 ms worker never shed");
+    assert_eq!(
+        svc.metrics.shed.load(Ordering::Relaxed),
+        shed,
+        "health counter must match the typed SHED frames sent"
+    );
+    server.shutdown();
+}

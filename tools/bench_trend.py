@@ -1,0 +1,159 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression gate for BENCH_*.json files.
+
+CI regenerates each BENCH file on every run; this script compares the
+freshly generated numbers against the committed baseline (the same file
+at a git ref, default HEAD) and fails when any case's `units_per_s`
+drops below `threshold x baseline`.  Zero-dependency by design; shells
+out only to `git show`.
+
+Rules, tuned for noisy shared CI runners:
+
+  * a missing baseline (file not at the ref, or case name not in the
+    baseline) is a PASS — new benches enter the trajectory silently;
+  * a workload-size mismatch (`records` differs between current and
+    baseline) skips the file — throughput at different scales is not
+    comparable;
+  * the summary ratio fields (speedups, binary/json ratio) are reported
+    but never gated: they are self-relative and already schema-checked
+    by check_bench.py.
+
+Usage:
+    python3 tools/bench_trend.py [--ref REF] [--threshold T] [FILE...]
+
+With no FILEs, checks every BENCH_*.json in the repo root that exists
+both in the worktree and at REF.  Exits non-zero listing every
+regression found.
+"""
+
+import glob
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_THRESHOLD = 0.25
+
+
+def load_current(path):
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def load_baseline(root, path, ref):
+    rel = os.path.relpath(os.path.abspath(path), root).replace(os.sep, "/")
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{rel}"],
+            cwd=root,
+            capture_output=True,
+            check=True,
+        ).stdout
+    except subprocess.CalledProcessError:
+        return None  # not committed at the ref: no baseline to gate on
+    try:
+        return json.loads(out.decode("utf-8"))
+    except Exception:  # noqa: BLE001 - a rotten baseline must not block CI
+        return None
+
+
+def is_num(x):
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def case_rates(doc):
+    rates = {}
+    for case in doc.get("cases", []) or []:
+        if not isinstance(case, dict):
+            continue
+        name, rate = case.get("name"), case.get("units_per_s")
+        if isinstance(name, str) and is_num(rate) and rate > 0:
+            rates[name] = rate
+    return rates
+
+
+def check_file(root, path, ref, threshold, problems):
+    try:
+        cur = load_current(path)
+    except Exception as e:  # noqa: BLE001 - report, don't crash
+        problems.append(f"{path}: unreadable current file ({e})")
+        return
+    base = load_baseline(root, path, ref)
+    if base is None:
+        print(f"{path}: no baseline at {ref}, pass")
+        return
+    if cur.get("records") != base.get("records"):
+        print(
+            f"{path}: workload changed "
+            f"({base.get('records')} -> {cur.get('records')} records), skip"
+        )
+        return
+    base_rates = case_rates(base)
+    checked = 0
+    for name, rate in sorted(case_rates(cur).items()):
+        old = base_rates.get(name)
+        if old is None:
+            continue
+        checked += 1
+        ratio = rate / old
+        status = "ok" if ratio >= threshold else "REGRESSION"
+        print(
+            f"{path}: {name}: {rate:.1f} vs baseline {old:.1f} "
+            f"units/s ({ratio:.2f}x, floor {threshold:.2f}x) {status}"
+        )
+        if ratio < threshold:
+            problems.append(
+                f"{path}: '{name}' fell to {ratio:.2f}x of baseline "
+                f"(floor {threshold:.2f}x)"
+            )
+    if checked == 0:
+        print(f"{path}: no comparable cases, pass")
+
+
+def main():
+    argv = sys.argv[1:]
+    ref = "HEAD"
+    threshold = DEFAULT_THRESHOLD
+    paths = []
+    i = 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg == "--ref" and i + 1 < len(argv):
+            ref = argv[i + 1]
+            i += 2
+        elif arg == "--threshold" and i + 1 < len(argv):
+            try:
+                threshold = float(argv[i + 1])
+            except ValueError:
+                print(f"bad --threshold {argv[i + 1]!r}", file=sys.stderr)
+                return 2
+            i += 2
+        elif arg in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        else:
+            paths.append(arg)
+            i += 1
+    if not (0.0 < threshold <= 1.0):
+        print(f"--threshold must be in (0, 1], got {threshold}",
+              file=sys.stderr)
+        return 2
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    if not paths:
+        paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    problems = []
+    for path in paths:
+        if not os.path.isfile(path):
+            problems.append(f"{path}: no such file")
+            continue
+        check_file(root, path, ref, threshold, problems)
+    if problems:
+        for p in problems:
+            print(f"BENCH REGRESSION: {p}", file=sys.stderr)
+        return 1
+    print(f"bench trend ok ({len(paths)} file(s), ref {ref})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Schema check for BENCH_*.json perf-trajectory files.
 
-`mrtuner bench store|campaign` emits machine-readable benchmark
+`mrtuner bench store|campaign|serve` emits machine-readable benchmark
 summaries; CI generates one per run and this script fails the build if
 an emitted — or committed — file is malformed, so the perf trajectory
 stays parseable forever.  Zero-dependency by design.
@@ -21,14 +21,19 @@ import os
 import sys
 
 # The per-bench summary metric that must be present and positive, and
-# the per-bench determinism flag that must be present and true.
+# the per-bench determinism flags that must be present and true.
 SUMMARY_KEYS = {
     "store": "binary_vs_jsonl_open_speedup",
     "campaign": "parallel_speedup",
+    "serve": "binary_vs_json_throughput_ratio",
 }
 IDENTITY_KEYS = {
-    "store": "bit_identical_cold_warm",
-    "campaign": "bit_identical_serial_parallel",
+    "store": ["bit_identical_cold_warm"],
+    "campaign": ["bit_identical_serial_parallel"],
+    "serve": [
+        "bit_identical_json_binary",
+        "monotonic_versions_under_hot_swap",
+    ],
 }
 
 
@@ -76,11 +81,22 @@ def check_file(path, problems):
     summary = SUMMARY_KEYS[bench]
     if not (is_num(doc.get(summary)) and doc.get(summary, 0) > 0):
         bad(f"'{summary}' must be a positive number")
-    identity = IDENTITY_KEYS[bench]
-    if not isinstance(doc.get(identity), bool):
-        bad(f"'{identity}' must be a boolean")
-    elif not doc[identity]:
-        bad(f"'{identity}' is false — determinism regression")
+    for identity in IDENTITY_KEYS[bench]:
+        if not isinstance(doc.get(identity), bool):
+            bad(f"'{identity}' must be a boolean")
+        elif not doc[identity]:
+            bad(f"'{identity}' is false — determinism regression")
+    if bench == "serve":
+        p50 = doc.get("p50_latency_s")
+        p99 = doc.get("p99_latency_s")
+        for name, val in (("p50_latency_s", p50), ("p99_latency_s", p99)):
+            if not (is_num(val) and val >= 0):
+                bad(f"'{name}' must be a non-negative number")
+        if is_num(p50) and is_num(p99) and p50 > p99:
+            bad("'p50_latency_s' exceeds 'p99_latency_s'")
+        shed = doc.get("shed_rate")
+        if not (is_num(shed) and 0.0 <= shed <= 1.0):
+            bad("'shed_rate' must be a number in [0, 1]")
 
 
 def main():
