@@ -12,6 +12,7 @@
 //!   serve     start the TCP prediction service
 //!   e2e       full end-to-end validation (same driver as examples/e2e_repro)
 //!   store     inspect/compact/clear a persistent profile store
+//!   dlq       list/retry/clear the store's dead-letter queue of failed reps
 //!   bench     store/executor/serving microbenchmarks -> BENCH_*.json
 
 use std::path::{Path, PathBuf};
@@ -27,11 +28,12 @@ use mrtuner::model::features::NUM_FEATURES;
 use mrtuner::model::ndpoly::NdPolyModel;
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig, RepOutcome};
+use mrtuner::profiler::dlq;
 use mrtuner::profiler::extended::{random_ext4, scales, Ext4Spec};
 use mrtuner::profiler::store::{encode_record, read_file_records};
 use mrtuner::profiler::{
-    paper_campaign, CampaignExecutor, Dataset, ExperimentSpec, ProfileStore,
-    StoreKey,
+    cluster_fingerprint, ext4_rep_jobs, paper_campaign, CampaignExecutor,
+    Dataset, ExperimentSpec, ProfileStore, RepJob, StoreKey,
 };
 use mrtuner::report::{e2e, experiments, figure, table};
 use mrtuner::util::benchkit::{bench, BenchStats};
@@ -102,6 +104,9 @@ fn executor_from(args: &Args) -> Result<CampaignExecutor, String> {
     // storeless run must not be blocked by a malformed machine-wide
     // MRTUNER_STORE_MAX_MB that could never affect it.
     let cap = store_cap_from(args);
+    // Cooperative drain only makes sense against a shared on-disk store:
+    // the per-setting leases live inside its directory.
+    let cooperative = args.switch("cooperative");
     match store_path_from(args) {
         Some(p) => {
             let store = ProfileStore::open_capped(Path::new(&p), cap?)?;
@@ -110,8 +115,13 @@ fn executor_from(args: &Args) -> Result<CampaignExecutor, String> {
                 p,
                 store.len()
             );
-            Ok(exec.with_store(store))
+            Ok(exec.with_store(store).with_cooperative(cooperative))
         }
+        None if cooperative => Err(
+            "--cooperative requires a persistent store (--store PATH or \
+             MRTUNER_STORE)"
+                .into(),
+        ),
         None => Ok(exec),
     }
 }
@@ -143,6 +153,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "e2e" => cmd_e2e(&args),
         "store" => cmd_store(&args),
+        "dlq" => cmd_dlq(&args),
         "bench" => cmd_bench(&args),
         "help" | "--help" => {
             print_help();
@@ -162,7 +173,7 @@ fn print_help() {
          (reproduction of Rizvandi et al., 2012)\n\n\
          USAGE: mrtuner <SUBCOMMAND> [--flags]\n\n\
          SUBCOMMANDS\n\
-           profile  --app A [--seed N] [--out FILE] [--jobs N]\n\
+           profile  --app A [--seed N] [--out FILE] [--jobs N] [--resume]\n\
            fit      --data FILE [--out FILE]             fit model from dataset\n\
            predict  --model FILE --mappers M --reducers R\n\
            run-job  --app A --mappers M --reducers R [--seed N]\n\
@@ -170,7 +181,7 @@ fn print_help() {
            fig4     --app A [--step N] [--reps N] [--csv FILE] [--jobs N]\n\
            table1   [--seed N] [--jobs N]                mean/variance of errors\n\
            ext4     --app A [--train N] [--test N] [--reps N] [--seed N]\n\
-                    [--csv FILE] [--jobs N]              4-parameter sweep:\n\
+                    [--csv FILE] [--jobs N] [--resume]   4-parameter sweep:\n\
                     T and CPU-seconds vs (M, R, input GB, block MB)\n\
            serve    [--addr HOST:PORT] [--seed N] [--jobs N]\n\
                     [--retrain-every SECS] [--serve-workers N]\n\
@@ -183,6 +194,10 @@ fn print_help() {
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
            store    <stats|compact|clear> --store PATH [--store-max-mb N]\n\
                     persistent profile store maintenance\n\
+           dlq      <list|retry|clear> --store PATH     dead-letter queue:\n\
+                    reps that kept failing are quarantined there instead\n\
+                    of aborting a campaign; retry re-runs them through the\n\
+                    executor (recovered reps land in the store)\n\
            bench    <store|campaign|serve> [--records N] [--reps N]\n\
                     [--jobs N] [--requests N] [--clients N] [--window W]\n\
                     [--out FILE]  store/executor/serving microbenchmarks;\n\
@@ -197,6 +212,12 @@ fn print_help() {
          disables both for one invocation.  --store-max-mb N (or\n\
          MRTUNER_STORE_MAX_MB=N) caps the compacted store size: coldest\n\
          records are evicted first, paper-plane reps are never evicted.\n\n\
+         The store journal doubles as a campaign checkpoint: an\n\
+         interrupted (even SIGKILLed) store-backed campaign re-run with\n\
+         the same flags re-simulates only what is missing.  --resume\n\
+         (profile | ext4) additionally reports the done/missing diff\n\
+         before dispatch.  --cooperative lets N processes pointed at one\n\
+         store split a campaign via per-setting leases.\n\n\
          APPS: wordcount | exim | grep"
     );
 }
@@ -209,10 +230,18 @@ fn cmd_profile(args: &Args) -> Result<(), String> {
     let app = parse_app(args)?;
     let seed = args.u64_or("seed", 42)?;
     let out = args.str_or("out", &format!("{}_train.json", app.name()));
+    let resume = args.switch("resume");
     let executor = executor_from(args)?;
     args.reject_unknown()?;
     let cluster = Cluster::paper_cluster();
     let (train, _) = paper_campaign(app, seed);
+    if resume {
+        // The store journal *is* the checkpoint: report how much of this
+        // campaign is already on disk, then dispatch only the remainder
+        // (the executor skips completed reps on its own).
+        let status = executor.campaign_resume_status(&cluster, &train)?;
+        eprintln!("resume: {status}");
+    }
     eprintln!(
         "profiling {} settings x {} reps for {} ({} workers) ...",
         train.specs.len(),
@@ -437,6 +466,7 @@ fn cmd_ext4(args: &Args) -> Result<(), String> {
     let test_n = args.u64_or("test", 25)? as usize;
     let reps = args.u64_or("reps", 5)? as u32;
     let csv_out = args.str_opt("csv");
+    let resume = args.switch("resume");
     let executor = executor_from(args)?;
     args.reject_unknown()?;
     if train_n == 0 || test_n == 0 || reps == 0 {
@@ -449,6 +479,18 @@ fn cmd_ext4(args: &Args) -> Result<(), String> {
     let mut rng = Rng::new(seed ^ 0xE474_5377_3E50_5EED);
     let train_specs = random_ext4(app, train_n, &mut rng);
     let test_specs = random_ext4(app, test_n, &mut rng);
+    if resume {
+        // Diff the whole invocation's work list (both sessions) against
+        // the store, then dispatch only the remainder.
+        let mut jobs = ext4_rep_jobs(&train_specs, reps, seed);
+        jobs.extend(ext4_rep_jobs(
+            &test_specs,
+            reps,
+            seed.wrapping_add(0x7E57),
+        ));
+        let status = executor.resume_status(&cluster, &jobs)?;
+        eprintln!("resume: {status}");
+    }
     eprintln!(
         "ext4 profiling {} train + {} test settings x {} reps for {} ({} workers) ...",
         train_specs.len(),
@@ -605,6 +647,114 @@ fn cmd_store(args: &Args) -> Result<(), String> {
         other => {
             Err(format!("unknown store action '{other}' (stats | compact | clear)"))
         }
+    }
+}
+
+fn cmd_dlq(args: &Args) -> Result<(), String> {
+    let action = args
+        .positional(0)
+        .ok_or("usage: mrtuner dlq <list|retry|clear> --store PATH")?;
+    let path = args
+        .str_opt("store")
+        .or_else(env_store_path)
+        .ok_or("--store PATH (or MRTUNER_STORE) required")?;
+    let dir = dlq::dlq_dir(Path::new(&path));
+    match action.as_str() {
+        "list" => {
+            args.reject_unknown()?;
+            let records = dlq::load(&dir)?;
+            for r in &records {
+                println!(
+                    "  {} M={} R={} input={}GB block={}MB rep={} seed={} \
+                     attempts={} error={:?}",
+                    r.key.app.name(),
+                    r.key.num_mappers,
+                    r.key.num_reducers,
+                    r.key.input_gb(),
+                    r.key.block_mb,
+                    r.key.rep,
+                    r.key.base_seed,
+                    r.attempts,
+                    r.error,
+                );
+            }
+            println!(
+                "dlq {}: {} quarantined rep(s)",
+                dir.display(),
+                records.len()
+            );
+            Ok(())
+        }
+        "retry" => {
+            // Reuses the profiling executor, so a recovered rep lands in
+            // the store exactly as if the original campaign had run it —
+            // and a rep that *keeps* failing re-quarantines itself.
+            let executor = executor_from(args)?;
+            args.reject_unknown()?;
+            if !executor.stats().store_attached {
+                // Without the store, recovered reps would evaporate and
+                // taken records could not re-quarantine: refuse up front.
+                return Err("dlq retry requires the store (drop --no-store)".into());
+            }
+            let cluster = Cluster::paper_cluster();
+            let fp = cluster_fingerprint(&cluster);
+            let records = dlq::take(&dir)?;
+            if records.is_empty() {
+                println!("dlq {}: empty, nothing to retry", dir.display());
+                return Ok(());
+            }
+            // Records keyed under a different cluster fingerprint cannot
+            // be re-simulated here: park them again untouched.
+            let (ours, foreign): (Vec<_>, Vec<_>) =
+                records.into_iter().partition(|r| r.key.cluster == fp);
+            if !foreign.is_empty() {
+                dlq::append(&dir, &foreign)?;
+                eprintln!(
+                    "dlq: {} record(s) keyed under a different cluster \
+                     fingerprint; left quarantined",
+                    foreign.len()
+                );
+            }
+            // A StoreKey carries every simulation coordinate, so any
+            // quarantined rep rebuilds as an extended work item (on the
+            // paper plane that *is* the 2-parameter rep, bit for bit).
+            let jobs: Vec<RepJob> = ours
+                .iter()
+                .map(|r| {
+                    RepJob::ext4(
+                        Ext4Spec {
+                            app: r.key.app,
+                            num_mappers: r.key.num_mappers,
+                            num_reducers: r.key.num_reducers,
+                            input_gb: r.key.input_gb(),
+                            block_mb: r.key.block_mb,
+                        },
+                        r.key.rep,
+                        r.key.base_seed,
+                    )
+                })
+                .collect();
+            let outcomes = executor.run_outcomes(&cluster, &jobs);
+            executor.flush_store()?;
+            let recovered =
+                outcomes.iter().filter(|o| o.time_s.is_finite()).count();
+            report_executor(&executor);
+            println!(
+                "dlq {}: retried {} rep(s): {recovered} recovered, {} \
+                 re-quarantined",
+                dir.display(),
+                jobs.len(),
+                jobs.len() - recovered
+            );
+            Ok(())
+        }
+        "clear" => {
+            args.reject_unknown()?;
+            let removed = dlq::clear(&dir)?;
+            println!("dlq {}: dropped {removed} record(s)", dir.display());
+            Ok(())
+        }
+        other => Err(format!("unknown dlq action '{other}' (list | retry | clear)")),
     }
 }
 
@@ -1122,6 +1272,28 @@ fn bench_campaign(args: &Args) -> Result<(), String> {
         x.mean_time_s.to_bits() == y.mean_time_s.to_bits()
             && x.mean_cpu_s.to_bits() == y.mean_cpu_s.to_bits()
     });
+    // Checkpoint/resume contract: after a store-backed cold run, a fresh
+    // executor on the same store must re-simulate *nothing* and still
+    // reproduce the cold output bit for bit — what `--resume` relies on.
+    let resume_dir = std::env::temp_dir()
+        .join(format!("mrtuner_bench_resume_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&resume_dir);
+    let cold = {
+        let exec = CampaignExecutor::new(jobs)
+            .with_store(ProfileStore::open(&resume_dir)?);
+        exec.run_ext4_specs(&cluster, &specs, reps, 7)
+    };
+    let resume_zero_resim = {
+        let exec = CampaignExecutor::new(jobs)
+            .with_store(ProfileStore::open(&resume_dir)?);
+        let warm = exec.run_ext4_specs(&cluster, &specs, reps, 7);
+        exec.stats().simulated == 0
+            && cold.iter().zip(&warm).all(|(x, y)| {
+                x.mean_time_s.to_bits() == y.mean_time_s.to_bits()
+                    && x.mean_cpu_s.to_bits() == y.mean_cpu_s.to_bits()
+            })
+    };
+    let _ = std::fs::remove_dir_all(&resume_dir);
     let speedup = serial.mean_s / stolen.mean_s;
     let doc = Json::obj(vec![
         ("bench", Json::Str("campaign".into())),
@@ -1137,9 +1309,13 @@ fn bench_campaign(args: &Args) -> Result<(), String> {
         ),
         ("parallel_speedup", Json::Num(speedup)),
         ("bit_identical_serial_parallel", Json::Bool(bit_identical)),
+        ("resume_zero_resim", Json::Bool(resume_zero_resim)),
     ]);
     std::fs::write(&out, format!("{doc}\n")).map_err(|e| e.to_string())?;
-    println!("parallel speedup: {speedup:.2}x; bit-identical: {bit_identical}");
+    println!(
+        "parallel speedup: {speedup:.2}x; bit-identical: {bit_identical}; \
+         resume zero-resim: {resume_zero_resim}"
+    );
     println!("wrote {out}");
     Ok(())
 }

@@ -1,0 +1,293 @@
+//! Deterministic fault injection for the profiling pipeline.
+//!
+//! The `MRTUNER_FAIL_SPEC` environment variable poisons specific
+//! repetitions inside [`super::run_job_in`] *without touching the
+//! simulator's logic*, so every retry / quarantine / resume path in the
+//! executor and its test harness is exercised bit-deterministically:
+//!
+//! ```text
+//! MRTUNER_FAIL_SPEC="app=grep,m=16,r=4,rep=2,mode=panic"
+//! MRTUNER_FAIL_SPEC="app=wordcount,mode=slow=150;app=grep,rep=0,mode=panic"
+//! ```
+//!
+//! A spec is a comma-separated list of `key=value` matchers plus one
+//! `mode`; several specs are separated by `;`.  Every matcher given must
+//! hold for the spec to fire:
+//!
+//! * `app=NAME` — application name (`wordcount` / `exim` / `grep`);
+//! * `m=N` / `r=N` — the job's `num_mappers` / `num_reducers`;
+//! * `rep=N` — the repetition index.  The rep is executor-side context
+//!   (the simulator never sees it), so the executor publishes it via
+//!   [`rep_scope`]; a `rep=` matcher can only fire under such a scope.
+//! * `mode=panic` — the rep panics (drives the executor's
+//!   `catch_unwind` isolation, retry policy and dead-letter queue);
+//! * `mode=slow` / `mode=slow=MS` — the rep sleeps `MS` wall-clock
+//!   milliseconds (default 100) *before* simulating.  Simulation output
+//!   is unchanged — this stretches real time so crash tests can SIGKILL
+//!   a campaign mid-run deterministically.
+//!
+//! The variable is read once per process and cached; a malformed spec is
+//! reported to stderr and ignored (the hook must never take down a
+//! production run on a typo — the tests that rely on injection assert
+//! its observable effects and fail loudly if the spec did not parse).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// What a matching spec does to the repetition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailMode {
+    /// Panic inside the simulator call (isolated by the executor).
+    Panic,
+    /// Sleep this many wall-clock milliseconds, then simulate normally.
+    Slow(u64),
+}
+
+/// One parsed `MRTUNER_FAIL_SPEC` entry: the matchers plus the mode.
+/// Absent matchers match everything.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FailSpec {
+    /// Application name to match (`None` matches any app).
+    pub app: Option<String>,
+    /// `num_mappers` to match.
+    pub mappers: Option<u32>,
+    /// `num_reducers` to match.
+    pub reducers: Option<u32>,
+    /// Repetition index to match (requires an executor [`rep_scope`]).
+    pub rep: Option<u32>,
+    /// What to do when every matcher holds.
+    pub mode: FailMode,
+}
+
+impl FailSpec {
+    /// Whether this spec fires for a job of `(app, mappers, reducers)`
+    /// under repetition scope `rep` (`None` when the caller is not a
+    /// rep-aware driver — a `rep=` matcher then never fires).
+    pub fn matches(
+        &self,
+        app: &str,
+        mappers: u32,
+        reducers: u32,
+        rep: Option<u32>,
+    ) -> bool {
+        self.app.as_deref().is_none_or(|a| a == app)
+            && self.mappers.is_none_or(|m| m == mappers)
+            && self.reducers.is_none_or(|r| r == reducers)
+            && self.rep.is_none_or(|want| rep == Some(want))
+    }
+}
+
+/// Default sleep for `mode=slow` without an explicit duration.
+const DEFAULT_SLOW_MS: u64 = 100;
+
+/// Parse one or more `;`-separated fail specs.  Empty input is an empty
+/// list; a spec without a `mode` (or with an unknown key) is an error.
+pub fn parse_fail_specs(s: &str) -> Result<Vec<FailSpec>, String> {
+    let mut out = Vec::new();
+    for part in s.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let mut spec = FailSpec {
+            app: None,
+            mappers: None,
+            reducers: None,
+            rep: None,
+            mode: FailMode::Panic,
+        };
+        let mut mode_seen = false;
+        for field in part.split(',') {
+            let field = field.trim();
+            let (k, v) = field
+                .split_once('=')
+                .ok_or_else(|| format!("fail spec: '{field}' is not key=value"))?;
+            let int = |v: &str| -> Result<u32, String> {
+                v.parse().map_err(|_| format!("fail spec: {k}: bad integer '{v}'"))
+            };
+            match k {
+                "app" => spec.app = Some(v.to_string()),
+                "m" => spec.mappers = Some(int(v)?),
+                "r" => spec.reducers = Some(int(v)?),
+                "rep" => spec.rep = Some(int(v)?),
+                "mode" => {
+                    mode_seen = true;
+                    spec.mode = match v.split_once('=') {
+                        None if v == "panic" => FailMode::Panic,
+                        None if v == "slow" => FailMode::Slow(DEFAULT_SLOW_MS),
+                        Some(("slow", ms)) => FailMode::Slow(
+                            ms.parse().map_err(|_| {
+                                format!("fail spec: mode=slow: bad ms '{ms}'")
+                            })?,
+                        ),
+                        _ => {
+                            return Err(format!(
+                                "fail spec: unknown mode '{v}' (panic | slow[=MS])"
+                            ))
+                        }
+                    };
+                }
+                other => {
+                    return Err(format!(
+                        "fail spec: unknown key '{other}' (app | m | r | rep | mode)"
+                    ))
+                }
+            }
+        }
+        if !mode_seen {
+            return Err(format!("fail spec '{part}': missing mode=panic|slow"));
+        }
+        out.push(spec);
+    }
+    Ok(out)
+}
+
+/// The process-wide injected specs: `MRTUNER_FAIL_SPEC`, parsed once.
+fn env_specs() -> &'static [FailSpec] {
+    static SPECS: OnceLock<Vec<FailSpec>> = OnceLock::new();
+    SPECS.get_or_init(|| match std::env::var("MRTUNER_FAIL_SPEC") {
+        Ok(s) => match parse_fail_specs(&s) {
+            Ok(specs) => specs,
+            Err(e) => {
+                eprintln!("warn: ignoring MRTUNER_FAIL_SPEC: {e}");
+                Vec::new()
+            }
+        },
+        Err(_) => Vec::new(),
+    })
+}
+
+thread_local! {
+    /// The repetition index the current thread is simulating, if a
+    /// rep-aware driver (the executor) published one.
+    static CURRENT_REP: Cell<Option<u32>> = const { Cell::new(None) };
+}
+
+/// RAII guard restoring the previous repetition scope on drop — drop
+/// runs during unwinding too, so a panicking (injected) rep never leaks
+/// its scope onto the worker thread's next job.
+pub struct RepScope {
+    prev: Option<u32>,
+}
+
+impl Drop for RepScope {
+    fn drop(&mut self) {
+        CURRENT_REP.with(|c| c.set(self.prev));
+    }
+}
+
+/// Publish the repetition index for fault matching on this thread until
+/// the returned guard drops.  Scopes nest; the innermost wins.
+pub fn rep_scope(rep: u32) -> RepScope {
+    let prev = CURRENT_REP.with(|c| c.replace(Some(rep)));
+    RepScope { prev }
+}
+
+/// The repetition index published on this thread, if any.
+pub fn current_rep() -> Option<u32> {
+    CURRENT_REP.with(|c| c.get())
+}
+
+/// The injection hook [`super::run_job_in`] calls once per simulation,
+/// after config validation and before any simulator state is built.  A
+/// no-op unless `MRTUNER_FAIL_SPEC` matches this `(app, M, R, rep)`.
+pub fn maybe_inject(app: &str, mappers: u32, reducers: u32) {
+    let specs = env_specs();
+    if specs.is_empty() {
+        return;
+    }
+    let rep = current_rep();
+    for spec in specs {
+        if spec.matches(app, mappers, reducers, rep) {
+            match spec.mode {
+                FailMode::Panic => panic!(
+                    "injected fault (MRTUNER_FAIL_SPEC): app={app} m={mappers} \
+                     r={reducers} rep={rep:?}"
+                ),
+                FailMode::Slow(ms) => {
+                    std::thread::sleep(std::time::Duration::from_millis(ms))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let specs =
+            parse_fail_specs("app=grep,m=16,r=4,rep=2,mode=panic").unwrap();
+        assert_eq!(specs.len(), 1);
+        let s = &specs[0];
+        assert_eq!(s.app.as_deref(), Some("grep"));
+        assert_eq!(s.mappers, Some(16));
+        assert_eq!(s.reducers, Some(4));
+        assert_eq!(s.rep, Some(2));
+        assert_eq!(s.mode, FailMode::Panic);
+    }
+
+    #[test]
+    fn parses_multiple_and_slow_modes() {
+        let specs = parse_fail_specs(
+            "app=wordcount,mode=slow; app=grep,rep=0,mode=slow=250",
+        )
+        .unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].mode, FailMode::Slow(DEFAULT_SLOW_MS));
+        assert_eq!(specs[1].mode, FailMode::Slow(250));
+        assert!(parse_fail_specs("").unwrap().is_empty());
+        assert!(parse_fail_specs(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        assert!(parse_fail_specs("app=grep").is_err(), "missing mode");
+        assert!(parse_fail_specs("mode=explode").is_err(), "unknown mode");
+        assert!(parse_fail_specs("mode=slow=abc").is_err(), "bad ms");
+        assert!(parse_fail_specs("banana=1,mode=panic").is_err(), "bad key");
+        assert!(parse_fail_specs("m=abc,mode=panic").is_err(), "bad int");
+        assert!(parse_fail_specs("apppanic").is_err(), "not key=value");
+    }
+
+    #[test]
+    fn matching_honors_every_field() {
+        let s = &parse_fail_specs("app=grep,m=16,rep=2,mode=panic").unwrap()[0];
+        assert!(s.matches("grep", 16, 4, Some(2)));
+        assert!(s.matches("grep", 16, 99, Some(2)), "unset r matches any");
+        assert!(!s.matches("wordcount", 16, 4, Some(2)), "wrong app");
+        assert!(!s.matches("grep", 17, 4, Some(2)), "wrong m");
+        assert!(!s.matches("grep", 16, 4, Some(3)), "wrong rep");
+        assert!(!s.matches("grep", 16, 4, None), "rep matcher needs a scope");
+        let any = &parse_fail_specs("mode=panic").unwrap()[0];
+        assert!(any.matches("exim", 1, 1, None), "empty matchers match all");
+    }
+
+    #[test]
+    fn rep_scope_nests_and_restores() {
+        assert_eq!(current_rep(), None);
+        {
+            let _a = rep_scope(1);
+            assert_eq!(current_rep(), Some(1));
+            {
+                let _b = rep_scope(7);
+                assert_eq!(current_rep(), Some(7));
+            }
+            assert_eq!(current_rep(), Some(1), "inner scope restored");
+        }
+        assert_eq!(current_rep(), None, "outer scope restored");
+    }
+
+    #[test]
+    fn rep_scope_survives_panic_unwind() {
+        let _outer = rep_scope(3);
+        let caught = std::panic::catch_unwind(|| {
+            let _inner = rep_scope(9);
+            panic!("boom");
+        });
+        assert!(caught.is_err());
+        assert_eq!(current_rep(), Some(3), "unwind restored the scope");
+    }
+}

@@ -13,6 +13,7 @@
 pub mod config;
 pub mod context;
 pub mod cost;
+pub mod fault;
 pub mod outcome;
 pub mod runner;
 pub mod split;

@@ -20,6 +20,7 @@ use crate::util::rng::Rng;
 
 use super::config::JobConfig;
 use super::context::{JobContext, JOB_SEED_SALT};
+use super::fault;
 use super::cost::{self, AppProfile, JOB_OVERHEAD_S};
 use super::outcome::{Counters, JobResult, TaskStat};
 use super::split::SplitPlan;
@@ -79,6 +80,10 @@ pub fn run_job_in(
         "JobContext shape {:?} does not match this (cluster, config)",
         ctx.shape()
     );
+    // Deterministic fault-injection hook (MRTUNER_FAIL_SPEC): may panic
+    // or sleep here, before any simulator state exists, so an injected
+    // failure never corrupts and never alters a simulation that runs.
+    fault::maybe_inject(&app.name, config.num_mappers, config.num_reducers);
     let rng = Rng::new(config.seed ^ JOB_SEED_SALT);
     // One event queue drives the whole job; its clock (`now()`) is the
     // simulation clock for both phases.

@@ -9,7 +9,7 @@ use crate::cluster::Cluster;
 use crate::util::rng::Rng;
 
 use super::dataset::Dataset;
-use super::executor::CampaignExecutor;
+use super::executor::{CampaignExecutor, RepJob};
 use super::experiment::{ExperimentResult, ExperimentSpec, REPS};
 
 /// Lower end of the parameter range studied by the paper.
@@ -48,6 +48,18 @@ impl Campaign {
         executor: &CampaignExecutor,
     ) -> (Vec<ExperimentResult>, Dataset) {
         executor.run_campaign(cluster, self)
+    }
+
+    /// Every repetition of this campaign as executor work items, in
+    /// dispatch order — the unit list `--resume` diffs against the
+    /// profile store (see `CampaignExecutor::resume_status`).
+    pub fn rep_jobs(&self) -> Vec<RepJob> {
+        self.specs
+            .iter()
+            .flat_map(|s| {
+                (0..self.reps).map(move |rep| RepJob::paper(*s, rep, self.base_seed))
+            })
+            .collect()
     }
 }
 

@@ -1,0 +1,570 @@
+//! Dead-letter queue for quarantined repetitions.
+//!
+//! When a rep panics past the executor's retry policy it must not abort
+//! the campaign — and it must not silently vanish either.  The executor
+//! quarantines it here: a versioned binary record carrying the full
+//! [`StoreKey`], the attempt count, and the (truncated) panic message,
+//! so `mrtuner dlq list|retry|clear` can inspect and drain the queue
+//! later.
+//!
+//! # On-disk layout
+//!
+//! The queue lives in a `dlq/` subdirectory of the profile store (the
+//! store's [`super::store::ProfileStore::refresh`] fingerprinting only
+//! matches store-named files in the top directory, so the queue never
+//! perturbs store change detection):
+//!
+//! ```text
+//! store/
+//!   dlq/
+//!     dlq-<pid>-<n>-<t>.bin   one append per quarantine event
+//! ```
+//!
+//! Each file is an 8-byte header (magic `MRDQ` + little-endian version)
+//! followed by length-prefixed records — the same framing discipline as
+//! the store's binary v3 codec, with the same tolerance rules on read: a
+//! garbled payload of plausible length is skipped record-by-record, a
+//! torn length prefix ends the file.  Every writer creates its **own**
+//! uniquely-named file (pid + nonce + nanos, exactly like store
+//! segments), so concurrent cooperative drainers never interleave
+//! writes and `append` needs no locking.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::apps::AppId;
+use crate::util::bytes::hex_u64;
+
+use super::store::StoreKey;
+
+/// Magic prefix of every DLQ file.
+const DLQ_MAGIC: [u8; 4] = *b"MRDQ";
+/// DLQ file header: magic + little-endian u32 format version.
+const DLQ_HEADER_LEN: usize = 8;
+/// DLQ record format version; bump when the record schema changes.
+pub const DLQ_FORMAT_VERSION: u32 = 1;
+/// Sanity bound on a record's length prefix; anything larger is framing
+/// corruption (a real record is well under 1 KiB).
+const MAX_DLQ_RECORD_LEN: usize = 2048;
+/// Panic messages are truncated to this many bytes on encode — the DLQ
+/// stores enough to diagnose, not arbitrary payloads.
+const MAX_ERROR_LEN: usize = 512;
+
+/// File-name uniqueness within one process (mirrors the store's segment
+/// counter).
+static DLQ_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+const DLQ_PREFIX: &str = "dlq-";
+const DLQ_SUFFIX: &str = ".bin";
+
+/// One quarantined repetition: its persistent identity, how many times
+/// the executor tried it, and the last failure message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DlqRecord {
+    /// Persistent identity of the failed rep (same key space as the
+    /// profile store, so a retried rep lands exactly where the campaign
+    /// expected it).
+    pub key: StoreKey,
+    /// Simulation attempts made before quarantining.
+    pub attempts: u32,
+    /// Last panic message, truncated to 512 bytes at encode time.
+    pub error: String,
+}
+
+/// The 8-byte header every DLQ file starts with.
+fn dlq_header() -> [u8; DLQ_HEADER_LEN] {
+    let mut h = [0u8; DLQ_HEADER_LEN];
+    h[..4].copy_from_slice(&DLQ_MAGIC);
+    h[4..].copy_from_slice(&DLQ_FORMAT_VERSION.to_le_bytes());
+    h
+}
+
+/// Exact encoded payload size of one record (no length prefix).
+fn payload_len(rec: &DlqRecord, err_len: usize) -> usize {
+    // 3 u64s + 5 u32s + app length byte + app name + error length (u16)
+    // + error bytes
+    3 * 8 + 5 * 4 + 1 + rec.key.app.name().len() + 2 + err_len
+}
+
+/// Serialize one record as a length-prefixed binary frame, the error
+/// message truncated to [`MAX_ERROR_LEN`] bytes (on a char boundary).
+pub fn encode_dlq_record(rec: &DlqRecord) -> Vec<u8> {
+    let mut err_len = rec.error.len().min(MAX_ERROR_LEN);
+    while !rec.error.is_char_boundary(err_len) {
+        err_len -= 1;
+    }
+    let len = payload_len(rec, err_len);
+    debug_assert!(len <= MAX_DLQ_RECORD_LEN);
+    let mut out = Vec::with_capacity(4 + len);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    let start = out.len();
+    out.extend_from_slice(&rec.key.cluster.to_le_bytes());
+    out.extend_from_slice(&rec.key.base_seed.to_le_bytes());
+    out.extend_from_slice(&rec.key.input_gb_bits.to_le_bytes());
+    out.extend_from_slice(&rec.key.num_mappers.to_le_bytes());
+    out.extend_from_slice(&rec.key.num_reducers.to_le_bytes());
+    out.extend_from_slice(&rec.key.block_mb.to_le_bytes());
+    out.extend_from_slice(&rec.key.rep.to_le_bytes());
+    out.extend_from_slice(&rec.attempts.to_le_bytes());
+    let name = rec.key.app.name().as_bytes();
+    out.push(name.len() as u8);
+    out.extend_from_slice(name);
+    out.extend_from_slice(&(err_len as u16).to_le_bytes());
+    out.extend_from_slice(&rec.error.as_bytes()[..err_len]);
+    debug_assert_eq!(out.len() - start, len);
+    out
+}
+
+/// Bounds-checked little-endian reader over one payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| "dlq record truncated".to_string())?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, String> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// Decode one payload (the bytes after a record's length prefix).
+fn decode_payload(b: &[u8]) -> Result<DlqRecord, String> {
+    let mut c = Cursor { b, i: 0 };
+    let cluster = c.u64()?;
+    let base_seed = c.u64()?;
+    let input_gb_bits = c.u64()?;
+    let num_mappers = c.u32()?;
+    let num_reducers = c.u32()?;
+    let block_mb = c.u32()?;
+    let rep = c.u32()?;
+    let attempts = c.u32()?;
+    let app_len = c.u8()? as usize;
+    let app_bytes = c.take(app_len)?;
+    let app = AppId::parse(
+        std::str::from_utf8(app_bytes)
+            .map_err(|_| "dlq record: app name not UTF-8".to_string())?,
+    )?;
+    let err_len = c.u16()? as usize;
+    let err_bytes = c.take(err_len)?;
+    let error = std::str::from_utf8(err_bytes)
+        .map_err(|_| "dlq record: error message not UTF-8".to_string())?
+        .to_string();
+    if c.i != b.len() {
+        return Err("dlq record: trailing payload bytes".into());
+    }
+    Ok(DlqRecord {
+        key: StoreKey {
+            cluster,
+            app,
+            num_mappers,
+            num_reducers,
+            input_gb_bits,
+            block_mb,
+            rep,
+            base_seed,
+        },
+        attempts,
+        error,
+    })
+}
+
+/// Decode one framed record from the front of `bytes`, returning the
+/// record and the total bytes consumed (prefix + payload) so callers can
+/// walk a concatenated record stream.
+pub fn decode_dlq_record(bytes: &[u8]) -> Result<(DlqRecord, usize), String> {
+    if bytes.len() < 4 {
+        return Err("dlq record truncated (length prefix)".into());
+    }
+    let len =
+        u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes")) as usize;
+    if len == 0 || len > MAX_DLQ_RECORD_LEN {
+        return Err(format!("dlq record: implausible length {len}"));
+    }
+    let end = 4 + len;
+    if bytes.len() < end {
+        return Err("dlq record truncated (payload)".into());
+    }
+    let rec = decode_payload(&bytes[4..end])?;
+    Ok((rec, end))
+}
+
+/// Whether `name` is a DLQ data file.
+fn is_dlq_file(name: &str) -> bool {
+    name.starts_with(DLQ_PREFIX) && name.ends_with(DLQ_SUFFIX)
+}
+
+/// Every DLQ file under `dir`, sorted by name (a missing directory is an
+/// empty queue, not an error).
+fn dlq_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) if !dir.exists() => return Ok(Vec::new()),
+        Err(e) => return Err(format!("dlq: read {}: {e}", dir.display())),
+    };
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("dlq: read dir entry: {e}"))?;
+        if is_dlq_file(&entry.file_name().to_string_lossy()) {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Append `records` to the queue at `dir` (created if needed) as one
+/// fresh uniquely-named file — concurrent quarantiners never share a
+/// file, so no locking is needed.  An empty batch writes nothing.
+pub fn append(dir: &Path, records: &[DlqRecord]) -> Result<(), String> {
+    if records.is_empty() {
+        return Ok(());
+    }
+    fs::create_dir_all(dir)
+        .map_err(|e| format!("dlq: create {}: {e}", dir.display()))?;
+    let nonce = DLQ_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let name = format!(
+        "{DLQ_PREFIX}{:08x}-{:04x}-{}{DLQ_SUFFIX}",
+        std::process::id(),
+        nonce,
+        hex_u64(nanos)
+    );
+    let path = dir.join(name);
+    let mut bytes = Vec::with_capacity(DLQ_HEADER_LEN + records.len() * 128);
+    bytes.extend_from_slice(&dlq_header());
+    for rec in records {
+        bytes.extend_from_slice(&encode_dlq_record(rec));
+    }
+    fs::write(&path, &bytes)
+        .map_err(|e| format!("dlq: write {}: {e}", path.display()))
+}
+
+/// Fold the framed records of one DLQ file (bytes already read) into
+/// `out`, tolerating corruption exactly like the store's load path: a
+/// bad header skips the file, a garbled payload of plausible length
+/// skips that record, a torn length prefix ends the file.
+fn load_bytes(path: &Path, bytes: &[u8], out: &mut Vec<DlqRecord>) {
+    if bytes.is_empty() {
+        return;
+    }
+    if bytes.len() < DLQ_HEADER_LEN || bytes[..4] != DLQ_MAGIC {
+        eprintln!("dlq: skipping non-DLQ file {}", path.display());
+        return;
+    }
+    let ver = u32::from_le_bytes(
+        bytes[4..DLQ_HEADER_LEN].try_into().expect("4 bytes"),
+    );
+    if !(1..=DLQ_FORMAT_VERSION).contains(&ver) {
+        // A whole file of a newer build: skip and preserve.
+        return;
+    }
+    let mut i = DLQ_HEADER_LEN;
+    let mut first_bad = true;
+    while i < bytes.len() {
+        match decode_dlq_record(&bytes[i..]) {
+            Ok((rec, consumed)) => {
+                out.push(rec);
+                i += consumed;
+            }
+            Err(e) => {
+                // Try to resync on the frame boundary; a torn or
+                // implausible prefix ends the file instead.
+                let Some(prefix) = bytes.get(i..i + 4) else {
+                    eprintln!(
+                        "dlq: truncated record tail in {}",
+                        path.display()
+                    );
+                    return;
+                };
+                let len = u32::from_le_bytes(
+                    prefix.try_into().expect("4 bytes"),
+                ) as usize;
+                if len == 0
+                    || len > MAX_DLQ_RECORD_LEN
+                    || i + 4 + len > bytes.len()
+                {
+                    eprintln!(
+                        "dlq: truncated/garbled record tail in {}",
+                        path.display()
+                    );
+                    return;
+                }
+                if first_bad {
+                    first_bad = false;
+                    eprintln!(
+                        "dlq: skipping corrupt record(s) in {}: {e}",
+                        path.display()
+                    );
+                }
+                i += 4 + len;
+            }
+        }
+    }
+}
+
+/// Read every record in the queue at `dir`, deduplicated by key (the
+/// occurrence with the most attempts wins; later files break ties) and
+/// sorted by key for deterministic listing.  A missing directory is an
+/// empty queue.
+pub fn load(dir: &Path) -> Result<Vec<DlqRecord>, String> {
+    let mut raw = Vec::new();
+    for path in dlq_files(dir)? {
+        let bytes = fs::read(&path)
+            .map_err(|e| format!("dlq: read {}: {e}", path.display()))?;
+        load_bytes(&path, &bytes, &mut raw);
+    }
+    let mut by_key: std::collections::HashMap<StoreKey, DlqRecord> =
+        std::collections::HashMap::new();
+    for rec in raw {
+        match by_key.entry(rec.key) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                if rec.attempts >= e.get().attempts {
+                    e.insert(rec);
+                }
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                e.insert(rec);
+            }
+        }
+    }
+    let mut out: Vec<DlqRecord> = by_key.into_values().collect();
+    out.sort_by_key(|r| r.key);
+    Ok(out)
+}
+
+/// Remove every DLQ file under `dir`, returning the number of distinct
+/// quarantined reps that were dropped.
+pub fn clear(dir: &Path) -> Result<usize, String> {
+    let records = load(dir)?;
+    for path in dlq_files(dir)? {
+        fs::remove_file(&path)
+            .map_err(|e| format!("dlq: remove {}: {e}", path.display()))?;
+    }
+    Ok(records.len())
+}
+
+/// Drain the queue: read every record, then remove the files backing
+/// them — the `dlq retry` primitive (retry failures are re-appended by
+/// the caller).
+pub fn take(dir: &Path) -> Result<Vec<DlqRecord>, String> {
+    let records = load(dir)?;
+    for path in dlq_files(dir)? {
+        fs::remove_file(&path)
+            .map_err(|e| format!("dlq: remove {}: {e}", path.display()))?;
+    }
+    Ok(records)
+}
+
+/// The queue directory for a profile store rooted at `store_dir`.
+pub fn dlq_dir(store_dir: &Path) -> PathBuf {
+    store_dir.join("dlq")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_dlq_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn random_record(rng: &mut Rng) -> DlqRecord {
+        let apps = AppId::all();
+        let err_len = rng.range_u64(0, 40) as usize;
+        let error: String = (0..err_len)
+            .map(|_| char::from(b'a' + (rng.range_u64(0, 26) as u8)))
+            .collect();
+        DlqRecord {
+            // Every numeric field gets arbitrary bits — input_gb_bits in
+            // particular sweeps NaN payloads, infinities, subnormals.
+            key: StoreKey {
+                cluster: rng.next_u64(),
+                app: apps[rng.range_u64(0, apps.len() as u64) as usize],
+                num_mappers: rng.next_u64() as u32,
+                num_reducers: rng.next_u64() as u32,
+                input_gb_bits: rng.next_u64(),
+                block_mb: rng.next_u64() as u32,
+                rep: rng.next_u64() as u32,
+                base_seed: rng.next_u64(),
+            },
+            attempts: rng.next_u64() as u32,
+            error,
+        }
+    }
+
+    #[test]
+    fn prop_record_round_trips_any_bits() {
+        forall("dlq round-trip", 200, |rng| {
+            let rec = random_record(rng);
+            let bytes = encode_dlq_record(&rec);
+            let (back, consumed) = decode_dlq_record(&bytes).unwrap();
+            assert_eq!(back, rec);
+            assert_eq!(consumed, bytes.len());
+        });
+    }
+
+    #[test]
+    fn nan_payload_bits_round_trip_exactly() {
+        let mut rec = DlqRecord {
+            key: StoreKey {
+                cluster: 1,
+                app: AppId::Grep,
+                num_mappers: 16,
+                num_reducers: 4,
+                input_gb_bits: f64::NAN.to_bits() | 0xDEAD,
+                block_mb: 64,
+                rep: 2,
+                base_seed: 42,
+            },
+            attempts: 3,
+            error: "injected fault".into(),
+        };
+        let (back, _) = decode_dlq_record(&encode_dlq_record(&rec)).unwrap();
+        assert_eq!(back.key.input_gb_bits, rec.key.input_gb_bits);
+        assert!(back.key.input_gb().is_nan());
+        rec.key.input_gb_bits = f64::NEG_INFINITY.to_bits();
+        let (back, _) = decode_dlq_record(&encode_dlq_record(&rec)).unwrap();
+        assert_eq!(back, rec);
+    }
+
+    #[test]
+    fn oversized_error_is_truncated_on_char_boundary() {
+        let rec = DlqRecord {
+            key: StoreKey {
+                cluster: 0,
+                app: AppId::WordCount,
+                num_mappers: 1,
+                num_reducers: 1,
+                input_gb_bits: 0,
+                block_mb: 64,
+                rep: 0,
+                base_seed: 0,
+            },
+            attempts: 1,
+            // 'é' is 2 bytes; 300 of them straddle the 512-byte cap on
+            // an odd boundary, so naive truncation would split a char.
+            error: "é".repeat(300),
+        };
+        let (back, _) = decode_dlq_record(&encode_dlq_record(&rec)).unwrap();
+        assert!(back.error.len() <= MAX_ERROR_LEN);
+        assert!(back.error.chars().all(|c| c == 'é'));
+    }
+
+    #[test]
+    fn prop_truncated_tail_recovers_complete_records() {
+        forall("dlq truncated tail", 60, |rng| {
+            let n = rng.range_u64(1, 5) as usize;
+            let recs: Vec<DlqRecord> =
+                (0..n).map(|_| random_record(rng)).collect();
+            let mut bytes = dlq_header().to_vec();
+            let mut boundaries = vec![bytes.len()];
+            for rec in &recs {
+                bytes.extend_from_slice(&encode_dlq_record(rec));
+                boundaries.push(bytes.len());
+            }
+            // Cut anywhere strictly inside the record stream: every
+            // record wholly before the cut must survive, nothing after.
+            let cut = rng.range_u64(
+                DLQ_HEADER_LEN as u64,
+                bytes.len() as u64,
+            ) as usize;
+            let complete =
+                boundaries.iter().filter(|&&b| b <= cut).count() - 1;
+            let mut out = Vec::new();
+            load_bytes(Path::new("test"), &bytes[..cut], &mut out);
+            assert_eq!(out, recs[..complete].to_vec());
+        });
+    }
+
+    #[test]
+    fn prop_garbled_payload_is_skipped_record_by_record() {
+        forall("dlq garbled record", 60, |rng| {
+            let good = [random_record(rng), random_record(rng)];
+            let mut bad = encode_dlq_record(&random_record(rng));
+            // Garble the payload (not the length prefix): flip the app
+            // name length byte region so decode fails but framing holds.
+            let idx = 4 + 3 * 8 + 5 * 4;
+            bad[idx] = 0xFF;
+            let mut bytes = dlq_header().to_vec();
+            bytes.extend_from_slice(&encode_dlq_record(&good[0]));
+            bytes.extend_from_slice(&bad);
+            bytes.extend_from_slice(&encode_dlq_record(&good[1]));
+            let mut out = Vec::new();
+            load_bytes(Path::new("test"), &bytes, &mut out);
+            assert_eq!(out, good.to_vec(), "both good records recovered");
+        });
+    }
+
+    #[test]
+    fn append_load_clear_lifecycle() {
+        let dir = tmp("lifecycle");
+        assert_eq!(load(&dir).unwrap(), Vec::new(), "missing dir is empty");
+        let mut rng = Rng::new(7);
+        let a = random_record(&mut rng);
+        let mut b = random_record(&mut rng);
+        append(&dir, &[a.clone()]).unwrap();
+        append(&dir, &[b.clone()]).unwrap();
+        // A re-quarantine of the same key with more attempts wins dedup.
+        let mut b2 = b.clone();
+        b2.attempts = b.attempts.wrapping_add(1);
+        b2.error = "second failure".into();
+        append(&dir, &[b2.clone()]).unwrap();
+        b = b2;
+        let mut want = vec![a.clone(), b.clone()];
+        want.sort_by_key(|r| r.key);
+        assert_eq!(load(&dir).unwrap(), want);
+        // take drains; clear on the now-empty queue removes nothing.
+        assert_eq!(take(&dir).unwrap(), want);
+        assert_eq!(load(&dir).unwrap(), Vec::new());
+        assert_eq!(clear(&dir).unwrap(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn newer_version_files_are_skipped_and_preserved() {
+        let dir = tmp("newver");
+        fs::create_dir_all(&dir).unwrap();
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&DLQ_MAGIC);
+        bytes.extend_from_slice(&(DLQ_FORMAT_VERSION + 1).to_le_bytes());
+        bytes.extend_from_slice(&[0xAB; 32]);
+        let path = dir.join("dlq-future.bin");
+        fs::write(&path, &bytes).unwrap();
+        assert_eq!(load(&dir).unwrap(), Vec::new());
+        assert!(path.exists(), "future file preserved for a newer build");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -29,28 +29,41 @@
 //!
 //! With a [`ProfileStore`] attached ([`CampaignExecutor::with_store`]),
 //! the miss path consults the on-disk store before simulating and writes
-//! fresh results back, so repeated CLI invocations warm-start from every
-//! prior session on the machine.  [`CampaignExecutor::stats`] reports the
-//! combined in-memory + on-disk picture.
+//! fresh results back — **incrementally**, one rep at a time with
+//! chunk-grain flushes, so the store journal doubles as a campaign
+//! checkpoint: a SIGKILL'd campaign re-run (`--resume`) re-simulates
+//! nothing that completed ([`CampaignExecutor::resume_status`] reports
+//! the diff).  Each rep runs under `catch_unwind` fault isolation with a
+//! bounded [`RetryPolicy`]; reps that keep failing are quarantined into
+//! the dead-letter queue ([`super::dlq`]) instead of aborting the run.
+//! With [`CampaignExecutor::with_cooperative`], N processes sharing one
+//! store split a campaign via per-setting lease files.
+//! [`CampaignExecutor::stats`] reports the combined in-memory + on-disk
+//! picture.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
 use std::fmt;
+use std::fs::{self, OpenOptions};
+use std::io::Write;
 use std::ops::Range;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Duration;
 
 use crate::apps::AppId;
 use crate::cluster::Cluster;
 use crate::mr::context::{ContextShape, JobContext};
 use crate::mr::cost::AppProfile;
-use crate::mr::{run_job_in, JobConfig, RepOutcome};
+use crate::mr::{fault, run_job_in, JobConfig, RepOutcome};
 use crate::util::stats;
 
 use super::campaign::Campaign;
 use super::dataset::Dataset;
+use super::dlq::{self, DlqRecord};
 use super::experiment::{mix, ExperimentResult, ExperimentSpec};
-use super::extended::{mix_ext4, Ext4Result, Ext4Spec};
-use super::store::{ProfileStore, StoreKey};
+use super::extended::{ext4_rep_jobs, mix_ext4, Ext4Result, Ext4Spec};
+use super::store::{pid_alive, ProfileStore, StoreKey};
 
 /// Order-sensitive digest of every simulation-relevant cluster field.
 ///
@@ -235,6 +248,110 @@ fn next_chunk(
     None
 }
 
+/// Bounded retry policy for a failing repetition: how many times the
+/// executor attempts a rep before quarantining it into the dead-letter
+/// queue, and how long it backs off between attempts.
+///
+/// The default — two attempts, 25 ms apart — retries once on the theory
+/// that a panic may be environmental (resource exhaustion in a worker)
+/// while a *deterministic* failure will fail identically and should
+/// reach the DLQ quickly rather than stall the campaign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per rep (clamped to at least 1).
+    pub max_attempts: u32,
+    /// Sleep between consecutive attempts of one rep.
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { max_attempts: 2, backoff: Duration::from_millis(25) }
+    }
+}
+
+/// Render a caught panic payload (the two shapes `panic!` produces).
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    match payload.downcast::<String>() {
+        Ok(s) => *s,
+        Err(p) => match p.downcast::<&'static str>() {
+            Ok(s) => (*s).to_string(),
+            Err(_) => "panic payload of unknown type".to_string(),
+        },
+    }
+}
+
+/// One rep that exhausted its retry budget (index into `todo`).
+struct Quarantine {
+    k: usize,
+    attempts: u32,
+    error: String,
+}
+
+/// Sentinel returned for a quarantined rep: NaN time and CPU.  Campaign
+/// means containing it go NaN — visibly poisoned, never silently wrong —
+/// while the campaign itself completes.  It is never cached or stored,
+/// so a later resume (or `dlq retry`) re-dispatches the rep.
+fn quarantined_outcome() -> RepOutcome {
+    RepOutcome::full(f64::NAN, f64::NAN)
+}
+
+// ------------------------------------------------ cooperative leases
+//
+// Cooperative drain lets N independent processes share one campaign by
+// claiming per-setting **lease files** under `<store>/leases/` — the
+// same create-new + pid-liveness protocol the store's segment locks
+// use.  The lease name hashes every key coordinate *except* the rep
+// index, so a setting's whole rep block moves as one claim and the
+// name is stable across processes whatever their private dispatch
+// order — which is what makes combined `simulated` counts cover the
+// grid exactly, with no double simulation in the fault-free case.
+
+/// Stable file name of the lease covering every rep of one setting
+/// (`key` with its rep component ignored).  Same mixing recipe as
+/// [`cluster_fingerprint`] — the name must agree across processes and
+/// toolchains, so std's unstable hasher is out.
+fn lease_name(key: &StoreKey) -> String {
+    fn mix(h: u64, v: u64) -> u64 {
+        let x = h ^ v.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        x.rotate_left(29).wrapping_mul(0x94D0_49BB_1331_11EB)
+    }
+    let mut h = 0x6c65_6173_6573_2121_u64; // "leases!!"
+    h = mix(h, key.cluster);
+    h = mix(h, key.app as u64);
+    h = mix(h, key.num_mappers as u64);
+    h = mix(h, key.num_reducers as u64);
+    h = mix(h, key.input_gb_bits);
+    h = mix(h, key.block_mb as u64);
+    h = mix(h, key.base_seed);
+    format!("lease-{h:016x}.lock")
+}
+
+/// Atomically claim a lease: create-new the file and write our pid.
+fn try_claim_lease(path: &Path) -> bool {
+    match OpenOptions::new().write(true).create_new(true).open(path) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{}", std::process::id());
+            true
+        }
+        Err(_) => false,
+    }
+}
+
+/// Whether a lease is held by a **live** process.  Mirrors the store's
+/// segment-lock semantics: a missing file is free, an unreadable or
+/// not-yet-written one is assumed live (it may be mid-creation), and a
+/// pid-bearing one is as alive as its pid.
+fn lease_is_live(path: &Path) -> bool {
+    match fs::read_to_string(path) {
+        Err(_) => path.exists(),
+        Ok(text) => match text.trim().parse::<u32>() {
+            Ok(pid) => pid_alive(pid),
+            Err(_) => true,
+        },
+    }
+}
+
 /// The campaign executor: a worker pool plus a rep-level result cache.
 ///
 /// One executor is meant to live for a whole analysis session (an `e2e`
@@ -266,6 +383,9 @@ pub struct CampaignExecutor {
     hits: AtomicU64,
     misses: AtomicU64,
     store_hits: AtomicU64,
+    quarantined: AtomicU64,
+    retry: RetryPolicy,
+    cooperative: bool,
     store: Option<ProfileStore>,
 }
 
@@ -278,6 +398,9 @@ impl CampaignExecutor {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             store_hits: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
+            retry: RetryPolicy::default(),
+            cooperative: false,
             store: None,
         }
     }
@@ -295,6 +418,35 @@ impl CampaignExecutor {
     /// The attached persistent store, if any.
     pub fn store(&self) -> Option<&ProfileStore> {
         self.store.as_ref()
+    }
+
+    /// Set the per-rep retry policy (see [`RetryPolicy`]).
+    pub fn with_retry_policy(mut self, retry: RetryPolicy) -> CampaignExecutor {
+        self.retry = RetryPolicy { max_attempts: retry.max_attempts.max(1), ..retry };
+        self
+    }
+
+    /// The per-rep retry policy in force.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    /// Enable **cooperative drain**: missing reps are claimed via
+    /// per-setting lease files in the attached store's directory, so N
+    /// independent processes pointed at one store split a campaign
+    /// between them — each setting is simulated by exactly one process
+    /// and everyone's output is bit-identical to a solo run.  Requires a
+    /// store ([`CampaignExecutor::with_store`]); without one the flag is
+    /// ignored.  Dispatch within the process is serial in this mode (the
+    /// fleet *is* the parallelism).
+    pub fn with_cooperative(mut self, on: bool) -> CampaignExecutor {
+        self.cooperative = on;
+        self
+    }
+
+    /// Whether cooperative drain is enabled.
+    pub fn cooperative(&self) -> bool {
+        self.cooperative
     }
 
     /// Single-worker executor — the serial reference behaviour.
@@ -319,7 +471,8 @@ impl CampaignExecutor {
         self.hits.load(Ordering::Relaxed)
     }
 
-    /// Reps actually simulated so far.
+    /// Reps dispatched to the simulator so far (quarantined reps count:
+    /// they were attempted, whatever the outcome).
     pub fn cache_misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }
@@ -327,6 +480,12 @@ impl CampaignExecutor {
     /// Reps answered from the persistent store (zero when none attached).
     pub fn store_hits(&self) -> u64 {
         self.store_hits.load(Ordering::Relaxed)
+    }
+
+    /// Reps that exhausted their retry budget and were quarantined into
+    /// the dead-letter queue instead of aborting the campaign.
+    pub fn quarantined(&self) -> u64 {
+        self.quarantined.load(Ordering::Relaxed)
     }
 
     /// Distinct reps currently in the in-memory cache.
@@ -344,6 +503,7 @@ impl CampaignExecutor {
             simulated: self.cache_misses(),
             mem_hits: self.cache_hits(),
             store_hits: self.store_hits(),
+            quarantined: self.quarantined(),
             mem_entries: self.cache_len(),
             store_entries: self.store.as_ref().map(|s| s.len()).unwrap_or(0),
             store_attached: self.store.is_some(),
@@ -439,7 +599,6 @@ impl CampaignExecutor {
             items.len() as u64 - todo.len() as u64 - store_hit_count,
             Ordering::Relaxed,
         );
-        self.misses.fetch_add(todo.len() as u64, Ordering::Relaxed);
         if todo.is_empty() {
             return out;
         }
@@ -474,62 +633,302 @@ impl CampaignExecutor {
             run_job_in(cluster, profile, &cfgs[k], ctx).rep_outcome()
         };
 
-        let workers = self.jobs.min(todo.len());
-        if workers <= 1 {
-            for k in 0..todo.len() {
-                out[todo[k]] = run_one(k);
-            }
-        } else {
-            // Work-stealing chunked dispatch.  Contiguous index chunks are
-            // dealt round-robin onto per-worker deques up front; a worker
-            // drains its own deque from the front and, when empty, steals
-            // from the back of a victim's.  Chunks amortize queue locking
-            // on dense grids; stealing keeps every worker busy on skewed
-            // ones (an ext4 sweep mixes 256-map settings with 4-map ones,
-            // so equal-share splits leave workers idle).  Output stays
-            // bit-identical to serial because results are written back by
-            // input index — scheduling order never touches the data.
-            let chunk = (todo.len() / (workers * CHUNKS_PER_WORKER))
-                .clamp(1, MAX_CHUNK);
-            let queues: Vec<Mutex<VecDeque<Range<usize>>>> =
-                (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-            {
-                let mut lo = 0;
-                let mut w = 0;
-                while lo < todo.len() {
-                    let hi = (lo + chunk).min(todo.len());
-                    queues[w % workers]
-                        .lock()
-                        .expect("chunk queue poisoned")
-                        .push_back(lo..hi);
-                    w += 1;
-                    lo = hi;
+        // Per-rep fault isolation: every attempt runs under the rep's
+        // fault scope (so `MRTUNER_FAIL_SPEC` can target `rep=N`) inside
+        // `catch_unwind`; each panic consumes one attempt of the retry
+        // budget.  An exhausted budget yields the last panic message —
+        // the caller quarantines the rep and the campaign never aborts.
+        let retry = self.retry;
+        let run_guarded = |k: usize| -> Result<RepOutcome, (u32, String)> {
+            let attempts = retry.max_attempts.max(1);
+            let mut last = String::new();
+            for attempt in 1..=attempts {
+                let _scope = fault::rep_scope(items[todo[k]].rep);
+                match std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| run_one(k)),
+                ) {
+                    Ok(o) => return Ok(o),
+                    Err(payload) => {
+                        last = panic_message(payload);
+                        if attempt < attempts && !retry.backoff.is_zero() {
+                            std::thread::sleep(retry.backoff);
+                        }
+                    }
                 }
             }
-            let computed: Vec<(usize, RepOutcome)> = std::thread::scope(|scope| {
-                let run_one = &run_one;
-                let todo = &todo;
-                let queues = &queues[..];
-                let handles: Vec<_> = (0..workers)
-                    .map(|wi| {
-                        scope.spawn(move || {
-                            let mut local = Vec::new();
-                            while let Some(range) = next_chunk(queues, wi) {
-                                for k in range {
-                                    local.push((todo[k], run_one(k)));
-                                }
-                            }
-                            local
-                        })
-                    })
-                    .collect();
-                handles
+            Err((attempts, last))
+        };
+
+        let mut ok = vec![true; todo.len()];
+        let mut failures: Vec<Quarantine> = Vec::new();
+
+        // Cooperative drain needs its lease directory; if that cannot be
+        // created, degrade to solo dispatch rather than fail the run.
+        let lease_dir = if self.cooperative {
+            self.store.as_ref().and_then(|s| {
+                let dir = s.dir().join("leases");
+                match fs::create_dir_all(&dir) {
+                    Ok(()) => Some(dir),
+                    Err(e) => {
+                        eprintln!(
+                            "warn: cooperative drain disabled: create {}: {e}",
+                            dir.display()
+                        );
+                        None
+                    }
+                }
+            })
+        } else {
+            None
+        };
+
+        if let Some(lease_dir) = lease_dir {
+            let store =
+                self.store.as_ref().expect("cooperative drain has a store");
+            let dlq_dir = dlq::dlq_dir(store.dir());
+
+            // Drain one *claimed* setting: refresh, resolve each rep
+            // from the store (a peer may have finished it since our
+            // classification), simulate the rest, write through, flush,
+            // and only then let the caller release the lease — a lease
+            // disappearing therefore implies its records are on disk,
+            // which is what keeps combined `simulated` counts across a
+            // fleet exactly equal to the grid.
+            let drain_claimed = |ks: &[usize],
+                                 out: &mut Vec<RepOutcome>,
+                                 ok: &mut Vec<bool>,
+                                 failures: &mut Vec<Quarantine>| {
+                if let Err(e) = store.refresh() {
+                    eprintln!("warn: store refresh failed: {e}");
+                }
+                for &k in ks {
+                    let key = items[todo[k]].key(cluster_fp);
+                    if let Some(o) = store.get(&key).filter(&usable) {
+                        out[todo[k]] = o;
+                        self.store_hits.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    match run_guarded(k) {
+                        Ok(o) => {
+                            out[todo[k]] = o;
+                            store.put(key, o);
+                        }
+                        Err((attempts, error)) => {
+                            out[todo[k]] = quarantined_outcome();
+                            ok[k] = false;
+                            failures.push(Quarantine { k, attempts, error });
+                        }
+                    }
+                }
+                if let Err(e) = store.flush() {
+                    eprintln!("warn: profile store flush failed: {e}");
+                }
+            };
+
+            // The lease unit is the *setting*: every rep of one (cluster,
+            // app, M, R, input, block, session) block moves as one claim.
+            let mut groups: BTreeMap<StoreKey, Vec<usize>> = BTreeMap::new();
+            for k in 0..todo.len() {
+                let mut setting = items[todo[k]].key(cluster_fp);
+                setting.rep = 0;
+                groups.entry(setting).or_default().push(k);
+            }
+
+            // Pass 1: claim whatever is free and drain it.
+            let mut waiting: Vec<(PathBuf, Vec<usize>)> = Vec::new();
+            for (setting, ks) in groups {
+                let lease = lease_dir.join(lease_name(&setting));
+                if try_claim_lease(&lease) {
+                    drain_claimed(&ks, &mut out, &mut ok, &mut failures);
+                    let _ = fs::remove_file(&lease);
+                } else {
+                    waiting.push((lease, ks));
+                }
+            }
+
+            // Pass 2: wait on peers, absorbing their results as they
+            // land (store records, or DLQ verdicts for reps a peer
+            // quarantined) and reclaiming leases whose holder died.
+            while !waiting.is_empty() {
+                if let Err(e) = store.refresh() {
+                    eprintln!("warn: store refresh failed: {e}");
+                }
+                let peer_dlq: HashSet<StoreKey> = dlq::load(&dlq_dir)
+                    .unwrap_or_default()
                     .into_iter()
-                    .flat_map(|h| h.join().expect("executor worker panicked"))
-                    .collect()
-            });
-            for (i, o) in computed {
-                out[i] = o;
+                    .map(|r| r.key)
+                    .collect();
+                let mut still: Vec<(PathBuf, Vec<usize>)> = Vec::new();
+                for (lease, mut ks) in waiting {
+                    ks.retain(|&k| {
+                        let key = items[todo[k]].key(cluster_fp);
+                        if let Some(o) = store.get(&key).filter(&usable) {
+                            out[todo[k]] = o;
+                            self.store_hits.fetch_add(1, Ordering::Relaxed);
+                            false
+                        } else if peer_dlq.contains(&key) {
+                            // Quarantined by a peer: inherit the verdict
+                            // (the peer already appended the DLQ record).
+                            out[todo[k]] = quarantined_outcome();
+                            ok[k] = false;
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                    if ks.is_empty() {
+                        continue;
+                    }
+                    if !lease_is_live(&lease) {
+                        // Holder gone: either it crashed, or it finished
+                        // and its records raced our refresh.  Reclaim —
+                        // drain_claimed re-refreshes before simulating,
+                        // so a finished peer costs zero re-simulation and
+                        // a crashed peer's unflushed reps are redone
+                        // bit-identically.
+                        let _ = fs::remove_file(&lease);
+                        if try_claim_lease(&lease) {
+                            drain_claimed(
+                                &ks,
+                                &mut out,
+                                &mut ok,
+                                &mut failures,
+                            );
+                            let _ = fs::remove_file(&lease);
+                            continue;
+                        }
+                    }
+                    still.push((lease, ks));
+                }
+                waiting = still;
+                if !waiting.is_empty() {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        } else {
+            self.misses.fetch_add(todo.len() as u64, Ordering::Relaxed);
+            // Each completed rep is written through to the store as it
+            // finishes and flushed at chunk grain: the store journal IS
+            // the campaign checkpoint, so a SIGKILL mid-campaign loses at
+            // most the in-flight chunk and `--resume` (or any re-run)
+            // skips everything already on disk.
+            let commit = |k: usize, o: RepOutcome| {
+                if let Some(store) = &self.store {
+                    store.put(items[todo[k]].key(cluster_fp), o);
+                }
+            };
+            let flush = || {
+                if let Some(store) = &self.store {
+                    if let Err(e) = store.flush() {
+                        eprintln!("warn: profile store flush failed: {e}");
+                    }
+                }
+            };
+            let workers = self.jobs.min(todo.len());
+            if workers <= 1 {
+                for k in 0..todo.len() {
+                    match run_guarded(k) {
+                        Ok(o) => {
+                            out[todo[k]] = o;
+                            commit(k, o);
+                            flush();
+                        }
+                        Err((attempts, error)) => {
+                            out[todo[k]] = quarantined_outcome();
+                            ok[k] = false;
+                            failures.push(Quarantine { k, attempts, error });
+                        }
+                    }
+                }
+            } else {
+                // Work-stealing chunked dispatch.  Contiguous index
+                // chunks are dealt round-robin onto per-worker deques up
+                // front; a worker drains its own deque from the front
+                // and, when empty, steals from the back of a victim's.
+                // Chunks amortize queue locking on dense grids; stealing
+                // keeps every worker busy on skewed ones (an ext4 sweep
+                // mixes 256-map settings with 4-map ones, so equal-share
+                // splits leave workers idle).  Output stays bit-identical
+                // to serial because results are written back by input
+                // index — scheduling order never touches the data.
+                let chunk = (todo.len() / (workers * CHUNKS_PER_WORKER))
+                    .clamp(1, MAX_CHUNK);
+                let queues: Vec<Mutex<VecDeque<Range<usize>>>> =
+                    (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+                {
+                    let mut lo = 0;
+                    let mut w = 0;
+                    while lo < todo.len() {
+                        let hi = (lo + chunk).min(todo.len());
+                        queues[w % workers]
+                            .lock()
+                            .expect("chunk queue poisoned")
+                            .push_back(lo..hi);
+                        w += 1;
+                        lo = hi;
+                    }
+                }
+                let failed: Mutex<Vec<Quarantine>> = Mutex::new(Vec::new());
+                let computed: Vec<(usize, RepOutcome, bool)> =
+                    std::thread::scope(|scope| {
+                        let run_guarded = &run_guarded;
+                        let commit = &commit;
+                        let flush = &flush;
+                        let queues = &queues[..];
+                        let failed = &failed;
+                        let handles: Vec<_> = (0..workers)
+                            .map(|wi| {
+                                scope.spawn(move || {
+                                    let mut local = Vec::new();
+                                    while let Some(range) =
+                                        next_chunk(queues, wi)
+                                    {
+                                        for k in range {
+                                            match run_guarded(k) {
+                                                Ok(o) => {
+                                                    commit(k, o);
+                                                    local.push((k, o, true));
+                                                }
+                                                Err((attempts, error)) => {
+                                                    failed
+                                                        .lock()
+                                                        .expect(
+                                                            "quarantine list \
+                                                             poisoned",
+                                                        )
+                                                        .push(Quarantine {
+                                                            k,
+                                                            attempts,
+                                                            error,
+                                                        });
+                                                    local.push((
+                                                        k,
+                                                        quarantined_outcome(),
+                                                        false,
+                                                    ));
+                                                }
+                                            }
+                                        }
+                                        flush();
+                                    }
+                                    local
+                                })
+                            })
+                            .collect();
+                        handles
+                            .into_iter()
+                            .flat_map(|h| {
+                                h.join().expect("executor worker panicked")
+                            })
+                            .collect()
+                    });
+                for (k, o, is_ok) in computed {
+                    out[todo[k]] = o;
+                    ok[k] = is_ok;
+                }
+                failures
+                    .extend(failed.into_inner().expect("quarantine list poisoned"));
             }
         }
 
@@ -539,22 +938,94 @@ impl CampaignExecutor {
 
         {
             let mut cache = self.cache.lock().expect("executor cache poisoned");
-            for &i in &todo {
-                cache.insert(items[i].key(cluster_fp), out[i]);
+            for (k, &i) in todo.iter().enumerate() {
+                if ok[k] {
+                    cache.insert(items[i].key(cluster_fp), out[i]);
+                }
             }
         }
-        // Write fresh results through to the persistent store and flush:
-        // every run_reps/run_outcomes call is a campaign boundary, and a
-        // flush here means a crash later never loses completed work.
-        if let Some(store) = &self.store {
-            for &i in &todo {
-                store.put(items[i].key(cluster_fp), out[i]);
+
+        // Quarantine whatever exhausted its retries: versioned DLQ
+        // records when a store is attached (surfaced by `mrtuner dlq
+        // list|retry|clear`), a non-fatal stderr summary either way.
+        // The campaign completes — a poisoned rep never aborts it.
+        if !failures.is_empty() {
+            self.quarantined
+                .fetch_add(failures.len() as u64, Ordering::Relaxed);
+            failures.sort_by_key(|f| f.k);
+            let records: Vec<DlqRecord> = failures
+                .iter()
+                .map(|f| DlqRecord {
+                    key: items[todo[f.k]].key(cluster_fp),
+                    attempts: f.attempts,
+                    error: f.error.clone(),
+                })
+                .collect();
+            if let Some(store) = &self.store {
+                let dir = dlq::dlq_dir(store.dir());
+                if let Err(e) = dlq::append(&dir, &records) {
+                    eprintln!("warn: dead-letter append failed: {e}");
+                }
             }
-            if let Err(e) = store.flush() {
-                eprintln!("warn: profile store flush failed: {e}");
+            eprintln!(
+                "warn: {} rep(s) quarantined; campaign continued (inspect \
+                 with `mrtuner dlq list`)",
+                records.len()
+            );
+            for r in &records {
+                eprintln!(
+                    "warn:   quarantined {} m={} r={} rep={} after {} \
+                     attempt(s): {}",
+                    r.key.app.name(),
+                    r.key.num_mappers,
+                    r.key.num_reducers,
+                    r.key.rep,
+                    r.attempts,
+                    r.error
+                );
             }
         }
         out
+    }
+
+    /// Diff a campaign's work list against the attached store and DLQ —
+    /// the `--resume` report.  `done` reps are already on disk and will
+    /// not be re-simulated; `quarantined` reps (a subset of `missing`)
+    /// are parked in the dead-letter queue from a previous run and will
+    /// be re-attempted by this dispatch.  Requires a store.
+    pub fn resume_status(
+        &self,
+        cluster: &Cluster,
+        items: &[RepJob],
+    ) -> Result<ResumeStatus, String> {
+        let store = self.store.as_ref().ok_or_else(|| {
+            "resume requires a persistent store (--store or MRTUNER_STORE)"
+                .to_string()
+        })?;
+        store.refresh()?;
+        let parked: HashSet<StoreKey> = dlq::load(&dlq::dlq_dir(store.dir()))?
+            .into_iter()
+            .map(|r| r.key)
+            .collect();
+        let cluster_fp = cluster_fingerprint(cluster);
+        let mut seen = HashSet::new();
+        let mut status = ResumeStatus::default();
+        for item in items {
+            let key = item.key(cluster_fp);
+            if !seen.insert(key) {
+                continue;
+            }
+            status.total += 1;
+            if store.get(&key).is_some() {
+                status.done += 1;
+            } else {
+                status.missing += 1;
+                if parked.contains(&key) {
+                    status.quarantined += 1;
+                }
+            }
+        }
+        Ok(status)
     }
 
     /// Run `reps` repetitions of every spec (one profiling session keyed
@@ -599,6 +1070,16 @@ impl CampaignExecutor {
         (results, ds)
     }
 
+    /// [`CampaignExecutor::resume_status`] for a whole paper campaign —
+    /// shorthand over [`Campaign::rep_jobs`].
+    pub fn campaign_resume_status(
+        &self,
+        cluster: &Cluster,
+        campaign: &Campaign,
+    ) -> Result<ResumeStatus, String> {
+        self.resume_status(cluster, &campaign.rep_jobs())
+    }
+
     /// Run `reps` repetitions of every extended 4-parameter setting (one
     /// profiling session keyed by `base_seed`), returning per-spec
     /// averaged results — both modeled outputs — in spec order.
@@ -613,10 +1094,7 @@ impl CampaignExecutor {
         reps: u32,
         base_seed: u64,
     ) -> Vec<Ext4Result> {
-        let items: Vec<RepJob> = specs
-            .iter()
-            .flat_map(|s| (0..reps).map(move |rep| RepJob::ext4(*s, rep, base_seed)))
-            .collect();
+        let items = ext4_rep_jobs(specs, reps, base_seed);
         let outcomes = self.run_outcomes(cluster, &items);
         specs
             .iter()
@@ -671,6 +1149,10 @@ pub struct ExecutorStats {
     pub mem_hits: u64,
     /// Reps answered by the persistent store.
     pub store_hits: u64,
+    /// Reps quarantined into the dead-letter queue by *this* executor
+    /// (peer-quarantined reps inherited during cooperative drain are
+    /// counted by the peer that parked them).
+    pub quarantined: u64,
     /// Distinct reps in the in-memory cache.
     pub mem_entries: usize,
     /// Distinct reps in the persistent store (0 when none attached).
@@ -683,15 +1165,45 @@ impl fmt::Display for ExecutorStats {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "jobs={} simulated={} mem_hits={} store_hits={} mem_entries={} \
-             store_entries={} store={}",
+            "jobs={} simulated={} mem_hits={} store_hits={} quarantined={} \
+             mem_entries={} store_entries={} store={}",
             self.jobs,
             self.simulated,
             self.mem_hits,
             self.store_hits,
+            self.quarantined,
             self.mem_entries,
             self.store_entries,
             if self.store_attached { "on" } else { "off" }
+        )
+    }
+}
+
+/// The `--resume` diff of a campaign's work list against the store and
+/// the dead-letter queue, over *distinct* rep keys.
+///
+/// `done + missing == total`; `quarantined` is the subset of `missing`
+/// parked in the DLQ by an earlier run (re-attempted on dispatch — use
+/// `mrtuner dlq retry` to drain them without re-running the campaign).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ResumeStatus {
+    /// Distinct reps the campaign needs.
+    pub total: usize,
+    /// Reps already completed on disk — never re-simulated.
+    pub done: usize,
+    /// Missing reps currently quarantined in the dead-letter queue.
+    pub quarantined: usize,
+    /// Reps not yet on disk — the remainder this run dispatches.
+    pub missing: usize,
+}
+
+impl fmt::Display for ResumeStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}/{} reps already complete on disk, {} quarantined; \
+             dispatching {}",
+            self.done, self.total, self.quarantined, self.missing
         )
     }
 }
@@ -1004,6 +1516,163 @@ mod tests {
         assert!(!st.store_attached);
         assert_eq!(st.store_entries, 0);
         assert!(st.to_string().contains("store=off"));
+        assert!(st.to_string().contains("quarantined=0"));
         assert!(exec.flush_store().is_ok(), "flush without store is a no-op");
+    }
+
+    #[test]
+    fn retry_policy_defaults_and_clamp() {
+        let p = RetryPolicy::default();
+        assert_eq!(p.max_attempts, 2);
+        assert!(!p.backoff.is_zero());
+        let exec = CampaignExecutor::serial().with_retry_policy(RetryPolicy {
+            max_attempts: 0,
+            backoff: Duration::ZERO,
+        });
+        assert_eq!(exec.retry_policy().max_attempts, 1, "clamped to >= 1");
+    }
+
+    #[test]
+    fn resume_status_diffs_grid_against_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_exec_resume_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cluster = Cluster::paper_cluster();
+        let specs = [spec(10, 10), spec(20, 5)];
+        let all: Vec<RepJob> = specs
+            .iter()
+            .flat_map(|s| (0..3).map(move |rep| RepJob::paper(*s, rep, 5)))
+            .collect();
+        {
+            // Complete only the first setting's reps.
+            let exec = CampaignExecutor::serial()
+                .with_store(ProfileStore::open(&dir).unwrap());
+            exec.run_reps(&cluster, &all[..3]);
+        }
+        let exec = CampaignExecutor::serial()
+            .with_store(ProfileStore::open(&dir).unwrap());
+        let st = exec.resume_status(&cluster, &all).unwrap();
+        assert_eq!(st.total, 6);
+        assert_eq!(st.done, 3);
+        assert_eq!(st.quarantined, 0);
+        assert_eq!(st.missing, 3);
+        assert!(st.to_string().contains("3/6"));
+        // Dispatching resumes exactly the remainder, bit-identically.
+        let warm = exec.run_reps(&cluster, &all);
+        assert_eq!(exec.cache_misses(), 3, "only the missing half simulated");
+        let fresh = CampaignExecutor::serial().run_reps(&cluster, &all);
+        assert_eq!(
+            warm.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+            fresh.iter().map(|t| t.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(
+            exec.resume_status(&cluster, &all).unwrap().missing == 0,
+            "everything on disk after the resumed run"
+        );
+        drop(exec);
+        let _ = std::fs::remove_dir_all(&dir);
+        // Without a store the diff is meaningless and must error.
+        assert!(CampaignExecutor::serial()
+            .resume_status(&cluster, &all)
+            .is_err());
+    }
+
+    #[test]
+    fn cooperative_drain_completes_solo_and_releases_leases() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_exec_coop_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cluster = Cluster::paper_cluster();
+        let specs = [spec(10, 10), spec(20, 5), spec(7, 31)];
+        let exec = CampaignExecutor::serial()
+            .with_store(ProfileStore::open(&dir).unwrap())
+            .with_cooperative(true);
+        assert!(exec.cooperative());
+        let solo = exec.run_specs(&cluster, &specs, 2, 21);
+        assert_eq!(exec.cache_misses(), 6, "cooperative solo simulates all");
+        assert_eq!(exec.quarantined(), 0);
+        // Every lease was released; results match plain serial bit-for-bit.
+        let leases: Vec<_> = std::fs::read_dir(dir.join("leases"))
+            .unwrap()
+            .collect();
+        assert!(leases.is_empty(), "leases released after drain");
+        let plain = CampaignExecutor::serial().run_specs(&cluster, &specs, 2, 21);
+        for (a, b) in solo.iter().zip(&plain) {
+            assert_eq!(a.rep_times_s, b.rep_times_s);
+        }
+        // A second cooperative process on the same store does zero work.
+        let exec2 = CampaignExecutor::serial()
+            .with_store(ProfileStore::open(&dir).unwrap())
+            .with_cooperative(true);
+        let again = exec2.run_specs(&cluster, &specs, 2, 21);
+        assert_eq!(exec2.cache_misses(), 0, "fleet peer warm-starts");
+        for (a, b) in again.iter().zip(&plain) {
+            assert_eq!(a.rep_times_s, b.rep_times_s);
+        }
+        drop(exec);
+        drop(exec2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lease_names_are_stable_and_rep_blind() {
+        let key = StoreKey {
+            cluster: 0xC0FFEE,
+            app: AppId::Grep,
+            num_mappers: 16,
+            num_reducers: 4,
+            input_gb_bits: 8.0f64.to_bits(),
+            block_mb: 64,
+            rep: 0,
+            base_seed: 42,
+        };
+        let name = lease_name(&key);
+        assert!(name.starts_with("lease-") && name.ends_with(".lock"));
+        assert_eq!(name, lease_name(&key), "deterministic");
+        // The rep index must not change the lease identity...
+        assert_eq!(name, lease_name(&StoreKey { rep: 3, ..key }));
+        // ...but every other coordinate must.
+        assert_ne!(name, lease_name(&StoreKey { num_mappers: 17, ..key }));
+        assert_ne!(name, lease_name(&StoreKey { base_seed: 43, ..key }));
+        assert_ne!(
+            name,
+            lease_name(&StoreKey { app: AppId::WordCount, ..key })
+        );
+    }
+
+    #[test]
+    fn lease_claim_is_exclusive_and_liveness_aware() {
+        let dir = std::env::temp_dir()
+            .join(format!("mrtuner_exec_lease_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let lease = dir.join("lease-test.lock");
+        assert!(!lease_is_live(&lease), "missing lease is free");
+        assert!(try_claim_lease(&lease));
+        assert!(!try_claim_lease(&lease), "second claim must fail");
+        assert!(lease_is_live(&lease), "our own pid is alive");
+        // A lease held by a dead pid is reclaimable (pid 0 never runs;
+        // /proc/0 does not exist).
+        std::fs::write(&lease, "0\n").unwrap();
+        #[cfg(target_os = "linux")]
+        assert!(!lease_is_live(&lease), "dead holder frees the lease");
+        // Garbage content is treated as live (mid-creation).
+        std::fs::write(&lease, "not-a-pid\n").unwrap();
+        assert!(lease_is_live(&lease));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn panic_message_extracts_both_payload_shapes() {
+        let s = std::panic::catch_unwind(|| panic!("plain literal"))
+            .err()
+            .map(panic_message)
+            .unwrap();
+        assert_eq!(s, "plain literal");
+        let s = std::panic::catch_unwind(|| panic!("formatted {}", 7))
+            .err()
+            .map(panic_message)
+            .unwrap();
+        assert_eq!(s, "formatted 7");
     }
 }

@@ -21,7 +21,7 @@ use crate::profiler::store::StoreKey;
 use crate::util::bytes::{GB, MB};
 use crate::util::rng::Rng;
 
-use super::executor::CampaignExecutor;
+use super::executor::{CampaignExecutor, RepJob};
 
 /// A four-parameter experiment setting.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -100,6 +100,20 @@ pub(crate) fn mix_ext4(base: u64, spec: &Ext4Spec, rep: u32) -> u64 {
         h = h.rotate_left(19).wrapping_mul(0x94D0_49BB_1331_11EB);
     }
     h
+}
+
+/// Every repetition of an extended sweep as executor work items, in
+/// dispatch order — the unit list `--resume` diffs against the profile
+/// store, and the list [`CampaignExecutor::run_ext4_specs`] dispatches.
+pub fn ext4_rep_jobs(
+    specs: &[Ext4Spec],
+    reps: u32,
+    base_seed: u64,
+) -> Vec<RepJob> {
+    specs
+        .iter()
+        .flat_map(|s| (0..reps).map(move |rep| RepJob::ext4(*s, rep, base_seed)))
+        .collect()
 }
 
 /// Sample `n` random settings over the 4-D range.

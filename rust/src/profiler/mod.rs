@@ -5,14 +5,17 @@
 //! total execution time of the experiment."
 //!
 //! [`campaign`] chooses the settings, [`executor`] runs them (parallel
-//! fan-out + rep-level cache over *any* spec shape, via [`RepSpec`]),
-//! [`store`] persists completed reps on disk so later processes
-//! warm-start, [`dataset`] shapes results for the regression, and
+//! fan-out + rep-level cache over *any* spec shape, via [`RepSpec`],
+//! with per-rep fault isolation and checkpoint/resume through the
+//! store), [`store`] persists completed reps on disk so later processes
+//! warm-start, [`dlq`] quarantines reps that keep failing so they never
+//! abort a campaign, [`dataset`] shapes results for the regression, and
 //! [`extended`] hosts the beyond-paper 4-parameter sweeps — which run
 //! through the same executor and store as the paper campaigns.
 
 pub mod campaign;
 pub mod dataset;
+pub mod dlq;
 pub mod executor;
 pub mod experiment;
 pub mod extended;
@@ -20,9 +23,13 @@ pub mod store;
 
 pub use campaign::{paper_campaign, Campaign};
 pub use dataset::Dataset;
+pub use dlq::DlqRecord;
 pub use executor::{
     cluster_fingerprint, CampaignExecutor, ExecutorStats, RepJob, RepSpec,
+    ResumeStatus, RetryPolicy,
 };
 pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
-pub use extended::{run_ext4, run_ext4_campaign, Ext4Result, Ext4Spec};
+pub use extended::{
+    ext4_rep_jobs, run_ext4, run_ext4_campaign, Ext4Result, Ext4Spec,
+};
 pub use store::{ProfileStore, StoreKey, StoreStats, STORE_FORMAT_VERSION};

@@ -1401,12 +1401,12 @@ fn segment_is_locked(segment: &Path) -> bool {
 /// namespace), so /proc is authoritative on Linux; elsewhere be
 /// conservative and treat every lock holder as alive.
 #[cfg(target_os = "linux")]
-fn pid_alive(pid: u32) -> bool {
+pub(crate) fn pid_alive(pid: u32) -> bool {
     Path::new(&format!("/proc/{pid}")).exists()
 }
 
 #[cfg(not(target_os = "linux"))]
-fn pid_alive(_pid: u32) -> bool {
+pub(crate) fn pid_alive(_pid: u32) -> bool {
     true
 }
 

@@ -1,0 +1,308 @@
+//! Crash/fault-injection harness for campaign checkpoint/resume.
+//!
+//! Drives the real `mrtuner` binary as child processes to pin down the
+//! executor's failure-domain contracts end to end:
+//!
+//! * a campaign SIGKILLed mid-run resumes with **zero re-simulation**
+//!   and a dataset bit-identical to an uninterrupted run (the store
+//!   journal is the checkpoint);
+//! * two `--cooperative` processes sharing one store split a campaign so
+//!   their `simulated` counts *exactly* cover the grid, with
+//!   bit-identical outputs;
+//! * a repetition poisoned via `MRTUNER_FAIL_SPEC` lands in the
+//!   dead-letter queue without aborting the campaign, is listed and
+//!   retried by `mrtuner dlq`, and the final `--resume` pass dispatches
+//!   nothing.
+
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+const BIN: &str = env!("CARGO_BIN_EXE_mrtuner");
+
+/// Unique per-test scratch directory (removed up front so reruns are
+/// deterministic even after a crashed run).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mrtuner_resume_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A `mrtuner` invocation hermetic to this test: machine-wide store and
+/// fault-injection variables never leak in.
+fn mrtuner(args: &[&str]) -> Command {
+    let mut cmd = Command::new(BIN);
+    cmd.args(args)
+        .env_remove("MRTUNER_STORE")
+        .env_remove("MRTUNER_STORE_MAX_MB")
+        .env_remove("MRTUNER_FAIL_SPEC");
+    cmd
+}
+
+/// Run to completion, asserting success; returns (stdout, stderr).
+fn run_ok(args: &[&str]) -> (Vec<u8>, String) {
+    let out = mrtuner(args).output().expect("spawn mrtuner");
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(
+        out.status.success(),
+        "mrtuner {args:?} failed:\n{stderr}\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    (out.stdout, stderr)
+}
+
+/// The first integer right after `key` in `text` (e.g. `simulated=`).
+fn stat(text: &str, key: &str) -> u64 {
+    let i = text
+        .find(key)
+        .unwrap_or_else(|| panic!("no '{key}' in:\n{text}"));
+    let digits: String = text[i + key.len()..]
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    digits.parse().unwrap_or_else(|_| panic!("no integer after '{key}'"))
+}
+
+/// Parse the `resume: D/T reps already complete on disk, Q quarantined;
+/// dispatching M` stderr line into (done, total, missing).
+fn resume_line(stderr: &str) -> (u64, u64, u64) {
+    let line = stderr
+        .lines()
+        .find(|l| l.starts_with("resume: "))
+        .unwrap_or_else(|| panic!("no resume line in:\n{stderr}"));
+    let done = stat(line, "resume: ");
+    let total = stat(line, &format!("resume: {done}/"));
+    let missing = stat(line, "dispatching ");
+    (done, total, missing)
+}
+
+/// Total bytes of append-only store segments in `dir` (0 when none
+/// exist).  A segment is created, 8-byte header included, on the first
+/// flush carrying records — so anything past the header is record data.
+fn segment_bytes(dir: &PathBuf) -> u64 {
+    let Ok(entries) = std::fs::read_dir(dir) else { return 0 };
+    entries
+        .flatten()
+        .filter(|e| {
+            let name = e.file_name().to_string_lossy().into_owned();
+            name.starts_with("seg-") && name.ends_with(".bin")
+        })
+        .filter_map(|e| e.metadata().ok())
+        .map(|m| m.len())
+        .sum()
+}
+
+/// SIGKILL a profiling campaign mid-run, re-run it with `--resume`, and
+/// require zero re-simulation plus a bit-identical dataset.
+#[test]
+fn sigkilled_campaign_resumes_with_zero_resimulation() {
+    let dir = scratch("kill");
+    let store = dir.join("store");
+    let ref_out = dir.join("ref.json");
+    let resumed_out = dir.join("resumed.json");
+
+    // Uninterrupted reference: same campaign, no store, no injection.
+    run_ok(&[
+        "profile", "--app", "wordcount", "--seed", "7", "--jobs", "1",
+        "--no-store", "--out", ref_out.to_str().unwrap(),
+    ]);
+    let reference = std::fs::read(&ref_out).unwrap();
+    assert!(!reference.is_empty());
+
+    // The doomed run: every rep stretched by 40 ms wall-clock (output
+    // unchanged), serial dispatch, store-backed.  100 reps ≈ 4 s — ample
+    // room to observe records hitting disk and kill mid-campaign.
+    let mut child = mrtuner(&[
+        "profile", "--app", "wordcount", "--seed", "7", "--jobs", "1",
+        "--store", store.to_str().unwrap(),
+        "--out", dir.join("doomed.json").to_str().unwrap(),
+    ])
+    .env("MRTUNER_FAIL_SPEC", "app=wordcount,mode=slow=40")
+    .stdout(Stdio::null())
+    .stderr(Stdio::null())
+    .spawn()
+    .expect("spawn doomed campaign");
+
+    // Wait for the first completed reps to reach disk, let a few more
+    // land, then SIGKILL — no drop/flush/lock-release code runs.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while segment_bytes(&store) <= 8 {
+        assert!(Instant::now() < deadline, "no store segment appeared");
+        assert!(
+            child.try_wait().expect("try_wait").is_none(),
+            "doomed campaign finished before it could be killed"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    child.kill().expect("SIGKILL");
+    let _ = child.wait();
+
+    // Resume: the same invocation (sans injection) against the same
+    // store must re-simulate exactly the missing remainder.
+    let (_, stderr) = run_ok(&[
+        "profile", "--app", "wordcount", "--seed", "7", "--jobs", "1",
+        "--store", store.to_str().unwrap(), "--resume",
+        "--out", resumed_out.to_str().unwrap(),
+    ]);
+    let (done, total, missing) = resume_line(&stderr);
+    assert_eq!(total, 100, "20 settings x 5 reps");
+    assert_eq!(done + missing, total);
+    assert!(done >= 1, "killed campaign checkpointed at least one rep");
+    let stats = stderr
+        .lines()
+        .find(|l| l.contains("executor stats:"))
+        .expect("stats line");
+    assert_eq!(
+        stat(stats, "simulated="),
+        missing,
+        "resume simulated exactly the missing reps: {stderr}"
+    );
+    assert_eq!(stat(stats, "quarantined="), 0);
+
+    // The checkpointed+resumed dataset is the uninterrupted one, bit for
+    // bit (mode=slow stretches wall time without touching outputs).
+    assert_eq!(
+        std::fs::read(&resumed_out).unwrap(),
+        reference,
+        "resumed dataset differs from uninterrupted reference"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two `--cooperative` processes on one store split the campaign: their
+/// `simulated` counts sum to exactly the grid, outputs bit-identical.
+#[test]
+fn cooperative_processes_split_campaign_exactly() {
+    let dir = scratch("coop");
+    let store = dir.join("store");
+    let ref_out = dir.join("ref.json");
+    run_ok(&[
+        "profile", "--app", "grep", "--seed", "11", "--jobs", "1",
+        "--no-store", "--out", ref_out.to_str().unwrap(),
+    ]);
+    let reference = std::fs::read(&ref_out).unwrap();
+
+    let out_a = dir.join("a.json");
+    let out_b = dir.join("b.json");
+    let spawn = |out: &PathBuf| {
+        mrtuner(&[
+            "profile", "--app", "grep", "--seed", "11", "--jobs", "1",
+            "--store", store.to_str().unwrap(), "--cooperative",
+            "--out", out.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn cooperative campaign")
+    };
+    let a = spawn(&out_a);
+    let b = spawn(&out_b);
+    let a = a.wait_with_output().unwrap();
+    let b = b.wait_with_output().unwrap();
+    let (err_a, err_b) = (
+        String::from_utf8_lossy(&a.stderr).into_owned(),
+        String::from_utf8_lossy(&b.stderr).into_owned(),
+    );
+    assert!(a.status.success(), "peer A failed:\n{err_a}");
+    assert!(b.status.success(), "peer B failed:\n{err_b}");
+
+    // Exact coverage: every rep simulated by exactly one peer.  Lease
+    // release happens only after the claiming peer flushed, and peers
+    // re-check the store before simulating, so the fault-free case has
+    // no double work.
+    let sim_a = stat(&err_a, "simulated=");
+    let sim_b = stat(&err_b, "simulated=");
+    assert_eq!(
+        sim_a + sim_b,
+        100,
+        "combined simulated counts must cover the grid exactly \
+         (A={sim_a}, B={sim_b})\nA:\n{err_a}\nB:\n{err_b}"
+    );
+    assert_eq!(stat(&err_a, "quarantined="), 0);
+    assert_eq!(stat(&err_b, "quarantined="), 0);
+
+    // Both peers assembled the full campaign, bit-identical to solo.
+    let bytes_a = std::fs::read(&out_a).unwrap();
+    assert_eq!(bytes_a, std::fs::read(&out_b).unwrap());
+    assert_eq!(bytes_a, reference, "cooperative output == solo output");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A poisoned rep is quarantined (not fatal), listed and retried via
+/// `mrtuner dlq`, after which `--resume` has nothing left to dispatch.
+#[test]
+fn poisoned_rep_round_trips_through_dlq() {
+    let dir = scratch("dlq");
+    let store = dir.join("store");
+    let store_s = store.to_str().unwrap();
+    let ref_out = dir.join("ref.json");
+    run_ok(&[
+        "profile", "--app", "wordcount", "--seed", "5", "--jobs", "1",
+        "--no-store", "--out", ref_out.to_str().unwrap(),
+    ]);
+    let reference = std::fs::read(&ref_out).unwrap();
+
+    // Poison repetition 2 of every setting: 20 reps panic through the
+    // retry budget and must quarantine without aborting the campaign.
+    let poisoned_out = dir.join("poisoned.json");
+    let out = mrtuner(&[
+        "profile", "--app", "wordcount", "--seed", "5", "--jobs", "2",
+        "--store", store_s, "--out", poisoned_out.to_str().unwrap(),
+    ])
+    .env("MRTUNER_FAIL_SPEC", "rep=2,mode=panic")
+    .env("RUST_BACKTRACE", "0")
+    .output()
+    .expect("spawn poisoned campaign");
+    let stderr = String::from_utf8_lossy(&out.stderr).into_owned();
+    assert!(
+        out.status.success(),
+        "a quarantined rep must never abort the campaign:\n{stderr}"
+    );
+    assert_eq!(stat(&stderr, "quarantined="), 20, "{stderr}");
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("wrote"),
+        "campaign still produced its dataset"
+    );
+
+    // The quarantined reps are visible in the dead-letter queue ...
+    let (stdout, _) = run_ok(&["dlq", "list", "--store", store_s]);
+    let listing = String::from_utf8_lossy(&stdout).into_owned();
+    assert!(listing.contains("20 quarantined rep(s)"), "{listing}");
+    assert!(listing.contains("rep=2"), "{listing}");
+    assert!(listing.contains("injected fault"), "{listing}");
+
+    // ... and retry (injection gone) recovers every one into the store.
+    let (stdout, _) =
+        run_ok(&["dlq", "retry", "--store", store_s, "--jobs", "1"]);
+    let retry = String::from_utf8_lossy(&stdout).into_owned();
+    assert!(retry.contains("20 recovered, 0 re-quarantined"), "{retry}");
+    let (stdout, _) = run_ok(&["dlq", "list", "--store", store_s]);
+    assert!(
+        String::from_utf8_lossy(&stdout).contains("0 quarantined rep(s)"),
+        "queue drained after retry"
+    );
+
+    // Nothing left to dispatch; the final dataset is the clean one.
+    let final_out = dir.join("final.json");
+    let (_, stderr) = run_ok(&[
+        "profile", "--app", "wordcount", "--seed", "5", "--jobs", "1",
+        "--store", store_s, "--resume",
+        "--out", final_out.to_str().unwrap(),
+    ]);
+    let (done, total, missing) = resume_line(&stderr);
+    assert_eq!((done, total, missing), (100, 100, 0), "{stderr}");
+    let stats = stderr
+        .lines()
+        .find(|l| l.contains("executor stats:"))
+        .expect("stats line");
+    assert_eq!(stat(stats, "simulated="), 0, "{stderr}");
+    assert_eq!(
+        std::fs::read(&final_out).unwrap(),
+        reference,
+        "recovered campaign == never-poisoned campaign, bit for bit"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -9,8 +9,12 @@ out only to `git show`.
 
 Rules, tuned for noisy shared CI runners:
 
-  * a missing baseline (file not at the ref, or case name not in the
-    baseline) is a PASS — new benches enter the trajectory silently;
+  * a missing baseline (file not at the ref, or a *current* case name
+    not in the baseline) is a PASS — new benches enter the trajectory
+    silently;
+  * a *baseline* case missing from the current file is a FAILURE — a
+    bench that silently stops being measured is indistinguishable from
+    a bench that regressed to zero;
   * a workload-size mismatch (`records` differs between current and
     baseline) skips the file — throughput at different scales is not
     comparable;
@@ -20,10 +24,13 @@ Rules, tuned for noisy shared CI runners:
 
 Usage:
     python3 tools/bench_trend.py [--ref REF] [--threshold T] [FILE...]
+    python3 tools/bench_trend.py --self-test
 
 With no FILEs, checks every BENCH_*.json in the repo root that exists
 both in the worktree and at REF.  Exits non-zero listing every
-regression found.
+regression found.  `--self-test` runs the comparison logic against
+synthetic documents (no git, no files) and is wired into CI so the
+gate itself stays gated.
 """
 
 import glob
@@ -72,16 +79,14 @@ def case_rates(doc):
     return rates
 
 
-def check_file(root, path, ref, threshold, problems):
-    try:
-        cur = load_current(path)
-    except Exception as e:  # noqa: BLE001 - report, don't crash
-        problems.append(f"{path}: unreadable current file ({e})")
-        return
-    base = load_baseline(root, path, ref)
-    if base is None:
-        print(f"{path}: no baseline at {ref}, pass")
-        return
+def compare_docs(path, cur, base, threshold, problems):
+    """Gate current doc `cur` against baseline doc `base`.
+
+    Appends one entry to `problems` per regression: a comparable case
+    below `threshold` x baseline, or a baseline case that vanished from
+    the current file.  Pure (no git, no filesystem) so --self-test can
+    drive it with synthetic documents.
+    """
     if cur.get("records") != base.get("records"):
         print(
             f"{path}: workload changed "
@@ -89,8 +94,15 @@ def check_file(root, path, ref, threshold, problems):
         )
         return
     base_rates = case_rates(base)
+    cur_rates = case_rates(cur)
+    for name in sorted(set(base_rates) - set(cur_rates)):
+        print(f"{path}: {name}: in baseline but not in current file LOST")
+        problems.append(
+            f"{path}: baseline case '{name}' missing from current file "
+            "(a bench that stops being measured is a regression)"
+        )
     checked = 0
-    for name, rate in sorted(case_rates(cur).items()):
+    for name, rate in sorted(cur_rates.items()):
         old = base_rates.get(name)
         if old is None:
             continue
@@ -106,8 +118,108 @@ def check_file(root, path, ref, threshold, problems):
                 f"{path}: '{name}' fell to {ratio:.2f}x of baseline "
                 f"(floor {threshold:.2f}x)"
             )
-    if checked == 0:
+    if checked == 0 and cur_rates.keys() >= base_rates.keys():
         print(f"{path}: no comparable cases, pass")
+
+
+def check_file(root, path, ref, threshold, problems):
+    try:
+        cur = load_current(path)
+    except Exception as e:  # noqa: BLE001 - report, don't crash
+        problems.append(f"{path}: unreadable current file ({e})")
+        return
+    base = load_baseline(root, path, ref)
+    if base is None:
+        print(f"{path}: no baseline at {ref}, pass")
+        return
+    compare_docs(path, cur, base, threshold, problems)
+
+
+def self_test():
+    """Exercise compare_docs against synthetic docs; no git required."""
+
+    def doc(records, **rates):
+        return {
+            "records": records,
+            "cases": [
+                {"name": n, "units_per_s": r} for n, r in rates.items()
+            ],
+        }
+
+    def run(cur, base, threshold=DEFAULT_THRESHOLD):
+        problems = []
+        compare_docs("<self-test>", cur, base, threshold, problems)
+        return problems
+
+    failures = []
+
+    def expect(label, problems, want_fragments):
+        got = len(problems)
+        if got != len(want_fragments):
+            failures.append(
+                f"{label}: expected {len(want_fragments)} problem(s), "
+                f"got {got}: {problems}"
+            )
+            return
+        for frag, p in zip(want_fragments, problems):
+            if frag not in p:
+                failures.append(f"{label}: {p!r} does not mention {frag!r}")
+
+    steady = doc(1000, open_cold=40.0, open_warm=400.0)
+    expect("identical docs pass", run(steady, steady), [])
+    expect(
+        "drop below floor fails",
+        run(doc(1000, open_cold=9.0, open_warm=400.0), steady),
+        ["'open_cold' fell to 0.23x"],
+    )
+    expect(
+        "drop above floor passes",
+        run(doc(1000, open_cold=11.0, open_warm=400.0), steady),
+        [],
+    )
+    expect(
+        "baseline case lost from current fails",
+        run(doc(1000, open_cold=40.0), steady),
+        ["baseline case 'open_warm' missing from current file"],
+    )
+    expect(
+        "new current case absent from baseline passes",
+        run(doc(1000, open_cold=40.0, open_warm=400.0, fresh=1.0), steady),
+        [],
+    )
+    expect(
+        "workload-size mismatch skips even lost cases",
+        run(doc(500, open_cold=1.0), steady),
+        [],
+    )
+    expect(
+        "unrateable baseline cases are not gated",
+        run(
+            doc(1000, open_cold=40.0),
+            {
+                "records": 1000,
+                "cases": [
+                    {"name": "open_cold", "units_per_s": 40.0},
+                    {"name": "zero_rate", "units_per_s": 0},
+                    {"name": "bool_rate", "units_per_s": True},
+                    "not-a-dict",
+                ],
+            },
+        ),
+        [],
+    )
+    expect(
+        "custom threshold applies",
+        run(doc(1000, open_cold=20.0, open_warm=400.0), steady, 0.75),
+        ["'open_cold' fell to 0.50x"],
+    )
+
+    if failures:
+        for f in failures:
+            print(f"SELF-TEST FAILURE: {f}", file=sys.stderr)
+        return 1
+    print("bench_trend self-test ok (8 checks)")
+    return 0
 
 
 def main():
@@ -128,6 +240,8 @@ def main():
                 print(f"bad --threshold {argv[i + 1]!r}", file=sys.stderr)
                 return 2
             i += 2
+        elif arg == "--self-test":
+            return self_test()
         elif arg in ("-h", "--help"):
             print(__doc__)
             return 0

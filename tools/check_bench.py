@@ -29,7 +29,10 @@ SUMMARY_KEYS = {
 }
 IDENTITY_KEYS = {
     "store": ["bit_identical_cold_warm"],
-    "campaign": ["bit_identical_serial_parallel"],
+    "campaign": [
+        "bit_identical_serial_parallel",
+        "resume_zero_resim",
+    ],
     "serve": [
         "bit_identical_json_binary",
         "monotonic_versions_under_hot_swap",
