@@ -848,7 +848,7 @@ pub fn dispatch(
         },
         Some("health") => {
             let m = &service.metrics;
-            Json::obj(vec![
+            let mut fields = vec![
                 ("ok", Json::Bool(true)),
                 (
                     "requests",
@@ -868,7 +868,19 @@ pub fn dispatch(
                     Json::Num(m.lock_poisoned.load(Ordering::Relaxed) as f64),
                 ),
                 ("mean_batch", Json::Num(m.mean_batch_size())),
-            ])
+            ];
+            // With a store-backed trainer attached, report how the
+            // profile store is sharded (poisoned lock: field omitted;
+            // the retrain path owns poison recovery).
+            if let Some(t) = trainer {
+                if let Ok(t) = t.lock() {
+                    fields.push((
+                        "store_shards",
+                        Json::Num(t.store_shards() as f64),
+                    ));
+                }
+            }
+            Json::obj(fields)
         }
         Some(other) => err(&format!("unknown op '{other}'")),
         None => err("missing 'op'"),

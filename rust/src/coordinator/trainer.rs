@@ -154,6 +154,12 @@ impl Trainer {
         self.generation
     }
 
+    /// Shards behind the trainer's profile store (surfaced by the serve
+    /// health endpoint).
+    pub fn store_shards(&self) -> usize {
+        self.store.shard_count()
+    }
+
     /// One tail-and-refit cycle: re-scan the store directory for records
     /// other sessions appended, ingest everything past the trainer's
     /// cursor, and refit every application that gained data.  Returns

@@ -30,7 +30,7 @@ use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig, RepOutcome};
 use mrtuner::profiler::dlq;
 use mrtuner::profiler::extended::{random_ext4, scales, Ext4Spec};
-use mrtuner::profiler::store::{encode_record, read_file_records};
+use mrtuner::profiler::store::{FileBackend, StoreBackend, StoreOptions};
 use mrtuner::profiler::{
     cluster_fingerprint, ext4_rep_jobs, paper_campaign, CampaignExecutor,
     Dataset, ExperimentSpec, ProfileStore, RepJob, StoreKey,
@@ -87,6 +87,25 @@ fn store_cap_from(args: &Args) -> Result<Option<u64>, String> {
     }
 }
 
+/// Resolve the requested shard count from `--store-shards N`.  The
+/// `MRTUNER_STORE_SHARDS` fallback (and the rule that an existing
+/// `shards.meta` overrules both) lives in the store itself, so every
+/// open path agrees.
+fn store_shards_from(args: &Args) -> Result<Option<usize>, String> {
+    match args.str_opt("store-shards") {
+        None => Ok(None),
+        Some(s) => {
+            let n: usize = s
+                .parse()
+                .map_err(|_| format!("--store-shards: bad integer '{s}'"))?;
+            if n == 0 {
+                return Err("--store-shards must be >= 1".into());
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
 /// Build the profiling executor from `--jobs N` (default: one worker per
 /// core), attaching the persistent profile store when one is configured.
 /// Campaign output is bit-identical whatever the worker count, and warm
@@ -104,16 +123,27 @@ fn executor_from(args: &Args) -> Result<CampaignExecutor, String> {
     // storeless run must not be blocked by a malformed machine-wide
     // MRTUNER_STORE_MAX_MB that could never affect it.
     let cap = store_cap_from(args);
+    let shards = store_shards_from(args);
     // Cooperative drain only makes sense against a shared on-disk store:
     // the per-setting leases live inside its directory.
     let cooperative = args.switch("cooperative");
     match store_path_from(args) {
         Some(p) => {
-            let store = ProfileStore::open_capped(Path::new(&p), cap?)?;
+            let store = ProfileStore::open_with_opts(
+                Path::new(&p),
+                StoreOptions {
+                    cap_bytes: cap?,
+                    shards: shards?,
+                    ..StoreOptions::default()
+                },
+            )?;
+            // Deliberately NOT store.len() here: counting residents
+            // would force every shard to load, and the fast lazy open
+            // is the point of the sharded layout.
             eprintln!(
-                "profile store: {} ({} stored reps)",
+                "profile store: {} ({} shards)",
                 p,
-                store.len()
+                store.shard_count()
             );
             Ok(exec.with_store(store).with_cooperative(cooperative))
         }
@@ -193,16 +223,20 @@ fn print_help() {
                     profiled apps are served without restart\n\
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
            store    <stats|compact|clear> --store PATH [--store-max-mb N]\n\
-                    persistent profile store maintenance\n\
+                    persistent profile store maintenance; stats prints a\n\
+                    per-shard breakdown plus combined totals, compact runs\n\
+                    one synchronous pass over every shard (migrating any\n\
+                    legacy single-directory layout first)\n\
            dlq      <list|retry|clear> --store PATH     dead-letter queue:\n\
                     reps that kept failing are quarantined there instead\n\
                     of aborting a campaign; retry re-runs them through the\n\
                     executor (recovered reps land in the store)\n\
-           bench    <store|campaign|serve> [--records N] [--reps N]\n\
+           bench    <store|campaign|serve|trainer> [--records N] [--reps N]\n\
                     [--jobs N] [--requests N] [--clients N] [--window W]\n\
-                    [--out FILE]  store/executor/serving microbenchmarks;\n\
-                    writes BENCH_store.json / BENCH_campaign.json /\n\
-                    BENCH_serve.json\n\n\
+                    [--settings N] [--out FILE]  store/executor/serving/\n\
+                    trainer microbenchmarks; writes BENCH_store.json /\n\
+                    BENCH_campaign.json / BENCH_serve.json /\n\
+                    BENCH_trainer.json\n\n\
          --jobs N sets the profiling worker count (default: all cores);\n\
          campaign results are bit-identical for any N.\n\n\
          --store PATH attaches a persistent on-disk profile store to any\n\
@@ -211,7 +245,10 @@ fn print_help() {
          MRTUNER_STORE=PATH does the same machine-wide; --no-store\n\
          disables both for one invocation.  --store-max-mb N (or\n\
          MRTUNER_STORE_MAX_MB=N) caps the compacted store size: coldest\n\
-         records are evicted first, paper-plane reps are never evicted.\n\n\
+         records are evicted first, paper-plane reps are never evicted.\n\
+         Stores are sharded per application; --store-shards N (or\n\
+         MRTUNER_STORE_SHARDS=N, default 4) picks the shard count for a\n\
+         *new* store — an existing store's shards.meta always wins.\n\n\
          The store journal doubles as a campaign checkpoint: an\n\
          interrupted (even SIGKILLed) store-backed campaign re-run with\n\
          the same flags re-simulates only what is missing.  --resume\n\
@@ -626,16 +663,33 @@ fn cmd_store(args: &Args) -> Result<(), String> {
         "stats" => {
             // Peek: report what is on disk without rewriting anything.
             let store = ProfileStore::peek(&dir)?;
-            println!("store {}: {}", dir.display(), store.stats());
+            for (i, st) in store.shard_stats().iter().enumerate() {
+                println!("  shard-{i:02}: {st}");
+            }
+            println!(
+                "store {}: {} shard(s), {}",
+                dir.display(),
+                store.shard_count(),
+                store.stats()
+            );
             Ok(())
         }
         "compact" => {
-            let store = ProfileStore::open_capped(&dir, cap?)?;
-            let st = store.stats();
+            // Synchronous: the CLI's promise is that the work is done
+            // when it returns, so the background thread stays off.
+            let store = ProfileStore::open_with_opts(
+                &dir,
+                StoreOptions {
+                    cap_bytes: cap?,
+                    background_compaction: false,
+                    ..StoreOptions::default()
+                },
+            )?;
+            let pass = store.compact_now()?;
             println!(
-                "store {}: merged {} segment(s); {st}",
+                "store {}: merged {} segment(s); {pass}",
                 dir.display(),
-                st.merged_segments
+                pass.merged_segments
             );
             Ok(())
         }
@@ -773,13 +827,14 @@ fn bench_case(st: &BenchStats, units: f64) -> Json {
 fn cmd_bench(args: &Args) -> Result<(), String> {
     let what = args
         .positional(0)
-        .ok_or("usage: mrtuner bench <store|campaign|serve> [--flags]")?;
+        .ok_or("usage: mrtuner bench <store|campaign|serve|trainer> [--flags]")?;
     match what.as_str() {
         "store" => bench_store(args),
         "campaign" => bench_campaign(args),
         "serve" => bench_serve(args),
+        "trainer" => bench_trainer(args),
         other => Err(format!(
-            "unknown bench target '{other}' (store | campaign | serve)"
+            "unknown bench target '{other}' (store | campaign | serve | trainer)"
         )),
     }
 }
@@ -1041,11 +1096,13 @@ fn bench_serve(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
-/// Store-scaling benchmark: the same record population as a legacy JSONL
-/// store and as a binary v3 store, timed through open/compact/lookup,
-/// plus a real (small) campaign asserting cold → warm executor
-/// bit-identity across both formats.  Results land in `BENCH_store.json`
-/// (`--out`), the perf-trajectory artifact CI validates.
+/// Store-scaling benchmark: one record population laid out as a single
+/// eager-index directory (the pre-shard format) and as a sharded store,
+/// timed through cold open, affinity lookup, and legacy migration, plus
+/// a real (small) campaign asserting cold → warm executor bit-identity
+/// and zero re-simulation across both the file and memory backends.
+/// Results land in `BENCH_store.json` (`--out`), the perf-trajectory
+/// artifact CI validates.
 fn bench_store(args: &Args) -> Result<(), String> {
     let records = args.u64_or("records", 100_000)? as usize;
     let out = args.str_or("out", "BENCH_store.json");
@@ -1079,63 +1136,78 @@ fn bench_store(args: &Args) -> Result<(), String> {
         })
         .collect();
 
-    // A v2-era store: the whole population as one JSONL index.
-    let jsonl_dir = base.join("jsonl");
-    std::fs::create_dir_all(&jsonl_dir).map_err(|e| e.to_string())?;
-    let mut body = String::with_capacity(records * 180);
-    for (k, o) in &recs {
-        body.push_str(&encode_record(k, o));
-        body.push('\n');
-    }
-    std::fs::write(jsonl_dir.join("index.jsonl"), &body)
-        .map_err(|e| e.to_string())?;
+    // The production shape is a capped store; the cap is generous enough
+    // that nothing evicts, so every record survives to be read back.
+    let cap = Some(256u64 << 20);
 
-    // The same population as a compacted binary v3 store.
-    let bin_dir = base.join("binary");
+    // Baseline: the pre-shard layout — every record in ONE directory
+    // behind ONE compacted index, loaded eagerly on open.
+    let single_dir = base.join("single");
     {
-        let store = ProfileStore::open(&bin_dir)?;
+        let backend = FileBackend::new(&single_dir, cap, true);
+        for (k, o) in &recs {
+            backend.put(*k, *o);
+        }
+        backend.flush()?;
+        backend.compact()?;
+    }
+
+    // The same population through the sharded facade, compacted so every
+    // shard is one index file.
+    let shard_dir = base.join("sharded");
+    let shard_count = {
+        let store = ProfileStore::open_with_opts(
+            &shard_dir,
+            StoreOptions {
+                cap_bytes: cap,
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )?;
         for (k, o) in &recs {
             store.put(*k, *o);
         }
         store.flush()?;
-    }
-    {
-        let store = ProfileStore::open(&bin_dir)?;
+        store.compact_now()?;
         if store.len() != records {
             return Err(format!(
                 "bench store: expected {records} records, found {}",
                 store.len()
             ));
         }
-    }
+        store.shard_count()
+    };
 
     println!("bench store: {records} records per store");
     let mut cases: Vec<Json> = Vec::new();
 
-    // Open (= parse the whole index) per format, via `peek` so the pass
-    // is a pure read: the latency every warm CLI invocation pays.
-    let jsonl_open = bench("open JSONL (v2) store, cold parse", 1, 3, || {
-        std::hint::black_box(ProfileStore::peek(&jsonl_dir).unwrap().len());
+    // Cold open per layout.  The single-index baseline parses the whole
+    // index up front; the sharded open reads nothing but `shards.meta`
+    // until a lookup lands on a shard.
+    let single_open = bench("open single-index store, eager load", 1, 3, || {
+        let backend = FileBackend::open_eager(&single_dir, cap).unwrap();
+        std::hint::black_box(backend.len());
     });
-    cases.push(bench_case(&jsonl_open, records as f64));
-    let bin_open = bench("open binary (v3) store, cold parse", 1, 3, || {
-        std::hint::black_box(ProfileStore::peek(&bin_dir).unwrap().len());
+    cases.push(bench_case(&single_open, records as f64));
+    let sharded_open = bench("open sharded store, lazy shards", 1, 3, || {
+        let store = ProfileStore::peek(&shard_dir).unwrap();
+        std::hint::black_box(store.shard_count());
     });
-    cases.push(bench_case(&bin_open, records as f64));
+    cases.push(bench_case(&sharded_open, records as f64));
 
-    // One-shot: the upgrade compaction that rewrites JSONL as binary.
-    let migrate_dir = base.join("migrate");
-    std::fs::create_dir_all(&migrate_dir).map_err(|e| e.to_string())?;
-    std::fs::write(migrate_dir.join("index.jsonl"), &body)
-        .map_err(|e| e.to_string())?;
-    let migrate = bench("compact: migrate JSONL -> binary index", 0, 1, || {
-        std::hint::black_box(ProfileStore::open(&migrate_dir).unwrap().len());
+    // Open plus one routed lookup: the affinity case — a session that
+    // profiles one application parses that application's shard only.
+    let probe = recs[0].0;
+    let first_get = bench("open sharded + get() one app's shard", 1, 3, || {
+        let store = ProfileStore::peek(&shard_dir).unwrap();
+        std::hint::black_box(store.get(&probe));
     });
-    cases.push(bench_case(&migrate, records as f64));
+    cases.push(bench_case(&first_get, 1.0));
 
-    // Resident lookup rate (bounds the executor's store-hit cost).
+    // Resident lookup rate across all shards (bounds the executor's
+    // store-hit cost).
     {
-        let store = ProfileStore::peek(&bin_dir)?;
+        let store = ProfileStore::peek(&shard_dir)?;
         let lookups = bench("get() every record, resident", 1, 3, || {
             for (k, _) in &recs {
                 std::hint::black_box(store.get(k));
@@ -1144,8 +1216,40 @@ fn bench_store(args: &Args) -> Result<(), String> {
         cases.push(bench_case(&lookups, records as f64));
     }
 
-    // Cold → warm executor bit-identity across formats, on real
-    // simulations (the store's whole correctness claim in one check).
+    // One-shot: the migration the first sharded open performs on a
+    // legacy single-directory store, then byte-identity of every record
+    // across it.
+    let legacy_dir = base.join("legacy");
+    {
+        let backend = FileBackend::new(&legacy_dir, cap, true);
+        for (k, o) in &recs {
+            backend.put(*k, *o);
+        }
+        backend.flush()?;
+        backend.compact()?;
+    }
+    let migrate = bench("open: migrate legacy root into shards", 0, 1, || {
+        let store = ProfileStore::open_with_opts(
+            &legacy_dir,
+            StoreOptions {
+                cap_bytes: cap,
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        std::hint::black_box(store.len());
+    });
+    cases.push(bench_case(&migrate, records as f64));
+    let migration_get_identical = {
+        let migrated = ProfileStore::peek(&legacy_dir)?;
+        recs.iter().all(|(k, o)| {
+            migrated.get(k).is_some_and(|got| got.same_bits(o))
+        })
+    };
+
+    // Cold → warm executor bit-identity on real simulations, across both
+    // backends (the store's whole correctness claim in one check).
     let cluster = Cluster::paper_cluster();
     let specs = [
         ExperimentSpec::new(AppId::WordCount, 10, 5),
@@ -1157,59 +1261,206 @@ fn bench_store(args: &Args) -> Result<(), String> {
             .with_store(ProfileStore::open(&camp_dir)?);
         exec.run_specs(&cluster, &specs, 2, 11)
     };
-    let warm_bin = {
+    let warm_file = {
         let exec = CampaignExecutor::new(2)
             .with_store(ProfileStore::open(&camp_dir)?);
         let res = exec.run_specs(&cluster, &specs, 2, 11);
         if exec.stats().simulated != 0 {
-            return Err("bench store: binary warm run re-simulated".into());
+            return Err("bench store: file warm run re-simulated".into());
         }
         res
     };
-    // Rewrite the campaign store as v2 JSONL and warm-start from that.
-    let mut lines = String::new();
-    for entry in std::fs::read_dir(&camp_dir).map_err(|e| e.to_string())? {
-        let path = entry.map_err(|e| e.to_string())?.path();
-        if path.extension().is_some_and(|x| x == "bin") {
-            for (k, o, _) in read_file_records(&path)? {
-                lines.push_str(&encode_record(&k, &o));
-                lines.push('\n');
-            }
+    // Memory backend: preload the campaign's records into an ephemeral
+    // store and warm-start from that — same records, no disk underneath.
+    let warm_mem = {
+        let (entries, _) = ProfileStore::peek(&camp_dir)?.read_since(0);
+        let mem = ProfileStore::memory();
+        for (k, o) in entries {
+            mem.put(k, o);
         }
-    }
-    ProfileStore::clear(&camp_dir)?;
-    std::fs::write(camp_dir.join("index.jsonl"), &lines)
-        .map_err(|e| e.to_string())?;
-    let warm_jsonl = {
-        let exec = CampaignExecutor::new(2)
-            .with_store(ProfileStore::open(&camp_dir)?);
+        let exec = CampaignExecutor::new(2).with_store(mem);
         let res = exec.run_specs(&cluster, &specs, 2, 11);
         if exec.stats().simulated != 0 {
-            return Err("bench store: JSONL warm run re-simulated".into());
+            return Err("bench store: memory warm run re-simulated".into());
         }
         res
     };
     let bit_identical =
-        cold.iter().zip(&warm_bin).zip(&warm_jsonl).all(|((a, b), c)| {
+        cold.iter().zip(&warm_file).zip(&warm_mem).all(|((a, b), c)| {
             a.rep_times_s == b.rep_times_s && a.rep_times_s == c.rep_times_s
         });
 
-    let speedup = jsonl_open.mean_s / bin_open.mean_s;
+    let speedup = single_open.mean_s / sharded_open.mean_s;
     let doc = Json::obj(vec![
         ("bench", Json::Str("store".into())),
         ("schema", Json::Num(1.0)),
         ("records", Json::Num(records as f64)),
+        ("shards", Json::Num(shard_count as f64)),
         ("cases", Json::Arr(cases)),
-        ("binary_vs_jsonl_open_speedup", Json::Num(speedup)),
+        ("sharded_vs_single_open_speedup", Json::Num(speedup)),
+        ("migration_get_identical", Json::Bool(migration_get_identical)),
         ("bit_identical_cold_warm", Json::Bool(bit_identical)),
     ]);
     std::fs::write(&out, format!("{doc}\n")).map_err(|e| e.to_string())?;
     println!(
-        "binary open speedup over JSONL: {speedup:.2}x; \
+        "sharded lazy open speedup over single eager index: {speedup:.1}x; \
+         migration byte-identical: {migration_get_identical}; \
          cold/warm bit-identical: {bit_identical}"
     );
     println!("wrote {out}");
     let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
+/// Trainer-scaling benchmark: refit throughput when a trainer resumes
+/// against a large warm store (ingest everything + first refit per
+/// application) and the steady-state latency of an incremental poll
+/// diffing one fresh repetition.  Results land in `BENCH_trainer.json`
+/// (`--out`).
+fn bench_trainer(args: &Args) -> Result<(), String> {
+    let settings = args.u64_or("settings", 324)? as usize;
+    let reps = args.u64_or("reps", 2)? as u32;
+    let out = args.str_or("out", "BENCH_trainer.json");
+    args.reject_unknown()?;
+    if settings < NUM_FEATURES {
+        return Err(format!(
+            "--settings must be >= {NUM_FEATURES} (cubic basis unknowns)"
+        ));
+    }
+    if settings > 36 * 36 {
+        return Err("--settings must be <= 1296 (the 36x36 grid)".into());
+    }
+    if reps == 0 {
+        return Err("--reps must be >= 1".into());
+    }
+    let dir = std::env::temp_dir()
+        .join(format!("mrtuner_bench_trainer_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // A warm store shaped like a finished profiling campaign: paper-plane
+    // records over the (M, R) grid for every application, with a smooth
+    // synthetic time surface (the fit must be well-conditioned; it need
+    // not be physically meaningful).
+    let cluster = Cluster::paper_cluster();
+    let fp = cluster_fingerprint(&cluster);
+    let mut rng = Rng::new(0x7124_11E4_B05E_D511);
+    let apps = AppId::all();
+    let mut records = 0usize;
+    {
+        let store = ProfileStore::open_with_opts(
+            &dir,
+            StoreOptions {
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )?;
+        for (ai, app) in apps.iter().enumerate() {
+            for i in 0..settings {
+                let m = 5 + (i % 36) as u32;
+                let r = 5 + (i / 36) as u32;
+                let surface = 200.0
+                    + (ai as f64 + 1.0) * 3000.0 / m as f64
+                    + 800.0 / r as f64
+                    + 0.05 * (m * r) as f64;
+                for rep in 0..reps {
+                    let key = StoreKey {
+                        cluster: fp,
+                        app: *app,
+                        num_mappers: m,
+                        num_reducers: r,
+                        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                        block_mb: StoreKey::PAPER_BLOCK_MB,
+                        rep,
+                        base_seed: 42,
+                    };
+                    let jitter = rng.range_f64(-2.0, 2.0);
+                    store.put(key, RepOutcome::time_only(surface + jitter));
+                    records += 1;
+                }
+            }
+        }
+        store.flush()?;
+        store.compact_now()?;
+    }
+    println!(
+        "bench trainer: {records} records ({settings} settings x {} apps \
+         x {reps} reps)",
+        apps.len()
+    );
+    let mut cases: Vec<Json> = Vec::new();
+
+    // Every application the store profiled must come back as a refit —
+    // the determinism claim behind warm serve starts.
+    let refits_cover_all_apps = {
+        let mut trainer = Trainer::open(&dir, &cluster)?;
+        let report = trainer.poll()?;
+        report.refits.len() == apps.len()
+            && report.new_records == records as u64
+    };
+
+    // Resume: a fresh trainer opens the warm store, ingests everything,
+    // and refits every application — the cost a `serve --retrain-every`
+    // start pays over an existing campaign.
+    let resume = bench("trainer resume: ingest store + refit", 1, 3, || {
+        let mut trainer = Trainer::open(&dir, &cluster).unwrap();
+        let report = trainer.poll().unwrap();
+        std::hint::black_box(report.new_records);
+    });
+    cases.push(bench_case(&resume, records as f64));
+
+    // Incremental: a long-lived trainer diffs exactly one fresh rep per
+    // poll — the steady-state retrain cadence.
+    let writer = ProfileStore::open_with_opts(
+        &dir,
+        StoreOptions {
+            background_compaction: false,
+            ..StoreOptions::default()
+        },
+    )?;
+    let mut trainer = Trainer::open(&dir, &cluster)?;
+    trainer.poll()?;
+    let mut next_rep = reps;
+    let incremental =
+        bench("trainer poll: one fresh rep, refit diff", 2, 10, || {
+            let key = StoreKey {
+                cluster: fp,
+                app: AppId::WordCount,
+                num_mappers: 5,
+                num_reducers: 5,
+                input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                block_mb: StoreKey::PAPER_BLOCK_MB,
+                rep: next_rep,
+                base_seed: 42,
+            };
+            next_rep += 1;
+            writer.put(key, RepOutcome::time_only(777.0 + next_rep as f64));
+            writer.flush().unwrap();
+            let report = trainer.poll().unwrap();
+            std::hint::black_box(report.generation);
+        });
+    cases.push(bench_case(&incremental, 1.0));
+    drop(trainer);
+    drop(writer);
+
+    let resume_rate = resume.throughput(records as f64);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("trainer".into())),
+        ("schema", Json::Num(1.0)),
+        ("records", Json::Num(records as f64)),
+        ("settings", Json::Num(settings as f64)),
+        ("cases", Json::Arr(cases)),
+        ("resume_records_per_s", Json::Num(resume_rate)),
+        ("incremental_poll_p50_s", Json::Num(incremental.p50_s)),
+        ("refits_cover_all_apps", Json::Bool(refits_cover_all_apps)),
+    ]);
+    std::fs::write(&out, format!("{doc}\n")).map_err(|e| e.to_string())?;
+    println!(
+        "trainer resume: {resume_rate:.0} records/s; incremental poll \
+         p50 {:.6}s; refits cover all apps: {refits_cover_all_apps}",
+        incremental.p50_s
+    );
+    println!("wrote {out}");
+    let _ = std::fs::remove_dir_all(&dir);
     Ok(())
 }
 

@@ -506,6 +506,11 @@ impl CampaignExecutor {
             quarantined: self.quarantined(),
             mem_entries: self.cache_len(),
             store_entries: self.store.as_ref().map(|s| s.len()).unwrap_or(0),
+            store_shards: self
+                .store
+                .as_ref()
+                .map(|s| s.shard_count())
+                .unwrap_or(0),
             store_attached: self.store.is_some(),
         }
     }
@@ -1157,6 +1162,8 @@ pub struct ExecutorStats {
     pub mem_entries: usize,
     /// Distinct reps in the persistent store (0 when none attached).
     pub store_entries: usize,
+    /// Shards behind the attached store (0 when none attached).
+    pub store_shards: usize,
     /// Whether a persistent store is attached.
     pub store_attached: bool,
 }
@@ -1166,7 +1173,7 @@ impl fmt::Display for ExecutorStats {
         write!(
             f,
             "jobs={} simulated={} mem_hits={} store_hits={} quarantined={} \
-             mem_entries={} store_entries={} store={}",
+             mem_entries={} store_entries={} store_shards={} store={}",
             self.jobs,
             self.simulated,
             self.mem_hits,
@@ -1174,6 +1181,7 @@ impl fmt::Display for ExecutorStats {
             self.quarantined,
             self.mem_entries,
             self.store_entries,
+            self.store_shards,
             if self.store_attached { "on" } else { "off" }
         )
     }

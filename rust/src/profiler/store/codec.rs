@@ -1,0 +1,457 @@
+//! Record codecs: the binary v3 frame format every store file is
+//! written in, and the legacy JSONL (v1/v2) codec migrated on read.
+
+use std::fs;
+use std::path::Path;
+
+use super::key::{RecordError, StoreKey};
+use super::STORE_FORMAT_VERSION;
+use crate::apps::AppId;
+use crate::mr::RepOutcome;
+use crate::util::bytes::{hex_u64, parse_hex_u64};
+use crate::util::json::{parse, Json};
+
+/// Version written by the legacy JSONL record codec ([`encode_record`]).
+pub(crate) const JSONL_RECORD_VERSION: u32 = 2;
+
+/// Magic prefix of every binary (v3) store file.
+pub(crate) const BIN_MAGIC: [u8; 4] = *b"MRTS";
+/// Binary file header: magic + little-endian u32 format version.
+pub(crate) const BIN_HEADER_LEN: usize = 8;
+/// Sanity bound on a record's length prefix; anything larger is framing
+/// corruption (a real record is well under 128 bytes).
+pub(crate) const MAX_RECORD_LEN: usize = 4096;
+
+// ------------------------------------------------- legacy JSONL codec
+
+/// Serialize one `(key, per-rep outcome)` record as a **legacy v2 JSON
+/// line** — the format PR 2/PR 3 builds wrote.  Kept for store-upgrade
+/// tests and tooling; the store itself writes the binary v3 codec
+/// ([`encode_record_bin`]) since PR 5.
+pub fn encode_record(key: &StoreKey, outcome: &RepOutcome) -> String {
+    // "t"/"cpu" are redundant human-readable copies; the hex "bits"
+    // fields are authoritative.  "cbits"/"cpu" are omitted when the CPU
+    // figure is unknown (v1-migrated data).
+    let mut pairs = vec![
+        ("v", Json::Num(JSONL_RECORD_VERSION as f64)),
+        ("cluster", Json::Str(hex_u64(key.cluster))),
+        ("app", Json::Str(key.app.name().to_string())),
+        ("m", Json::Num(key.num_mappers as f64)),
+        ("r", Json::Num(key.num_reducers as f64)),
+        ("igb", Json::Str(hex_u64(key.input_gb_bits))),
+        ("blk", Json::Num(key.block_mb as f64)),
+        ("rep", Json::Num(key.rep as f64)),
+        ("seed", Json::Str(hex_u64(key.base_seed))),
+        ("bits", Json::Str(hex_u64(outcome.time_s.to_bits()))),
+        ("t", Json::Num(outcome.time_s)),
+    ];
+    if let Some(cpu) = outcome.cpu_s {
+        pairs.push(("cbits", Json::Str(hex_u64(cpu.to_bits()))));
+        pairs.push(("cpu", Json::Num(cpu)));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Decode a legacy JSONL record line written by [`encode_record`] (v2)
+/// or by the v1 store, returning the key, the outcome, and the version
+/// the line was written under.
+///
+/// v1 lines are migrated on the fly: their key lands at the paper-default
+/// input/block values (the only point v1 could describe) and the CPU
+/// figure is absent — they are never orphaned, and compaction rewrites
+/// them as v3 binary.
+pub fn decode_record(
+    line: &str,
+) -> Result<(StoreKey, RepOutcome, u32), RecordError> {
+    let v = parse(line).map_err(RecordError::Corrupt)?;
+    let ver = v.req_u64("v").map_err(RecordError::Corrupt)?;
+    let decode = |legacy_v1: bool| -> Result<(StoreKey, RepOutcome), String> {
+        let (input_gb_bits, block_mb) = if legacy_v1 {
+            (StoreKey::PAPER_INPUT_GB.to_bits(), StoreKey::PAPER_BLOCK_MB)
+        } else {
+            (parse_hex_u64(v.req_str("igb")?)?, v.req_u32("blk")?)
+        };
+        let key = StoreKey {
+            cluster: parse_hex_u64(v.req_str("cluster")?)?,
+            app: AppId::parse(v.req_str("app")?)?,
+            num_mappers: v.req_u32("m")?,
+            num_reducers: v.req_u32("r")?,
+            input_gb_bits,
+            block_mb,
+            rep: v.req_u32("rep")?,
+            base_seed: parse_hex_u64(v.req_str("seed")?)?,
+        };
+        let time_s = f64::from_bits(parse_hex_u64(v.req_str("bits")?)?);
+        let cpu_s = match v.get("cbits") {
+            None => None,
+            Some(j) => Some(f64::from_bits(parse_hex_u64(
+                j.as_str().ok_or("cbits: expected hex string")?,
+            )?)),
+        };
+        Ok((key, RepOutcome { time_s, cpu_s }))
+    };
+    match ver {
+        2 => decode(false)
+            .map(|(k, o)| (k, o, 2))
+            .map_err(RecordError::Corrupt),
+        1 => decode(true)
+            .map(|(k, o)| (k, o, 1))
+            .map_err(RecordError::Corrupt),
+        other => Err(RecordError::StaleVersion(other)),
+    }
+}
+
+// ------------------------------------------------------ binary v3 codec
+
+/// Exact encoded payload size of one binary record (no length prefix).
+pub(crate) fn payload_len(key: &StoreKey, outcome: &RepOutcome) -> usize {
+    // 5 u64s + 4 u32s + app length byte + app name + cpu flag (+ cpu bits)
+    5 * 8
+        + 4 * 4
+        + 1
+        + key.app.name().len()
+        + 1
+        + if outcome.cpu_s.is_some() { 8 } else { 0 }
+}
+
+/// Exact on-disk size of one framed binary record (length prefix
+/// included) — what the size-cap accounting sums.
+pub(crate) fn frame_len(key: &StoreKey, outcome: &RepOutcome) -> usize {
+    4 + payload_len(key, outcome)
+}
+
+/// The 8-byte header every binary store file starts with.
+pub(crate) fn bin_header() -> [u8; BIN_HEADER_LEN] {
+    let mut h = [0u8; BIN_HEADER_LEN];
+    h[..4].copy_from_slice(&BIN_MAGIC);
+    h[4..].copy_from_slice(&STORE_FORMAT_VERSION.to_le_bytes());
+    h
+}
+
+/// Append one framed binary record to `out`.
+pub(crate) fn encode_record_bin_into(
+    key: &StoreKey,
+    outcome: &RepOutcome,
+    touch: u64,
+    out: &mut Vec<u8>,
+) {
+    let len = payload_len(key, outcome);
+    debug_assert!(len <= MAX_RECORD_LEN);
+    out.extend_from_slice(&(len as u32).to_le_bytes());
+    let start = out.len();
+    out.extend_from_slice(&key.cluster.to_le_bytes());
+    out.extend_from_slice(&key.base_seed.to_le_bytes());
+    out.extend_from_slice(&key.input_gb_bits.to_le_bytes());
+    out.extend_from_slice(&outcome.time_s.to_bits().to_le_bytes());
+    out.extend_from_slice(&touch.to_le_bytes());
+    out.extend_from_slice(&key.num_mappers.to_le_bytes());
+    out.extend_from_slice(&key.num_reducers.to_le_bytes());
+    out.extend_from_slice(&key.block_mb.to_le_bytes());
+    out.extend_from_slice(&key.rep.to_le_bytes());
+    let name = key.app.name().as_bytes();
+    out.push(name.len() as u8);
+    out.extend_from_slice(name);
+    match outcome.cpu_s {
+        Some(cpu) => {
+            out.push(1);
+            out.extend_from_slice(&cpu.to_bits().to_le_bytes());
+        }
+        None => out.push(0),
+    }
+    debug_assert_eq!(out.len() - start, len);
+}
+
+/// Serialize one record as a length-prefixed **binary v3** frame: the
+/// format the store's segments and index are written in since PR 5.
+/// Every `u64`/`f64` is stored as raw little-endian bits, so arbitrary
+/// bit patterns — NaN payloads included — round-trip exactly.  `touch`
+/// is the record's last-hit generation (drives LRU eviction under a
+/// size cap).
+pub fn encode_record_bin(
+    key: &StoreKey,
+    outcome: &RepOutcome,
+    touch: u64,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(frame_len(key, outcome));
+    encode_record_bin_into(key, outcome, touch, &mut out);
+    out
+}
+
+/// Bounds-checked little-endian reader over one binary payload.
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .i
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| "binary record truncated".to_string())?;
+        let s = &self.b[self.i..end];
+        self.i = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+}
+
+/// Decode one binary payload (the bytes after a record's length prefix).
+pub(crate) fn decode_payload(
+    b: &[u8],
+) -> Result<(StoreKey, RepOutcome, u64), String> {
+    let mut c = Cursor { b, i: 0 };
+    let cluster = c.u64()?;
+    let base_seed = c.u64()?;
+    let input_gb_bits = c.u64()?;
+    let time_bits = c.u64()?;
+    let touch = c.u64()?;
+    let num_mappers = c.u32()?;
+    let num_reducers = c.u32()?;
+    let block_mb = c.u32()?;
+    let rep = c.u32()?;
+    let app_len = c.u8()? as usize;
+    let app_bytes = c.take(app_len)?;
+    let app = AppId::parse(
+        std::str::from_utf8(app_bytes)
+            .map_err(|_| "binary record: app name not UTF-8".to_string())?,
+    )?;
+    let cpu_s = match c.u8()? {
+        0 => None,
+        1 => Some(f64::from_bits(c.u64()?)),
+        other => return Err(format!("binary record: bad cpu flag {other}")),
+    };
+    if c.i != b.len() {
+        return Err("binary record: trailing payload bytes".into());
+    }
+    Ok((
+        StoreKey {
+            cluster,
+            app,
+            num_mappers,
+            num_reducers,
+            input_gb_bits,
+            block_mb,
+            rep,
+            base_seed,
+        },
+        RepOutcome { time_s: f64::from_bits(time_bits), cpu_s },
+        touch,
+    ))
+}
+
+/// Decode one framed binary record produced by [`encode_record_bin`]
+/// from the front of `bytes`.  Returns the record, its touch generation,
+/// and the total bytes consumed (prefix + payload), so callers can walk
+/// a concatenated record stream.
+pub fn decode_record_bin(
+    bytes: &[u8],
+) -> Result<(StoreKey, RepOutcome, u64, usize), String> {
+    if bytes.len() < 4 {
+        return Err("binary record truncated (length prefix)".into());
+    }
+    let len =
+        u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes")) as usize;
+    if len == 0 || len > MAX_RECORD_LEN {
+        return Err(format!("binary record: implausible length {len}"));
+    }
+    let end = 4 + len;
+    if bytes.len() < end {
+        return Err("binary record truncated (payload)".into());
+    }
+    let (key, outcome, touch) = decode_payload(&bytes[4..end])?;
+    Ok((key, outcome, touch, end))
+}
+
+/// Strictly decode every record in one store file — binary v3 or legacy
+/// JSONL — returning each record with the version it was stored under
+/// (the file version for binary, the per-line `"v"` for JSONL).  Any
+/// corruption is an error: this is the store-inspection/tooling path,
+/// not the fault-tolerant load path.
+pub fn read_file_records(
+    path: &Path,
+) -> Result<Vec<(StoreKey, RepOutcome, u32)>, String> {
+    let bytes =
+        fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    if bytes.is_empty() {
+        return Ok(out);
+    }
+    if bytes.len() >= 4 && bytes[..4] == BIN_MAGIC {
+        if bytes.len() < BIN_HEADER_LEN {
+            return Err("truncated binary store header".into());
+        }
+        let ver = u32::from_le_bytes(
+            bytes[4..BIN_HEADER_LEN].try_into().expect("4 bytes"),
+        );
+        if ver != STORE_FORMAT_VERSION {
+            return Err(format!("unsupported binary store version {ver}"));
+        }
+        let mut i = BIN_HEADER_LEN;
+        while i < bytes.len() {
+            let (key, outcome, _touch, used) = decode_record_bin(&bytes[i..])?;
+            out.push((key, outcome, ver));
+            i += used;
+        }
+    } else {
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|_| format!("{}: not UTF-8", path.display()))?;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (key, outcome, ver) =
+                decode_record(line).map_err(|e| format!("{e:?}"))?;
+            out.push((key, outcome, ver));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: u32, r: u32, rep: u32, seed: u64) -> StoreKey {
+        StoreKey {
+            cluster: 0xDEAD_BEEF_0BAD_F00D,
+            app: AppId::WordCount,
+            num_mappers: m,
+            num_reducers: r,
+            input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+            block_mb: StoreKey::PAPER_BLOCK_MB,
+            rep,
+            base_seed: seed,
+        }
+    }
+
+    /// A record line exactly as the v1 (PR 2) store wrote it.
+    fn v1_line(k: &StoreKey, time_s: f64) -> String {
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("cluster", Json::Str(hex_u64(k.cluster))),
+            ("app", Json::Str(k.app.name().to_string())),
+            ("m", Json::Num(k.num_mappers as f64)),
+            ("r", Json::Num(k.num_reducers as f64)),
+            ("rep", Json::Num(k.rep as f64)),
+            ("seed", Json::Str(hex_u64(k.base_seed))),
+            ("bits", Json::Str(hex_u64(time_s.to_bits()))),
+            ("t", Json::Num(time_s)),
+        ])
+        .to_string()
+    }
+
+    #[test]
+    fn jsonl_record_round_trips_bit_exactly() {
+        for (i, t) in
+            [1523.25, 0.1 + 0.2, f64::MIN_POSITIVE, 1e300].iter().enumerate()
+        {
+            let mut k = key(20, 5, i as u32, u64::MAX - i as u64);
+            k.input_gb_bits = (1.5 + i as f64).to_bits();
+            k.block_mb = 32 << i;
+            for outcome in
+                [RepOutcome::full(*t, t * 4.0 + 1.0), RepOutcome::time_only(*t)]
+            {
+                let line = encode_record(&k, &outcome);
+                let (k2, o2, ver) = decode_record(&line).unwrap();
+                assert_eq!(k2, k);
+                assert_eq!(ver, JSONL_RECORD_VERSION);
+                assert!(o2.same_bits(&outcome));
+            }
+        }
+    }
+
+    #[test]
+    fn binary_record_round_trips_bit_exactly() {
+        for (i, t) in
+            [1523.25, 0.1 + 0.2, f64::MIN_POSITIVE, 1e300, f64::NAN]
+                .iter()
+                .enumerate()
+        {
+            let mut k = key(20, 5, i as u32, u64::MAX - i as u64);
+            k.input_gb_bits = (1.5 + i as f64).to_bits();
+            k.block_mb = 32 << i;
+            for outcome in
+                [RepOutcome::full(*t, t * 4.0 + 1.0), RepOutcome::time_only(*t)]
+            {
+                let frame = encode_record_bin(&k, &outcome, 77 + i as u64);
+                assert_eq!(frame.len(), frame_len(&k, &outcome));
+                let (k2, o2, touch, used) = decode_record_bin(&frame).unwrap();
+                assert_eq!(k2, k);
+                assert_eq!(touch, 77 + i as u64);
+                assert_eq!(used, frame.len());
+                assert!(o2.same_bits(&outcome));
+            }
+        }
+    }
+
+    #[test]
+    fn binary_decode_rejects_truncation_and_garbage() {
+        let frame = encode_record_bin(
+            &key(5, 5, 0, 1),
+            &RepOutcome::full(2.0, 3.0),
+            9,
+        );
+        for cut in [0, 3, 4, frame.len() - 1] {
+            assert!(decode_record_bin(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // A garbled length prefix is implausible, not a panic.
+        let mut bad = frame.clone();
+        bad[0] = 0xFF;
+        bad[1] = 0xFF;
+        bad[2] = 0xFF;
+        bad[3] = 0x7F;
+        assert!(decode_record_bin(&bad).is_err());
+        // Trailing payload bytes are rejected (payload must be exact).
+        let mut padded = frame.clone();
+        let len = u32::from_le_bytes(padded[0..4].try_into().unwrap()) + 1;
+        padded[0..4].copy_from_slice(&len.to_le_bytes());
+        padded.push(0);
+        assert!(decode_record_bin(&padded).is_err());
+    }
+
+    #[test]
+    fn decode_classifies_stale_and_corrupt() {
+        let line = encode_record(&key(5, 5, 0, 1), &RepOutcome::full(2.0, 3.0));
+        let stale = line.replace("\"v\":2", "\"v\":999");
+        assert_eq!(
+            decode_record(&stale),
+            Err(RecordError::StaleVersion(999))
+        );
+        for bad in
+            ["", "not json", "{\"v\":2}", "{\"v\":1}", "{\"x\":2}", "[1,2,3]"]
+        {
+            match decode_record(bad) {
+                Err(RecordError::Corrupt(_)) => {}
+                other => panic!("expected corrupt for {bad:?}, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v1_lines_migrate_to_paper_default_keys() {
+        let k = key(20, 5, 3, 42);
+        let (k2, o2, ver) = decode_record(&v1_line(&k, 1523.25)).unwrap();
+        assert_eq!(ver, 1);
+        // The migrated key lands exactly where the 2-parameter executor
+        // path keys its reps: the paper-default input/block plane.
+        assert_eq!(k2, k);
+        assert_eq!(k2.input_gb(), StoreKey::PAPER_INPUT_GB);
+        assert_eq!(k2.block_mb, StoreKey::PAPER_BLOCK_MB);
+        assert!(k2.is_paper_plane());
+        assert_eq!(o2, RepOutcome::time_only(1523.25));
+    }
+}

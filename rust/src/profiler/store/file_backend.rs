@@ -1,0 +1,1445 @@
+//! The default [`StoreBackend`]: one store **directory** of binary v3
+//! segments plus a compacted index — the PR 2/3/5 single-directory
+//! store, restructured so that loading is **lazy** (constructing the
+//! backend is a few path checks; the data scan runs on first access)
+//! and compaction is an explicit pass ([`FileBackend::compact`]) that
+//! callers — the sharded facade's background thread, the CLI, benches —
+//! run off the open path.
+
+use std::collections::{BTreeSet, HashMap};
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+use super::codec::{
+    bin_header, decode_payload, decode_record, encode_record_bin_into,
+    frame_len, BIN_HEADER_LEN, BIN_MAGIC,
+};
+use super::key::{RecordError, StoreKey};
+use super::{StoreBackend, StoreStats, STORE_FORMAT_VERSION};
+use crate::mr::RepOutcome;
+use crate::util::bytes::hex_u64;
+
+pub(crate) const INDEX_FILE: &str = "index.bin";
+pub(crate) const LEGACY_INDEX_FILE: &str = "index.jsonl";
+pub(crate) const COMPACT_LOCK: &str = "compact.lock";
+
+/// A `compact.lock` older than this is assumed to be the debris of a
+/// crashed process (a compaction pass takes well under a second) and is
+/// reclaimed, so one crash can never disable compaction forever.
+const STALE_COMPACT_LOCK: Duration = Duration::from_secs(600);
+
+/// Distinguishes session segments from everything else in the directory.
+pub(crate) const SEGMENT_PREFIX: &str = "seg-";
+pub(crate) const SEGMENT_SUFFIX: &str = ".bin";
+pub(crate) const LEGACY_SEGMENT_SUFFIX: &str = ".jsonl";
+
+/// Makes segment names unique when one process opens several stores (or
+/// several executors share a directory) within one clock tick.
+static SEG_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+struct SegmentWriter {
+    file: fs::File,
+    lock: PathBuf,
+}
+
+impl SegmentWriter {
+    /// Create a fresh uniquely-named binary segment (header written
+    /// immediately), taking its liveness lock *first* so a concurrent
+    /// compaction never deletes it underneath us.
+    fn create(dir: &Path) -> Result<SegmentWriter, String> {
+        fs::create_dir_all(dir)
+            .map_err(|e| format!("store: create dir {}: {e}", dir.display()))?;
+        let path = dir.join(fresh_segment_name());
+        let lock = lock_path(&path);
+        let mut lf = OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&lock)
+            .map_err(|e| format!("store: create lock {}: {e}", lock.display()))?;
+        let _ = writeln!(lf, "{}", std::process::id());
+        let mut file = match OpenOptions::new()
+            .append(true)
+            .create_new(true)
+            .open(&path)
+        {
+            Ok(f) => f,
+            Err(e) => {
+                let _ = fs::remove_file(&lock);
+                return Err(format!(
+                    "store: create segment {}: {e}",
+                    path.display()
+                ));
+            }
+        };
+        if let Err(e) = file.write_all(&bin_header()) {
+            let _ = fs::remove_file(&lock);
+            return Err(format!(
+                "store: write segment header {}: {e}",
+                path.display()
+            ));
+        }
+        Ok(SegmentWriter { file, lock })
+    }
+}
+
+impl Drop for SegmentWriter {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.lock);
+    }
+}
+
+/// A unique name for a new segment file in this process.
+pub(crate) fn fresh_segment_name() -> String {
+    let nonce = SEG_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    format!(
+        "{SEGMENT_PREFIX}{:08x}-{:04x}-{}{SEGMENT_SUFFIX}",
+        std::process::id(),
+        nonce,
+        hex_u64(nanos)
+    )
+}
+
+/// One resident record: the outcome plus its last-hit **touch**
+/// generation (persisted in v3 records; 0 for data migrated from JSONL
+/// stores, which therefore evicts first under a cap).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) struct StoredRep {
+    pub(crate) outcome: RepOutcome,
+    pub(crate) touch: u64,
+}
+
+struct Inner {
+    /// Key → stored record (held as the very `f64`s that were
+    /// decoded/produced, so every bit round-trips by construction).
+    entries: HashMap<StoreKey, StoredRep>,
+    /// Key of every record this backend instance has accepted, in
+    /// acceptance order: the on-disk records found at load (sorted, so
+    /// the order is deterministic), then every `put`/`refresh`
+    /// insertion.  `journal.len()` is the backend's **generation**;
+    /// consumers tail it by remembering the generation they last read.
+    /// Keys only, so the journal does not double resident memory; a key
+    /// whose record was upgraded (CPU figure added) appears twice, and
+    /// a key evicted by a later compaction simply stops resolving.
+    journal: Vec<StoreKey>,
+    /// Encoded binary frames not yet appended to this session's segment.
+    dirty: Vec<u8>,
+    /// Records represented in `dirty` (the `pending()` count).
+    dirty_count: usize,
+    /// Keys whose touch generation changed since the last flush (lookup
+    /// hits and re-puts of known values).  Flush appends a fresh frame
+    /// per touched key so recency survives the process — that is what
+    /// makes cross-session LRU eviction meaningful.  Only populated
+    /// when the backend has a size cap: an uncapped warm run must stay
+    /// write-free (the frames have no consumer without eviction).
+    /// BTreeSet so the flush order is deterministic.
+    touched: BTreeSet<StoreKey>,
+    /// Monotonic touch clock, seeded from the largest touch on disk.
+    clock: u64,
+    /// Lazily created on first flush, so sessions with nothing to
+    /// persist (reads without a cap, inspection) leave no file behind.
+    writer: Option<SegmentWriter>,
+    /// What loading saw on disk, plus every compaction pass since.
+    stats: StoreStats,
+}
+
+/// The file-format [`StoreBackend`]: segments + index in one directory.
+///
+/// Construction records the configuration only; the directory is
+/// scanned **lazily** on first access, so building a router over many
+/// shards costs nothing for the shards a session never touches, and a
+/// capped open of a huge store returns immediately.  Compaction —
+/// folding segments into `index.bin`, evicting to the size cap,
+/// deleting merged files — runs only inside [`FileBackend::compact`].
+pub struct FileBackend {
+    dir: PathBuf,
+    cap: Option<u64>,
+    /// `false` for inspection sessions (`peek`): never compact, so an
+    /// observer can never rewrite files under another session's feet.
+    /// Writes are still allowed — a peek session that `put`s flushes
+    /// segments like any other.
+    compact_allowed: bool,
+    state: Mutex<Option<Inner>>,
+    /// Per-file refresh bookkeeping: store file name → length as of the
+    /// last successful ingest of that file.  [`FileBackend::refresh`]
+    /// re-parses only files whose length changed (segments are
+    /// append-only; the index is replaced wholesale by compaction), so
+    /// an idle poll is a directory stat and a steady-state poll costs
+    /// the changed files, not the whole store.
+    refresh_state: Mutex<HashMap<String, u64>>,
+}
+
+impl FileBackend {
+    /// Backend over `dir` with an optional size cap (bytes) enforced at
+    /// compaction.  `compact_allowed = false` makes this an inspection
+    /// session: [`FileBackend::compact`] becomes a no-op.  The
+    /// directory is not created (or read) until first use.
+    pub fn new(
+        dir: &Path,
+        cap: Option<u64>,
+        compact_allowed: bool,
+    ) -> FileBackend {
+        FileBackend {
+            dir: dir.to_path_buf(),
+            cap,
+            compact_allowed,
+            state: Mutex::new(None),
+            refresh_state: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The **eager** open the pre-sharding store performed: load the
+    /// whole directory *and* run a compaction pass before returning.
+    /// This is the single-index baseline the `bench store` comparison
+    /// measures the lazy sharded open against.
+    pub fn open_eager(
+        dir: &Path,
+        cap: Option<u64>,
+    ) -> Result<FileBackend, String> {
+        let backend = FileBackend::new(dir, cap, true);
+        backend.compact()?;
+        Ok(backend)
+    }
+
+    /// Directory this backend stores into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, Option<Inner>> {
+        self.state.lock().expect("store mutex poisoned")
+    }
+
+    /// Load the directory into memory if this is the first access.
+    fn inner<'a>(&self, state: &'a mut Option<Inner>) -> &'a mut Inner {
+        if state.is_none() {
+            *state = Some(self.load());
+        }
+        state.as_mut().expect("state just loaded")
+    }
+
+    fn load(&self) -> Inner {
+        let scan = match scan_dir(&self.dir) {
+            Ok(scan) => scan,
+            Err(e) => {
+                // A lazy load has no Result channel; serve an empty view
+                // and make sure compaction can never run from it.
+                eprintln!(
+                    "store: load {} failed ({e}); treating as empty",
+                    self.dir.display()
+                );
+                let mut scan = Scan::empty();
+                scan.index_unreadable = true;
+                scan.stats.corrupt_segments += 1;
+                scan
+            }
+        };
+        let mut stats = scan.stats;
+        stats.entries = scan.entries.len();
+        // Seed the journal with everything on disk, sorted by key so the
+        // initial generation's contents are deterministic.
+        let mut journal: Vec<StoreKey> = scan.entries.keys().copied().collect();
+        journal.sort();
+        let clock = scan.entries.values().map(|sr| sr.touch).max().unwrap_or(0);
+        Inner {
+            entries: scan.entries,
+            journal,
+            dirty: Vec::new(),
+            dirty_count: 0,
+            touched: BTreeSet::new(),
+            clock,
+            writer: None,
+            stats,
+        }
+    }
+
+    /// Whether a compaction pass would plausibly do work, answerable
+    /// **without** loading the store: an unlocked segment to fold, a
+    /// legacy JSONL file to rewrite, or an index over the size cap.
+    /// The facade's background thread uses this to skip clean shards.
+    pub fn needs_compaction(&self) -> bool {
+        if !self.compact_allowed {
+            return false;
+        }
+        if self.dir.join(LEGACY_INDEX_FILE).exists() {
+            return true;
+        }
+        if let Some(cap) = self.cap {
+            let len = fs::metadata(self.dir.join(INDEX_FILE))
+                .map(|m| m.len())
+                .unwrap_or(0);
+            if len > cap {
+                return true;
+            }
+        }
+        match segment_paths(&self.dir) {
+            Ok(paths) => paths.iter().any(|p| !segment_is_locked(p)),
+            Err(_) => false,
+        }
+    }
+
+    /// Fold already-decoded records into the resident view as if they
+    /// had been read from this backend's own files: no dirty marking,
+    /// no segment writes — the sharded facade uses this to surface a
+    /// legacy single-directory store's records through the shards when
+    /// migration is not allowed to write (inspection opens, or a busy
+    /// migration lock).
+    pub(crate) fn preload(&self, records: Vec<(StoreKey, StoredRep)>) {
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        let mut fresh: Vec<StoreKey> = Vec::new();
+        for (key, sr) in records {
+            inner.clock = inner.clock.max(sr.touch);
+            let known = inner.entries.contains_key(&key);
+            fold_entry(&mut inner.entries, key, sr);
+            if !known {
+                fresh.push(key);
+            }
+        }
+        fresh.sort();
+        inner.journal.extend(fresh.iter().copied());
+        inner.stats.entries = inner.entries.len();
+    }
+
+    /// Flush with the state lock already held (compaction flushes first
+    /// so every resident record is on disk before the pass scans).
+    fn flush_locked(&self, inner: &mut Inner) -> Result<(), String> {
+        if inner.dirty.is_empty() && inner.touched.is_empty() {
+            return Ok(());
+        }
+        if inner.writer.is_none() {
+            inner.writer = Some(SegmentWriter::create(&self.dir)?);
+        }
+        let mut buf =
+            Vec::with_capacity(inner.dirty.len() + 96 * inner.touched.len());
+        buf.extend_from_slice(&inner.dirty);
+        // Recency bumps travel as full (deduplicating) record frames; the
+        // next compaction folds them and keeps the newest touch.
+        for key in &inner.touched {
+            if let Some(sr) = inner.entries.get(key) {
+                encode_record_bin_into(key, &sr.outcome, sr.touch, &mut buf);
+            }
+        }
+        let writer = inner.writer.as_mut().expect("writer just created");
+        writer
+            .file
+            .write_all(&buf)
+            .map_err(|e| format!("store: append failed: {e}"))?;
+        writer
+            .file
+            .flush()
+            .map_err(|e| format!("store: flush failed: {e}"))?;
+        inner.dirty.clear();
+        inner.dirty_count = 0;
+        inner.touched.clear();
+        Ok(())
+    }
+}
+
+impl StoreBackend for FileBackend {
+    fn get(&self, key: &StoreKey) -> Option<RepOutcome> {
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        match inner.entries.get_mut(key) {
+            Some(sr) => {
+                inner.clock += 1;
+                sr.touch = inner.clock;
+                if self.cap.is_some() {
+                    inner.touched.insert(*key);
+                }
+                Some(sr.outcome)
+            }
+            None => None,
+        }
+    }
+
+    fn lookup(&self, key: &StoreKey) -> Option<RepOutcome> {
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        inner.entries.get(key).map(|sr| sr.outcome)
+    }
+
+    fn put(&self, key: StoreKey, outcome: RepOutcome) -> bool {
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        inner.clock += 1;
+        let clock = inner.clock;
+        let known = match inner.entries.get_mut(&key) {
+            Some(old)
+                if old.outcome.same_bits(&outcome)
+                    || (old.outcome.cpu_s.is_some()
+                        && outcome.cpu_s.is_none()) =>
+            {
+                // Re-putting a known value is a use: recency only.
+                old.touch = clock;
+                if self.cap.is_some() {
+                    inner.touched.insert(key);
+                }
+                true
+            }
+            _ => false,
+        };
+        if !known {
+            inner.entries.insert(key, StoredRep { outcome, touch: clock });
+            inner.journal.push(key);
+            encode_record_bin_into(&key, &outcome, clock, &mut inner.dirty);
+            inner.dirty_count += 1;
+        }
+        !known
+    }
+
+    fn flush(&self) -> Result<(), String> {
+        let mut state = self.lock_state();
+        // An untouched backend has nothing buffered: flushing must not
+        // force the load (drop flushes every shard of a sharded store,
+        // including the ones this session never looked at).
+        match state.as_mut() {
+            Some(inner) => self.flush_locked(inner),
+            None => Ok(()),
+        }
+    }
+
+    fn generation(&self) -> u64 {
+        let mut state = self.lock_state();
+        self.inner(&mut state).journal.len() as u64
+    }
+
+    fn read_since(
+        &self,
+        generation: u64,
+    ) -> (Vec<(StoreKey, RepOutcome)>, u64) {
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        let from = (generation as usize).min(inner.journal.len());
+        let records = inner.journal[from..]
+            .iter()
+            // A journaled key may have been evicted by a compaction pass
+            // since (never a paper-plane key — those are pinned, and they
+            // are the only keys the trainer tails).
+            .filter_map(|k| {
+                inner.entries.get(k).map(|sr| (*k, sr.outcome))
+            })
+            .collect();
+        (records, inner.journal.len() as u64)
+    }
+
+    fn refresh(&self) -> Result<u64, String> {
+        let fingerprint = dir_fingerprint(&self.dir)?;
+        let changed: Vec<(String, u64)> = {
+            let state = self
+                .refresh_state
+                .lock()
+                .expect("store refresh-state poisoned");
+            fingerprint
+                .iter()
+                .filter(|(name, len)| state.get(name) != Some(len))
+                .cloned()
+                .collect()
+        };
+        if changed.is_empty() {
+            // Still force the initial load: a refresh's promise is that
+            // the view is current afterwards, even for an empty dir.
+            let mut state = self.lock_state();
+            self.inner(&mut state);
+            return Ok(0);
+        }
+        // Re-parse only the changed files, tolerating (and logging)
+        // corruption exactly like the load pass.
+        let mut parsed: HashMap<StoreKey, StoredRep> = HashMap::new();
+        let mut stats = StoreStats::default();
+        let mut ingested: Vec<(String, u64)> = Vec::new();
+        for (name, len) in changed {
+            let path = self.dir.join(&name);
+            match fs::read(&path) {
+                Ok(bytes) => {
+                    let _ =
+                        ingest_bytes(&path, &bytes, &mut parsed, &mut stats);
+                    ingested.push((name, len));
+                }
+                // Deleted mid-refresh (racing compaction): its records
+                // are in the rewritten index, whose length changed too.
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => eprintln!(
+                    "store: refresh skipping unreadable {}: {e}",
+                    path.display()
+                ),
+            }
+        }
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        let mut fresh: Vec<(StoreKey, StoredRep)> = Vec::new();
+        for (key, sr) in parsed {
+            inner.clock = inner.clock.max(sr.touch);
+            match inner.entries.get_mut(&key) {
+                Some(old) => {
+                    // Another session used this record: keep the newest
+                    // recency, but never downgrade a full outcome.
+                    old.touch = old.touch.max(sr.touch);
+                    if old.outcome.cpu_s.is_none()
+                        && sr.outcome.cpu_s.is_some()
+                    {
+                        fresh.push((
+                            key,
+                            StoredRep {
+                                outcome: sr.outcome,
+                                touch: old.touch,
+                            },
+                        ));
+                    }
+                }
+                None => fresh.push((key, sr)),
+            }
+        }
+        // Sort so concurrent writers' records land in the journal in a
+        // deterministic order whatever the directory scan produced.
+        fresh.sort_by(|a, b| a.0.cmp(&b.0));
+        let new_records = fresh.len() as u64;
+        for (key, sr) in fresh {
+            inner.entries.insert(key, sr);
+            inner.journal.push(key);
+        }
+        drop(state);
+        let mut state = self
+            .refresh_state
+            .lock()
+            .expect("store refresh-state poisoned");
+        // Forget files compaction removed, so the map stays bounded by
+        // the live file set ...
+        state.retain(|name, _| fingerprint.iter().any(|(n, _)| n == name));
+        // ... and record the pre-read lengths of what was ingested (a
+        // write landing mid-read makes the next poll re-read that file —
+        // the safe direction).
+        for (name, len) in ingested {
+            state.insert(name, len);
+        }
+        Ok(new_records)
+    }
+
+    /// One guarded compaction pass: flush, re-scan the directory, evict
+    /// to the cap, rewrite the index atomically, delete merged
+    /// segments.  Holds the in-memory state lock throughout, so readers
+    /// of **this shard** wait while it compacts — that is exactly the
+    /// stop-the-world cost the sharded facade amortizes by compacting
+    /// one shard at a time off the open path.
+    fn compact(&self) -> Result<StoreStats, String> {
+        if !self.compact_allowed {
+            return Ok(StoreStats::default());
+        }
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        self.flush_locked(inner)?;
+        let Some(_guard) = CompactGuard::acquire(&self.dir) else {
+            eprintln!(
+                "store: compaction lock busy for {}; skipping pass",
+                self.dir.display()
+            );
+            return Ok(StoreStats::default());
+        };
+        // Everything resident is now on disk (our own records in our
+        // locked segment), so a fresh scan under the lock is the
+        // authoritative write set — using it, rather than memory, keeps
+        // another session's evictions durable (no resurrection).
+        let mut scan = scan_dir(&self.dir)?;
+        let mut pass = scan.stats;
+        let over_cap =
+            self.cap.is_some_and(|cap| index_bytes(&scan.entries) > cap);
+        if scan.mergeable.is_empty() && !scan.legacy_index && !over_cap {
+            return Ok(pass); // nothing to do
+        }
+        if scan.index_unreadable {
+            // Rewriting the index now would replace the (unreadable but
+            // possibly recoverable) old index with segment data only.
+            // Leave everything in place for manual recovery.
+            eprintln!(
+                "store: index unreadable; compaction disabled to avoid \
+                 data loss"
+            );
+            return Ok(pass);
+        }
+        let evicted = match self.cap {
+            Some(cap) => evict_to_cap(&mut scan.entries, cap),
+            None => Vec::new(),
+        };
+        write_index(&self.dir, &scan.entries)?;
+        for p in &scan.mergeable {
+            // Best-effort; also reclaim a dead writer's leftover lock so
+            // it stops shadowing opens.
+            let _ = fs::remove_file(p);
+            let _ = fs::remove_file(lock_path(p));
+        }
+        // The legacy index is folded into the binary one; drop it so it
+        // cannot resurrect records.
+        let _ = fs::remove_file(self.dir.join(LEGACY_INDEX_FILE));
+        pass.compacted = true;
+        pass.merged_segments = scan.mergeable.len();
+        pass.evicted = evicted.len();
+        if !evicted.is_empty() {
+            eprintln!(
+                "store: size cap: evicted {} least-recently-used record(s) \
+                 from {}",
+                evicted.len(),
+                self.dir.display()
+            );
+        }
+        // Reconcile memory with the compacted view: drop what eviction
+        // removed, fold in (and journal) records other sessions flushed
+        // that the scan surfaced.
+        for (key, _) in &evicted {
+            inner.entries.remove(key);
+        }
+        let mut fresh: Vec<StoreKey> = Vec::new();
+        for (key, sr) in scan.entries {
+            let known = inner.entries.contains_key(&key);
+            inner.clock = inner.clock.max(sr.touch);
+            fold_entry(&mut inner.entries, key, sr);
+            if !known {
+                fresh.push(key);
+            }
+        }
+        fresh.sort();
+        inner.journal.extend(fresh.iter().copied());
+        inner.stats.merged_segments += pass.merged_segments;
+        inner.stats.evicted += pass.evicted;
+        inner.stats.compacted = true;
+        pass.entries = inner.entries.len();
+        Ok(pass)
+    }
+
+    fn stats(&self) -> StoreStats {
+        let mut state = self.lock_state();
+        let inner = self.inner(&mut state);
+        let mut s = inner.stats;
+        s.entries = inner.entries.len();
+        s.bytes = index_bytes(&inner.entries);
+        s.pending = inner.dirty_count;
+        s
+    }
+
+    fn len(&self) -> usize {
+        let mut state = self.lock_state();
+        self.inner(&mut state).entries.len()
+    }
+
+    fn pending(&self) -> usize {
+        // An unloaded shard has buffered nothing; don't force the load.
+        self.lock_state().as_ref().map_or(0, |inner| inner.dirty_count)
+    }
+}
+
+impl Drop for FileBackend {
+    fn drop(&mut self) {
+        if let Err(e) = self.flush() {
+            eprintln!("store: flush on drop failed: {e}");
+        }
+        // Dropping `state` drops the SegmentWriter, releasing its lock.
+    }
+}
+
+// --------------------------------------------------- directory scanning
+
+/// Everything one pass over a store directory learns.
+pub(crate) struct Scan {
+    pub(crate) entries: HashMap<StoreKey, StoredRep>,
+    /// Segments safe to fold into the index and delete: readable, not
+    /// held by a live writer, and free of newer-version records (legacy
+    /// JSONL segments *are* mergeable — migration rewrites them as v3).
+    pub(crate) mergeable: Vec<PathBuf>,
+    pub(crate) stats: StoreStats,
+    /// The index existed but could not be read (or belongs to a newer
+    /// build) — compaction must not rewrite it from segment data alone.
+    pub(crate) index_unreadable: bool,
+    /// A readable legacy JSONL index is present: compaction should run
+    /// even with no segments to fold, so the index is rewritten as v3.
+    pub(crate) legacy_index: bool,
+}
+
+impl Scan {
+    fn empty() -> Scan {
+        Scan {
+            entries: HashMap::new(),
+            mergeable: Vec::new(),
+            stats: StoreStats::default(),
+            index_unreadable: false,
+            legacy_index: false,
+        }
+    }
+}
+
+/// Read the index and every segment under `dir` into memory, tolerating
+/// (and tallying) corruption.  A missing directory is an empty store.
+/// Load order is deterministic (legacy index, binary index, then
+/// segments in sorted name order), and by determinism of the simulator
+/// any duplicate keys carry equal values, so later-wins is harmless —
+/// with one exception handled in [`fold_entry`]: a CPU-less
+/// (v1-migrated) duplicate never displaces a full outcome, whatever the
+/// load order.  Duplicate touches resolve to the maximum (newest use).
+pub(crate) fn scan_dir(dir: &Path) -> Result<Scan, String> {
+    let mut scan = Scan::empty();
+    if !dir.exists() {
+        return Ok(scan);
+    }
+    for (name, legacy) in [(LEGACY_INDEX_FILE, true), (INDEX_FILE, false)] {
+        let path = dir.join(name);
+        match fs::read(&path) {
+            Ok(bytes) => {
+                let stale_before = scan.stats.stale_lines;
+                let ok = ingest_bytes(
+                    &path,
+                    &bytes,
+                    &mut scan.entries,
+                    &mut scan.stats,
+                );
+                if !ok || scan.stats.stale_lines != stale_before {
+                    // Unreadable, or written by a newer build: either way
+                    // this open does not know the index's full contents.
+                    scan.index_unreadable = true;
+                } else if legacy {
+                    scan.legacy_index = true;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                scan.stats.corrupt_segments += 1;
+                scan.index_unreadable = true;
+                eprintln!(
+                    "store: skipping unreadable index {}: {e}",
+                    path.display()
+                );
+            }
+        }
+    }
+
+    for path in segment_paths(dir)? {
+        scan.stats.segments_seen += 1;
+        let locked = segment_is_locked(&path);
+        match fs::read(&path) {
+            Ok(bytes) => {
+                let stale_before = scan.stats.stale_lines;
+                let readable = ingest_bytes(
+                    &path,
+                    &bytes,
+                    &mut scan.entries,
+                    &mut scan.stats,
+                );
+                // A locked segment is still being written; one with
+                // newer-version content belongs to another build.  Both
+                // are merged-from but never deleted.
+                if readable
+                    && !locked
+                    && scan.stats.stale_lines == stale_before
+                {
+                    scan.mergeable.push(path);
+                }
+            }
+            // Raced with another process's compaction: the segment's
+            // records are in the index that pass wrote.  Not corruption.
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => {
+                scan.stats.corrupt_segments += 1;
+                eprintln!(
+                    "store: skipping unreadable segment {}: {e}",
+                    path.display()
+                );
+            }
+        }
+    }
+    Ok(scan)
+}
+
+/// Fold one decoded record into the in-memory map: later wins, except a
+/// CPU-less outcome never displaces a full one, and the touch resolves
+/// to the newest (maximum) generation either side has seen.
+pub(crate) fn fold_entry(
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    key: StoreKey,
+    rep: StoredRep,
+) {
+    match entries.get_mut(&key) {
+        Some(old) => {
+            old.touch = old.touch.max(rep.touch);
+            if !(old.outcome.cpu_s.is_some() && rep.outcome.cpu_s.is_none()) {
+                old.outcome = rep.outcome;
+            }
+        }
+        None => {
+            entries.insert(key, rep);
+        }
+    }
+}
+
+/// Fold one store file's bytes into `entries`, dispatching on format:
+/// binary v3 (`MRTS` magic) or legacy JSONL.  Returns `false` when the
+/// file as a whole could not be used (not UTF-8 JSONL, torn binary
+/// header, or a newer binary version) — such files are never merged.
+pub(crate) fn ingest_bytes(
+    path: &Path,
+    bytes: &[u8],
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    stats: &mut StoreStats,
+) -> bool {
+    if bytes.is_empty() {
+        return true;
+    }
+    if bytes.len() >= 4 && bytes[..4] == BIN_MAGIC {
+        if bytes.len() < BIN_HEADER_LEN {
+            // Torn header write: no records to recover.
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated binary header in {}",
+                path.display()
+            );
+            return true;
+        }
+        let ver = u32::from_le_bytes(
+            bytes[4..BIN_HEADER_LEN].try_into().expect("4 bytes"),
+        );
+        if !(3..=STORE_FORMAT_VERSION).contains(&ver) {
+            // A whole file of a newer build: skip and preserve.
+            stats.stale_lines += 1;
+            return true;
+        }
+        load_bin_records(path, bytes, entries, stats);
+        true
+    } else {
+        match std::str::from_utf8(bytes) {
+            Ok(text) => {
+                load_lines(path, text, entries, stats);
+                true
+            }
+            Err(_) => {
+                stats.corrupt_segments += 1;
+                eprintln!(
+                    "store: skipping non-UTF-8, non-binary file {}",
+                    path.display()
+                );
+                false
+            }
+        }
+    }
+}
+
+/// Walk the framed records of a binary store file (header already
+/// validated), tolerating corruption: a garbled payload of plausible
+/// length is skipped record-by-record; a torn length prefix ends the
+/// file (nothing after it can be re-synchronized).
+fn load_bin_records(
+    path: &Path,
+    bytes: &[u8],
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    stats: &mut StoreStats,
+) {
+    let mut i = BIN_HEADER_LEN;
+    let mut first_bad = true;
+    while i < bytes.len() {
+        let Some(prefix) = bytes.get(i..i + 4) else {
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated record tail in {}",
+                path.display()
+            );
+            return;
+        };
+        let len =
+            u32::from_le_bytes(prefix.try_into().expect("4 bytes")) as usize;
+        if len == 0
+            || len > super::codec::MAX_RECORD_LEN
+            || i + 4 + len > bytes.len()
+        {
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated/garbled record tail in {}",
+                path.display()
+            );
+            return;
+        }
+        match decode_payload(&bytes[i + 4..i + 4 + len]) {
+            Ok((key, outcome, touch)) => {
+                fold_entry(entries, key, StoredRep { outcome, touch });
+            }
+            Err(e) => {
+                stats.corrupt_lines += 1;
+                if first_bad {
+                    first_bad = false;
+                    eprintln!(
+                        "store: skipping corrupt record(s) in {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
+        i += 4 + len;
+    }
+}
+
+/// Fold every decodable JSONL line of `text` into `entries`, tallying
+/// skips and migrations.  Duplicate-key resolution is [`fold_entry`]'s.
+fn load_lines(
+    path: &Path,
+    text: &str,
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    stats: &mut StoreStats,
+) {
+    let mut first_bad = true;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match decode_record(line) {
+            Ok((key, outcome, ver)) => {
+                if ver < STORE_FORMAT_VERSION {
+                    stats.migrated_lines += 1;
+                }
+                // JSONL predates touch tracking: migrated records start
+                // at generation 0, i.e. coldest — first out under a cap.
+                fold_entry(entries, key, StoredRep { outcome, touch: 0 });
+            }
+            Err(RecordError::StaleVersion(_)) => stats.stale_lines += 1,
+            Err(RecordError::Corrupt(e)) => {
+                stats.corrupt_lines += 1;
+                if first_bad {
+                    first_bad = false;
+                    eprintln!(
+                        "store: skipping corrupt line(s) in {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
+    }
+}
+
+// --------------------------------------------- locks, paths, compaction
+
+/// Liveness-lock path for a segment file (`<segment>.lock`).
+pub(crate) fn lock_path(segment: &Path) -> PathBuf {
+    let name = segment
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_default();
+    segment.with_file_name(format!("{name}.lock"))
+}
+
+/// Whether `segment` is held by a **live** writer.  Lock files carry the
+/// writer's pid; a lock whose process is gone (crashed writer) no longer
+/// protects the segment, so compaction can reclaim it.  An empty or
+/// garbled lock is treated as live — it may be mid-creation.
+pub(crate) fn segment_is_locked(segment: &Path) -> bool {
+    let lock = lock_path(segment);
+    match fs::read_to_string(&lock) {
+        Err(_) if !lock.exists() => false,
+        Err(_) => true, // unreadable lock: assume live
+        Ok(text) => match text.trim().parse::<u32>() {
+            Ok(pid) => pid_alive(pid),
+            Err(_) => true, // pid not written yet: assume live
+        },
+    }
+}
+
+/// Stores are per-machine (the lock protocol relies on a shared pid
+/// namespace), so /proc is authoritative on Linux; elsewhere be
+/// conservative and treat every lock holder as alive.
+#[cfg(target_os = "linux")]
+pub(crate) fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn pid_alive(_pid: u32) -> bool {
+    true
+}
+
+/// Whether `name` is a store data file (index or segment, either format).
+pub(crate) fn is_store_file(name: &str) -> bool {
+    name == INDEX_FILE
+        || name == LEGACY_INDEX_FILE
+        || (name.starts_with(SEGMENT_PREFIX)
+            && (name.ends_with(SEGMENT_SUFFIX)
+                || name.ends_with(LEGACY_SEGMENT_SUFFIX)))
+}
+
+/// `(name, length)` of every store file (index + segments) under `dir`,
+/// sorted by name — the cheap change detector behind refresh.  Segments
+/// are append-only and compaction replaces whole files, so any new
+/// record changes some file's length (or the file set).  A missing
+/// directory fingerprints as empty.
+fn dir_fingerprint(dir: &Path) -> Result<Vec<(String, u64)>, String> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => return Err(format!("store: read {}: {e}", dir.display())),
+    };
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if !is_store_file(&name) {
+            continue;
+        }
+        // A file deleted mid-scan (racing compaction) counts as length 0;
+        // the next pass sees the final state.
+        let len = entry.metadata().map(|m| m.len()).unwrap_or(0);
+        out.push((name, len));
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// All segment files under `dir` (binary and legacy), sorted by name.
+/// A missing directory holds none.
+fn segment_paths(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(Vec::new())
+        }
+        Err(e) => return Err(format!("store: read {}: {e}", dir.display())),
+    };
+    let mut out = Vec::new();
+    for entry in rd {
+        let entry = entry.map_err(|e| format!("store: read dir entry: {e}"))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if name.starts_with(SEGMENT_PREFIX)
+            && (name.ends_with(SEGMENT_SUFFIX)
+                || name.ends_with(LEGACY_SEGMENT_SUFFIX))
+        {
+            out.push(entry.path());
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Exact byte size of the binary index [`write_index`] would produce.
+pub(crate) fn index_bytes(entries: &HashMap<StoreKey, StoredRep>) -> u64 {
+    BIN_HEADER_LEN as u64
+        + entries
+            .iter()
+            .map(|(k, sr)| frame_len(k, &sr.outcome) as u64)
+            .sum::<u64>()
+}
+
+/// Drop least-recently-used records until the index fits `cap` bytes,
+/// returning what was removed (so a failed index rewrite can restore
+/// them).  Paper-plane repetitions are pinned — they are the online
+/// trainer's training data ([`crate::coordinator::Trainer`] tails
+/// exactly those keys) and must never vanish between two of its polls.
+/// Eviction order is deterministic: ascending `(touch, key)`.  When
+/// pinned records alone exceed the cap, everything unpinned goes and
+/// the overshoot is kept (with a warning) rather than dropping
+/// training data.
+pub(crate) fn evict_to_cap(
+    entries: &mut HashMap<StoreKey, StoredRep>,
+    cap: u64,
+) -> Vec<(StoreKey, StoredRep)> {
+    let mut total = index_bytes(entries);
+    if total <= cap {
+        return Vec::new();
+    }
+    let mut candidates: Vec<(u64, StoreKey)> = entries
+        .iter()
+        .filter(|(k, _)| !k.is_paper_plane())
+        .map(|(k, sr)| (sr.touch, *k))
+        .collect();
+    candidates.sort();
+    let mut evicted = Vec::new();
+    for (_, key) in candidates {
+        if total <= cap {
+            break;
+        }
+        if let Some(sr) = entries.remove(&key) {
+            total -= frame_len(&key, &sr.outcome) as u64;
+            evicted.push((key, sr));
+        }
+    }
+    if total > cap {
+        eprintln!(
+            "store: size cap {cap} B is below the pinned paper-plane \
+             records ({total} B); keeping them anyway"
+        );
+    }
+    evicted
+}
+
+/// Rewrite the index from `entries` as binary v3 via write-to-temp +
+/// atomic rename.  Must only be called while holding the
+/// [`CompactGuard`].
+fn write_index(
+    dir: &Path,
+    entries: &HashMap<StoreKey, StoredRep>,
+) -> Result<(), String> {
+    // Key-sorted records make the index byte-deterministic: compacting an
+    // already-compact store rewrites the identical file (idempotence).
+    let mut records: Vec<(&StoreKey, &StoredRep)> = entries.iter().collect();
+    records.sort_by(|a, b| a.0.cmp(b.0));
+    let mut body =
+        Vec::with_capacity(BIN_HEADER_LEN + records.len() * 96);
+    body.extend_from_slice(&bin_header());
+    for (key, sr) in records {
+        encode_record_bin_into(key, &sr.outcome, sr.touch, &mut body);
+    }
+    let tmp = dir.join(format!("{INDEX_FILE}.tmp-{}", std::process::id()));
+    fs::write(&tmp, &body)
+        .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    fs::rename(&tmp, dir.join(INDEX_FILE))
+        .map_err(|e| format!("rename {}: {e}", tmp.display()))
+}
+
+/// Delete every store file directly under `dir` (index, segments, locks,
+/// leftover temp files — binary and legacy JSONL alike).  Returns how
+/// many files were removed; a missing directory is an empty store, not
+/// an error.  Shard subdirectories are the facade's to clear.
+pub(crate) fn clear_dir_files(dir: &Path) -> Result<usize, String> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+        Err(e) => return Err(format!("store: read {}: {e}", dir.display())),
+    };
+    let mut removed = 0;
+    for entry in rd {
+        let entry =
+            entry.map_err(|e| format!("store: read dir entry: {e}"))?;
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let ours = name == INDEX_FILE
+            || name == LEGACY_INDEX_FILE
+            || name == COMPACT_LOCK
+            || name.starts_with(&format!("{INDEX_FILE}.tmp-"))
+            || name.starts_with(&format!("{LEGACY_INDEX_FILE}.tmp-"))
+            || (name.starts_with(SEGMENT_PREFIX)
+                && (name.ends_with(SEGMENT_SUFFIX)
+                    || name.ends_with(LEGACY_SEGMENT_SUFFIX)
+                    || name.ends_with(&format!("{SEGMENT_SUFFIX}.lock"))
+                    || name.ends_with(&format!(
+                        "{LEGACY_SEGMENT_SUFFIX}.lock"
+                    ))));
+        if ours {
+            fs::remove_file(entry.path())
+                .map_err(|e| format!("store: remove {name}: {e}"))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+/// Holds `compact.lock` for the duration of one scan-and-rewrite pass.
+pub(crate) struct CompactGuard {
+    path: PathBuf,
+}
+
+impl CompactGuard {
+    pub(crate) fn acquire(dir: &Path) -> Option<CompactGuard> {
+        let path = dir.join(COMPACT_LOCK);
+        for attempt in 0..2 {
+            match OpenOptions::new().write(true).create_new(true).open(&path)
+            {
+                Ok(mut f) => {
+                    let _ = writeln!(f, "{}", std::process::id());
+                    return Some(CompactGuard { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    // A crashed compactor must not disable compaction
+                    // forever: reclaim locks far older than any real
+                    // pass and retry once.
+                    if attempt == 0 && compact_lock_is_stale(&path) {
+                        eprintln!(
+                            "store: reclaiming stale {}",
+                            path.display()
+                        );
+                        let _ = fs::remove_file(&path);
+                        continue;
+                    }
+                    return None;
+                }
+                Err(_) => return None,
+            }
+        }
+        None
+    }
+}
+
+fn compact_lock_is_stale(path: &Path) -> bool {
+    fs::metadata(path)
+        .and_then(|m| m.modified())
+        .ok()
+        .and_then(|t| t.elapsed().ok())
+        .map(|age| age > STALE_COMPACT_LOCK)
+        .unwrap_or(false)
+}
+
+impl Drop for CompactGuard {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppId;
+    use crate::util::json::Json;
+
+    fn key(m: u32, r: u32, rep: u32, seed: u64) -> StoreKey {
+        StoreKey {
+            cluster: 0xDEAD_BEEF_0BAD_F00D,
+            app: AppId::WordCount,
+            num_mappers: m,
+            num_reducers: r,
+            input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+            block_mb: StoreKey::PAPER_BLOCK_MB,
+            rep,
+            base_seed: seed,
+        }
+    }
+
+    /// A record line exactly as the v1 (PR 2) store wrote it.
+    fn v1_line(k: &StoreKey, time_s: f64) -> String {
+        Json::obj(vec![
+            ("v", Json::Num(1.0)),
+            ("cluster", Json::Str(hex_u64(k.cluster))),
+            ("app", Json::Str(k.app.name().to_string())),
+            ("m", Json::Num(k.num_mappers as f64)),
+            ("r", Json::Num(k.num_reducers as f64)),
+            ("rep", Json::Num(k.rep as f64)),
+            ("seed", Json::Str(hex_u64(k.base_seed))),
+            ("bits", Json::Str(hex_u64(time_s.to_bits()))),
+            ("t", Json::Num(time_s)),
+        ])
+        .to_string()
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mrtuner_filebackend_unit_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn lazy_backend_loads_on_first_access_only() {
+        let dir = tmp_dir("lazy");
+        {
+            let b = FileBackend::new(&dir, None, true);
+            assert!(b.put(key(20, 5, 0, 1), RepOutcome::full(10.0, 1.0)));
+            b.flush().unwrap();
+        }
+        // Construction alone must not create, read, or lock anything.
+        let b = FileBackend::new(&dir, None, true);
+        assert!(b.state.lock().unwrap().is_none(), "no load yet");
+        assert_eq!(
+            b.get(&key(20, 5, 0, 1)),
+            Some(RepOutcome::full(10.0, 1.0)),
+            "first access loads"
+        );
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn put_returns_whether_journaled() {
+        let dir = tmp_dir("putbool");
+        let b = FileBackend::new(&dir, None, true);
+        let k = key(5, 5, 0, 7);
+        assert!(b.put(k, RepOutcome::full(3.5, 0.5)), "new key journaled");
+        assert!(
+            !b.put(k, RepOutcome::full(3.5, 0.5)),
+            "identical value is recency only"
+        );
+        assert!(
+            !b.put(k, RepOutcome::time_only(3.5)),
+            "downgrade never journaled"
+        );
+        let k2 = key(6, 6, 0, 7);
+        assert!(b.put(k2, RepOutcome::time_only(9.0)));
+        assert!(
+            b.put(k2, RepOutcome::full(9.0, 1.0)),
+            "CPU upgrade re-journaled"
+        );
+        assert_eq!(b.generation(), 3);
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn v1_segment_survives_compaction_and_answers_v3_lookup() {
+        let dir = tmp_dir("migrate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key(20, 5, 0, 7);
+        std::fs::write(
+            dir.join("seg-cafe0000-0000-legacy.jsonl"),
+            format!(
+                "{}\n{}\n",
+                v1_line(&k, 100.5),
+                v1_line(&key(20, 5, 1, 7), 101.5)
+            ),
+        )
+        .unwrap();
+        {
+            let b = FileBackend::open_eager(&dir, None).unwrap();
+            let st = b.stats();
+            assert_eq!(st.migrated_lines, 2);
+            assert_eq!(
+                st.merged_segments, 1,
+                "v1 segment folded, not orphaned"
+            );
+            assert_eq!(st.stale_lines, 0);
+            assert_eq!(b.get(&k), Some(RepOutcome::time_only(100.5)));
+        }
+        // The rewritten index is pure v3 binary and still answers after
+        // reopen.
+        let recs =
+            super::super::read_file_records(&dir.join(INDEX_FILE)).unwrap();
+        assert_eq!(recs.len(), 2);
+        assert!(recs.iter().all(|(_, _, v)| *v == STORE_FORMAT_VERSION));
+        assert!(!dir.join(LEGACY_INDEX_FILE).exists());
+        let b = FileBackend::open_eager(&dir, None).unwrap();
+        assert_eq!(b.stats().migrated_lines, 0, "migration is one-time");
+        assert_eq!(b.get(&k), Some(RepOutcome::time_only(100.5)));
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_jsonl_index_is_rewritten_as_binary() {
+        let dir = tmp_dir("legacy_index");
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key(10, 10, 0, 3);
+        std::fs::write(
+            dir.join(LEGACY_INDEX_FILE),
+            format!(
+                "{}\n",
+                super::super::encode_record(&k, &RepOutcome::full(5.0, 1.0))
+            ),
+        )
+        .unwrap();
+        {
+            // No segments at all — the legacy index alone triggers the
+            // upgrade compaction.
+            let b = FileBackend::new(&dir, None, true);
+            assert!(b.needs_compaction(), "legacy index wants a rewrite");
+            let pass = b.compact().unwrap();
+            assert!(pass.compacted);
+            assert_eq!(b.get(&k), Some(RepOutcome::full(5.0, 1.0)));
+        }
+        assert!(dir.join(INDEX_FILE).exists());
+        assert!(!dir.join(LEGACY_INDEX_FILE).exists());
+        let b = FileBackend::new(&dir, None, true);
+        assert!(!b.needs_compaction(), "already compact");
+        assert_eq!(b.get(&k), Some(RepOutcome::full(5.0, 1.0)));
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_binary_file_is_preserved_not_merged() {
+        let dir = tmp_dir("stale_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        // A segment written by a hypothetical v4 build.
+        let mut future = Vec::new();
+        future.extend_from_slice(&BIN_MAGIC);
+        future.extend_from_slice(&4u32.to_le_bytes());
+        future.extend_from_slice(&[1, 2, 3, 4]);
+        let seg = dir.join("seg-feed0000-0000-future.bin");
+        std::fs::write(&seg, &future).unwrap();
+        let b = FileBackend::open_eager(&dir, None).unwrap();
+        let st = b.stats();
+        assert_eq!(st.stale_lines, 1, "future file counted as stale");
+        assert_eq!(st.corrupt_lines, 0);
+        assert!(seg.exists(), "preserved for the build that understands it");
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn full_outcome_beats_migrated_duplicate_in_any_load_order() {
+        let k = key(10, 10, 0, 1);
+        let full = RepOutcome::full(55.0, 44.0);
+        for lines in [
+            // v1-migrated first, upgrade second ...
+            format!(
+                "{}\n{}\n",
+                v1_line(&k, 55.0),
+                super::super::encode_record(&k, &full)
+            ),
+            // ... and the reverse: the full outcome must win either way.
+            format!(
+                "{}\n{}\n",
+                super::super::encode_record(&k, &full),
+                v1_line(&k, 55.0)
+            ),
+        ] {
+            let mut entries = HashMap::new();
+            let mut stats = StoreStats::default();
+            load_lines(Path::new("test"), &lines, &mut entries, &mut stats);
+            assert_eq!(
+                stats.migrated_lines, 2,
+                "v1 and v2 lines both migrate"
+            );
+            assert_eq!(entries.get(&k).map(|sr| sr.outcome), Some(full));
+        }
+    }
+
+    #[test]
+    fn read_since_skips_evicted_keys() {
+        let dir = tmp_dir("evict_journal");
+        // A capped backend small enough that filler must go.
+        let b = FileBackend::new(&dir, Some(600), true);
+        // Pinned paper-plane records plus off-plane filler.
+        for rep in 0..3 {
+            b.put(key(20, 5, rep, 1), RepOutcome::full(100.0 + rep as f64, 1.0));
+        }
+        for i in 0..20u32 {
+            b.put(
+                StoreKey {
+                    cluster: 1,
+                    app: AppId::WordCount,
+                    num_mappers: 5 + i,
+                    num_reducers: 7,
+                    input_gb_bits: 2.0f64.to_bits(),
+                    block_mb: 128,
+                    rep: 0,
+                    base_seed: 2,
+                },
+                RepOutcome::full(10.0 + i as f64, 0.5),
+            );
+        }
+        let g = b.generation();
+        assert_eq!(g, 23);
+        let pass = b.compact().unwrap();
+        assert!(pass.evicted > 0, "cap forced eviction: {pass}");
+        // The journal still spans 23 keys, but evicted ones no longer
+        // resolve — read_since serves only the resident records.
+        let (records, g2) = b.read_since(0);
+        assert_eq!(g2, 23);
+        assert_eq!(records.len(), 23 - pass.evicted);
+        assert!(records.iter().filter(|(k, _)| k.is_paper_plane()).count() == 3);
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_is_noop_without_permission_or_work() {
+        let dir = tmp_dir("noop");
+        let b = FileBackend::new(&dir, None, false);
+        b.put(key(5, 5, 0, 1), RepOutcome::full(1.0, 0.1));
+        b.flush().unwrap();
+        assert!(!b.needs_compaction());
+        let pass = b.compact().unwrap();
+        assert!(!pass.compacted, "inspection sessions never compact");
+        assert!(!dir.join(INDEX_FILE).exists());
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

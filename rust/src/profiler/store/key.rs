@@ -1,0 +1,63 @@
+//! The persistent identity of one simulated repetition.
+
+use crate::apps::AppId;
+
+/// Identity of one simulated repetition — the executor's cache key made
+/// persistent.  The cluster fingerprint keeps times from one hardware
+/// model from ever answering for another; `base_seed` keys the profiling
+/// session so distinct sessions never alias.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct StoreKey {
+    /// Fingerprint of every simulation-relevant cluster field.
+    pub cluster: u64,
+    /// Application profiled.
+    pub app: AppId,
+    /// Number of map tasks (the paper's first parameter).
+    pub num_mappers: u32,
+    /// Number of reduce tasks (the paper's second parameter).
+    pub num_reducers: u32,
+    /// Input size in GB — the extended sweep's third parameter — as raw
+    /// `f64` bits (`f64` has no `Eq`/`Hash`; bits keep the key exact).
+    /// The paper's own setup is [`StoreKey::PAPER_INPUT_GB`].
+    pub input_gb_bits: u64,
+    /// HDFS block size in MB — the extended sweep's fourth parameter.
+    /// The paper's own setup is [`StoreKey::PAPER_BLOCK_MB`].
+    pub block_mb: u32,
+    /// Repetition index within the profiling session.
+    pub rep: u32,
+    /// Profiling-session seed.
+    pub base_seed: u64,
+}
+
+impl StoreKey {
+    /// Input size of the paper's testbed (`JobConfig::paper_default`) —
+    /// where 2-parameter keys, and migrated v1 records, live in the 4-D
+    /// parameter space.
+    pub const PAPER_INPUT_GB: f64 = 8.0;
+    /// HDFS block size of the paper's testbed.
+    pub const PAPER_BLOCK_MB: u32 = 64;
+
+    /// Input size in GB.
+    pub fn input_gb(&self) -> f64 {
+        f64::from_bits(self.input_gb_bits)
+    }
+
+    /// Whether this key lies on the **paper plane** (paper-default input
+    /// and block size).  Paper-plane repetitions feed the online trainer
+    /// ([`crate::coordinator::Trainer`]) and are therefore *pinned*:
+    /// size-capped eviction never drops them.
+    pub fn is_paper_plane(&self) -> bool {
+        self.input_gb_bits == StoreKey::PAPER_INPUT_GB.to_bits()
+            && self.block_mb == StoreKey::PAPER_BLOCK_MB
+    }
+}
+
+/// Why a record line failed to decode.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecordError {
+    /// The line is a record of a store-format version this build cannot
+    /// read (newer than [`super::STORE_FORMAT_VERSION`], or 0/garbage).
+    StaleVersion(u64),
+    /// The line is not a valid record at all (truncated write, garbage).
+    Corrupt(String),
+}

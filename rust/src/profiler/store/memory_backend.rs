@@ -1,0 +1,266 @@
+//! A [`StoreBackend`] with no disk underneath.
+//!
+//! Everything lives in one mutex-guarded map: `flush` is a no-op,
+//! `refresh` never finds other sessions' records (there is no shared
+//! medium), and `compact` only enforces the size cap.  Two uses: fast
+//! store-suite tests that exercise the trait contract without touching
+//! the filesystem, and ephemeral campaigns (`--store-mem`) that want
+//! read-through/write-back semantics without leaving files behind.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, MutexGuard};
+
+use super::file_backend::{evict_to_cap, fold_entry, index_bytes, StoredRep};
+use super::key::StoreKey;
+use super::{StoreBackend, StoreStats};
+use crate::mr::RepOutcome;
+
+struct Inner {
+    entries: HashMap<StoreKey, StoredRep>,
+    /// Acceptance-order key log; `journal.len()` is the generation.
+    journal: Vec<StoreKey>,
+    /// Monotonic touch clock driving LRU eviction under a cap.
+    clock: u64,
+    /// Records dropped by capped compaction so far.
+    evicted: usize,
+    compacted: bool,
+}
+
+/// In-memory [`StoreBackend`]: the [`super::FileBackend`] contract —
+/// journal, generation, CPU-upgrade folding, capped LRU eviction with
+/// paper-plane pinning — minus persistence.
+pub struct MemoryBackend {
+    cap: Option<u64>,
+    inner: Mutex<Inner>,
+}
+
+impl MemoryBackend {
+    /// An empty backend with an optional size cap in bytes (enforced by
+    /// [`StoreBackend::compact`] against the records' index-encoded
+    /// size, exactly like the file backend's cap).
+    pub fn new(cap: Option<u64>) -> MemoryBackend {
+        MemoryBackend {
+            cap,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                journal: Vec::new(),
+                clock: 0,
+                evicted: 0,
+                compacted: false,
+            }),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().expect("memory store mutex poisoned")
+    }
+}
+
+impl Default for MemoryBackend {
+    fn default() -> MemoryBackend {
+        MemoryBackend::new(None)
+    }
+}
+
+impl StoreBackend for MemoryBackend {
+    fn get(&self, key: &StoreKey) -> Option<RepOutcome> {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let clock = inner.clock;
+        inner.entries.get_mut(key).map(|sr| {
+            sr.touch = clock;
+            sr.outcome
+        })
+    }
+
+    fn lookup(&self, key: &StoreKey) -> Option<RepOutcome> {
+        self.lock().entries.get(key).map(|sr| sr.outcome)
+    }
+
+    fn put(&self, key: StoreKey, outcome: RepOutcome) -> bool {
+        let mut inner = self.lock();
+        inner.clock += 1;
+        let clock = inner.clock;
+        match inner.entries.get_mut(&key) {
+            Some(old)
+                if old.outcome.same_bits(&outcome)
+                    || (old.outcome.cpu_s.is_some()
+                        && outcome.cpu_s.is_none()) =>
+            {
+                old.touch = clock;
+                false
+            }
+            _ => {
+                inner
+                    .entries
+                    .insert(key, StoredRep { outcome, touch: clock });
+                inner.journal.push(key);
+                true
+            }
+        }
+    }
+
+    fn flush(&self) -> Result<(), String> {
+        Ok(()) // nothing to persist to
+    }
+
+    fn generation(&self) -> u64 {
+        self.lock().journal.len() as u64
+    }
+
+    fn read_since(
+        &self,
+        generation: u64,
+    ) -> (Vec<(StoreKey, RepOutcome)>, u64) {
+        let inner = self.lock();
+        let from = (generation as usize).min(inner.journal.len());
+        let records = inner.journal[from..]
+            .iter()
+            .filter_map(|k| inner.entries.get(k).map(|sr| (*k, sr.outcome)))
+            .collect();
+        (records, inner.journal.len() as u64)
+    }
+
+    fn refresh(&self) -> Result<u64, String> {
+        Ok(0) // no shared medium: there are no other sessions to see
+    }
+
+    fn compact(&self) -> Result<StoreStats, String> {
+        let mut inner = self.lock();
+        let mut pass = StoreStats::default();
+        if let Some(cap) = self.cap {
+            let dropped = evict_to_cap(&mut inner.entries, cap);
+            if !dropped.is_empty() {
+                inner.evicted += dropped.len();
+                inner.compacted = true;
+                pass.evicted = dropped.len();
+                pass.compacted = true;
+            }
+        }
+        pass.entries = inner.entries.len();
+        Ok(pass)
+    }
+
+    fn stats(&self) -> StoreStats {
+        let inner = self.lock();
+        StoreStats {
+            entries: inner.entries.len(),
+            bytes: index_bytes(&inner.entries),
+            evicted: inner.evicted,
+            compacted: inner.compacted,
+            ..StoreStats::default()
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.lock().entries.len()
+    }
+
+    fn pending(&self) -> usize {
+        0 // every record is "persisted" the moment it is put
+    }
+}
+
+/// Fold already-decoded records in (used by tests mirroring the file
+/// backend's preload path).
+impl MemoryBackend {
+    pub(crate) fn preload(&self, records: Vec<(StoreKey, StoredRep)>) {
+        let mut inner = self.lock();
+        let mut fresh: Vec<StoreKey> = Vec::new();
+        for (key, sr) in records {
+            inner.clock = inner.clock.max(sr.touch);
+            let known = inner.entries.contains_key(&key);
+            fold_entry(&mut inner.entries, key, sr);
+            if !known {
+                fresh.push(key);
+            }
+        }
+        fresh.sort();
+        inner.journal.extend(fresh);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppId;
+
+    fn key(m: u32, r: u32, rep: u32) -> StoreKey {
+        StoreKey {
+            cluster: 1,
+            app: AppId::WordCount,
+            num_mappers: m,
+            num_reducers: r,
+            input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+            block_mb: StoreKey::PAPER_BLOCK_MB,
+            rep,
+            base_seed: 9,
+        }
+    }
+
+    #[test]
+    fn memory_backend_honors_journal_and_upgrade_contract() {
+        let b = MemoryBackend::new(None);
+        let k = key(20, 5, 0);
+        assert!(b.put(k, RepOutcome::time_only(10.0)));
+        assert!(!b.put(k, RepOutcome::time_only(10.0)), "recency only");
+        assert!(b.put(k, RepOutcome::full(10.0, 2.0)), "CPU upgrade");
+        assert!(
+            !b.put(k, RepOutcome::time_only(10.0)),
+            "never downgrades"
+        );
+        assert_eq!(b.get(&k), Some(RepOutcome::full(10.0, 2.0)));
+        assert_eq!(b.generation(), 2, "two journaled changes");
+        let (records, g) = b.read_since(0);
+        assert_eq!(g, 2);
+        // Upsert log: the same key appears per journaled change, both
+        // resolving to the current (upgraded) value.
+        assert_eq!(records.len(), 2);
+        assert!(records
+            .iter()
+            .all(|(_, o)| *o == RepOutcome::full(10.0, 2.0)));
+        assert_eq!(b.pending(), 0);
+        b.flush().unwrap();
+        assert_eq!(b.refresh().unwrap(), 0);
+    }
+
+    #[test]
+    fn capped_memory_backend_evicts_lru_but_pins_paper_plane() {
+        let b = MemoryBackend::new(Some(700));
+        for rep in 0..3 {
+            b.put(key(20, 5, rep), RepOutcome::full(50.0, 5.0));
+        }
+        for i in 0..20u32 {
+            // Off-plane filler: evictable.
+            b.put(
+                StoreKey {
+                    cluster: 1,
+                    app: AppId::Grep,
+                    num_mappers: 4 + i,
+                    num_reducers: 2,
+                    input_gb_bits: 2.0f64.to_bits(),
+                    block_mb: 128,
+                    rep: 0,
+                    base_seed: 9,
+                },
+                RepOutcome::full(5.0 + i as f64, 0.5),
+            );
+        }
+        let pass = b.compact().unwrap();
+        assert!(pass.compacted && pass.evicted > 0, "cap enforced: {pass}");
+        let st = b.stats();
+        assert!(st.bytes <= 700, "under cap after compaction: {st}");
+        for rep in 0..3 {
+            assert!(
+                b.lookup(&key(20, 5, rep)).is_some(),
+                "paper-plane rep {rep} pinned"
+            );
+        }
+        let (records, _) = b.read_since(0);
+        assert_eq!(
+            records.len(),
+            b.len(),
+            "read_since skips evicted journal keys"
+        );
+    }
+}

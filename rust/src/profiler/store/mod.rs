@@ -1,0 +1,273 @@
+//! Persistent, versioned, **sharded** on-disk profile store.
+//!
+//! Profiling is the expensive phase of the paper's pipeline — every
+//! setting is simulated repeatedly before regression modeling can begin —
+//! and PR 1's in-memory executor cache only helps within one process.
+//! This store spills that cache to disk so *any* CLI invocation
+//! (`profile`, `fig3`, `fig4`, `table1`, `e2e`, `serve`, scheduler
+//! what-ifs) warm-starts from every prior session on the machine.
+//!
+//! # Module layout
+//!
+//! * [`key`] — [`StoreKey`], the persistent identity of one repetition.
+//! * [`codec`] — the binary v3 record codec plus the legacy JSONL
+//!   (v1/v2) codec it migrates from.
+//! * [`file_backend`] — [`FileBackend`], one store *directory*:
+//!   segments, index, locks, compaction, LRU eviction.  This is the old
+//!   single-directory store, loaded **lazily** (opening is a few file
+//!   stats; the data scan happens on first access).
+//! * [`memory_backend`] — [`MemoryBackend`], the same contract with no
+//!   disk underneath, for fast tests and ephemeral campaigns.
+//! * [`sharded`] — [`ProfileStore`], the public facade: routes every
+//!   key to one of N shards by a stable hash of `StoreKey.app`, keeps
+//!   the cross-shard change journal, migrates legacy single-directory
+//!   stores, and compacts shards one at a time on a background thread.
+//!
+//! # On-disk layout
+//!
+//! A store is a directory of shard directories:
+//!
+//! ```text
+//! store/
+//!   shards.meta             shard count marker (written once, wins over
+//!                           any later --store-shards request)
+//!   compact.lock            held while migrating a legacy store layout
+//!   dlq-*.bin, leases/      dead-letter queue + cooperative leases
+//!                           (not store data; always at the root)
+//!   shard-00/
+//!     index.bin             compacted records (binary v3, atomic replace)
+//!     seg-<pid>-<n>-<t>.bin append-only segment, one per writing session
+//!     seg-....bin.lock      liveness lock while that segment is open
+//!     compact.lock          held briefly while rewriting this shard
+//!   shard-01/ ...
+//!   index.bin, seg-*.bin    legacy single-directory store files — read,
+//!                           migrated into the shards by the first
+//!                           compacting open, bit-identical
+//! ```
+//!
+//! Store format **v3** is binary: a file is an 8-byte header (magic
+//! `MRTS` + little-endian version) followed by length-prefixed records
+//! (see [`codec::encode_record_bin`]).  Every `u64` and `f64` travels as
+//! its raw little-endian bits, so stored values are the same
+//! bit-identical rep results the executor produces — which is what makes
+//! warm runs byte-identical to cold ones.  The previous JSONL formats
+//! (v1 from PR 2, v2 from PR 3) are still decoded on read and never
+//! orphaned.
+//!
+//! # Sharding invariant
+//!
+//! A key's shard is a pure function of its application name and the
+//! store's shard count, and the shard count is pinned by `shards.meta`
+//! the first time the store is opened — so **a key's shard is stable
+//! across opens, processes, and builds**.  Per-app affinity keeps the
+//! trainer's paper-plane records, and any `read_since` cursor over them,
+//! inside one shard; two campaigns writing disjoint apps never contend
+//! on each other's segment or compaction locks.
+//!
+//! # Size cap and eviction
+//!
+//! A capped open (`--store-max-mb` / `MRTUNER_STORE_MAX_MB`) divides the
+//! budget evenly across shards; when a shard's compaction would exceed
+//! its slice, the least-recently-used records are dropped first.
+//! Records carry a **touch** — the generation at which they were last
+//! written or answered a lookup — and capped sessions persist their
+//! lookup recency at flush.  Repetitions on the paper plane (input 8 GB,
+//! block 64 MB) are **pinned**: they are the online trainer's training
+//! data and are never evicted, whatever the cap.
+//!
+//! # Concurrency and crash safety
+//!
+//! * Every writing session appends to its **own** uniquely-named segment
+//!   file inside each shard it touches, so two processes sharing a store
+//!   never interleave writes.
+//! * A live segment is marked by a `.lock` file carrying the writer's
+//!   pid; compaction merges a locked segment's flushed records but never
+//!   deletes the file under a live writer.
+//! * Compaction is **incremental and off the open path**: opening
+//!   returns in milliseconds whatever the store size, and a background
+//!   thread (joined on drop) compacts one shard at a time under that
+//!   shard's `compact.lock` — write-to-temp + atomic rename, losers of
+//!   the lock race just skip the shard.
+//! * Corruption is tolerated, never fatal: an unreadable file or a
+//!   truncated/garbled record is counted, logged to stderr, and skipped.
+//!   Files or records of a *newer* format version than
+//!   [`STORE_FORMAT_VERSION`] are skipped and preserved for whichever
+//!   build understands them.
+
+pub mod codec;
+pub mod file_backend;
+pub mod key;
+pub mod memory_backend;
+pub mod sharded;
+
+pub use codec::{
+    decode_record, decode_record_bin, encode_record, encode_record_bin,
+    read_file_records,
+};
+pub use file_backend::FileBackend;
+pub use key::{RecordError, StoreKey};
+pub use memory_backend::MemoryBackend;
+pub use sharded::{ProfileStore, StoreOptions, DEFAULT_STORE_SHARDS};
+
+pub(crate) use file_backend::pid_alive;
+
+use crate::mr::RepOutcome;
+
+/// Store format version; bump when the record schema changes.
+///
+/// * **v1** (PR 2): JSONL; 2-parameter keys `(cluster, app, m, r, rep,
+///   seed)` holding a bare execution time.
+/// * **v2** (PR 3): JSONL; keys additionally carry `input_gb`/`block_mb`
+///   (the extended 4-parameter sweep axes) and records hold a
+///   [`RepOutcome`] — total time plus total CPU seconds.
+/// * **v3** (PR 5): binary segments and index — length-prefixed records
+///   behind an `MRTS` file header, raw little-endian bit round-trip for
+///   every `u64`/`f64`, plus a persisted last-hit **touch** generation
+///   that drives size-capped LRU eviction.
+///
+/// The **sharded layout** (PR 8) is a directory arrangement, not a
+/// record format: shard files are plain v3 files, and legacy
+/// single-directory v1/v2/v3 stores are migrated into shards on the
+/// first compacting open with bit-identical contents.  Readers skip
+/// (and preserve) files or records of any *newer* version.
+pub const STORE_FORMAT_VERSION: u32 = 3;
+
+/// One storage engine under the [`ProfileStore`] facade: the contract
+/// every backend (file, memory, future remote) must honor so the
+/// executor, trainer, DLQ, and CLI never touch a concrete format.
+///
+/// Implementations are internally synchronized — every method takes
+/// `&self` and is safe to call from the executor's worker threads.  The
+/// determinism invariant the whole system rests on carries over: equal
+/// keys always map to bit-equal outcomes, so duplicate folding in any
+/// order is sound.
+pub trait StoreBackend: Send + Sync {
+    /// Stored outcome for `key`, if any prior session simulated it.  A
+    /// hit bumps the record's recency (it was just *used*), so hot
+    /// records survive size-capped eviction.
+    fn get(&self, key: &StoreKey) -> Option<RepOutcome>;
+
+    /// Like [`StoreBackend::get`] but without the recency bump — the
+    /// read-only resolve used when replaying the change journal.
+    fn lookup(&self, key: &StoreKey) -> Option<RepOutcome>;
+
+    /// Record a freshly simulated outcome.  Returns `true` when the
+    /// record was **journaled** (new key, or a CPU-less record upgraded
+    /// in place): exactly when the backend's generation advanced.
+    /// Re-putting a known value only bumps recency and returns `false`.
+    fn put(&self, key: StoreKey, outcome: RepOutcome) -> bool;
+
+    /// Persist buffered records (a no-op for memory backends).
+    fn flush(&self) -> Result<(), String>;
+
+    /// Monotonic change counter: how many records this backend instance
+    /// has accepted so far (records found on disk plus every later
+    /// insertion).
+    fn generation(&self) -> u64;
+
+    /// Every record accepted after `generation`, plus the generation
+    /// that snapshot corresponds to (pass it back next time).  The
+    /// stream is an upsert log: a key may repeat when its record was
+    /// upgraded in place; a key evicted since it was journaled is
+    /// skipped.
+    fn read_since(&self, generation: u64)
+        -> (Vec<(StoreKey, RepOutcome)>, u64);
+
+    /// Fold in records written by *other* sessions since the last poll,
+    /// returning how many were new to this instance.
+    fn refresh(&self) -> Result<u64, String>;
+
+    /// Run one compaction pass now — fold segments into the index,
+    /// evict to the size cap, delete merged files — and return that
+    /// pass's stats.  A no-op (with `compacted == false`) when there is
+    /// nothing to do or another process holds the compaction lock.
+    fn compact(&self) -> Result<StoreStats, String>;
+
+    /// Cumulative stats: what loading saw on disk plus every compaction
+    /// pass since, with `entries`/`bytes`/`pending` refreshed live.
+    fn stats(&self) -> StoreStats;
+
+    /// Distinct records currently resident.
+    fn len(&self) -> usize;
+
+    /// Whether no records are resident.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records buffered but not yet persisted.
+    fn pending(&self) -> usize;
+}
+
+/// What a backend saw on disk plus the live resident/pending counts.
+/// Per-shard snapshots add across shards into the store-wide totals
+/// ([`StoreStats::absorb`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Distinct records currently loaded.
+    pub entries: usize,
+    /// Exact byte size of a compacted index holding the resident
+    /// records (the figure the size cap is enforced against).
+    pub bytes: u64,
+    /// Records buffered but not yet persisted.
+    pub pending: usize,
+    /// Segment files present when the store was opened.
+    pub segments_seen: usize,
+    /// Segments folded into the index (and deleted) by compaction.
+    pub merged_segments: usize,
+    /// Files that could not be read at all (skipped, logged).
+    pub corrupt_segments: usize,
+    /// Undecodable lines/records inside otherwise readable files.
+    pub corrupt_lines: usize,
+    /// Lines — or whole binary files — of a *newer* store-format version
+    /// (skipped, preserved).
+    pub stale_lines: usize,
+    /// Legacy JSONL (v1/v2) lines migrated on read into v3 records
+    /// (rewritten as binary by the next compaction).
+    pub migrated_lines: usize,
+    /// Records dropped by size-capped LRU eviction (never paper-plane
+    /// reps — those are pinned).
+    pub evicted: usize,
+    /// Whether a compaction pass rewrote an index.
+    pub compacted: bool,
+}
+
+impl StoreStats {
+    /// Fold another snapshot (one shard, or one compaction pass) into
+    /// this one: counters add, `compacted` ORs.
+    pub fn absorb(&mut self, other: &StoreStats) {
+        self.entries += other.entries;
+        self.bytes += other.bytes;
+        self.pending += other.pending;
+        self.segments_seen += other.segments_seen;
+        self.merged_segments += other.merged_segments;
+        self.corrupt_segments += other.corrupt_segments;
+        self.corrupt_lines += other.corrupt_lines;
+        self.stale_lines += other.stale_lines;
+        self.migrated_lines += other.migrated_lines;
+        self.evicted += other.evicted;
+        self.compacted |= other.compacted;
+    }
+}
+
+impl std::fmt::Display for StoreStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "entries={} bytes={} pending={} segments_seen={} merged={} \
+             corrupt_segments={} corrupt_lines={} stale_lines={} \
+             migrated={} evicted={} compacted={}",
+            self.entries,
+            self.bytes,
+            self.pending,
+            self.segments_seen,
+            self.merged_segments,
+            self.corrupt_segments,
+            self.corrupt_lines,
+            self.stale_lines,
+            self.migrated_lines,
+            self.evicted,
+            self.compacted
+        )
+    }
+}

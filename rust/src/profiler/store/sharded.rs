@@ -1,0 +1,1037 @@
+//! [`ProfileStore`] — the public store facade: N [`StoreBackend`] shards
+//! behind one key-routed API, a cross-shard change journal, legacy
+//! single-directory migration, and background compaction.
+//!
+//! Routing is **per-application**: a key's shard is the FNV-1a hash of
+//! its application name modulo the shard count, pinned on disk by
+//! `shards.meta` the first time a store is opened.  All of one app's
+//! records — including the paper-plane repetitions the trainer tails —
+//! live in one shard, so a trainer cursor never spans shards and two
+//! campaigns profiling different apps never contend on each other's
+//! segment or compaction locks.
+
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use super::file_backend::{
+    clear_dir_files, fresh_segment_name, is_store_file, lock_path, scan_dir,
+    CompactGuard, FileBackend, StoredRep, INDEX_FILE, LEGACY_INDEX_FILE,
+};
+use super::key::StoreKey;
+use super::memory_backend::MemoryBackend;
+use super::{codec, StoreBackend, StoreStats};
+use crate::apps::AppId;
+use crate::mr::RepOutcome;
+
+/// Shard count for stores that have never pinned one (no `shards.meta`,
+/// no `--store-shards`, no `MRTUNER_STORE_SHARDS`).
+pub const DEFAULT_STORE_SHARDS: usize = 4;
+
+/// Upper bound on the shard count — beyond this, per-shard cap slices
+/// and directory fan-out stop paying for themselves.
+const MAX_STORE_SHARDS: usize = 64;
+
+/// Marker file pinning the shard count for the store's lifetime.
+const SHARDS_META_FILE: &str = "shards.meta";
+
+/// How a [`ProfileStore`] is opened.
+#[derive(Clone, Copy, Debug)]
+pub struct StoreOptions {
+    /// Total size cap in bytes, divided evenly across shards and
+    /// enforced by per-shard compaction (LRU eviction, paper-plane
+    /// records pinned).  `None` = unbounded.
+    pub cap_bytes: Option<u64>,
+    /// Requested shard count.  An existing `shards.meta` always wins —
+    /// the on-disk layout is already laid out — with a note when they
+    /// disagree.  `None` = `MRTUNER_STORE_SHARDS`, else what the
+    /// directory layout implies, else [`DEFAULT_STORE_SHARDS`].
+    pub shards: Option<usize>,
+    /// Inspection mode (`peek`): never compact, never migrate, never
+    /// write `shards.meta`.  Puts are still accepted (a peeking session
+    /// that simulates may flush its own segments); only rewriting of
+    /// *other* sessions' files is off-limits.
+    pub read_only: bool,
+    /// Spawn the background compaction thread (one pass, shard by
+    /// shard, joined on drop).  Turn off for latency-controlled opens
+    /// (benches) or when compaction runs explicitly
+    /// ([`ProfileStore::compact_now`]).
+    pub background_compaction: bool,
+}
+
+impl Default for StoreOptions {
+    fn default() -> StoreOptions {
+        StoreOptions {
+            cap_bytes: None,
+            shards: None,
+            read_only: false,
+            background_compaction: true,
+        }
+    }
+}
+
+/// Cross-shard change journal: the facade-level acceptance log that
+/// gives consumers ([`crate::coordinator::Trainer`], resume diffing)
+/// one monotonic generation over all shards.
+struct Journal {
+    /// Keys in facade acceptance order.  `keys.len()` is the store's
+    /// generation; outcomes resolve through the owning shard at read
+    /// time, so an evicted key simply stops resolving.
+    keys: Vec<StoreKey>,
+    /// Per-shard backend generation up to which `keys` is current.
+    cursors: Vec<u64>,
+}
+
+/// Persistent, sharded profile store — see the [module
+/// docs](super) for the layout and invariants.
+///
+/// ```
+/// # use mrtuner::profiler::store::{ProfileStore, StoreKey};
+/// # use mrtuner::mr::RepOutcome;
+/// # use mrtuner::apps::AppId;
+/// # let dir = std::env::temp_dir().join(format!("mrtuner_doc_store_{}", std::process::id()));
+/// # let _ = std::fs::remove_dir_all(&dir);
+/// let key = StoreKey {
+///     cluster: 0xABCD, app: AppId::WordCount,
+///     num_mappers: 20, num_reducers: 5,
+///     input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+///     block_mb: StoreKey::PAPER_BLOCK_MB,
+///     rep: 0, base_seed: 42,
+/// };
+/// {
+///     let store = ProfileStore::open(&dir).unwrap();
+///     store.put(key, RepOutcome::full(1523.25, 96.5));
+///     store.flush().unwrap();
+/// }   // drop joins the compactor and flushes
+///
+/// let store = ProfileStore::open(&dir).unwrap();
+/// assert_eq!(store.get(&key), Some(RepOutcome::full(1523.25, 96.5)));
+/// # drop(store);
+/// # let _ = std::fs::remove_dir_all(&dir);
+/// ```
+pub struct ProfileStore {
+    /// Store root (empty for memory-backed stores).  The DLQ and
+    /// cooperative leases live directly under it, outside any shard.
+    dir: PathBuf,
+    shards: Vec<Arc<dyn StoreBackend>>,
+    journal: Mutex<Journal>,
+    /// What opening saw: legacy-migration tallies, root-scan corruption
+    /// counts.  Folded into [`ProfileStore::stats`].
+    open_stats: StoreStats,
+    stop: Arc<AtomicBool>,
+    compactor: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ProfileStore {
+    /// Open (creating if needed) the store under `dir` with defaults:
+    /// unbounded, background compaction on.
+    pub fn open(dir: &Path) -> Result<ProfileStore, String> {
+        ProfileStore::open_with_opts(dir, StoreOptions::default())
+    }
+
+    /// Open with a total size cap in bytes (`None` = unbounded).
+    pub fn open_capped(
+        dir: &Path,
+        cap_bytes: Option<u64>,
+    ) -> Result<ProfileStore, String> {
+        ProfileStore::open_with_opts(
+            dir,
+            StoreOptions { cap_bytes, ..StoreOptions::default() },
+        )
+    }
+
+    /// Open for inspection: no compaction, no migration, no meta write —
+    /// a peeking session never rewrites files under other sessions.
+    pub fn peek(dir: &Path) -> Result<ProfileStore, String> {
+        ProfileStore::open_with_opts(
+            dir,
+            StoreOptions {
+                read_only: true,
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )
+    }
+
+    /// A store with no disk underneath ([`MemoryBackend`] shards):
+    /// read-through/write-back semantics for ephemeral campaigns and
+    /// tests, leaving no files behind.  `flush` is a no-op and nothing
+    /// survives the process.
+    pub fn memory() -> ProfileStore {
+        let shards: Vec<Arc<dyn StoreBackend>> = (0..DEFAULT_STORE_SHARDS)
+            .map(|_| {
+                Arc::new(MemoryBackend::new(None)) as Arc<dyn StoreBackend>
+            })
+            .collect();
+        let cursors = vec![0; shards.len()];
+        ProfileStore {
+            dir: PathBuf::new(),
+            shards,
+            journal: Mutex::new(Journal { keys: Vec::new(), cursors }),
+            open_stats: StoreStats::default(),
+            stop: Arc::new(AtomicBool::new(false)),
+            compactor: Mutex::new(None),
+        }
+    }
+
+    /// The fully explicit open everything above delegates to.
+    pub fn open_with_opts(
+        dir: &Path,
+        opts: StoreOptions,
+    ) -> Result<ProfileStore, String> {
+        let n = resolve_shard_count(dir, &opts);
+        if !opts.read_only {
+            fs::create_dir_all(dir).map_err(|e| {
+                format!("store: create dir {}: {e}", dir.display())
+            })?;
+            pin_shard_count(dir, n);
+        }
+        // Even split; a cap below one byte per shard still caps at 1 so
+        // eviction pressure is never silently dropped.
+        let shard_cap = opts.cap_bytes.map(|c| (c / n as u64).max(1));
+        let files: Vec<Arc<FileBackend>> = (0..n)
+            .map(|i| {
+                Arc::new(FileBackend::new(
+                    &shard_dir(dir, i),
+                    shard_cap,
+                    !opts.read_only,
+                ))
+            })
+            .collect();
+        let mut open_stats =
+            migrate_legacy_root(dir, &files, opts.read_only);
+        // Migration tallies are about what the *open* did; live counts
+        // come from the shards.
+        open_stats.entries = 0;
+        open_stats.bytes = 0;
+        open_stats.pending = 0;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let compactor = if opts.background_compaction && !opts.read_only {
+            let thread_shards = files.clone();
+            let thread_stop = Arc::clone(&stop);
+            std::thread::Builder::new()
+                .name("store-compact".to_string())
+                .spawn(move || {
+                    // One incremental pass: shard at a time, cheap
+                    // needs-work probe first, compact.lock arbitrates
+                    // with other processes.
+                    for b in thread_shards {
+                        if thread_stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if !b.needs_compaction() {
+                            continue;
+                        }
+                        if let Err(e) = b.compact() {
+                            eprintln!(
+                                "store: background compaction of {}: {e}",
+                                b.dir().display()
+                            );
+                        }
+                    }
+                })
+                .ok()
+        } else {
+            None
+        };
+
+        let shards: Vec<Arc<dyn StoreBackend>> = files
+            .into_iter()
+            .map(|f| f as Arc<dyn StoreBackend>)
+            .collect();
+        let cursors = vec![0; shards.len()];
+        Ok(ProfileStore {
+            dir: dir.to_path_buf(),
+            shards,
+            journal: Mutex::new(Journal { keys: Vec::new(), cursors }),
+            open_stats,
+            stop,
+            compactor: Mutex::new(compactor),
+        })
+    }
+
+    /// Store root directory.  Empty for memory-backed stores; the DLQ
+    /// and cooperative leases are rooted here, never inside a shard.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of shards behind this store.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_for(&self, key: &StoreKey) -> usize {
+        shard_of(key.app, self.shards.len())
+    }
+
+    /// Drain shard `i`'s backend journal into the facade journal.
+    /// Lock order is always facade-journal **then** shard — every shard
+    /// call that itself locks shard state happens while we hold the
+    /// journal lock, and no shard ever calls back into the facade.
+    fn pull(&self, i: usize) -> u64 {
+        let mut journal =
+            self.journal.lock().expect("store journal poisoned");
+        let (records, generation) =
+            self.shards[i].read_since(journal.cursors[i]);
+        journal.cursors[i] = generation;
+        let fresh = records.len() as u64;
+        journal.keys.extend(records.into_iter().map(|(k, _)| k));
+        fresh
+    }
+
+    fn pull_all(&self) -> u64 {
+        (0..self.shards.len()).map(|i| self.pull(i)).sum()
+    }
+
+    /// Stored outcome for `key`, if any prior session simulated it (a
+    /// hit bumps the record's LRU recency).
+    pub fn get(&self, key: &StoreKey) -> Option<RepOutcome> {
+        let i = self.shard_for(key);
+        let out = self.shards[i].get(key);
+        // First touch lazily loads the shard; surface what it found.
+        self.pull(i);
+        out
+    }
+
+    /// Record a freshly simulated outcome; returns whether the store's
+    /// generation advanced (new key or CPU upgrade — not a re-put).
+    pub fn put(&self, key: StoreKey, outcome: RepOutcome) -> bool {
+        let i = self.shard_for(key);
+        let journaled = self.shards[i].put(key, outcome);
+        self.pull(i);
+        journaled
+    }
+
+    /// Persist buffered records in every touched shard.  Shards this
+    /// session never accessed are left untouched (no lazy load).
+    pub fn flush(&self) -> Result<(), String> {
+        for shard in &self.shards {
+            shard.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Monotonic change counter across all shards: records found on
+    /// disk plus every later insertion.  Forces all shards to load.
+    pub fn generation(&self) -> u64 {
+        self.pull_all();
+        self.journal.lock().expect("store journal poisoned").keys.len()
+            as u64
+    }
+
+    /// Every record accepted after `generation`, plus the new
+    /// generation to pass back next time.  An upsert log: keys repeat
+    /// on in-place upgrade, and a key evicted since it was journaled is
+    /// skipped.
+    pub fn read_since(
+        &self,
+        generation: u64,
+    ) -> (Vec<(StoreKey, RepOutcome)>, u64) {
+        self.pull_all();
+        let journal = self.journal.lock().expect("store journal poisoned");
+        let from = (generation as usize).min(journal.keys.len());
+        let records = journal.keys[from..]
+            .iter()
+            .filter_map(|k| {
+                // lookup, not get: replaying the journal is not a use
+                // and must not distort LRU recency.
+                self.shards[self.shard_for(k)]
+                    .lookup(k)
+                    .map(|o| (*k, o))
+            })
+            .collect();
+        (records, journal.keys.len() as u64)
+    }
+
+    /// Fold in records written by other sessions since the last poll,
+    /// returning how many were new to this store instance.  The first
+    /// call on a lazily opened store also counts what was already on
+    /// disk.
+    pub fn refresh(&self) -> Result<u64, String> {
+        let mut fresh = 0;
+        for (i, shard) in self.shards.iter().enumerate() {
+            shard.refresh()?;
+            fresh += self.pull(i);
+        }
+        Ok(fresh)
+    }
+
+    /// Run one full compaction pass over every shard **now**, on this
+    /// thread, and return the merged pass stats.  This is the CLI
+    /// `store compact` path; campaigns rely on the background thread
+    /// instead.
+    pub fn compact_now(&self) -> Result<StoreStats, String> {
+        let mut total = StoreStats::default();
+        for (i, shard) in self.shards.iter().enumerate() {
+            total.absorb(&shard.compact()?);
+            // Compaction may have surfaced other sessions' records.
+            self.pull(i);
+        }
+        total.entries = self.len();
+        Ok(total)
+    }
+
+    /// Combined stats: what opening saw (migration tallies) plus every
+    /// shard's cumulative counters.  Forces all shards to load.
+    pub fn stats(&self) -> StoreStats {
+        let mut total = self.open_stats;
+        for shard in &self.shards {
+            total.absorb(&shard.stats());
+        }
+        total
+    }
+
+    /// Per-shard stats snapshots, indexed by shard.  Forces all shards
+    /// to load.
+    pub fn shard_stats(&self) -> Vec<StoreStats> {
+        self.shards.iter().map(|s| s.stats()).collect()
+    }
+
+    /// Distinct records resident across all shards (forces loads).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// Whether no shard holds any record (forces loads).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records buffered but not yet persisted, across all shards.
+    /// Never forces a lazy load (an untouched shard has nothing
+    /// pending).
+    pub fn pending(&self) -> usize {
+        self.shards.iter().map(|s| s.pending()).sum()
+    }
+
+    /// Delete the store under `dir` — shard directories, legacy root
+    /// files, locks, temp debris, and the shard-count marker — and
+    /// return how many files were removed.  DLQ files and the `leases/`
+    /// directory are *not* store data and are left alone.  A missing
+    /// directory is an empty store.
+    pub fn clear(dir: &Path) -> Result<usize, String> {
+        let mut removed = clear_dir_files(dir)?;
+        for sdir in shard_dirs_present(dir) {
+            removed += clear_dir_files(&sdir)?;
+            // Only if nothing foreign was left inside.
+            let _ = fs::remove_dir(&sdir);
+        }
+        if fs::remove_file(dir.join(SHARDS_META_FILE)).is_ok() {
+            removed += 1;
+        }
+        Ok(removed)
+    }
+}
+
+impl Drop for ProfileStore {
+    fn drop(&mut self) {
+        // Stop-flag then join: a mid-pass compactor finishes its current
+        // shard and exits before the backends start flushing.
+        self.stop.store(true, Ordering::Relaxed);
+        if let Ok(mut h) = self.compactor.lock() {
+            if let Some(handle) = h.take() {
+                let _ = handle.join();
+            }
+        }
+        if let Err(e) = self.flush() {
+            eprintln!("store: flush on drop failed: {e}");
+        }
+    }
+}
+
+// ------------------------------------------------ routing and layout
+
+/// Stable shard index for an application: FNV-1a over the app name,
+/// modulo the shard count.  Depends on nothing but the name and `n`, so
+/// a key's shard never moves between opens, processes, or builds.
+pub(crate) fn shard_of(app: AppId, n: usize) -> usize {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in app.name().bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % n.max(1) as u64) as usize
+}
+
+/// Directory of shard `i` under the store root.
+pub(crate) fn shard_dir(root: &Path, i: usize) -> PathBuf {
+    root.join(format!("shard-{i:02}"))
+}
+
+/// Existing `shard-NN` directories under `root`, sorted.
+fn shard_dirs_present(root: &Path) -> Vec<PathBuf> {
+    let Ok(rd) = fs::read_dir(root) else {
+        return Vec::new();
+    };
+    let mut out: Vec<PathBuf> = rd
+        .flatten()
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy().into_owned();
+            name.len() == 8
+                && name.starts_with("shard-")
+                && name[6..].bytes().all(|b| b.is_ascii_digit())
+                && e.path().is_dir()
+        })
+        .map(|e| e.path())
+        .collect();
+    out.sort();
+    out
+}
+
+/// Decide the shard count for this open.  Precedence: an existing
+/// `shards.meta` (the layout on disk is authoritative — a conflicting
+/// request gets a note, not a reshard), then the explicit option
+/// (`--store-shards`), then `MRTUNER_STORE_SHARDS`, then whatever the
+/// existing `shard-NN` directories imply, then the default.
+fn resolve_shard_count(dir: &Path, opts: &StoreOptions) -> usize {
+    if let Some(n) = read_shard_meta(dir) {
+        if let Some(asked) = opts.shards {
+            if asked != n {
+                eprintln!(
+                    "store: {} pins {n} shard(s); ignoring request for \
+                     {asked}",
+                    dir.join(SHARDS_META_FILE).display()
+                );
+            }
+        }
+        return n;
+    }
+    let requested = opts.shards.or_else(|| {
+        std::env::var("MRTUNER_STORE_SHARDS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+    });
+    if let Some(n) = requested {
+        let clamped = n.clamp(1, MAX_STORE_SHARDS);
+        if clamped != n {
+            eprintln!(
+                "store: shard count {n} out of range; using {clamped}"
+            );
+        }
+        return clamped;
+    }
+    // Meta-less sharded layout (e.g. created by an inspection session):
+    // the highest shard directory present implies the count.
+    let dirs = shard_dirs_present(dir);
+    if let Some(last) = dirs.last() {
+        let name = last.file_name().unwrap_or_default().to_string_lossy();
+        if let Ok(i) = name[6..].parse::<usize>() {
+            return (i + 1).clamp(1, MAX_STORE_SHARDS);
+        }
+    }
+    DEFAULT_STORE_SHARDS
+}
+
+fn read_shard_meta(dir: &Path) -> Option<usize> {
+    let text = fs::read_to_string(dir.join(SHARDS_META_FILE)).ok()?;
+    let n = parse_shard_meta(&text)?;
+    if (1..=MAX_STORE_SHARDS).contains(&n) {
+        Some(n)
+    } else {
+        eprintln!(
+            "store: ignoring {} with out-of-range shard count {n}",
+            dir.join(SHARDS_META_FILE).display()
+        );
+        None
+    }
+}
+
+fn parse_shard_meta(text: &str) -> Option<usize> {
+    let rest = text.split("\"shards\"").nth(1)?;
+    let rest = rest.trim_start().strip_prefix(':')?.trim_start();
+    let digits: String =
+        rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Pin the shard count on disk, first writer wins (`create_new`): two
+/// concurrent first opens with different requests converge on whichever
+/// meta landed, because every later resolution reads it back.
+fn pin_shard_count(dir: &Path, n: usize) {
+    let path = dir.join(SHARDS_META_FILE);
+    match OpenOptions::new().write(true).create_new(true).open(&path) {
+        Ok(mut f) => {
+            let _ = write!(f, "{{\"v\":1,\"shards\":{n}}}");
+        }
+        Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {}
+        Err(e) => {
+            eprintln!("store: write {}: {e}", path.display())
+        }
+    }
+}
+
+// ------------------------------------------- legacy-layout migration
+
+/// Migrate a legacy **single-directory** store (PR 2-5 layout: index
+/// and segments directly under the root) into the shard directories.
+///
+/// The happy path — compaction lock acquired, root index readable —
+/// rewrites every root record into one migration segment per owning
+/// shard (v3 frames, key-sorted, touches preserved: `get()` through the
+/// shards is byte-identical to the legacy store), then deletes the root
+/// index and every unlocked root segment.  Root segments held by a
+/// live writer (an old, pre-sharding build still running) are read but
+/// left in place; the next compacting open migrates them once the
+/// writer is gone.
+///
+/// When migration must not write — inspection opens, the migration lock
+/// busy in another process, or an unreadable root index — the root
+/// records are instead *preloaded* into the shard backends: visible to
+/// this session, nothing on disk touched.
+///
+/// Returns the tallies of whatever was done (migrated line counts,
+/// corruption seen, `compacted` set when the layout was rewritten).
+fn migrate_legacy_root(
+    root: &Path,
+    shards: &[Arc<FileBackend>],
+    read_only: bool,
+) -> StoreStats {
+    if !legacy_root_present(root) {
+        return StoreStats::default();
+    }
+    let n = shards.len();
+    // Writable path: take the root compact.lock so two migrating opens
+    // never double-write, and an old build's compaction never runs
+    // mid-migration.
+    let guard = if read_only { None } else { CompactGuard::acquire(root) };
+    let scan = match scan_dir(root) {
+        Ok(scan) => scan,
+        Err(e) => {
+            eprintln!(
+                "store: cannot read legacy store at {}: {e}; continuing \
+                 with shards only",
+                root.display()
+            );
+            return StoreStats {
+                corrupt_segments: 1,
+                ..StoreStats::default()
+            };
+        }
+    };
+    let mut stats = scan.stats;
+    let can_rewrite = guard.is_some() && !scan.index_unreadable;
+    let mut by_shard: Vec<Vec<(StoreKey, StoredRep)>> =
+        (0..n).map(|_| Vec::new()).collect();
+    for (key, rep) in scan.entries {
+        by_shard[shard_of(key.app, n)].push((key, rep));
+    }
+    if !can_rewrite {
+        if !read_only && guard.is_none() {
+            eprintln!(
+                "store: legacy migration lock busy at {}; serving legacy \
+                 records without rewriting",
+                root.display()
+            );
+        }
+        if scan.index_unreadable {
+            eprintln!(
+                "store: legacy index at {} unreadable; serving what was \
+                 recovered, leaving files for manual repair",
+                root.display()
+            );
+        }
+        for (i, records) in by_shard.into_iter().enumerate() {
+            if !records.is_empty() {
+                shards[i].preload(records);
+            }
+        }
+        return stats;
+    }
+    // Write one v3 migration segment per populated shard, then retire
+    // the root files it replaces.  Written via temp + rename so a crash
+    // can never leave a half-written file with a valid segment name.
+    let mut wrote = 0;
+    for (i, mut records) in by_shard.into_iter().enumerate() {
+        if records.is_empty() {
+            continue;
+        }
+        records.sort_by(|a, b| a.0.cmp(&b.0));
+        let sdir = shard_dir(root, i);
+        if let Err(e) = fs::create_dir_all(&sdir) {
+            eprintln!("store: create {}: {e}; migration aborted", sdir.display());
+            shards[i].preload(records);
+            continue;
+        }
+        let mut body = codec::bin_header().to_vec();
+        for (key, sr) in &records {
+            codec::encode_record_bin_into(
+                key,
+                &sr.outcome,
+                sr.touch,
+                &mut body,
+            );
+        }
+        let tmp = sdir.join(format!("mig-{}.tmp", std::process::id()));
+        let write = fs::write(&tmp, &body)
+            .and_then(|()| fs::rename(&tmp, sdir.join(fresh_segment_name())));
+        match write {
+            Ok(()) => wrote += 1,
+            Err(e) => {
+                eprintln!(
+                    "store: migration write into {} failed: {e}; serving \
+                     legacy records in place",
+                    sdir.display()
+                );
+                let _ = fs::remove_file(&tmp);
+                shards[i].preload(records);
+            }
+        }
+    }
+    if wrote > 0 {
+        // The shard segments now own these records; retire the legacy
+        // layout (everything a live writer does not still hold).
+        for path in &scan.mergeable {
+            let _ = fs::remove_file(path);
+            let _ = fs::remove_file(lock_path(path));
+        }
+        let _ = fs::remove_file(root.join(INDEX_FILE));
+        let _ = fs::remove_file(root.join(LEGACY_INDEX_FILE));
+        stats.compacted = true;
+        stats.merged_segments = scan.mergeable.len();
+        eprintln!(
+            "store: migrated legacy single-directory store at {} into {n} \
+             shard(s)",
+            root.display()
+        );
+    }
+    stats
+}
+
+/// Whether `root` still holds a legacy single-directory store: an index
+/// or any segment file directly at the root (shard data lives one level
+/// down; the DLQ's `dlq-*.bin` files do not match).
+fn legacy_root_present(root: &Path) -> bool {
+    let Ok(rd) = fs::read_dir(root) else {
+        return false;
+    };
+    rd.flatten().any(|e| {
+        is_store_file(&e.file_name().to_string_lossy())
+            && e.path().is_file()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::AppId;
+
+    fn key(app: AppId, m: u32, r: u32, rep: u32, seed: u64) -> StoreKey {
+        StoreKey {
+            cluster: 0xDEAD_BEEF_0BAD_F00D,
+            app,
+            num_mappers: m,
+            num_reducers: r,
+            input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+            block_mb: StoreKey::PAPER_BLOCK_MB,
+            rep,
+            base_seed: seed,
+        }
+    }
+
+    fn ext4_key(i: u32) -> StoreKey {
+        StoreKey {
+            cluster: 0xDEAD_BEEF_0BAD_F00D,
+            app: AppId::WordCount,
+            num_mappers: 5 + i,
+            num_reducers: 7,
+            input_gb_bits: (2.0f64).to_bits(),
+            block_mb: 128,
+            rep: 0,
+            base_seed: 1,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mrtuner_sharded_unit_{tag}_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn put_get_flush_reopen_across_shards() {
+        let dir = tmp_dir("roundtrip");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            assert!(store.is_empty());
+            for app in [AppId::WordCount, AppId::EximParse, AppId::Grep] {
+                store.put(key(app, 20, 5, 0, 42), RepOutcome::full(100.5, 1.25));
+            }
+            assert_eq!(store.pending(), 3);
+            store.flush().unwrap();
+            assert_eq!(store.pending(), 0);
+        }
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.len(), 3);
+        for app in [AppId::WordCount, AppId::EximParse, AppId::Grep] {
+            assert_eq!(
+                store.get(&key(app, 20, 5, 0, 42)),
+                Some(RepOutcome::full(100.5, 1.25)),
+                "{app:?} survives reopen"
+            );
+        }
+        drop(store);
+        assert!(ProfileStore::clear(&dir).unwrap() >= 1);
+        let store = ProfileStore::peek(&dir).unwrap();
+        assert!(store.is_empty(), "clear removed every shard");
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_meta_pinned() {
+        // Pure-function stability: same app, same n, same shard.
+        for app in [AppId::WordCount, AppId::EximParse, AppId::Grep] {
+            assert_eq!(shard_of(app, 4), shard_of(app, 4));
+            assert!(shard_of(app, 4) < 4);
+            assert_eq!(shard_of(app, 1), 0);
+        }
+        let dir = tmp_dir("meta");
+        {
+            let store = ProfileStore::open_with_opts(
+                &dir,
+                StoreOptions { shards: Some(2), ..StoreOptions::default() },
+            )
+            .unwrap();
+            assert_eq!(store.shard_count(), 2);
+            store.put(key(AppId::Grep, 4, 2, 0, 7), RepOutcome::time_only(9.0));
+            store.flush().unwrap();
+        }
+        // A later open asking for 8 shards is overruled by the meta: the
+        // record must stay findable.
+        let store = ProfileStore::open_with_opts(
+            &dir,
+            StoreOptions { shards: Some(8), ..StoreOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(store.shard_count(), 2, "shards.meta wins");
+        assert_eq!(
+            store.get(&key(AppId::Grep, 4, 2, 0, 7)),
+            Some(RepOutcome::time_only(9.0))
+        );
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn generation_counts_disk_and_live_insertions() {
+        let dir = tmp_dir("generation");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            assert_eq!(store.generation(), 0);
+            store.put(key(AppId::WordCount, 20, 5, 0, 1), RepOutcome::full(100.0, 1.0));
+            store.put(key(AppId::EximParse, 20, 5, 1, 1), RepOutcome::full(101.0, 2.0));
+            assert_eq!(store.generation(), 2);
+            // Re-putting a known value is not a change.
+            store.put(key(AppId::WordCount, 20, 5, 0, 1), RepOutcome::full(100.0, 1.0));
+            assert_eq!(store.generation(), 2);
+            store.flush().unwrap();
+        }
+        let store = ProfileStore::open(&dir).unwrap();
+        assert_eq!(store.generation(), 2, "disk records count");
+        let (all, generation) = store.read_since(0);
+        assert_eq!(all.len(), 2);
+        let (fresh, g2) = store.read_since(generation);
+        assert!(fresh.is_empty());
+        assert_eq!(g2, generation);
+        store.put(key(AppId::Grep, 30, 5, 0, 1), RepOutcome::full(200.0, 3.0));
+        let (fresh, g3) = store.read_since(generation);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(g3, generation + 1);
+        assert!(store.read_since(u64::MAX).0.is_empty());
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn refresh_picks_up_other_sessions_records() {
+        let dir = tmp_dir("refresh");
+        let reader = ProfileStore::open(&dir).unwrap();
+        // Force the shards to load *before* the writer writes, so the
+        // later pickup is genuinely refresh's doing, not lazy loading's.
+        assert_eq!(reader.generation(), 0);
+        {
+            let writer = ProfileStore::open(&dir).unwrap();
+            writer.put(
+                key(AppId::WordCount, 10, 10, 0, 9),
+                RepOutcome::full(55.0, 5.0),
+            );
+            writer.flush().unwrap();
+        }
+        assert!(
+            reader.get(&key(AppId::WordCount, 10, 10, 0, 9)).is_none(),
+            "not visible before refresh"
+        );
+        assert_eq!(reader.refresh().unwrap(), 1);
+        assert_eq!(
+            reader.get(&key(AppId::WordCount, 10, 10, 0, 9)),
+            Some(RepOutcome::full(55.0, 5.0))
+        );
+        assert_eq!(reader.refresh().unwrap(), 0, "idempotent");
+        drop(reader);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_respects_cap_and_pins_paper_plane() {
+        let dir = tmp_dir("evict");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            for rep in 0..3 {
+                store.put(
+                    key(AppId::WordCount, 20, 5, rep, 1),
+                    RepOutcome::full(100.0 + rep as f64, 1.0),
+                );
+            }
+            for i in 0..50 {
+                store.put(ext4_key(i), RepOutcome::full(10.0 + i as f64, 0.5));
+            }
+            store.flush().unwrap();
+        }
+        let store = ProfileStore::open_with_opts(
+            &dir,
+            StoreOptions {
+                cap_bytes: Some(2048),
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        let pass = store.compact_now().unwrap();
+        assert!(pass.compacted && pass.evicted > 0, "cap enforced: {pass}");
+        for rep in 0..3 {
+            assert!(
+                store.get(&key(AppId::WordCount, 20, 5, rep, 1)).is_some(),
+                "paper-plane rep {rep} pinned"
+            );
+        }
+        assert!(store.get(&ext4_key(0)).is_none(), "coldest evicted");
+        drop(store);
+        // Eviction is durable: an uncapped reopen does not resurrect.
+        let store = ProfileStore::open(&dir).unwrap();
+        assert!(store.get(&ext4_key(0)).is_none());
+        assert!(store.get(&key(AppId::WordCount, 20, 5, 0, 1)).is_some());
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn capped_open_without_pressure_evicts_nothing() {
+        let dir = tmp_dir("nopressure");
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            for i in 0..10 {
+                store.put(ext4_key(i), RepOutcome::full(1.0 + i as f64, 0.1));
+            }
+            store.flush().unwrap();
+        }
+        let store =
+            ProfileStore::open_capped(&dir, Some(1024 * 1024)).unwrap();
+        assert_eq!(store.compact_now().unwrap().evicted, 0);
+        assert_eq!(store.len(), 10);
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_single_dir_store_migrates_bit_identically() {
+        let dir = tmp_dir("migrate_layout");
+        // Build a legacy store the only way that exists now: write v3
+        // files directly at the root, exactly as the pre-sharding build
+        // laid them out.
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut keys = Vec::new();
+        let mut body = codec::bin_header().to_vec();
+        for app in [AppId::WordCount, AppId::EximParse, AppId::Grep] {
+            for rep in 0..4 {
+                let k = key(app, 20, 5, rep, 11);
+                let o = RepOutcome::full(
+                    1000.0 + rep as f64 + 0.125,
+                    9.5 + rep as f64,
+                );
+                codec::encode_record_bin_into(&k, &o, rep as u64, &mut body);
+                keys.push((k, o));
+            }
+        }
+        std::fs::write(dir.join(INDEX_FILE), &body).unwrap();
+        {
+            let store = ProfileStore::open(&dir).unwrap();
+            let st = store.stats();
+            assert!(st.compacted, "layout migration ran: {st}");
+            for (k, o) in &keys {
+                assert_eq!(store.get(k), Some(*o), "bit-identical get");
+            }
+        }
+        assert!(
+            !dir.join(INDEX_FILE).exists(),
+            "legacy root index retired"
+        );
+        assert!(!shard_dirs_present(&dir).is_empty());
+        // Reopen: migration is one-time, records still served.
+        let store = ProfileStore::open(&dir).unwrap();
+        assert!(!store.stats().compacted || store.stats().merged_segments > 0);
+        for (k, o) in &keys {
+            assert_eq!(store.get(k), Some(*o));
+        }
+        drop(store);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn peek_of_legacy_store_reads_without_rewriting() {
+        let dir = tmp_dir("peek_legacy");
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = key(AppId::WordCount, 20, 5, 0, 3);
+        let o = RepOutcome::full(77.0, 7.0);
+        let mut body = codec::bin_header().to_vec();
+        codec::encode_record_bin_into(&k, &o, 5, &mut body);
+        std::fs::write(dir.join(INDEX_FILE), &body).unwrap();
+        let before = std::fs::read(dir.join(INDEX_FILE)).unwrap();
+        {
+            let store = ProfileStore::peek(&dir).unwrap();
+            assert_eq!(store.get(&k), Some(o), "legacy records visible");
+        }
+        assert_eq!(
+            std::fs::read(dir.join(INDEX_FILE)).unwrap(),
+            before,
+            "peek rewrote nothing"
+        );
+        assert!(
+            !dir.join(SHARDS_META_FILE).exists(),
+            "peek pins no shard count"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_store_round_trips_without_files() {
+        let store = ProfileStore::memory();
+        let k = key(AppId::EximParse, 8, 4, 0, 5);
+        assert!(store.put(k, RepOutcome::full(12.0, 1.5)));
+        assert_eq!(store.get(&k), Some(RepOutcome::full(12.0, 1.5)));
+        assert_eq!(store.pending(), 0);
+        store.flush().unwrap();
+        assert_eq!(store.generation(), 1);
+        let (records, g) = store.read_since(0);
+        assert_eq!((records.len(), g), (1, 1));
+        assert_eq!(store.refresh().unwrap(), 0);
+        assert!(store.dir().as_os_str().is_empty());
+        assert_eq!(store.shard_count(), DEFAULT_STORE_SHARDS);
+    }
+
+    #[test]
+    fn shard_meta_parses_and_survives_garbage() {
+        assert_eq!(parse_shard_meta("{\"v\":1,\"shards\":4}"), Some(4));
+        assert_eq!(parse_shard_meta("{ \"shards\" : 16 }"), Some(16));
+        assert_eq!(parse_shard_meta("{\"v\":1}"), None);
+        assert_eq!(parse_shard_meta("garbage"), None);
+    }
+}

@@ -3,7 +3,8 @@
 //! Covers the store's contract end to end: bit-exact record codec
 //! (property-tested), cross-process warm starts (a second executor and a
 //! genuinely separate spawned `mrtuner` process), corruption tolerance,
-//! and compaction idempotence.
+//! compaction idempotence, and migration of flat pre-shard layouts into
+//! the sharded one.
 
 use std::path::PathBuf;
 use std::process::Command;
@@ -37,14 +38,43 @@ fn spec(m: u32, r: u32) -> ExperimentSpec {
     ExperimentSpec::new(AppId::WordCount, m, r)
 }
 
+/// The store root plus every `shard-NN/` directory under it.
+fn store_dirs(dir: &PathBuf) -> Vec<PathBuf> {
+    let mut out = vec![dir.clone()];
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            if name.starts_with("shard-") && e.path().is_dir() {
+                out.push(e.path());
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Every live binary segment, across the root and all shards.
 fn seg_files(dir: &PathBuf) -> Vec<PathBuf> {
-    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
-        .unwrap()
+    let mut out: Vec<PathBuf> = store_dirs(dir)
+        .iter()
+        .filter_map(|d| std::fs::read_dir(d).ok())
+        .flatten()
         .map(|e| e.unwrap().path())
         .filter(|p| {
             let n = p.file_name().unwrap().to_string_lossy().into_owned();
             n.starts_with("seg-") && n.ends_with(".bin")
         })
+        .collect();
+    out.sort();
+    out
+}
+
+/// Every compacted index, across the root and all shards.
+fn index_files(dir: &PathBuf) -> Vec<PathBuf> {
+    let mut out: Vec<PathBuf> = store_dirs(dir)
+        .iter()
+        .map(|d| d.join("index.bin"))
+        .filter(|p| p.exists())
         .collect();
     out.sort();
     out
@@ -220,27 +250,26 @@ fn v1_store_warm_starts_v2_executor_without_resimulating() {
             .with_store(ProfileStore::open(&dir).unwrap());
         exec.run_specs(&cluster, &specs, 2, 11)
     };
-    // Rewrite the store as the v1 build would have left it: every record
-    // a v1 line (no input/block fields, no CPU figure).
+    // Rewrite the store as the v1 build would have left it: one flat
+    // directory (no shards, no meta) holding v1 lines (no input/block
+    // fields, no CPU figure).
     let mut v1_records = Vec::new();
-    for path in std::fs::read_dir(&dir)
-        .unwrap()
-        .map(|e| e.unwrap().path())
-        .filter(|p| p.extension().is_some_and(|x| x == "bin"))
-    {
+    for path in seg_files(&dir).into_iter().chain(index_files(&dir)) {
         for (key, outcome, _) in read_file_records(&path).unwrap() {
             v1_records.push(v1_line(&key, outcome.time_s));
         }
-        std::fs::remove_file(&path).unwrap();
     }
     assert_eq!(v1_records.len(), 4);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
     std::fs::write(
         dir.join("seg-0000cafe-0000-v1legacy.jsonl"),
         v1_records.join("\n") + "\n",
     )
     .unwrap();
 
-    // A v2 executor over the v1 store: zero simulations, identical bits.
+    // A v2 executor over the v1 store: zero simulations, identical bits
+    // — and the open migrates the flat layout into the shards.
     let exec = CampaignExecutor::new(4)
         .with_store(ProfileStore::open(&dir).unwrap());
     let st = exec.store().unwrap().stats();
@@ -252,16 +281,23 @@ fn v1_store_warm_starts_v2_executor_without_resimulating() {
         assert_eq!(a.rep_times_s, b.rep_times_s);
     }
     drop(exec);
-    // Compaction rewrote the records as v3 binary; nothing JSONL is left.
-    let recs = read_file_records(&dir.join("index.bin")).unwrap();
-    assert_eq!(recs.len(), 4);
-    assert!(recs.iter().all(|(_, _, ver)| *ver == 3));
-    assert!(
-        std::fs::read_dir(&dir)
-            .unwrap()
-            .all(|e| !e.unwrap().file_name().to_string_lossy().ends_with(".jsonl")),
-        "no legacy files survive the upgrade compaction"
-    );
+    // Migration rewrote the records as v3 binary inside the shards;
+    // nothing JSONL survives anywhere in the tree.
+    let mut total = 0;
+    for path in seg_files(&dir).into_iter().chain(index_files(&dir)) {
+        let recs = read_file_records(&path).unwrap();
+        assert!(recs.iter().all(|(_, _, ver)| *ver == 3));
+        total += recs.len();
+    }
+    assert_eq!(total, 4);
+    for d in store_dirs(&dir) {
+        assert!(
+            std::fs::read_dir(&d).unwrap().all(|e| {
+                !e.unwrap().file_name().to_string_lossy().ends_with(".jsonl")
+            }),
+            "no legacy files survive the migration"
+        );
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -452,25 +488,32 @@ fn compaction_is_idempotent() {
     }
     assert_eq!(seg_files(&dir).len(), 2);
 
-    // First compacting open folds both segments into the index.
+    // First compacting open folds both segments into the shard's index.
+    // The explicit pass and the open's background thread arbitrate over
+    // the same on-disk lock: whichever runs first does the merge, the
+    // other finds nothing to do, and the stats record the work exactly
+    // once either way.
     {
         let store = ProfileStore::open(&dir).unwrap();
+        store.compact_now().unwrap();
         let st = store.stats();
         assert!(st.compacted);
         assert_eq!(st.merged_segments, 2);
         assert_eq!(store.len(), 2);
     }
     assert!(seg_files(&dir).is_empty(), "merged segments deleted");
-    let index = dir.join("index.bin");
+    let indexes = index_files(&dir);
+    assert_eq!(indexes.len(), 1, "both records route to the same shard");
+    let index = indexes.into_iter().next().unwrap();
     let first = std::fs::read(&index).unwrap();
     assert!(!first.is_empty());
 
-    // Re-opening an already-compact store changes nothing on disk and
-    // loses nothing in memory.
+    // Re-compacting an already-compact store finds no work and changes
+    // nothing on disk.
     {
         let store = ProfileStore::open(&dir).unwrap();
-        let st = store.stats();
-        assert!(!st.compacted, "nothing left to merge");
+        let pass = store.compact_now().unwrap();
+        assert!(!pass.compacted, "nothing left to merge");
         assert_eq!(store.len(), 2);
     }
     let second = std::fs::read(&index).unwrap();
@@ -558,7 +601,9 @@ fn eviction_never_drops_trainer_referenced_records() {
     }
     {
         // ~36 paper records (~75 B each) fit in 8 KB; 400 filler do not.
+        // Eviction runs inside compaction, so force a synchronous pass.
         let store = ProfileStore::open_capped(&dir, Some(8 * 1024)).unwrap();
+        store.compact_now().unwrap();
         let st = store.stats();
         assert!(st.compacted);
         assert!(st.evicted > 300, "filler evicted: {st}");
@@ -617,10 +662,15 @@ fn store_compact_cli_respects_size_cap() {
         text.contains("evicted=") && !text.contains("evicted=0 "),
         "evictions reported: {text}"
     );
-    let index_len = std::fs::metadata(dir.join("index.bin")).unwrap().len();
+    let indexes = index_files(&dir);
+    assert!(!indexes.is_empty(), "compaction wrote at least one index");
+    let total: u64 = indexes
+        .iter()
+        .map(|p| std::fs::metadata(p).unwrap().len())
+        .sum();
     assert!(
-        index_len <= 1024 * 1024,
-        "index fits the 1 MB cap, got {index_len} B"
+        total <= 1024 * 1024,
+        "shard indexes fit the 1 MB cap, got {total} B"
     );
     let _ = std::fs::remove_dir_all(&dir);
 }

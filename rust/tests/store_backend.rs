@@ -1,0 +1,238 @@
+//! Backend-agnostic contract tests for [`StoreBackend`].
+//!
+//! Every assertion here runs against *both* implementations — the
+//! persistent [`FileBackend`] and the disk-free [`MemoryBackend`] —
+//! through `&dyn StoreBackend`, so the [`ProfileStore`] facade (and the
+//! executor, trainer, and DLQ above it) can treat the two
+//! interchangeably.  Backend-specific behavior (persistence across
+//! reopens, ephemerality) gets its own tests at the bottom.
+
+use std::path::PathBuf;
+
+use mrtuner::apps::AppId;
+use mrtuner::mr::RepOutcome;
+use mrtuner::profiler::store::{
+    FileBackend, MemoryBackend, StoreBackend, StoreKey,
+};
+
+/// Unique per-test scratch directory (removed up front so reruns are
+/// deterministic even after a crashed run).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mrtuner_backend_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A repetition on the paper plane (8 GB input, 64 MB blocks): pinned
+/// through capped eviction, exactly what the online trainer consumes.
+fn paper_key(app: AppId, m: u32, r: u32, rep: u32) -> StoreKey {
+    StoreKey {
+        cluster: 0xFEED_F00D,
+        app,
+        num_mappers: m,
+        num_reducers: r,
+        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+        block_mb: StoreKey::PAPER_BLOCK_MB,
+        rep,
+        base_seed: 5,
+    }
+}
+
+/// An off-plane repetition: evictable under a size cap.
+fn filler_key(i: u32) -> StoreKey {
+    StoreKey {
+        cluster: 0xFEED_F00D,
+        app: AppId::WordCount,
+        num_mappers: 5 + (i % 36),
+        num_reducers: 6,
+        input_gb_bits: (4.0f64).to_bits(),
+        block_mb: 128,
+        rep: i,
+        base_seed: 5,
+    }
+}
+
+/// The put/get/journal portion of the contract: journaling is exactly
+/// "the generation advanced", CPU-ful records never downgrade, and
+/// `read_since` is a resumable upsert log.
+fn check_core_contract(backend: &dyn StoreBackend, label: &str) {
+    assert!(backend.is_empty(), "{label}: starts empty");
+    let k = paper_key(AppId::Grep, 10, 5, 0);
+    let partial = RepOutcome::time_only(123.5);
+    let full = RepOutcome::full(123.5, 45.25);
+
+    assert!(backend.put(k, partial), "{label}: new key journals");
+    assert!(!backend.is_empty(), "{label}: no longer empty");
+    assert_eq!(backend.len(), 1, "{label}: one record resident");
+    assert_eq!(backend.get(&k), Some(partial), "{label}: get roundtrip");
+    assert_eq!(backend.lookup(&k), Some(partial), "{label}: lookup");
+    assert!(
+        !backend.put(k, partial),
+        "{label}: identical re-put only bumps recency"
+    );
+    assert!(
+        backend.put(k, full),
+        "{label}: CPU upgrade journals the richer record"
+    );
+    assert!(
+        !backend.put(k, partial),
+        "{label}: a CPU-less duplicate never downgrades"
+    );
+    assert_eq!(backend.get(&k), Some(full), "{label}: upgraded in place");
+    assert_eq!(backend.len(), 1, "{label}: still one distinct record");
+
+    // The change journal: an upsert log with a resumable cursor.
+    let (all, gen) = backend.read_since(0);
+    assert_eq!(gen, backend.generation(), "{label}: cursor == generation");
+    assert!(
+        all.iter().all(|(key, _)| *key == k),
+        "{label}: journal only knows the one key"
+    );
+    assert!(
+        all.iter().all(|(_, o)| o.same_bits(&full)),
+        "{label}: every journal entry resolves to the current value"
+    );
+    let k2 = paper_key(AppId::EximParse, 12, 7, 1);
+    assert!(backend.put(k2, RepOutcome::time_only(9.0)));
+    let (fresh, gen2) = backend.read_since(gen);
+    assert_eq!(fresh.len(), 1, "{label}: cursor resumes after {gen}");
+    assert_eq!(fresh[0].0, k2, "{label}: only the new key streams");
+    assert!(gen2 > gen, "{label}: generation is monotonic");
+
+    backend.flush().unwrap();
+    assert_eq!(backend.pending(), 0, "{label}: flush drains the buffer");
+    backend.refresh().unwrap();
+    assert_eq!(backend.len(), 2, "{label}: refresh never loses records");
+}
+
+/// The capped-compaction portion of the contract: eviction trims to the
+/// cap but paper-plane repetitions are pinned, whatever the pressure.
+fn check_eviction_contract(backend: &dyn StoreBackend, label: &str) {
+    for rep in 0..4 {
+        backend.put(
+            paper_key(AppId::Grep, 20, 10, rep),
+            RepOutcome::full(100.0 + rep as f64, 7.0),
+        );
+    }
+    for i in 0..200 {
+        backend.put(filler_key(i), RepOutcome::full(10.0 + i as f64, 1.0));
+    }
+    backend.flush().unwrap();
+    let pass = backend.compact().unwrap();
+    assert!(pass.compacted, "{label}: cap pressure forces a rewrite");
+    let st = backend.stats();
+    assert!(st.evicted > 100, "{label}: filler evicted: {st}");
+    assert!(st.bytes <= 2048, "{label}: trimmed under the cap: {st}");
+    for rep in 0..4 {
+        assert!(
+            backend.lookup(&paper_key(AppId::Grep, 20, 10, rep)).is_some(),
+            "{label}: paper-plane rep {rep} pinned through eviction"
+        );
+    }
+    let (records, _) = backend.read_since(0);
+    assert_eq!(
+        records.len(),
+        backend.len(),
+        "{label}: read_since skips evicted journal keys"
+    );
+}
+
+#[test]
+fn file_backend_honors_core_contract() {
+    let dir = scratch("core");
+    let backend = FileBackend::new(&dir, None, true);
+    check_core_contract(&backend, "file");
+    drop(backend);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn memory_backend_honors_core_contract() {
+    check_core_contract(&MemoryBackend::new(None), "memory");
+}
+
+#[test]
+fn file_backend_evicts_to_cap_but_pins_paper_plane() {
+    let dir = scratch("evict");
+    let backend = FileBackend::new(&dir, Some(2048), true);
+    check_eviction_contract(&backend, "file");
+    drop(backend);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn memory_backend_evicts_to_cap_but_pins_paper_plane() {
+    check_eviction_contract(&MemoryBackend::new(Some(2048)), "memory");
+}
+
+/// Odd `f64` bit patterns (NaN payloads, infinities, signed zero,
+/// subnormals) survive both backends bit-identically — the property the
+/// warm-start guarantee rests on.
+#[test]
+fn backends_answer_bit_identically() {
+    let dir = scratch("bits");
+    let file = FileBackend::new(&dir, None, true);
+    let mem = MemoryBackend::new(None);
+    let weird = [
+        f64::from_bits(0x7FF8_0000_0000_BEEF), // NaN with a payload
+        f64::NEG_INFINITY,
+        -0.0,
+        5e-324, // smallest positive subnormal
+        123.456,
+    ];
+    for (i, t) in weird.into_iter().enumerate() {
+        let k = paper_key(AppId::Grep, 30, 15, i as u32);
+        let o = RepOutcome::full(t, t);
+        file.put(k, o);
+        mem.put(k, o);
+    }
+    file.flush().unwrap();
+    for (i, t) in weird.into_iter().enumerate() {
+        let k = paper_key(AppId::Grep, 30, 15, i as u32);
+        let a = file.get(&k).expect("file backend holds the record");
+        let b = mem.get(&k).expect("memory backend holds the record");
+        assert!(a.same_bits(&b), "rep {i}: backends disagree");
+        assert_eq!(a.time_s.to_bits(), t.to_bits(), "rep {i}: exact bits");
+    }
+    drop(file);
+
+    // And the file backend round-trips those bits through disk.
+    let reopened = FileBackend::new(&dir, None, true);
+    for (i, t) in weird.into_iter().enumerate() {
+        let k = paper_key(AppId::Grep, 30, 15, i as u32);
+        let got = reopened.lookup(&k).expect("persisted");
+        assert!(
+            got.same_bits(&RepOutcome::full(t, t)),
+            "rep {i}: disk round-trip changed bits"
+        );
+    }
+    drop(reopened);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Where the backends legitimately differ: `flush` makes the file
+/// backend's records durable across instances, while a fresh memory
+/// backend always starts empty.
+#[test]
+fn flush_persists_file_backend_and_memory_is_ephemeral() {
+    let dir = scratch("persist");
+    let k = paper_key(AppId::WordCount, 8, 4, 0);
+    let o = RepOutcome::full(55.5, 5.5);
+    {
+        let backend = FileBackend::new(&dir, None, true);
+        backend.put(k, o);
+        backend.flush().unwrap();
+    }
+    let reopened = FileBackend::new(&dir, None, true);
+    assert_eq!(reopened.get(&k), Some(o), "file backend persists");
+    drop(reopened);
+
+    let mem = MemoryBackend::new(None);
+    mem.put(k, o);
+    mem.flush().unwrap();
+    drop(mem);
+    let fresh = MemoryBackend::new(None);
+    assert_eq!(fresh.get(&k), None, "memory backend leaves nothing behind");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,234 @@
+//! Sharded-store integration tests: per-app shard affinity across real
+//! OS processes, and compaction idempotence under the background thread.
+//!
+//! The scenarios here are the ones the sharding invariant exists for:
+//! two campaigns profiling *disjoint* applications share one store
+//! without ever touching each other's shard (so neither can contend on
+//! the other's segment or compaction locks), and a reader that opened
+//! the store before either writer existed sees both after one
+//! `refresh()`.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use mrtuner::apps::AppId;
+use mrtuner::mr::RepOutcome;
+use mrtuner::profiler::store::{
+    ProfileStore, StoreKey, StoreOptions, DEFAULT_STORE_SHARDS,
+};
+
+/// Unique per-test scratch directory (removed up front so reruns are
+/// deterministic even after a crashed run).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mrtuner_shard_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A paper-plane repetition (8 GB input, 64 MB blocks).
+fn plane_key(app: AppId, m: u32, r: u32, rep: u32) -> StoreKey {
+    StoreKey {
+        cluster: 0xABCD_0123,
+        app,
+        num_mappers: m,
+        num_reducers: r,
+        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+        block_mb: StoreKey::PAPER_BLOCK_MB,
+        rep,
+        base_seed: 11,
+    }
+}
+
+/// Whether a shard directory holds any store data (segment or index).
+fn shard_has_data(dir: &Path, shard: &str) -> bool {
+    std::fs::read_dir(dir.join(shard))
+        .map(|rd| {
+            rd.flatten().any(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                name.starts_with("seg-") || name == "index.bin"
+            })
+        })
+        .unwrap_or(false)
+}
+
+/// Bytes of every shard index, keyed by shard directory name.
+fn index_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let name = e.file_name().to_string_lossy().into_owned();
+            let idx = e.path().join("index.bin");
+            if name.starts_with("shard-") && idx.is_file() {
+                out.push((name, std::fs::read(&idx).unwrap()));
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// The ISSUE 8 concurrency criterion: two spawned `mrtuner` processes
+/// profiling disjoint applications write the same store at the same
+/// time, each confined to its own shard, and a third session that
+/// opened the store *before* either writer sees all of their records
+/// after one `refresh()`.
+#[test]
+fn disjoint_app_campaigns_share_a_store_without_contention() {
+    let dir = scratch("disjoint");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // The reader opens first — and fully loads every (empty) shard —
+    // so only refresh() can show it records written afterwards.
+    let reader = ProfileStore::open_with_opts(
+        &dir,
+        StoreOptions {
+            background_compaction: false,
+            ..StoreOptions::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(reader.shard_count(), DEFAULT_STORE_SHARDS);
+    assert_eq!(reader.generation(), 0, "store starts empty");
+
+    let bin = env!("CARGO_BIN_EXE_mrtuner");
+    let spawn = |app: &str, csv: &str| {
+        Command::new(bin)
+            .args([
+                "fig4", "--app", app, "--step", "20", "--reps", "2",
+                "--seed", "7", "--jobs", "2", "--store",
+            ])
+            .arg(&dir)
+            .arg("--csv")
+            .arg(dir.join(csv))
+            .stdout(Stdio::piped())
+            .stderr(Stdio::piped())
+            .spawn()
+            .expect("spawn mrtuner fig4")
+    };
+
+    // Both writers run concurrently against the same store root.
+    let wc = spawn("wordcount", "wc.csv");
+    let gr = spawn("grep", "grep.csv");
+    let wc = wc.wait_with_output().expect("wait for wordcount run");
+    let gr = gr.wait_with_output().expect("wait for grep run");
+    for (label, out) in [("wordcount", &wc), ("grep", &gr)] {
+        let err = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "{label} run failed: {err}");
+        // step 20 on [5,40] → M,R ∈ {5,25} → 4 settings × 2 reps.
+        assert!(err.contains("simulated=8"), "{label} cold run: {err}");
+        assert!(
+            !err.contains("lock busy"),
+            "{label} contended on a lock it should never touch: {err}"
+        );
+    }
+
+    // Per-app affinity (FNV-1a over the app name, 4 shards): wordcount
+    // routes to shard-00 and grep to shard-01 — each writer left data
+    // in exactly its own shard, so neither could have contended on the
+    // other's segment or compaction locks.
+    assert_eq!(DEFAULT_STORE_SHARDS, 4, "affinity map assumes 4 shards");
+    assert!(shard_has_data(&dir, "shard-00"), "wordcount → shard-00");
+    assert!(shard_has_data(&dir, "shard-01"), "grep → shard-01");
+    assert!(
+        !shard_has_data(&dir, "shard-02")
+            && !shard_has_data(&dir, "shard-03"),
+        "shards no writer routed to stay empty"
+    );
+
+    // The pre-existing reader catches up with one refresh.
+    let fresh = reader.refresh().unwrap();
+    assert_eq!(fresh, 16, "refresh surfaces both writers' reps");
+    let (records, _) = reader.read_since(0);
+    let per_app = |app: AppId| {
+        records.iter().filter(|(k, _)| k.app == app).count()
+    };
+    assert_eq!(per_app(AppId::WordCount), 8);
+    assert_eq!(per_app(AppId::Grep), 8);
+    assert_eq!(reader.len(), 16);
+    drop(reader);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Compaction is idempotent and safe under the background thread: a
+/// synchronous `compact_now()` racing the open-time background pass
+/// rewrites every shard exactly once (the per-shard `compact.lock`
+/// makes the loser skip), reads stay bit-identical throughout, and a
+/// later pass over the settled store changes nothing on disk.
+#[test]
+fn background_compaction_is_idempotent_and_race_safe() {
+    let dir = scratch("bgcompact");
+
+    // Session 1: write across all three apps with compaction off, so
+    // dropping leaves one fresh segment in every touched shard.
+    let mut expect: Vec<(StoreKey, RepOutcome)> = Vec::new();
+    {
+        let store = ProfileStore::open_with_opts(
+            &dir,
+            StoreOptions {
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        for (ai, app) in AppId::all().into_iter().enumerate() {
+            for rep in 0..5 {
+                let k = plane_key(app, 10 + ai as u32, 5, rep);
+                let o = RepOutcome::full(
+                    50.0 * (ai + 1) as f64 + rep as f64,
+                    3.0 + rep as f64,
+                );
+                store.put(k, o);
+                expect.push((k, o));
+            }
+        }
+        store.flush().unwrap();
+        assert_eq!(store.pending(), 0, "flush drained every shard");
+    }
+
+    // Session 2: background compaction ON, raced by a synchronous
+    // compact_now() from this thread.  Whichever pass reaches a shard
+    // first rewrites it; the other skips on the busy lock.
+    {
+        let store = ProfileStore::open(&dir).unwrap();
+        let pass = store.compact_now().unwrap();
+        assert_eq!(pass.entries, expect.len(), "no records lost: {pass}");
+        for (k, o) in &expect {
+            let got = store.get(k).expect("record survives the race");
+            assert!(got.same_bits(o), "compaction changed stored bits");
+        }
+    } // drop joins the background thread: compaction fully settled
+
+    // Session 3: one more pass finds nothing to do, and the shard
+    // indexes do not change byte-for-byte — idempotence.
+    let before = index_bytes(&dir);
+    assert!(!before.is_empty(), "compaction produced shard indexes");
+    {
+        let store = ProfileStore::open_with_opts(
+            &dir,
+            StoreOptions {
+                background_compaction: false,
+                ..StoreOptions::default()
+            },
+        )
+        .unwrap();
+        let pass = store.compact_now().unwrap();
+        assert!(!pass.compacted, "nothing left to compact: {pass}");
+        assert_eq!(pass.merged_segments, 0, "no segments remain");
+    }
+    assert_eq!(
+        before,
+        index_bytes(&dir),
+        "re-compaction is a byte-for-byte no-op"
+    );
+
+    // And a fresh read-only session still sees the original bits.
+    let store = ProfileStore::peek(&dir).unwrap();
+    assert_eq!(store.len(), expect.len());
+    for (k, o) in &expect {
+        let got = store.get(k).expect("record present after settle");
+        assert!(got.same_bits(o), "peek disagrees with written bits");
+    }
+    drop(store);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Schema check for BENCH_*.json perf-trajectory files.
 
-`mrtuner bench store|campaign|serve` emits machine-readable benchmark
+`mrtuner bench store|campaign|serve|trainer` emits machine-readable benchmark
 summaries; CI generates one per run and this script fails the build if
 an emitted — or committed — file is malformed, so the perf trajectory
 stays parseable forever.  Zero-dependency by design.
@@ -23,12 +23,16 @@ import sys
 # The per-bench summary metric that must be present and positive, and
 # the per-bench determinism flags that must be present and true.
 SUMMARY_KEYS = {
-    "store": "binary_vs_jsonl_open_speedup",
+    "store": "sharded_vs_single_open_speedup",
     "campaign": "parallel_speedup",
     "serve": "binary_vs_json_throughput_ratio",
+    "trainer": "resume_records_per_s",
 }
 IDENTITY_KEYS = {
-    "store": ["bit_identical_cold_warm"],
+    "store": [
+        "bit_identical_cold_warm",
+        "migration_get_identical",
+    ],
     "campaign": [
         "bit_identical_serial_parallel",
         "resume_zero_resim",
@@ -37,6 +41,7 @@ IDENTITY_KEYS = {
         "bit_identical_json_binary",
         "monotonic_versions_under_hot_swap",
     ],
+    "trainer": ["refits_cover_all_apps"],
 }
 
 
@@ -100,6 +105,10 @@ def check_file(path, problems):
         shed = doc.get("shed_rate")
         if not (is_num(shed) and 0.0 <= shed <= 1.0):
             bad("'shed_rate' must be a number in [0, 1]")
+    if bench == "trainer":
+        p50 = doc.get("incremental_poll_p50_s")
+        if not (is_num(p50) and p50 >= 0):
+            bad("'incremental_poll_p50_s' must be a non-negative number")
 
 
 def main():
