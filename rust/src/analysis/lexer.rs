@@ -1,0 +1,506 @@
+//! A minimal Rust lexer for the `mrtuner lint` static-analysis pass.
+//!
+//! The rule engine in [`super::rules`] matches token *patterns* (identifier
+//! and punctuation sequences), so the lexer's only job is to produce those
+//! tokens while guaranteeing that nothing inside a comment, a string
+//! literal, a raw string, a byte string, or a char literal ever reaches a
+//! rule. It also recognizes the repo's suppression-comment grammar (a line
+//! comment carrying `allow(<rules>) — <why>` after the lint's marker word;
+//! see the "Static invariants" section of `docs/ARCHITECTURE.md` for the
+//! exact spelling) and reports those directives alongside the token stream.
+//!
+//! Deliberate simplifications, safe for a linter that only needs *token*
+//! accuracy:
+//!
+//! * numeric literals are consumed but not emitted (no rule matches them);
+//! * lifetimes are consumed but not emitted, after disambiguating them from
+//!   char literals (`'a'` is a char, `'a ` is a lifetime);
+//! * doc comments (`///`, `//!`) are skipped like ordinary comments but are
+//!   *not* scanned for suppression directives, so documentation may quote
+//!   the directive grammar without tripping the malformed-directive check.
+
+/// Kinds of tokens surfaced to the rule engine.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokenKind {
+    /// An identifier or keyword (`foo`, `fn`, `BTreeMap`).
+    Ident(String),
+    /// A single punctuation character (`.`, `[`, `!`, ...).
+    Punct(char),
+}
+
+/// One token together with the 1-based source line it starts on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Token {
+    /// 1-based line number.
+    pub line: u32,
+    /// The token payload.
+    pub kind: TokenKind,
+}
+
+impl Token {
+    /// The identifier text, when this token is an identifier.
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokenKind::Ident(s) => Some(s),
+            TokenKind::Punct(_) => None,
+        }
+    }
+
+    /// True when the token is exactly the punctuation character `c`.
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokenKind::Punct(c)
+    }
+}
+
+/// True when `tok` renders as `want`: a one-character `want` that is not an
+/// identifier character compares against punctuation, anything else against
+/// identifier text. This is the comparison used by every rule pattern.
+pub(crate) fn token_is(tok: &Token, want: &str) -> bool {
+    match &tok.kind {
+        TokenKind::Ident(s) => s == want,
+        TokenKind::Punct(c) => {
+            let mut it = want.chars();
+            it.next() == Some(*c) && it.next().is_none()
+        }
+    }
+}
+
+/// A parsed suppression directive from a line comment.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AllowDirective {
+    /// 1-based line of the comment. The directive suppresses findings on
+    /// this line and on the line directly below it.
+    pub line: u32,
+    /// Rule-family names listed inside `allow(...)`.
+    pub rules: Vec<String>,
+    /// Whether non-empty justification text follows the closing paren.
+    pub justified: bool,
+}
+
+/// Lexer output: the token stream plus the lint-control comments found.
+#[derive(Debug, Default)]
+pub struct LexOutput {
+    /// Tokens outside comments and literals, in source order.
+    pub tokens: Vec<Token>,
+    /// Well-formed suppression directives.
+    pub allows: Vec<AllowDirective>,
+    /// Lines of non-doc comments that mention the lint marker word but do
+    /// not parse as a directive.
+    pub malformed: Vec<u32>,
+}
+
+/// The marker word that introduces a suppression directive in a comment.
+/// Kept out of this module's own comments so the shipped tree self-lints
+/// clean (a stray mention in a plain comment is itself a finding).
+const MARKER: &str = "mrlint";
+
+/// Tokenize `source`, skipping comments and all literal forms.
+pub fn lex(source: &str) -> LexOutput {
+    let chars: Vec<char> = source.chars().collect();
+    let mut out = LexOutput::default();
+    let mut line: u32 = 1;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && next == Some('/') {
+            let start = i;
+            while i < chars.len() && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            record_comment(&text, line, &mut out);
+        } else if c == '/' && next == Some('*') {
+            i += 2;
+            let mut depth = 1u32;
+            while i < chars.len() && depth > 0 {
+                if chars[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == '"' {
+            i = skip_string(&chars, i + 1, &mut line);
+        } else if c == '\'' {
+            i = skip_char_or_lifetime(&chars, i, &mut line);
+        } else if c.is_ascii_digit() {
+            i = skip_number(&chars, i);
+        } else if c == '_' || c.is_alphabetic() {
+            i = lex_word(&chars, i, &mut line, &mut out);
+        } else {
+            out.tokens.push(Token {
+                line,
+                kind: TokenKind::Punct(c),
+            });
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Consume a (non-raw) string body starting just past the opening quote;
+/// returns the index past the closing quote.
+fn skip_string(chars: &[char], mut i: usize, line: &mut u32) -> usize {
+    while i < chars.len() {
+        match chars[i] {
+            '\\' => {
+                if chars.get(i + 1) == Some(&'\n') {
+                    *line += 1;
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Disambiguate `'a'` (char literal) from `'a` (lifetime) at index `i`
+/// (which holds the quote) and consume whichever it is.
+fn skip_char_or_lifetime(chars: &[char], i: usize, line: &mut u32) -> usize {
+    let n1 = chars.get(i + 1).copied();
+    let n2 = chars.get(i + 2).copied();
+    let lifetime =
+        n1.is_some_and(|ch| ch == '_' || ch.is_alphabetic()) && n2 != Some('\'');
+    let mut j = i + 1;
+    if lifetime {
+        while j < chars.len() && (chars[j] == '_' || chars[j].is_alphanumeric()) {
+            j += 1;
+        }
+        return j;
+    }
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => j += 2,
+            '\'' => return j + 1,
+            '\n' => {
+                // Tolerate malformed input: keep line numbers right.
+                *line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Consume a numeric literal starting at digit index `i` (ints, floats,
+/// hex/oct/bin, underscores, exponents). Emits nothing.
+fn skip_number(chars: &[char], mut i: usize) -> usize {
+    i += 1;
+    while i < chars.len() {
+        let d = chars[i];
+        if d == '_' || d.is_ascii_alphanumeric() {
+            let sign_after_exp = (d == 'e' || d == 'E')
+                && matches!(chars.get(i + 1).copied(), Some('+') | Some('-'))
+                && chars.get(i + 2).copied().is_some_and(|x| x.is_ascii_digit());
+            i += if sign_after_exp { 3 } else { 1 };
+        } else if d == '.'
+            && chars.get(i + 1).copied().is_some_and(|x| x.is_ascii_digit())
+        {
+            i += 2;
+        } else {
+            break;
+        }
+    }
+    i
+}
+
+/// Read an identifier word at index `i`; handles the `r"…"`, `r#"…"#`,
+/// `b"…"`, `br#"…"#` string prefixes and `r#ident` raw identifiers.
+fn lex_word(chars: &[char], mut i: usize, line: &mut u32, out: &mut LexOutput) -> usize {
+    let start = i;
+    while i < chars.len() && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+        i += 1;
+    }
+    let word: String = chars[start..i].iter().collect();
+    let nc = chars.get(i).copied();
+    if (word == "r" || word == "br") && (nc == Some('"') || nc == Some('#')) {
+        let mut j = i;
+        let mut hashes = 0usize;
+        while chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if chars.get(j) == Some(&'"') {
+            return skip_raw_string(chars, j + 1, hashes, line);
+        }
+        if word == "r" && hashes == 1 {
+            // Raw identifier `r#type`: drop the `r#`, lex the rest normally.
+            return j;
+        }
+    }
+    if word == "b" && nc == Some('"') {
+        return skip_string(chars, i + 1, line);
+    }
+    out.tokens.push(Token {
+        line: *line,
+        kind: TokenKind::Ident(word),
+    });
+    i
+}
+
+/// Consume a raw-string body starting just past the opening quote, closing
+/// on a quote followed by `hashes` hash characters.
+fn skip_raw_string(chars: &[char], mut i: usize, hashes: usize, line: &mut u32) -> usize {
+    while i < chars.len() {
+        if chars[i] == '\n' {
+            *line += 1;
+            i += 1;
+            continue;
+        }
+        if chars[i] == '"' {
+            let mut k = 0usize;
+            while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Inspect a line comment for the suppression grammar. Doc comments are
+/// ignored entirely so documentation can quote the syntax.
+fn record_comment(text: &str, line: u32, out: &mut LexOutput) {
+    if text.starts_with("///") || text.starts_with("//!") {
+        return;
+    }
+    let Some(pos) = text.find(MARKER) else { return };
+    let rest = text[pos + MARKER.len()..]
+        .trim_start_matches(':')
+        .trim_start();
+    let Some(rest) = rest.strip_prefix("allow") else {
+        out.malformed.push(line);
+        return;
+    };
+    let Some(rest) = rest.trim_start().strip_prefix('(') else {
+        out.malformed.push(line);
+        return;
+    };
+    let Some(close) = rest.find(')') else {
+        out.malformed.push(line);
+        return;
+    };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if rules.is_empty() {
+        out.malformed.push(line);
+        return;
+    }
+    let tail = rest[close + 1..]
+        .trim_start_matches([' ', '\t', '\u{2014}', '\u{2013}', '-', ':', ','])
+        .trim();
+    out.allows.push(AllowDirective {
+        line,
+        rules,
+        justified: !tail.is_empty(),
+    });
+}
+
+/// Remove tokens belonging to `#[cfg(test)]` items (the attribute itself,
+/// any attributes stacked after it, and the item body). The skip covers
+/// exactly one item, so a mid-file `#[cfg(test)] fn helper()` does not
+/// swallow the production code below it.
+pub fn strip_cfg_test(tokens: &[Token]) -> Vec<Token> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < tokens.len() {
+        if is_cfg_test(tokens, i) {
+            i = skip_attribute(tokens, i);
+            while is_attribute_start(tokens, i) {
+                i = skip_attribute(tokens, i);
+            }
+            i = skip_item(tokens, i);
+        } else {
+            out.push(tokens[i].clone());
+            i += 1;
+        }
+    }
+    out
+}
+
+fn is_cfg_test(tokens: &[Token], i: usize) -> bool {
+    const SHAPE: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    tokens.len() >= i + SHAPE.len()
+        && SHAPE
+            .iter()
+            .enumerate()
+            .all(|(k, want)| token_is(&tokens[i + k], want))
+}
+
+fn is_attribute_start(tokens: &[Token], i: usize) -> bool {
+    i + 1 < tokens.len() && tokens[i].is_punct('#') && tokens[i + 1].is_punct('[')
+}
+
+/// Skip a `#[...]` attribute starting at the `#`; returns the index past
+/// the closing bracket.
+fn skip_attribute(tokens: &[Token], i: usize) -> usize {
+    let mut j = i + 2;
+    let mut depth = 1i32;
+    while j < tokens.len() && depth > 0 {
+        if tokens[j].is_punct('[') {
+            depth += 1;
+        }
+        if tokens[j].is_punct(']') {
+            depth -= 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Skip one item: through its balanced `{...}` body, or through a `;` at
+/// brace depth zero for brace-less items (`use`, trait method decls).
+fn skip_item(tokens: &[Token], i: usize) -> usize {
+    let mut j = i;
+    let mut depth = 0i32;
+    while j < tokens.len() {
+        let t = &tokens[j];
+        if t.is_punct('{') {
+            depth += 1;
+        }
+        if t.is_punct('}') {
+            depth -= 1;
+            if depth <= 0 {
+                return j + 1;
+            }
+        }
+        if t.is_punct(';') && depth == 0 {
+            return j + 1;
+        }
+        j += 1;
+    }
+    j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .iter()
+            .filter_map(|t| t.ident().map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn line_and_block_comments_emit_nothing() {
+        let src = "let a = 1; // HashMap here\n/* Instant::now()\n/* nested SystemTime */ still */\nlet b = 2;";
+        let ids = idents(src);
+        assert_eq!(ids, ["let", "a", "let", "b"]);
+        let last = lex(src).tokens.last().cloned().unwrap();
+        assert_eq!(last.line, 4, "nested block comment must count lines");
+    }
+
+    #[test]
+    fn strings_and_raw_strings_emit_nothing() {
+        let src = r###"let s = "partial_cmp"; let r = r#"f64::max "quoted" inner"#; let b = b"unwrap()";"###;
+        let ids = idents(src);
+        assert_eq!(ids, ["let", "s", "let", "r", "let", "b"]);
+    }
+
+    #[test]
+    fn raw_string_hash_depth_is_respected() {
+        // A `"#` inside an `r##"…"##` string does not close it.
+        let src = "r##\" inner \"# still inside \"## after";
+        assert_eq!(idents(src), ["after"]);
+    }
+
+    #[test]
+    fn char_literals_are_not_lifetimes() {
+        let src = "let c = 'x'; fn f<'shelf>(v: &'shelf str) { let esc = '\\n'; let quote = '\\''; }";
+        let ids = idents(src);
+        assert!(ids.contains(&"str".to_string()));
+        assert!(ids.contains(&"esc".to_string()));
+        // Neither the char payloads nor the lifetime name leak as idents.
+        assert!(!ids.contains(&"x".to_string()));
+        assert!(!ids.contains(&"shelf".to_string()));
+    }
+
+    #[test]
+    fn numbers_and_floats_emit_nothing() {
+        let src = "let x = 0xFF_u32 + 1.5e-3 + 2.0; let r = 0..5;";
+        assert_eq!(idents(src), ["let", "x", "let", "r"]);
+    }
+
+    #[test]
+    fn directive_parses_rules_and_justification() {
+        let src = "// mrlint: allow(determinism, panic_free) \u{2014} clock names files only\nlet x = 1;";
+        let out = lex(src);
+        assert_eq!(out.allows.len(), 1);
+        let a = &out.allows[0];
+        assert_eq!(a.line, 1);
+        assert_eq!(a.rules, ["determinism", "panic_free"]);
+        assert!(a.justified);
+        assert!(out.malformed.is_empty());
+    }
+
+    #[test]
+    fn directive_without_justification_and_malformed_marker() {
+        let out = lex("// mrlint: allow(determinism)\nlet x = 1; // mrlint fixme later\n");
+        assert_eq!(out.allows.len(), 1);
+        assert!(!out.allows[0].justified);
+        assert_eq!(out.malformed, [2]);
+    }
+
+    #[test]
+    fn doc_comments_may_quote_the_grammar() {
+        let out = lex("/// write `// mrlint: allow(rule) — why` above the site\nlet x = 1;");
+        assert!(out.allows.is_empty());
+        assert!(out.malformed.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_strips_only_the_next_item() {
+        let src = "#[cfg(test)]\nfn helper() { let h = HashMap::new(); }\nfn real() { let i = Instant::now(); }";
+        let kept = strip_cfg_test(&lex(src).tokens);
+        let ids: Vec<&str> = kept.iter().filter_map(Token::ident).collect();
+        assert!(!ids.contains(&"HashMap"));
+        assert!(ids.contains(&"Instant"), "code after the test item must survive");
+    }
+
+    #[test]
+    fn cfg_test_strips_whole_mod_and_stacked_attributes() {
+        let src = "fn real() {}\n#[cfg(test)]\n#[allow(dead_code)]\nmod tests { fn t() { x.lock().unwrap(); } }\nfn after() {}";
+        let kept = strip_cfg_test(&lex(src).tokens);
+        let ids: Vec<&str> = kept.iter().filter_map(Token::ident).collect();
+        assert!(!ids.contains(&"unwrap"));
+        assert!(ids.contains(&"after"));
+    }
+
+    #[test]
+    fn cfg_test_strips_braceless_items() {
+        let src = "#[cfg(test)]\nuse std::collections::HashMap;\nfn real() {}";
+        let kept = strip_cfg_test(&lex(src).tokens);
+        let ids: Vec<&str> = kept.iter().filter_map(Token::ident).collect();
+        assert!(!ids.contains(&"HashMap"));
+        assert!(ids.contains(&"real"));
+    }
+}

@@ -1,0 +1,74 @@
+//! The declared lock hierarchy backing the `lock_discipline` rule.
+//!
+//! The repo's blocking primitives form a global acquisition order; holding
+//! a higher-ranked lock while acquiring a lower-ranked one risks deadlock
+//! between the serving path, the background compactor, and cooperative
+//! campaign drains. Conceptually there are five levels:
+//!
+//! 1. the model-registry `RwLock` in `coordinator/service.rs`;
+//! 2. the store *root* `compact.lock` file guarding cross-shard layout
+//!    changes (legacy migration, shard-count resolution);
+//! 3. the *per-shard* `compact.lock` file guarding one shard's segment
+//!    rewrite;
+//! 4. segment write locks, taken when a [`SegmentWriter`] is created;
+//! 5. per-rep drain/replay leases under the dead-letter queue.
+//!
+//! Levels 2 and 3 share one primitive (`CompactGuard::acquire`, pointed at
+//! either the root or a shard directory), so a single token pattern covers
+//! both and the root-before-shard order within the pair is enforced by the
+//! call structure in `profiler/store/sharded.rs` rather than by the lint.
+//!
+//! Every pattern listed here must match at least one real call site in the
+//! tree; `run_lint` reports a stale manifest otherwise, so this file cannot
+//! silently drift from the code it describes.
+//!
+//! [`SegmentWriter`]: crate::profiler::store
+
+/// One level of the global lock-acquisition order.
+#[derive(Debug)]
+pub struct LockLevel {
+    /// Position in the acquisition order; lower ranks must be taken first.
+    pub rank: u8,
+    /// Human-readable name used in findings.
+    pub name: &'static str,
+    /// Token patterns whose match marks an acquisition of this level.
+    /// Each pattern element is an identifier or a single punctuation
+    /// character, compared in sequence against the token stream.
+    pub patterns: &'static [&'static [&'static str]],
+}
+
+/// The hierarchy, ordered by rank.
+pub const LOCK_HIERARCHY: &[LockLevel] = &[
+    LockLevel {
+        rank: 0,
+        name: "model-registry RwLock",
+        patterns: &[&["registry_read"], &["registry_write"]],
+    },
+    LockLevel {
+        rank: 1,
+        name: "store compaction guard (root or per-shard compact.lock)",
+        patterns: &[&["CompactGuard", ":", ":", "acquire"]],
+    },
+    LockLevel {
+        rank: 2,
+        name: "segment write lock",
+        patterns: &[&["SegmentWriter", ":", ":", "create"]],
+    },
+    LockLevel {
+        rank: 3,
+        name: "drain/replay lease",
+        patterns: &[&["try_claim_lease"]],
+    },
+];
+
+/// Flatten the hierarchy into `(level, pattern)` pairs, in manifest order.
+/// The freshness check in `run_lint` counts matches per entry of this list.
+pub fn flat_patterns() -> Vec<(&'static LockLevel, &'static [&'static str])> {
+    let mut out = Vec::new();
+    for level in LOCK_HIERARCHY {
+        for pat in level.patterns {
+            out.push((level, *pat));
+        }
+    }
+    out
+}

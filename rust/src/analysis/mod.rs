@@ -1,0 +1,131 @@
+//! `mrtuner lint` — a repo-invariant static-analysis pass.
+//!
+//! The paper's method (profile → fit → predict, arXiv 1203.0651) is only
+//! sound if a configuration point maps to a reproducible measurement, so
+//! this crate carries two load-bearing invariants: *a `StoreKey` fully
+//! determines its simulation* and *parallel output is bit-identical to
+//! serial*. The test suite checks them after the fact; this module checks
+//! their known failure modes at the source level, on every PR, with a
+//! hand-rolled zero-dependency scanner:
+//!
+//! * [`lexer`] tokenizes Rust source, guaranteeing comments, strings, raw
+//!   strings, and char literals never reach a rule, and strips
+//!   `#[cfg(test)]` items;
+//! * [`manifest`] declares the global lock-acquisition hierarchy;
+//! * [`rules`] matches the four rule families (determinism, NaN ordering,
+//!   lock discipline, panic-free hot paths) and applies the suppression
+//!   directives.
+//!
+//! [`run_lint`] walks a source tree (deterministically: paths sorted),
+//! lints every `.rs` file, and adds the manifest-freshness check — every
+//! lock-hierarchy pattern must still match at least one real site, so the
+//! manifest cannot drift from the code. The `mrtuner lint` subcommand
+//! exits non-zero when any unsuppressed finding remains.
+
+pub mod lexer;
+pub mod manifest;
+pub mod rules;
+
+pub use rules::Finding;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Result of linting a source tree.
+#[derive(Debug)]
+pub struct LintReport {
+    /// All unsuppressed findings, ordered by file then line.
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+/// Walk `root` and lint every `.rs` file under it.
+pub fn run_lint(root: &Path) -> Result<LintReport, String> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let pats = manifest::flat_patterns();
+    let mut totals = vec![0usize; pats.len()];
+    let mut findings = Vec::new();
+    for path in &files {
+        let text = fs::read_to_string(path)
+            .map_err(|e| format!("lint: read {}: {e}", path.display()))?;
+        let rel = relative_label(root, path);
+        let (mut file_findings, counts) = rules::lint_source_counted(&rel, &text);
+        for (total, count) in totals.iter_mut().zip(counts) {
+            *total += count;
+        }
+        findings.append(&mut file_findings);
+    }
+    for ((level, pat), total) in pats.iter().zip(&totals) {
+        if *total == 0 {
+            findings.push(Finding {
+                file: "analysis/manifest.rs".to_string(),
+                line: 1,
+                rule: "lock_discipline".to_string(),
+                message: format!(
+                    "stale lock-hierarchy manifest: pattern `{}` for `{}` matches no site",
+                    pat.join(""),
+                    level.name
+                ),
+                snippet: String::new(),
+            });
+        }
+    }
+    Ok(LintReport {
+        findings,
+        files_scanned: files.len(),
+    })
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    let entries =
+        fs::read_dir(dir).map_err(|e| format!("lint: read dir {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("lint: read dir {}: {e}", dir.display()))?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|ext| ext == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// `root`-relative path with `/` separators, used for scope matching and
+/// stable output across platforms.
+fn relative_label(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walker_is_deterministic_and_reports_stale_manifest() {
+        let dir = std::env::temp_dir().join(format!(
+            "mrtuner-lint-walk-{}",
+            std::process::id()
+        ));
+        let sub = dir.join("mr");
+        fs::create_dir_all(&sub).expect("mkdir");
+        fs::write(sub.join("b.rs"), "fn ok() {}\n").expect("write");
+        fs::write(sub.join("a.rs"), "use std::collections::HashMap;\n").expect("write");
+        let report = run_lint(&dir).expect("walk");
+        assert_eq!(report.files_scanned, 2);
+        // One determinism finding from mr/a.rs plus one stale-manifest
+        // finding per lock-hierarchy pattern (the temp tree has no locks).
+        let stale = manifest::flat_patterns().len();
+        assert_eq!(report.findings.len(), 1 + stale);
+        assert_eq!(report.findings[0].file, "mr/a.rs");
+        assert_eq!(report.findings[0].rule, "determinism");
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,642 @@
+//! Token-pattern rules for `mrtuner lint`.
+//!
+//! Four rule families, each scoped to the modules where its invariant is
+//! load-bearing (scopes are matched on the path relative to the scanned
+//! root, `/`-separated):
+//!
+//! * **determinism** — wall clocks (`Instant`, `SystemTime`) and
+//!   randomized-order collections (`HashMap`, `HashSet`, `DefaultHasher`,
+//!   `RandomState`) are banned in the simulation-critical modules (`mr/`,
+//!   `sim/`, `model/`, `apps/`, `datagen/`, `dfs/`, `cluster/`, and
+//!   `profiler/` outside `profiler/store/`), where they would break the
+//!   "a `StoreKey` fully determines its simulation" invariant.
+//! * **nan_ordering** — `partial_cmp` and `f64::max`/`f64::min` (and the
+//!   `f32` twins) are banned everywhere in favor of `total_cmp` /
+//!   `util::stats::total_max` / `total_min`; a NaN must surface, not
+//!   silently reorder or vanish. Float `sort_by` comparators are covered
+//!   transitively: the only float comparator is `partial_cmp` itself.
+//!   Known limitation: the method form `x.max(y)` is indistinguishable
+//!   from `Ord::max` at token level and is left to review.
+//! * **lock_discipline** — in `coordinator/` and `profiler/store/`, lock
+//!   results must not be `.unwrap()`/`.expect()`-ed (poison must be
+//!   recovered, mirroring `ServiceMetrics::lock_poisoned`); additionally,
+//!   in every function body, acquisitions matched against the
+//!   [`super::manifest::LOCK_HIERARCHY`] patterns must appear in
+//!   non-decreasing rank order.
+//! * **panic_free** — on the serving hot path (`coordinator/server.rs`,
+//!   `wire.rs`, `service.rs`) and in all store backends
+//!   (`profiler/store/`), `.unwrap()`, `.expect()`, `panic!` and
+//!   slice/array indexing are banned; `assert!`/`debug_assert!` remain
+//!   allowed as invariant documentation.
+//!
+//! Test code is exempt: `#[cfg(test)]` items are stripped before matching.
+//! A finding is suppressed by an `allow` directive comment on the same
+//! line or the line above (grammar in `docs/ARCHITECTURE.md`); directives
+//! must carry a justification, must name a known rule, and must actually
+//! suppress something — violations of those meta-rules are findings
+//! themselves, so the suppression inventory can never rot silently.
+
+use super::lexer::{self, AllowDirective, Token, TokenKind};
+use super::manifest;
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path of the file, relative to the scanned root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: u32,
+    /// Rule family that fired (one of [`RULES`], or `mrlint` for
+    /// directive meta-findings).
+    pub rule: String,
+    /// Human-readable explanation.
+    pub message: String,
+    /// The offending source line, trimmed (empty for synthetic findings).
+    pub snippet: String,
+}
+
+impl Finding {
+    /// One-line human rendering: `file:line: [rule] message | snippet`.
+    pub fn render(&self) -> String {
+        if self.snippet.is_empty() {
+            format!("{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+        } else {
+            format!(
+                "{}:{}: [{}] {} | {}",
+                self.file, self.line, self.rule, self.message, self.snippet
+            )
+        }
+    }
+
+    /// Machine-readable one-object-per-line JSON rendering.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"message\":\"{}\",\"snippet\":\"{}\"}}",
+            json_escape(&self.file),
+            self.line,
+            json_escape(&self.rule),
+            json_escape(&self.message),
+            json_escape(&self.snippet)
+        )
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Rule-family names accepted by the `allow` directive.
+pub const RULES: [&str; 4] = [
+    "determinism",
+    "nan_ordering",
+    "lock_discipline",
+    "panic_free",
+];
+
+/// Rule name used for directive meta-findings (malformed, unjustified,
+/// unknown-rule, and unused directives). Not itself suppressible.
+pub const META_RULE: &str = "mrlint";
+
+/// Lint one source file; `rel` is its path relative to the scan root.
+pub fn lint_source(rel: &str, text: &str) -> Vec<Finding> {
+    lint_source_counted(rel, text).0
+}
+
+/// Lint one source file and also count, per flattened manifest pattern,
+/// how many times it matched (for the manifest-freshness check).
+pub fn lint_source_counted(rel: &str, text: &str) -> (Vec<Finding>, Vec<usize>) {
+    let lexed = lexer::lex(text);
+    let code = lexer::strip_cfg_test(&lexed.tokens);
+    let mut raw: Vec<RawFinding> = Vec::new();
+    if in_determinism_scope(rel) {
+        check_determinism(&code, &mut raw);
+    }
+    check_nan_ordering(&code, &mut raw);
+    if in_lock_scope(rel) {
+        check_lock_unwrap(&code, &mut raw);
+    }
+    check_lock_order(&code, &mut raw);
+    if in_panic_scope(rel) {
+        check_panic_free(&code, &mut raw);
+    }
+    let counts = manifest_counts(&code);
+    let findings = apply_allows(rel, text, &lexed.allows, &lexed.malformed, raw);
+    (findings, counts)
+}
+
+/// `(line, rule, message)` before suppression is applied.
+type RawFinding = (u32, &'static str, String);
+
+fn in_determinism_scope(rel: &str) -> bool {
+    const PREFIXES: [&str; 7] = [
+        "mr/", "sim/", "model/", "apps/", "datagen/", "dfs/", "cluster/",
+    ];
+    if PREFIXES.iter().any(|p| rel.starts_with(p)) {
+        return true;
+    }
+    rel.starts_with("profiler/") && !rel.starts_with("profiler/store/")
+}
+
+fn in_lock_scope(rel: &str) -> bool {
+    rel.starts_with("coordinator/") || rel.starts_with("profiler/store/")
+}
+
+fn in_panic_scope(rel: &str) -> bool {
+    matches!(
+        rel,
+        "coordinator/server.rs" | "coordinator/wire.rs" | "coordinator/service.rs"
+    ) || rel.starts_with("profiler/store/")
+}
+
+/// True when `code[at..]` starts with the pattern (see
+/// `lexer::token_is` for the per-element comparison).
+fn matches_seq(code: &[Token], at: usize, pat: &[&str]) -> bool {
+    pat.iter()
+        .enumerate()
+        .all(|(k, want)| code.get(at + k).is_some_and(|t| lexer::token_is(t, want)))
+}
+
+const DETERMINISM_BANNED: [(&str, &str); 6] = [
+    ("Instant", "wall-clock reads are not reproducible across runs"),
+    ("SystemTime", "wall-clock reads are not reproducible across runs"),
+    ("DefaultHasher", "hash output varies per process"),
+    ("RandomState", "hash seeding varies per process"),
+    ("HashMap", "iteration order is randomized; use BTreeMap"),
+    ("HashSet", "iteration order is randomized; use BTreeSet"),
+];
+
+fn check_determinism(code: &[Token], raw: &mut Vec<RawFinding>) {
+    for t in code {
+        let TokenKind::Ident(s) = &t.kind else { continue };
+        if let Some((name, why)) = DETERMINISM_BANNED
+            .iter()
+            .find(|(name, _)| *name == s.as_str())
+        {
+            raw.push((
+                t.line,
+                "determinism",
+                format!("`{name}` in a simulation-critical module: {why}"),
+            ));
+        }
+    }
+}
+
+fn check_nan_ordering(code: &[Token], raw: &mut Vec<RawFinding>) {
+    for (i, t) in code.iter().enumerate() {
+        let TokenKind::Ident(s) = &t.kind else { continue };
+        if s == "partial_cmp" {
+            raw.push((
+                t.line,
+                "nan_ordering",
+                "`partial_cmp` returns None on NaN; use `total_cmp`".to_string(),
+            ));
+        }
+        if (s == "f64" || s == "f32") && matches_seq(code, i + 1, &[":", ":"]) {
+            if let Some(m) = code.get(i + 3).and_then(Token::ident) {
+                if m == "max" || m == "min" {
+                    raw.push((
+                        t.line,
+                        "nan_ordering",
+                        format!(
+                            "`{s}::{m}` silently drops a NaN operand; use `util::stats::total_{m}`"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+fn check_lock_unwrap(code: &[Token], raw: &mut Vec<RawFinding>) {
+    for i in 0..code.len() {
+        if !code[i].is_punct('.') {
+            continue;
+        }
+        let Some(m) = code.get(i + 1).and_then(Token::ident) else {
+            continue;
+        };
+        if m != "lock" && m != "read" && m != "write" {
+            continue;
+        }
+        if !matches_seq(code, i + 2, &["(", ")", "."]) {
+            continue;
+        }
+        let Some(next) = code.get(i + 5).and_then(Token::ident) else {
+            continue;
+        };
+        if next == "unwrap" || next == "expect" {
+            raw.push((
+                code[i + 1].line,
+                "lock_discipline",
+                format!(
+                    "`.{m}().{next}(..)` on a lock result; recover poison \
+                     (see `ServiceMetrics::lock_poisoned`) instead of panicking"
+                ),
+            ));
+        }
+    }
+}
+
+/// Check every function body for lock acquisitions that decrease in rank.
+fn check_lock_order(code: &[Token], raw: &mut Vec<RawFinding>) {
+    let mut i = 0usize;
+    while i < code.len() {
+        if code[i].ident() != Some("fn") {
+            i += 1;
+            continue;
+        }
+        // Find the body start: the first `{` outside the signature's
+        // parens/brackets; a `;` there means a bodiless declaration.
+        let mut j = i + 1;
+        let mut paren = 0i32;
+        let mut bracket = 0i32;
+        let mut body_start = None;
+        while j < code.len() {
+            let t = &code[j];
+            if t.is_punct('(') {
+                paren += 1;
+            }
+            if t.is_punct(')') {
+                paren -= 1;
+            }
+            if t.is_punct('[') {
+                bracket += 1;
+            }
+            if t.is_punct(']') {
+                bracket -= 1;
+            }
+            if paren == 0 && bracket == 0 {
+                if t.is_punct(';') {
+                    break;
+                }
+                if t.is_punct('{') {
+                    body_start = Some(j + 1);
+                    break;
+                }
+            }
+            j += 1;
+        }
+        let Some(start) = body_start else {
+            i = j + 1;
+            continue;
+        };
+        let mut depth = 1i32;
+        let mut k = start;
+        while k < code.len() && depth > 0 {
+            if code[k].is_punct('{') {
+                depth += 1;
+            }
+            if code[k].is_punct('}') {
+                depth -= 1;
+            }
+            k += 1;
+        }
+        scan_order(&code[start..k], raw);
+        i = k;
+    }
+}
+
+fn match_level_at(code: &[Token], i: usize) -> Option<&'static manifest::LockLevel> {
+    for level in manifest::LOCK_HIERARCHY {
+        for pat in level.patterns {
+            if matches_seq(code, i, pat) {
+                return Some(level);
+            }
+        }
+    }
+    None
+}
+
+fn scan_order(body: &[Token], raw: &mut Vec<RawFinding>) {
+    let mut held: Option<(u8, &'static str)> = None;
+    for i in 0..body.len() {
+        let Some(level) = match_level_at(body, i) else {
+            continue;
+        };
+        if let Some((rank, name)) = held {
+            if level.rank < rank {
+                raw.push((
+                    body[i].line,
+                    "lock_discipline",
+                    format!(
+                        "`{}` (rank {}) acquired after `{}` (rank {}); \
+                         violates the declared lock hierarchy",
+                        level.name, level.rank, name, rank
+                    ),
+                ));
+            }
+        }
+        let update = match held {
+            None => true,
+            Some((rank, _)) => level.rank > rank,
+        };
+        if update {
+            held = Some((level.rank, level.name));
+        }
+    }
+}
+
+/// Identifiers that may legitimately precede `[` without it being an
+/// indexing expression (`let [a, b] = ...`, `&mut [u8]`, `x as [u8; 2]`).
+const NON_INDEX_KEYWORDS: [&str; 26] = [
+    "let", "mut", "ref", "in", "if", "else", "match", "return", "while", "for", "loop",
+    "move", "as", "box", "break", "continue", "unsafe", "where", "dyn", "impl", "pub",
+    "const", "static", "use", "mod", "yield",
+];
+
+fn check_panic_free(code: &[Token], raw: &mut Vec<RawFinding>) {
+    for i in 0..code.len() {
+        let t = &code[i];
+        match &t.kind {
+            TokenKind::Ident(s) => {
+                if (s == "unwrap" || s == "expect")
+                    && i > 0
+                    && code[i - 1].is_punct('.')
+                    && code.get(i + 1).is_some_and(|n| n.is_punct('('))
+                {
+                    raw.push((
+                        t.line,
+                        "panic_free",
+                        format!("`.{s}(..)` can panic on a hot path; propagate the error"),
+                    ));
+                }
+                if s == "panic" && code.get(i + 1).is_some_and(|n| n.is_punct('!')) {
+                    raw.push((
+                        t.line,
+                        "panic_free",
+                        "`panic!` on a hot path; return an error instead".to_string(),
+                    ));
+                }
+            }
+            TokenKind::Punct('[') => {
+                if i == 0 {
+                    continue;
+                }
+                let indexable = match &code[i - 1].kind {
+                    TokenKind::Ident(w) => !NON_INDEX_KEYWORDS.contains(&w.as_str()),
+                    TokenKind::Punct(c) => *c == ')' || *c == ']',
+                };
+                if indexable {
+                    raw.push((
+                        t.line,
+                        "panic_free",
+                        "slice/array indexing can panic on a hot path; use `.get()`"
+                            .to_string(),
+                    ));
+                }
+            }
+            TokenKind::Punct(_) => {}
+        }
+    }
+}
+
+/// Count, per flattened manifest pattern, how many times it matches.
+fn manifest_counts(code: &[Token]) -> Vec<usize> {
+    let pats = manifest::flat_patterns();
+    let mut counts = vec![0usize; pats.len()];
+    for i in 0..code.len() {
+        for (pi, (_, pat)) in pats.iter().enumerate() {
+            if matches_seq(code, i, pat) {
+                counts[pi] += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Apply suppression directives to the raw findings and append the
+/// directive meta-findings (malformed / unjustified / unknown / unused).
+fn apply_allows(
+    rel: &str,
+    text: &str,
+    allows: &[AllowDirective],
+    malformed: &[u32],
+    raw: Vec<RawFinding>,
+) -> Vec<Finding> {
+    let lines: Vec<&str> = text.lines().collect();
+    let snippet = |line: u32| -> String {
+        let idx = line.saturating_sub(1) as usize;
+        lines.get(idx).map(|l| l.trim().to_string()).unwrap_or_default()
+    };
+    let finding = |line: u32, rule: &str, message: String, with_snippet: bool| Finding {
+        file: rel.to_string(),
+        line,
+        rule: rule.to_string(),
+        message,
+        snippet: if with_snippet { snippet(line) } else { String::new() },
+    };
+    let mut used: Vec<Vec<bool>> = allows
+        .iter()
+        .map(|a| vec![false; a.rules.len()])
+        .collect();
+    let mut out = Vec::new();
+    for (line, rule, message) in raw {
+        let mut suppressed = false;
+        for (ai, a) in allows.iter().enumerate() {
+            if a.line != line && a.line + 1 != line {
+                continue;
+            }
+            if let Some(ri) = a.rules.iter().position(|r| r == rule) {
+                used[ai][ri] = true;
+                suppressed = true;
+            }
+        }
+        if !suppressed {
+            out.push(finding(line, rule, message, true));
+        }
+    }
+    for l in malformed {
+        out.push(finding(
+            *l,
+            META_RULE,
+            "comment mentions the lint marker but is not a well-formed \
+             `allow(<rules>) — <why>` directive"
+                .to_string(),
+            true,
+        ));
+    }
+    for (ai, a) in allows.iter().enumerate() {
+        if !a.justified {
+            out.push(finding(
+                a.line,
+                META_RULE,
+                "allow directive lacks a justification after the closing paren".to_string(),
+                true,
+            ));
+        }
+        for (ri, r) in a.rules.iter().enumerate() {
+            if !RULES.contains(&r.as_str()) {
+                out.push(finding(
+                    a.line,
+                    META_RULE,
+                    format!("unknown rule `{r}` in allow directive"),
+                    true,
+                ));
+            } else if !used[ai][ri] {
+                out.push(finding(
+                    a.line,
+                    META_RULE,
+                    format!("unused allow for `{r}`: no finding on this or the next line"),
+                    true,
+                ));
+            }
+        }
+    }
+    out.sort_by(|a, b| (a.line, &a.rule).cmp(&(b.line, &b.rule)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_fired(rel: &str, src: &str) -> Vec<String> {
+        lint_source(rel, src).into_iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn determinism_fires_in_scope_only() {
+        let src = "use std::collections::HashMap;\nfn f() { let t = Instant::now(); }\n";
+        assert_eq!(
+            rules_fired("mr/task.rs", src),
+            ["determinism", "determinism"]
+        );
+        assert!(rules_fired("util/stats.rs", src).is_empty());
+        assert!(rules_fired("profiler/store/file_backend.rs", src)
+            .iter()
+            .all(|r| r != "determinism"));
+        assert_eq!(rules_fired("profiler/executor.rs", src).len(), 2);
+    }
+
+    #[test]
+    fn nan_ordering_fires_everywhere() {
+        let src = "fn f(a: f64, b: f64) { let _ = a.partial_cmp(&b); }\n";
+        let fired = rules_fired("util/stats.rs", src);
+        assert_eq!(fired, ["nan_ordering"]);
+        let src2 = "fn g(xs: &[f64]) -> f64 { xs.iter().copied().fold(0.0, f64::max) }\n";
+        assert_eq!(rules_fired("report/figure.rs", src2), ["nan_ordering"]);
+        // f64 paths that are not max/min do not fire.
+        let src3 = "fn h() -> f64 { f64::from_bits(1) + f64::INFINITY }\n";
+        assert!(rules_fired("report/figure.rs", src3).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_fires_in_lock_scope() {
+        let src = "fn f(m: &Mutex<u32>) { let g = m.lock().unwrap(); }\n";
+        assert_eq!(rules_fired("coordinator/trainer.rs", src), ["lock_discipline"]);
+        let lock_free = "fn f(r: &RwLock<u32>) { let g = r.read().expect(\"x\"); }\n";
+        assert_eq!(
+            rules_fired("profiler/store/extra.rs", lock_free),
+            // store files are also in the panic_free scope, so `.expect`
+            // fires twice: once per family.
+            ["lock_discipline", "panic_free"]
+        );
+        assert!(rules_fired("util/cli.rs", src).is_empty());
+        // `read(&mut buf)` is I/O, not a lock acquisition.
+        let io = "fn f(s: &mut TcpStream, b: &mut Vec<u8>) { s.read(b).unwrap(); }\n";
+        assert!(rules_fired("coordinator/client.rs", io).is_empty());
+    }
+
+    #[test]
+    fn lock_order_inversion_fires_anywhere() {
+        let src = "fn f(p: &Path) {\n    let l = try_claim_lease(p);\n    let g = CompactGuard::acquire(p);\n}\n";
+        assert_eq!(rules_fired("profiler/executor.rs", src), ["lock_discipline"]);
+        let fine = "fn f(p: &Path) {\n    let g = CompactGuard::acquire(p);\n    let l = try_claim_lease(p);\n}\n";
+        assert!(rules_fired("profiler/executor.rs", fine).is_empty());
+        // Separate functions hold nothing across each other.
+        let split = "fn a(p: &Path) { let l = try_claim_lease(p); }\nfn b(p: &Path) { let g = CompactGuard::acquire(p); }\n";
+        assert!(rules_fired("profiler/executor.rs", split).is_empty());
+    }
+
+    #[test]
+    fn panic_free_fires_on_hot_paths_only() {
+        let src = "fn f(v: &[u8]) -> u8 { v[0] }\nfn g(o: Option<u8>) -> u8 { o.unwrap() }\nfn h() { panic!(\"no\"); }\n";
+        assert_eq!(
+            rules_fired("coordinator/server.rs", src),
+            ["panic_free", "panic_free", "panic_free"]
+        );
+        assert!(rules_fired("coordinator/client.rs", src).is_empty());
+        // unwrap_or_else and array-type syntax do not fire.
+        let fine = "fn f(o: Option<[u8; 4]>) -> [u8; 4] { let [a, b, c, d] = o.unwrap_or_default(); [a, b, c, d] }\n";
+        assert!(rules_fired("coordinator/wire.rs", fine).is_empty());
+        // assert! stays allowed.
+        let asserts = "fn f(n: usize) { assert!(n < 4); debug_assert!(n > 0); }\n";
+        assert!(rules_fired("coordinator/wire.rs", asserts).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t(v: &[u8]) -> u8 { v[0] }\n}\nfn real() {}\n";
+        assert!(rules_fired("coordinator/server.rs", src).is_empty());
+    }
+
+    #[test]
+    fn allow_suppresses_same_and_next_line() {
+        let above = "fn f(v: &[u8]) -> u8 {\n    // mrlint: allow(panic_free) \u{2014} length checked by caller\n    v[0]\n}\n";
+        assert!(rules_fired("coordinator/server.rs", above).is_empty());
+        let trailing =
+            "fn f(v: &[u8]) -> u8 { v[0] } // mrlint: allow(panic_free) \u{2014} checked\n";
+        assert!(rules_fired("coordinator/server.rs", trailing).is_empty());
+        // The directive does not reach two lines down.
+        let far = "fn f(v: &[u8]) -> u8 {\n    // mrlint: allow(panic_free) \u{2014} checked\n    let n = 1;\n    v[n]\n}\n";
+        let fired = rules_fired("coordinator/server.rs", far);
+        assert!(fired.contains(&"panic_free".to_string()));
+        assert!(fired.contains(&META_RULE.to_string()), "allow is unused");
+    }
+
+    #[test]
+    fn directive_meta_findings() {
+        // Unjustified.
+        let unjustified =
+            "fn f(v: &[u8]) -> u8 { v[0] } // mrlint: allow(panic_free)\n";
+        assert_eq!(rules_fired("coordinator/server.rs", unjustified), [META_RULE]);
+        // Unknown rule name.
+        let unknown = "fn f() {} // mrlint: allow(no_such_rule) \u{2014} why\n";
+        assert_eq!(rules_fired("util/cli.rs", unknown), [META_RULE]);
+        // Unused allow.
+        let unused = "fn f() {} // mrlint: allow(panic_free) \u{2014} why\n";
+        assert_eq!(rules_fired("util/cli.rs", unused), [META_RULE]);
+        // Malformed marker mention.
+        let malformed = "fn f() {} // mrlint should fix this\n";
+        assert_eq!(rules_fired("util/cli.rs", malformed), [META_RULE]);
+    }
+
+    #[test]
+    fn manifest_patterns_count_matches() {
+        let src = "fn f(p: &Path) { let g = CompactGuard::acquire(p); }\n";
+        let (_, counts) = lint_source_counted("profiler/store/sharded.rs", src);
+        let pats = manifest::flat_patterns();
+        let idx = pats
+            .iter()
+            .position(|(_, pat)| pat.join("") == "CompactGuard::acquire")
+            .expect("manifest has the compaction pattern");
+        assert_eq!(counts[idx], 1);
+        assert_eq!(counts.iter().sum::<usize>(), 1);
+    }
+
+    #[test]
+    fn findings_render_and_serialize() {
+        let f = lint_source("mr/task.rs", "use std::collections::HashMap;\n")
+            .pop()
+            .expect("one finding");
+        assert_eq!(f.line, 1);
+        let rendered = f.render();
+        assert!(rendered.starts_with("mr/task.rs:1: [determinism]"));
+        let json = f.to_json();
+        assert!(json.starts_with("{\"file\":\"mr/task.rs\",\"line\":1,"));
+        assert!(json.contains("\"rule\":\"determinism\""));
+    }
+}

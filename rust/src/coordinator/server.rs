@@ -165,8 +165,8 @@ fn batch_worker(
                 Ok(j) => j,
                 Err(_) => return, // queue closed: server shutting down
             };
+            let mut total: usize = first.items.len();
             let mut jobs = vec![first];
-            let mut total: usize = jobs[0].items.len();
             while total < opts.max_batch {
                 match guard.try_recv() {
                     Ok(j) => {
@@ -190,7 +190,12 @@ fn batch_worker(
             let replies: Vec<(u64, Result<Prediction, String>)> = job
                 .items
                 .iter()
-                .map(|(id, _)| (*id, results.next().expect("one per item")))
+                .map(|(id, _)| {
+                    let r = results.next().unwrap_or_else(|| {
+                        Err("batch result missing (server bug)".to_string())
+                    });
+                    (*id, r)
+                })
                 .collect();
             // A dead connection just drops its replies.
             let _ = job.reply.send(WriterMsg::Predicts(replies));
@@ -342,6 +347,7 @@ fn read_line_bounded(
         }
         let newline = available.iter().position(|&b| b == b'\n');
         let take = newline.map(|i| i + 1).unwrap_or(available.len());
+        // mrlint: allow(panic_free) — take = newline_pos+1 or len, both ≤ available.len()
         buf.extend_from_slice(&available[..take]);
         reader.consume(take);
         if newline.is_some() {
@@ -376,7 +382,7 @@ fn handle_conn(
         }
         match reader.fill_buf() {
             Ok([]) => return Ok(()), // closed before a single byte
-            Ok(bytes) => break bytes[0],
+            Ok([first, ..]) => break *first,
             Err(e)
                 if matches!(
                     e.kind(),
@@ -390,7 +396,7 @@ fn handle_conn(
             Err(e) => return Err(e),
         }
     };
-    if first == wire::WIRE_MAGIC[0] {
+    if wire::WIRE_MAGIC.starts_with(&[first]) {
         handle_binary_conn(reader, service, trainer, stop, batch_tx, opts)
     } else {
         handle_json_conn(reader, service, trainer, stop)
@@ -481,6 +487,7 @@ fn read_exact_timeout(
             return Ok(None);
         }
         let take = available.len().min(n - got.len());
+        // mrlint: allow(panic_free) — take = min(available.len(), ..) ≤ available.len()
         got.extend_from_slice(&available[..take]);
         reader.consume(take);
     }
@@ -508,8 +515,12 @@ fn handle_binary_conn(
         Some(b) => b,
         None => return Ok(()),
     };
-    let arr: [u8; wire::PREAMBLE_LEN] =
-        preamble[..].try_into().expect("read_exact returned n bytes");
+    // read_exact_timeout returned Some, so exactly PREAMBLE_LEN bytes;
+    // a length mismatch is unreachable, treated as a silent hangup.
+    let arr: [u8; wire::PREAMBLE_LEN] = match preamble.as_slice().try_into() {
+        Ok(arr) => arr,
+        Err(_) => return Ok(()),
+    };
     if let Err(e) = wire::check_preamble(&arr) {
         // No writer thread yet: answer the bad handshake directly.
         let mut buf = Vec::new();

@@ -20,7 +20,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::{Duration, Instant};
 
 use crate::model::regression::FitBackend;
@@ -273,8 +273,10 @@ impl PredictionService {
         let m = &self.metrics;
         m.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
         m.max_batch_seen.fetch_max(items.len() as u64, Ordering::Relaxed);
-        let mut out: Vec<Option<Result<Prediction, String>>> =
-            (0..items.len()).map(|_| None).collect();
+        let mut out: Vec<Result<Prediction, String>> = items
+            .iter()
+            .map(|_| Err("batch slot unfilled (service bug)".to_string()))
+            .collect();
         let mut by_app: std::collections::BTreeMap<&str, Vec<usize>> =
             std::collections::BTreeMap::new();
         for (i, item) in items.iter().enumerate() {
@@ -289,26 +291,29 @@ impl PredictionService {
                 None => {
                     m.rejected.fetch_add(idxs.len() as u64, Ordering::Relaxed);
                     for i in idxs {
-                        out[i] = Some(Err(format!(
-                            "no model for application '{app}'"
-                        )));
+                        if let Some(slot) = out.get_mut(i) {
+                            *slot = Err(format!(
+                                "no model for application '{app}'"
+                            ));
+                        }
                     }
                 }
                 Some((coeffs, version)) => {
                     m.batches.fetch_add(1, Ordering::Relaxed);
                     for i in idxs {
-                        let params = [
-                            items[i].mappers as f64,
-                            items[i].reducers as f64,
-                        ];
+                        let Some(item) = items.get(i) else { continue };
+                        let params =
+                            [item.mappers as f64, item.reducers as f64];
                         let seconds =
                             crate::model::features::evaluate(&coeffs, &params);
-                        out[i] = Some(Ok(Prediction { seconds, version }));
+                        if let Some(slot) = out.get_mut(i) {
+                            *slot = Ok(Prediction { seconds, version });
+                        }
                     }
                 }
             }
         }
-        out.into_iter().map(|r| r.expect("every index filled")).collect()
+        out
     }
 
     /// Install or replace an application model without fit diagnostics.
@@ -389,6 +394,22 @@ fn worker_loop(
     }
 }
 
+/// Lock the batching backend, recovering from poison the same way the
+/// registry locks do (counted in [`ServiceMetrics::lock_poisoned`]).
+fn backend_lock<'a>(
+    backend: &'a Mutex<Box<dyn FitBackend>>,
+    metrics: &ServiceMetrics,
+) -> MutexGuard<'a, Box<dyn FitBackend>> {
+    match backend.lock() {
+        Ok(guard) => guard,
+        Err(poisoned) => {
+            metrics.lock_poisoned.fetch_add(1, Ordering::Relaxed);
+            backend.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
 fn serve_batch(
     backend: &Mutex<Box<dyn FitBackend>>,
     registry: &Arc<RwLock<ModelRegistry>>,
@@ -425,7 +446,7 @@ fn serve_batch(
         };
         let params: Vec<[f64; 2]> = reqs.iter().map(|r| r.params).collect();
         metrics.batches.fetch_add(1, Ordering::Relaxed);
-        match backend.lock().unwrap().predict(&coeffs, &params) {
+        match backend_lock(backend, metrics).predict(&coeffs, &params) {
             Ok(preds) => {
                 for (r, p) in reqs.into_iter().zip(preds) {
                     let _ =

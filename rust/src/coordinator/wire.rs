@@ -111,12 +111,32 @@ pub struct Frame {
     pub body: Vec<u8>,
 }
 
+/// Little-endian decode helpers.  Short input zero-pads instead of
+/// panicking: every caller length-checks first (frame and body lengths
+/// are validated before decoding), so the pad never shows through — it
+/// just keeps the hot path free of slice-index panics by construction.
+fn u16le(b: &[u8]) -> u16 {
+    let mut arr = [0u8; 2];
+    for (dst, src) in arr.iter_mut().zip(b) {
+        *dst = *src;
+    }
+    u16::from_le_bytes(arr)
+}
+
 fn u32le(b: &[u8]) -> u32 {
-    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    let mut arr = [0u8; 4];
+    for (dst, src) in arr.iter_mut().zip(b) {
+        *dst = *src;
+    }
+    u32::from_le_bytes(arr)
 }
 
 fn u64le(b: &[u8]) -> u64 {
-    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    let mut arr = [0u8; 8];
+    for (dst, src) in arr.iter_mut().zip(b) {
+        *dst = *src;
+    }
+    u64::from_le_bytes(arr)
 }
 
 /// Append the connection preamble (`MRTW` + version) to `buf`.
@@ -127,13 +147,13 @@ pub fn encode_preamble(buf: &mut Vec<u8>) {
 
 /// Validate a connection preamble.
 pub fn check_preamble(bytes: &[u8; PREAMBLE_LEN]) -> Result<(), WireError> {
-    if bytes[..4] != WIRE_MAGIC {
+    if !bytes.starts_with(&WIRE_MAGIC) {
         return Err(WireError::Corrupt(format!(
             "bad preamble magic {:02x?}",
-            &bytes[..4]
+            bytes.get(..4).unwrap_or_default()
         )));
     }
-    let version = u32le(&bytes[4..]);
+    let version = u32le(bytes.get(4..).unwrap_or_default());
     if version != WIRE_VERSION {
         return Err(WireError::Corrupt(format!(
             "unsupported wire version {version} (this build speaks \
@@ -179,7 +199,7 @@ pub fn decode_predict_req(
     if body.len() < 2 {
         return Err(WireError::Corrupt("predict body shorter than app length".into()));
     }
-    let app_len = u16::from_le_bytes([body[0], body[1]]) as usize;
+    let app_len = u16le(body) as usize;
     let want = 2 + app_len + 8;
     if body.len() != want {
         return Err(WireError::Corrupt(format!(
@@ -187,11 +207,14 @@ pub fn decode_predict_req(
             body.len()
         )));
     }
-    let app = std::str::from_utf8(&body[2..2 + app_len])
+    let app_bytes = body.get(2..2 + app_len).ok_or_else(|| {
+        WireError::Corrupt("predict body shorter than app length".into())
+    })?;
+    let app = std::str::from_utf8(app_bytes)
         .map_err(|_| WireError::Corrupt("app name is not UTF-8".into()))?
         .to_string();
-    let m = u32le(&body[2 + app_len..]);
-    let r = u32le(&body[2 + app_len + 4..]);
+    let m = u32le(body.get(2 + app_len..).unwrap_or_default());
+    let r = u32le(body.get(2 + app_len + 4..).unwrap_or_default());
     Ok((app, m, r))
 }
 
@@ -204,9 +227,9 @@ pub fn encode_json_req(buf: &mut Vec<u8>, id: u64, text: &str) {
 /// Append an OK response to a PREDICT request: raw little-endian bits
 /// of the predicted seconds, then the serving model version.
 pub fn encode_predict_ok(buf: &mut Vec<u8>, id: u64, p: &Prediction) {
-    let mut body = [0u8; 16];
-    body[..8].copy_from_slice(&p.seconds.to_bits().to_le_bytes());
-    body[8..].copy_from_slice(&p.version.to_le_bytes());
+    let mut body = Vec::with_capacity(16);
+    body.extend_from_slice(&p.seconds.to_bits().to_le_bytes());
+    body.extend_from_slice(&p.version.to_le_bytes());
     encode_frame(buf, id, RESP_OK, &body);
 }
 
@@ -219,8 +242,8 @@ pub fn decode_predict_ok(body: &[u8]) -> Result<Prediction, WireError> {
         )));
     }
     Ok(Prediction {
-        seconds: f64::from_bits(u64le(&body[..8])),
-        version: u64le(&body[8..]),
+        seconds: f64::from_bits(u64le(body)),
+        version: u64le(body.get(8..).unwrap_or_default()),
     })
 }
 
@@ -244,7 +267,7 @@ pub fn encode_goaway(buf: &mut Vec<u8>, reason: &str) {
     // Bound the reason so the frame always encodes.
     let msg = reason.as_bytes();
     let take = msg.len().min(MAX_FRAME_LEN - FRAME_HEADER_LEN);
-    encode_frame(buf, 0, RESP_GOAWAY, &msg[..take]);
+    encode_frame(buf, 0, RESP_GOAWAY, msg.get(..take).unwrap_or(msg));
 }
 
 /// Incremental frame decoder: feed bytes as they arrive (in any split),
@@ -287,7 +310,7 @@ impl FrameReader {
     /// the stream is broken (impossible length or unknown tag) and the
     /// connection should be terminated — there is no resync.
     pub fn next_frame(&mut self) -> Result<Option<Frame>, WireError> {
-        let avail = &self.buf[self.pos..];
+        let avail = self.buf.get(self.pos..).unwrap_or_default();
         if avail.len() < 4 {
             return Ok(None);
         }
@@ -301,8 +324,8 @@ impl FrameReader {
         if avail.len() < 4 + len {
             return Ok(None);
         }
-        let id = u64le(&avail[4..12]);
-        let tag = avail[12];
+        let id = u64le(avail.get(4..12).unwrap_or_default());
+        let tag = avail.get(12).copied().unwrap_or(0);
         if !matches!(
             tag,
             REQ_PREDICT | REQ_JSON | RESP_OK | RESP_ERR | RESP_SHED
@@ -310,7 +333,10 @@ impl FrameReader {
         ) {
             return Err(WireError::Corrupt(format!("unknown tag {tag:#04x}")));
         }
-        let body = avail[FRAME_HEADER_LEN + 4..4 + len].to_vec();
+        let body = avail
+            .get(FRAME_HEADER_LEN + 4..4 + len)
+            .unwrap_or_default()
+            .to_vec();
         self.pos += 4 + len;
         Ok(Some(Frame { id, tag, body }))
     }

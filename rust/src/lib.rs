@@ -29,6 +29,7 @@
 
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod api;
 pub mod apps;
 pub mod cluster;

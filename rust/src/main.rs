@@ -14,6 +14,7 @@
 //!   store     inspect/compact/clear a persistent profile store
 //!   dlq       list/retry/clear the store's dead-letter queue of failed reps
 //!   bench     store/executor/serving microbenchmarks -> BENCH_*.json
+//!   lint      repo-invariant static analysis over rust/src (CI gate)
 
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
@@ -185,6 +186,7 @@ fn main() {
         "store" => cmd_store(&args),
         "dlq" => cmd_dlq(&args),
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         "help" | "--help" => {
             print_help();
             Ok(())
@@ -236,7 +238,11 @@ fn print_help() {
                     [--settings N] [--out FILE]  store/executor/serving/\n\
                     trainer microbenchmarks; writes BENCH_store.json /\n\
                     BENCH_campaign.json / BENCH_serve.json /\n\
-                    BENCH_trainer.json\n\n\
+                    BENCH_trainer.json\n\
+           lint     [--root DIR] [--json]               static analysis:\n\
+                    determinism, NaN-ordering, lock-discipline and\n\
+                    panic-free-hot-path rules over DIR (default rust/src);\n\
+                    exits non-zero on any unsuppressed finding\n\n\
          --jobs N sets the profiling worker count (default: all cores);\n\
          campaign results are bit-identical for any N.\n\n\
          --store PATH attaches a persistent on-disk profile store to any\n\
@@ -822,6 +828,33 @@ fn bench_case(st: &BenchStats, units: f64) -> Json {
         ("p50_s", Json::Num(st.p50_s)),
         ("units_per_s", Json::Num(st.throughput(units))),
     ])
+}
+
+/// `mrtuner lint [--root DIR] [--json]` — run the static-analysis pass
+/// over DIR (default `rust/src`) and exit non-zero on any unsuppressed
+/// finding, so CI can gate on it next to clippy.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    let root = args.str_or("root", "rust/src");
+    let json = args.switch("json");
+    args.reject_unknown()?;
+    let report = mrtuner::analysis::run_lint(Path::new(&root))?;
+    for finding in &report.findings {
+        if json {
+            println!("{}", finding.to_json());
+        } else {
+            println!("{}", finding.render());
+        }
+    }
+    if report.findings.is_empty() {
+        eprintln!("lint: {} files clean under {root}", report.files_scanned);
+        Ok(())
+    } else {
+        Err(format!(
+            "lint: {} finding(s) across {} files under {root}",
+            report.findings.len(),
+            report.files_scanned
+        ))
+    }
 }
 
 fn cmd_bench(args: &Args) -> Result<(), String> {

@@ -31,7 +31,7 @@ pub(crate) const LAYOUT_STREAM: u64 = 1;
 /// plan.  Two configs with equal shapes can share one [`JobContext`]:
 /// everything else (`seed`, reducer count, slowstart, speculation, ...)
 /// only affects the event simulation, never the plan.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ContextShape {
     /// Cluster size the layout was planned for.
     pub num_nodes: usize,

@@ -76,7 +76,7 @@ pub const LATTICE_SIZE: usize =
 pub fn random_specs(app: AppId, n: usize, rng: &mut Rng) -> Vec<ExperimentSpec> {
     let n = n.min(LATTICE_SIZE);
     let mut specs = Vec::with_capacity(n);
-    let mut seen = std::collections::HashSet::new();
+    let mut seen = std::collections::BTreeSet::new();
     while specs.len() < n {
         let m = rng.range_u64(PARAM_MIN as u64, PARAM_MAX as u64 + 1) as u32;
         let r = rng.range_u64(PARAM_MIN as u64, PARAM_MAX as u64 + 1) as u32;
@@ -129,7 +129,7 @@ pub fn paper_campaign(app: AppId, seed: u64) -> (Campaign, Campaign) {
     };
     // Held-out settings must be disjoint from training (prediction of
     // *new* experiments, Fig. 2b).
-    let train_set: std::collections::HashSet<(u32, u32)> = train
+    let train_set: std::collections::BTreeSet<(u32, u32)> = train
         .specs
         .iter()
         .map(|s| (s.num_mappers, s.num_reducers))

@@ -32,7 +32,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::{SystemTime, UNIX_EPOCH};
+use std::time::{SystemTime, UNIX_EPOCH}; // mrlint: allow(determinism) — wall clock names DLQ files only, never simulation state
 
 use crate::apps::AppId;
 use crate::util::bytes::hex_u64;
@@ -247,6 +247,7 @@ pub fn append(dir: &Path, records: &[DlqRecord]) -> Result<(), String> {
     fs::create_dir_all(dir)
         .map_err(|e| format!("dlq: create {}: {e}", dir.display()))?;
     let nonce = DLQ_COUNTER.fetch_add(1, Ordering::Relaxed);
+    // mrlint: allow(determinism) — uniqueness salt for the file name; no simulated quantity derives from it
     let nanos = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_nanos() as u64)
@@ -341,16 +342,16 @@ pub fn load(dir: &Path) -> Result<Vec<DlqRecord>, String> {
             .map_err(|e| format!("dlq: read {}: {e}", path.display()))?;
         load_bytes(&path, &bytes, &mut raw);
     }
-    let mut by_key: std::collections::HashMap<StoreKey, DlqRecord> =
-        std::collections::HashMap::new();
+    let mut by_key: std::collections::BTreeMap<StoreKey, DlqRecord> =
+        std::collections::BTreeMap::new();
     for rec in raw {
         match by_key.entry(rec.key) {
-            std::collections::hash_map::Entry::Occupied(mut e) => {
+            std::collections::btree_map::Entry::Occupied(mut e) => {
                 if rec.attempts >= e.get().attempts {
                     e.insert(rec);
                 }
             }
-            std::collections::hash_map::Entry::Vacant(e) => {
+            std::collections::btree_map::Entry::Vacant(e) => {
                 e.insert(rec);
             }
         }

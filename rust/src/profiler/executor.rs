@@ -41,7 +41,7 @@
 //! [`CampaignExecutor::stats`] reports the combined in-memory + on-disk
 //! picture.
 
-use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::fmt;
 use std::fs::{self, OpenOptions};
 use std::io::Write;
@@ -379,7 +379,7 @@ fn lease_is_live(path: &Path) -> bool {
 /// ```
 pub struct CampaignExecutor {
     jobs: usize,
-    cache: Mutex<HashMap<StoreKey, RepOutcome>>,
+    cache: Mutex<BTreeMap<StoreKey, RepOutcome>>,
     hits: AtomicU64,
     misses: AtomicU64,
     store_hits: AtomicU64,
@@ -394,7 +394,7 @@ impl CampaignExecutor {
     pub fn new(jobs: usize) -> CampaignExecutor {
         CampaignExecutor {
             jobs: jobs.max(1),
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             store_hits: AtomicU64::new(0),
@@ -575,7 +575,7 @@ impl CampaignExecutor {
         let mut store_hit_count: u64 = 0;
         {
             let mut cache = self.cache.lock().expect("executor cache poisoned");
-            let mut pending: HashMap<StoreKey, usize> = HashMap::new();
+            let mut pending: BTreeMap<StoreKey, usize> = BTreeMap::new();
             for (i, item) in items.iter().enumerate() {
                 let key = item.key(cluster_fp);
                 if let Some(o) = cache.get(&key).copied().filter(&usable) {
@@ -612,8 +612,8 @@ impl CampaignExecutor {
         // app profile once, up front and serially, so workers only pay for
         // event simulation — the JobContext reuse contract.  `ctx_keys[k]`
         // and `cfgs[k]` resolve todo item `k` without re-deriving anything.
-        let mut contexts: HashMap<(ContextShape, u64), JobContext> = HashMap::new();
-        let mut profiles: HashMap<AppId, AppProfile> = HashMap::new();
+        let mut contexts: BTreeMap<(ContextShape, u64), JobContext> = BTreeMap::new();
+        let mut profiles: BTreeMap<AppId, AppProfile> = BTreeMap::new();
         let mut ctx_keys: Vec<(ContextShape, u64)> = Vec::with_capacity(todo.len());
         let mut cfgs: Vec<JobConfig> = Vec::with_capacity(todo.len());
         for &i in &todo {
@@ -759,7 +759,7 @@ impl CampaignExecutor {
                 if let Err(e) = store.refresh() {
                     eprintln!("warn: store refresh failed: {e}");
                 }
-                let peer_dlq: HashSet<StoreKey> = dlq::load(&dlq_dir)
+                let peer_dlq: BTreeSet<StoreKey> = dlq::load(&dlq_dir)
                     .unwrap_or_default()
                     .into_iter()
                     .map(|r| r.key)
@@ -1008,12 +1008,12 @@ impl CampaignExecutor {
                 .to_string()
         })?;
         store.refresh()?;
-        let parked: HashSet<StoreKey> = dlq::load(&dlq::dlq_dir(store.dir()))?
+        let parked: BTreeSet<StoreKey> = dlq::load(&dlq::dlq_dir(store.dir()))?
             .into_iter()
             .map(|r| r.key)
             .collect();
         let cluster_fp = cluster_fingerprint(cluster);
-        let mut seen = HashSet::new();
+        let mut seen = BTreeSet::new();
         let mut status = ResumeStatus::default();
         for item in items {
             let key = item.key(cluster_fp);

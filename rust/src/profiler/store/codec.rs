@@ -122,10 +122,21 @@ pub(crate) fn frame_len(key: &StoreKey, outcome: &RepOutcome) -> usize {
 
 /// The 8-byte header every binary store file starts with.
 pub(crate) fn bin_header() -> [u8; BIN_HEADER_LEN] {
-    let mut h = [0u8; BIN_HEADER_LEN];
-    h[..4].copy_from_slice(&BIN_MAGIC);
-    h[4..].copy_from_slice(&STORE_FORMAT_VERSION.to_le_bytes());
-    h
+    let [m0, m1, m2, m3] = BIN_MAGIC;
+    let [v0, v1, v2, v3] = STORE_FORMAT_VERSION.to_le_bytes();
+    [m0, m1, m2, m3, v0, v1, v2, v3]
+}
+
+/// Read a little-endian `u32` at byte offset `at`, if `bytes` is long
+/// enough — the panic-free building block for header and frame parsing.
+pub(crate) fn le_u32_at(bytes: &[u8], at: usize) -> Option<u32> {
+    let end = at.checked_add(4)?;
+    let src = bytes.get(at..end)?;
+    let mut arr = [0u8; 4];
+    for (dst, b) in arr.iter_mut().zip(src) {
+        *dst = *b;
+    }
+    Some(u32::from_le_bytes(arr))
 }
 
 /// Append one framed binary record to `out`.
@@ -188,23 +199,35 @@ impl<'a> Cursor<'a> {
         let end = self
             .i
             .checked_add(n)
-            .filter(|&e| e <= self.b.len())
             .ok_or_else(|| "binary record truncated".to_string())?;
-        let s = &self.b[self.i..end];
+        let s = self
+            .b
+            .get(self.i..end)
+            .ok_or_else(|| "binary record truncated".to_string())?;
         self.i = end;
         Ok(s)
     }
 
+    /// `take(N)` copied into a fixed array, for `from_le_bytes`.
+    fn array<const N: usize>(&mut self) -> Result<[u8; N], String> {
+        let src = self.take(N)?;
+        let mut arr = [0u8; N];
+        for (dst, b) in arr.iter_mut().zip(src) {
+            *dst = *b;
+        }
+        Ok(arr)
+    }
+
     fn u8(&mut self) -> Result<u8, String> {
-        Ok(self.take(1)?[0])
+        Ok(u8::from_le_bytes(self.array()?))
     }
 
     fn u32(&mut self) -> Result<u32, String> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        Ok(u32::from_le_bytes(self.array()?))
     }
 
     fn u64(&mut self) -> Result<u64, String> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        Ok(u64::from_le_bytes(self.array()?))
     }
 }
 
@@ -259,19 +282,17 @@ pub(crate) fn decode_payload(
 pub fn decode_record_bin(
     bytes: &[u8],
 ) -> Result<(StoreKey, RepOutcome, u64, usize), String> {
-    if bytes.len() < 4 {
+    let Some(len) = le_u32_at(bytes, 0).map(|l| l as usize) else {
         return Err("binary record truncated (length prefix)".into());
-    }
-    let len =
-        u32::from_le_bytes(bytes[0..4].try_into().expect("4 bytes")) as usize;
+    };
     if len == 0 || len > MAX_RECORD_LEN {
         return Err(format!("binary record: implausible length {len}"));
     }
     let end = 4 + len;
-    if bytes.len() < end {
-        return Err("binary record truncated (payload)".into());
-    }
-    let (key, outcome, touch) = decode_payload(&bytes[4..end])?;
+    let payload = bytes
+        .get(4..end)
+        .ok_or_else(|| "binary record truncated (payload)".to_string())?;
+    let (key, outcome, touch) = decode_payload(payload)?;
     Ok((key, outcome, touch, end))
 }
 
@@ -289,19 +310,17 @@ pub fn read_file_records(
     if bytes.is_empty() {
         return Ok(out);
     }
-    if bytes.len() >= 4 && bytes[..4] == BIN_MAGIC {
-        if bytes.len() < BIN_HEADER_LEN {
+    if bytes.starts_with(&BIN_MAGIC) {
+        let Some(ver) = le_u32_at(&bytes, 4) else {
             return Err("truncated binary store header".into());
-        }
-        let ver = u32::from_le_bytes(
-            bytes[4..BIN_HEADER_LEN].try_into().expect("4 bytes"),
-        );
+        };
         if ver != STORE_FORMAT_VERSION {
             return Err(format!("unsupported binary store version {ver}"));
         }
         let mut i = BIN_HEADER_LEN;
         while i < bytes.len() {
-            let (key, outcome, _touch, used) = decode_record_bin(&bytes[i..])?;
+            let tail = bytes.get(i..).unwrap_or_default();
+            let (key, outcome, _touch, used) = decode_record_bin(tail)?;
             out.push((key, outcome, ver));
             i += used;
         }

@@ -213,16 +213,35 @@ impl FileBackend {
         &self.dir
     }
 
+    /// Lock the in-memory state, recovering from poison: a panicking
+    /// writer leaves records it already journaled intact, and every
+    /// mutation path re-validates against the on-disk generation, so
+    /// continuing with the inner value is safe.
     fn lock_state(&self) -> MutexGuard<'_, Option<Inner>> {
-        self.state.lock().expect("store mutex poisoned")
+        match self.state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                self.state.clear_poison();
+                poisoned.into_inner()
+            }
+        }
     }
 
     /// Load the directory into memory if this is the first access.
     fn inner<'a>(&self, state: &'a mut Option<Inner>) -> &'a mut Inner {
-        if state.is_none() {
-            *state = Some(self.load());
+        state.get_or_insert_with(|| self.load())
+    }
+
+    /// Lock the refresh fingerprint map, recovering from poison — it only
+    /// memoizes file lengths, and a stale entry just causes a re-read.
+    fn lock_refresh_state(&self) -> MutexGuard<'_, HashMap<String, u64>> {
+        match self.refresh_state.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                self.refresh_state.clear_poison();
+                poisoned.into_inner()
+            }
         }
-        state.as_mut().expect("state just loaded")
     }
 
     fn load(&self) -> Inner {
@@ -327,7 +346,9 @@ impl FileBackend {
                 encode_record_bin_into(key, &sr.outcome, sr.touch, &mut buf);
             }
         }
-        let writer = inner.writer.as_mut().expect("writer just created");
+        let Some(writer) = inner.writer.as_mut() else {
+            return Err("store: segment writer unavailable".to_string());
+        };
         writer
             .file
             .write_all(&buf)
@@ -418,7 +439,10 @@ impl StoreBackend for FileBackend {
         let mut state = self.lock_state();
         let inner = self.inner(&mut state);
         let from = (generation as usize).min(inner.journal.len());
-        let records = inner.journal[from..]
+        let records = inner
+            .journal
+            .get(from..)
+            .unwrap_or_default()
             .iter()
             // A journaled key may have been evicted by a compaction pass
             // since (never a paper-plane key — those are pinned, and they
@@ -433,10 +457,7 @@ impl StoreBackend for FileBackend {
     fn refresh(&self) -> Result<u64, String> {
         let fingerprint = dir_fingerprint(&self.dir)?;
         let changed: Vec<(String, u64)> = {
-            let state = self
-                .refresh_state
-                .lock()
-                .expect("store refresh-state poisoned");
+            let state = self.lock_refresh_state();
             fingerprint
                 .iter()
                 .filter(|(name, len)| state.get(name) != Some(len))
@@ -506,10 +527,7 @@ impl StoreBackend for FileBackend {
             inner.journal.push(key);
         }
         drop(state);
-        let mut state = self
-            .refresh_state
-            .lock()
-            .expect("store refresh-state poisoned");
+        let mut state = self.lock_refresh_state();
         // Forget files compaction removed, so the map stays bounded by
         // the live file set ...
         state.retain(|name, _| fingerprint.iter().any(|(n, _)| n == name));
@@ -787,8 +805,8 @@ pub(crate) fn ingest_bytes(
     if bytes.is_empty() {
         return true;
     }
-    if bytes.len() >= 4 && bytes[..4] == BIN_MAGIC {
-        if bytes.len() < BIN_HEADER_LEN {
+    if bytes.starts_with(&BIN_MAGIC) {
+        let Some(ver) = super::codec::le_u32_at(bytes, 4) else {
             // Torn header write: no records to recover.
             stats.corrupt_lines += 1;
             eprintln!(
@@ -796,10 +814,7 @@ pub(crate) fn ingest_bytes(
                 path.display()
             );
             return true;
-        }
-        let ver = u32::from_le_bytes(
-            bytes[4..BIN_HEADER_LEN].try_into().expect("4 bytes"),
-        );
+        };
         if !(3..=STORE_FORMAT_VERSION).contains(&ver) {
             // A whole file of a newer build: skip and preserve.
             stats.stale_lines += 1;
@@ -838,7 +853,9 @@ fn load_bin_records(
     let mut i = BIN_HEADER_LEN;
     let mut first_bad = true;
     while i < bytes.len() {
-        let Some(prefix) = bytes.get(i..i + 4) else {
+        let Some(len) =
+            super::codec::le_u32_at(bytes, i).map(|l| l as usize)
+        else {
             stats.corrupt_lines += 1;
             eprintln!(
                 "store: truncated record tail in {}",
@@ -846,12 +863,7 @@ fn load_bin_records(
             );
             return;
         };
-        let len =
-            u32::from_le_bytes(prefix.try_into().expect("4 bytes")) as usize;
-        if len == 0
-            || len > super::codec::MAX_RECORD_LEN
-            || i + 4 + len > bytes.len()
-        {
+        if len == 0 || len > super::codec::MAX_RECORD_LEN {
             stats.corrupt_lines += 1;
             eprintln!(
                 "store: truncated/garbled record tail in {}",
@@ -859,7 +871,15 @@ fn load_bin_records(
             );
             return;
         }
-        match decode_payload(&bytes[i + 4..i + 4 + len]) {
+        let Some(payload) = bytes.get(i + 4..i + 4 + len) else {
+            stats.corrupt_lines += 1;
+            eprintln!(
+                "store: truncated/garbled record tail in {}",
+                path.display()
+            );
+            return;
+        };
+        match decode_payload(payload) {
             Ok((key, outcome, touch)) => {
                 fold_entry(entries, key, StoredRep { outcome, touch });
             }

@@ -51,8 +51,17 @@ impl MemoryBackend {
         }
     }
 
+    /// Lock the map, recovering from poison — a panicking caller leaves
+    /// the already-applied puts intact, which is the same view a crashed
+    /// process would reload from a file-backed store.
     fn lock(&self) -> MutexGuard<'_, Inner> {
-        self.inner.lock().expect("memory store mutex poisoned")
+        match self.inner.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                self.inner.clear_poison();
+                poisoned.into_inner()
+            }
+        }
     }
 }
 
@@ -114,7 +123,10 @@ impl StoreBackend for MemoryBackend {
     ) -> (Vec<(StoreKey, RepOutcome)>, u64) {
         let inner = self.lock();
         let from = (generation as usize).min(inner.journal.len());
-        let records = inner.journal[from..]
+        let records = inner
+            .journal
+            .get(from..)
+            .unwrap_or_default()
             .iter()
             .filter_map(|k| inner.entries.get(k).map(|sr| (*k, sr.outcome)))
             .collect();

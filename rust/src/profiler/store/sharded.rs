@@ -14,7 +14,7 @@ use std::fs::{self, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use super::file_backend::{
@@ -269,16 +269,38 @@ impl ProfileStore {
         shard_of(key.app, self.shards.len())
     }
 
+    /// Shard `i`'s backend.  Every internal index is produced by
+    /// [`ProfileStore::shard_for`] or ranges over `0..shards.len()`.
+    fn shard(&self, i: usize) -> &Arc<dyn StoreBackend> {
+        // mrlint: allow(panic_free) — i comes from shard_for (idx % shards.len()) or 0..len
+        &self.shards[i]
+    }
+
+    /// Lock the facade journal, recovering from poison — the journal is
+    /// a cursor cache over the shards' own journals, so the worst a
+    /// poisoned update can leave behind is a stale cursor, which the
+    /// next `pull` re-reads.
+    fn lock_journal(&self) -> MutexGuard<'_, Journal> {
+        match self.journal.lock() {
+            Ok(guard) => guard,
+            Err(poisoned) => {
+                self.journal.clear_poison();
+                poisoned.into_inner()
+            }
+        }
+    }
+
     /// Drain shard `i`'s backend journal into the facade journal.
     /// Lock order is always facade-journal **then** shard — every shard
     /// call that itself locks shard state happens while we hold the
     /// journal lock, and no shard ever calls back into the facade.
     fn pull(&self, i: usize) -> u64 {
-        let mut journal =
-            self.journal.lock().expect("store journal poisoned");
-        let (records, generation) =
-            self.shards[i].read_since(journal.cursors[i]);
-        journal.cursors[i] = generation;
+        let mut journal = self.lock_journal();
+        let cursor = journal.cursors.get(i).copied().unwrap_or(0);
+        let (records, generation) = self.shard(i).read_since(cursor);
+        if let Some(c) = journal.cursors.get_mut(i) {
+            *c = generation;
+        }
         let fresh = records.len() as u64;
         journal.keys.extend(records.into_iter().map(|(k, _)| k));
         fresh
@@ -292,7 +314,7 @@ impl ProfileStore {
     /// hit bumps the record's LRU recency).
     pub fn get(&self, key: &StoreKey) -> Option<RepOutcome> {
         let i = self.shard_for(key);
-        let out = self.shards[i].get(key);
+        let out = self.shard(i).get(key);
         // First touch lazily loads the shard; surface what it found.
         self.pull(i);
         out
@@ -302,7 +324,7 @@ impl ProfileStore {
     /// generation advanced (new key or CPU upgrade — not a re-put).
     pub fn put(&self, key: StoreKey, outcome: RepOutcome) -> bool {
         let i = self.shard_for(key);
-        let journaled = self.shards[i].put(key, outcome);
+        let journaled = self.shard(i).put(key, outcome);
         self.pull(i);
         journaled
     }
@@ -320,8 +342,7 @@ impl ProfileStore {
     /// disk plus every later insertion.  Forces all shards to load.
     pub fn generation(&self) -> u64 {
         self.pull_all();
-        self.journal.lock().expect("store journal poisoned").keys.len()
-            as u64
+        self.lock_journal().keys.len() as u64
     }
 
     /// Every record accepted after `generation`, plus the new
@@ -333,16 +354,17 @@ impl ProfileStore {
         generation: u64,
     ) -> (Vec<(StoreKey, RepOutcome)>, u64) {
         self.pull_all();
-        let journal = self.journal.lock().expect("store journal poisoned");
+        let journal = self.lock_journal();
         let from = (generation as usize).min(journal.keys.len());
-        let records = journal.keys[from..]
+        let records = journal
+            .keys
+            .get(from..)
+            .unwrap_or_default()
             .iter()
             .filter_map(|k| {
                 // lookup, not get: replaying the journal is not a use
                 // and must not distort LRU recency.
-                self.shards[self.shard_for(k)]
-                    .lookup(k)
-                    .map(|o| (*k, o))
+                self.shard(self.shard_for(k)).lookup(k).map(|o| (*k, o))
             })
             .collect();
         (records, journal.keys.len() as u64)
@@ -473,10 +495,10 @@ fn shard_dirs_present(root: &Path) -> Vec<PathBuf> {
         .filter(|e| {
             let name = e.file_name();
             let name = name.to_string_lossy().into_owned();
-            name.len() == 8
-                && name.starts_with("shard-")
-                && name[6..].bytes().all(|b| b.is_ascii_digit())
-                && e.path().is_dir()
+            name.strip_prefix("shard-").is_some_and(|digits| {
+                digits.len() == 2
+                    && digits.bytes().all(|b| b.is_ascii_digit())
+            }) && e.path().is_dir()
         })
         .map(|e| e.path())
         .collect();
@@ -521,8 +543,10 @@ fn resolve_shard_count(dir: &Path, opts: &StoreOptions) -> usize {
     let dirs = shard_dirs_present(dir);
     if let Some(last) = dirs.last() {
         let name = last.file_name().unwrap_or_default().to_string_lossy();
-        if let Ok(i) = name[6..].parse::<usize>() {
-            return (i + 1).clamp(1, MAX_STORE_SHARDS);
+        if let Some(digits) = name.strip_prefix("shard-") {
+            if let Ok(i) = digits.parse::<usize>() {
+                return (i + 1).clamp(1, MAX_STORE_SHARDS);
+            }
         }
     }
     DEFAULT_STORE_SHARDS
@@ -619,7 +643,9 @@ fn migrate_legacy_root(
     let mut by_shard: Vec<Vec<(StoreKey, StoredRep)>> =
         (0..n).map(|_| Vec::new()).collect();
     for (key, rep) in scan.entries {
-        by_shard[shard_of(key.app, n)].push((key, rep));
+        if let Some(bucket) = by_shard.get_mut(shard_of(key.app, n)) {
+            bucket.push((key, rep));
+        }
     }
     if !can_rewrite {
         if !read_only && guard.is_none() {
@@ -636,9 +662,9 @@ fn migrate_legacy_root(
                 root.display()
             );
         }
-        for (i, records) in by_shard.into_iter().enumerate() {
+        for (shard, records) in shards.iter().zip(by_shard) {
             if !records.is_empty() {
-                shards[i].preload(records);
+                shard.preload(records);
             }
         }
         return stats;
@@ -647,7 +673,9 @@ fn migrate_legacy_root(
     // the root files it replaces.  Written via temp + rename so a crash
     // can never leave a half-written file with a valid segment name.
     let mut wrote = 0;
-    for (i, mut records) in by_shard.into_iter().enumerate() {
+    for (i, (shard, mut records)) in
+        shards.iter().zip(by_shard).enumerate()
+    {
         if records.is_empty() {
             continue;
         }
@@ -655,7 +683,7 @@ fn migrate_legacy_root(
         let sdir = shard_dir(root, i);
         if let Err(e) = fs::create_dir_all(&sdir) {
             eprintln!("store: create {}: {e}; migration aborted", sdir.display());
-            shards[i].preload(records);
+            shard.preload(records);
             continue;
         }
         let mut body = codec::bin_header().to_vec();
@@ -679,7 +707,7 @@ fn migrate_legacy_root(
                     sdir.display()
                 );
                 let _ = fs::remove_file(&tmp);
-                shards[i].preload(records);
+                shard.preload(records);
             }
         }
     }

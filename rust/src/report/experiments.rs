@@ -105,8 +105,16 @@ impl Fig4Data {
     /// Relative fluctuation: (max - min) / min — the paper observes
     /// WordCount fluctuates more than Exim.
     pub fn fluctuation(&self) -> f64 {
-        let min = self.times.iter().cloned().fold(f64::INFINITY, f64::min);
-        let max = self.times.iter().cloned().fold(0.0, f64::max);
+        let min = self
+            .times
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, crate::util::stats::total_min);
+        let max = self
+            .times
+            .iter()
+            .cloned()
+            .fold(0.0, crate::util::stats::total_max);
         (max - min) / min
     }
 
@@ -206,6 +214,19 @@ mod tests {
         assert_eq!(d.argmin(), (20, 5));
         assert!((d.fluctuation() - (500.0 - 300.0) / 300.0).abs() < 1e-12);
         assert_eq!(d.mean_time(), 412.5);
+    }
+
+    #[test]
+    fn fig4_fluctuation_is_nan_honest() {
+        // With f64::min/max a NaN cell was silently skipped and the
+        // fluctuation looked clean; total order propagates it.
+        let d = Fig4Data {
+            app: AppId::WordCount,
+            ms: vec![5, 20],
+            rs: vec![5, 40],
+            times: vec![400.0, f64::NAN, 300.0, 450.0],
+        };
+        assert!(d.fluctuation().is_nan(), "corrupt surface must not hide");
     }
 
     // Full-pipeline smoke (small lattice, 1 rep) — the real Fig. 3/Table 1

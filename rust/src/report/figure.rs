@@ -14,7 +14,7 @@ pub fn strip_chart(
         .iter()
         .chain(predicted)
         .cloned()
-        .fold(f64::MIN_POSITIVE, f64::max);
+        .fold(f64::MIN_POSITIVE, crate::util::stats::total_max);
     let mut out = format!("{title}\n");
     let bar = |v: f64| {
         let n = ((v / max) * width as f64).round() as usize;
@@ -102,6 +102,23 @@ mod tests {
         assert!(s.contains("actual"));
         assert!(s.contains("predicted"));
         assert!(s.contains("100.0s"));
+    }
+
+    #[test]
+    fn strip_chart_survives_nan_series() {
+        // A NaN sample (degenerate fit upstream) becomes the running max
+        // under total order; `v / max` is then NaN, `.round() as usize`
+        // saturates to 0, and the chart renders empty bars instead of
+        // scaling every other bar against a silently-dropped NaN.
+        let s = strip_chart(
+            "fig3a",
+            &["e1".into(), "e2".into()],
+            &[100.0, f64::NAN],
+            &[95.0, 90.0],
+            20,
+        );
+        assert!(s.contains("NaN"), "NaN sample shown, not hidden: {s}");
+        assert!(s.lines().count() == 5, "all rows rendered");
     }
 
     #[test]

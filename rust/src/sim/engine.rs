@@ -24,6 +24,7 @@ impl<E> PartialEq for Scheduled<E> {
 }
 impl<E> Eq for Scheduled<E> {}
 impl<E> PartialOrd for Scheduled<E> {
+    // mrlint: allow(nan_ordering) — canonical total-order delegation to Ord::cmp
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }

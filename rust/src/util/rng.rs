@@ -191,7 +191,7 @@ impl Zipf {
         loop {
             let u = self.h_x1 + rng.f64() * (self.h_n - self.h_x1);
             let x = self.h_inv(u);
-            let k = (x + 0.5).floor().max(1.0).min(self.n as f64);
+            let k = (x + 0.5).floor().clamp(1.0, self.n as f64);
             if k - x <= self.s_accept(k) || u >= self.h(k + 0.5) - k.powf(-self.s) {
                 return k as u64;
             }

@@ -52,14 +52,41 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Smaller of two floats under IEEE-754 total order.
+///
+/// Unlike [`f64::min`], which silently prefers the non-NaN operand, a
+/// NaN here is *larger* than every real number — so a NaN fed into a
+/// running minimum is ignored deterministically (never "wins" depending
+/// on operand order), while [`total_max`] surfaces it honestly.
+pub fn total_min(a: f64, b: f64) -> f64 {
+    if b.total_cmp(&a) == std::cmp::Ordering::Less {
+        b
+    } else {
+        a
+    }
+}
+
+/// Larger of two floats under IEEE-754 total order.
+///
+/// A positive NaN is the largest value in the total order, so a NaN
+/// sample propagates into a running maximum instead of being silently
+/// dropped the way [`f64::max`] drops it.
+pub fn total_max(a: f64, b: f64) -> f64 {
+    if b.total_cmp(&a) == std::cmp::Ordering::Greater {
+        b
+    } else {
+        a
+    }
+}
+
 /// Smallest element (`inf` when empty).
 pub fn min(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::INFINITY, f64::min)
+    xs.iter().copied().fold(f64::INFINITY, total_min)
 }
 
 /// Largest element (`-inf` when empty).
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    xs.iter().copied().fold(f64::NEG_INFINITY, total_max)
 }
 
 /// Mean absolute percentage error of `pred` against `truth` — the
@@ -112,8 +139,8 @@ impl OnlineStats {
         let d = x - self.mean;
         self.mean += d / self.n as f64;
         self.m2 += d * (x - self.mean);
-        self.min = self.min.min(x);
-        self.max = self.max.max(x);
+        self.min = total_min(self.min, x);
+        self.max = total_max(self.max, x);
     }
 
     /// Observations folded in so far.
@@ -165,8 +192,8 @@ impl OnlineStats {
         self.mean = (self.mean * self.n as f64 + other.mean * other.n as f64) / n;
         self.m2 = m2;
         self.n += other.n;
-        self.min = self.min.min(other.min);
-        self.max = self.max.max(other.max);
+        self.min = total_min(self.min, other.min);
+        self.max = total_max(self.max, other.max);
     }
 }
 
@@ -212,6 +239,38 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 2.5);
         // ... and the top quantile lands on the NaN, honestly.
         assert!(percentile(&xs, 100.0).is_nan());
+    }
+
+    #[test]
+    fn total_order_extrema_are_nan_deterministic() {
+        // Operand order never changes the answer (f64::min/max's NaN
+        // handling is operand-order dependent; total order is not).
+        assert_eq!(total_min(f64::NAN, 2.0), 2.0);
+        assert_eq!(total_min(2.0, f64::NAN), 2.0);
+        assert!(total_max(f64::NAN, 2.0).is_nan());
+        assert!(total_max(2.0, f64::NAN).is_nan());
+        // Signed zero is ordered, not collapsed.
+        assert_eq!(total_min(0.0, -0.0).to_bits(), (-0.0f64).to_bits());
+        assert_eq!(total_max(-0.0, 0.0).to_bits(), 0.0f64.to_bits());
+        // Slice forms inherit the same behaviour.
+        let xs = [3.0, f64::NAN, 1.0];
+        assert_eq!(min(&xs), 1.0);
+        assert!(max(&xs).is_nan());
+    }
+
+    #[test]
+    fn online_stats_extrema_survive_nan() {
+        let mut o = OnlineStats::new();
+        o.push(5.0);
+        o.push(f64::NAN);
+        o.push(1.0);
+        assert_eq!(o.min(), 1.0, "min ignores the NaN sample");
+        assert!(o.max().is_nan(), "max surfaces the NaN sample");
+        let mut m = OnlineStats::new();
+        m.push(0.5);
+        m.merge(&o);
+        assert_eq!(m.min(), 0.5);
+        assert!(m.max().is_nan());
     }
 
     #[test]

@@ -1,0 +1,30 @@
+//! Meta-test: the shipped tree must satisfy its own static-analysis
+//! pass.  `cargo test --test lint_clean` is therefore equivalent to
+//! `mrtuner lint` succeeding, which keeps the invariant enforced even
+//! for contributors who only run the test suite and never the CLI.
+
+use std::path::Path;
+
+use mrtuner::analysis;
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = analysis::run_lint(&root)
+        .expect("lint walk over rust/src must succeed");
+    assert!(
+        report.files_scanned > 30,
+        "suspiciously few files scanned ({}): wrong root?",
+        report.files_scanned
+    );
+    assert!(
+        report.findings.is_empty(),
+        "tree must be lint-clean; findings:\n{}",
+        report
+            .findings
+            .iter()
+            .map(analysis::Finding::render)
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
