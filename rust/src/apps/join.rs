@@ -1,0 +1,132 @@
+//! Two-input reduce-side equi-join — the skew-prone extension app.
+//!
+//! Models the classic repartition join: both inputs arrive tagged
+//! (`L\tkey\tpayload` for the left relation, `R\tkey\tpayload` for the
+//! right), mappers re-key every record on the join key with a
+//! side-marker prefix, and reducers cross-product the two sides per
+//! key.  Hot keys blow up the cross product quadratically, so unlike
+//! wordcount or sort the reduce stage — not the map or shuffle stage —
+//! can dominate, and key skew in the input shifts the whole `(M, R)`
+//! response surface.  No combiner: a cross product is not
+//! associatively reducible, so every tagged record must cross the
+//! shuffle intact.
+
+use crate::api::{Mapper, Pair, Reducer};
+
+/// Tag prefix a mapper attaches to left-relation values.
+const LEFT: &str = "L:";
+/// Tag prefix a mapper attaches to right-relation values.
+const RIGHT: &str = "R:";
+
+/// Re-keys `L\tkey\tpayload` / `R\tkey\tpayload` records on the join
+/// key, carrying the side tag into the value.  Records with an unknown
+/// tag or no key column are dropped (dirty input must not poison the
+/// join output).
+pub struct JoinMapper;
+
+impl Mapper for JoinMapper {
+    fn map(&self, _offset: u64, line: &str, out: &mut Vec<Pair>) {
+        let Some((tag, rest)) = line.split_once('\t') else {
+            return;
+        };
+        let prefix = match tag {
+            "L" => LEFT,
+            "R" => RIGHT,
+            _ => return,
+        };
+        let (key, payload) = match rest.split_once('\t') {
+            Some((k, p)) => (k, p),
+            None => (rest, ""),
+        };
+        if key.is_empty() {
+            return;
+        }
+        out.push(Pair::new(key, format!("{prefix}{payload}")));
+    }
+}
+
+/// Cross-products the left and right sides of each key: one output
+/// record per `(left, right)` payload pair, in the framework's
+/// deterministic value order.  Keys present on only one side emit
+/// nothing (inner-join semantics).
+pub struct JoinReducer;
+
+impl Reducer for JoinReducer {
+    fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+        let left: Vec<&str> =
+            values.iter().filter_map(|v| v.strip_prefix(LEFT)).collect();
+        let right: Vec<&str> =
+            values.iter().filter_map(|v| v.strip_prefix(RIGHT)).collect();
+        for l in &left {
+            for r in &right {
+                out.push(Pair::new(key, format!("{l},{r}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::engine::{execute, ExecOptions};
+    use crate::api::traits::HashPartitioner;
+
+    fn opts(r: u32, splits: u32) -> ExecOptions<'static> {
+        ExecOptions {
+            num_reducers: r,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: splits,
+        }
+    }
+
+    #[test]
+    fn inner_join_cross_products_matching_keys() {
+        let input = "L\tk1\ta\nR\tk1\tx\nL\tk1\tb\nR\tk2\ty\nL\tk3\tc\n";
+        let out = execute(&JoinMapper, &JoinReducer, input, &opts(2, 2));
+        // k1: 2 left × 1 right = 2 rows; k2 and k3 are single-sided.
+        assert_eq!(
+            out.all_pairs(),
+            vec![Pair::new("k1", "a,x"), Pair::new("k1", "b,x")]
+        );
+    }
+
+    #[test]
+    fn hot_keys_multiply_output_quadratically() {
+        // 4 left + 4 right records on one key -> 16 join rows.
+        let mut input = String::new();
+        for i in 0..4 {
+            input.push_str(&format!("L\thot\tl{i}\n"));
+            input.push_str(&format!("R\thot\tr{i}\n"));
+        }
+        let out = execute(&JoinMapper, &JoinReducer, &input, &opts(3, 2));
+        assert_eq!(out.output_records, 16);
+        assert!(out.output_bytes > out.input_bytes / 2);
+    }
+
+    #[test]
+    fn malformed_records_are_dropped_not_joined() {
+        let input = "L\tk\tv\nnot-tagged\nX\tk\tv\nR\tk\tw\nL\t\tempty-key\n";
+        let out = execute(&JoinMapper, &JoinReducer, input, &opts(1, 1));
+        assert_eq!(out.all_pairs(), vec![Pair::new("k", "v,w")]);
+        // Only the two well-formed tagged records crossed the shuffle.
+        assert_eq!(out.shuffle_records, 2);
+    }
+
+    #[test]
+    fn results_stable_across_split_and_reducer_counts() {
+        let mut input = String::new();
+        for i in 0..30 {
+            input.push_str(&format!("L\tk{}\tleft{i}\n", i % 7));
+            input.push_str(&format!("R\tk{}\tright{i}\n", i % 5));
+        }
+        let base = execute(&JoinMapper, &JoinReducer, &input, &opts(1, 1)).all_pairs();
+        for r in [2, 5] {
+            for s in [3, 8] {
+                let got =
+                    execute(&JoinMapper, &JoinReducer, &input, &opts(r, s)).all_pairs();
+                assert_eq!(got, base, "r={r} s={s}");
+            }
+        }
+    }
+}

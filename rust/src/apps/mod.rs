@@ -4,7 +4,12 @@
 //! * [`exim`] — the paper's second benchmark (Exim mainlog parsing,
 //!   written in Python and run via Hadoop streaming);
 //! * [`grep`] — a third app (distributed grep) used by the extension
-//!   experiments to show the model generalizes across applications.
+//!   experiments to show the model generalizes across applications;
+//! * [`sort`] — a terasort-like distributed sort, shuffle-bound
+//!   (selectivity ≈ 1), the anchor workload for the `shuffle_bytes`
+//!   prediction target;
+//! * [`join`] — a skew-prone two-input repartition join whose hot-key
+//!   cross products make the reduce stage dominant.
 //!
 //! Each app provides real [`crate::api::Mapper`]/[`crate::api::Reducer`]
 //! implementations (functionally executed in tests and examples) plus an
@@ -13,7 +18,9 @@
 
 pub mod exim;
 pub mod grep;
+pub mod join;
 pub mod profiles;
+pub mod sort;
 pub mod wordcount;
 
 use crate::api::{Combiner, Mapper, Reducer};
@@ -28,6 +35,10 @@ pub enum AppId {
     EximParse,
     /// Extension app: distributed grep.
     Grep,
+    /// Extension app: terasort-like distributed sort (shuffle-bound).
+    Sort,
+    /// Extension app: two-input repartition join (skew-prone).
+    Join,
 }
 
 impl AppId {
@@ -37,8 +48,10 @@ impl AppId {
             "wordcount" | "wc" => Ok(AppId::WordCount),
             "exim" | "eximparse" | "exim-mainlog" => Ok(AppId::EximParse),
             "grep" => Ok(AppId::Grep),
+            "sort" | "terasort" => Ok(AppId::Sort),
+            "join" | "repartition-join" => Ok(AppId::Join),
             other => Err(format!(
-                "unknown app '{other}' (expected wordcount | exim | grep)"
+                "unknown app '{other}' (expected wordcount | exim | grep | sort | join)"
             )),
         }
     }
@@ -49,12 +62,14 @@ impl AppId {
             AppId::WordCount => "wordcount",
             AppId::EximParse => "exim",
             AppId::Grep => "grep",
+            AppId::Sort => "sort",
+            AppId::Join => "join",
         }
     }
 
     /// Every application, paper benchmarks first.
-    pub fn all() -> [AppId; 3] {
-        [AppId::WordCount, AppId::EximParse, AppId::Grep]
+    pub fn all() -> [AppId; 5] {
+        [AppId::WordCount, AppId::EximParse, AppId::Grep, AppId::Sort, AppId::Join]
     }
 
     /// The two applications evaluated in the paper.
@@ -68,6 +83,8 @@ impl AppId {
             AppId::WordCount => profiles::wordcount(),
             AppId::EximParse => profiles::exim(),
             AppId::Grep => profiles::grep(),
+            AppId::Sort => profiles::sort(),
+            AppId::Join => profiles::join(),
         }
     }
 
@@ -91,6 +108,16 @@ impl AppId {
                 Box::new(grep::GrepReducer),
                 Some(Box::new(grep::GrepReducer)),
             ),
+            AppId::Sort => (
+                Box::new(sort::SortMapper),
+                Box::new(sort::SortReducer),
+                None, // a sort must keep every record distinct
+            ),
+            AppId::Join => (
+                Box::new(join::JoinMapper),
+                Box::new(join::JoinReducer),
+                None, // cross products are not associative-reducible
+            ),
         }
     }
 }
@@ -105,7 +132,9 @@ mod tests {
             assert_eq!(AppId::parse(app.name()).unwrap(), app);
         }
         assert_eq!(AppId::parse("WC").unwrap(), AppId::WordCount);
-        assert!(AppId::parse("sort").is_err());
+        assert_eq!(AppId::parse("terasort").unwrap(), AppId::Sort);
+        assert_eq!(AppId::parse("repartition-join").unwrap(), AppId::Join);
+        assert!(AppId::parse("teragen").is_err());
     }
 
     #[test]
@@ -127,5 +156,19 @@ mod tests {
         assert!(wc.map_cpu_ns_per_byte > 1.5 * ex.map_cpu_ns_per_byte);
         // Streaming noise drives Exim's larger prediction error.
         assert!(ex.task_sigma() > wc.task_sigma());
+    }
+
+    #[test]
+    fn extension_profiles_cover_new_corners() {
+        // Sort is the shuffle-bound corner: nearly all input crosses the
+        // network and is written back out.
+        let sort = AppId::Sort.profile();
+        assert!(sort.selectivity > 0.9 && sort.output_ratio > 0.9);
+        // Join is the reduce-bound corner: hot-key cross products.
+        let join = AppId::Join.profile();
+        assert!(join.reduce_cpu_ns_per_byte > join.map_cpu_ns_per_byte);
+        // The shuffle-volume ordering the multi-target model must learn.
+        assert!(sort.selectivity > AppId::WordCount.profile().selectivity);
+        assert!(join.selectivity > AppId::WordCount.profile().selectivity);
     }
 }

@@ -60,6 +60,39 @@ pub fn grep() -> AppProfile {
     }
 }
 
+/// Terasort-like sort (Java): cheap per-byte map/reduce work, but every
+/// input byte crosses the shuffle and is written back with replication —
+/// the shuffle/network-bound corner of the app space, and the natural
+/// benchmark for the `shuffle_bytes` prediction target.
+pub fn sort() -> AppProfile {
+    AppProfile {
+        name: "sort".into(),
+        map_cpu_ns_per_byte: 60.0,
+        reduce_cpu_ns_per_byte: 40.0,
+        selectivity: 0.97,
+        output_ratio: 0.97,
+        streaming: false,
+        noise_sigma: 0.025,
+        job_sigma: 0.01,
+    }
+}
+
+/// Reduce-side repartition join (Java): tagging is cheap, but cross
+/// products on Zipf-hot keys make reduce CPU the dominant per-byte cost
+/// and inflate run-to-run variance (which reducer draws the hot key).
+pub fn join() -> AppProfile {
+    AppProfile {
+        name: "join".into(),
+        map_cpu_ns_per_byte: 120.0,
+        reduce_cpu_ns_per_byte: 200.0,
+        selectivity: 0.85,
+        output_ratio: 0.60,
+        streaming: false,
+        noise_sigma: 0.03,
+        job_sigma: 0.01,
+    }
+}
+
 /// Recalibrate the data-dependent coefficients of `profile` from a
 /// functional run (`out`) on representative sample input.
 ///

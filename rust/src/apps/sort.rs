@@ -1,0 +1,96 @@
+//! Terasort-like distributed sort — the shuffle-heavy extension app.
+//!
+//! The benchmark that motivated the network-load companion work (arXiv
+//! 1206.2016): every input byte crosses the shuffle (selectivity ≈ 1)
+//! and every byte is written back out (output ratio ≈ 1), so total
+//! execution time is shuffle/network-bound rather than map-CPU-bound —
+//! the opposite corner of the `(M, R)` surface from grep.  Mappers emit
+//! `<key, payload>` straight from `key\tpayload` records; the framework's
+//! sort-by-key between map and reduce does the actual work, and reducers
+//! pass records through in key order.
+
+use crate::api::{Mapper, Pair, Reducer};
+
+/// Splits each `key\tpayload` record; lines without a tab sort on the
+/// whole line with an empty payload (total, never dropping a record —
+/// a sort must not lose input).
+pub struct SortMapper;
+
+impl Mapper for SortMapper {
+    fn map(&self, _offset: u64, line: &str, out: &mut Vec<Pair>) {
+        if line.is_empty() {
+            return;
+        }
+        match line.split_once('\t') {
+            Some((key, payload)) => out.push(Pair::new(key, payload)),
+            None => out.push(Pair::new(line, "")),
+        }
+    }
+}
+
+/// Emits every payload of a key, in the framework's (deterministic)
+/// value order — the identity reduce of a distributed sort.  No
+/// combiner: pre-aggregation would merge records a sort must keep.
+pub struct SortReducer;
+
+impl Reducer for SortReducer {
+    fn reduce(&self, key: &str, values: &[String], out: &mut Vec<Pair>) {
+        for v in values {
+            out.push(Pair::new(key, v.as_str()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::engine::{execute, ExecOptions};
+    use crate::api::traits::HashPartitioner;
+
+    #[test]
+    fn passes_every_record_through_in_key_order() {
+        let input = "cherry\t3\napple\t1\nbanana\t2\napple\t4\n";
+        let o = ExecOptions {
+            num_reducers: 1,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 2,
+        };
+        let out = execute(&SortMapper, &SortReducer, input, &o);
+        assert_eq!(
+            out.all_pairs(),
+            vec![
+                Pair::new("apple", "1"),
+                Pair::new("apple", "4"),
+                Pair::new("banana", "2"),
+                Pair::new("cherry", "3"),
+            ]
+        );
+    }
+
+    #[test]
+    fn tabless_lines_survive_as_bare_keys() {
+        let o = ExecOptions {
+            num_reducers: 2,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 1,
+        };
+        let out = execute(&SortMapper, &SortReducer, "zeta\nalpha\t9\n", &o);
+        assert_eq!(out.output_records, 2, "no record dropped");
+    }
+
+    #[test]
+    fn shuffle_carries_essentially_all_input() {
+        let input = "k1\tpayload-one\nk2\tpayload-two\nk3\tpayload-three\n";
+        let o = ExecOptions {
+            num_reducers: 2,
+            combiner: None,
+            partitioner: &HashPartitioner,
+            num_splits: 1,
+        };
+        let out = execute(&SortMapper, &SortReducer, input, &o);
+        // Selectivity ≈ 1: only the tab separators are shed.
+        assert!(out.selectivity() > 0.85, "selectivity {}", out.selectivity());
+    }
+}

@@ -182,6 +182,31 @@ impl Client {
         })
     }
 
+    /// Predict one of `app`'s modeled outputs by target name (`time_s`,
+    /// `cpu_s`, `shuffle_bytes`) via the request's optional `target`
+    /// field.  Equivalent to predicting against the target-qualified
+    /// model name; the prediction's unit follows the target.
+    pub fn predict_target(
+        &mut self,
+        app: &str,
+        target: &str,
+        mappers: u32,
+        reducers: u32,
+    ) -> Result<Prediction, ClientError> {
+        let req = Json::obj(vec![
+            ("op", Json::Str("predict".into())),
+            ("app", Json::Str(app.into())),
+            ("target", Json::Str(target.into())),
+            ("mappers", Json::Num(mappers as f64)),
+            ("reducers", Json::Num(reducers as f64)),
+        ]);
+        let resp = self.round_trip(&req)?;
+        Ok(Prediction {
+            seconds: req_f64(&resp, "predicted_s")?,
+            version: req_u64(&resp, "version")?,
+        })
+    }
+
     /// List applications with installed models.
     pub fn models(&mut self) -> Result<Vec<String>, ClientError> {
         let req = Json::obj(vec![("op", Json::Str("models".into()))]);

@@ -182,7 +182,7 @@ mod tests {
         r.insert(model("exim"));
         assert_eq!(r.len(), 2);
         assert!(r.get("wordcount").is_some());
-        assert!(r.get("sort").is_none());
+        assert!(r.get("teragen").is_none());
         assert_eq!(r.names(), vec!["exim", "wordcount"]);
         assert!(r.remove("exim").is_some());
         assert_eq!(r.len(), 1);

@@ -6,6 +6,9 @@
 //! ```text
 //! -> {"op":"predict","app":"wordcount","mappers":20,"reducers":5}
 //! <- {"ok":true,"predicted_s":512.4,"version":1}
+//! -> {"op":"predict","app":"sort","mappers":20,"reducers":5,
+//!     "target":"shuffle_bytes"}
+//! <- {"ok":true,"predicted_s":8.6e9,"version":1,"target":"shuffle_bytes"}
 //! -> {"op":"models"}
 //! <- {"ok":true,"models":["exim","wordcount"]}
 //! -> {"op":"model_info","app":"wordcount"}
@@ -48,6 +51,7 @@ use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use crate::model::Target;
 use crate::util::json::{parse, Json};
 
 use super::service::{BatchItem, Prediction, PredictionService};
@@ -759,21 +763,40 @@ pub fn dispatch(
             let (Some(m), Some(r)) = (m, r) else {
                 return err("predict requires integer 'mappers' and 'reducers'");
             };
+            // Optional multi-target selector: "target" names which of
+            // the app's models answers, resolving to the same registry
+            // entries the qualified-name path serves.  Absent means the
+            // legacy time model — byte-for-byte the pre-multi-target
+            // request and response.
+            let target = match req.get("target").and_then(|t| t.as_str()) {
+                None => None,
+                Some(t) => match Target::parse(t) {
+                    Ok(t) => Some(t),
+                    Err(e) => return err(&e),
+                },
+            };
+            let name = match target {
+                Some(t) => t.qualified(app),
+                None => app.to_string(),
+            };
             // The same atomic (coeffs, version) batch path the binary
             // protocol's workers use — both protocols answer any predict
             // with exactly the same bits.
-            let item = BatchItem {
-                app: app.to_string(),
-                mappers: m as u32,
-                reducers: r as u32,
-            };
+            let item =
+                BatchItem { app: name, mappers: m as u32, reducers: r as u32 };
             match service.predict_batch(std::slice::from_ref(&item)).remove(0)
             {
-                Ok(p) => Json::obj(vec![
-                    ("ok", Json::Bool(true)),
-                    ("predicted_s", Json::Num(p.seconds)),
-                    ("version", Json::Num(p.version as f64)),
-                ]),
+                Ok(p) => {
+                    let mut pairs = vec![
+                        ("ok", Json::Bool(true)),
+                        ("predicted_s", Json::Num(p.seconds)),
+                        ("version", Json::Num(p.version as f64)),
+                    ];
+                    if let Some(t) = target {
+                        pairs.push(("target", Json::Str(t.name().into())));
+                    }
+                    Json::obj(pairs)
+                }
                 Err(e) => err(&e),
             }
         }
@@ -835,13 +858,11 @@ pub fn dispatch(
                                 summary
                                     .published
                                     .iter()
-                                    .map(|(app, version)| {
+                                    .map(|(name, version)| {
                                         Json::obj(vec![
                                             (
                                                 "app",
-                                                Json::Str(
-                                                    app.name().to_string(),
-                                                ),
+                                                Json::Str(name.clone()),
                                             ),
                                             (
                                                 "version",

@@ -499,15 +499,15 @@ mod tests {
     #[test]
     fn unknown_app_is_error() {
         let svc = service();
-        let err = svc.predict("sort", 10, 10).unwrap_err();
+        let err = svc.predict("teragen", 10, 10).unwrap_err();
         assert!(err.contains("no model"));
     }
 
     #[test]
     fn rejected_requests_do_not_inflate_mean_batch() {
         let svc = service();
-        svc.predict("sort", 10, 10).unwrap_err();
-        svc.predict("sort", 12, 10).unwrap_err();
+        svc.predict("teragen", 10, 10).unwrap_err();
+        svc.predict("teragen", 12, 10).unwrap_err();
         svc.predict("wordcount", 20, 5).unwrap();
         let m = &svc.metrics;
         assert_eq!(m.requests.load(Ordering::Relaxed), 3);

@@ -20,12 +20,23 @@
 //! without restart.
 //!
 //! **Exactness:** a refit is not an approximation.  Per setting the
-//! trainer keeps every rep time (keyed `(session, rep)`, so means are
+//! trainer keeps every rep outcome (keyed `(session, rep)`, so means are
 //! computed over a deterministic order), and the accumulator path is
 //! bit-identical to a from-scratch
 //! [`RegressionModel::fit_dataset`] over the same per-setting mean rows
 //! in the same (sorted) order — asserted end-to-end in
 //! `rust/tests/trainer_loop.rs`.
+//!
+//! **Multi-target:** the trainer tails the store *once* and fits one
+//! regression per [`Target`] — total time (the source paper), total CPU
+//! seconds (arXiv 1203.4054), shuffle bytes (arXiv 1206.2016) — through
+//! the same accumulator, publishing a versioned model **set** per app.
+//! The time model keeps the plain app name, so legacy single-target
+//! clients keep resolving the identical registry entry bit-identically;
+//! the others publish under `app@target` names.  Reps migrated from
+//! older store formats lack some figures; a target's fit uses exactly
+//! the reps that carry its value, and is skipped (not failed) while too
+//! few settings do.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -34,18 +45,20 @@ use crate::apps::AppId;
 use crate::cluster::Cluster;
 use crate::model::features::{evaluate, NUM_FEATURES};
 use crate::model::regression::{FitAccumulator, RegressionModel};
+use crate::model::Target;
+use crate::mr::RepOutcome;
 use crate::profiler::{cluster_fingerprint, ProfileStore, StoreKey};
 
 use super::service::PredictionService;
 
 /// Per-application training state: every paper-plane repetition seen so
-/// far, grouped by setting.  Rep times key by `(session seed, rep)` so
-/// iteration order — and therefore every mean — is deterministic
+/// far, grouped by setting.  Rep outcomes key by `(session seed, rep)`
+/// so iteration order — and therefore every mean — is deterministic
 /// whatever order records arrived in.
 #[derive(Clone, Debug, Default)]
 struct AppState {
-    /// `(M, R)` → `(base_seed, rep)` → observed total time.
-    reps: BTreeMap<(u32, u32), BTreeMap<(u64, u32), f64>>,
+    /// `(M, R)` → `(base_seed, rep)` → observed rep outcome.
+    reps: BTreeMap<(u32, u32), BTreeMap<(u64, u32), RepOutcome>>,
     /// Whether new reps arrived since the last successful refit.
     dirty: bool,
 }
@@ -55,9 +68,13 @@ struct AppState {
 pub struct Refit {
     /// Application the model was refit for.
     pub app: AppId,
-    /// The freshly fitted model (`trained_on` = distinct settings).
+    /// Modeled output this regression fits.
+    pub target: Target,
+    /// The freshly fitted model (`trained_on` = distinct settings;
+    /// `app_name` = the target-qualified registry name).
     pub model: RegressionModel,
-    /// Root-mean-square residual on the training rows, seconds.
+    /// Root-mean-square residual on the training rows, in the target's
+    /// unit (seconds or bytes).
     pub fit_rmse: f64,
 }
 
@@ -78,8 +95,9 @@ pub struct TrainerReport {
 pub struct RetrainSummary {
     /// Store records newly discovered by the poll.
     pub new_records: u64,
-    /// `(application, assigned version)` for every hot-swapped refit.
-    pub published: Vec<(AppId, u64)>,
+    /// `(model name, assigned version)` for every hot-swapped refit —
+    /// the plain app name for the time model, `app@target` otherwise.
+    pub published: Vec<(String, u64)>,
 }
 
 /// The trainer: profile-store tailer + incremental refitter.
@@ -177,11 +195,14 @@ impl Trainer {
                 continue;
             }
             let state = self.apps.entry(key.app).or_default();
+            // Plain insert: a record upgraded in place (CPU or byte
+            // figures filled in by a re-simulation) reappears in the
+            // journal and overwrites its partial predecessor here.
             state
                 .reps
                 .entry((key.num_mappers, key.num_reducers))
                 .or_default()
-                .insert((key.base_seed, key.rep), outcome.time_s);
+                .insert((key.base_seed, key.rep), outcome);
             state.dirty = true;
         }
         let mut refits = Vec::new();
@@ -189,17 +210,28 @@ impl Trainer {
             if !state.dirty || state.reps.len() < self.min_settings {
                 continue;
             }
-            match fit_app(*app, state) {
-                Ok(refit) => {
-                    state.dirty = false;
-                    refits.push(refit);
+            let mut clean = true;
+            for target in Target::all() {
+                match fit_app(*app, target, state, self.min_settings) {
+                    Ok(Some(refit)) => refits.push(refit),
+                    // Too few settings carry this target's value (e.g. a
+                    // pure pre-v4 store has no byte counters): skip, and
+                    // don't hold the app dirty over it.
+                    Ok(None) => {}
+                    // A degenerate system for one target must not stall
+                    // the loop for the others; leave the app dirty so
+                    // the next poll (with more data) retries.
+                    Err(e) => {
+                        clean = false;
+                        eprintln!(
+                            "trainer: refit of {} ({target}) skipped: {e}",
+                            app.name()
+                        );
+                    }
                 }
-                // A degenerate system for one app must not stall the
-                // loop for the others; leave it dirty so the next poll
-                // (with more data) retries.
-                Err(e) => {
-                    eprintln!("trainer: refit of {} skipped: {e}", app.name())
-                }
+            }
+            if clean {
+                state.dirty = false;
             }
         }
         Ok(TrainerReport { new_records, refits, generation })
@@ -216,8 +248,9 @@ impl Trainer {
         let report = self.poll()?;
         let mut published = Vec::new();
         for refit in report.refits {
+            let name = refit.model.app_name.clone();
             let version = service.publish_model(refit.model, refit.fit_rmse);
-            published.push((refit.app, version));
+            published.push((name, version));
         }
         Ok(RetrainSummary { new_records: report.new_records, published })
     }
@@ -232,22 +265,40 @@ impl Trainer {
     }
 }
 
-/// Fit one application from its retained per-setting reps: per-setting
-/// mean rows in sorted `(M, R)` order through the rank-1 accumulator —
-/// the order and arithmetic a from-scratch
-/// [`RegressionModel::fit_dataset`] over the same rows would use, so the
-/// result is bit-identical to it.
-fn fit_app(app: AppId, state: &AppState) -> Result<Refit, String> {
+/// Fit one `(application, target)` regression from the retained
+/// per-setting reps: per-setting mean rows in sorted `(M, R)` order
+/// through the rank-1 accumulator — the order and arithmetic a
+/// from-scratch [`RegressionModel::fit_dataset`] over the same rows
+/// would use, so the result is bit-identical to it.  For `TimeS` (every
+/// rep carries a time) that makes the fit bit-identical to the pre-
+/// multi-target trainer's.
+///
+/// A setting contributes a row when at least one of its reps carries the
+/// target's value (the mean is over exactly those reps); returns
+/// `Ok(None)` when fewer than `min_settings` settings do.
+fn fit_app(
+    app: AppId,
+    target: Target,
+    state: &AppState,
+    min_settings: usize,
+) -> Result<Option<Refit>, String> {
     let mut acc = FitAccumulator::new();
     let mut params = Vec::with_capacity(state.reps.len());
     let mut means = Vec::with_capacity(state.reps.len());
     for (&(m, r), reps) in &state.reps {
-        let times: Vec<f64> = reps.values().copied().collect();
-        let mean = crate::util::stats::mean(&times);
+        let values: Vec<f64> =
+            reps.values().filter_map(|o| target.value(o)).collect();
+        if values.is_empty() {
+            continue;
+        }
+        let mean = crate::util::stats::mean(&values);
         let row = [m as f64, r as f64];
         acc.add_row(&row, mean, 1.0);
         params.push(row);
         means.push(mean);
+    }
+    if means.len() < min_settings {
+        return Ok(None);
     }
     let coeffs = acc.solve()?;
     let mut sq = 0.0;
@@ -256,15 +307,16 @@ fn fit_app(app: AppId, state: &AppState) -> Result<Refit, String> {
         sq += e * e;
     }
     let fit_rmse = (sq / means.len() as f64).sqrt();
-    Ok(Refit {
+    Ok(Some(Refit {
         app,
+        target,
         model: RegressionModel {
-            app_name: app.name().to_string(),
+            app_name: target.qualified(app.name()),
             coeffs,
             trained_on: means.len(),
         },
         fit_rmse,
-    })
+    }))
 }
 
 #[cfg(test)]
@@ -303,11 +355,21 @@ mod tests {
         let mut trainer = Trainer::open(&dir, &cluster).unwrap();
         let report = trainer.poll().unwrap();
         assert_eq!(report.new_records, 36, "18 settings x 2 reps");
-        assert_eq!(report.refits.len(), 1);
-        let refit = &report.refits[0];
-        assert_eq!(refit.app, AppId::WordCount);
-        assert_eq!(refit.model.trained_on, 18);
-        assert!(refit.fit_rmse.is_finite());
+        // Fresh simulations carry every figure: one refit per target.
+        assert_eq!(report.refits.len(), 3);
+        let targets: Vec<Target> =
+            report.refits.iter().map(|r| r.target).collect();
+        assert_eq!(targets, Target::all().to_vec());
+        for refit in &report.refits {
+            assert_eq!(refit.app, AppId::WordCount);
+            assert_eq!(refit.model.trained_on, 18);
+            assert!(refit.fit_rmse.is_finite());
+            assert_eq!(
+                refit.model.app_name,
+                refit.target.qualified("wordcount")
+            );
+        }
+        assert_eq!(report.refits[0].model.app_name, "wordcount");
         // Nothing new: the next poll is a no-op.
         let again = trainer.poll().unwrap();
         assert_eq!(again.new_records, 0);
@@ -347,6 +409,7 @@ mod tests {
         let mut trainer = Trainer::open(&dir, &cluster).unwrap();
         let report = trainer.poll().unwrap();
         let refit = &report.refits[0];
+        assert_eq!(refit.target, Target::TimeS, "time model fits first");
         for i in 0..NUM_FEATURES {
             assert!(
                 (refit.model.coeffs[i] - scratch.coeffs[i]).abs() < 1e-9,

@@ -1,0 +1,92 @@
+//! Two-relation tagged-record generator for the repartition-join
+//! benchmark.
+//!
+//! Emits interleaved `L\tkey\tpayload` and `R\tkey\tpayload` lines over
+//! a shared Zipf-skewed key space, so a handful of hot keys carry many
+//! records on both sides and their per-key cross products dominate the
+//! reduce stage — the skew the join app exists to model.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// Shared key-space size; small enough that hot keys repeat on both
+/// sides even in modest inputs.
+const KEY_SPACE: u64 = 500;
+/// Zipf exponent for key popularity (hot head, long tail).
+const SKEW: f64 = 1.2;
+/// Fraction of lines belonging to the left relation.
+const LEFT_SHARE: f64 = 0.5;
+
+fn payload(rng: &mut Rng, side: &str, seq: u64) -> String {
+    format!("{side}{seq:08}-{:04x}", rng.next_u64() & 0xFFFF)
+}
+
+/// Generate roughly `target_bytes` of interleaved tagged join input.
+pub fn generate(rng: &mut Rng, target_bytes: usize) -> String {
+    let zipf = Zipf::new(KEY_SPACE, SKEW);
+    let mut out = String::with_capacity(target_bytes + 64);
+    let mut seq = 0u64;
+    while out.len() < target_bytes {
+        let key = zipf.sample(rng);
+        let (tag, side) = if rng.bool(LEFT_SHARE) { ("L", "l") } else { ("R", "r") };
+        out.push_str(&format!(
+            "{tag}\tk{key:04}\t{}\n",
+            payload(rng, side, seq)
+        ));
+        seq += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&mut Rng::new(11), 6_000);
+        let b = generate(&mut Rng::new(11), 6_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn every_line_is_well_tagged() {
+        let data = generate(&mut Rng::new(1), 12_000);
+        for line in data.lines() {
+            let mut cols = line.split('\t');
+            let tag = cols.next().unwrap();
+            assert!(tag == "L" || tag == "R", "bad tag in {line:?}");
+            let key = cols.next().expect("key column");
+            assert!(key.starts_with('k') && key.len() == 5, "bad key {key:?}");
+            assert!(!cols.next().expect("payload column").is_empty());
+        }
+    }
+
+    #[test]
+    fn both_relations_are_represented() {
+        let data = generate(&mut Rng::new(2), 12_000);
+        let left = data.lines().filter(|l| l.starts_with("L\t")).count();
+        let right = data.lines().filter(|l| l.starts_with("R\t")).count();
+        let total = left + right;
+        assert!(left as f64 > 0.3 * total as f64);
+        assert!(right as f64 > 0.3 * total as f64);
+    }
+
+    #[test]
+    fn key_distribution_is_skewed() {
+        let data = generate(&mut Rng::new(3), 40_000);
+        let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+        for line in data.lines() {
+            let key = line.split('\t').nth(1).unwrap();
+            *counts.entry(key).or_default() += 1;
+        }
+        let total: u64 = counts.values().sum();
+        let max = *counts.values().max().unwrap();
+        // The hottest key carries far more than a uniform share.
+        assert!(max as f64 > 10.0 * total as f64 / KEY_SPACE as f64);
+        // The hot key appears on both sides (so it actually joins).
+        let hot = counts.iter().max_by_key(|(_, c)| **c).unwrap().0;
+        assert!(data.lines().any(|l| l.starts_with(&format!("L\t{hot}\t"))));
+        assert!(data.lines().any(|l| l.starts_with(&format!("R\t{hot}\t"))));
+    }
+}

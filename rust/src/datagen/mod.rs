@@ -1,9 +1,14 @@
 //! Synthetic workload data generators.
 //!
-//! Stand-ins for the paper's 8 GB inputs (§V.A): a Zipf-distributed text
-//! corpus for WordCount/Grep and a realistic Exim mainlog for the parsing
-//! benchmark.  Both are deterministic given an RNG stream, and both are
-//! *actually processed* by the functional engine in tests and examples.
+//! Stand-ins for the paper's 8 GB inputs (§V.A) and the extension
+//! benchmarks: a Zipf-distributed text corpus for WordCount/Grep, a
+//! realistic Exim mainlog for the parsing benchmark, fixed-width
+//! `key\tpayload` records for the terasort-like sort, and Zipf-skewed
+//! tagged two-relation lines for the repartition join.  All are
+//! deterministic given an RNG stream, and all are *actually processed*
+//! by the functional engine in tests and examples.
 
 pub mod corpus;
 pub mod exim_log;
+pub mod join_log;
+pub mod sort_records;

@@ -1,0 +1,94 @@
+//! Fixed-width record generator for the terasort-like sort benchmark.
+//!
+//! Mirrors teragen's shape at line granularity: every record is a
+//! `key\tpayload` line with a 10-character random key and a fixed-width
+//! filler payload, so record count scales linearly with target size and
+//! the sort's shuffle volume tracks input volume byte-for-byte.
+
+use crate::util::rng::Rng;
+
+/// Key width in characters (teragen uses 10-byte keys).
+const KEY_LEN: usize = 10;
+/// Payload width in characters.
+const PAYLOAD_LEN: usize = 32;
+
+fn key(rng: &mut Rng) -> String {
+    // Uppercase letters only: keys collate identically as bytes and as
+    // UTF-8 strings, so the functional sort order is unambiguous.
+    (0..KEY_LEN)
+        .map(|_| (b'A' + rng.range_u64(0, 26) as u8) as char)
+        .collect()
+}
+
+fn payload(rng: &mut Rng, seq: u64) -> String {
+    // A sequence number followed by repeated filler, padded to width —
+    // mirrors teragen's "rowid + filler" payload layout.
+    let filler = (b'a' + rng.range_u64(0, 26) as u8) as char;
+    let head = format!("{seq:010}-");
+    let fill = PAYLOAD_LEN - head.len();
+    let mut p = head;
+    for _ in 0..fill {
+        p.push(filler);
+    }
+    p
+}
+
+/// Generate roughly `target_bytes` of `key\tpayload` records.
+pub fn generate(rng: &mut Rng, target_bytes: usize) -> String {
+    let mut out = String::with_capacity(target_bytes + 64);
+    let mut seq = 0u64;
+    while out.len() < target_bytes {
+        out.push_str(&key(rng));
+        out.push('\t');
+        out.push_str(&payload(rng, seq));
+        out.push('\n');
+        seq += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(&mut Rng::new(7), 4_000);
+        let b = generate(&mut Rng::new(7), 4_000);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn records_are_fixed_width() {
+        let data = generate(&mut Rng::new(1), 10_000);
+        for line in data.lines() {
+            let (k, p) = line.split_once('\t').expect("tab-separated");
+            assert_eq!(k.len(), KEY_LEN, "bad key {k:?}");
+            assert_eq!(p.len(), PAYLOAD_LEN, "bad payload {p:?}");
+            assert!(k.bytes().all(|b| b.is_ascii_uppercase()));
+        }
+    }
+
+    #[test]
+    fn payload_sequence_numbers_are_unique() {
+        let data = generate(&mut Rng::new(2), 8_000);
+        let mut seqs: Vec<&str> = data
+            .lines()
+            .map(|l| &l[KEY_LEN + 1..KEY_LEN + 11])
+            .collect();
+        let n = seqs.len();
+        seqs.sort();
+        seqs.dedup();
+        assert_eq!(seqs.len(), n, "duplicate sequence numbers");
+    }
+
+    #[test]
+    fn size_tracks_target() {
+        for target in [1_000, 20_000] {
+            let data = generate(&mut Rng::new(3), target);
+            let record = KEY_LEN + 1 + PAYLOAD_LEN + 1;
+            assert!(data.len() >= target);
+            assert!(data.len() < target + record);
+        }
+    }
+}

@@ -29,12 +29,14 @@ use mrtuner::model::features::NUM_FEATURES;
 use mrtuner::model::ndpoly::NdPolyModel;
 use mrtuner::model::regression::RegressionModel;
 use mrtuner::mr::{run_job, JobConfig, RepOutcome};
+use mrtuner::profiler::campaign::grid_specs;
 use mrtuner::profiler::dlq;
 use mrtuner::profiler::extended::{random_ext4, scales, Ext4Spec};
 use mrtuner::profiler::store::{FileBackend, StoreBackend, StoreOptions};
 use mrtuner::profiler::{
-    cluster_fingerprint, ext4_rep_jobs, paper_campaign, CampaignExecutor,
-    Dataset, ExperimentSpec, ProfileStore, RepJob, StoreKey,
+    cluster_fingerprint, ext4_rep_jobs, paper_campaign, Campaign,
+    CampaignExecutor, Dataset, DlqRecord, ExperimentSpec, ProfileStore,
+    RepJob, StoreKey,
 };
 use mrtuner::report::{e2e, experiments, figure, table};
 use mrtuner::util::benchkit::{bench, BenchStats};
@@ -222,7 +224,10 @@ fn print_help() {
                     protocol, autodetected per connection); with --store it\n\
                     also runs the online trainer (protocol op `retrain`,\n\
                     plus a periodic refit every SECS seconds) so newly\n\
-                    profiled apps are served without restart\n\
+                    profiled apps are served without restart.  Models are\n\
+                    fit per target (time_s | cpu_s | shuffle_bytes); add\n\
+                    \"target\":\"shuffle_bytes\" to a predict op (or query\n\
+                    app \"wordcount@shuffle_bytes\") for non-time targets\n\
            e2e      [--seed N] [--jobs N]                full pipeline validation\n\
            store    <stats|compact|clear> --store PATH [--store-max-mb N]\n\
                     persistent profile store maintenance; stats prints a\n\
@@ -261,7 +266,7 @@ fn print_help() {
          (profile | ext4) additionally reports the done/missing diff\n\
          before dispatch.  --cooperative lets N processes pointed at one\n\
          store split a campaign via per-setting leases.\n\n\
-         APPS: wordcount | exim | grep"
+         APPS: wordcount | exim | grep | sort | join"
     );
 }
 
@@ -1578,6 +1583,114 @@ fn bench_campaign(args: &Args) -> Result<(), String> {
             })
     };
     let _ = std::fs::remove_dir_all(&resume_dir);
+    // Dead-letter retry latency: the whole skewed grid quarantined, then
+    // re-run through the same take → rebuild → store-backed-executor →
+    // flush path `mrtuner dlq retry` uses.  The warmup pass simulates the
+    // reps into the store, so the measured iterations isolate the DLQ
+    // machinery (decode, rebuild, warm dispatch, re-append bookkeeping).
+    let fp = cluster_fingerprint(&cluster);
+    let dlq_store_dir = std::env::temp_dir()
+        .join(format!("mrtuner_bench_dlq_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dlq_store_dir);
+    let poisoned: Vec<DlqRecord> = specs
+        .iter()
+        .flat_map(|s| {
+            let s = *s;
+            (0..reps).map(move |rep| DlqRecord {
+                key: StoreKey {
+                    cluster: fp,
+                    app: s.app,
+                    num_mappers: s.num_mappers,
+                    num_reducers: s.num_reducers,
+                    input_gb_bits: s.input_gb.to_bits(),
+                    block_mb: s.block_mb,
+                    rep,
+                    base_seed: 7,
+                },
+                attempts: 3,
+                error: "bench: synthetic quarantine".into(),
+            })
+        })
+        .collect();
+    let dlq_dir = dlq::dlq_dir(&dlq_store_dir);
+    let dlq_exec = CampaignExecutor::new(jobs)
+        .with_store(ProfileStore::open(&dlq_store_dir)?);
+    let dlq_retry = bench("dlq retry: re-run poisoned grid", 1, 3, || {
+        dlq::append(&dlq_dir, &poisoned).unwrap();
+        let records = dlq::take(&dlq_dir).unwrap();
+        let retry_jobs: Vec<RepJob> = records
+            .iter()
+            .map(|r| {
+                RepJob::ext4(
+                    Ext4Spec {
+                        app: r.key.app,
+                        num_mappers: r.key.num_mappers,
+                        num_reducers: r.key.num_reducers,
+                        input_gb: r.key.input_gb(),
+                        block_mb: r.key.block_mb,
+                    },
+                    r.key.rep,
+                    r.key.base_seed,
+                )
+            })
+            .collect();
+        let outcomes = dlq_exec.run_outcomes(&cluster, &retry_jobs);
+        dlq_exec.flush_store().unwrap();
+        std::hint::black_box(outcomes.len());
+    });
+    drop(dlq_exec);
+    let _ = std::fs::remove_dir_all(&dlq_store_dir);
+    // `--resume` diff cost at campaign scale: campaign_resume_status over
+    // the full 36×36 paper lattice × 8 reps (10368 rep jobs, half of them
+    // already on disk) — the preflight a `profile --resume` pays before
+    // dispatching anything.
+    let diff_dir = std::env::temp_dir()
+        .join(format!("mrtuner_bench_resume_diff_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&diff_dir);
+    let diff_campaign = Campaign {
+        app: AppId::WordCount,
+        specs: grid_specs(AppId::WordCount, 1),
+        reps: 8,
+        base_seed: 42,
+    };
+    let diff_units =
+        (diff_campaign.specs.len() as u32 * diff_campaign.reps) as f64;
+    {
+        let store = ProfileStore::open(&diff_dir)?;
+        let mut i = 0usize;
+        for spec in &diff_campaign.specs {
+            for rep in 0..diff_campaign.reps {
+                // Every other rep is already "done" so the diff exercises
+                // both the hit and the miss path.
+                if i % 2 == 0 {
+                    let key = StoreKey {
+                        cluster: fp,
+                        app: diff_campaign.app,
+                        num_mappers: spec.num_mappers,
+                        num_reducers: spec.num_reducers,
+                        input_gb_bits: StoreKey::PAPER_INPUT_GB.to_bits(),
+                        block_mb: StoreKey::PAPER_BLOCK_MB,
+                        rep,
+                        base_seed: diff_campaign.base_seed,
+                    };
+                    store.put(key, RepOutcome::time_only(100.0 + i as f64));
+                }
+                i += 1;
+            }
+        }
+        store.flush()?;
+    }
+    let diff_exec =
+        CampaignExecutor::new(jobs).with_store(ProfileStore::open(&diff_dir)?);
+    let resume_diff =
+        bench("resume diff: status over 10368-rep grid", 1, 5, || {
+            let status =
+                diff_exec.campaign_resume_status(&cluster, &diff_campaign).unwrap();
+            assert_eq!(status.total as f64, diff_units);
+            std::hint::black_box(status.missing);
+        });
+    drop(diff_exec);
+    let _ = std::fs::remove_dir_all(&diff_dir);
     let speedup = serial.mean_s / stolen.mean_s;
     let doc = Json::obj(vec![
         ("bench", Json::Str("campaign".into())),
@@ -1589,6 +1702,8 @@ fn bench_campaign(args: &Args) -> Result<(), String> {
             Json::Arr(vec![
                 bench_case(&serial, units),
                 bench_case(&stolen, units),
+                bench_case(&dlq_retry, poisoned.len() as f64),
+                bench_case(&resume_diff, diff_units),
             ]),
         ),
         ("parallel_speedup", Json::Num(speedup)),
@@ -1696,11 +1811,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             };
             match t.retrain(&service) {
                 Ok(summary) => {
-                    for (app, version) in &summary.published {
-                        eprintln!(
-                            "trainer: hot-swapped {} -> v{version}",
-                            app.name()
-                        );
+                    for (name, version) in &summary.published {
+                        eprintln!("trainer: hot-swapped {name} -> v{version}");
                     }
                 }
                 Err(e) => eprintln!("trainer: periodic retrain failed: {e}"),

@@ -5,7 +5,9 @@
 //! — the baseline/cross-check backend; [`regression`] wraps fit/predict
 //! behind a backend trait so the production path can swap in the PJRT
 //! artifact executor ([`crate::runtime`]); [`metrics`] computes the
-//! paper's evaluation statistics (Fig. 3 errors, Table 1 moments).
+//! paper's evaluation statistics (Fig. 3 errors, Table 1 moments);
+//! [`target`] names the modeled outputs (time / CPU / shuffle bytes) the
+//! online trainer fits one regression per app for.
 
 pub mod features;
 pub mod metrics;
@@ -13,7 +15,9 @@ pub mod mlp;
 pub mod ndpoly;
 pub mod regression;
 pub mod solver;
+pub mod target;
 
 pub use features::{expand_row, expand_rows, NUM_FEATURES, PARAM_SCALE};
 pub use metrics::PredictionErrors;
 pub use regression::{FitBackend, RegressionModel, RustSolverBackend};
+pub use target::Target;

@@ -1,0 +1,128 @@
+//! Prediction targets: which modeled output a regression fits.
+//!
+//! The source paper (arXiv 1203.0651) regresses **total execution time**
+//! against the `(M, R)` configuration plane; its companion works apply
+//! the identical methodology to **total CPU seconds** (arXiv 1203.4054)
+//! and to **shuffle/network load** (arXiv 1206.2016).  All three fit the
+//! same per-parameter-cubic feature basis through the same
+//! [`super::regression::FitAccumulator`] — only the dependent variable
+//! changes — so a target is just a selector over [`RepOutcome`] plus a
+//! naming convention for the published model.
+
+use crate::mr::RepOutcome;
+
+/// One modeled output of a repetition — the dependent variable of one
+/// per-app regression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Target {
+    /// Total execution time in seconds — the source paper's T.
+    TimeS,
+    /// Total CPU seconds (arXiv 1203.4054's "CPU tick clocks").
+    CpuS,
+    /// Shuffle bytes (arXiv 1206.2016's network-load target).
+    ShuffleBytes,
+}
+
+impl Target {
+    /// Every target, in fit/publish order.  `TimeS` first: it is the
+    /// paper's target and the legacy single-target serving path.
+    pub fn all() -> [Target; 3] {
+        [Target::TimeS, Target::CpuS, Target::ShuffleBytes]
+    }
+
+    /// Stable wire/CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::TimeS => "time_s",
+            Target::CpuS => "cpu_s",
+            Target::ShuffleBytes => "shuffle_bytes",
+        }
+    }
+
+    /// Inverse of [`Target::name`].
+    pub fn parse(s: &str) -> Result<Target, String> {
+        match s {
+            "time_s" => Ok(Target::TimeS),
+            "cpu_s" => Ok(Target::CpuS),
+            "shuffle_bytes" => Ok(Target::ShuffleBytes),
+            other => Err(format!(
+                "unknown target '{other}' (expected time_s | cpu_s | \
+                 shuffle_bytes)"
+            )),
+        }
+    }
+
+    /// This target's value in one repetition outcome, if recorded.
+    /// `TimeS` is always present; the others are absent on records
+    /// migrated from older store formats (and on quarantine sentinels).
+    pub fn value(&self, o: &RepOutcome) -> Option<f64> {
+        match self {
+            Target::TimeS => Some(o.time_s),
+            Target::CpuS => o.cpu_s,
+            Target::ShuffleBytes => o.bytes.map(|b| b.shuffle as f64),
+        }
+    }
+
+    /// Registry/wire name of `app`'s model for this target.
+    ///
+    /// `TimeS` maps to the **plain app name** — the name every pre-
+    /// multi-target client already predicts against — so legacy
+    /// single-target `predict` resolves the identical registry entry,
+    /// bit-identically.  Other targets qualify as `app@target`.
+    pub fn qualified(&self, app: &str) -> String {
+        match self {
+            Target::TimeS => app.to_string(),
+            other => format!("{app}@{}", other.name()),
+        }
+    }
+}
+
+impl std::fmt::Display for Target {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mr::RepBytes;
+
+    #[test]
+    fn names_round_trip() {
+        for t in Target::all() {
+            assert_eq!(Target::parse(t.name()), Ok(t));
+            assert_eq!(format!("{t}"), t.name());
+        }
+        assert!(Target::parse("makespan").is_err());
+    }
+
+    #[test]
+    fn values_select_the_recorded_figure() {
+        let full = RepOutcome::with_bytes(
+            10.0,
+            20.0,
+            RepBytes { shuffle: 1 << 20, hdfs: 1 << 21 },
+        );
+        assert_eq!(Target::TimeS.value(&full), Some(10.0));
+        assert_eq!(Target::CpuS.value(&full), Some(20.0));
+        assert_eq!(
+            Target::ShuffleBytes.value(&full),
+            Some((1u64 << 20) as f64)
+        );
+        let v1 = RepOutcome::time_only(3.0);
+        assert_eq!(Target::TimeS.value(&v1), Some(3.0));
+        assert_eq!(Target::CpuS.value(&v1), None);
+        assert_eq!(Target::ShuffleBytes.value(&v1), None);
+    }
+
+    #[test]
+    fn time_target_keeps_the_legacy_model_name() {
+        assert_eq!(Target::TimeS.qualified("wordcount"), "wordcount");
+        assert_eq!(Target::CpuS.qualified("grep"), "grep@cpu_s");
+        assert_eq!(
+            Target::ShuffleBytes.qualified("sort"),
+            "sort@shuffle_bytes"
+        );
+    }
+}

@@ -20,6 +20,6 @@ pub mod split;
 
 pub use config::JobConfig;
 pub use context::{ContextShape, JobContext};
-pub use outcome::{JobResult, RepOutcome, TaskStat};
+pub use outcome::{JobResult, RepBytes, RepOutcome, TaskStat};
 pub use runner::{run_job, run_job_in};
 pub use split::{plan_splits, SplitPlan};

@@ -43,6 +43,9 @@ pub struct Counters {
     pub shuffle_bytes: u64,
     /// Bytes written to the replicated output.
     pub output_bytes: u64,
+    /// Bytes moved through HDFS: the input read plus the replicated
+    /// output write (`output_bytes × replication`).
+    pub hdfs_bytes: u64,
     /// Discrete events processed by the simulator.
     pub events_processed: u64,
     /// Total CPU-seconds consumed by committed task attempts — the
@@ -51,31 +54,58 @@ pub struct Counters {
     pub cpu_seconds: f64,
 }
 
+/// Deterministic byte counters of one repetition: the shuffle volume the
+/// network-provisioning companion work (arXiv 1206.2016) regresses
+/// against the same `(M, R)` configuration plane, plus total HDFS
+/// traffic (input read + replicated output write).  Both are planned
+/// quantities — splits × selectivity and input/output × replication —
+/// with no noise applied, so equal keys always carry equal bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RepBytes {
+    /// Bytes crossing the shuffle ([`Counters::shuffle_bytes`]).
+    pub shuffle: u64,
+    /// Bytes moved through HDFS: the input read plus the replicated
+    /// output write ([`Counters::hdfs_bytes`]).
+    pub hdfs: u64,
+}
+
 /// The per-repetition slice of a [`JobResult`] that the profiling layers
 /// cache and persist: the paper's dependent variable (total execution
-/// time) plus the companion work's modeled output (total CPU seconds,
-/// [24]'s "CPU tick clocks").
+/// time) plus the companion works' modeled outputs (total CPU seconds,
+/// [24]'s "CPU tick clocks", and the shuffle/HDFS byte counters of the
+/// network-load companion work).
 ///
 /// `cpu_s` is `None` only for records migrated from version-1 profile
-/// stores, which predate CPU capture; everything the simulator produces
-/// carries both figures.
+/// stores, which predate CPU capture; `bytes` is `None` for records
+/// migrated from any pre-v4 store (v1–v3 predate byte capture) and for
+/// quarantined sentinel outcomes.  Everything the simulator produces
+/// carries all three figures.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct RepOutcome {
     /// Total execution time in seconds.
     pub time_s: f64,
     /// Total CPU-seconds, when recorded.
     pub cpu_s: Option<f64>,
+    /// Shuffle/HDFS byte counters, when recorded.
+    pub bytes: Option<RepBytes>,
 }
 
 impl RepOutcome {
-    /// Outcome carrying both modeled outputs.
+    /// Outcome carrying time and CPU but no byte counters (a record
+    /// migrated from a v2/v3 profile store, or the quarantine sentinel).
     pub fn full(time_s: f64, cpu_s: f64) -> RepOutcome {
-        RepOutcome { time_s, cpu_s: Some(cpu_s) }
+        RepOutcome { time_s, cpu_s: Some(cpu_s), bytes: None }
     }
 
     /// Time-only outcome (a record migrated from a v1 profile store).
     pub fn time_only(time_s: f64) -> RepOutcome {
-        RepOutcome { time_s, cpu_s: None }
+        RepOutcome { time_s, cpu_s: None, bytes: None }
+    }
+
+    /// Outcome carrying every modeled output — what the simulator
+    /// produces since store format v4.
+    pub fn with_bytes(time_s: f64, cpu_s: f64, bytes: RepBytes) -> RepOutcome {
+        RepOutcome { time_s, cpu_s: Some(cpu_s), bytes: Some(bytes) }
     }
 
     /// Bit-level equality, NaN-safe — the store's dedup predicate.
@@ -86,6 +116,26 @@ impl RepOutcome {
                 (None, None) => true,
                 _ => false,
             }
+            // u64 equality is already exact; no NaN subtlety for bytes.
+            && self.bytes == other.bytes
+    }
+
+    /// Whether storing `self` over `old` would *lose* a recorded figure:
+    /// a CPU-less outcome over a CPU-carrying record (v1-era data over
+    /// v2+), or a bytes-less outcome over a bytes-carrying record
+    /// (pre-v4 data over v4).  Both store backends refuse exactly this —
+    /// a partial record never displaces a fuller one.
+    pub fn downgrades(&self, old: &RepOutcome) -> bool {
+        (old.cpu_s.is_some() && self.cpu_s.is_none())
+            || (old.bytes.is_some() && self.bytes.is_none())
+    }
+
+    /// Whether storing `self` over `old` *adds* a previously missing
+    /// figure (CPU or bytes) — the in-place migration the backends
+    /// journal so tailing readers see the upgraded record.
+    pub fn upgrades(&self, old: &RepOutcome) -> bool {
+        (old.cpu_s.is_none() && self.cpu_s.is_some())
+            || (old.bytes.is_none() && self.bytes.is_some())
     }
 }
 
@@ -109,7 +159,14 @@ pub struct JobResult {
 impl JobResult {
     /// The per-rep outcome profiling caches and persists for this run.
     pub fn rep_outcome(&self) -> RepOutcome {
-        RepOutcome::full(self.total_time_s, self.counters.cpu_seconds)
+        RepOutcome::with_bytes(
+            self.total_time_s,
+            self.counters.cpu_seconds,
+            RepBytes {
+                shuffle: self.counters.shuffle_bytes,
+                hdfs: self.counters.hdfs_bytes,
+            },
+        )
     }
 
     /// Map waves actually executed (`maps` holds one committed attempt per
@@ -148,7 +205,7 @@ mod tests {
     }
 
     #[test]
-    fn rep_outcome_distills_time_and_cpu() {
+    fn rep_outcome_distills_time_cpu_and_bytes() {
         let mut r = JobResult {
             total_time_s: 123.5,
             map_phase_s: 0.0,
@@ -158,13 +215,43 @@ mod tests {
             counters: Counters::default(),
         };
         r.counters.cpu_seconds = 456.25;
+        r.counters.shuffle_bytes = 1 << 30;
+        r.counters.hdfs_bytes = 3 << 30;
         let o = r.rep_outcome();
-        assert_eq!(o, RepOutcome::full(123.5, 456.25));
+        assert_eq!(
+            o,
+            RepOutcome::with_bytes(
+                123.5,
+                456.25,
+                RepBytes { shuffle: 1 << 30, hdfs: 3 << 30 }
+            )
+        );
         assert!(o.same_bits(&o));
+        assert!(!o.same_bits(&RepOutcome::full(123.5, 456.25)));
         assert!(!o.same_bits(&RepOutcome::time_only(123.5)));
         // NaN-safe: identical NaN bits compare equal.
         let n = RepOutcome::time_only(f64::NAN);
         assert!(n.same_bits(&RepOutcome::time_only(f64::NAN)));
+    }
+
+    #[test]
+    fn downgrade_and_upgrade_predicates() {
+        let b = RepBytes { shuffle: 7, hdfs: 11 };
+        let v1 = RepOutcome::time_only(10.0);
+        let v2 = RepOutcome::full(10.0, 2.0);
+        let v4 = RepOutcome::with_bytes(10.0, 2.0, b);
+        // A partial record never displaces a fuller one...
+        assert!(v1.downgrades(&v2));
+        assert!(v1.downgrades(&v4));
+        assert!(v2.downgrades(&v4));
+        // ...and filling in a missing figure is an upgrade.
+        assert!(v2.upgrades(&v1));
+        assert!(v4.upgrades(&v2));
+        assert!(v4.upgrades(&v1));
+        assert!(!v2.downgrades(&v1));
+        assert!(!v4.downgrades(&v4));
+        assert!(!v2.upgrades(&v4));
+        assert!(!v4.upgrades(&v4));
     }
 
     #[test]

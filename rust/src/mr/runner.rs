@@ -383,6 +383,11 @@ pub fn run_job_in(
 
     counters.cpu_seconds += cpu_acc.get();
     counters.output_bytes = (config.input_bytes as f64 * app.output_ratio) as u64;
+    // HDFS traffic: the whole input is read once, the output written
+    // `replication` times.  Purely planned — no noise — so equal configs
+    // always produce equal byte counters.
+    counters.hdfs_bytes =
+        config.input_bytes + counters.output_bytes * config.replication as u64;
     counters.events_processed = map_stats.len() as u64 + reduce_stats.len() as u64;
 
     // Job commit + cleanup, plus whole-run "temporal changes": background

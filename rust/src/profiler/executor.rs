@@ -61,7 +61,9 @@ use crate::util::stats;
 use super::campaign::Campaign;
 use super::dataset::Dataset;
 use super::dlq::{self, DlqRecord};
-use super::experiment::{mix, ExperimentResult, ExperimentSpec};
+use super::experiment::{
+    mix, ExperimentResult, ExperimentSpec, FullExperimentResult,
+};
 use super::extended::{ext4_rep_jobs, mix_ext4, Ext4Result, Ext4Spec};
 use super::store::{pid_alive, ProfileStore, StoreKey};
 
@@ -288,12 +290,40 @@ struct Quarantine {
     error: String,
 }
 
-/// Sentinel returned for a quarantined rep: NaN time and CPU.  Campaign
-/// means containing it go NaN — visibly poisoned, never silently wrong —
-/// while the campaign itself completes.  It is never cached or stored,
-/// so a later resume (or `dlq retry`) re-dispatches the rep.
+/// Sentinel returned for a quarantined rep: NaN time and CPU, byte
+/// counters absent.  Campaign means containing it go NaN — visibly
+/// poisoned, never silently wrong — and byte-means go `None`, while the
+/// campaign itself completes.  It is never cached or stored, so a later
+/// resume (or `dlq retry`) re-dispatches the rep.
 fn quarantined_outcome() -> RepOutcome {
     RepOutcome::full(f64::NAN, f64::NAN)
+}
+
+/// What a cached [`RepOutcome`] must carry to answer a dispatch without
+/// re-simulation.  Partial records (earlier store formats) still answer
+/// the paths that don't need the missing figures — which is what keeps
+/// the paper's `time_s` pipeline zero-re-simulation and bit-identical
+/// across format migrations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Need {
+    /// Any record answers: the paper's 2-parameter time path.
+    Time,
+    /// CPU seconds required (the ext4 pipeline); v1-migrated records
+    /// re-simulate and upgrade in place.
+    Cpu,
+    /// CPU *and* byte counters required (multi-target profiling);
+    /// pre-v4 records re-simulate and upgrade in place.
+    Full,
+}
+
+impl Need {
+    fn usable(self, o: &RepOutcome) -> bool {
+        match self {
+            Need::Time => true,
+            Need::Cpu => o.cpu_s.is_some(),
+            Need::Full => o.cpu_s.is_some() && o.bytes.is_some(),
+        }
+    }
 }
 
 // ------------------------------------------------ cooperative leases
@@ -534,14 +564,14 @@ impl CampaignExecutor {
     /// alone, never from scheduling order, and results are written back by
     /// input index.
     pub fn run_reps(&self, cluster: &Cluster, items: &[RepJob]) -> Vec<f64> {
-        self.run_units(cluster, items, false)
+        self.run_units(cluster, items, Need::Time)
             .iter()
             .map(|o| o.time_s)
             .collect()
     }
 
-    /// Simulate every repetition in `items`, returning full per-rep
-    /// outcomes (time **and** CPU seconds) in input order — the entry
+    /// Simulate every repetition in `items`, returning per-rep outcomes
+    /// carrying time **and** CPU seconds in input order — the entry
     /// point the extended 4-parameter pipeline uses.
     ///
     /// Every returned outcome carries the CPU figure: a cached record
@@ -552,21 +582,37 @@ impl CampaignExecutor {
         cluster: &Cluster,
         items: &[RepJob],
     ) -> Vec<RepOutcome> {
-        self.run_units(cluster, items, true)
+        self.run_units(cluster, items, Need::Cpu)
     }
 
-    /// Shared engine behind [`CampaignExecutor::run_reps`] and
-    /// [`CampaignExecutor::run_outcomes`]: `need_cpu` decides whether a
-    /// CPU-less cached outcome may answer, or must be re-simulated.
+    /// Simulate every repetition in `items`, returning outcomes carrying
+    /// every modeled output — time, CPU seconds, and the shuffle/HDFS
+    /// byte counters — in input order: the multi-target profiling entry
+    /// point.
+    ///
+    /// A cached record lacking the byte counters (data from a pre-v4
+    /// store) counts as a miss here and is re-simulated, upgrading the
+    /// stored record in place — exactly the v1→v2 CPU migration pattern.
+    pub fn run_full_outcomes(
+        &self,
+        cluster: &Cluster,
+        items: &[RepJob],
+    ) -> Vec<RepOutcome> {
+        self.run_units(cluster, items, Need::Full)
+    }
+
+    /// Shared engine behind [`CampaignExecutor::run_reps`],
+    /// [`CampaignExecutor::run_outcomes`], and
+    /// [`CampaignExecutor::run_full_outcomes`]: `need` decides whether a
+    /// partial cached outcome may answer, or must be re-simulated.
     fn run_units(
         &self,
         cluster: &Cluster,
         items: &[RepJob],
-        need_cpu: bool,
+        need: Need,
     ) -> Vec<RepOutcome> {
         let cluster_fp = cluster_fingerprint(cluster);
-        let usable =
-            |o: &RepOutcome| -> bool { !need_cpu || o.cpu_s.is_some() };
+        let usable = |o: &RepOutcome| -> bool { need.usable(o) };
         let mut out = vec![RepOutcome::time_only(f64::NAN); items.len()];
         // `todo` holds the first item index per distinct missing key;
         // duplicate items within one call alias the same simulation.
@@ -1057,6 +1103,57 @@ impl CampaignExecutor {
                     spec: *s,
                     mean_time_s: stats::mean(&rep_times_s),
                     rep_times_s,
+                }
+            })
+            .collect()
+    }
+
+    /// [`CampaignExecutor::run_specs`] with every modeled output: per-spec
+    /// mean time, mean CPU, and mean shuffle/HDFS bytes.
+    ///
+    /// Byte-means are `None` when *any* rep of the setting lacks its
+    /// counters — exactly the quarantined-rep sentinel, since every
+    /// simulated (or v4-cached) outcome carries them — so a poisoned
+    /// setting surfaces as a null byte-mean without aborting the
+    /// campaign, mirroring the NaN-poisoned time mean.
+    pub fn run_specs_full(
+        &self,
+        cluster: &Cluster,
+        specs: &[ExperimentSpec],
+        reps: u32,
+        base_seed: u64,
+    ) -> Vec<FullExperimentResult> {
+        let items: Vec<RepJob> = specs
+            .iter()
+            .flat_map(|s| (0..reps).map(move |rep| RepJob::paper(*s, rep, base_seed)))
+            .collect();
+        let outcomes = self.run_full_outcomes(cluster, &items);
+        specs
+            .iter()
+            .enumerate()
+            .map(|(si, s)| {
+                let lo = si * reps as usize;
+                let chunk = &outcomes[lo..lo + reps as usize];
+                let times: Vec<f64> = chunk.iter().map(|o| o.time_s).collect();
+                let byte_mean = |f: fn(&crate::mr::RepBytes) -> u64| {
+                    chunk
+                        .iter()
+                        .map(|o| o.bytes.as_ref().map(|b| f(b) as f64))
+                        .collect::<Option<Vec<f64>>>()
+                        .map(|v| stats::mean(&v))
+                };
+                FullExperimentResult {
+                    spec: *s,
+                    mean_time_s: stats::mean(&times),
+                    mean_cpu_s: stats::mean(
+                        &chunk
+                            .iter()
+                            .map(|o| o.cpu_s.unwrap_or(f64::NAN))
+                            .collect::<Vec<f64>>(),
+                    ),
+                    mean_shuffle_bytes: byte_mean(|b| b.shuffle),
+                    mean_hdfs_bytes: byte_mean(|b| b.hdfs),
+                    rep_times_s: times,
                 }
             })
             .collect()

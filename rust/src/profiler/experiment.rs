@@ -52,6 +52,31 @@ impl ExperimentResult {
     }
 }
 
+/// Profiled outcome of one experiment with **every** modeled output: the
+/// paper's mean time plus the companion works' mean CPU seconds and mean
+/// shuffle/HDFS bytes — what
+/// [`CampaignExecutor::run_specs_full`] returns.
+///
+/// Byte-means are `None` when any repetition of the setting lacks its
+/// counters (a quarantined rep): null, never silently wrong, and the
+/// campaign still completes.  The time mean goes NaN in the same case.
+#[derive(Clone, Debug)]
+pub struct FullExperimentResult {
+    /// The setting that was profiled.
+    pub spec: ExperimentSpec,
+    /// The paper's target: mean of the rep times.
+    pub mean_time_s: f64,
+    /// Mean total CPU seconds (arXiv 1203.4054's target).
+    pub mean_cpu_s: f64,
+    /// Mean shuffle bytes (arXiv 1206.2016's target), if every rep
+    /// carried its counters.
+    pub mean_shuffle_bytes: Option<f64>,
+    /// Mean HDFS bytes, if every rep carried its counters.
+    pub mean_hdfs_bytes: Option<f64>,
+    /// Per-repetition times (kept for variance diagnostics).
+    pub rep_times_s: Vec<f64>,
+}
+
 /// Run one experiment: `reps` simulated executions with distinct run seeds
 /// (modeling the paper's five wall-clock runs), averaged.
 ///

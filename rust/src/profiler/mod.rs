@@ -28,7 +28,10 @@ pub use executor::{
     cluster_fingerprint, CampaignExecutor, ExecutorStats, RepJob, RepSpec,
     ResumeStatus, RetryPolicy,
 };
-pub use experiment::{run_experiment, ExperimentResult, ExperimentSpec, REPS};
+pub use experiment::{
+    run_experiment, ExperimentResult, ExperimentSpec, FullExperimentResult,
+    REPS,
+};
 pub use extended::{
     ext4_rep_jobs, run_ext4, run_ext4_campaign, Ext4Result, Ext4Spec,
 };

@@ -1,5 +1,6 @@
-//! Record codecs: the binary v3 frame format every store file is
-//! written in, and the legacy JSONL (v1/v2) codec migrated on read.
+//! Record codecs: the binary v4 frame format every store file is
+//! written in (v3 payloads decode natively with bytes absent), and the
+//! legacy JSONL (v1/v2) codec migrated on read.
 
 use std::fs;
 use std::path::Path;
@@ -7,14 +8,14 @@ use std::path::Path;
 use super::key::{RecordError, StoreKey};
 use super::STORE_FORMAT_VERSION;
 use crate::apps::AppId;
-use crate::mr::RepOutcome;
+use crate::mr::{RepBytes, RepOutcome};
 use crate::util::bytes::{hex_u64, parse_hex_u64};
 use crate::util::json::{parse, Json};
 
 /// Version written by the legacy JSONL record codec ([`encode_record`]).
 pub(crate) const JSONL_RECORD_VERSION: u32 = 2;
 
-/// Magic prefix of every binary (v3) store file.
+/// Magic prefix of every binary (v3/v4) store file.
 pub(crate) const BIN_MAGIC: [u8; 4] = *b"MRTS";
 /// Binary file header: magic + little-endian u32 format version.
 pub(crate) const BIN_HEADER_LEN: usize = 8;
@@ -88,7 +89,9 @@ pub fn decode_record(
                 j.as_str().ok_or("cbits: expected hex string")?,
             )?)),
         };
-        Ok((key, RepOutcome { time_s, cpu_s }))
+        // JSONL predates byte capture entirely; migrated records gain
+        // their counters on first re-simulation.
+        Ok((key, RepOutcome { time_s, cpu_s, bytes: None }))
     };
     match ver {
         2 => decode(false)
@@ -101,17 +104,20 @@ pub fn decode_record(
     }
 }
 
-// ------------------------------------------------------ binary v3 codec
+// ------------------------------------------------------ binary v4 codec
 
 /// Exact encoded payload size of one binary record (no length prefix).
 pub(crate) fn payload_len(key: &StoreKey, outcome: &RepOutcome) -> usize {
-    // 5 u64s + 4 u32s + app length byte + app name + cpu flag (+ cpu bits)
+    // 5 u64s + 4 u32s + app length byte + app name + cpu flag (+ cpu
+    // bits) + bytes flag (+ shuffle/hdfs u64s)
     5 * 8
         + 4 * 4
         + 1
         + key.app.name().len()
         + 1
         + if outcome.cpu_s.is_some() { 8 } else { 0 }
+        + 1
+        + if outcome.bytes.is_some() { 16 } else { 0 }
 }
 
 /// Exact on-disk size of one framed binary record (length prefix
@@ -169,11 +175,20 @@ pub(crate) fn encode_record_bin_into(
         }
         None => out.push(0),
     }
+    match outcome.bytes {
+        Some(b) => {
+            out.push(1);
+            out.extend_from_slice(&b.shuffle.to_le_bytes());
+            out.extend_from_slice(&b.hdfs.to_le_bytes());
+        }
+        None => out.push(0),
+    }
     debug_assert_eq!(out.len() - start, len);
 }
 
-/// Serialize one record as a length-prefixed **binary v3** frame: the
-/// format the store's segments and index are written in since PR 5.
+/// Serialize one record as a length-prefixed **binary v4** frame: the
+/// format the store's segments and index are written in since PR 5
+/// (byte counters since PR 10).
 /// Every `u64`/`f64` is stored as raw little-endian bits, so arbitrary
 /// bit patterns — NaN payloads included — round-trip exactly.  `touch`
 /// is the record's last-hit generation (drives LRU eviction under a
@@ -256,6 +271,20 @@ pub(crate) fn decode_payload(
         1 => Some(f64::from_bits(c.u64()?)),
         other => return Err(format!("binary record: bad cpu flag {other}")),
     };
+    // A v3 payload ends here; v4 appends a bytes flag (+ counters).
+    // Cursor-exhausted means a v3 record: decode with bytes absent — the
+    // in-place migration path, no rewrite needed.
+    let bytes = if c.i == b.len() {
+        None
+    } else {
+        match c.u8()? {
+            0 => None,
+            1 => Some(RepBytes { shuffle: c.u64()?, hdfs: c.u64()? }),
+            other => {
+                return Err(format!("binary record: bad bytes flag {other}"))
+            }
+        }
+    };
     if c.i != b.len() {
         return Err("binary record: trailing payload bytes".into());
     }
@@ -270,7 +299,7 @@ pub(crate) fn decode_payload(
             rep,
             base_seed,
         },
-        RepOutcome { time_s: f64::from_bits(time_bits), cpu_s },
+        RepOutcome { time_s: f64::from_bits(time_bits), cpu_s, bytes },
         touch,
     ))
 }
@@ -314,7 +343,7 @@ pub fn read_file_records(
         let Some(ver) = le_u32_at(&bytes, 4) else {
             return Err("truncated binary store header".into());
         };
-        if ver != STORE_FORMAT_VERSION {
+        if !(3..=STORE_FORMAT_VERSION).contains(&ver) {
             return Err(format!("unsupported binary store version {ver}"));
         }
         let mut i = BIN_HEADER_LEN;
@@ -403,9 +432,18 @@ mod tests {
             let mut k = key(20, 5, i as u32, u64::MAX - i as u64);
             k.input_gb_bits = (1.5 + i as f64).to_bits();
             k.block_mb = 32 << i;
-            for outcome in
-                [RepOutcome::full(*t, t * 4.0 + 1.0), RepOutcome::time_only(*t)]
-            {
+            for outcome in [
+                RepOutcome::full(*t, t * 4.0 + 1.0),
+                RepOutcome::time_only(*t),
+                RepOutcome::with_bytes(
+                    *t,
+                    t * 4.0 + 1.0,
+                    RepBytes {
+                        shuffle: u64::MAX - i as u64,
+                        hdfs: 1 + (i as u64) << 40,
+                    },
+                ),
+            ] {
                 let frame = encode_record_bin(&k, &outcome, 77 + i as u64);
                 assert_eq!(frame.len(), frame_len(&k, &outcome));
                 let (k2, o2, touch, used) = decode_record_bin(&frame).unwrap();
@@ -415,6 +453,48 @@ mod tests {
                 assert!(o2.same_bits(&outcome));
             }
         }
+    }
+
+    /// A v3 frame is a v4 frame minus the bytes section: strip the
+    /// trailing bytes flag and shrink the length prefix to fabricate
+    /// what a PR 5–9 build actually wrote, then decode it with today's
+    /// codec.
+    fn v3_frame(k: &StoreKey, outcome: &RepOutcome, touch: u64) -> Vec<u8> {
+        assert!(outcome.bytes.is_none(), "v3 cannot carry bytes");
+        let mut frame = encode_record_bin(k, outcome, touch);
+        assert_eq!(*frame.last().unwrap(), 0, "bytes-absent flag");
+        frame.pop();
+        let len = u32::from_le_bytes(frame[0..4].try_into().unwrap()) - 1;
+        frame[0..4].copy_from_slice(&len.to_le_bytes());
+        frame
+    }
+
+    #[test]
+    fn v3_payloads_decode_natively_with_bytes_absent() {
+        for t in [1523.25, f64::NAN, f64::from_bits(0x7FF8_DEAD_BEEF_0001)] {
+            for outcome in
+                [RepOutcome::full(t, t * 2.0), RepOutcome::time_only(t)]
+            {
+                let k = key(12, 7, 1, 99);
+                let frame = v3_frame(&k, &outcome, 5);
+                let (k2, o2, touch, used) = decode_record_bin(&frame).unwrap();
+                assert_eq!(k2, k);
+                assert_eq!(touch, 5);
+                assert_eq!(used, frame.len());
+                assert!(o2.same_bits(&outcome));
+                assert_eq!(o2.bytes, None);
+            }
+        }
+    }
+
+    #[test]
+    fn binary_decode_rejects_bad_bytes_flag() {
+        let k = key(5, 5, 0, 1);
+        let mut frame =
+            encode_record_bin(&k, &RepOutcome::full(2.0, 3.0), 9);
+        let last = frame.len() - 1;
+        frame[last] = 7;
+        assert!(decode_record_bin(&frame).unwrap_err().contains("bytes flag"));
     }
 
     #[test]

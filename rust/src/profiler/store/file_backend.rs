@@ -395,8 +395,7 @@ impl StoreBackend for FileBackend {
         let known = match inner.entries.get_mut(&key) {
             Some(old)
                 if old.outcome.same_bits(&outcome)
-                    || (old.outcome.cpu_s.is_some()
-                        && outcome.cpu_s.is_none()) =>
+                    || outcome.downgrades(&old.outcome) =>
             {
                 // Re-putting a known value is a use: recency only.
                 old.touch = clock;
@@ -503,9 +502,7 @@ impl StoreBackend for FileBackend {
                     // Another session used this record: keep the newest
                     // recency, but never downgrade a full outcome.
                     old.touch = old.touch.max(sr.touch);
-                    if old.outcome.cpu_s.is_none()
-                        && sr.outcome.cpu_s.is_some()
-                    {
+                    if sr.outcome.upgrades(&old.outcome) {
                         fresh.push((
                             key,
                             StoredRep {
@@ -772,8 +769,9 @@ pub(crate) fn scan_dir(dir: &Path) -> Result<Scan, String> {
 }
 
 /// Fold one decoded record into the in-memory map: later wins, except a
-/// CPU-less outcome never displaces a full one, and the touch resolves
-/// to the newest (maximum) generation either side has seen.
+/// partial outcome (missing CPU or byte figures) never displaces a
+/// fuller one, and the touch resolves to the newest (maximum) generation
+/// either side has seen.
 pub(crate) fn fold_entry(
     entries: &mut HashMap<StoreKey, StoredRep>,
     key: StoreKey,
@@ -782,7 +780,7 @@ pub(crate) fn fold_entry(
     match entries.get_mut(&key) {
         Some(old) => {
             old.touch = old.touch.max(rep.touch);
-            if !(old.outcome.cpu_s.is_some() && rep.outcome.cpu_s.is_none()) {
+            if !rep.outcome.downgrades(&old.outcome) {
                 old.outcome = rep.outcome;
             }
         }
@@ -793,7 +791,7 @@ pub(crate) fn fold_entry(
 }
 
 /// Fold one store file's bytes into `entries`, dispatching on format:
-/// binary v3 (`MRTS` magic) or legacy JSONL.  Returns `false` when the
+/// binary v3/v4 (`MRTS` magic) or legacy JSONL.  Returns `false` when the
 /// file as a whole could not be used (not UTF-8 JSONL, torn binary
 /// header, or a newer binary version) — such files are never merged.
 pub(crate) fn ingest_bytes(
@@ -1366,10 +1364,10 @@ mod tests {
     fn stale_binary_file_is_preserved_not_merged() {
         let dir = tmp_dir("stale_bin");
         std::fs::create_dir_all(&dir).unwrap();
-        // A segment written by a hypothetical v4 build.
+        // A segment written by a hypothetical v5 build.
         let mut future = Vec::new();
         future.extend_from_slice(&BIN_MAGIC);
-        future.extend_from_slice(&4u32.to_le_bytes());
+        future.extend_from_slice(&5u32.to_le_bytes());
         future.extend_from_slice(&[1, 2, 3, 4]);
         let seg = dir.join("seg-feed0000-0000-future.bin");
         std::fs::write(&seg, &future).unwrap();

@@ -27,8 +27,8 @@ struct Inner {
 }
 
 /// In-memory [`StoreBackend`]: the [`super::FileBackend`] contract —
-/// journal, generation, CPU-upgrade folding, capped LRU eviction with
-/// paper-plane pinning — minus persistence.
+/// journal, generation, CPU/bytes-upgrade folding, capped LRU eviction
+/// with paper-plane pinning — minus persistence.
 pub struct MemoryBackend {
     cap: Option<u64>,
     inner: Mutex<Inner>,
@@ -93,8 +93,7 @@ impl StoreBackend for MemoryBackend {
         match inner.entries.get_mut(&key) {
             Some(old)
                 if old.outcome.same_bits(&outcome)
-                    || (old.outcome.cpu_s.is_some()
-                        && outcome.cpu_s.is_none()) =>
+                    || outcome.downgrades(&old.outcome) =>
             {
                 old.touch = clock;
                 false
@@ -221,16 +220,24 @@ mod tests {
             !b.put(k, RepOutcome::time_only(10.0)),
             "never downgrades"
         );
-        assert_eq!(b.get(&k), Some(RepOutcome::full(10.0, 2.0)));
-        assert_eq!(b.generation(), 2, "two journaled changes");
+        let full = RepOutcome::with_bytes(
+            10.0,
+            2.0,
+            crate::mr::RepBytes { shuffle: 3, hdfs: 5 },
+        );
+        assert!(b.put(k, full), "bytes upgrade");
+        assert!(
+            !b.put(k, RepOutcome::full(10.0, 2.0)),
+            "bytes-less never displaces a full record"
+        );
+        assert_eq!(b.get(&k), Some(full));
+        assert_eq!(b.generation(), 3, "three journaled changes");
         let (records, g) = b.read_since(0);
-        assert_eq!(g, 2);
-        // Upsert log: the same key appears per journaled change, both
+        assert_eq!(g, 3);
+        // Upsert log: the same key appears per journaled change, all
         // resolving to the current (upgraded) value.
-        assert_eq!(records.len(), 2);
-        assert!(records
-            .iter()
-            .all(|(_, o)| *o == RepOutcome::full(10.0, 2.0)));
+        assert_eq!(records.len(), 3);
+        assert!(records.iter().all(|(_, o)| *o == full));
         assert_eq!(b.pending(), 0);
         b.flush().unwrap();
         assert_eq!(b.refresh().unwrap(), 0);

@@ -10,8 +10,8 @@
 //! # Module layout
 //!
 //! * [`key`] — [`StoreKey`], the persistent identity of one repetition.
-//! * [`codec`] — the binary v3 record codec plus the legacy JSONL
-//!   (v1/v2) codec it migrates from.
+//! * [`codec`] — the binary v4 record codec (reads v3 natively) plus
+//!   the legacy JSONL (v1/v2) codec it migrates from.
 //! * [`file_backend`] — [`FileBackend`], one store *directory*:
 //!   segments, index, locks, compaction, LRU eviction.  This is the old
 //!   single-directory store, loaded **lazily** (opening is a few file
@@ -35,7 +35,7 @@
 //!   dlq-*.bin, leases/      dead-letter queue + cooperative leases
 //!                           (not store data; always at the root)
 //!   shard-00/
-//!     index.bin             compacted records (binary v3, atomic replace)
+//!     index.bin             compacted records (binary v4, atomic replace)
 //!     seg-<pid>-<n>-<t>.bin append-only segment, one per writing session
 //!     seg-....bin.lock      liveness lock while that segment is open
 //!     compact.lock          held briefly while rewriting this shard
@@ -45,14 +45,15 @@
 //!                           compacting open, bit-identical
 //! ```
 //!
-//! Store format **v3** is binary: a file is an 8-byte header (magic
-//! `MRTS` + little-endian version) followed by length-prefixed records
-//! (see [`codec::encode_record_bin`]).  Every `u64` and `f64` travels as
-//! its raw little-endian bits, so stored values are the same
+//! Store formats **v3/v4** are binary: a file is an 8-byte header
+//! (magic `MRTS` + little-endian version) followed by length-prefixed
+//! records (see [`codec::encode_record_bin`]).  Every `u64` and `f64`
+//! travels as its raw little-endian bits, so stored values are the same
 //! bit-identical rep results the executor produces — which is what makes
-//! warm runs byte-identical to cold ones.  The previous JSONL formats
-//! (v1 from PR 2, v2 from PR 3) are still decoded on read and never
-//! orphaned.
+//! warm runs byte-identical to cold ones.  v4 appends optional
+//! shuffle/HDFS byte counters; v3 payloads decode natively with bytes
+//! absent.  The previous JSONL formats (v1 from PR 2, v2 from PR 3) are
+//! still decoded on read and never orphaned.
 //!
 //! # Sharding invariant
 //!
@@ -124,13 +125,19 @@ use crate::mr::RepOutcome;
 ///   behind an `MRTS` file header, raw little-endian bit round-trip for
 ///   every `u64`/`f64`, plus a persisted last-hit **touch** generation
 ///   that drives size-capped LRU eviction.
+/// * **v4** (PR 10): records additionally carry the deterministic
+///   shuffle/HDFS byte counters ([`crate::mr::RepBytes`]) behind a
+///   presence flag appended after the CPU section.  v3 payloads decode
+///   natively with `bytes` absent — no rewrite on read — and are
+///   upgraded in place on the first re-simulation, exactly as v1
+///   records gained their CPU figure under v2.
 ///
 /// The **sharded layout** (PR 8) is a directory arrangement, not a
-/// record format: shard files are plain v3 files, and legacy
+/// record format: shard files are plain v4 files, and legacy
 /// single-directory v1/v2/v3 stores are migrated into shards on the
 /// first compacting open with bit-identical contents.  Readers skip
 /// (and preserve) files or records of any *newer* version.
-pub const STORE_FORMAT_VERSION: u32 = 3;
+pub const STORE_FORMAT_VERSION: u32 = 4;
 
 /// One storage engine under the [`ProfileStore`] facade: the contract
 /// every backend (file, memory, future remote) must honor so the
@@ -152,9 +159,12 @@ pub trait StoreBackend: Send + Sync {
     fn lookup(&self, key: &StoreKey) -> Option<RepOutcome>;
 
     /// Record a freshly simulated outcome.  Returns `true` when the
-    /// record was **journaled** (new key, or a CPU-less record upgraded
-    /// in place): exactly when the backend's generation advanced.
-    /// Re-putting a known value only bumps recency and returns `false`.
+    /// record was **journaled** (new key, or a partial record — missing
+    /// CPU or byte figures — upgraded in place): exactly when the
+    /// backend's generation advanced.  Re-putting a known value only
+    /// bumps recency and returns `false`; a put that would *lose* a
+    /// recorded figure ([`RepOutcome::downgrades`]) is treated the same
+    /// way — the fuller record wins.
     fn put(&self, key: StoreKey, outcome: RepOutcome) -> bool;
 
     /// Persist buffered records (a no-op for memory backends).

@@ -6,8 +6,11 @@ use std::collections::{HashMap, HashSet};
 
 use mrtuner::api::engine::{execute, ExecOptions};
 use mrtuner::api::traits::HashPartitioner;
+use mrtuner::api::Pair;
 use mrtuner::apps::{exim, AppId};
+use mrtuner::cluster::Cluster;
 use mrtuner::datagen;
+use mrtuner::profiler::{CampaignExecutor, ExperimentSpec, Ext4Spec};
 use mrtuner::util::prop::forall;
 use mrtuner::util::rng::Rng;
 
@@ -134,6 +137,187 @@ fn partitions_are_disjoint_and_complete() {
         truth.insert(w);
     }
     assert_eq!(seen.len(), truth.len());
+}
+
+#[test]
+fn sort_matches_multiset_ground_truth_in_key_order() {
+    let mut rng = Rng::new(6);
+    let data = datagen::sort_records::generate(&mut rng, 30_000);
+    let out = run_app(AppId::Sort, &data, 5, 7);
+
+    // Ground truth: every input record survives, and the merged output
+    // is exactly the input multiset in (key, payload) order — payloads
+    // carry unique sequence numbers, so the comparison is exact.
+    let mut truth: Vec<Pair> = data
+        .lines()
+        .map(|l| {
+            let (k, p) = l.split_once('\t').expect("tab-separated");
+            Pair::new(k, p)
+        })
+        .collect();
+    truth.sort();
+    assert_eq!(out.all_pairs(), truth);
+    assert_eq!(out.output_records, out.input_records, "a sort loses nothing");
+    // The shuffle-bound signature the simulator profile encodes:
+    // essentially every input byte crosses the network.
+    assert!(out.selectivity() > 0.9, "selectivity {}", out.selectivity());
+}
+
+#[test]
+fn join_matches_hash_join_ground_truth() {
+    let mut rng = Rng::new(7);
+    let data = datagen::join_log::generate(&mut rng, 30_000);
+    let out = run_app(AppId::Join, &data, 4, 6);
+
+    // Independent hash join over the same tagged lines.
+    let mut left: HashMap<&str, Vec<&str>> = HashMap::new();
+    let mut right: HashMap<&str, Vec<&str>> = HashMap::new();
+    for line in data.lines() {
+        let mut cols = line.split('\t');
+        let (tag, key, payload) = (
+            cols.next().unwrap(),
+            cols.next().unwrap(),
+            cols.next().unwrap(),
+        );
+        match tag {
+            "L" => left.entry(key).or_default().push(payload),
+            "R" => right.entry(key).or_default().push(payload),
+            other => panic!("generator emitted tag {other:?}"),
+        }
+    }
+    let mut truth: Vec<Pair> = Vec::new();
+    for (key, ls) in &left {
+        if let Some(rs) = right.get(key) {
+            for l in ls {
+                for r in rs {
+                    truth.push(Pair::new(*key, format!("{l},{r}")));
+                }
+            }
+        }
+    }
+    truth.sort();
+    assert!(!truth.is_empty(), "skewed keys must actually join");
+    assert_eq!(out.all_pairs(), truth);
+}
+
+#[test]
+fn prop_sort_join_invariant_to_parallelism_knobs() {
+    forall("sort/join parallelism invariance", 4, |rng| {
+        let sorted = datagen::sort_records::generate(rng, 12_000);
+        let joined = datagen::join_log::generate(rng, 12_000);
+        let r = rng.range_u64(2, 40) as u32;
+        let s = rng.range_u64(2, 16) as u32;
+        for (app, input) in
+            [(AppId::Sort, &sorted), (AppId::Join, &joined)]
+        {
+            let base = run_app(app, input, 1, 1).all_pairs();
+            let got = run_app(app, input, r, s).all_pairs();
+            assert_eq!(got, base, "{app:?} r={r} s={s}");
+        }
+    });
+}
+
+#[test]
+fn sort_join_deterministic_across_sessions() {
+    // Two fully independent "sessions" — fresh RNG, fresh data, fresh
+    // engine — must agree on every output pair *and* every counter the
+    // byte-level model trains on.
+    for app in [AppId::Sort, AppId::Join] {
+        let session = || {
+            let mut rng = Rng::new(77);
+            let data = match app {
+                AppId::Sort => {
+                    datagen::sort_records::generate(&mut rng, 25_000)
+                }
+                _ => datagen::join_log::generate(&mut rng, 25_000),
+            };
+            run_app(app, &data, 6, 5)
+        };
+        let (a, b) = (session(), session());
+        assert_eq!(a.all_pairs(), b.all_pairs(), "{app:?}");
+        assert_eq!(a.shuffle_bytes, b.shuffle_bytes, "{app:?}");
+        assert_eq!(a.shuffle_records, b.shuffle_records, "{app:?}");
+        assert_eq!(a.output_bytes, b.output_bytes, "{app:?}");
+    }
+}
+
+#[test]
+fn shuffle_bytes_monotone_in_input_size() {
+    // The relationship the `shuffle_bytes` prediction target models:
+    // more input, more bytes across the network — for the shuffle-bound
+    // sort and the skew-prone join alike.
+    for app in [AppId::Sort, AppId::Join] {
+        let mut last = 0u64;
+        for target in [8_000usize, 32_000, 128_000] {
+            let mut rng = Rng::new(9);
+            let data = match app {
+                AppId::Sort => {
+                    datagen::sort_records::generate(&mut rng, target)
+                }
+                _ => datagen::join_log::generate(&mut rng, target),
+            };
+            let out = run_app(app, &data, 4, 4);
+            assert!(
+                out.shuffle_bytes > last,
+                "{app:?} at {target}: {} !> {last}",
+                out.shuffle_bytes
+            );
+            last = out.shuffle_bytes;
+        }
+    }
+}
+
+#[test]
+fn paper_plane_ext4_shares_the_two_parameter_cache() {
+    // Simulator-level cache soundness for the new apps: an extended
+    // 4-parameter setting on the paper plane *is* the 2-parameter
+    // setting — same StoreKey, same seeds — so one executor answers it
+    // from the reps the 2-parameter campaign already simulated, bit for
+    // bit and with zero new simulations.
+    let cluster = Cluster::paper_cluster();
+    let exec = CampaignExecutor::serial();
+    let specs = [
+        ExperimentSpec::new(AppId::Sort, 12, 6),
+        ExperimentSpec::new(AppId::Join, 9, 7),
+    ];
+    let paper = exec.run_specs(&cluster, &specs, 2, 5);
+    let simulated = exec.stats().simulated;
+    assert_eq!(simulated, 4, "2 specs x 2 reps, cold");
+
+    let ext: Vec<Ext4Spec> = specs
+        .iter()
+        .map(|s| Ext4Spec {
+            app: s.app,
+            num_mappers: s.num_mappers,
+            num_reducers: s.num_reducers,
+            input_gb: 8.0,
+            block_mb: 64,
+        })
+        .collect();
+    assert!(ext.iter().all(Ext4Spec::is_paper_plane));
+    let shared = exec.run_ext4_specs(&cluster, &ext, 2, 5);
+    assert_eq!(
+        exec.stats().simulated,
+        simulated,
+        "paper-plane reps come from the shared cache"
+    );
+    for (p, e) in paper.iter().zip(&shared) {
+        assert_eq!(
+            p.mean_time_s.to_bits(),
+            e.mean_time_s.to_bits(),
+            "{:?}",
+            p.spec
+        );
+    }
+
+    // Off the plane the key differs, so the cache must *not* answer.
+    let mut off = ext.clone();
+    off[0].input_gb = 4.0;
+    exec.run_ext4_specs(&cluster, &off[..1], 2, 5);
+    assert!(
+        exec.stats().simulated > simulated,
+        "off-plane settings are distinct simulations"
+    );
 }
 
 #[test]

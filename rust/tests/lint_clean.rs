@@ -7,6 +7,47 @@ use std::path::Path;
 
 use mrtuner::analysis;
 
+/// Source files added by the multi-target PR.  Each must (a) sit inside
+/// the determinism scope — a `HashMap`/`Instant` planted at its path
+/// must fire — and (b) ship with zero suppression directives, so the
+/// multi-target plumbing earns its lint-cleanliness rather than
+/// allowing its way past the rules.
+const MULTI_TARGET_FILES: [&str; 5] = [
+    "apps/sort.rs",
+    "apps/join.rs",
+    "datagen/sort_records.rs",
+    "datagen/join_log.rs",
+    "model/target.rs",
+];
+
+#[test]
+fn multi_target_modules_are_in_scope_and_suppression_free() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let probe = "fn probe() { let m = HashMap::new(); let t = Instant::now(); }\n";
+    for rel in MULTI_TARGET_FILES {
+        // (a) The path is inside the determinism scope: the probe fires.
+        let fired: Vec<String> = analysis::rules::lint_source(rel, probe)
+            .into_iter()
+            .map(|f| f.rule)
+            .collect();
+        assert_eq!(
+            fired,
+            ["determinism", "determinism"],
+            "{rel} must be in the determinism scope"
+        );
+        // (b) The shipped file exists and carries no allow directives at
+        // all — not even justified ones.  (clippy.toml's
+        // disallowed-methods are crate-global, so they need no per-file
+        // check.)
+        let text = std::fs::read_to_string(root.join(rel))
+            .unwrap_or_else(|e| panic!("read {rel}: {e}"));
+        assert!(
+            !text.contains("mrlint"),
+            "{rel} must ship without lint suppressions"
+        );
+    }
+}
+
 #[test]
 fn shipped_tree_is_lint_clean() {
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");

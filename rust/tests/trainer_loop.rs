@@ -88,7 +88,17 @@ fn profile_retrain_predict_without_restart() {
     let trainer = {
         let mut t = Trainer::open(&dir, &cluster).expect("open trainer");
         let summary = t.retrain(&service).expect("initial retrain");
-        assert_eq!(summary.published, vec![(AppId::WordCount, 1)]);
+        // Store records carry every figure, so one campaign publishes
+        // one model per target: the time model under the plain app
+        // name, the others target-qualified.
+        assert_eq!(
+            summary.published,
+            vec![
+                ("wordcount".to_string(), 1),
+                ("wordcount@cpu_s".to_string(), 1),
+                ("wordcount@shuffle_bytes".to_string(), 1),
+            ]
+        );
         Arc::new(Mutex::new(t))
     };
     let server = Server::start_with(
@@ -117,6 +127,18 @@ fn profile_retrain_predict_without_restart() {
     assert_eq!(info.trained_on, 18);
     assert!(info.fit_rmse.is_some());
 
+    // The companion targets serve through the request's `target` field,
+    // in their own units; `time_s` resolves the identical legacy entry.
+    let shuffle =
+        client.predict_target("wordcount", "shuffle_bytes", 20, 5).unwrap();
+    assert_eq!(shuffle.version, 1);
+    assert!(shuffle.seconds.is_finite() && shuffle.seconds > 0.0);
+    let cpu = client.predict_target("wordcount", "cpu_s", 20, 5).unwrap();
+    assert!(cpu.seconds.is_finite() && cpu.seconds > 0.0);
+    let t = client.predict_target("wordcount", "time_s", 20, 5).unwrap();
+    assert_eq!(t.seconds.to_bits(), p.seconds.to_bits());
+    assert_eq!(client.model_info("wordcount@shuffle_bytes").unwrap().trained_on, 18);
+
     // Grep has never been profiled: a typed protocol error.
     match client.predict("grep", 20, 5) {
         Err(ClientError::Server(msg)) => assert!(msg.contains("no model")),
@@ -134,7 +156,14 @@ fn profile_retrain_predict_without_restart() {
     // without restart.
     let reply = client.retrain().unwrap();
     assert_eq!(reply.new_records, 54, "18 settings x 3 reps of grep");
-    assert_eq!(reply.refits, vec![("grep".to_string(), 1)]);
+    assert_eq!(
+        reply.refits,
+        vec![
+            ("grep".to_string(), 1),
+            ("grep@cpu_s".to_string(), 1),
+            ("grep@shuffle_bytes".to_string(), 1),
+        ]
+    );
 
     let p = client.predict_versioned("grep", 20, 5).unwrap();
     assert_eq!(p.version, 1);
@@ -162,7 +191,14 @@ fn profile_retrain_predict_without_restart() {
     // untouched apps keep their version.
     run_campaign(&dir, AppId::WordCount, 2, 99);
     let reply = client.retrain().unwrap();
-    assert_eq!(reply.refits, vec![("wordcount".to_string(), 2)]);
+    assert_eq!(
+        reply.refits,
+        vec![
+            ("wordcount".to_string(), 2),
+            ("wordcount@cpu_s".to_string(), 2),
+            ("wordcount@shuffle_bytes".to_string(), 2),
+        ]
+    );
     let p2 = client.predict_versioned("wordcount", 20, 5).unwrap();
     assert_eq!(p2.version, 2, "hot-swapped refit serves immediately");
     assert_eq!(client.model_info("grep").unwrap().version, 1);
@@ -176,8 +212,11 @@ fn profile_retrain_predict_without_restart() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// The same loop through the in-process API, hammered concurrently: the
-/// retrain hot-swap must never error a single in-flight predict.
+/// The same loop through the in-process API, hammered concurrently and
+/// per target: a retrain hot-swap must never error a single in-flight
+/// predict, and every worker must observe each target's model version
+/// monotonically — a swap of three models never serves a version that
+/// goes backwards on any of them.
 #[test]
 fn concurrent_predicts_survive_a_retrain_swap() {
     let dir = tmp_dir("swap");
@@ -195,32 +234,48 @@ fn concurrent_predicts_survive_a_retrain_swap() {
     // New data lands while traffic is in flight.
     run_campaign(&dir, AppId::WordCount, 2, 42);
     let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let targets =
+        ["wordcount", "wordcount@cpu_s", "wordcount@shuffle_bytes"];
     let mut workers = Vec::new();
-    for _ in 0..4 {
-        let service = Arc::clone(&service);
-        let stop = Arc::clone(&stop);
-        workers.push(std::thread::spawn(move || {
-            let mut last = 0u64;
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
-                let p = service
-                    .predict_versioned("wordcount", 20, 5)
-                    .expect("no errors mid-swap");
-                assert!(p.version >= last, "monotonic versions");
-                last = p.version;
-            }
-            last
-        }));
+    for name in targets {
+        for _ in 0..2 {
+            let service = Arc::clone(&service);
+            let stop = Arc::clone(&stop);
+            workers.push(std::thread::spawn(move || {
+                let mut last = 0u64;
+                while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                    let p = service
+                        .predict_versioned(name, 20, 5)
+                        .expect("no errors mid-swap");
+                    assert!(
+                        p.version >= last,
+                        "monotonic versions for {name}"
+                    );
+                    last = p.version;
+                }
+                (name, last)
+            }));
+        }
     }
     let summary = trainer.retrain(&service).unwrap();
-    assert_eq!(summary.published, vec![(AppId::WordCount, 2)]);
-    // Let the workers observe the new version before stopping.
+    assert_eq!(
+        summary.published,
+        vec![
+            ("wordcount".to_string(), 2),
+            ("wordcount@cpu_s".to_string(), 2),
+            ("wordcount@shuffle_bytes".to_string(), 2),
+        ]
+    );
+    // Let the workers observe the new versions before stopping.
     std::thread::sleep(std::time::Duration::from_millis(50));
     stop.store(true, std::sync::atomic::Ordering::Relaxed);
-    let finals: Vec<u64> =
+    let finals: Vec<(&str, u64)> =
         workers.into_iter().map(|w| w.join().unwrap()).collect();
-    assert!(
-        finals.iter().any(|&v| v == 2),
-        "some worker must see the swapped version: {finals:?}"
-    );
+    for name in targets {
+        assert!(
+            finals.iter().any(|&(n, v)| n == name && v == 2),
+            "some worker must see the swapped version of {name}: {finals:?}"
+        );
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }

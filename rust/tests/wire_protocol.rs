@@ -15,7 +15,7 @@ use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
-use mrtuner::coordinator::client::ClientError;
+use mrtuner::coordinator::client::{Client, ClientError};
 use mrtuner::coordinator::wire;
 use mrtuner::coordinator::{
     ModelRegistry, PipelinedClient, PredictionService, ServeOptions, Server,
@@ -409,6 +409,108 @@ fn json_ops_tunnel_through_binary_frames() {
         other => panic!("expected predict reply, got {other:?}"),
     };
     assert_eq!(via_json.map(f64::to_bits), Some(native.to_bits()));
+}
+
+/// Read one `\n`-terminated line off a raw legacy (JSON-lines) socket.
+fn read_json_line(stream: &mut TcpStream) -> String {
+    let mut out = Vec::new();
+    let mut b = [0u8; 1];
+    loop {
+        match stream.read(&mut b) {
+            Ok(0) => panic!("server closed mid-line: {out:?}"),
+            Ok(_) if b[0] == b'\n' => break,
+            Ok(_) => out.push(b[0]),
+            Err(e) => panic!("read failed awaiting line: {e}"),
+        }
+    }
+    String::from_utf8(out).expect("legacy replies are UTF-8")
+}
+
+/// Multi-target serving conformance: one `(app, target, M, R)` predict
+/// answers with exactly the same bits over all three surfaces — the
+/// legacy JSON-lines `target` field, a REQ_JSON tunnel through binary
+/// frames, and a native binary predict against the target-qualified
+/// registry name.  And the target-*less* legacy predict is untouched:
+/// same figure as the plain `time_s` model, with no `target` key in the
+/// reply line.
+#[test]
+fn multi_target_predicts_bit_identical_across_protocols() {
+    let mut reg = ModelRegistry::new();
+    reg.insert(flat_model("wordcount", 400.0));
+    reg.insert(flat_model("wordcount@cpu_s", 1234.5));
+    reg.insert(flat_model("wordcount@shuffle_bytes", 8.6e9));
+    let svc = Arc::new(PredictionService::start(
+        || Box::new(RustSolverBackend) as Box<dyn FitBackend>,
+        reg,
+        ServiceConfig::default(),
+    ));
+    let server = Server::start("127.0.0.1:0", svc).unwrap();
+    let addr = server.addr.to_string();
+
+    let mut legacy = Client::connect(&addr).unwrap();
+    let mut pipelined = PipelinedClient::connect(&addr).unwrap();
+    for (target, qualified, expect) in [
+        ("time_s", "wordcount", 400.0f64),
+        ("cpu_s", "wordcount@cpu_s", 1234.5),
+        ("shuffle_bytes", "wordcount@shuffle_bytes", 8.6e9),
+    ] {
+        let via_legacy =
+            legacy.predict_target("wordcount", target, 20, 5).unwrap();
+        assert_eq!(via_legacy.version, 1, "{target}");
+
+        let tunneled = pipelined
+            .json_op(&Json::obj(vec![
+                ("op", Json::Str("predict".into())),
+                ("app", Json::Str("wordcount".into())),
+                ("target", Json::Str(target.into())),
+                ("mappers", Json::Num(20.0)),
+                ("reducers", Json::Num(5.0)),
+            ]))
+            .unwrap();
+        assert_eq!(
+            tunneled.get("target").and_then(|v| v.as_str()),
+            Some(target),
+            "tunneled reply echoes the requested target"
+        );
+        let via_tunnel = tunneled
+            .get("predicted_s")
+            .and_then(|v| v.as_f64())
+            .expect("tunneled predict carries predicted_s");
+
+        let id = pipelined.submit_predict(qualified, 20, 5);
+        pipelined.flush().unwrap();
+        let (got, reply) = pipelined.recv().unwrap();
+        assert_eq!(got, id);
+        let native = match reply {
+            mrtuner::coordinator::client::Reply::Predict(p) => p.seconds,
+            other => panic!("expected predict reply, got {other:?}"),
+        };
+
+        assert_eq!(native, expect, "{target}");
+        assert_eq!(via_legacy.seconds.to_bits(), native.to_bits(), "{target}");
+        assert_eq!(via_tunnel.to_bits(), native.to_bits(), "{target}");
+    }
+
+    // Byte-level legacy conformance on a raw socket: no `target` in the
+    // request means no `target` in the reply — the pre-multi-target
+    // response shape, serving the plain time model.
+    let mut raw = raw_conn(&addr);
+    raw.write_all(
+        b"{\"op\":\"predict\",\"app\":\"wordcount\",\
+          \"mappers\":20,\"reducers\":5}\n",
+    )
+    .unwrap();
+    let line = read_json_line(&mut raw);
+    assert!(line.contains("\"predicted_s\":400"), "{line}");
+    assert!(!line.contains("\"target\""), "{line}");
+    // And a targeted request over the same raw socket does echo it.
+    raw.write_all(
+        b"{\"op\":\"predict\",\"app\":\"wordcount\",\
+          \"target\":\"shuffle_bytes\",\"mappers\":20,\"reducers\":5}\n",
+    )
+    .unwrap();
+    let line = read_json_line(&mut raw);
+    assert!(line.contains("\"target\":\"shuffle_bytes\""), "{line}");
 }
 
 /// Admission control under a deliberately starved queue: some requests
